@@ -1,0 +1,111 @@
+"""AOT exporter: lower the L2 encode/decode graphs to HLO *text* artifacts.
+
+HLO text — NOT ``lowered.compile()`` output or a serialized HloModuleProto —
+is the interchange format: jax >= 0.5 emits protos with 64-bit instruction
+ids which the rust ``xla`` crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/gen_hlo.py).
+
+Artifacts land in ``artifacts/`` with a ``manifest.json`` the rust runtime
+uses to discover them:
+
+    gf_encode_k10_m5_b65536.hlo.txt     encode(data[10,65536]) -> coding[5,65536]
+    gf_decode_k10_b65536.hlo.txt        decode(mat[10,10], chunks[10,65536])
+    ...
+
+Run via ``make artifacts`` (no-op when inputs are unchanged); python never
+runs on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (k, m, stripe width B per chunk). The paper's benchmark geometry is 10+5;
+# 8+2 is the Fig-1 layout example; 4+2 is the small test/example geometry.
+VARIANTS: list[tuple[int, int, int]] = [
+    (10, 5, 65536),
+    (10, 5, 262144),
+    (8, 2, 65536),
+    (4, 2, 16384),
+]
+
+# Pallas tile width along the stripe axis; must divide every B above.
+BLOCK_B = 8192
+# The small 4+2 variant uses a narrower stripe; 16384 % 8192 == 0 still.
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (id-safe interchange).
+
+    ``print_large_constants=True`` is load-bearing: the default printer
+    abbreviates the 256/512-entry GF log/exp tables to ``{...}``, which the
+    HLO text *parser* silently fills with zeros — the kernel would return
+    all-zero coding chunks. (Caught by rust `pjrt_integration` tests.)
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # jax 0.8's metadata carries source_end_line/column attributes that the
+    # crate's older HLO parser rejects; metadata is debug-only, drop it.
+    opts.print_metadata = False
+    return comp.get_hlo_module().to_string(opts)
+
+
+def lower_encode(k: int, m: int, b: int) -> str:
+    fn = model.make_encode(k, m, block_b=BLOCK_B)
+    spec = jax.ShapeDtypeStruct((k, b), jnp.uint8)
+    return to_hlo_text(jax.jit(fn).lower(spec))
+
+
+def lower_decode(k: int, b: int) -> str:
+    fn = model.make_decode(k, block_b=BLOCK_B)
+    mat = jax.ShapeDtypeStruct((k, k), jnp.uint8)
+    chunks = jax.ShapeDtypeStruct((k, b), jnp.uint8)
+    return to_hlo_text(jax.jit(fn).lower(mat, chunks))
+
+
+def export_all(out_dir: pathlib.Path) -> dict:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    manifest: dict = {"version": 1, "field_poly": "0x11D", "artifacts": []}
+    seen_decode: set[tuple[int, int]] = set()
+    for k, m, b in VARIANTS:
+        enc_name = f"gf_encode_k{k}_m{m}_b{b}.hlo.txt"
+        (out_dir / enc_name).write_text(lower_encode(k, m, b))
+        manifest["artifacts"].append(
+            {"op": "encode", "k": k, "m": m, "b": b, "file": enc_name}
+        )
+        if (k, b) not in seen_decode:
+            dec_name = f"gf_decode_k{k}_b{b}.hlo.txt"
+            (out_dir / dec_name).write_text(lower_decode(k, b))
+            manifest["artifacts"].append(
+                {"op": "decode", "k": k, "b": b, "file": dec_name}
+            )
+            seen_decode.add((k, b))
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2) + "\n")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    args = ap.parse_args()
+    out_dir = pathlib.Path(args.out)
+    manifest = export_all(out_dir)
+    n = len(manifest["artifacts"])
+    print(f"wrote {n} HLO artifacts + manifest.json to {out_dir.resolve()}")
+
+
+if __name__ == "__main__":
+    main()

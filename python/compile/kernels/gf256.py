@@ -1,0 +1,244 @@
+"""L1 Pallas kernel: blocked GF(2^8) matrix multiply for Reed-Solomon EC.
+
+``gf256_matmul(mat[K, N] u8, data[N, B] u8) -> out[K, B] u8`` computes
+
+    out[i, b] = XOR_n  gfmul(mat[i, n], data[n, b])
+
+which is simultaneously the RS *encode* (mat = Cauchy/Vandermonde coding
+rows, data = the K data chunks striped column-wise) and the RS *decode*
+(mat = the inverted K x K survivor sub-matrix, data = the K surviving
+chunks).  One kernel, both directions — the rust coordinator picks the
+matrix.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation):
+
+  * The stripe axis ``B`` is the long one (a 256 KiB stripe per chunk at
+    K=10 is B=262144 bytes per row).  ``BlockSpec`` blocks it into
+    ``block_b``-wide tiles so each grid step streams a ``(N, block_b)``
+    tile HBM->VMEM; with the default ``block_b=8192`` and N=15 the live
+    tile is ~120 KiB data + ~8 KiB tables + ~80 KiB output — comfortably
+    inside one core's VMEM with room for double-buffering.
+  * The 256-entry log and 512-entry exp tables ride in VMEM for the whole
+    kernel (they are passed as full-size blocks, index_map pinned to 0).
+  * GF multiply is a gather (VPU) op: exp[log[m] + log[d]] with the
+    zero-sink clamp at index 511.  The XOR accumulation over ``n`` is an
+    unrolled fori over the (small, static) N dimension.
+
+``interpret=True`` always: the CPU PJRT plugin cannot run Mosaic
+custom-calls; real-TPU perf is *estimated* in DESIGN.md, not measured here.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+DEFAULT_BLOCK_B = 8192
+
+
+def _gf_matmul_kernel(mat_ref, log_ref, exp_ref, data_ref, out_ref):
+    """One grid step: out tile (K, block_b) from data tile (N, block_b).
+
+    mat_ref : (K, N)  uint8  — whole generator matrix, VMEM-resident
+    log_ref : (1, 256) int32 — log table (log[0] = 511 zero-sink)
+    exp_ref : (1, 512) int32 — doubled exp table (exp[>=510] = 0)
+    data_ref: (N, block_b) uint8
+    out_ref : (K, block_b) uint8
+    """
+    k_rows = out_ref.shape[0]
+    n_rows = data_ref.shape[0]
+
+    log = log_ref[0, :]
+    exp = exp_ref[0, :]
+
+    data = data_ref[...].astype(jnp.int32)       # (N, B_blk)
+    log_d = log[data]                             # (N, B_blk) gather
+    mat = mat_ref[...].astype(jnp.int32)          # (K, N)
+    log_m = log[mat]                              # (K, N)
+
+    # XOR-accumulate over the static N dimension, fully unrolled: N is tiny
+    # (<= 32) so unrolling trades instruction count for zero loop overhead
+    # and lets the VPU pipeline the gathers.
+    acc = jnp.zeros((k_rows, data.shape[1]), dtype=jnp.int32)
+    for n in range(n_rows):
+        idx = jnp.minimum(log_m[:, n][:, None] + log_d[n][None, :], 511)
+        acc = jnp.bitwise_xor(acc, exp[idx])
+    out_ref[...] = acc.astype(jnp.uint8)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def gf256_matmul(mat, data, *, block_b: int = DEFAULT_BLOCK_B):
+    """Blocked GF(2^8) matmul via pallas_call (interpret mode).
+
+    Args:
+      mat:  (K, N) uint8 generator / decode matrix.
+      data: (N, B) uint8 chunk bytes, one chunk per row. B must be a
+            multiple of ``block_b`` (the caller pads; rust pads stripes to
+            the block size anyway).
+      block_b: stripe-axis tile width.
+
+    Returns:
+      (K, B) uint8.
+    """
+    mat = jnp.asarray(mat, dtype=jnp.uint8)
+    data = jnp.asarray(data, dtype=jnp.uint8)
+    k_rows, n_rows = mat.shape
+    n2, b = data.shape
+    if n2 != n_rows:
+        raise ValueError(f"mat is {mat.shape} but data is {data.shape}")
+    if b < block_b:
+        block_b = b  # shapes are static at trace time, so this is AOT-safe
+    if b % block_b != 0:
+        raise ValueError(f"B={b} not a multiple of block_b={block_b}")
+
+    log_np, exp_np = ref.gf_log_exp_tables()
+    log = jnp.asarray(log_np, dtype=jnp.int32).reshape(1, 256)
+    exp = jnp.asarray(exp_np, dtype=jnp.int32).reshape(1, 512)
+
+    grid = (b // block_b,)
+    return pl.pallas_call(
+        _gf_matmul_kernel,
+        grid=grid,
+        in_specs=[
+            # Generator matrix + tables: whole-array blocks pinned to the
+            # origin — VMEM-resident across every grid step.
+            pl.BlockSpec((k_rows, n_rows), lambda i: (0, 0)),
+            pl.BlockSpec((1, 256), lambda i: (0, 0)),
+            pl.BlockSpec((1, 512), lambda i: (0, 0)),
+            # Data: stream one (N, block_b) tile per grid step.
+            pl.BlockSpec((n_rows, block_b), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((k_rows, block_b), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((k_rows, b), jnp.uint8),
+        interpret=True,
+    )(mat, log, exp, data)
+
+
+def vmem_footprint_bytes(k: int, n: int, block_b: int = DEFAULT_BLOCK_B) -> dict:
+    """Static VMEM budget per grid step (the L1 'profile' for interpret mode).
+
+    Used by tests and DESIGN.md §Perf to keep the live set within a TPU
+    core's VMEM (16 MiB on v4/v5e) with double-buffering headroom.
+    """
+    tables = 256 * 4 + 512 * 4
+    matrix = k * n
+    data_tile = n * block_b
+    out_tile = k * block_b
+    # int32 intermediates: log_d (N,B) + idx/acc (K,B) working set.
+    scratch = (n * block_b + 2 * k * block_b) * 4
+    total = tables + matrix + data_tile + out_tile + scratch
+    return {
+        "tables": tables,
+        "matrix": matrix,
+        "data_tile": data_tile,
+        "out_tile": out_tile,
+        "scratch_int32": scratch,
+        "total": total,
+        "fits_16MiB_double_buffered": 2 * total < 16 * 1024 * 1024,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Bit-matrix variant: the MXU-native formulation (DESIGN.md §Hardware-
+# Adaptation). Each GF(2^8) constant becomes an 8x8 GF(2) block; the XOR-
+# accumulated table-gather product becomes one integer matmul mod 2, which
+# a real TPU executes on the systolic array instead of the VPU.
+# ---------------------------------------------------------------------------
+
+def _bit_expand_matrix(mat) -> jnp.ndarray:
+    """mat[K,N] uint8 -> bits[K*8, N*8] float32 0/1 (trace-time constant)."""
+    import numpy as np
+
+    mat = np.asarray(mat, dtype=np.uint8)
+    k, n = mat.shape
+    basis = ref._column_basis()
+    big = np.zeros((k * 8, n * 8), dtype=np.float32)
+    for i in range(k):
+        for j in range(n):
+            big[i * 8:(i + 1) * 8, j * 8:(j + 1) * 8] = basis[mat[i, j]]
+    return jnp.asarray(big)
+
+
+def _gf_bitmatmul_kernel(bigmat_ref, data_ref, out_ref):
+    """One grid step of the bit-matrix product.
+
+    bigmat_ref: (K*8, N*8) f32 — the expanded generator, VMEM-resident.
+    data_ref:   (N, block_b) uint8
+    out_ref:    (K, block_b) uint8
+    """
+    kb = bigmat_ref.shape[0]
+    n = data_ref.shape[0]
+    b = data_ref.shape[1]
+
+    data = data_ref[...].astype(jnp.int32)                     # (N, B)
+    # Unpack bits little-endian: dbits[n*8 + j, b] = bit j of data[n, b].
+    shifts = jnp.arange(8, dtype=jnp.int32)                    # (8,)
+    dbits = (data[:, None, :] >> shifts[None, :, None]) & 1    # (N, 8, B)
+    dbits = dbits.reshape(n * 8, b).astype(jnp.float32)
+
+    # The MXU step: (K*8, N*8) @ (N*8, B), XOR == integer dot mod 2.
+    obits = bigmat_ref[...] @ dbits                            # (K*8, B) f32
+    obits = obits.astype(jnp.int32) & 1                        # mod 2
+
+    # Repack bits to bytes.
+    obits = obits.reshape(kb // 8, 8, b)
+    weights = (jnp.int32(1) << shifts)[None, :, None]          # (1, 8, 1)
+    out_ref[...] = jnp.sum(obits * weights, axis=1).astype(jnp.uint8)
+
+
+def gf256_matmul_bitmatrix(mat, data, *, block_b: int = 2048):
+    """Blocked GF(2^8) matmul via the GF(2) bit-matrix decomposition.
+
+    Numerically identical to :func:`gf256_matmul`; the compute is an
+    (8K, 8N) x (8N, B) matmul instead of table gathers. ``mat`` must be a
+    *concrete* array (it is expanded at trace time and baked into the
+    kernel, like the encode artifact's Cauchy rows), so this function is
+    deliberately not jitted — the pallas_call inside is compiled anyway.
+    """
+    data = jnp.asarray(data, dtype=jnp.uint8)
+    bigmat = _bit_expand_matrix(mat)
+    k_rows = bigmat.shape[0] // 8
+    n_rows, b = data.shape
+    if bigmat.shape[1] != n_rows * 8:
+        raise ValueError(f"mat/data shape mismatch: {bigmat.shape} vs {data.shape}")
+    if b < block_b:
+        block_b = b
+    if b % block_b != 0:
+        raise ValueError(f"B={b} not a multiple of block_b={block_b}")
+
+    grid = (b // block_b,)
+    return pl.pallas_call(
+        _gf_bitmatmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((k_rows * 8, n_rows * 8), lambda i: (0, 0)),
+            pl.BlockSpec((n_rows, block_b), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((k_rows, block_b), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((k_rows, b), jnp.uint8),
+        interpret=True,
+    )(bigmat, data)
+
+
+def mxu_utilization_estimate(k: int, n: int, block_b: int = 2048) -> dict:
+    """Static TPU-side estimate for the bit-matrix kernel (DESIGN.md §9).
+
+    On a 128x128 MXU the (8K, 8N) x (8N, block_b) product issues
+    ceil(8K/128)*ceil(8N/128)*ceil(block_b/128) passes; for the paper's
+    10+5 geometry (8K=40, 8N=80) the operands underfill the array, so the
+    effective utilization is (8K/128)*(8N/128) of a full pass.
+    """
+    mk, mn = 8 * k, 8 * n
+    passes = -(-mk // 128) * (-(-mn) // 128) * (-(-block_b) // 128)
+    fill = min(mk, 128) * min(mn, 128) / (128 * 128)
+    return {
+        "bit_matrix_shape": (mk, mn),
+        "mxu_passes_per_block": passes,
+        "mxu_fill_fraction": fill,
+        "note": "pad 8K/8N to 128 or batch multiple stripes to raise fill",
+    }

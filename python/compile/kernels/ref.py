@@ -1,0 +1,212 @@
+"""Pure-jnp (and pure-python) correctness oracles for the GF(2^8) kernels.
+
+The erasure-coding hot spot is a matrix product over GF(2^8) with the
+polynomial 0x11D (x^8 + x^4 + x^3 + x^2 + 1 — the "RS-255" field used by
+most storage codes, including zfec):
+
+    out[i, b] = XOR_k  gfmul(mat[i, k], data[k, b])
+
+Three independent formulations live here so each implementation can be
+checked against a *differently derived* reference:
+
+  * ``gf_mul_py`` / ``gf_matmul_py``  — bitwise shift-and-reduce python ints
+    (no tables at all; the ground truth).
+  * ``gf_matmul_ref``                 — vectorised jnp using log/exp tables
+    (same algorithm family as the pallas kernel, but plain jnp).
+  * ``gf_matmul_bitmatrix``           — GF(2) bit-matrix decomposition:
+    each byte constant becomes an 8x8 0/1 matrix and the XOR-accumulated
+    product becomes an integer matmul mod 2.  This is the MXU-friendly
+    formulation documented in DESIGN.md §Hardware-Adaptation.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+import numpy as np
+
+# The field polynomial used by zfec, jerasure's default, ISA-L and par2.
+GF_POLY = 0x11D
+FIELD = 256
+
+
+# --------------------------------------------------------------------------
+# Ground truth: bitwise python ints, no tables.
+# --------------------------------------------------------------------------
+
+def gf_mul_py(a: int, b: int) -> int:
+    """Multiply two field elements by shift-and-reduce (carry-less)."""
+    a &= 0xFF
+    b &= 0xFF
+    acc = 0
+    while b:
+        if b & 1:
+            acc ^= a
+        b >>= 1
+        a <<= 1
+        if a & 0x100:
+            a ^= GF_POLY
+    return acc & 0xFF
+
+
+def gf_matmul_py(mat, data):
+    """Ground-truth GF(2^8) matmul on nested python ints / numpy arrays."""
+    mat = np.asarray(mat, dtype=np.uint8)
+    data = np.asarray(data, dtype=np.uint8)
+    out = np.zeros((mat.shape[0], data.shape[1]), dtype=np.uint8)
+    for i in range(mat.shape[0]):
+        for k in range(mat.shape[1]):
+            m = int(mat[i, k])
+            if m == 0:
+                continue
+            row = np.array([gf_mul_py(m, int(v)) for v in data[k]], dtype=np.uint8)
+            out[i] ^= row
+    return out
+
+
+# --------------------------------------------------------------------------
+# Table construction (shared with the pallas kernel and the AOT exporter).
+# --------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _tables() -> tuple[np.ndarray, np.ndarray]:
+    """(log, exp) tables for generator 2 of GF(2^8)/0x11D.
+
+    ``exp`` is doubled to 512 entries so ``exp[log a + log b]`` never needs a
+    mod-255 — the same trick the rust backend and the pallas kernel use.
+    ``log[0]`` is set to 511 and the sum index is clamped to 511, whose exp
+    entry is forced to 0, so zero operands fall out of the lookup path
+    without a branch.
+    """
+    exp = np.zeros(512, dtype=np.uint8)
+    log = np.zeros(256, dtype=np.int32)
+    x = 1
+    for i in range(255):
+        exp[i] = x
+        log[x] = i
+        x <<= 1
+        if x & 0x100:
+            x ^= GF_POLY
+    # Period-255 extension covers log a + log b up to 508.
+    for i in range(255, 510):
+        exp[i] = exp[i - 255]
+    exp[510] = 0
+    exp[511] = 0
+    log[0] = 511  # any sum involving log[0] is clamped to 511 -> exp 0
+    return log, exp
+
+
+def gf_log_exp_tables() -> tuple[np.ndarray, np.ndarray]:
+    """Public accessor: (log[256] int32 with log[0]=511, exp[512] uint8)."""
+    log, exp = _tables()
+    return log.copy(), exp.copy()
+
+
+# --------------------------------------------------------------------------
+# jnp oracle (log/exp formulation).
+# --------------------------------------------------------------------------
+
+def gf_mul_ref(a, b):
+    """Element-wise GF(2^8) multiply of two uint8 jnp arrays."""
+    log_np, exp_np = _tables()
+    log = jnp.asarray(log_np)
+    exp = jnp.asarray(exp_np)
+    a = jnp.asarray(a, dtype=jnp.uint8)
+    b = jnp.asarray(b, dtype=jnp.uint8)
+    idx = log[a.astype(jnp.int32)] + log[b.astype(jnp.int32)]
+    idx = jnp.minimum(idx, 511)
+    return exp[idx]
+
+
+def gf_matmul_ref(mat, data):
+    """GF(2^8) matmul, vectorised jnp: out[i,b] = XOR_k mul(mat[i,k], data[k,b])."""
+    mat = jnp.asarray(mat, dtype=jnp.uint8)
+    data = jnp.asarray(data, dtype=jnp.uint8)
+    # products[i, k, b]
+    prods = gf_mul_ref(mat[:, :, None], data[None, :, :])
+    # XOR-reduce over k via bitwise fold.
+    out = prods[:, 0, :]
+    for k in range(1, prods.shape[1]):
+        out = jnp.bitwise_xor(out, prods[:, k, :])
+    return out
+
+
+# --------------------------------------------------------------------------
+# Bit-matrix (MXU) formulation.
+# --------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _column_basis() -> np.ndarray:
+    """basis[c] = the 8x8 GF(2) matrix of "multiply by constant c".
+
+    bitmat(c)[r, j] = bit r of gf_mul_py(c, 1<<j); multiplying the bit-vector
+    of x by this matrix over GF(2) gives the bit-vector of gfmul(c, x).
+    """
+    basis = np.zeros((256, 8, 8), dtype=np.uint8)
+    for c in range(256):
+        for j in range(8):
+            prod = gf_mul_py(c, 1 << j)
+            for r in range(8):
+                basis[c, r, j] = (prod >> r) & 1
+    return basis
+
+
+def gf_matmul_bitmatrix(mat, data):
+    """GF(2^8) matmul via the GF(2) bit-matrix decomposition.
+
+    Expands mat[K,N] (uint8) into bits[K*8, N*8] (0/1) and data[N,B] into
+    bits[N*8, B]; the integer product mod 2 re-packs to the uint8 result.
+    This is the formulation a real-TPU kernel would feed to the MXU.
+    """
+    mat = np.asarray(mat, dtype=np.uint8)
+    data = np.asarray(data, dtype=np.uint8)
+    K, N = mat.shape
+    _, B = data.shape
+    basis = _column_basis()
+    big = np.zeros((K * 8, N * 8), dtype=np.int32)
+    for i in range(K):
+        for k in range(N):
+            big[i * 8:(i + 1) * 8, k * 8:(k + 1) * 8] = basis[mat[i, k]]
+    dbits = np.unpackbits(data[:, None, :], axis=1, bitorder="little")
+    dbits = dbits.reshape(N * 8, B).astype(np.int32)
+    obits = (big @ dbits) % 2
+    obits = obits.reshape(K, 8, B).astype(np.uint8)
+    return np.packbits(obits, axis=1, bitorder="little").reshape(K, B)
+
+
+# --------------------------------------------------------------------------
+# Generator matrices (shared with model.py and mirrored in rust gf/matrix.rs).
+# --------------------------------------------------------------------------
+
+def gf_inv_py(a: int) -> int:
+    """Multiplicative inverse via exp/log (a != 0)."""
+    log, exp = _tables()
+    if a == 0:
+        raise ZeroDivisionError("0 has no inverse in GF(2^8)")
+    return int(exp[(255 - int(log[a])) % 255])
+
+
+def cauchy_matrix(m: int, k: int) -> np.ndarray:
+    """Cauchy coding matrix C[i,j] = 1/(x_i + y_j), x_i = k+i, y_j = j.
+
+    Any square submatrix of a Cauchy matrix is invertible, so the systematic
+    generator [I_k ; C] has the any-K-of-(K+M) property. Mirrored bit-for-bit
+    by rust ``gf::matrix::cauchy`` — tests cross-check the two.
+    """
+    out = np.zeros((m, k), dtype=np.uint8)
+    for i in range(m):
+        for j in range(k):
+            out[i, j] = gf_inv_py((k + i) ^ j)
+    return out
+
+
+def vandermonde_matrix(rows: int, cols: int) -> np.ndarray:
+    """V[i,j] = i^j over GF(2^8) (zfec's classical construction)."""
+    out = np.zeros((rows, cols), dtype=np.uint8)
+    for i in range(rows):
+        acc = 1
+        for j in range(cols):
+            out[i, j] = acc
+            acc = gf_mul_py(acc, i)
+    return out

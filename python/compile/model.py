@@ -1,0 +1,112 @@
+"""L2: the erasure-coding compute graph, built on the L1 pallas kernel.
+
+The paper's compute hot spot (zfec's RS encoder / decoder) maps to two jax
+functions over byte-striped chunk matrices:
+
+  * ``encode(data[K, B]) -> coding[M, B]`` — the Cauchy coding rows are
+    baked into the lowered module as constants (they depend only on (K, M),
+    never on the payload), so the artifact takes one operand.
+  * ``decode(mat[K, K], chunks[K, B]) -> data[K, B]`` — the inverse of the
+    survivor sub-matrix is computed by the rust coordinator per-request
+    (which chunks survived is runtime information) and passed as an operand.
+
+Both are a single ``gf256_matmul`` pallas call, so they lower into one fused
+HLO module each; rust streams stripes of exactly ``B`` bytes per chunk
+through the compiled executable.
+
+The code is *systematic*: data chunks are stored verbatim and only the M
+coding chunks are computed, so ``encode`` returns just the coding rows.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import gf256, ref
+
+
+def coding_matrix(k: int, m: int) -> jnp.ndarray:
+    """The (M, K) Cauchy coding block of the systematic generator [I_K; C]."""
+    return jnp.asarray(ref.cauchy_matrix(m, k), dtype=jnp.uint8)
+
+
+def make_encode(k: int, m: int, block_b: int = gf256.DEFAULT_BLOCK_B):
+    """Build ``encode(data[K, B]) -> coding[M, B]`` with the matrix baked in."""
+    cmat = coding_matrix(k, m)
+
+    def encode(data):
+        return gf256.gf256_matmul(cmat, data, block_b=block_b)
+
+    return encode
+
+
+def make_decode(k: int, block_b: int = gf256.DEFAULT_BLOCK_B):
+    """Build ``decode(mat[K, K], chunks[K, B]) -> data[K, B]``."""
+
+    def decode(mat, chunks):
+        return gf256.gf256_matmul(mat, chunks, block_b=block_b)
+
+    return decode
+
+
+# ---------------------------------------------------------------------------
+# Reference end-to-end path (used by tests; mirrors rust ec::Codec exactly).
+# ---------------------------------------------------------------------------
+
+def encode_full(data, k: int, m: int):
+    """All K+M chunk rows of the systematic code: [data; C @ data]."""
+    enc = make_encode(k, m)
+    coding = enc(jnp.asarray(data, dtype=jnp.uint8))
+    return jnp.concatenate([jnp.asarray(data, dtype=jnp.uint8), coding], axis=0)
+
+
+def decode_matrix(k: int, m: int, present: list[int]) -> jnp.ndarray:
+    """Invert the survivor sub-matrix of the systematic generator.
+
+    ``present`` lists the K chunk indices (in [0, K+M)) that survived, in the
+    row order the chunks will be stacked. Mirrors rust
+    ``ec::codec::decode_matrix`` — tests cross-check the two.
+    """
+    import numpy as np
+
+    if len(present) != k:
+        raise ValueError(f"need exactly {k} survivor indices, got {len(present)}")
+    gen = np.concatenate(
+        [np.eye(k, dtype=np.uint8), ref.cauchy_matrix(m, k)], axis=0
+    )
+    sub = gen[np.asarray(present)]
+    inv = _gf_invert(sub)
+    return jnp.asarray(inv, dtype=jnp.uint8)
+
+
+def _gf_invert(a):
+    """Gauss-Jordan inversion over GF(2^8) (build-time python; small K)."""
+    import numpy as np
+
+    n = a.shape[0]
+    aug = np.concatenate([a.astype(np.uint8), np.eye(n, dtype=np.uint8)], axis=1)
+    for col in range(n):
+        piv = next((r for r in range(col, n) if aug[r, col] != 0), None)
+        if piv is None:
+            raise ValueError("singular survivor matrix (not K-of-N decodable)")
+        if piv != col:
+            aug[[col, piv]] = aug[[piv, col]]
+        inv_p = ref.gf_inv_py(int(aug[col, col]))
+        aug[col] = [ref.gf_mul_py(inv_p, int(v)) for v in aug[col]]
+        for r in range(n):
+            if r != col and aug[r, col] != 0:
+                f = int(aug[r, col])
+                aug[r] ^= np.array(
+                    [ref.gf_mul_py(f, int(v)) for v in aug[col]], dtype=np.uint8
+                )
+    return aug[:, n:]
+
+
+def decode_chunks(chunks, present: list[int], k: int, m: int):
+    """Recover the original data rows from any K surviving chunk rows."""
+    mat = decode_matrix(k, m, present)
+    dec = make_decode(k)
+    return dec(mat, jnp.asarray(chunks, dtype=jnp.uint8))

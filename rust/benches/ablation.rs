@@ -1,0 +1,152 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!
+//!  A. placement policy — long-run chunk skew (paper §2.3 complaint);
+//!  B. metadata key style — global-tag collisions (paper §4 pitfall);
+//!  C. retry policy — put success rate under flaky SEs (paper §4);
+//!  D. generator construction — Cauchy vs Vandermonde any-K-of-N validity;
+//!  E. stripe width — codec throughput vs stripe_b.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use drs::catalog::MetaKeyStyle;
+use drs::dfm::{PutOptions, TestCluster};
+use drs::ec::{Codec, EcParams, PureRustBackend};
+use drs::gf::GfMatrix;
+use drs::placement::{cumulative_skew, Random, RegionAware, RoundRobin, Weighted, PlacementPolicy};
+use drs::se::SeInfo;
+use drs::transfer::RetryPolicy;
+use drs::util::prng::Rng;
+
+fn main() {
+    // ---- A: placement skew -------------------------------------------------
+    println!("# A. placement: cumulative chunks per SE after 1000 x (10+5) files over 7 SEs");
+    let infos: Vec<SeInfo> = (0..7)
+        .map(|i| SeInfo {
+            name: format!("SE-{i}"),
+            region: if i < 4 { "uk".into() } else { "fr".into() },
+            available: true,
+            used_bytes: 0,
+        })
+        .collect();
+    let policies: Vec<(&str, Box<dyn PlacementPolicy>)> = vec![
+        ("round-robin (paper)", Box::new(RoundRobin)),
+        ("random", Box::new(Random::new(5))),
+        ("weighted", Box::new(Weighted)),
+        ("region-aware(uk,min4)", Box::new(RegionAware { client_region: "uk".into(), min_ses: 4 })),
+    ];
+    for (name, p) in &policies {
+        let totals = cumulative_skew(p.as_ref(), &infos, 1000, 15);
+        let max = *totals.iter().max().unwrap() as f64;
+        let min = *totals.iter().min().unwrap().max(&1) as f64;
+        println!("  {name:<22} {totals:?}  max/min = {:.2}", max / min);
+    }
+
+    // ---- B: metadata key style ----------------------------------------------
+    println!("\n# B. metadata tag-namespace collisions (paper §4)");
+    for style in [MetaKeyStyle::V1Generic, MetaKeyStyle::V2Prefixed] {
+        let cluster = TestCluster::builder().ses(6).build().unwrap();
+        let opts = PutOptions::default()
+            .with_params(EcParams::new(4, 2).unwrap())
+            .with_stripe(1024)
+            .with_key_style(style);
+        for i in 0..5 {
+            cluster
+                .shim()
+                .put_bytes(&format!("/vo/s{i}"), &[1u8; 2000], &opts)
+                .unwrap();
+        }
+        let dfc = cluster.dfc();
+        let dfc = dfc.lock().unwrap();
+        let collision_prone = dfc
+            .global_tags()
+            .keys()
+            .filter(|k| MetaKeyStyle::is_collision_prone(k))
+            .count();
+        println!(
+            "  {style:?}: {} global tags, {collision_prone} collision-prone",
+            dfc.global_tags().len()
+        );
+    }
+
+    // ---- C: retry policy under flaky SEs --------------------------------------
+    println!("\n# C. put success rate with 2 of 8 SEs down (100 files, 4+2)");
+    for (label, retry) in [
+        ("no retry (paper PoC)", RetryPolicy::none()),
+        ("retry+fallback (further work)", RetryPolicy::default_robust()),
+    ] {
+        let cluster = TestCluster::builder().ses(8).build().unwrap();
+        cluster.kill_se("SE-02");
+        cluster.kill_se("SE-05");
+        let opts = PutOptions::default()
+            .with_params(EcParams::new(4, 2).unwrap())
+            .with_stripe(1024)
+            .with_retry(retry);
+        let mut ok = 0;
+        for i in 0..100 {
+            if cluster
+                .shim()
+                .put_bytes(&format!("/vo/r{i}"), &[3u8; 3000], &opts)
+                .is_ok()
+            {
+                ok += 1;
+            }
+        }
+        println!("  {label:<30} {ok}/100 puts succeeded");
+    }
+
+    // ---- D: generator construction ---------------------------------------------
+    println!("\n# D. any-K-of-N validity: Cauchy vs Vandermonde coding blocks (k=10, m=5)");
+    for (name, block) in [
+        ("cauchy", GfMatrix::cauchy(5, 10).unwrap()),
+        ("vandermonde rows k..k+m", {
+            let v = GfMatrix::vandermonde(15, 10);
+            v.select_rows(&[10, 11, 12, 13, 14]).unwrap()
+        }),
+    ] {
+        let mut gen_rows = Vec::new();
+        for i in 0..10 {
+            let mut row = vec![0u8; 10];
+            row[i] = 1;
+            gen_rows.push(row);
+        }
+        for i in 0..5 {
+            gen_rows.push(block.row(i).to_vec());
+        }
+        let gen = GfMatrix::from_rows(gen_rows).unwrap();
+        // sample 3000 random K-subsets
+        let mut rng = Rng::new(11);
+        let mut singular = 0usize;
+        for _ in 0..3000 {
+            let pick = rng.sample_indices(15, 10);
+            if gen.select_rows(&pick).unwrap().invert().is_err() {
+                singular += 1;
+            }
+        }
+        println!("  {name:<26} singular subsets: {singular}/3000");
+    }
+
+    // ---- E: stripe width vs throughput -----------------------------------------
+    println!("\n# E. encode throughput vs stripe_b (10+5, 8 MiB file, pure-rust)");
+    let mut rng = Rng::new(3);
+    let file = rng.bytes(8 << 20);
+    for stripe_b in [4096usize, 16384, 65536, 262144] {
+        let codec = Codec::with_backend(
+            EcParams::new(10, 5).unwrap(),
+            stripe_b,
+            Arc::new(PureRustBackend),
+        )
+        .unwrap();
+        let t0 = Instant::now();
+        let mut iters = 0;
+        while t0.elapsed().as_secs_f64() < 0.4 {
+            let _ = codec.encode(&file).unwrap();
+            iters += 1;
+        }
+        println!(
+            "  stripe {:>7}: {:>7.0} MB/s",
+            stripe_b,
+            file.len() as f64 * iters as f64 / t0.elapsed().as_secs_f64() / 1e6
+        );
+    }
+}

@@ -1,0 +1,116 @@
+//! L3 hot-path throughput: GF(2⁸) slice kernels and whole-file codec
+//! encode/decode, pure-rust vs the AOT/PJRT pallas kernel.
+//!
+//! This is the §Perf baseline recorded in EXPERIMENTS.md.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use drs::ec::{Codec, EcParams, PureRustBackend};
+use drs::gf::{mul_slice, mul_xor_slice, xor_slice};
+use drs::runtime::PjrtBackend;
+use drs::util::prng::Rng;
+
+fn bench(label: &str, bytes: u64, mut f: impl FnMut()) -> f64 {
+    // Warm up once, then run enough iterations for ~0.5 s.
+    f();
+    let t0 = Instant::now();
+    let mut iters = 0u64;
+    while t0.elapsed().as_secs_f64() < 0.5 {
+        f();
+        iters += 1;
+    }
+    let gbps = bytes as f64 * iters as f64 / t0.elapsed().as_secs_f64() / 1e9;
+    println!("{label:<44} {gbps:>8.3} GB/s");
+    gbps
+}
+
+fn main() {
+    let mut rng = Rng::new(1);
+    let n = 1 << 20;
+    let src = rng.bytes(n);
+    let mut dst = rng.bytes(n);
+
+    println!("# GF(2^8) slice kernels (1 MiB buffers)");
+    bench("xor_slice", n as u64, || xor_slice(&mut dst, &src));
+    bench("mul_slice (c=0x57)", n as u64, || {
+        mul_slice(0x57, &src, &mut dst)
+    });
+    let mxs = bench("mul_xor_slice (c=0x57)  <- codec inner loop", n as u64, || {
+        mul_xor_slice(0x57, &src, &mut dst)
+    });
+
+    println!("\n# Whole-file codec (16 MiB file)");
+    let file = rng.bytes(16 << 20);
+    for (k, m) in [(4usize, 2usize), (10, 5), (8, 2)] {
+        let codec = Codec::with_backend(
+            EcParams::new(k, m).unwrap(),
+            65536,
+            Arc::new(PureRustBackend),
+        )
+        .unwrap();
+        let enc = bench(
+            &format!("encode {k}+{m} pure-rust"),
+            file.len() as u64,
+            || {
+                let _ = codec.encode(&file).unwrap();
+            },
+        );
+        let chunks = codec.encode(&file).unwrap();
+        // Worst-case decode: all m coding chunks in use.
+        let subset: Vec<(usize, Vec<u8>)> =
+            (m..k + m).map(|i| (i, chunks[i].clone())).collect();
+        bench(
+            &format!("decode {k}+{m} pure-rust (worst case)"),
+            file.len() as u64,
+            || {
+                let _ = codec.decode(&subset).unwrap();
+            },
+        );
+        let _ = enc;
+    }
+
+    // Component shares of the encode path.
+    println!("\n# encode component shares (16 MiB)");
+    bench("sha256 (whole-file integrity digest)", file.len() as u64, || {
+        let _ = drs::ec::chunk::sha256(&file);
+    });
+
+    // PJRT/pallas path (the three-layer paper path).
+    for stripe_b in [65536usize, 262144] {
+        println!("\n# AOT pallas kernel via PJRT (16 MiB file, 10+5, b={stripe_b})");
+        match PjrtBackend::from_default_dir() {
+            Ok(b) => {
+                let backend = Arc::new(b);
+                let codec = Codec::with_backend(
+                    EcParams::new(10, 5).unwrap(),
+                    stripe_b,
+                    backend.clone(),
+                )
+                .unwrap();
+                bench(
+                    &format!("encode 10+5 pjrt-aot b={stripe_b}"),
+                    file.len() as u64,
+                    || {
+                        let _ = codec.encode(&file).unwrap();
+                    },
+                );
+                let chunks = codec.encode(&file).unwrap();
+                let subset: Vec<(usize, Vec<u8>)> =
+                    (5..15).map(|i| (i, chunks[i].clone())).collect();
+                bench(
+                    &format!("decode 10+5 pjrt-aot b={stripe_b} (worst)"),
+                    file.len() as u64,
+                    || {
+                        let _ = codec.decode(&subset).unwrap();
+                    },
+                );
+                let (pjrt, fallback) = backend.call_counts();
+                println!("(pjrt stripe calls: {pjrt}, fallback: {fallback})");
+            }
+            Err(e) => println!("PJRT unavailable: {e}"),
+        }
+    }
+
+    assert!(mxs > 0.2, "mul_xor_slice below 200 MB/s — hot path regressed");
+}

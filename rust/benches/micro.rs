@@ -1,0 +1,107 @@
+//! Microbenchmarks of the L3 substrates: catalog ops, placement, work
+//! pool dispatch, DES event rate, chunk-container and JSON codecs.
+
+use std::time::Instant;
+
+use drs::catalog::{Dfc, FileEntry, MetaValue};
+use drs::ec::{chunk_name, ChunkHeader, EcParams};
+use drs::placement::{PlacementPolicy, RoundRobin, Weighted};
+use drs::se::{NetworkProfile, SeInfo};
+use drs::sim::TransferSim;
+use drs::transfer::{PoolConfig, WorkPool};
+use drs::util::json::Json;
+use drs::util::prng::Rng;
+
+fn rate(label: &str, items: u64, mut f: impl FnMut()) -> f64 {
+    f();
+    let t0 = Instant::now();
+    let mut iters = 0u64;
+    while t0.elapsed().as_secs_f64() < 0.4 {
+        f();
+        iters += 1;
+    }
+    let per_s = items as f64 * iters as f64 / t0.elapsed().as_secs_f64();
+    println!("{label:<46} {per_s:>14.0} /s");
+    per_s
+}
+
+fn main() {
+    println!("# catalog");
+    rate("dfc add_file+replica (1000-file namespace)", 1000, || {
+        let mut dfc = Dfc::new();
+        dfc.mkdir_p("/vo/data").unwrap();
+        for i in 0..1000 {
+            let path = format!("/vo/data/f{i}");
+            dfc.add_file(&path, FileEntry::default()).unwrap();
+            dfc.register_replica(&path, "SE-A", &path).unwrap();
+        }
+    });
+    let mut dfc = Dfc::new();
+    dfc.mkdir_p("/vo/data").unwrap();
+    for i in 0..1000 {
+        let p = format!("/vo/data/d{i}");
+        dfc.mkdir_p(&p).unwrap();
+        dfc.set_meta(&p, "TOTAL", MetaValue::Int((i % 16) as i64)).unwrap();
+    }
+    rate("find_dirs_by_meta over 1000 dirs", 1000, || {
+        let hits = dfc.find_dirs_by_meta(&[("TOTAL", MetaValue::Int(15))]);
+        assert!(hits.len() > 10);
+    });
+    let snapshot = dfc.to_json().to_string();
+    rate(
+        &format!("catalog snapshot parse ({} kB)", snapshot.len() / 1000),
+        1,
+        || {
+            let j = Json::parse(&snapshot).unwrap();
+            let _ = Dfc::from_json(&j).unwrap();
+        },
+    );
+
+    println!("\n# placement (15 chunks over 8 SEs)");
+    let infos: Vec<SeInfo> = (0..8)
+        .map(|i| SeInfo {
+            name: format!("SE-{i}"),
+            region: "uk".into(),
+            available: true,
+            used_bytes: i as u64 * 1000,
+        })
+        .collect();
+    rate("round-robin place()", 1000, || {
+        for _ in 0..1000 {
+            let _ = RoundRobin.place(15, &infos).unwrap();
+        }
+    });
+    rate("weighted place()", 1000, || {
+        for _ in 0..1000 {
+            let _ = Weighted.place(15, &infos).unwrap();
+        }
+    });
+
+    println!("\n# work pool (15 no-op jobs, quota 10)");
+    for workers in [1usize, 4, 15] {
+        rate(&format!("pool dispatch, {workers} workers"), 15, || {
+            let jobs: Vec<(usize, _)> = (0..15).map(|i| (i, move || Ok(i))).collect();
+            let out = WorkPool::new(PoolConfig::parallel(workers)).run(jobs, 10);
+            assert!(out.success_count() >= 10);
+        });
+    }
+
+    println!("\n# discrete-event simulator");
+    let profile = NetworkProfile::paper_testbed();
+    rate("DES events (15 transfers, 5 workers)", 30, || {
+        let mut rng = Rng::new(7);
+        let sim = TransferSim::new(profile.clone(), 5);
+        let _ = sim.run(&vec![75_600; 15], 15, &mut rng);
+    });
+
+    println!("\n# containers");
+    let hdr = ChunkHeader::new(EcParams::new(10, 5).unwrap(), 3, 65536, 1 << 30, 1 << 27, [9; 32]);
+    rate("chunk header encode+decode", 1, || {
+        let e = hdr.encode();
+        let _ = ChunkHeader::decode(&e).unwrap();
+    });
+    rate("chunk_name format+parse", 1, || {
+        let n = chunk_name("file.dat", 7, 15);
+        let _ = drs::ec::parse_chunk_name(&n).unwrap();
+    });
+}

@@ -1,0 +1,35 @@
+//! Figure 2: "Scaling performance of file upload for a 768kB file encoded
+//! as 10 chunks + 5 coding chunks, with increasing parallelism."
+//!
+//! Series: EC upload at pool sizes 1..15 on the calibrated DES, plus the
+//! paper's two baselines — the whole-file upload and the split-unencoded
+//! upload (both serial, as in the figure).
+
+use drs::se::NetworkProfile;
+use drs::sim::{average, upload_scenario, upload_split, upload_whole, Scenario};
+
+fn main() {
+    const SIZE: u64 = 768_000;
+    let p = NetworkProfile::paper_testbed();
+    let runs = 9;
+
+    let whole = average(runs, |s| upload_whole(&p, SIZE, s));
+    let split = average(runs, |s| upload_split(&p, SIZE, 10, 1, s));
+    println!("# Figure 2 — 768 kB upload, 10+5, time vs worker-pool size");
+    println!("baseline single whole file (serial):   {whole:>7.1} s");
+    println!("baseline 10 pieces no encoding (serial): {split:>6.1} s");
+    println!("\n{:>8} {:>10}", "workers", "time[s]");
+    let mut times = Vec::new();
+    for workers in 1..=15usize {
+        let t = average(runs, |s| upload_scenario(&Scenario::paper(SIZE, workers), s));
+        println!("{workers:>8} {t:>10.1}");
+        times.push(t);
+    }
+
+    // Paper claims for the small file: parallelism improves performance,
+    // and beats the serial split-unencoded case.
+    assert!(times[14] < times[0] / 4.0, "parallelism must win big on small files");
+    assert!(times[14] < split, "15-way EC must beat serial split-unencoded");
+    assert!(times[14] > whole * 0.8, "but cannot beat one whole-file transfer");
+    println!("\nfig-2 shape check ✓ (monotone gain, beats split baseline, bounded by whole-file)");
+}

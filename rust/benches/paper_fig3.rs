@@ -1,0 +1,39 @@
+//! Figure 3: "Scaling performance of file upload for a 2.4GB file encoded
+//! as 10 chunks + 5 coding chunks" — the Amdahl's-law figure: the serial
+//! (unparallelised) encode dominates at high worker counts.
+
+use drs::se::NetworkProfile;
+use drs::sim::{average, upload_scenario, upload_whole, Scenario};
+
+fn main() {
+    const SIZE: u64 = 2_400_000_000;
+    let p = NetworkProfile::paper_testbed();
+    let runs = 5;
+
+    let whole = average(runs, |s| upload_whole(&p, SIZE, s));
+    println!("# Figure 3 — 2.4 GB upload, 10+5, time vs worker-pool size");
+    println!("baseline single whole file (serial): {whole:>7.0} s");
+    println!(
+        "serial encode component (zfec-era 40 MB/s): {:>5.0} s",
+        SIZE as f64 / 40e6
+    );
+    println!("\n{:>8} {:>10} {:>9}", "workers", "time[s]", "speedup");
+    let mut times = Vec::new();
+    for workers in 1..=15usize {
+        let t = average(runs, |s| upload_scenario(&Scenario::paper(SIZE, workers), s));
+        times.push(t);
+        println!("{workers:>8} {t:>10.0} {:>8.2}x", times[0] / t);
+    }
+
+    // Paper: "parallelism does provide a performance improvement ... but
+    // we do not see the same effect for larger files. This is clearly an
+    // Amdahl's Law effect."
+    let speedup = times[0] / times[14];
+    assert!(speedup > 1.05, "parallelism must still help a little");
+    assert!(speedup < 2.5, "Amdahl cap: speedup {speedup} must be far below 15x");
+    assert!(
+        times[14] > whole,
+        "encoded parallel upload cannot beat the unencoded whole file (1.5x bytes + encode)"
+    );
+    println!("\nfig-3 shape check ✓ (speedup {speedup:.2}x, Amdahl-capped)");
+}

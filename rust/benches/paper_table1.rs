@@ -1,0 +1,71 @@
+//! Table 1: "Comparison of upload times for whole files or files in 10
+//! pieces (with no encoding)."
+//!
+//! Regenerates the paper's four rows on the calibrated DES (serial
+//! transfers, paper testbed profile). Paper values are printed alongside
+//! for the shape comparison recorded in EXPERIMENTS.md.
+
+use drs::se::NetworkProfile;
+use drs::sim::{average, upload_split, upload_whole};
+
+fn main() {
+    let p = NetworkProfile::paper_testbed();
+    let runs = 11;
+
+    // (label, paper total, paper per-file, closure -> simulated total, pieces)
+    let rows: Vec<(&str, f64, f64, f64, usize)> = vec![
+        (
+            "1 x 756 kB",
+            6.0,
+            6.0,
+            average(runs, |s| upload_whole(&p, 756_000, s)),
+            1,
+        ),
+        (
+            "10 x 75.6 kB",
+            54.0,
+            5.5,
+            average(runs, |s| upload_split(&p, 756_000, 10, 1, s)),
+            10,
+        ),
+        (
+            "1 x 2.4 GB",
+            142.0,
+            142.0,
+            average(runs, |s| upload_whole(&p, 2_400_000_000, s)),
+            1,
+        ),
+        (
+            "10 x 243 MB",
+            206.0,
+            20.0,
+            average(runs, |s| upload_split(&p, 2_400_000_000, 10, 1, s)),
+            10,
+        ),
+    ];
+
+    println!("# Table 1 — upload times, whole vs 10 pieces (no encoding), serial");
+    println!(
+        "{:<14} {:>12} {:>12} {:>14} {:>14}",
+        "size", "paper[s]", "sim[s]", "paper/file[s]", "sim/file[s]"
+    );
+    for (label, paper_total, paper_per, sim_total, pieces) in &rows {
+        println!(
+            "{:<14} {:>12.1} {:>12.1} {:>14.1} {:>14.1}",
+            label,
+            paper_total,
+            sim_total,
+            paper_per,
+            sim_total / *pieces as f64
+        );
+    }
+
+    // Shape assertions (who wins, by what factor).
+    let split_small_ratio = rows[1].3 / rows[0].3;
+    let split_large_ratio = rows[3].3 / rows[2].3;
+    println!("\nsplit/whole ratio, small: paper {:.1}x vs sim {:.1}x", 54.0 / 6.0, split_small_ratio);
+    println!("split/whole ratio, large: paper {:.2}x vs sim {:.2}x", 206.0 / 142.0, split_large_ratio);
+    assert!(split_small_ratio > 5.0, "small files must be latency-dominated");
+    assert!(split_large_ratio < 2.0, "large files must be bandwidth-dominated");
+    println!("table-1 shape check ✓");
+}

@@ -1,0 +1,618 @@
+//! The DFC namespace tree and its operations.
+//!
+//! API surface mirrors the python DFC client calls the paper's shim wraps:
+//! `createDirectory`, `addFile`, `listDirectory`, `removeFile`,
+//! `setMetadata`, `getFileMetadata`, `findFilesByMetadata`,
+//! `registerReplica`, `getReplicas`.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+use super::entry::{meta_from_json, meta_to_json, DirEntry, FileEntry, Replica};
+use super::meta::{MetaMap, MetaValue};
+
+#[derive(Clone, Debug)]
+enum Node {
+    Dir { entry: DirEntry, children: BTreeMap<String, Node> },
+    File(FileEntry),
+}
+
+impl Node {
+    fn empty_dir() -> Node {
+        Node::Dir { entry: DirEntry::default(), children: BTreeMap::new() }
+    }
+}
+
+/// Listing element returned by [`Dfc::list_dir`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum DirItem {
+    Dir(String),
+    File(String),
+}
+
+impl DirItem {
+    pub fn name(&self) -> &str {
+        match self {
+            DirItem::Dir(n) | DirItem::File(n) => n,
+        }
+    }
+}
+
+/// The DIRAC File Catalogue.
+pub struct Dfc {
+    root: Node,
+    /// The *global* metadata tag index (key → use count). Reproduces the
+    /// behaviour behind the paper's §4 collision warning: every key set by
+    /// any user is visible catalogue-wide.
+    tag_index: BTreeMap<String, u64>,
+}
+
+impl Default for Dfc {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Dfc {
+    pub fn new() -> Self {
+        Dfc { root: Node::empty_dir(), tag_index: BTreeMap::new() }
+    }
+
+    // -- path helpers -----------------------------------------------------
+
+    fn split(path: &str) -> Result<Vec<&str>> {
+        if !path.starts_with('/') {
+            return Err(Error::Catalog(format!("path must be absolute: `{path}`")));
+        }
+        let parts: Vec<&str> = path.split('/').filter(|p| !p.is_empty()).collect();
+        if parts.iter().any(|p| *p == "." || *p == "..") {
+            return Err(Error::Catalog(format!("`.`/`..` not allowed: `{path}`")));
+        }
+        Ok(parts)
+    }
+
+    fn lookup(&self, path: &str) -> Result<&Node> {
+        let mut node = &self.root;
+        for part in Self::split(path)? {
+            match node {
+                Node::Dir { children, .. } => {
+                    node = children.get(part).ok_or_else(|| {
+                        Error::Catalog(format!("no such entry: `{path}`"))
+                    })?;
+                }
+                Node::File(_) => {
+                    return Err(Error::Catalog(format!(
+                        "`{part}` in `{path}` is a file, not a directory"
+                    )))
+                }
+            }
+        }
+        Ok(node)
+    }
+
+    fn lookup_mut(&mut self, path: &str) -> Result<&mut Node> {
+        let parts = Self::split(path)?;
+        let mut node = &mut self.root;
+        for part in parts {
+            match node {
+                Node::Dir { children, .. } => {
+                    node = children.get_mut(part).ok_or_else(|| {
+                        Error::Catalog(format!("no such entry: `{path}`"))
+                    })?;
+                }
+                Node::File(_) => {
+                    return Err(Error::Catalog(format!(
+                        "`{part}` in `{path}` is a file, not a directory"
+                    )))
+                }
+            }
+        }
+        Ok(node)
+    }
+
+    // -- namespace ops ----------------------------------------------------
+
+    /// `createDirectory` with `-p` semantics (idempotent).
+    pub fn mkdir_p(&mut self, path: &str) -> Result<()> {
+        let parts = Self::split(path)?;
+        let mut node = &mut self.root;
+        for part in parts {
+            let children = match node {
+                Node::Dir { children, .. } => children,
+                Node::File(_) => {
+                    return Err(Error::Catalog(format!(
+                        "cannot mkdir through file at `{part}` in `{path}`"
+                    )))
+                }
+            };
+            node = children.entry(part.to_string()).or_insert_with(Node::empty_dir);
+            if matches!(node, Node::File(_)) {
+                return Err(Error::Catalog(format!(
+                    "`{part}` in `{path}` exists as a file"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// `addFile`: register a logical file (parent dir must exist).
+    pub fn add_file(&mut self, path: &str, entry: FileEntry) -> Result<()> {
+        let (dir, name) = Self::dirname_basename(path)?;
+        let meta_keys: Vec<String> = entry.meta.keys().cloned().collect();
+        match self.lookup_mut(&dir)? {
+            Node::Dir { children, .. } => {
+                if children.contains_key(&name) {
+                    return Err(Error::Catalog(format!("entry exists: `{path}`")));
+                }
+                children.insert(name, Node::File(entry));
+            }
+            Node::File(_) => {
+                return Err(Error::Catalog(format!("parent of `{path}` is a file")))
+            }
+        }
+        for k in meta_keys {
+            *self.tag_index.entry(k).or_insert(0) += 1;
+        }
+        Ok(())
+    }
+
+    pub fn exists(&self, path: &str) -> bool {
+        self.lookup(path).is_ok()
+    }
+
+    pub fn is_dir(&self, path: &str) -> bool {
+        matches!(self.lookup(path), Ok(Node::Dir { .. }))
+    }
+
+    pub fn is_file(&self, path: &str) -> bool {
+        matches!(self.lookup(path), Ok(Node::File(_)))
+    }
+
+    /// `listDirectory`: immediate children, dirs first then files, each
+    /// group sorted (BTreeMap order) — deterministic like the real DFC.
+    pub fn list_dir(&self, path: &str) -> Result<Vec<DirItem>> {
+        match self.lookup(path)? {
+            Node::Dir { children, .. } => {
+                let mut dirs = Vec::new();
+                let mut files = Vec::new();
+                for (name, node) in children {
+                    match node {
+                        Node::Dir { .. } => dirs.push(DirItem::Dir(name.clone())),
+                        Node::File(_) => files.push(DirItem::File(name.clone())),
+                    }
+                }
+                dirs.extend(files);
+                Ok(dirs)
+            }
+            Node::File(_) => Err(Error::Catalog(format!("`{path}` is a file"))),
+        }
+    }
+
+    /// `getFile` record.
+    pub fn file(&self, path: &str) -> Result<&FileEntry> {
+        match self.lookup(path)? {
+            Node::File(f) => Ok(f),
+            Node::Dir { .. } => Err(Error::Catalog(format!("`{path}` is a directory"))),
+        }
+    }
+
+    pub fn file_mut(&mut self, path: &str) -> Result<&mut FileEntry> {
+        match self.lookup_mut(path)? {
+            Node::File(f) => Ok(f),
+            Node::Dir { .. } => Err(Error::Catalog(format!("`{path}` is a directory"))),
+        }
+    }
+
+    /// `removeFile`.
+    pub fn remove_file(&mut self, path: &str) -> Result<FileEntry> {
+        let (dir, name) = Self::dirname_basename(path)?;
+        match self.lookup_mut(&dir)? {
+            Node::Dir { children, .. } => match children.get(&name) {
+                Some(Node::File(_)) => {
+                    if let Some(Node::File(f)) = children.remove(&name) {
+                        Ok(f)
+                    } else {
+                        unreachable!()
+                    }
+                }
+                Some(Node::Dir { .. }) => {
+                    Err(Error::Catalog(format!("`{path}` is a directory")))
+                }
+                None => Err(Error::Catalog(format!("no such file: `{path}`"))),
+            },
+            Node::File(_) => Err(Error::Catalog(format!("parent of `{path}` is a file"))),
+        }
+    }
+
+    /// `removeDirectory` (recursive).
+    pub fn remove_dir(&mut self, path: &str) -> Result<()> {
+        let (dir, name) = Self::dirname_basename(path)?;
+        match self.lookup_mut(&dir)? {
+            Node::Dir { children, .. } => match children.get(&name) {
+                Some(Node::Dir { .. }) => {
+                    children.remove(&name);
+                    Ok(())
+                }
+                Some(Node::File(_)) => {
+                    Err(Error::Catalog(format!("`{path}` is a file")))
+                }
+                None => Err(Error::Catalog(format!("no such directory: `{path}`"))),
+            },
+            Node::File(_) => Err(Error::Catalog(format!("parent of `{path}` is a file"))),
+        }
+    }
+
+    fn dirname_basename(path: &str) -> Result<(String, String)> {
+        let parts = Self::split(path)?;
+        let name = parts
+            .last()
+            .ok_or_else(|| Error::Catalog("cannot operate on `/`".into()))?
+            .to_string();
+        let dir = format!("/{}", parts[..parts.len() - 1].join("/"));
+        Ok((dir, name))
+    }
+
+    // -- metadata ops -------------------------------------------------------
+
+    /// `setMetadata` on a file or directory.
+    pub fn set_meta(&mut self, path: &str, key: &str, value: MetaValue) -> Result<()> {
+        let node = self.lookup_mut(path)?;
+        let meta = match node {
+            Node::Dir { entry, .. } => &mut entry.meta,
+            Node::File(f) => &mut f.meta,
+        };
+        let fresh = meta.insert(key.to_string(), value).is_none();
+        if fresh {
+            *self.tag_index.entry(key.to_string()).or_insert(0) += 1;
+        }
+        Ok(())
+    }
+
+    /// `getMetadata` for one entry.
+    pub fn meta(&self, path: &str) -> Result<&MetaMap> {
+        Ok(match self.lookup(path)? {
+            Node::Dir { entry, .. } => &entry.meta,
+            Node::File(f) => &f.meta,
+        })
+    }
+
+    pub fn get_meta(&self, path: &str, key: &str) -> Result<Option<&MetaValue>> {
+        Ok(self.meta(path)?.get(key))
+    }
+
+    /// The catalogue-wide tag index: every metadata key ever used, with use
+    /// counts. This is what made the paper's generic keys "visible to all
+    /// other users".
+    pub fn global_tags(&self) -> &BTreeMap<String, u64> {
+        &self.tag_index
+    }
+
+    /// `findDirectoriesByMetadata`: all directories whose metadata contains
+    /// every (key, value) pair in `query`.
+    pub fn find_dirs_by_meta(&self, query: &[(&str, MetaValue)]) -> Vec<String> {
+        let mut out = Vec::new();
+        Self::walk(&self.root, "", &mut |path, node| {
+            if let Node::Dir { entry, .. } = node {
+                if Self::meta_matches(&entry.meta, query) && !path.is_empty() {
+                    out.push(path.to_string());
+                }
+            }
+        });
+        out
+    }
+
+    /// `findFilesByMetadata`.
+    pub fn find_files_by_meta(&self, query: &[(&str, MetaValue)]) -> Vec<String> {
+        let mut out = Vec::new();
+        Self::walk(&self.root, "", &mut |path, node| {
+            if let Node::File(f) = node {
+                if Self::meta_matches(&f.meta, query) {
+                    out.push(path.to_string());
+                }
+            }
+        });
+        out
+    }
+
+    fn meta_matches(meta: &MetaMap, query: &[(&str, MetaValue)]) -> bool {
+        query.iter().all(|(k, v)| meta.get(*k) == Some(v))
+    }
+
+    fn walk<'a>(node: &'a Node, path: &str, f: &mut impl FnMut(&str, &'a Node)) {
+        f(path, node);
+        if let Node::Dir { children, .. } = node {
+            for (name, child) in children {
+                Self::walk(child, &format!("{path}/{name}"), f);
+            }
+        }
+    }
+
+    // -- replicas -----------------------------------------------------------
+
+    /// `registerReplica`.
+    pub fn register_replica(&mut self, path: &str, se: &str, pfn: &str) -> Result<()> {
+        let f = self.file_mut(path)?;
+        if f.replicas.iter().any(|r| r.se == se) {
+            return Err(Error::Catalog(format!(
+                "`{path}` already has a replica at `{se}`"
+            )));
+        }
+        f.replicas.push(Replica { se: se.to_string(), pfn: pfn.to_string() });
+        Ok(())
+    }
+
+    /// `getReplicas`.
+    pub fn replicas(&self, path: &str) -> Result<&[Replica]> {
+        Ok(&self.file(path)?.replicas)
+    }
+
+    pub fn remove_replica(&mut self, path: &str, se: &str) -> Result<()> {
+        let f = self.file_mut(path)?;
+        let before = f.replicas.len();
+        f.replicas.retain(|r| r.se != se);
+        if f.replicas.len() == before {
+            return Err(Error::Catalog(format!("no replica of `{path}` at `{se}`")));
+        }
+        Ok(())
+    }
+
+    // -- stats & persistence --------------------------------------------------
+
+    /// (directories, files) counts for the whole namespace.
+    pub fn counts(&self) -> (usize, usize) {
+        let (mut d, mut f) = (0usize, 0usize);
+        Self::walk(&self.root, "", &mut |_, node| match node {
+            Node::Dir { .. } => d += 1,
+            Node::File(_) => f += 1,
+        });
+        (d - 1, f) // exclude the root itself
+    }
+
+    pub fn to_json(&self) -> Json {
+        fn node_json(node: &Node) -> Json {
+            match node {
+                Node::File(f) => Json::obj(vec![("file", f.to_json())]),
+                Node::Dir { entry, children } => Json::obj(vec![
+                    ("meta", meta_to_json(&entry.meta)),
+                    (
+                        "children",
+                        Json::Obj(
+                            children
+                                .iter()
+                                .map(|(k, v)| (k.clone(), node_json(v)))
+                                .collect(),
+                        ),
+                    ),
+                ]),
+            }
+        }
+        Json::obj(vec![
+            ("format", Json::num(1.0)),
+            ("root", node_json(&self.root)),
+            (
+                "tag_index",
+                Json::Obj(
+                    self.tag_index
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::num(*v as f64)))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Dfc> {
+        fn node_from(j: &Json) -> Option<Node> {
+            if let Some(fj) = j.get("file") {
+                return Some(Node::File(FileEntry::from_json(fj)?));
+            }
+            let meta = meta_from_json(j.get("meta")?)?;
+            let mut children = BTreeMap::new();
+            for (k, v) in j.get("children")?.as_obj()? {
+                children.insert(k.clone(), node_from(v)?);
+            }
+            Some(Node::Dir { entry: DirEntry { meta }, children })
+        }
+        let root = j
+            .get("root")
+            .and_then(node_from)
+            .ok_or_else(|| Error::Catalog("malformed catalog snapshot".into()))?;
+        let mut tag_index = BTreeMap::new();
+        if let Some(obj) = j.get("tag_index").and_then(|t| t.as_obj()) {
+            for (k, v) in obj {
+                tag_index.insert(k.clone(), v.as_u64().unwrap_or(0));
+            }
+        }
+        Ok(Dfc { root, tag_index })
+    }
+
+    /// Persist a snapshot to disk.
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    /// Load a snapshot from disk.
+    pub fn load(path: &std::path::Path) -> Result<Dfc> {
+        let text = std::fs::read_to_string(path)?;
+        let j = crate::util::json::Json::parse(&text)
+            .map_err(|e| Error::Catalog(format!("snapshot parse: {e}")))?;
+        Self::from_json(&j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::forall;
+
+    fn fe(size: u64) -> FileEntry {
+        FileEntry { size, ..Default::default() }
+    }
+
+    #[test]
+    fn mkdir_and_add() {
+        let mut dfc = Dfc::new();
+        dfc.mkdir_p("/vo/na62/user").unwrap();
+        assert!(dfc.is_dir("/vo/na62/user"));
+        dfc.add_file("/vo/na62/user/run1.dat", fe(100)).unwrap();
+        assert!(dfc.is_file("/vo/na62/user/run1.dat"));
+        assert_eq!(dfc.file("/vo/na62/user/run1.dat").unwrap().size, 100);
+    }
+
+    #[test]
+    fn mkdir_p_idempotent() {
+        let mut dfc = Dfc::new();
+        dfc.mkdir_p("/a/b/c").unwrap();
+        dfc.mkdir_p("/a/b/c").unwrap();
+        dfc.mkdir_p("/a/b").unwrap();
+        assert_eq!(dfc.counts().0, 3);
+    }
+
+    #[test]
+    fn add_requires_parent() {
+        let mut dfc = Dfc::new();
+        assert!(dfc.add_file("/nodir/x", fe(1)).is_err());
+    }
+
+    #[test]
+    fn duplicate_rejected() {
+        let mut dfc = Dfc::new();
+        dfc.mkdir_p("/d").unwrap();
+        dfc.add_file("/d/x", fe(1)).unwrap();
+        assert!(dfc.add_file("/d/x", fe(2)).is_err());
+        assert!(dfc.mkdir_p("/d/x").is_err());
+    }
+
+    #[test]
+    fn list_dirs_first_sorted() {
+        let mut dfc = Dfc::new();
+        dfc.mkdir_p("/d/zz").unwrap();
+        dfc.mkdir_p("/d/aa").unwrap();
+        dfc.add_file("/d/bb", fe(1)).unwrap();
+        let items = dfc.list_dir("/d").unwrap();
+        assert_eq!(
+            items,
+            vec![
+                DirItem::Dir("aa".into()),
+                DirItem::Dir("zz".into()),
+                DirItem::File("bb".into())
+            ]
+        );
+    }
+
+    #[test]
+    fn remove_file_and_dir() {
+        let mut dfc = Dfc::new();
+        dfc.mkdir_p("/d/sub").unwrap();
+        dfc.add_file("/d/sub/x", fe(1)).unwrap();
+        dfc.remove_file("/d/sub/x").unwrap();
+        assert!(!dfc.exists("/d/sub/x"));
+        dfc.remove_dir("/d/sub").unwrap();
+        assert!(!dfc.exists("/d/sub"));
+        assert!(dfc.remove_file("/d/sub").is_err());
+    }
+
+    #[test]
+    fn paths_validated() {
+        let mut dfc = Dfc::new();
+        assert!(dfc.mkdir_p("relative/path").is_err());
+        assert!(dfc.mkdir_p("/a/../b").is_err());
+        assert!(Dfc::split("/a//b").unwrap() == vec!["a", "b"]);
+    }
+
+    #[test]
+    fn metadata_and_queries() {
+        let mut dfc = Dfc::new();
+        dfc.mkdir_p("/vo/data/f1.ec").unwrap();
+        dfc.mkdir_p("/vo/data/f2.ec").unwrap();
+        dfc.set_meta("/vo/data/f1.ec", "TOTAL", MetaValue::Int(15)).unwrap();
+        dfc.set_meta("/vo/data/f1.ec", "SPLIT", MetaValue::Int(10)).unwrap();
+        dfc.set_meta("/vo/data/f2.ec", "TOTAL", MetaValue::Int(10)).unwrap();
+        let hits = dfc.find_dirs_by_meta(&[("TOTAL", MetaValue::Int(15))]);
+        assert_eq!(hits, vec!["/vo/data/f1.ec"]);
+        let both = dfc.find_dirs_by_meta(&[
+            ("TOTAL", MetaValue::Int(15)),
+            ("SPLIT", MetaValue::Int(10)),
+        ]);
+        assert_eq!(both, vec!["/vo/data/f1.ec"]);
+    }
+
+    #[test]
+    fn global_tag_namespace_visibility() {
+        // The paper's §4 pitfall: one user's generic keys appear in the
+        // catalogue-wide index that every user sees.
+        let mut dfc = Dfc::new();
+        dfc.mkdir_p("/vo/alice").unwrap();
+        dfc.mkdir_p("/vo/bob").unwrap();
+        dfc.set_meta("/vo/alice", "TOTAL", MetaValue::Int(15)).unwrap();
+        assert!(dfc.global_tags().contains_key("TOTAL"));
+        // bob now sees (and could misuse) the generic tag
+        dfc.set_meta("/vo/bob", "TOTAL", MetaValue::Str("everything".into()))
+            .unwrap();
+        assert_eq!(dfc.global_tags()["TOTAL"], 2);
+    }
+
+    #[test]
+    fn replicas_register_list_remove() {
+        let mut dfc = Dfc::new();
+        dfc.mkdir_p("/d").unwrap();
+        dfc.add_file("/d/x", fe(10)).unwrap();
+        dfc.register_replica("/d/x", "SE-A", "/pfn/1").unwrap();
+        dfc.register_replica("/d/x", "SE-B", "/pfn/2").unwrap();
+        assert!(dfc.register_replica("/d/x", "SE-A", "/pfn/3").is_err());
+        assert_eq!(dfc.replicas("/d/x").unwrap().len(), 2);
+        dfc.remove_replica("/d/x", "SE-A").unwrap();
+        assert_eq!(dfc.replicas("/d/x").unwrap().len(), 1);
+        assert!(dfc.remove_replica("/d/x", "SE-A").is_err());
+    }
+
+    #[test]
+    fn snapshot_roundtrip() {
+        let mut dfc = Dfc::new();
+        dfc.mkdir_p("/vo/data/file.ec").unwrap();
+        dfc.set_meta("/vo/data/file.ec", "TOTAL", MetaValue::Int(15)).unwrap();
+        let mut f = fe(756_000);
+        f.checksum = "aa".repeat(32);
+        dfc.add_file("/vo/data/file.ec/file.00_of_15.drs", f).unwrap();
+        dfc.register_replica(
+            "/vo/data/file.ec/file.00_of_15.drs",
+            "SE-A",
+            "/pfn/x",
+        )
+        .unwrap();
+
+        let j = dfc.to_json();
+        let back = Dfc::from_json(&j).unwrap();
+        assert_eq!(back.counts(), dfc.counts());
+        assert_eq!(
+            back.get_meta("/vo/data/file.ec", "TOTAL").unwrap(),
+            Some(&MetaValue::Int(15))
+        );
+        assert_eq!(
+            back.replicas("/vo/data/file.ec/file.00_of_15.drs").unwrap().len(),
+            1
+        );
+        // deterministic serialization
+        assert_eq!(j.to_string(), back.to_json().to_string());
+    }
+
+    #[test]
+    fn snapshot_random_namespaces() {
+        forall(10, |rng| {
+            let mut dfc = Dfc::new();
+            let dirs = ["a", "b", "c", "deep/nest/ed"];
+            for _ in 0..20 {
+                let d = dirs[rng.index(dirs.len())];
+                let path = format!("/{d}");
+                dfc.mkdir_p(&path).unwrap();
+                let f = format!("{path}/f{}", rng.index(10));
+                let _ = dfc.add_file(&f, fe(rng.next_u64() >> 40));
+            }
+            let back = Dfc::from_json(&dfc.to_json()).unwrap();
+            assert_eq!(back.counts(), dfc.counts());
+        });
+    }
+}

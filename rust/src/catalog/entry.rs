@@ -1,0 +1,126 @@
+//! Catalog entries: files, directories, replicas.
+
+use crate::util::json::Json;
+
+use super::meta::{MetaMap, MetaValue};
+
+/// A physical replica of a catalog file: which SE holds it and under what
+/// physical file name (PFN).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Replica {
+    pub se: String,
+    pub pfn: String,
+}
+
+/// A logical file entry (LFN) in the DFC.
+#[derive(Clone, Debug, Default)]
+pub struct FileEntry {
+    pub size: u64,
+    /// Hex SHA-256 of the logical file contents ("" when unknown).
+    pub checksum: String,
+    pub replicas: Vec<Replica>,
+    pub meta: MetaMap,
+}
+
+/// A directory entry; directories carry metadata too (the shim tags the
+/// per-file chunk directory with TOTAL/SPLIT).
+#[derive(Clone, Debug, Default)]
+pub struct DirEntry {
+    pub meta: MetaMap,
+}
+
+impl FileEntry {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("size", Json::num(self.size as f64)),
+            ("checksum", Json::str(self.checksum.clone())),
+            (
+                "replicas",
+                Json::Arr(
+                    self.replicas
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("se", Json::str(r.se.clone())),
+                                ("pfn", Json::str(r.pfn.clone())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("meta", meta_to_json(&self.meta)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<FileEntry> {
+        let mut replicas = Vec::new();
+        for r in j.get("replicas")?.as_arr()? {
+            replicas.push(Replica {
+                se: r.get("se")?.as_str()?.to_string(),
+                pfn: r.get("pfn")?.as_str()?.to_string(),
+            });
+        }
+        Some(FileEntry {
+            size: j.get("size")?.as_u64()?,
+            checksum: j.get("checksum")?.as_str()?.to_string(),
+            replicas,
+            meta: meta_from_json(j.get("meta")?)?,
+        })
+    }
+}
+
+impl DirEntry {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![("meta", meta_to_json(&self.meta))])
+    }
+
+    pub fn from_json(j: &Json) -> Option<DirEntry> {
+        Some(DirEntry { meta: meta_from_json(j.get("meta")?)? })
+    }
+}
+
+pub(crate) fn meta_to_json(meta: &MetaMap) -> Json {
+    Json::Obj(meta.iter().map(|(k, v)| (k.clone(), v.to_json())).collect())
+}
+
+pub(crate) fn meta_from_json(j: &Json) -> Option<MetaMap> {
+    let mut out = MetaMap::new();
+    for (k, v) in j.as_obj()? {
+        out.insert(k.clone(), MetaValue::from_json(v)?);
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn file_entry_json_roundtrip() {
+        let mut meta = MetaMap::new();
+        meta.insert("TOTAL".into(), MetaValue::Int(15));
+        meta.insert("owner".into(), MetaValue::Str("na62".into()));
+        let fe = FileEntry {
+            size: 756_000,
+            checksum: "ab".repeat(32),
+            replicas: vec![
+                Replica { se: "UKI-GLASGOW".into(), pfn: "/se/a/x.00".into() },
+                Replica { se: "UKI-IC".into(), pfn: "/se/b/x.00".into() },
+            ],
+            meta,
+        };
+        let back = FileEntry::from_json(&fe.to_json()).unwrap();
+        assert_eq!(back.size, fe.size);
+        assert_eq!(back.replicas, fe.replicas);
+        assert_eq!(back.meta.get("TOTAL"), Some(&MetaValue::Int(15)));
+    }
+
+    #[test]
+    fn dir_entry_json_roundtrip() {
+        let mut meta = MetaMap::new();
+        meta.insert("SPLIT".into(), MetaValue::Int(10));
+        let de = DirEntry { meta };
+        let back = DirEntry::from_json(&de.to_json()).unwrap();
+        assert_eq!(back.meta.get("SPLIT"), Some(&MetaValue::Int(10)));
+    }
+}

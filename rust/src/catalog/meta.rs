@@ -1,0 +1,148 @@
+//! Metadata values and the EC tag-key conventions.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// A typed metadata value (the DFC stores key → value pairs per entry).
+#[derive(Clone, Debug, PartialEq)]
+pub enum MetaValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+}
+
+impl MetaValue {
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            MetaValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            MetaValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            MetaValue::Str(s) => Json::Str(s.clone()),
+            MetaValue::Int(i) => Json::Num(*i as f64),
+            MetaValue::Float(f) => Json::Num(*f),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Option<MetaValue> {
+        match j {
+            Json::Str(s) => Some(MetaValue::Str(s.clone())),
+            Json::Num(n) if n.fract() == 0.0 && n.abs() < 9e15 => {
+                Some(MetaValue::Int(*n as i64))
+            }
+            Json::Num(n) => Some(MetaValue::Float(*n)),
+            _ => None,
+        }
+    }
+}
+
+impl From<&str> for MetaValue {
+    fn from(s: &str) -> Self {
+        MetaValue::Str(s.to_string())
+    }
+}
+
+impl From<i64> for MetaValue {
+    fn from(i: i64) -> Self {
+        MetaValue::Int(i)
+    }
+}
+
+pub type MetaMap = BTreeMap<String, MetaValue>;
+
+/// How the EC shim names its metadata tags in the (global!) DFC namespace.
+///
+/// The paper's proof-of-concept used generic names (`TOTAL`, `SPLIT`,
+/// `VERSION`) and discovered they were "visible to all other users of the
+/// Imperial DIRAC's DFC, potentially causing confusion and misuse"; its §4
+/// fix is unique prefixes. Both are supported so the ablation bench can
+/// measure tag-collision rates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MetaKeyStyle {
+    /// The paper's original generic keys: `TOTAL`, `SPLIT`, `VERSION`.
+    V1Generic,
+    /// The §4 fix: `drs_ec_total`, `drs_ec_split`, `drs_ec_version`.
+    V2Prefixed,
+}
+
+impl MetaKeyStyle {
+    /// Key carrying "total number of chunks" (K+M).
+    pub fn total_key(&self) -> &'static str {
+        match self {
+            MetaKeyStyle::V1Generic => "TOTAL",
+            MetaKeyStyle::V2Prefixed => "drs_ec_total",
+        }
+    }
+
+    /// Key carrying "total number of non-coding chunks" (K).
+    pub fn split_key(&self) -> &'static str {
+        match self {
+            MetaKeyStyle::V1Generic => "SPLIT",
+            MetaKeyStyle::V2Prefixed => "drs_ec_split",
+        }
+    }
+
+    /// Key carrying the shim format version.
+    pub fn version_key(&self) -> &'static str {
+        match self {
+            MetaKeyStyle::V1Generic => "VERSION",
+            MetaKeyStyle::V2Prefixed => "drs_ec_version",
+        }
+    }
+
+    /// Key carrying the stripe width (DRS extension, always prefixed-style
+    /// spelling under V1 too since the paper never defined it).
+    pub fn stripe_key(&self) -> &'static str {
+        match self {
+            MetaKeyStyle::V1Generic => "STRIPE_B",
+            MetaKeyStyle::V2Prefixed => "drs_ec_stripe_b",
+        }
+    }
+
+    /// Whether `key` collides with a plausibly-generic user tag — the
+    /// failure mode the paper reports. Used by the ablation bench.
+    pub fn is_collision_prone(key: &str) -> bool {
+        key.chars().all(|c| c.is_ascii_uppercase() || c == '_')
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn value_json_roundtrip() {
+        for v in [
+            MetaValue::Str("x".into()),
+            MetaValue::Int(15),
+            MetaValue::Float(1.5),
+        ] {
+            assert_eq!(MetaValue::from_json(&v.to_json()).unwrap(), v);
+        }
+    }
+
+    #[test]
+    fn key_styles() {
+        assert_eq!(MetaKeyStyle::V1Generic.total_key(), "TOTAL");
+        assert_eq!(MetaKeyStyle::V2Prefixed.total_key(), "drs_ec_total");
+        assert!(MetaKeyStyle::is_collision_prone("TOTAL"));
+        assert!(!MetaKeyStyle::is_collision_prone("drs_ec_total"));
+    }
+
+    #[test]
+    fn conversions() {
+        assert_eq!(MetaValue::from("hi").as_str(), Some("hi"));
+        assert_eq!(MetaValue::from(15i64).as_int(), Some(15));
+    }
+}

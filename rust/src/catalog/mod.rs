@@ -1,0 +1,23 @@
+//! The DIRAC File Catalogue (DFC) substrate.
+//!
+//! The paper layers its shim on the DFC's API surface: a hierarchical
+//! namespace whose entries carry replicas (SE name + physical file name)
+//! and arbitrary key–value metadata. This module reproduces that surface:
+//!
+//! * [`Dfc`] — namespace tree with `mkdir -p`, file registration, listing,
+//!   removal; per-entry replica catalog; metadata with typed values and
+//!   `find*ByMetadata` queries.
+//! * Metadata **tag-namespace hygiene**: the paper's §4 notes its generic
+//!   `TOTAL`/`SPLIT` keys leaked into the Imperial DIRAC's *global* tag
+//!   namespace. [`MetaKeyStyle`] reproduces both behaviours: `V1Generic`
+//!   (the paper's original keys) and `V2Prefixed` (`drs_ec_*`, the fix).
+//! * JSON snapshot persistence (`save`/`load`) so examples/CLI runs keep
+//!   state across invocations.
+
+pub mod dfc;
+pub mod entry;
+pub mod meta;
+
+pub use dfc::Dfc;
+pub use entry::{DirEntry, FileEntry, Replica};
+pub use meta::{MetaKeyStyle, MetaValue};

@@ -1,0 +1,242 @@
+//! Hand-rolled argument parsing (clap is unavailable offline).
+
+pub const USAGE: &str = "\
+drs — erasure-coded DIRAC-style file management (CHEP2015 reproduction)
+
+USAGE:
+    drs [--workspace DIR] <COMMAND> [ARGS]
+
+COMMANDS:
+    init [--ses N] [--k K] [--m M] [--vo VO]   create a workspace
+    put <local-file> <lfn> [--workers W] [--k K] [--m M] [--retry]
+    get <lfn> <local-file> [--workers W] [--retry]
+    ls [path]
+    stat <lfn>
+    repair <lfn> [--workers W]
+    rm <lfn>
+    verify <lfn>
+    read <lfn> <offset> <len>
+    meta <lfn>
+    se list
+    se kill <name>
+    se revive <name>
+    durability [--p P]
+    info
+    help";
+
+/// Parsed command line.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Cli {
+    pub workspace: String,
+    pub command: Command,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Command {
+    Init { ses: usize, k: usize, m: usize, vo: String },
+    Put { local: String, lfn: String, workers: Option<usize>, k: Option<usize>, m: Option<usize>, retry: bool },
+    Get { lfn: String, local: String, workers: Option<usize>, retry: bool },
+    Ls { path: String },
+    Stat { lfn: String },
+    Repair { lfn: String, workers: Option<usize> },
+    Rm { lfn: String },
+    Verify { lfn: String },
+    Read { lfn: String, offset: u64, len: usize },
+    Meta { lfn: String },
+    SeList,
+    SeKill { name: String },
+    SeRevive { name: String },
+    Durability { p: f64 },
+    Info,
+    Help,
+}
+
+struct Args {
+    items: Vec<String>,
+    pos: usize,
+}
+
+impl Args {
+    fn next(&mut self) -> Option<String> {
+        let v = self.items.get(self.pos).cloned();
+        if v.is_some() {
+            self.pos += 1;
+        }
+        v
+    }
+
+    fn required(&mut self, what: &str) -> Result<String, String> {
+        self.next().ok_or_else(|| format!("missing argument: <{what}>"))
+    }
+
+    /// Extract `--flag value` anywhere in the remaining args.
+    fn opt_value(&mut self, flag: &str) -> Result<Option<String>, String> {
+        if let Some(i) = self.items[self.pos..].iter().position(|a| a == flag) {
+            let i = self.pos + i;
+            if i + 1 >= self.items.len() {
+                return Err(format!("{flag} needs a value"));
+            }
+            let v = self.items.remove(i + 1);
+            self.items.remove(i);
+            return Ok(Some(v));
+        }
+        Ok(None)
+    }
+
+    fn opt_parse<T: std::str::FromStr>(&mut self, flag: &str) -> Result<Option<T>, String> {
+        match self.opt_value(flag)? {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| format!("bad value for {flag}: `{v}`")),
+        }
+    }
+
+    /// Extract a boolean `--flag`.
+    fn opt_flag(&mut self, flag: &str) -> bool {
+        if let Some(i) = self.items[self.pos..].iter().position(|a| a == flag) {
+            self.items.remove(self.pos + i);
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// Parse argv (without the program name).
+pub fn parse_args(argv: Vec<String>) -> Result<Cli, String> {
+    let mut args = Args { items: argv, pos: 0 };
+    let workspace = args
+        .opt_value("--workspace")?
+        .unwrap_or_else(|| "drs-workspace".to_string());
+
+    let cmd = args.next().unwrap_or_else(|| "help".into());
+    let command = match cmd.as_str() {
+        "init" => Command::Init {
+            ses: args.opt_parse("--ses")?.unwrap_or(15),
+            k: args.opt_parse("--k")?.unwrap_or(10),
+            m: args.opt_parse("--m")?.unwrap_or(5),
+            vo: args.opt_value("--vo")?.unwrap_or_else(|| "demo".into()),
+        },
+        "put" => {
+            let workers = args.opt_parse("--workers")?;
+            let k = args.opt_parse("--k")?;
+            let m = args.opt_parse("--m")?;
+            let retry = args.opt_flag("--retry");
+            Command::Put {
+                local: args.required("local-file")?,
+                lfn: args.required("lfn")?,
+                workers,
+                k,
+                m,
+                retry,
+            }
+        }
+        "get" => {
+            let workers = args.opt_parse("--workers")?;
+            let retry = args.opt_flag("--retry");
+            Command::Get {
+                lfn: args.required("lfn")?,
+                local: args.required("local-file")?,
+                workers,
+                retry,
+            }
+        }
+        "ls" => Command::Ls { path: args.next().unwrap_or_else(|| "/".into()) },
+        "stat" => Command::Stat { lfn: args.required("lfn")? },
+        "repair" => {
+            let workers = args.opt_parse("--workers")?;
+            Command::Repair { lfn: args.required("lfn")?, workers }
+        }
+        "rm" => Command::Rm { lfn: args.required("lfn")? },
+        "verify" => Command::Verify { lfn: args.required("lfn")? },
+        "read" => Command::Read {
+            lfn: args.required("lfn")?,
+            offset: args
+                .required("offset")?
+                .parse()
+                .map_err(|_| "bad <offset>".to_string())?,
+            len: args
+                .required("len")?
+                .parse()
+                .map_err(|_| "bad <len>".to_string())?,
+        },
+        "meta" => Command::Meta { lfn: args.required("lfn")? },
+        "se" => match args.required("se-subcommand")?.as_str() {
+            "list" => Command::SeList,
+            "kill" => Command::SeKill { name: args.required("name")? },
+            "revive" => Command::SeRevive { name: args.required("name")? },
+            other => return Err(format!("unknown se subcommand `{other}`")),
+        },
+        "durability" => Command::Durability { p: args.opt_parse("--p")?.unwrap_or(0.9) },
+        "info" => Command::Info,
+        "help" | "--help" | "-h" => Command::Help,
+        other => return Err(format!("unknown command `{other}`")),
+    };
+    Ok(Cli { workspace, command })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(s: &str) -> Result<Cli, String> {
+        parse_args(s.split_whitespace().map(str::to_string).collect())
+    }
+
+    #[test]
+    fn put_with_flags() {
+        let cli = p("put f.dat /vo/f.dat --workers 5 --k 8 --m 2 --retry").unwrap();
+        assert_eq!(
+            cli.command,
+            Command::Put {
+                local: "f.dat".into(),
+                lfn: "/vo/f.dat".into(),
+                workers: Some(5),
+                k: Some(8),
+                m: Some(2),
+                retry: true
+            }
+        );
+    }
+
+    #[test]
+    fn workspace_flag_anywhere() {
+        let cli = p("--workspace /tmp/ws ls /vo").unwrap();
+        assert_eq!(cli.workspace, "/tmp/ws");
+        assert_eq!(cli.command, Command::Ls { path: "/vo".into() });
+    }
+
+    #[test]
+    fn defaults() {
+        assert_eq!(p("").unwrap().command, Command::Help);
+        assert_eq!(p("ls").unwrap().command, Command::Ls { path: "/".into() });
+        match p("init").unwrap().command {
+            Command::Init { ses: 15, k: 10, m: 5, .. } => {}
+            other => panic!("{other:?}"),
+        }
+        match p("durability").unwrap().command {
+            Command::Durability { p } => assert_eq!(p, 0.9),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn se_subcommands() {
+        assert_eq!(p("se list").unwrap().command, Command::SeList);
+        assert_eq!(
+            p("se kill SE-03").unwrap().command,
+            Command::SeKill { name: "SE-03".into() }
+        );
+        assert!(p("se explode").is_err());
+    }
+
+    #[test]
+    fn errors() {
+        assert!(p("put onlyone").is_err());
+        assert!(p("put a b --workers abc").is_err());
+        assert!(p("frobnicate").is_err());
+        assert!(p("get x y --workers").is_err());
+    }
+}

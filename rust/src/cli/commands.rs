@@ -1,0 +1,283 @@
+//! Command implementations.
+
+use std::path::Path;
+
+use crate::config::Config;
+use crate::dfm::{GetOptions, PutOptions};
+use crate::ec::EcParams;
+use crate::sim::durability;
+use crate::transfer::RetryPolicy;
+use crate::util::{fmt_bytes, fmt_secs};
+use crate::{Error, Result};
+
+use super::args::{Cli, Command, USAGE};
+use super::workspace::Workspace;
+
+/// Audit every chunk of `lfn` against its catalog checksum without
+/// reconstructing the file.
+fn verify_chunks(ws: &Workspace, lfn: &str) -> Result<(usize, usize)> {
+    let items = {
+        let dfc = ws.dfc.lock().unwrap();
+        dfc.list_dir(lfn)?
+    };
+    let (mut ok, mut bad) = (0usize, 0usize);
+    for item in items {
+        let crate::catalog::dfc::DirItem::File(name) = item else { continue };
+        let path = format!("{lfn}/{name}");
+        let (replicas, want) = {
+            let dfc = ws.dfc.lock().unwrap();
+            (dfc.replicas(&path)?.to_vec(), dfc.file(&path)?.checksum.clone())
+        };
+        let mut good = false;
+        for r in &replicas {
+            if let Some(se) = ws.registry.get(&r.se) {
+                if let Ok(bytes) = se.get(&r.pfn) {
+                    let got = crate::util::hexfmt::encode(&crate::ec::chunk::sha256(&bytes));
+                    if got == want {
+                        good = true;
+                        break;
+                    }
+                }
+            }
+        }
+        if good {
+            ok += 1;
+        } else {
+            bad += 1;
+            eprintln!("  corrupt/missing: {name}");
+        }
+    }
+    Ok((ok, bad))
+}
+
+pub fn dispatch(cli: &Cli) -> Result<()> {
+    let root = Path::new(&cli.workspace);
+    match &cli.command {
+        Command::Help => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        Command::Init { ses, k, m, vo } => {
+            let mut cfg = Config::default();
+            cfg.vo = vo.clone();
+            cfg.params = EcParams::new(*k, *m)?;
+            cfg.ses = (0..*ses)
+                .map(|i| crate::config::SeConfig {
+                    name: format!("SE-{i:02}"),
+                    region: ["uk", "fr", "de"][i % 3].into(),
+                })
+                .collect();
+            let ws = Workspace::init(root, cfg)?;
+            println!(
+                "initialized workspace at {} ({} SEs, EC {}, vo {}, backend {})",
+                root.display(),
+                ws.registry.len(),
+                ws.config.params,
+                ws.config.vo,
+                ws.backend_name()
+            );
+            ws.save()
+        }
+        Command::Put { local, lfn, workers, k, m, retry } => {
+            let ws = Workspace::open(root)?;
+            let data = std::fs::read(local)?;
+            let params = match (k, m) {
+                (Some(k), Some(m)) => EcParams::new(*k, *m)?,
+                (Some(k), None) => EcParams::new(*k, ws.config.params.m())?,
+                (None, Some(m)) => EcParams::new(ws.config.params.k(), *m)?,
+                (None, None) => ws.config.params,
+            };
+            let opts = PutOptions::default()
+                .with_params(params)
+                .with_stripe(ws.config.stripe_b)
+                .with_workers(workers.unwrap_or(ws.config.workers))
+                .with_retry(if *retry {
+                    RetryPolicy::default_robust()
+                } else {
+                    RetryPolicy::none()
+                });
+            let t0 = std::time::Instant::now();
+            let placed = ws.shim().put_bytes(lfn, &data, &opts)?;
+            let dt = t0.elapsed().as_secs_f64();
+            println!(
+                "put {} ({}) as {} chunks ({params}) in {} [{:.1} MB/s] via {}",
+                lfn,
+                fmt_bytes(data.len() as u64),
+                placed.len(),
+                fmt_secs(dt),
+                data.len() as f64 / dt.max(1e-9) / 1e6,
+                ws.backend_name(),
+            );
+            for (i, se) in placed.iter().enumerate() {
+                println!("  chunk {i:02} -> {se}");
+            }
+            ws.save()
+        }
+        Command::Get { lfn, local, workers, retry } => {
+            let ws = Workspace::open(root)?;
+            let opts = GetOptions::default()
+                .with_workers(workers.unwrap_or(ws.config.workers))
+                .with_retry(if *retry {
+                    RetryPolicy::default_robust()
+                } else {
+                    RetryPolicy::none()
+                });
+            let t0 = std::time::Instant::now();
+            let data = ws.shim().get_bytes(lfn, &opts)?;
+            let dt = t0.elapsed().as_secs_f64();
+            std::fs::write(local, &data)?;
+            println!(
+                "got {} ({}) in {} [{:.1} MB/s], SHA-verified",
+                lfn,
+                fmt_bytes(data.len() as u64),
+                fmt_secs(dt),
+                data.len() as f64 / dt.max(1e-9) / 1e6
+            );
+            Ok(())
+        }
+        Command::Ls { path } => {
+            let ws = Workspace::open(root)?;
+            let dfc = ws.dfc.lock().unwrap();
+            for item in dfc.list_dir(path)? {
+                match item {
+                    crate::catalog::dfc::DirItem::Dir(n) => println!("d {n}"),
+                    crate::catalog::dfc::DirItem::File(n) => println!("f {n}"),
+                }
+            }
+            Ok(())
+        }
+        Command::Stat { lfn } => {
+            let ws = Workspace::open(root)?;
+            let stat = ws.shim().stat(lfn)?;
+            println!(
+                "{}: EC {} stripe {} — {}/{} chunks available ({})",
+                stat.lfn,
+                stat.params,
+                stat.stripe_b,
+                stat.available_chunks,
+                stat.chunks.len(),
+                if stat.readable() { "READABLE" } else { "LOST" }
+            );
+            for c in &stat.chunks {
+                println!(
+                    "  [{}] chunk {:02} on {} {}",
+                    if c.available { "ok" } else { "XX" },
+                    c.index,
+                    c.se,
+                    if c.available { "" } else { "(unavailable)" }
+                );
+            }
+            Ok(())
+        }
+        Command::Repair { lfn, workers } => {
+            let ws = Workspace::open(root)?;
+            let opts = GetOptions::default().with_workers(workers.unwrap_or(ws.config.workers));
+            let n = ws.shim().repair(lfn, &opts)?;
+            println!("repaired {n} chunk(s) of {lfn}");
+            ws.save()
+        }
+        Command::Rm { lfn } => {
+            let ws = Workspace::open(root)?;
+            ws.shim().rm(lfn)?;
+            println!("removed {lfn}");
+            ws.save()
+        }
+        Command::Verify { lfn } => {
+            let ws = Workspace::open(root)?;
+            let (ok, bad) = verify_chunks(&ws, lfn)?;
+            println!("{lfn}: {ok} chunks OK, {bad} corrupt/missing");
+            if bad > 0 {
+                return Err(Error::Integrity {
+                    path: lfn.clone(),
+                    detail: format!("{bad} chunks failed checksum audit"),
+                });
+            }
+            Ok(())
+        }
+        Command::Read { lfn, offset, len } => {
+            let ws = Workspace::open(root)?;
+            let mut reader = ws.shim().open_reader(lfn)?;
+            let bytes = reader.read(*offset, *len)?;
+            let stats = reader.stats();
+            eprintln!(
+                "read {} bytes via {} ranged GETs ({} fetched, {} segments decoded)",
+                bytes.len(),
+                stats.range_gets,
+                fmt_bytes(stats.bytes_fetched),
+                stats.segments_decoded
+            );
+            use std::io::Write;
+            std::io::stdout().write_all(&bytes)?;
+            Ok(())
+        }
+        Command::Meta { lfn } => {
+            let ws = Workspace::open(root)?;
+            let dfc = ws.dfc.lock().unwrap();
+            for (k, v) in dfc.meta(lfn)? {
+                println!("{k} = {}", v.to_json());
+            }
+            Ok(())
+        }
+        Command::SeList => {
+            let ws = Workspace::open(root)?;
+            println!("{} SEs, availability {:.0}%", ws.registry.len(), ws.registry.availability() * 100.0);
+            for se in ws.registry.all() {
+                println!(
+                    "  {} [{}] {} {}",
+                    se.name(),
+                    se.region(),
+                    fmt_bytes(se.used_bytes()),
+                    if se.is_available() { "up" } else { "DOWN" }
+                );
+            }
+            Ok(())
+        }
+        Command::SeKill { name } => {
+            let ws = Workspace::open(root)?;
+            let se = ws
+                .registry
+                .get(name)
+                .ok_or_else(|| Error::Config(format!("no SE named `{name}`")))?;
+            se.set_available(false);
+            println!("{name} marked unavailable");
+            ws.save()
+        }
+        Command::SeRevive { name } => {
+            let ws = Workspace::open(root)?;
+            let se = ws
+                .registry
+                .get(name)
+                .ok_or_else(|| Error::Config(format!("no SE named `{name}`")))?;
+            se.set_available(true);
+            println!("{name} back online");
+            ws.save()
+        }
+        Command::Durability { p } => {
+            println!("file availability at SE availability p = {p}");
+            println!("{:<18} {:>9} {:>14} {:>7}", "scheme", "overhead", "availability", "nines");
+            for row in durability::comparison_table(*p) {
+                println!(
+                    "{:<18} {:>8.2}x {:>14.8} {:>7.2}",
+                    row.scheme, row.overhead, row.availability, row.nines
+                );
+            }
+            Ok(())
+        }
+        Command::Info => {
+            println!("drs {} — three-layer rust+jax+pallas EC storage", env!("CARGO_PKG_VERSION"));
+            let dir = crate::runtime::default_artifact_dir();
+            println!("artifact dir: {}", dir.display());
+            match crate::runtime::PjrtEngine::new(&dir) {
+                Ok(engine) => {
+                    let keys = engine.keys();
+                    println!("PJRT CPU client OK; {} artifacts:", keys.len());
+                    for k in keys {
+                        println!("  {k:?}");
+                    }
+                }
+                Err(e) => println!("PJRT unavailable ({e}); pure-rust fallback active"),
+            }
+            Ok(())
+        }
+    }
+}

@@ -1,0 +1,46 @@
+//! The `drs` command-line interface.
+//!
+//! A workspace directory (default `./drs-workspace`, or `--workspace DIR`)
+//! holds the catalog snapshot (`catalog.json`), the config (`drs.json`)
+//! and one subdirectory per (directory-backed) SE. Commands mirror the
+//! paper's tool plus the further-work features:
+//!
+//! ```text
+//! drs init [--ses N]                create a workspace
+//! drs put <local-file> <lfn>        erasure-coded upload
+//! drs get <lfn> <local-file>        reconstruct + download
+//! drs ls <path>                     list catalog namespace
+//! drs stat <lfn>                    chunk health report
+//! drs repair <lfn>                  re-derive lost chunks
+//! drs rm <lfn>                      delete file + chunks
+//! drs se list|kill|revive           SE management / failure injection
+//! drs durability [--p 0.9]          the §1.1 comparison table
+//! drs meta <lfn>                    show catalog metadata
+//! drs info                          artifact + backend report
+//! ```
+
+pub mod args;
+pub mod commands;
+pub mod workspace;
+
+pub use args::{parse_args, Cli, Command};
+pub use workspace::Workspace;
+
+/// CLI entrypoint; returns the process exit code.
+pub fn run(argv: Vec<String>) -> i32 {
+    let cli = match parse_args(argv) {
+        Ok(cli) => cli,
+        Err(msg) => {
+            eprintln!("error: {msg}\n");
+            eprintln!("{}", args::USAGE);
+            return 2;
+        }
+    };
+    match commands::dispatch(&cli) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}

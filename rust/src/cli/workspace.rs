@@ -1,0 +1,201 @@
+//! Workspace: the on-disk state the CLI operates on.
+//!
+//! Layout:
+//! ```text
+//! <workspace>/
+//!   drs.json        config (see config module)
+//!   catalog.json    DFC snapshot, saved after every mutating command
+//!   ses/<NAME>/     one directory per (local) storage element
+//!   down_ses.json   names of SEs currently marked unavailable
+//! ```
+
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use crate::catalog::Dfc;
+use crate::config::Config;
+use crate::dfm::{EcShim, ReplicationManager};
+use crate::ec::{EcBackend, PureRustBackend};
+use crate::runtime::PjrtBackend;
+use crate::se::{LocalSe, SeRegistry, StorageElement};
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+pub struct Workspace {
+    pub root: PathBuf,
+    pub config: Config,
+    pub dfc: Arc<Mutex<Dfc>>,
+    pub registry: Arc<SeRegistry>,
+    backend_name: &'static str,
+    backend: Arc<dyn EcBackend>,
+}
+
+impl Workspace {
+    /// Create a fresh workspace (fails if a config already exists).
+    pub fn init(root: &Path, config: Config) -> Result<Self> {
+        if root.join("drs.json").exists() {
+            return Err(Error::Config(format!(
+                "workspace already initialized at {}",
+                root.display()
+            )));
+        }
+        std::fs::create_dir_all(root.join("ses"))?;
+        config.save(&root.join("drs.json"))?;
+        Dfc::new().save(&root.join("catalog.json"))?;
+        std::fs::write(root.join("down_ses.json"), "[]")?;
+        Self::open(root)
+    }
+
+    /// Open an existing workspace.
+    pub fn open(root: &Path) -> Result<Self> {
+        let config = Config::load(&root.join("drs.json"))?;
+        let dfc = if root.join("catalog.json").exists() {
+            Dfc::load(&root.join("catalog.json"))?
+        } else {
+            Dfc::new()
+        };
+        let down: Vec<String> = std::fs::read_to_string(root.join("down_ses.json"))
+            .ok()
+            .and_then(|t| Json::parse(&t).ok())
+            .and_then(|j| {
+                j.as_arr().map(|a| {
+                    a.iter().filter_map(|v| v.as_str().map(str::to_string)).collect()
+                })
+            })
+            .unwrap_or_default();
+
+        let mut registry = SeRegistry::new();
+        for se_cfg in &config.ses {
+            let se = LocalSe::new(
+                &se_cfg.name,
+                &se_cfg.region,
+                root.join("ses").join(&se_cfg.name),
+            )?;
+            if down.contains(&se_cfg.name) {
+                se.set_available(false);
+            }
+            registry.register(Arc::new(se), &[config.vo.as_str()])?;
+        }
+
+        // Prefer the AOT/PJRT backend when artifacts exist.
+        let (backend, backend_name): (Arc<dyn EcBackend>, &'static str) =
+            match PjrtBackend::from_default_dir() {
+                Ok(b) => (Arc::new(b), "pjrt-aot"),
+                Err(_) => (Arc::new(PureRustBackend), "pure-rust"),
+            };
+
+        Ok(Workspace {
+            root: root.to_path_buf(),
+            config,
+            dfc: Arc::new(Mutex::new(dfc)),
+            registry: Arc::new(registry),
+            backend_name,
+            backend,
+        })
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend_name
+    }
+
+    pub fn shim(&self) -> EcShim {
+        let policy = self
+            .config
+            .policy
+            .build(&self.config.client_region, self.config.params.n());
+        EcShim::new(
+            Arc::clone(&self.dfc),
+            Arc::clone(&self.registry),
+            policy,
+            Arc::clone(&self.backend),
+            self.config.vo.clone(),
+        )
+    }
+
+    pub fn replication(&self) -> ReplicationManager {
+        let policy = self
+            .config
+            .policy
+            .build(&self.config.client_region, self.config.params.n());
+        ReplicationManager::new(
+            Arc::clone(&self.dfc),
+            Arc::clone(&self.registry),
+            policy,
+            self.config.vo.clone(),
+        )
+    }
+
+    /// Persist the catalog and SE availability after a mutating command.
+    pub fn save(&self) -> Result<()> {
+        self.dfc.lock().unwrap().save(&self.root.join("catalog.json"))?;
+        let down: Vec<Json> = self
+            .registry
+            .all()
+            .iter()
+            .filter(|se| !se.is_available())
+            .map(|se| Json::str(se.name()))
+            .collect();
+        std::fs::write(self.root.join("down_ses.json"), Json::Arr(down).to_string())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!(
+            "drs-ws-{tag}-{}-{}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ))
+    }
+
+    #[test]
+    fn init_open_cycle() {
+        let root = tmp("cycle");
+        let mut cfg = Config::default();
+        cfg.ses.truncate(4);
+        let ws = Workspace::init(&root, cfg).unwrap();
+        assert_eq!(ws.registry.len(), 4);
+        // double init rejected
+        assert!(Workspace::init(&root, Config::default()).is_err());
+        drop(ws);
+        let ws2 = Workspace::open(&root).unwrap();
+        assert_eq!(ws2.config.ses.len(), 4);
+        std::fs::remove_dir_all(root).unwrap();
+    }
+
+    #[test]
+    fn state_persists_across_open() {
+        let root = tmp("persist");
+        let mut cfg = Config::default();
+        cfg.ses.truncate(6);
+        cfg.params = crate::ec::EcParams::new(4, 2).unwrap();
+        cfg.stripe_b = 1024;
+        let ws = Workspace::init(&root, cfg).unwrap();
+        let shim = ws.shim();
+        let data = vec![0xA5u8; 20_000];
+        let opts = crate::dfm::PutOptions::default()
+            .with_params(ws.config.params)
+            .with_stripe(ws.config.stripe_b);
+        shim.put_bytes("/vo/persist.bin", &data, &opts).unwrap();
+        ws.registry.get("SE-02").unwrap().set_available(false);
+        ws.save().unwrap();
+        drop(shim);
+        drop(ws);
+
+        let ws2 = Workspace::open(&root).unwrap();
+        assert!(!ws2.registry.get("SE-02").unwrap().is_available());
+        let back = ws2
+            .shim()
+            .get_bytes("/vo/persist.bin", &crate::dfm::GetOptions::default())
+            .unwrap();
+        assert_eq!(back, data);
+        std::fs::remove_dir_all(root).unwrap();
+    }
+}

@@ -1,0 +1,350 @@
+//! Configuration: JSON file + environment overrides.
+//!
+//! A workspace config (`drs.json`) describes the cluster the CLI operates
+//! on: SEs (name, region), the VO, coding geometry, placement policy and
+//! network profile. Environment variables (`DRS_*`) override scalar
+//! fields; the serde/toml crates are unavailable offline so the format is
+//! the crate's own JSON (see `util::json`).
+//!
+//! ```json
+//! {
+//!   "vo": "na62",
+//!   "ec": {"k": 10, "m": 5, "stripe_b": 65536},
+//!   "placement": "round-robin",
+//!   "workers": 5,
+//!   "ses": [
+//!     {"name": "UKI-GLASGOW", "region": "uk"},
+//!     {"name": "UKI-IC", "region": "uk"}
+//!   ],
+//!   "network": {"setup_s": 5.5, "bandwidth_bps": 17300000.0}
+//! }
+//! ```
+
+use std::path::Path;
+
+use crate::ec::EcParams;
+use crate::se::NetworkProfile;
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+/// One SE declaration.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SeConfig {
+    pub name: String,
+    pub region: String,
+}
+
+/// Placement policy selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum PolicyKind {
+    #[default]
+    RoundRobin,
+    Random,
+    Weighted,
+    RegionAware,
+}
+
+impl PolicyKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "round-robin" => Ok(PolicyKind::RoundRobin),
+            "random" => Ok(PolicyKind::Random),
+            "weighted" => Ok(PolicyKind::Weighted),
+            "region-aware" => Ok(PolicyKind::RegionAware),
+            other => Err(Error::Config(format!("unknown placement policy `{other}`"))),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            PolicyKind::RoundRobin => "round-robin",
+            PolicyKind::Random => "random",
+            PolicyKind::Weighted => "weighted",
+            PolicyKind::RegionAware => "region-aware",
+        }
+    }
+
+    /// Instantiate the policy (region-aware needs the client region).
+    pub fn build(&self, client_region: &str, k_plus_m: usize) -> std::sync::Arc<dyn crate::placement::PlacementPolicy> {
+        use crate::placement::*;
+        match self {
+            PolicyKind::RoundRobin => std::sync::Arc::new(RoundRobin),
+            PolicyKind::Random => std::sync::Arc::new(Random::new(0xD15C)),
+            PolicyKind::Weighted => std::sync::Arc::new(Weighted),
+            PolicyKind::RegionAware => std::sync::Arc::new(RegionAware {
+                client_region: client_region.to_string(),
+                min_ses: k_plus_m,
+            }),
+        }
+    }
+}
+
+/// Full workspace configuration.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub vo: String,
+    pub params: EcParams,
+    pub stripe_b: usize,
+    pub policy: PolicyKind,
+    pub client_region: String,
+    pub workers: usize,
+    pub ses: Vec<SeConfig>,
+    pub network: Option<NetworkProfile>,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            vo: "demo".into(),
+            params: EcParams::paper_default(),
+            stripe_b: crate::ec::DEFAULT_STRIPE_B,
+            policy: PolicyKind::RoundRobin,
+            client_region: "uk".into(),
+            workers: 1,
+            ses: (0..15)
+                .map(|i| SeConfig {
+                    name: format!("SE-{i:02}"),
+                    region: ["uk", "fr", "de"][i % 3].into(),
+                })
+                .collect(),
+            network: None,
+        }
+    }
+}
+
+impl Config {
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut cfg = Config::default();
+        if let Some(vo) = j.get("vo").and_then(Json::as_str) {
+            cfg.vo = vo.to_string();
+        }
+        if let Some(ec) = j.get("ec") {
+            let k = ec.get("k").and_then(Json::as_u64).unwrap_or(10) as usize;
+            let m = ec.get("m").and_then(Json::as_u64).unwrap_or(5) as usize;
+            cfg.params = EcParams::new(k, m)?;
+            if let Some(sb) = ec.get("stripe_b").and_then(Json::as_u64) {
+                cfg.stripe_b = sb as usize;
+            }
+        }
+        if let Some(p) = j.get("placement").and_then(Json::as_str) {
+            cfg.policy = PolicyKind::parse(p)?;
+        }
+        if let Some(r) = j.get("client_region").and_then(Json::as_str) {
+            cfg.client_region = r.to_string();
+        }
+        if let Some(w) = j.get("workers").and_then(Json::as_u64) {
+            cfg.workers = (w as usize).max(1);
+        }
+        if let Some(ses) = j.get("ses").and_then(Json::as_arr) {
+            cfg.ses = ses
+                .iter()
+                .map(|s| {
+                    Ok(SeConfig {
+                        name: s
+                            .get("name")
+                            .and_then(Json::as_str)
+                            .ok_or_else(|| Error::Config("se missing name".into()))?
+                            .to_string(),
+                        region: s
+                            .get("region")
+                            .and_then(Json::as_str)
+                            .unwrap_or("unknown")
+                            .to_string(),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+        }
+        if let Some(n) = j.get("network") {
+            let mut p = NetworkProfile::paper_testbed();
+            if let Some(v) = n.get("setup_s").and_then(Json::as_f64) {
+                p.setup_s = v;
+            }
+            if let Some(v) = n.get("bandwidth_bps").and_then(Json::as_f64) {
+                p.bandwidth_bps = v;
+            }
+            if let Some(v) = n.get("congestion_alpha").and_then(Json::as_f64) {
+                p.congestion_alpha = v;
+            }
+            if let Some(v) = n.get("jitter_frac").and_then(Json::as_f64) {
+                p.jitter_frac = v;
+            }
+            cfg.network = Some(p);
+        }
+        Ok(cfg)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("vo", Json::str(self.vo.clone())),
+            (
+                "ec",
+                Json::obj(vec![
+                    ("k", Json::num(self.params.k() as f64)),
+                    ("m", Json::num(self.params.m() as f64)),
+                    ("stripe_b", Json::num(self.stripe_b as f64)),
+                ]),
+            ),
+            ("placement", Json::str(self.policy.as_str())),
+            ("client_region", Json::str(self.client_region.clone())),
+            ("workers", Json::num(self.workers as f64)),
+            (
+                "ses",
+                Json::Arr(
+                    self.ses
+                        .iter()
+                        .map(|s| {
+                            Json::obj(vec![
+                                ("name", Json::str(s.name.clone())),
+                                ("region", Json::str(s.region.clone())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ];
+        if let Some(n) = &self.network {
+            pairs.push((
+                "network",
+                Json::obj(vec![
+                    ("setup_s", Json::Num(n.setup_s)),
+                    ("bandwidth_bps", Json::Num(n.bandwidth_bps)),
+                    ("congestion_alpha", Json::Num(n.congestion_alpha)),
+                    ("jitter_frac", Json::Num(n.jitter_frac)),
+                ]),
+            ));
+        }
+        Json::obj(pairs)
+    }
+
+    /// Load from a file, then apply `DRS_*` environment overrides.
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text).map_err(|e| Error::Config(format!("{e}")))?;
+        let mut cfg = Self::from_json(&j)?;
+        cfg.apply_env();
+        Ok(cfg)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    /// Apply environment overrides: `DRS_VO`, `DRS_WORKERS`, `DRS_K`,
+    /// `DRS_M`, `DRS_STRIPE_B`, `DRS_PLACEMENT`.
+    pub fn apply_env(&mut self) {
+        if let Ok(vo) = std::env::var("DRS_VO") {
+            self.vo = vo;
+        }
+        if let Ok(w) = std::env::var("DRS_WORKERS") {
+            if let Ok(w) = w.parse::<usize>() {
+                self.workers = w.max(1);
+            }
+        }
+        let k = std::env::var("DRS_K").ok().and_then(|v| v.parse().ok());
+        let m = std::env::var("DRS_M").ok().and_then(|v| v.parse().ok());
+        if k.is_some() || m.is_some() {
+            if let Ok(p) =
+                EcParams::new(k.unwrap_or(self.params.k()), m.unwrap_or(self.params.m()))
+            {
+                self.params = p;
+            }
+        }
+        if let Ok(sb) = std::env::var("DRS_STRIPE_B") {
+            if let Ok(sb) = sb.parse::<usize>() {
+                self.stripe_b = sb.max(1);
+            }
+        }
+        if let Ok(p) = std::env::var("DRS_PLACEMENT") {
+            if let Ok(p) = PolicyKind::parse(&p) {
+                self.policy = p;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_paper_geometry() {
+        let c = Config::default();
+        assert_eq!(c.params, EcParams::new(10, 5).unwrap());
+        assert_eq!(c.ses.len(), 15);
+        assert_eq!(c.policy, PolicyKind::RoundRobin);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut c = Config::default();
+        c.vo = "na62".into();
+        c.network = Some(NetworkProfile::paper_testbed());
+        c.policy = PolicyKind::RegionAware;
+        let j = c.to_json();
+        let back = Config::from_json(&j).unwrap();
+        assert_eq!(back.vo, "na62");
+        assert_eq!(back.policy, PolicyKind::RegionAware);
+        assert_eq!(back.ses, c.ses);
+        assert!((back.network.unwrap().setup_s - 5.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parse_example_doc() {
+        let j = Json::parse(
+            r#"{"vo":"na62","ec":{"k":8,"m":2,"stripe_b":16384},
+                "placement":"weighted","workers":4,
+                "ses":[{"name":"A","region":"uk"},{"name":"B"}]}"#,
+        )
+        .unwrap();
+        let c = Config::from_json(&j).unwrap();
+        assert_eq!(c.params, EcParams::new(8, 2).unwrap());
+        assert_eq!(c.stripe_b, 16384);
+        assert_eq!(c.workers, 4);
+        assert_eq!(c.ses[1].region, "unknown");
+    }
+
+    #[test]
+    fn bad_policy_rejected() {
+        assert!(PolicyKind::parse("chaos").is_err());
+        for p in ["round-robin", "random", "weighted", "region-aware"] {
+            assert_eq!(PolicyKind::parse(p).unwrap().as_str(), p);
+        }
+    }
+
+    #[test]
+    fn policy_builds() {
+        use crate::se::SeInfo;
+        let infos: Vec<SeInfo> = (0..4)
+            .map(|i| SeInfo {
+                name: format!("S{i}"),
+                region: "uk".into(),
+                available: true,
+                used_bytes: 0,
+            })
+            .collect();
+        for kind in [
+            PolicyKind::RoundRobin,
+            PolicyKind::Random,
+            PolicyKind::Weighted,
+            PolicyKind::RegionAware,
+        ] {
+            let p = kind.build("uk", 4);
+            assert_eq!(p.place(6, &infos).unwrap().len(), 6);
+        }
+    }
+
+    #[test]
+    fn env_overrides() {
+        let mut c = Config::default();
+        std::env::set_var("DRS_WORKERS", "7");
+        std::env::set_var("DRS_K", "6");
+        std::env::set_var("DRS_M", "3");
+        c.apply_env();
+        std::env::remove_var("DRS_WORKERS");
+        std::env::remove_var("DRS_K");
+        std::env::remove_var("DRS_M");
+        assert_eq!(c.workers, 7);
+        assert_eq!(c.params, EcParams::new(6, 3).unwrap());
+    }
+}

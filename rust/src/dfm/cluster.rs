@@ -1,0 +1,419 @@
+//! `TestCluster`: one-call wiring of DFC + SEs + shim, used by the
+//! examples, tests and benches.
+
+use std::sync::{Arc, Mutex};
+
+use crate::catalog::Dfc;
+use crate::ec::{EcBackend, EcParams, PureRustBackend};
+use crate::placement::{PlacementPolicy, RoundRobin};
+use crate::se::{LocalSe, MemSe, NetworkProfile, SeRegistry, StorageElement};
+use crate::Result;
+
+use super::replication::ReplicationManager;
+use super::shim::EcShim;
+
+/// Builder for a self-contained cluster.
+pub struct TestClusterBuilder {
+    n_ses: usize,
+    regions: Vec<String>,
+    vo: String,
+    params: EcParams,
+    policy: Arc<dyn PlacementPolicy>,
+    backend: Arc<dyn EcBackend>,
+    local_base: Option<std::path::PathBuf>,
+    profile: Option<NetworkProfile>,
+    profile_scale: f64,
+}
+
+impl TestClusterBuilder {
+    pub fn ses(mut self, n: usize) -> Self {
+        self.n_ses = n;
+        self
+    }
+
+    pub fn regions(mut self, regions: &[&str]) -> Self {
+        self.regions = regions.iter().map(|s| s.to_string()).collect();
+        self
+    }
+
+    pub fn vo(mut self, vo: &str) -> Self {
+        self.vo = vo.to_string();
+        self
+    }
+
+    pub fn ec(mut self, params: EcParams) -> Self {
+        self.params = params;
+        self
+    }
+
+    pub fn policy(mut self, policy: Arc<dyn PlacementPolicy>) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    pub fn backend(mut self, backend: Arc<dyn EcBackend>) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Use directory-backed SEs rooted under `base` instead of in-memory.
+    pub fn local_dirs(mut self, base: impl Into<std::path::PathBuf>) -> Self {
+        self.local_base = Some(base.into());
+        self
+    }
+
+    /// Attach a (scaled, really-slept) network profile to each SE.
+    pub fn network(mut self, profile: NetworkProfile, scale: f64) -> Self {
+        self.profile = Some(profile);
+        self.profile_scale = scale;
+        self
+    }
+
+    pub fn build(self) -> Result<TestCluster> {
+        let mut registry = SeRegistry::new();
+        for i in 0..self.n_ses {
+            let region = self.regions[i % self.regions.len()].clone();
+            let name = format!("SE-{i:02}");
+            let se: Arc<dyn StorageElement> = match &self.local_base {
+                Some(base) => {
+                    let mut se = LocalSe::new(&name, &region, base.join(&name))?;
+                    if let Some(p) = &self.profile {
+                        se = se.with_profile(p.clone(), self.profile_scale);
+                    }
+                    Arc::new(se)
+                }
+                None => {
+                    let mut se = MemSe::new(&name, &region);
+                    if let Some(p) = &self.profile {
+                        se = se.with_profile(p.clone());
+                    }
+                    Arc::new(se)
+                }
+            };
+            registry.register(se, &[self.vo.as_str()])?;
+        }
+        let registry = Arc::new(registry);
+        let dfc = Arc::new(Mutex::new(Dfc::new()));
+        let shim = EcShim::new(
+            Arc::clone(&dfc),
+            Arc::clone(&registry),
+            Arc::clone(&self.policy),
+            Arc::clone(&self.backend),
+            self.vo.clone(),
+        );
+        let repl = ReplicationManager::new(
+            Arc::clone(&dfc),
+            Arc::clone(&registry),
+            Arc::clone(&self.policy),
+            self.vo.clone(),
+        );
+        Ok(TestCluster { dfc, registry, shim, repl, params: self.params })
+    }
+}
+
+/// A wired-up cluster: catalog, SEs, shim, replication baseline.
+pub struct TestCluster {
+    dfc: Arc<Mutex<Dfc>>,
+    registry: Arc<SeRegistry>,
+    shim: EcShim,
+    repl: ReplicationManager,
+    params: EcParams,
+}
+
+impl TestCluster {
+    pub fn builder() -> TestClusterBuilder {
+        TestClusterBuilder {
+            n_ses: 5,
+            regions: vec!["uk".into(), "fr".into(), "de".into()],
+            vo: "demo".into(),
+            params: EcParams::new(4, 2).expect("4+2 is valid"),
+            policy: Arc::new(RoundRobin),
+            backend: Arc::new(PureRustBackend),
+            local_base: None,
+            profile: None,
+            profile_scale: 0.0,
+        }
+    }
+
+    pub fn shim(&self) -> &EcShim {
+        &self.shim
+    }
+
+    pub fn replication(&self) -> &ReplicationManager {
+        &self.repl
+    }
+
+    pub fn registry(&self) -> &SeRegistry {
+        &self.registry
+    }
+
+    pub fn dfc(&self) -> Arc<Mutex<Dfc>> {
+        Arc::clone(&self.dfc)
+    }
+
+    pub fn params(&self) -> EcParams {
+        self.params
+    }
+
+    /// Take one SE offline (failure injection).
+    pub fn kill_se(&self, name: &str) -> bool {
+        match self.registry.get(name) {
+            Some(se) => {
+                se.set_available(false);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Bring an SE back.
+    pub fn revive_se(&self, name: &str) -> bool {
+        match self.registry.get(name) {
+            Some(se) => {
+                se.set_available(true);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Total bytes stored across all SEs (storage-overhead reporting).
+    pub fn total_stored_bytes(&self) -> u64 {
+        self.registry.all().iter().map(|se| se.used_bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfm::{GetOptions, PutOptions};
+
+    fn small_put_opts(cluster: &TestCluster) -> PutOptions {
+        PutOptions::default()
+            .with_params(cluster.params())
+            .with_stripe(1024)
+    }
+
+    #[test]
+    fn put_get_roundtrip_memory() {
+        let cluster = TestCluster::builder().ses(5).build().unwrap();
+        let data: Vec<u8> = (0..50_000u32).map(|i| (i % 251) as u8).collect();
+        let opts = small_put_opts(&cluster);
+        let placed = cluster
+            .shim()
+            .put_bytes("/vo/user/file.dat", &data, &opts)
+            .unwrap();
+        assert_eq!(placed.len(), 6);
+        // Round-robin over 5 SEs: chunk 5 wraps to SE-00.
+        assert_eq!(placed[0], "SE-00");
+        assert_eq!(placed[5], "SE-00");
+        let back = cluster
+            .shim()
+            .get_bytes("/vo/user/file.dat", &GetOptions::default())
+            .unwrap();
+        assert_eq!(back, data);
+    }
+
+    #[test]
+    fn parallel_get_roundtrip() {
+        let cluster = TestCluster::builder().ses(4).build().unwrap();
+        let data = vec![0x5Au8; 30_000];
+        let opts = small_put_opts(&cluster).with_workers(4);
+        cluster.shim().put_bytes("/vo/p.bin", &data, &opts).unwrap();
+        let back = cluster
+            .shim()
+            .get_bytes("/vo/p.bin", &GetOptions::default().with_workers(6))
+            .unwrap();
+        assert_eq!(back, data);
+    }
+
+    #[test]
+    fn degraded_read_survives_m_failures() {
+        let cluster = TestCluster::builder().ses(6).build().unwrap();
+        let data: Vec<u8> = (0..123_456u32).map(|i| (i * 7) as u8).collect();
+        let opts = small_put_opts(&cluster);
+        cluster.shim().put_bytes("/vo/d.bin", &data, &opts).unwrap();
+        // 4+2 over 6 SEs: one chunk per SE; kill any two.
+        cluster.kill_se("SE-01");
+        cluster.kill_se("SE-04");
+        let back = cluster
+            .shim()
+            .get_bytes("/vo/d.bin", &GetOptions::default().with_workers(3))
+            .unwrap();
+        assert_eq!(back, data);
+        // A third failure makes it unreadable.
+        cluster.kill_se("SE-02");
+        assert!(matches!(
+            cluster.shim().get_bytes("/vo/d.bin", &GetOptions::default()),
+            Err(crate::Error::NotEnoughChunks { .. })
+        ));
+    }
+
+    #[test]
+    fn put_fails_whole_on_se_down_per_paper() {
+        let cluster = TestCluster::builder().ses(5).build().unwrap();
+        cluster.kill_se("SE-03");
+        let opts = small_put_opts(&cluster); // RetryPolicy::none()
+        let err = cluster
+            .shim()
+            .put_bytes("/vo/x.bin", &[1, 2, 3], &opts)
+            .unwrap_err();
+        assert!(matches!(err, crate::Error::Transfer(_)));
+        // Catalog must be clean after the abort.
+        assert!(!cluster.dfc().lock().unwrap().exists("/vo/x.bin"));
+        // No stray objects left behind.
+        assert_eq!(cluster.total_stored_bytes(), 0);
+    }
+
+    #[test]
+    fn put_with_fallback_survives_se_down() {
+        let cluster = TestCluster::builder().ses(5).build().unwrap();
+        cluster.kill_se("SE-03");
+        let opts = small_put_opts(&cluster)
+            .with_retry(crate::transfer::RetryPolicy::default_robust());
+        let placed = cluster
+            .shim()
+            .put_bytes("/vo/y.bin", &[9u8; 10_000], &opts)
+            .unwrap();
+        assert!(!placed.iter().any(|s| s == "SE-03"));
+        let back = cluster
+            .shim()
+            .get_bytes("/vo/y.bin", &GetOptions::default())
+            .unwrap();
+        assert_eq!(back, vec![9u8; 10_000]);
+    }
+
+    #[test]
+    fn stat_and_repair_cycle() {
+        let cluster = TestCluster::builder().ses(6).build().unwrap();
+        let data = vec![7u8; 65_000];
+        let opts = small_put_opts(&cluster);
+        cluster.shim().put_bytes("/vo/r.bin", &data, &opts).unwrap();
+
+        let healthy = cluster.shim().stat("/vo/r.bin").unwrap();
+        assert_eq!(healthy.available_chunks, 6);
+        assert!(healthy.readable());
+
+        cluster.kill_se("SE-02");
+        let degraded = cluster.shim().stat("/vo/r.bin").unwrap();
+        assert_eq!(degraded.degraded_by(), 1);
+        assert!(degraded.readable());
+
+        let fixed = cluster.shim().repair("/vo/r.bin", &GetOptions::default()).unwrap();
+        assert_eq!(fixed, 1);
+        let after = cluster.shim().stat("/vo/r.bin").unwrap();
+        assert_eq!(after.available_chunks, 6);
+        // The repaired chunk must not be on the dead SE.
+        assert!(after.chunks.iter().all(|c| c.se != "SE-02" || !c.available || c.se != "SE-02"));
+        // And the file still reads with the dead SE still down.
+        let back = cluster.shim().get_bytes("/vo/r.bin", &GetOptions::default()).unwrap();
+        assert_eq!(back, data);
+    }
+
+    #[test]
+    fn repair_noop_when_healthy() {
+        let cluster = TestCluster::builder().ses(6).build().unwrap();
+        let opts = small_put_opts(&cluster);
+        cluster.shim().put_bytes("/vo/h.bin", &[1u8; 5000], &opts).unwrap();
+        assert_eq!(
+            cluster.shim().repair("/vo/h.bin", &GetOptions::default()).unwrap(),
+            0
+        );
+    }
+
+    #[test]
+    fn rm_removes_objects_and_catalog() {
+        let cluster = TestCluster::builder().ses(5).build().unwrap();
+        let opts = small_put_opts(&cluster);
+        cluster.shim().put_bytes("/vo/z.bin", &[1u8; 9000], &opts).unwrap();
+        assert!(cluster.total_stored_bytes() > 0);
+        cluster.shim().rm("/vo/z.bin").unwrap();
+        assert_eq!(cluster.total_stored_bytes(), 0);
+        assert!(!cluster.dfc().lock().unwrap().exists("/vo/z.bin"));
+    }
+
+    #[test]
+    fn duplicate_put_rejected() {
+        let cluster = TestCluster::builder().ses(5).build().unwrap();
+        let opts = small_put_opts(&cluster);
+        cluster.shim().put_bytes("/vo/dup", &[1], &opts).unwrap();
+        assert!(cluster.shim().put_bytes("/vo/dup", &[2], &opts).is_err());
+    }
+
+    #[test]
+    fn metadata_matches_paper_convention() {
+        let cluster = TestCluster::builder().ses(5).build().unwrap();
+        let opts = small_put_opts(&cluster)
+            .with_key_style(crate::catalog::MetaKeyStyle::V1Generic);
+        cluster.shim().put_bytes("/vo/meta.bin", &[3u8; 100], &opts).unwrap();
+        let dfc = cluster.dfc();
+        let dfc = dfc.lock().unwrap();
+        use crate::catalog::MetaValue;
+        assert_eq!(
+            dfc.get_meta("/vo/meta.bin", "TOTAL").unwrap(),
+            Some(&MetaValue::Int(6))
+        );
+        assert_eq!(
+            dfc.get_meta("/vo/meta.bin", "SPLIT").unwrap(),
+            Some(&MetaValue::Int(4))
+        );
+        // The §4 pitfall is visible: generic tags in the global index.
+        assert!(dfc.global_tags().contains_key("TOTAL"));
+    }
+
+    #[test]
+    fn chunk_names_listed_in_catalog() {
+        let cluster = TestCluster::builder().ses(5).build().unwrap();
+        let opts = small_put_opts(&cluster);
+        cluster.shim().put_bytes("/vo/nm.bin", &[1u8; 100], &opts).unwrap();
+        let dfc = cluster.dfc();
+        let dfc = dfc.lock().unwrap();
+        let items = dfc.list_dir("/vo/nm.bin").unwrap();
+        assert_eq!(items.len(), 6);
+        assert_eq!(items[0].name(), "nm.bin.0_of_6.drs");
+    }
+
+    #[test]
+    fn replication_baseline_roundtrip() {
+        let cluster = TestCluster::builder().ses(5).build().unwrap();
+        let data = vec![0xEEu8; 40_000];
+        let names = cluster
+            .replication()
+            .put_bytes("/vo/rep.bin", &data, 2, 2)
+            .unwrap();
+        assert_eq!(names.len(), 2);
+        assert_ne!(names[0], names[1]);
+        assert_eq!(cluster.replication().get_bytes("/vo/rep.bin").unwrap(), data);
+        // Storage cost is exactly 2x.
+        assert_eq!(cluster.total_stored_bytes(), 80_000);
+        // Survives one SE loss.
+        cluster.kill_se(&names[0]);
+        assert_eq!(cluster.replication().get_bytes("/vo/rep.bin").unwrap(), data);
+        assert_eq!(
+            cluster.replication().available_replicas("/vo/rep.bin").unwrap(),
+            1
+        );
+    }
+
+    #[test]
+    fn ec_storage_overhead_beats_replication() {
+        // The paper's efficiency claim: 10+5 stores 1.5x vs 2x for 2-rep,
+        // while tolerating 5 losses vs 1.
+        let cluster = TestCluster::builder()
+            .ses(15)
+            .ec(EcParams::new(10, 5).unwrap())
+            .build()
+            .unwrap();
+        let data = vec![0x11u8; 200_000];
+        let opts = PutOptions::default()
+            .with_params(EcParams::new(10, 5).unwrap())
+            .with_stripe(1024);
+        cluster.shim().put_bytes("/vo/big.bin", &data, &opts).unwrap();
+        let ec_bytes = cluster.total_stored_bytes() as f64;
+        let overhead = ec_bytes / 200_000.0;
+        assert!(
+            (1.4..1.7).contains(&overhead),
+            "EC overhead {overhead} should be ~1.5 (plus headers/padding)"
+        );
+    }
+}

@@ -1,0 +1,26 @@
+//! The paper's contribution: the erasure-coding file-management shim.
+//!
+//! §2.3's design, faithfully: the shim "treats grid storage elements
+//! essentially as data archives" — whole chunks are staged through the
+//! client, there is no direct IO against encoded data. `put` encodes
+//! locally, creates **a directory in the DFC namespace with the filename
+//! requested by the user**, stores each chunk as a DFC file inside it
+//! (zfec ordinal names), tags the directory with `TOTAL`/`SPLIT`/version
+//! metadata, and round-robins the chunks over the VO's SE vector. `get`
+//! lists the directory, fetches until K chunks have arrived (early stop —
+//! "the N fastest chunks"), reconstructs, and SHA-verifies.
+//!
+//! Beyond the proof of concept, the shim also implements the paper's §4
+//! further-work items: transfer retries (serial and pool-safe), prefixed
+//! metadata keys, and chunk repair; plus the whole-file
+//! [`ReplicationManager`] baseline every benchmark compares against.
+
+pub mod cluster;
+pub mod options;
+pub mod replication;
+pub mod shim;
+
+pub use cluster::TestCluster;
+pub use options::{GetOptions, PutOptions};
+pub use replication::ReplicationManager;
+pub use shim::{EcFileStat, EcShim};

@@ -1,0 +1,112 @@
+//! Put/get options for the shim.
+
+use crate::catalog::MetaKeyStyle;
+use crate::ec::{EcParams, DEFAULT_STRIPE_B};
+use crate::transfer::RetryPolicy;
+
+/// Options for [`crate::dfm::EcShim::put_bytes`].
+#[derive(Clone, Debug)]
+pub struct PutOptions {
+    /// Coding geometry (default: the paper's 10+5).
+    pub params: EcParams,
+    /// Stripe width per chunk row; must match an AOT artifact for the PJRT
+    /// backend to be used for that geometry.
+    pub stripe_b: usize,
+    /// Transfer worker threads (1 = the paper's serial tool).
+    pub workers: usize,
+    /// Retry policy (the paper's PoC is `RetryPolicy::none()`).
+    pub retry: RetryPolicy,
+    /// Metadata tag style (§4: V2Prefixed avoids global-tag collisions).
+    pub key_style: MetaKeyStyle,
+}
+
+impl Default for PutOptions {
+    fn default() -> Self {
+        PutOptions {
+            params: EcParams::paper_default(),
+            stripe_b: DEFAULT_STRIPE_B,
+            workers: 1,
+            retry: RetryPolicy::none(),
+            key_style: MetaKeyStyle::V2Prefixed,
+        }
+    }
+}
+
+impl PutOptions {
+    pub fn with_params(mut self, params: EcParams) -> Self {
+        self.params = params;
+        self
+    }
+
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.workers = workers.max(1);
+        self
+    }
+
+    pub fn with_stripe(mut self, stripe_b: usize) -> Self {
+        self.stripe_b = stripe_b;
+        self
+    }
+
+    pub fn with_retry(mut self, retry: RetryPolicy) -> Self {
+        self.retry = retry;
+        self
+    }
+
+    pub fn with_key_style(mut self, style: MetaKeyStyle) -> Self {
+        self.key_style = style;
+        self
+    }
+}
+
+/// Options for [`crate::dfm::EcShim::get_bytes`].
+#[derive(Clone, Debug)]
+pub struct GetOptions {
+    /// Transfer worker threads (1 = serial).
+    pub workers: usize,
+    /// Retry policy for individual chunk fetches.
+    pub retry: RetryPolicy,
+}
+
+impl Default for GetOptions {
+    fn default() -> Self {
+        GetOptions { workers: 1, retry: RetryPolicy::none() }
+    }
+}
+
+impl GetOptions {
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.workers = workers.max(1);
+        self
+    }
+
+    pub fn with_retry(mut self, retry: RetryPolicy) -> Self {
+        self.retry = retry;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let p = PutOptions::default();
+        assert_eq!(p.params, EcParams::new(10, 5).unwrap());
+        assert_eq!(p.workers, 1);
+        assert_eq!(p.retry, RetryPolicy::none());
+        let g = GetOptions::default();
+        assert_eq!(g.workers, 1);
+    }
+
+    #[test]
+    fn builders() {
+        let p = PutOptions::default()
+            .with_params(EcParams::new(4, 2).unwrap())
+            .with_workers(0)
+            .with_stripe(1024);
+        assert_eq!(p.workers, 1); // clamped
+        assert_eq!(p.stripe_b, 1024);
+    }
+}

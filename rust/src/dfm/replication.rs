@@ -1,0 +1,176 @@
+//! The baseline the paper compares against: classical whole-file
+//! replication, "one full copy per site".
+
+use std::sync::{Arc, Mutex};
+
+use crate::catalog::{Dfc, FileEntry};
+use crate::placement::PlacementPolicy;
+use crate::se::SeRegistry;
+use crate::transfer::{PoolConfig, WorkPool};
+use crate::{Error, Result};
+
+/// Whole-file integer replication manager.
+pub struct ReplicationManager {
+    dfc: Arc<Mutex<Dfc>>,
+    registry: Arc<SeRegistry>,
+    policy: Arc<dyn PlacementPolicy>,
+    vo: String,
+}
+
+impl ReplicationManager {
+    pub fn new(
+        dfc: Arc<Mutex<Dfc>>,
+        registry: Arc<SeRegistry>,
+        policy: Arc<dyn PlacementPolicy>,
+        vo: impl Into<String>,
+    ) -> Self {
+        ReplicationManager { dfc, registry, policy, vo: vo.into() }
+    }
+
+    /// Upload `data` as `replicas` full copies on distinct SEs.
+    ///
+    /// `workers` parallelises across replicas (the WLCG baseline typically
+    /// uploads once and uses FTS for the rest; we upload all copies from
+    /// the client for a like-for-like comparison with the shim).
+    pub fn put_bytes(
+        &self,
+        lfn: &str,
+        data: &[u8],
+        replicas: usize,
+        workers: usize,
+    ) -> Result<Vec<String>> {
+        if replicas == 0 {
+            return Err(Error::Config("replicas must be >= 1".into()));
+        }
+        let infos = self.registry.vo_infos(&self.vo);
+        if infos.is_empty() {
+            return Err(Error::Config(format!("no SEs support VO `{}`", self.vo)));
+        }
+        // Distinct SEs: walk the placement assignment, dedup preserving
+        // order, extend vector-order if the policy repeated itself.
+        let mut targets: Vec<usize> = Vec::new();
+        for i in self.policy.place(replicas, &infos)? {
+            if !targets.contains(&i) {
+                targets.push(i);
+            }
+        }
+        for i in 0..infos.len() {
+            if targets.len() >= replicas {
+                break;
+            }
+            if !targets.contains(&i) {
+                targets.push(i);
+            }
+        }
+        if targets.len() < replicas {
+            return Err(Error::Config(format!(
+                "need {replicas} distinct SEs, have {}",
+                infos.len()
+            )));
+        }
+
+        {
+            let dfc = self.dfc.lock().unwrap();
+            if dfc.exists(lfn) {
+                return Err(Error::Catalog(format!("`{lfn}` already exists")));
+            }
+        }
+
+        let ses = self.registry.vo_vector(&self.vo);
+        let pfn = lfn.to_string();
+        let jobs: Vec<(usize, Box<dyn FnOnce() -> Result<String> + Send>)> = targets
+            .iter()
+            .map(|&t| {
+                let se = Arc::clone(&ses[t]);
+                let pfn = pfn.clone();
+                let data = data.to_vec();
+                let f: Box<dyn FnOnce() -> Result<String> + Send> =
+                    Box::new(move || se.put(&pfn, &data).map(|()| se.name().to_string()));
+                (t, f)
+            })
+            .collect();
+        let outcome = WorkPool::new(PoolConfig::parallel(workers.max(1))).run(jobs, usize::MAX);
+        if !outcome.failures.is_empty() {
+            for (_, se_name) in &outcome.successes {
+                if let Some(se) = self.registry.get(se_name) {
+                    let _ = se.delete(&pfn);
+                }
+            }
+            let (t, e) = &outcome.failures[0];
+            return Err(Error::Transfer(format!("replica upload to SE #{t} failed: {e}")));
+        }
+
+        let digest = crate::ec::chunk::sha256(data);
+        let mut dfc = self.dfc.lock().unwrap();
+        let parent = lfn.rsplit_once('/').map(|(d, _)| d).unwrap_or("");
+        if !parent.is_empty() {
+            dfc.mkdir_p(parent)?;
+        }
+        dfc.add_file(
+            lfn,
+            FileEntry {
+                size: data.len() as u64,
+                checksum: crate::util::hexfmt::encode(&digest),
+                replicas: vec![],
+                meta: Default::default(),
+            },
+        )?;
+        let mut names = Vec::new();
+        for (_, se_name) in &outcome.successes {
+            dfc.register_replica(lfn, se_name, &pfn)?;
+            names.push(se_name.clone());
+        }
+        Ok(names)
+    }
+
+    /// Fetch the file, trying replicas in catalog order (the classical
+    /// data-management behaviour).
+    pub fn get_bytes(&self, lfn: &str) -> Result<Vec<u8>> {
+        let replicas = {
+            let dfc = self.dfc.lock().unwrap();
+            dfc.replicas(lfn)?.to_vec()
+        };
+        let expected_checksum = {
+            let dfc = self.dfc.lock().unwrap();
+            dfc.file(lfn)?.checksum.clone()
+        };
+        let mut last = Error::Transfer(format!("`{lfn}`: no replicas"));
+        for r in &replicas {
+            if let Some(se) = self.registry.get(&r.se) {
+                match se.get(&r.pfn) {
+                    Ok(bytes) => {
+                        let digest =
+                            crate::util::hexfmt::encode(&crate::ec::chunk::sha256(&bytes));
+                        if digest != expected_checksum {
+                            last = Error::Integrity {
+                                path: lfn.into(),
+                                detail: format!("replica at `{}` corrupt", r.se),
+                            };
+                            continue;
+                        }
+                        return Ok(bytes);
+                    }
+                    Err(e) => last = e,
+                }
+            }
+        }
+        Err(last)
+    }
+
+    /// How many replicas are currently fetchable.
+    pub fn available_replicas(&self, lfn: &str) -> Result<usize> {
+        let replicas = {
+            let dfc = self.dfc.lock().unwrap();
+            dfc.replicas(lfn)?.to_vec()
+        };
+        Ok(replicas
+            .iter()
+            .filter(|r| {
+                self.registry
+                    .get(&r.se)
+                    .map(|se| se.is_available() && se.exists(&r.pfn))
+                    .unwrap_or(false)
+            })
+            .count())
+    }
+}

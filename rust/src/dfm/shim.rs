@@ -1,0 +1,546 @@
+//! `EcShim`: put / get / repair / rm over erasure-coded files.
+
+use std::sync::{Arc, Mutex};
+
+use crate::catalog::{Dfc, MetaKeyStyle, MetaValue};
+use crate::ec::{chunk_name, Codec, EcBackend, EcParams, PureRustBackend};
+use crate::placement::PlacementPolicy;
+use crate::se::{SeRegistry, StorageElement};
+use crate::transfer::{PoolConfig, RetryPolicy, WorkPool};
+use crate::{Error, Result};
+
+use super::options::{GetOptions, PutOptions};
+
+/// Shim format version written to catalog metadata.
+pub const SHIM_VERSION: i64 = 2;
+
+/// Status of one erasure-coded file, as reported by [`EcShim::stat`].
+#[derive(Clone, Debug)]
+pub struct EcFileStat {
+    pub lfn: String,
+    pub params: EcParams,
+    pub stripe_b: usize,
+    pub chunks: Vec<ChunkStat>,
+    /// Chunks currently fetchable (replica SE up and object present).
+    pub available_chunks: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct ChunkStat {
+    pub name: String,
+    pub index: usize,
+    pub se: String,
+    pub available: bool,
+}
+
+impl EcFileStat {
+    /// Whether the file can still be reconstructed.
+    pub fn readable(&self) -> bool {
+        self.available_chunks >= self.params.k()
+    }
+
+    /// Chunks lost relative to full health.
+    pub fn degraded_by(&self) -> usize {
+        self.chunks.len() - self.available_chunks
+    }
+}
+
+/// The erasure-coding DFC shim (the paper's system).
+pub struct EcShim {
+    dfc: Arc<Mutex<Dfc>>,
+    registry: Arc<SeRegistry>,
+    policy: Arc<dyn PlacementPolicy>,
+    backend: Arc<dyn EcBackend>,
+    vo: String,
+}
+
+impl EcShim {
+    pub fn new(
+        dfc: Arc<Mutex<Dfc>>,
+        registry: Arc<SeRegistry>,
+        policy: Arc<dyn PlacementPolicy>,
+        backend: Arc<dyn EcBackend>,
+        vo: impl Into<String>,
+    ) -> Self {
+        EcShim { dfc, registry, policy, backend, vo: vo.into() }
+    }
+
+    /// Convenience constructor with the paper's round-robin policy and the
+    /// pure-rust backend.
+    pub fn with_defaults(
+        dfc: Arc<Mutex<Dfc>>,
+        registry: Arc<SeRegistry>,
+        vo: impl Into<String>,
+    ) -> Self {
+        Self::new(
+            dfc,
+            registry,
+            Arc::new(crate::placement::RoundRobin),
+            Arc::new(PureRustBackend),
+            vo,
+        )
+    }
+
+    pub fn dfc(&self) -> Arc<Mutex<Dfc>> {
+        Arc::clone(&self.dfc)
+    }
+
+    pub fn registry(&self) -> Arc<SeRegistry> {
+        Arc::clone(&self.registry)
+    }
+
+    pub fn vo(&self) -> &str {
+        &self.vo
+    }
+
+    fn base_name(lfn: &str) -> Result<String> {
+        lfn.rsplit('/')
+            .next()
+            .filter(|s| !s.is_empty())
+            .map(str::to_string)
+            .ok_or_else(|| Error::Catalog(format!("bad lfn `{lfn}`")))
+    }
+
+    // ------------------------------------------------------------------
+    // put
+    // ------------------------------------------------------------------
+
+    /// Upload `data` as an erasure-coded file at `lfn`.
+    ///
+    /// Creates DFC directory `lfn` containing one DFC file per chunk,
+    /// tagged with the paper's metadata; chunks are placed over the VO's
+    /// SE vector by the configured policy and uploaded through the work
+    /// pool. Returns the SE name chosen for each chunk.
+    pub fn put_bytes(&self, lfn: &str, data: &[u8], opts: &PutOptions) -> Result<Vec<String>> {
+        let infos = self.registry.vo_infos(&self.vo);
+        if infos.is_empty() {
+            return Err(Error::Config(format!("no SEs support VO `{}`", self.vo)));
+        }
+        {
+            let dfc = self.dfc.lock().unwrap();
+            if dfc.exists(lfn) {
+                return Err(Error::Catalog(format!("`{lfn}` already exists")));
+            }
+        }
+        let base = Self::base_name(lfn)?;
+        let codec = Codec::with_backend(opts.params, opts.stripe_b, Arc::clone(&self.backend))?;
+        let chunks = codec.encode(data)?;
+        let n = opts.params.n();
+        let assignment = self.policy.place(n, &infos)?;
+
+        // Register the chunk directory + the paper's metadata keys.
+        {
+            let mut dfc = self.dfc.lock().unwrap();
+            dfc.mkdir_p(lfn)?;
+            let style = opts.key_style;
+            dfc.set_meta(lfn, style.total_key(), MetaValue::Int(n as i64))?;
+            dfc.set_meta(lfn, style.split_key(), MetaValue::Int(opts.params.k() as i64))?;
+            dfc.set_meta(lfn, style.version_key(), MetaValue::Int(SHIM_VERSION))?;
+            dfc.set_meta(lfn, style.stripe_key(), MetaValue::Int(opts.stripe_b as i64))?;
+        }
+
+        // Upload jobs: chunk i → SE assignment[i], with optional retry /
+        // fallback to the next SE in the vector.
+        let ses = self.registry.vo_vector(&self.vo);
+        let mut jobs: Vec<(usize, Box<dyn FnOnce() -> Result<(usize, String, String, u64, String)> + Send>)> =
+            Vec::with_capacity(n);
+        for (i, wire) in chunks.into_iter().enumerate() {
+            let name = chunk_name(&base, i, n);
+            let pfn = format!("{lfn}/{name}");
+            let primary = assignment[i];
+            let ses = ses.clone();
+            let infos = infos.clone();
+            let policy = Arc::clone(&self.policy);
+            let retry = opts.retry;
+            jobs.push((
+                i,
+                Box::new(move || {
+                    upload_with_retry(&ses, &infos, policy.as_ref(), retry, i, primary, &pfn, &wire)
+                        .map(|se_name| {
+                            let digest = crate::ec::chunk::sha256(&wire);
+                            (i, se_name, pfn, wire.len() as u64, crate::util::hexfmt::encode(&digest))
+                        })
+                }),
+            ));
+        }
+
+        let pool = WorkPool::new(PoolConfig::parallel(opts.workers));
+        let outcome = pool.run(jobs, usize::MAX);
+
+        if !outcome.failures.is_empty() {
+            // The paper's semantics: any failed chunk fails the upload.
+            // Clean up what landed, then remove the catalog entries.
+            for (_, se_name, pfn, _, _) in outcome.successes.iter().map(|(_, v)| v) {
+                if let Some(se) = self.registry.get(se_name) {
+                    let _ = se.delete(pfn);
+                }
+            }
+            let mut dfc = self.dfc.lock().unwrap();
+            let _ = dfc.remove_dir(lfn);
+            let (idx, err) = &outcome.failures[0];
+            return Err(Error::Transfer(format!(
+                "upload of chunk {idx} failed ({err}); put aborted per paper semantics"
+            )));
+        }
+
+        // Register chunk files + replicas.
+        let mut per_chunk_se = vec![String::new(); n];
+        {
+            let mut dfc = self.dfc.lock().unwrap();
+            let mut rows: Vec<&(usize, String, String, u64, String)> =
+                outcome.successes.iter().map(|(_, v)| v).collect();
+            rows.sort_by_key(|r| r.0);
+            for (i, se_name, pfn, size, checksum) in rows {
+                let name = chunk_name(&base, *i, n);
+                let entry = crate::catalog::FileEntry {
+                    size: *size,
+                    checksum: checksum.clone(),
+                    replicas: vec![],
+                    meta: Default::default(),
+                };
+                dfc.add_file(&format!("{lfn}/{name}"), entry)?;
+                dfc.register_replica(&format!("{lfn}/{name}"), se_name, pfn)?;
+                per_chunk_se[*i] = se_name.clone();
+            }
+        }
+        Ok(per_chunk_se)
+    }
+
+    // ------------------------------------------------------------------
+    // get
+    // ------------------------------------------------------------------
+
+    /// Download and reconstruct the file at `lfn`.
+    ///
+    /// Fetch jobs are queued in chunk order (data chunks first, so a fully
+    /// healthy file decodes on the identity path) and the pool stops after
+    /// K successes — the paper's early-stop optimisation.
+    pub fn get_bytes(&self, lfn: &str, opts: &GetOptions) -> Result<Vec<u8>> {
+        let (params, stripe_b, chunk_files) = self.read_layout(lfn)?;
+
+        // Build fetch jobs.
+        let mut jobs: Vec<(usize, Box<dyn FnOnce() -> Result<(usize, Vec<u8>)> + Send>)> =
+            Vec::new();
+        for (index, _name, replicas) in &chunk_files {
+            let index = *index;
+            let replicas = replicas.clone();
+            let registry = Arc::clone(&self.registry);
+            let retry = opts.retry;
+            jobs.push((
+                index,
+                Box::new(move || fetch_with_retry(&registry, &replicas, retry, index)),
+            ));
+        }
+
+        let pool = WorkPool::new(PoolConfig::parallel(opts.workers));
+        let outcome = pool.run(jobs, params.k());
+        if outcome.success_count() < params.k() {
+            return Err(Error::NotEnoughChunks {
+                have: outcome.success_count(),
+                need: params.k(),
+            });
+        }
+
+        let codec = Codec::with_backend(params, stripe_b, Arc::clone(&self.backend))?;
+        let fetched: Vec<(usize, Vec<u8>)> =
+            outcome.successes.into_iter().map(|(_, v)| v).collect();
+        codec.decode(&fetched)
+    }
+
+    /// Parse the catalog layout of an EC file: params, stripe width and
+    /// the chunk files with their replicas, ordered by chunk index.
+    fn read_layout(
+        &self,
+        lfn: &str,
+    ) -> Result<(EcParams, usize, Vec<(usize, String, Vec<crate::catalog::Replica>)>)> {
+        let dfc = self.dfc.lock().unwrap();
+        if !dfc.is_dir(lfn) {
+            return Err(Error::Catalog(format!("`{lfn}` is not an EC file directory")));
+        }
+        // Read TOTAL/SPLIT under either key style (V1 files remain readable).
+        let meta_int = |key1: &str, key2: &str| -> Option<i64> {
+            dfc.get_meta(lfn, key1)
+                .ok()
+                .flatten()
+                .or_else(|| dfc.get_meta(lfn, key2).ok().flatten())
+                .and_then(|v| v.as_int())
+        };
+        let style_v2 = MetaKeyStyle::V2Prefixed;
+        let style_v1 = MetaKeyStyle::V1Generic;
+        let total = meta_int(style_v2.total_key(), style_v1.total_key());
+        let split = meta_int(style_v2.split_key(), style_v1.split_key());
+        let stripe = meta_int(style_v2.stripe_key(), style_v1.stripe_key())
+            .unwrap_or(crate::ec::DEFAULT_STRIPE_B as i64) as usize;
+
+        // Collect chunk files; "as an additional check" (paper) the names
+        // themselves carry (index, n) and must agree with the metadata.
+        let mut chunk_files = Vec::new();
+        for item in dfc.list_dir(lfn)? {
+            if let crate::catalog::dfc::DirItem::File(name) = &item {
+                if let Some((_base, index, n_from_name)) =
+                    crate::ec::parse_chunk_name(name)
+                {
+                    let path = format!("{lfn}/{name}");
+                    let replicas = dfc.replicas(&path)?.to_vec();
+                    chunk_files.push((index, name.clone(), replicas, n_from_name));
+                }
+            }
+        }
+        if chunk_files.is_empty() {
+            return Err(Error::Catalog(format!("`{lfn}` holds no chunk files")));
+        }
+        chunk_files.sort_by_key(|c| c.0);
+        let n_from_names = chunk_files[0].3;
+
+        let (k, n) = match (split, total) {
+            (Some(s), Some(t)) => (s as usize, t as usize),
+            // Fallback: derive from chunk names (metadata lost / V0 files).
+            _ => {
+                let n = n_from_names;
+                // Without SPLIT we cannot know k; refuse rather than guess.
+                return Err(Error::Catalog(format!(
+                    "`{lfn}`: missing SPLIT/TOTAL metadata (names claim n={n})"
+                )));
+            }
+        };
+        if n != n_from_names {
+            return Err(Error::Catalog(format!(
+                "`{lfn}`: metadata TOTAL={n} disagrees with chunk names n={n_from_names}"
+            )));
+        }
+        let params = EcParams::new(k, n - k)?;
+        Ok((
+            params,
+            stripe,
+            chunk_files.into_iter().map(|(i, name, r, _)| (i, name, r)).collect(),
+        ))
+    }
+
+    /// Open a federated direct-IO reader over `lfn` (§4 future work:
+    /// sparse reads without staging the whole file).
+    pub fn open_reader(&self, lfn: &str) -> Result<crate::federation::EcFileReader> {
+        let (params, stripe_b, chunk_files) = self.read_layout(lfn)?;
+        let mut replicas = vec![Vec::new(); params.n()];
+        for (index, _name, reps) in chunk_files {
+            replicas[index] = reps;
+        }
+        crate::federation::EcFileReader::new(
+            Arc::clone(&self.registry),
+            Arc::clone(&self.backend),
+            params,
+            stripe_b,
+            replicas,
+        )
+    }
+
+    // ------------------------------------------------------------------
+    // stat / repair / rm
+    // ------------------------------------------------------------------
+
+    /// Health report for an EC file.
+    pub fn stat(&self, lfn: &str) -> Result<EcFileStat> {
+        let (params, stripe_b, chunk_files) = self.read_layout(lfn)?;
+        let mut chunks = Vec::new();
+        let mut available = 0usize;
+        for (index, name, replicas) in &chunk_files {
+            let mut up = false;
+            let mut se_name = String::new();
+            for r in replicas {
+                se_name = r.se.clone();
+                if let Some(se) = self.registry.get(&r.se) {
+                    if se.is_available() && se.exists(&r.pfn) {
+                        up = true;
+                        break;
+                    }
+                }
+            }
+            if up {
+                available += 1;
+            }
+            chunks.push(ChunkStat { name: name.clone(), index: *index, se: se_name, available: up });
+        }
+        Ok(EcFileStat {
+            lfn: lfn.to_string(),
+            params,
+            stripe_b,
+            chunks,
+            available_chunks: available,
+        })
+    }
+
+    /// Re-derive lost chunks from survivors and place them on healthy SEs.
+    ///
+    /// Returns the number of chunks repaired. The catalog replica records
+    /// are updated to point at the new locations.
+    pub fn repair(&self, lfn: &str, opts: &GetOptions) -> Result<usize> {
+        let stat = self.stat(lfn)?;
+        if !stat.readable() {
+            return Err(Error::NotEnoughChunks {
+                have: stat.available_chunks,
+                need: stat.params.k(),
+            });
+        }
+        let missing: Vec<usize> =
+            stat.chunks.iter().filter(|c| !c.available).map(|c| c.index).collect();
+        if missing.is_empty() {
+            return Ok(0);
+        }
+
+        let (params, stripe_b, chunk_files) = self.read_layout(lfn)?;
+        // Fetch K surviving chunks (early-stop pool, like get).
+        let mut jobs: Vec<(usize, Box<dyn FnOnce() -> Result<(usize, Vec<u8>)> + Send>)> =
+            Vec::new();
+        for (index, _name, replicas) in &chunk_files {
+            if missing.contains(index) {
+                continue;
+            }
+            let index = *index;
+            let replicas = replicas.clone();
+            let registry = Arc::clone(&self.registry);
+            let retry = opts.retry;
+            jobs.push((
+                index,
+                Box::new(move || fetch_with_retry(&registry, &replicas, retry, index)),
+            ));
+        }
+        let outcome = WorkPool::new(PoolConfig::parallel(opts.workers)).run(jobs, params.k());
+        if outcome.success_count() < params.k() {
+            return Err(Error::NotEnoughChunks {
+                have: outcome.success_count(),
+                need: params.k(),
+            });
+        }
+        let survivors: Vec<(usize, Vec<u8>)> =
+            outcome.successes.into_iter().map(|(_, v)| v).collect();
+        let codec = Codec::with_backend(params, stripe_b, Arc::clone(&self.backend))?;
+        let rebuilt = codec.repair(&survivors, &missing)?;
+
+        // Place rebuilt chunks on available SEs, preferring ones that do
+        // not already hold a chunk of this file.
+        let infos = self.registry.vo_infos(&self.vo);
+        let holding: Vec<String> = stat
+            .chunks
+            .iter()
+            .filter(|c| c.available)
+            .map(|c| c.se.clone())
+            .collect();
+        let base = Self::base_name(lfn)?;
+        let n = params.n();
+        let mut repaired = 0usize;
+        for (idx, wire) in rebuilt {
+            let target = infos
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| s.available)
+                .min_by_key(|(i, s)| (holding.contains(&s.name) as usize, *i))
+                .map(|(i, _)| i)
+                .ok_or_else(|| Error::Transfer("no SE available for repair".into()))?;
+            let se = self
+                .registry
+                .get(&infos[target].name)
+                .ok_or_else(|| Error::Config("registry inconsistent".into()))?;
+            let name = chunk_name(&base, idx, n);
+            let pfn = format!("{lfn}/{name}");
+            se.put(&pfn, &wire)?;
+            {
+                let mut dfc = self.dfc.lock().unwrap();
+                let path = format!("{lfn}/{name}");
+                // Drop stale replica records, then register the new one.
+                let old: Vec<String> = dfc
+                    .replicas(&path)?
+                    .iter()
+                    .map(|r| r.se.clone())
+                    .collect();
+                for se_name in old {
+                    let _ = dfc.remove_replica(&path, &se_name);
+                }
+                dfc.register_replica(&path, se.name(), &pfn)?;
+            }
+            repaired += 1;
+        }
+        Ok(repaired)
+    }
+
+    /// Delete the EC file: best-effort removal of chunk objects, then the
+    /// catalog subtree.
+    pub fn rm(&self, lfn: &str) -> Result<()> {
+        let (_, _, chunk_files) = self.read_layout(lfn)?;
+        for (_, _, replicas) in &chunk_files {
+            for r in replicas {
+                if let Some(se) = self.registry.get(&r.se) {
+                    let _ = se.delete(&r.pfn);
+                }
+            }
+        }
+        self.dfc.lock().unwrap().remove_dir(lfn)
+    }
+}
+
+/// Upload one chunk with retry/fallback (free function so the pool closure
+/// stays small).
+#[allow(clippy::too_many_arguments)]
+fn upload_with_retry(
+    ses: &[Arc<dyn StorageElement>],
+    infos: &[crate::se::SeInfo],
+    policy: &dyn PlacementPolicy,
+    retry: RetryPolicy,
+    chunk_idx: usize,
+    primary: usize,
+    pfn: &str,
+    wire: &[u8],
+) -> Result<String> {
+    let mut tried: Vec<usize> = Vec::new();
+    let mut target = primary;
+    let mut attempts = 0usize;
+    loop {
+        attempts += 1;
+        match ses[target].put(pfn, wire) {
+            Ok(()) => return Ok(ses[target].name().to_string()),
+            Err(e) => {
+                tried.push(target);
+                if !retry.retries_left(attempts) {
+                    return Err(e);
+                }
+                if retry.fallback_se {
+                    match policy.fallback(chunk_idx, infos, &tried) {
+                        Some(next) => target = next,
+                        None => return Err(e),
+                    }
+                }
+                // !fallback_se: retry the same SE (transient failures).
+            }
+        }
+    }
+}
+
+/// Fetch one chunk, walking its replica list, with retries.
+fn fetch_with_retry(
+    registry: &SeRegistry,
+    replicas: &[crate::catalog::Replica],
+    retry: RetryPolicy,
+    index: usize,
+) -> Result<(usize, Vec<u8>)> {
+    let mut attempts = 0usize;
+    let mut last_err = Error::Transfer(format!("chunk {index}: no replicas registered"));
+    loop {
+        for r in replicas {
+            attempts += 1;
+            match registry.get(&r.se) {
+                Some(se) => match se.get(&r.pfn) {
+                    Ok(bytes) => return Ok((index, bytes)),
+                    Err(e) => last_err = e,
+                },
+                None => {
+                    last_err =
+                        Error::Config(format!("replica SE `{}` not in registry", r.se))
+                }
+            }
+            if !retry.retries_left(attempts) {
+                return Err(last_err);
+            }
+        }
+        if replicas.is_empty() || !retry.retries_left(attempts) {
+            return Err(last_err);
+        }
+    }
+}

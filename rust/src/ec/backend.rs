@@ -1,0 +1,178 @@
+//! Stripe compute backends.
+//!
+//! A backend computes GF(2⁸) matrix products over stripe-shaped byte
+//! matrices. Two implementations exist:
+//!
+//! * [`PureRustBackend`] (here) — table-driven `gf::mul_xor_slice` loops;
+//!   always available, used for arbitrary shapes and as the correctness
+//!   baseline.
+//! * [`crate::runtime::PjrtBackend`] — executes the AOT-lowered pallas
+//!   kernel (`artifacts/*.hlo.txt`) through the PJRT CPU client; the
+//!   "paper path" proving the three-layer stack composes. Registered
+//!   shapes only; the codec falls back to pure rust elsewhere.
+//!
+//! The contract is deliberately stripe-local so backends stay stateless:
+//! `data` is K rows of exactly `stripe_b` bytes each.
+
+use crate::gf::{mul_xor_slice, GfMatrix};
+use crate::{Error, Result};
+
+/// A GF(2⁸) stripe-matmul engine.
+pub trait EcBackend: Send + Sync {
+    /// `out[i] = XOR_k mul(mat[i,k], data[k])` — shape (mat.rows, stripe_b).
+    ///
+    /// `data` rows must all have equal length. Implementations may assume
+    /// `mat.cols() == data.len()`.
+    fn matmul(&self, mat: &GfMatrix, data: &[&[u8]]) -> Result<Vec<Vec<u8>>>;
+
+    /// In-place variant: write the product rows into caller-provided
+    /// buffers (the codec hot path — avoids per-stripe allocation).
+    /// Default falls back to [`EcBackend::matmul`] + copy.
+    fn matmul_into(
+        &self,
+        mat: &GfMatrix,
+        data: &[&[u8]],
+        out: &mut [&mut [u8]],
+    ) -> Result<()> {
+        let rows = self.matmul(mat, data)?;
+        if rows.len() != out.len() {
+            return Err(Error::Ec("matmul_into: row count mismatch".into()));
+        }
+        for (dst, src) in out.iter_mut().zip(rows) {
+            dst.copy_from_slice(&src);
+        }
+        Ok(())
+    }
+
+    /// Human-readable backend name (for metrics / EXPERIMENTS.md).
+    fn name(&self) -> &'static str;
+}
+
+/// Table-driven pure-rust backend (the correctness baseline and fallback).
+#[derive(Default, Clone, Copy, Debug)]
+pub struct PureRustBackend;
+
+impl EcBackend for PureRustBackend {
+    fn matmul(&self, mat: &GfMatrix, data: &[&[u8]]) -> Result<Vec<Vec<u8>>> {
+        let stripe_b = data.first().map_or(0, |r| r.len());
+        let mut out = vec![vec![0u8; stripe_b]; mat.rows()];
+        let mut refs: Vec<&mut [u8]> = out.iter_mut().map(|v| v.as_mut_slice()).collect();
+        self.matmul_into(mat, data, &mut refs)?;
+        Ok(out)
+    }
+
+    fn matmul_into(
+        &self,
+        mat: &GfMatrix,
+        data: &[&[u8]],
+        out: &mut [&mut [u8]],
+    ) -> Result<()> {
+        if mat.cols() != data.len() {
+            return Err(Error::Ec(format!(
+                "backend shape mismatch: mat cols {} vs {} data rows",
+                mat.cols(),
+                data.len()
+            )));
+        }
+        if mat.rows() != out.len() {
+            return Err(Error::Ec("matmul_into: row count mismatch".into()));
+        }
+        let stripe_b = data.first().map_or(0, |r| r.len());
+        if data.iter().any(|r| r.len() != stripe_b)
+            || out.iter().any(|r| r.len() != stripe_b)
+        {
+            return Err(Error::Ec("ragged stripe rows".into()));
+        }
+        for (i, out_row) in out.iter_mut().enumerate() {
+            // First nonzero coefficient writes (mul_slice), the rest
+            // accumulate (mul_xor_slice) — avoids a zero-fill pass.
+            let mut initialized = false;
+            for (k, src) in data.iter().enumerate() {
+                let c = mat.get(i, k);
+                if c == 0 {
+                    continue;
+                }
+                if initialized {
+                    mul_xor_slice(c, src, out_row);
+                } else {
+                    crate::gf::mul_slice(c, src, out_row);
+                    initialized = true;
+                }
+            }
+            if !initialized {
+                out_row.fill(0);
+            }
+        }
+        Ok(())
+    }
+
+    fn name(&self) -> &'static str {
+        "pure-rust"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::forall;
+
+    fn slow_matmul(mat: &GfMatrix, data: &[&[u8]]) -> Vec<Vec<u8>> {
+        let b = data[0].len();
+        let mut out = vec![vec![0u8; b]; mat.rows()];
+        for i in 0..mat.rows() {
+            for k in 0..mat.cols() {
+                for x in 0..b {
+                    out[i][x] ^= crate::gf::mul(mat.get(i, k), data[k][x]);
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matches_scalar_reference() {
+        forall(40, |rng| {
+            let k = 1 + rng.index(8);
+            let rows = 1 + rng.index(6);
+            let b = 1 + rng.index(500);
+            let mut mat = GfMatrix::zero(rows, k);
+            for r in 0..rows {
+                for c in 0..k {
+                    mat.set(r, c, rng.byte());
+                }
+            }
+            let data: Vec<Vec<u8>> = (0..k).map(|_| rng.bytes(b)).collect();
+            let refs: Vec<&[u8]> = data.iter().map(|v| v.as_slice()).collect();
+            let got = PureRustBackend.matmul(&mat, &refs).unwrap();
+            assert_eq!(got, slow_matmul(&mat, &refs));
+        });
+    }
+
+    #[test]
+    fn identity_matmul_is_copy() {
+        let data: Vec<Vec<u8>> = vec![vec![1, 2, 3], vec![4, 5, 6]];
+        let refs: Vec<&[u8]> = data.iter().map(|v| v.as_slice()).collect();
+        let out = PureRustBackend
+            .matmul(&GfMatrix::identity(2), &refs)
+            .unwrap();
+        assert_eq!(out, data);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let data = [&[1u8, 2][..]];
+        assert!(PureRustBackend
+            .matmul(&GfMatrix::identity(2), &data)
+            .is_err());
+    }
+
+    #[test]
+    fn ragged_rows_rejected() {
+        let r1 = [1u8, 2];
+        let r2 = [1u8];
+        let data = [&r1[..], &r2[..]];
+        assert!(PureRustBackend
+            .matmul(&GfMatrix::identity(2), &data)
+            .is_err());
+    }
+}

@@ -1,0 +1,457 @@
+//! The file-level codec: encode a byte buffer into K+M sealed chunks and
+//! reconstruct it from any K of them.
+//!
+//! Encoding walks the file segment-by-segment (see [`crate::ec::stripe`]),
+//! feeding each (K × stripe_b) stripe matrix to the [`EcBackend`] with the
+//! Cauchy coding block; data chunks are verbatim copies of their stripe
+//! rows (the code is systematic), so only the M coding rows are computed —
+//! exactly what the AOT `gf_encode_*` artifact does.
+//!
+//! Decoding inverts the survivor sub-matrix of the systematic generator
+//! once per request (K ≤ 255, so this is microseconds) and applies it per
+//! segment — the `gf_decode_*` artifact path. When all K data chunks
+//! survive the matrix is the identity and decode degenerates to a
+//! concatenation, mirroring the paper's observation that "file
+//! reconstruction requires little overheads if the original data blocks
+//! are the first to be retrieved".
+
+use std::sync::Arc;
+
+use crate::ec::backend::{EcBackend, PureRustBackend};
+use crate::ec::chunk::{sha256, ChunkHeader};
+use crate::ec::params::EcParams;
+use crate::ec::stripe::{
+    chunk_payload_len, copy_stripe_row, scatter_segment, segment_count, DEFAULT_STRIPE_B,
+};
+use crate::gf::GfMatrix;
+use crate::{Error, Result};
+
+/// A reusable encoder/decoder for one (K, M, stripe_b) geometry.
+pub struct Codec {
+    params: EcParams,
+    stripe_b: usize,
+    coding: GfMatrix,
+    backend: Arc<dyn EcBackend>,
+}
+
+impl Codec {
+    /// Codec with the default stripe width and the pure-rust backend.
+    pub fn new(params: EcParams) -> Result<Self> {
+        Self::with_backend(params, DEFAULT_STRIPE_B, Arc::new(PureRustBackend))
+    }
+
+    pub fn with_backend(
+        params: EcParams,
+        stripe_b: usize,
+        backend: Arc<dyn EcBackend>,
+    ) -> Result<Self> {
+        if stripe_b == 0 {
+            return Err(Error::Ec("stripe_b must be positive".into()));
+        }
+        let coding = GfMatrix::cauchy(params.m(), params.k())?;
+        Ok(Codec { params, stripe_b, coding, backend })
+    }
+
+    pub fn params(&self) -> EcParams {
+        self.params
+    }
+
+    pub fn stripe_b(&self) -> usize {
+        self.stripe_b
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Encode `file` into K+M sealed wire chunks (header + payload).
+    ///
+    /// Hot path (§Perf): the wire buffers are allocated once with the
+    /// header prefix reserved; data rows are striped straight from the
+    /// file into their final position and coding rows are computed
+    /// *in place* via `matmul_into` — no intermediate stripe buffers, no
+    /// extend-copies, no per-segment allocation.
+    pub fn encode(&self, file: &[u8]) -> Result<Vec<Vec<u8>>> {
+        use crate::ec::chunk::HEADER_LEN;
+        let (k, m) = (self.params.k(), self.params.m());
+        let segs = segment_count(file.len() as u64, k, self.stripe_b);
+        let payload_len = chunk_payload_len(file.len() as u64, k, self.stripe_b) as usize;
+        let digest = sha256(file);
+
+        // Wire chunks: [header(64) | payload].
+        let mut wires: Vec<Vec<u8>> =
+            (0..k + m).map(|_| vec![0u8; HEADER_LEN + payload_len]).collect();
+
+        // Data chunks: stripe rows copied straight to final position.
+        let sb = self.stripe_b;
+        for seg in 0..segs {
+            let off = HEADER_LEN + (seg as usize) * sb;
+            for r in 0..k {
+                copy_stripe_row(file, seg, r, k, sb, &mut wires[r][off..off + sb]);
+            }
+        }
+
+        // Coding chunks: in-place stripe matmul per segment.
+        if m > 0 {
+            for seg in 0..segs {
+                let off = HEADER_LEN + (seg as usize) * sb;
+                let (data_w, coding_w) = wires.split_at_mut(k);
+                let data_refs: Vec<&[u8]> =
+                    data_w.iter().map(|w| &w[off..off + sb]).collect();
+                let mut out_refs: Vec<&mut [u8]> =
+                    coding_w.iter_mut().map(|w| &mut w[off..off + sb]).collect();
+                self.backend.matmul_into(&self.coding, &data_refs, &mut out_refs)?;
+            }
+        }
+
+        // Stamp headers.
+        for (idx, wire) in wires.iter_mut().enumerate() {
+            let hdr = ChunkHeader::new(
+                self.params,
+                idx,
+                sb,
+                file.len() as u64,
+                payload_len as u64,
+                digest,
+            );
+            wire[..HEADER_LEN].copy_from_slice(&hdr.encode());
+        }
+        Ok(wires)
+    }
+
+    /// Build the K×K decode matrix for a set of surviving chunk indices
+    /// (row order = stacking order of the supplied chunks).
+    pub fn decode_matrix(&self, present: &[usize]) -> Result<GfMatrix> {
+        decode_matrix(self.params, present)
+    }
+
+    /// Reconstruct the original file from any K sealed chunks.
+    ///
+    /// `chunks` are (index, wire bytes) pairs; exactly K are required (the
+    /// caller — the shim's early-stopping fetch pool — picks which K).
+    pub fn decode(&self, chunks: &[(usize, Vec<u8>)]) -> Result<Vec<u8>> {
+        let k = self.params.k();
+        if chunks.len() < k {
+            return Err(Error::NotEnoughChunks { have: chunks.len(), need: k });
+        }
+        let chunks = &chunks[..k];
+
+        // Validate headers agree.
+        let mut parsed: Vec<(usize, ChunkHeader, &[u8])> = Vec::with_capacity(k);
+        for (idx, wire) in chunks {
+            let (hdr, payload) = ChunkHeader::unseal(wire)?;
+            if hdr.index as usize != *idx {
+                return Err(Error::Ec(format!(
+                    "chunk header index {} disagrees with catalog index {}",
+                    hdr.index, idx
+                )));
+            }
+            if hdr.params()? != self.params || hdr.stripe_b as usize != self.stripe_b {
+                return Err(Error::Ec(format!(
+                    "chunk {} geometry {}+{}/{} disagrees with codec {}/{}",
+                    idx, hdr.k, hdr.m, hdr.stripe_b, self.params, self.stripe_b
+                )));
+            }
+            parsed.push((*idx, hdr, payload));
+        }
+        let file_len = parsed[0].1.file_len;
+        let digest = parsed[0].1.file_sha256;
+        if parsed.iter().any(|(_, h, _)| h.file_len != file_len || h.file_sha256 != digest) {
+            return Err(Error::Ec("chunks disagree about the original file".into()));
+        }
+        let payload_len = chunk_payload_len(file_len, k, self.stripe_b);
+        if parsed.iter().any(|(_, _, p)| p.len() as u64 != payload_len) {
+            return Err(Error::Ec("chunk payload length mismatch".into()));
+        }
+
+        let present: Vec<usize> = parsed.iter().map(|(i, _, _)| *i).collect();
+        let dec = self.decode_matrix(&present)?;
+        let identity = present.iter().enumerate().all(|(r, &i)| r == i && i < k);
+
+        let segs = segment_count(file_len, k, self.stripe_b);
+        let sb = self.stripe_b;
+        let mut out = vec![0u8; file_len as usize];
+        // Scratch rows for segments that straddle EOF (tail clipping).
+        let mut scratch: Vec<Vec<u8>> = Vec::new();
+        for seg in 0..segs {
+            let off = (seg as usize) * sb;
+            let rows: Vec<&[u8]> =
+                parsed.iter().map(|(_, _, p)| &p[off..off + sb]).collect();
+            let seg_start = (seg as usize) * k * sb;
+            let seg_end = seg_start + k * sb;
+            if identity {
+                let decoded: Vec<&[u8]> = rows;
+                // Copy rows straight into place (clipped at EOF).
+                for (r, row) in decoded.iter().enumerate() {
+                    let start = seg_start + r * sb;
+                    if start >= out.len() {
+                        break;
+                    }
+                    let n = (out.len() - start).min(sb);
+                    out[start..start + n].copy_from_slice(&row[..n]);
+                }
+            } else if seg_end <= out.len() {
+                // Interior segment: decode directly into the file buffer.
+                let dst = &mut out[seg_start..seg_end];
+                let mut out_refs: Vec<&mut [u8]> = dst.chunks_exact_mut(sb).collect();
+                self.backend.matmul_into(&dec, &rows, &mut out_refs)?;
+            } else {
+                // Tail segment: decode into scratch, scatter with clipping.
+                if scratch.is_empty() {
+                    scratch = vec![vec![0u8; sb]; k];
+                }
+                let mut out_refs: Vec<&mut [u8]> =
+                    scratch.iter_mut().map(|v| v.as_mut_slice()).collect();
+                self.backend.matmul_into(&dec, &rows, &mut out_refs)?;
+                scatter_segment(&scratch, seg, k, sb, &mut out);
+            }
+        }
+
+        // Whole-file integrity: the check the paper lists as further work.
+        if sha256(&out) != digest {
+            return Err(Error::Integrity {
+                path: "<decode>".into(),
+                detail: "SHA-256 mismatch after reconstruction".into(),
+            });
+        }
+        Ok(out)
+    }
+
+    /// Re-derive a set of missing chunks from any K surviving ones (the
+    /// repair path). Returns sealed wire chunks for `missing`, bit-identical
+    /// to the originals.
+    pub fn repair(
+        &self,
+        survivors: &[(usize, Vec<u8>)],
+        missing: &[usize],
+    ) -> Result<Vec<(usize, Vec<u8>)>> {
+        let file = self.decode(survivors)?;
+        let all = self.encode(&file)?;
+        missing
+            .iter()
+            .map(|&i| {
+                all.get(i)
+                    .cloned()
+                    .map(|c| (i, c))
+                    .ok_or_else(|| Error::Ec(format!("missing index {i} out of range")))
+            })
+            .collect()
+    }
+}
+
+/// Decode-matrix construction, free-standing for reuse (mirrors python
+/// `model.decode_matrix` byte-for-byte).
+pub fn decode_matrix(params: EcParams, present: &[usize]) -> Result<GfMatrix> {
+    let k = params.k();
+    if present.len() != k {
+        return Err(Error::Ec(format!(
+            "need exactly {k} survivor indices, got {}",
+            present.len()
+        )));
+    }
+    let mut seen = vec![false; params.n()];
+    for &i in present {
+        if i >= params.n() {
+            return Err(Error::Ec(format!("survivor index {i} out of range")));
+        }
+        if seen[i] {
+            return Err(Error::Ec(format!("duplicate survivor index {i}")));
+        }
+        seen[i] = true;
+    }
+    let gen = GfMatrix::systematic_generator(k, params.m())?;
+    gen.select_rows(present)?.invert()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::forall;
+
+    fn codec(k: usize, m: usize, sb: usize) -> Codec {
+        Codec::with_backend(
+            EcParams::new(k, m).unwrap(),
+            sb,
+            Arc::new(PureRustBackend),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn encode_shapes() {
+        let c = codec(4, 2, 16);
+        let file = vec![7u8; 100];
+        let chunks = c.encode(&file).unwrap();
+        assert_eq!(chunks.len(), 6);
+        // 100 bytes / (4*16) = 2 segments -> payload 32 + 64 header
+        for ch in &chunks {
+            assert_eq!(ch.len(), 64 + 32);
+        }
+    }
+
+    #[test]
+    fn systematic_data_chunks_are_verbatim() {
+        let c = codec(4, 2, 16);
+        let file: Vec<u8> = (0..128u32).map(|i| i as u8).collect();
+        let chunks = c.encode(&file).unwrap();
+        let (hdr, payload) = ChunkHeader::unseal(&chunks[0]).unwrap();
+        assert!(!hdr.is_coding());
+        // chunk 0 = rows 0 of both segments = file[0..16] ++ file[64..80]
+        assert_eq!(&payload[..16], &file[0..16]);
+        assert_eq!(&payload[16..32], &file[64..80]);
+    }
+
+    #[test]
+    fn all_data_chunks_decode_identity_path() {
+        let c = codec(4, 2, 16);
+        let file: Vec<u8> = (0..200u32).map(|i| (i * 3) as u8).collect();
+        let chunks = c.encode(&file).unwrap();
+        let got = c
+            .decode(&(0..4).map(|i| (i, chunks[i].clone())).collect::<Vec<_>>())
+            .unwrap();
+        assert_eq!(got, file);
+    }
+
+    #[test]
+    fn any_k_of_n_roundtrip_exhaustive_4_2() {
+        let c = codec(4, 2, 16);
+        let file: Vec<u8> = (0..777u32).map(|i| (i ^ (i >> 3)) as u8).collect();
+        let chunks = c.encode(&file).unwrap();
+        let n = 6;
+        for a in 0..n {
+            for b in a + 1..n {
+                for cc in b + 1..n {
+                    for d in cc + 1..n {
+                        let subset: Vec<(usize, Vec<u8>)> = [a, b, cc, d]
+                            .iter()
+                            .map(|&i| (i, chunks[i].clone()))
+                            .collect();
+                        assert_eq!(c.decode(&subset).unwrap(), file);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_property_random_geometry() {
+        forall(25, |rng| {
+            let k = 1 + rng.index(8);
+            let m = rng.index(5);
+            let sb = 1 + rng.index(96);
+            let len = rng.index(4000);
+            let c = codec(k, m, sb);
+            let file = rng.bytes(len);
+            let chunks = c.encode(&file).unwrap();
+            let pick = rng.sample_indices(k + m, k);
+            let subset: Vec<(usize, Vec<u8>)> =
+                pick.iter().map(|&i| (i, chunks[i].clone())).collect();
+            assert_eq!(c.decode(&subset).unwrap(), file, "k={k} m={m} sb={sb} len={len}");
+        });
+    }
+
+    #[test]
+    fn unsorted_survivor_order_ok() {
+        let c = codec(4, 2, 16);
+        let file = vec![0xABu8; 300];
+        let chunks = c.encode(&file).unwrap();
+        let subset: Vec<(usize, Vec<u8>)> =
+            [5usize, 0, 3, 2].iter().map(|&i| (i, chunks[i].clone())).collect();
+        assert_eq!(c.decode(&subset).unwrap(), file);
+    }
+
+    #[test]
+    fn too_few_chunks_error() {
+        let c = codec(4, 2, 16);
+        let chunks = c.encode(&[1, 2, 3]).unwrap();
+        let subset: Vec<(usize, Vec<u8>)> =
+            (0..3).map(|i| (i, chunks[i].clone())).collect();
+        match c.decode(&subset) {
+            Err(Error::NotEnoughChunks { have: 3, need: 4 }) => {}
+            other => panic!("unexpected: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn corrupted_payload_caught_by_sha() {
+        let c = codec(4, 2, 16);
+        let file = vec![9u8; 500];
+        let mut chunks = c.encode(&file).unwrap();
+        let len = chunks[1].len();
+        chunks[1][len - 1] ^= 0xFF; // flip a payload byte
+        let subset: Vec<(usize, Vec<u8>)> =
+            (0..4).map(|i| (i, chunks[i].clone())).collect();
+        match c.decode(&subset) {
+            Err(Error::Integrity { .. }) => {}
+            other => panic!("unexpected: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn mismatched_geometry_rejected() {
+        let c1 = codec(4, 2, 16);
+        let c2 = codec(4, 2, 32);
+        let file = vec![1u8; 100];
+        let chunks = c1.encode(&file).unwrap();
+        let subset: Vec<(usize, Vec<u8>)> =
+            (0..4).map(|i| (i, chunks[i].clone())).collect();
+        assert!(c2.decode(&subset).is_err());
+    }
+
+    #[test]
+    fn duplicate_survivors_rejected() {
+        let c = codec(4, 2, 16);
+        let chunks = c.encode(&[5u8; 64]).unwrap();
+        let subset: Vec<(usize, Vec<u8>)> = vec![
+            (0, chunks[0].clone()),
+            (0, chunks[0].clone()),
+            (2, chunks[2].clone()),
+            (3, chunks[3].clone()),
+        ];
+        assert!(c.decode(&subset).is_err());
+    }
+
+    #[test]
+    fn repair_reproduces_exact_chunks() {
+        let c = codec(4, 2, 16);
+        let file: Vec<u8> = (0..999u32).map(|i| (i * 7) as u8).collect();
+        let chunks = c.encode(&file).unwrap();
+        let survivors: Vec<(usize, Vec<u8>)> =
+            [1usize, 2, 4, 5].iter().map(|&i| (i, chunks[i].clone())).collect();
+        let repaired = c.repair(&survivors, &[0, 3]).unwrap();
+        assert_eq!(repaired[0].1, chunks[0]);
+        assert_eq!(repaired[1].1, chunks[3]);
+    }
+
+    #[test]
+    fn empty_file_roundtrip() {
+        let c = codec(3, 2, 8);
+        let chunks = c.encode(&[]).unwrap();
+        assert_eq!(chunks.len(), 5);
+        let subset: Vec<(usize, Vec<u8>)> =
+            [2usize, 3, 4].iter().map(|&i| (i, chunks[i].clone())).collect();
+        assert_eq!(c.decode(&subset).unwrap(), Vec::<u8>::new());
+    }
+
+    #[test]
+    fn m_zero_split_only_mode() {
+        // The paper benchmarks "10 pieces with no encoding" — m = 0.
+        let c = codec(10, 0, 16);
+        let file = vec![3u8; 1000];
+        let chunks = c.encode(&file).unwrap();
+        assert_eq!(chunks.len(), 10);
+        let subset: Vec<(usize, Vec<u8>)> =
+            (0..10).map(|i| (i, chunks[i].clone())).collect();
+        assert_eq!(c.decode(&subset).unwrap(), file);
+    }
+
+    #[test]
+    fn decode_matrix_validation() {
+        let p = EcParams::new(4, 2).unwrap();
+        assert!(decode_matrix(p, &[0, 1, 2]).is_err()); // too few
+        assert!(decode_matrix(p, &[0, 1, 2, 9]).is_err()); // out of range
+        assert!(decode_matrix(p, &[0, 1, 2, 2]).is_err()); // duplicate
+        let m = decode_matrix(p, &[0, 1, 2, 3]).unwrap();
+        assert_eq!(m, GfMatrix::identity(4));
+    }
+}

@@ -1,0 +1,23 @@
+//! The erasure codec: systematic Reed–Solomon over GF(2⁸), striped per the
+//! AOT kernel geometry, packaged in zfec-compatible chunk containers.
+//!
+//! * [`params`] — `EcParams{k, m}` validation and derived quantities.
+//! * [`backend`] — the stripe compute backend trait; [`PureRustBackend`]
+//!   lives here, the PJRT-loaded pallas kernel backend lives in
+//!   [`crate::runtime`].
+//! * [`stripe`] — file ⇄ stripe-matrix layout (padding, tail handling).
+//! * [`codec`] — encode/decode whole files; decode-matrix construction.
+//! * [`chunk`] — on-the-wire chunk container (header + payload) and the
+//!   zfec-style `NN_of_MM` naming scheme used in the DFC namespace.
+
+pub mod backend;
+pub mod chunk;
+pub mod codec;
+pub mod params;
+pub mod stripe;
+
+pub use backend::{EcBackend, PureRustBackend};
+pub use chunk::{chunk_name, parse_chunk_name, ChunkHeader};
+pub use codec::Codec;
+pub use params::EcParams;
+pub use stripe::DEFAULT_STRIPE_B;

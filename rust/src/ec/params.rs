@@ -1,0 +1,98 @@
+//! Erasure-coding parameters.
+
+use crate::{Error, Result};
+
+/// `(K, M)`: K data chunks, M coding chunks; any K of the K+M reconstruct.
+///
+/// The paper's benchmark geometry is `EcParams::new(10, 5)` — "10 chunks +
+/// 5 coding chunks", i.e. 1.5× storage overhead tolerating any 5 losses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct EcParams {
+    k: usize,
+    m: usize,
+}
+
+impl EcParams {
+    pub fn new(k: usize, m: usize) -> Result<Self> {
+        if k == 0 {
+            return Err(Error::Ec("k must be >= 1".into()));
+        }
+        if k + m > 255 {
+            // One field element is reserved so Cauchy x/y vectors stay
+            // disjoint; 255 total chunks is the practical RS-255 bound.
+            return Err(Error::Ec(format!("k+m = {} exceeds 255", k + m)));
+        }
+        Ok(EcParams { k, m })
+    }
+
+    /// The paper's 10+5 default.
+    pub fn paper_default() -> Self {
+        EcParams { k: 10, m: 5 }
+    }
+
+    /// Data chunks (the paper's DFC metadata key `SPLIT`).
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Coding chunks.
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// Total chunks (the paper's DFC metadata key `TOTAL`).
+    pub fn n(&self) -> usize {
+        self.k + self.m
+    }
+
+    /// Storage expansion factor n/k (the paper's "rational replication").
+    pub fn overhead(&self) -> f64 {
+        self.n() as f64 / self.k as f64
+    }
+
+    /// Losses tolerated without data loss.
+    pub fn fault_tolerance(&self) -> usize {
+        self.m
+    }
+}
+
+impl std::fmt::Display for EcParams {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}+{}", self.k, self.m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn valid_params() {
+        let p = EcParams::new(10, 5).unwrap();
+        assert_eq!(p.k(), 10);
+        assert_eq!(p.m(), 5);
+        assert_eq!(p.n(), 15);
+        assert!((p.overhead() - 1.5).abs() < 1e-12);
+        assert_eq!(p.fault_tolerance(), 5);
+        assert_eq!(p.to_string(), "10+5");
+    }
+
+    #[test]
+    fn zero_k_rejected() {
+        assert!(EcParams::new(0, 5).is_err());
+    }
+
+    #[test]
+    fn oversize_rejected() {
+        assert!(EcParams::new(200, 100).is_err());
+        assert!(EcParams::new(255, 0).is_ok());
+        assert!(EcParams::new(255, 1).is_err());
+    }
+
+    #[test]
+    fn pure_replication_degenerate() {
+        // k=1 m=r-1 is r-way replication expressed as an erasure code.
+        let p = EcParams::new(1, 2).unwrap();
+        assert!((p.overhead() - 3.0).abs() < 1e-12);
+    }
+}

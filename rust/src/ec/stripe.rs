@@ -1,0 +1,125 @@
+//! Striping layout: file bytes ⇄ (K × stripe_b) stripe matrices.
+//!
+//! A file of `L` bytes with parameters (K, stripe_b) is processed in
+//! segments of `K · stripe_b` bytes. Segment `s` supplies stripe row `k`
+//! from byte range `[ (s·K + k)·stripe_b , +stripe_b )`, zero-padded past
+//! EOF. Chunk `k`'s payload is the concatenation of its row across all
+//! segments, so every chunk has the same length
+//! `ceil(L / (K·stripe_b)) · stripe_b` — the "N identically-sized chunks"
+//! of the paper's abstract — and the stripe shape matches the AOT kernel
+//! operand `(K, stripe_b)` exactly.
+
+/// Default stripe width per chunk row; matches the widest AOT artifact.
+pub const DEFAULT_STRIPE_B: usize = 65536;
+
+/// Number of segments (stripes) a file of `len` bytes occupies.
+pub fn segment_count(len: u64, k: usize, stripe_b: usize) -> u64 {
+    let seg = (k * stripe_b) as u64;
+    len.div_ceil(seg).max(1)
+}
+
+/// Per-chunk payload length for a file of `len` bytes.
+pub fn chunk_payload_len(len: u64, k: usize, stripe_b: usize) -> u64 {
+    segment_count(len, k, stripe_b) * stripe_b as u64
+}
+
+/// Extract stripe row `k_row` of segment `seg` from `file`, zero-padding
+/// past EOF. Returns exactly `stripe_b` bytes.
+pub fn stripe_row(file: &[u8], seg: u64, k_row: usize, k: usize, stripe_b: usize) -> Vec<u8> {
+    let mut row = vec![0u8; stripe_b];
+    copy_stripe_row(file, seg, k_row, k, stripe_b, &mut row);
+    row
+}
+
+/// Like [`stripe_row`] but writes into a caller-provided buffer
+/// (hot-path variant: no allocation).
+pub fn copy_stripe_row(
+    file: &[u8],
+    seg: u64,
+    k_row: usize,
+    k: usize,
+    stripe_b: usize,
+    out: &mut [u8],
+) {
+    debug_assert_eq!(out.len(), stripe_b);
+    let start = (seg * k as u64 + k_row as u64) * stripe_b as u64;
+    let start = start as usize;
+    if start >= file.len() {
+        out.fill(0);
+        return;
+    }
+    let avail = (file.len() - start).min(stripe_b);
+    out[..avail].copy_from_slice(&file[start..start + avail]);
+    out[avail..].fill(0);
+}
+
+/// Scatter a decoded segment (K rows of stripe_b) back into the file buffer,
+/// clipping at `file.len()` (the tail segment is zero-padded).
+pub fn scatter_segment(rows: &[Vec<u8>], seg: u64, k: usize, stripe_b: usize, file: &mut [u8]) {
+    debug_assert_eq!(rows.len(), k);
+    for (k_row, row) in rows.iter().enumerate() {
+        let start = ((seg * k as u64 + k_row as u64) * stripe_b as u64) as usize;
+        if start >= file.len() {
+            return;
+        }
+        let n = (file.len() - start).min(stripe_b);
+        file[start..start + n].copy_from_slice(&row[..n]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::forall;
+
+    #[test]
+    fn counts() {
+        assert_eq!(segment_count(0, 4, 16), 1);
+        assert_eq!(segment_count(1, 4, 16), 1);
+        assert_eq!(segment_count(64, 4, 16), 1);
+        assert_eq!(segment_count(65, 4, 16), 2);
+        assert_eq!(chunk_payload_len(65, 4, 16), 32);
+    }
+
+    #[test]
+    fn rows_tile_the_file() {
+        let file: Vec<u8> = (0..100u32).map(|i| i as u8).collect();
+        let (k, sb) = (3, 8);
+        let segs = segment_count(file.len() as u64, k, sb);
+        let mut rebuilt = vec![0u8; (segs as usize) * k * sb];
+        for s in 0..segs {
+            for r in 0..k {
+                let row = stripe_row(&file, s, r, k, sb);
+                let off = ((s * k as u64 + r as u64) * sb as u64) as usize;
+                rebuilt[off..off + sb].copy_from_slice(&row);
+            }
+        }
+        assert_eq!(&rebuilt[..file.len()], &file[..]);
+        assert!(rebuilt[file.len()..].iter().all(|&b| b == 0));
+    }
+
+    #[test]
+    fn scatter_inverts_gather() {
+        forall(30, |rng| {
+            let len = 1 + rng.index(5000);
+            let k = 1 + rng.index(6);
+            let sb = 1 + rng.index(64);
+            let file = rng.bytes(len);
+            let segs = segment_count(len as u64, k, sb);
+            let mut out = vec![0u8; len];
+            for s in 0..segs {
+                let rows: Vec<Vec<u8>> =
+                    (0..k).map(|r| stripe_row(&file, s, r, k, sb)).collect();
+                scatter_segment(&rows, s, k, sb, &mut out);
+            }
+            assert_eq!(out, file);
+        });
+    }
+
+    #[test]
+    fn empty_file_single_zero_segment() {
+        let row = stripe_row(&[], 0, 0, 4, 16);
+        assert_eq!(row, vec![0u8; 16]);
+        assert_eq!(segment_count(0, 4, 16), 1);
+    }
+}

@@ -1,0 +1,24 @@
+//! Federated direct IO over encoded data — the paper's §4 future work.
+//!
+//! *"A more useful direction would be to explore the incorporation of
+//! similar technologies into federated data storage protocols, such as
+//! xrootd. In this case, leveraging the existing federation logic would
+//! allow direct IO to encoded data over the network, reducing the
+//! transfer overheads for the sparse reads common in some workflows."*
+//!
+//! [`EcFileReader`] implements exactly that: random-access `read(offset,
+//! len)` against an erasure-coded file **without reconstructing it**.
+//! A byte range maps to a set of (segment, row) cells of the striping
+//! layout; for each needed segment the reader fetches only the data-chunk
+//! stripe rows covering the range — one `(offset, stripe_b)` ranged GET
+//! per chunk per segment, like an xrootd vector read — and falls back to
+//! decoding a full segment (any K surviving rows) only when a needed data
+//! chunk is unavailable. Fetched segments are cached LRU-style so
+//! sequential sparse readers (e.g. a ROOT tree scan) pay each segment
+//! once.
+
+pub mod range;
+pub mod reader;
+
+pub use range::{cells_for_range, Cell};
+pub use reader::{EcFileReader, ReaderStats};

@@ -1,0 +1,108 @@
+//! Byte-range → striping-cell arithmetic.
+//!
+//! File offset `o` lives in segment `o / (k·sb)`, data row
+//! `(o mod k·sb) / sb`, at row offset `o mod sb` (see [`crate::ec::stripe`]
+//! for the layout). A read range therefore touches a contiguous run of
+//! cells in (segment, row) raster order.
+
+/// One stripe cell touched by a range: `sb`-sized unit of chunk `row`'s
+/// payload at segment `seg`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Cell {
+    pub seg: u64,
+    pub row: usize,
+    /// Range within the cell (byte offsets into the sb-wide row).
+    pub start: usize,
+    pub end: usize,
+    /// Where this cell's bytes land in the reader's output buffer.
+    pub out_off: usize,
+}
+
+/// Enumerate the cells covering `[offset, offset + len)` for layout
+/// parameters (k, stripe_b). Cells are returned in file order.
+pub fn cells_for_range(offset: u64, len: usize, k: usize, sb: usize) -> Vec<Cell> {
+    if len == 0 {
+        return Vec::new();
+    }
+    let seg_bytes = (k * sb) as u64;
+    let end = offset + len as u64;
+    let mut cells = Vec::new();
+    let mut pos = offset;
+    while pos < end {
+        let seg = pos / seg_bytes;
+        let in_seg = (pos % seg_bytes) as usize;
+        let row = in_seg / sb;
+        let start = in_seg % sb;
+        let take = (sb - start).min((end - pos) as usize);
+        cells.push(Cell {
+            seg,
+            row,
+            start,
+            end: start + take,
+            out_off: (pos - offset) as usize,
+        });
+        pos += take as u64;
+    }
+    cells
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_cell() {
+        let cells = cells_for_range(5, 10, 4, 16);
+        assert_eq!(
+            cells,
+            vec![Cell { seg: 0, row: 0, start: 5, end: 15, out_off: 0 }]
+        );
+    }
+
+    #[test]
+    fn crosses_rows_and_segments() {
+        // k=2, sb=4 -> segment = 8 bytes. Range [6, 14) crosses row 1 of
+        // seg 0 into rows 0..1 of seg 1.
+        let cells = cells_for_range(6, 8, 2, 4);
+        assert_eq!(
+            cells,
+            vec![
+                Cell { seg: 0, row: 1, start: 2, end: 4, out_off: 0 },
+                Cell { seg: 1, row: 0, start: 0, end: 4, out_off: 2 },
+                Cell { seg: 1, row: 1, start: 0, end: 2, out_off: 6 },
+            ]
+        );
+    }
+
+    #[test]
+    fn empty_range() {
+        assert!(cells_for_range(100, 0, 4, 16).is_empty());
+    }
+
+    #[test]
+    fn cells_tile_the_range() {
+        crate::testkit::forall(100, |rng| {
+            let k = 1 + rng.index(12);
+            let sb = 1 + rng.index(100);
+            let offset = rng.next_u64() % 10_000;
+            let len = rng.index(5_000);
+            let cells = cells_for_range(offset, len, k, sb);
+            // Contiguity: out offsets tile [0, len) exactly.
+            let mut covered = 0usize;
+            for c in &cells {
+                assert_eq!(c.out_off, covered, "gap before {c:?}");
+                assert!(c.end <= sb && c.start < c.end);
+                assert!(c.row < k);
+                covered += c.end - c.start;
+            }
+            assert_eq!(covered, len);
+            // Cell positions match the scalar layout formula.
+            for c in &cells {
+                let file_pos = offset + c.out_off as u64;
+                assert_eq!(c.seg, file_pos / (k * sb) as u64);
+                assert_eq!(c.row, (file_pos % (k * sb) as u64) as usize / sb);
+                assert_eq!(c.start, (file_pos % (k * sb) as u64) as usize % sb);
+            }
+        });
+    }
+}

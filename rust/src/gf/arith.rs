@@ -1,0 +1,320 @@
+//! Scalar and slice arithmetic over GF(2⁸).
+//!
+//! The slice kernels are the pure-rust codec's hot path: `mul_xor_slice`
+//! (dst ^= c·src) is called K times per coding row per stripe. The perf
+//! pass (EXPERIMENTS.md §Perf) iterates on exactly these loops.
+
+use super::tables::TABLES;
+
+/// Field addition = XOR.
+#[inline(always)]
+pub fn add(a: u8, b: u8) -> u8 {
+    a ^ b
+}
+
+/// Field multiplication via the 64 KiB product table.
+#[inline(always)]
+pub fn mul(a: u8, b: u8) -> u8 {
+    TABLES.mul[a as usize][b as usize]
+}
+
+/// Multiplicative inverse; panics on zero (callers guard).
+#[inline(always)]
+pub fn inv(a: u8) -> u8 {
+    assert!(a != 0, "division by zero in GF(2^8)");
+    TABLES.inv[a as usize]
+}
+
+/// Field division a/b.
+#[inline(always)]
+pub fn div(a: u8, b: u8) -> u8 {
+    mul(a, inv(b))
+}
+
+/// a^n by square-and-multiply (n is an ordinary integer exponent).
+pub fn pow(a: u8, mut n: u32) -> u8 {
+    if n == 0 {
+        return 1;
+    }
+    if a == 0 {
+        return 0;
+    }
+    let mut base = a;
+    let mut acc = 1u8;
+    while n > 0 {
+        if n & 1 == 1 {
+            acc = mul(acc, base);
+        }
+        base = mul(base, base);
+        n >>= 1;
+    }
+    acc
+}
+
+/// dst ^= src, byte-wise (the identity-row accumulate).
+#[inline]
+pub fn xor_slice(dst: &mut [u8], src: &[u8]) {
+    assert_eq!(dst.len(), src.len());
+    // 8-byte word XOR: the compiler autovectorizes this cleanly.
+    let n = dst.len() / 8 * 8;
+    for i in (0..n).step_by(8) {
+        let d = u64::from_ne_bytes(dst[i..i + 8].try_into().unwrap());
+        let s = u64::from_ne_bytes(src[i..i + 8].try_into().unwrap());
+        dst[i..i + 8].copy_from_slice(&(d ^ s).to_ne_bytes());
+    }
+    for i in n..dst.len() {
+        dst[i] ^= src[i];
+    }
+}
+
+/// dst = c · src element-wise.
+#[inline]
+pub fn mul_slice(c: u8, src: &[u8], dst: &mut [u8]) {
+    assert_eq!(dst.len(), src.len());
+    match c {
+        0 => dst.fill(0),
+        1 => dst.copy_from_slice(src),
+        _ => {
+            #[cfg(target_arch = "x86_64")]
+            if simd::available() && dst.len() >= 32 {
+                // SAFETY: AVX2 presence checked at runtime.
+                unsafe { simd::mul_slice_avx2(c, src, dst, false) };
+                return;
+            }
+            mul_slice_scalar(c, src, dst);
+        }
+    }
+}
+
+#[inline]
+fn mul_slice_scalar(c: u8, src: &[u8], dst: &mut [u8]) {
+    let row = &TABLES.mul[c as usize];
+    for (d, &s) in dst.iter_mut().zip(src.iter()) {
+        *d = row[s as usize];
+    }
+}
+
+/// dst ^= c · src element-wise — the innermost codec kernel.
+///
+/// Perf pass (EXPERIMENTS.md §Perf): dispatches to an AVX2 PSHUFB kernel
+/// (the ISA-L technique — 4-bit split tables, 32 bytes per shuffle pair)
+/// when the CPU supports it; the scalar path below is the fallback and
+/// the correctness reference.
+#[inline]
+pub fn mul_xor_slice(c: u8, src: &[u8], dst: &mut [u8]) {
+    assert_eq!(dst.len(), src.len());
+    match c {
+        0 => {}
+        1 => xor_slice(dst, src),
+        _ => {
+            #[cfg(target_arch = "x86_64")]
+            if simd::available() && dst.len() >= 32 {
+                // SAFETY: AVX2 presence checked at runtime.
+                unsafe { simd::mul_slice_avx2(c, src, dst, true) };
+                return;
+            }
+            mul_xor_slice_scalar(c, src, dst);
+        }
+    }
+}
+
+#[inline]
+fn mul_xor_slice_scalar(c: u8, src: &[u8], dst: &mut [u8]) {
+    let row = &TABLES.mul[c as usize];
+    // Unroll by 4 to keep one table row hot and give the scheduler
+    // independent loads; `row` is 256 B = 4 cache lines.
+    let n = dst.len() / 4 * 4;
+    let (dh, dt) = dst.split_at_mut(n);
+    let (sh, st) = src.split_at(n);
+    for (d4, s4) in dh.chunks_exact_mut(4).zip(sh.chunks_exact(4)) {
+        d4[0] ^= row[s4[0] as usize];
+        d4[1] ^= row[s4[1] as usize];
+        d4[2] ^= row[s4[2] as usize];
+        d4[3] ^= row[s4[3] as usize];
+    }
+    for (d, &s) in dt.iter_mut().zip(st.iter()) {
+        *d ^= row[s as usize];
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod simd {
+    //! AVX2 GF(2⁸) constant-multiply kernel (ISA-L / PSHUFB technique).
+    //!
+    //! For a fixed constant `c`, `mul(c, x) = LO[c][x & 0xF] ^ HI[c][x >> 4]`
+    //! (linearity of the field over GF(2)); with the two 16-entry tables in
+    //! ymm registers, `_mm256_shuffle_epi8` performs 32 lookups per
+    //! instruction.
+
+    use super::TABLES;
+    use std::arch::x86_64::*;
+
+    pub fn available() -> bool {
+        use std::sync::atomic::{AtomicU8, Ordering};
+        static CACHED: AtomicU8 = AtomicU8::new(2);
+        match CACHED.load(Ordering::Relaxed) {
+            2 => {
+                let ok = std::is_x86_feature_detected!("avx2");
+                CACHED.store(ok as u8, Ordering::Relaxed);
+                ok
+            }
+            v => v == 1,
+        }
+    }
+
+    /// dst = c·src (xor_into = false) or dst ^= c·src (xor_into = true).
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2 is available and `src.len() == dst.len()`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn mul_slice_avx2(c: u8, src: &[u8], dst: &mut [u8], xor_into: bool) {
+        let lo_tbl = &TABLES.mul_lo[c as usize];
+        let hi_tbl = &TABLES.mul_hi[c as usize];
+        // Broadcast each 16-byte table into both 128-bit lanes.
+        let lo = _mm256_broadcastsi128_si256(_mm_loadu_si128(lo_tbl.as_ptr() as *const __m128i));
+        let hi = _mm256_broadcastsi128_si256(_mm_loadu_si128(hi_tbl.as_ptr() as *const __m128i));
+        let mask = _mm256_set1_epi8(0x0F);
+
+        let n = src.len() / 32 * 32;
+        let mut i = 0usize;
+        while i < n {
+            let x = _mm256_loadu_si256(src.as_ptr().add(i) as *const __m256i);
+            let x_lo = _mm256_and_si256(x, mask);
+            let x_hi = _mm256_and_si256(_mm256_srli_epi16(x, 4), mask);
+            let prod = _mm256_xor_si256(
+                _mm256_shuffle_epi8(lo, x_lo),
+                _mm256_shuffle_epi8(hi, x_hi),
+            );
+            let out = if xor_into {
+                let d = _mm256_loadu_si256(dst.as_ptr().add(i) as *const __m256i);
+                _mm256_xor_si256(prod, d)
+            } else {
+                prod
+            };
+            _mm256_storeu_si256(dst.as_mut_ptr().add(i) as *mut __m256i, out);
+            i += 32;
+        }
+        // Scalar tail.
+        let row = &TABLES.mul[c as usize];
+        for j in n..src.len() {
+            let p = row[src[j] as usize];
+            dst[j] = if xor_into { dst[j] ^ p } else { p };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gf::tables::mul_slow;
+    use crate::testkit::forall;
+
+    #[test]
+    fn mul_matches_slow_exhaustive() {
+        for a in 0..=255u8 {
+            for b in 0..=255u8 {
+                assert_eq!(mul(a, b), mul_slow(a, b));
+            }
+        }
+    }
+
+    #[test]
+    fn axioms() {
+        forall(200, |rng| {
+            let (a, b, c) = (rng.byte(), rng.byte(), rng.byte());
+            assert_eq!(mul(a, b), mul(b, a));
+            assert_eq!(mul(a, mul(b, c)), mul(mul(a, b), c));
+            assert_eq!(mul(a, b ^ c), mul(a, b) ^ mul(a, c));
+            assert_eq!(mul(a, 1), a);
+            assert_eq!(mul(a, 0), 0);
+        });
+    }
+
+    #[test]
+    fn div_inverts_mul() {
+        forall(200, |rng| {
+            let a = rng.byte();
+            let b = rng.range_u64(1, 255) as u8;
+            assert_eq!(div(mul(a, b), b), a);
+        });
+    }
+
+    #[test]
+    fn pow_small_cases() {
+        assert_eq!(pow(2, 0), 1);
+        assert_eq!(pow(2, 1), 2);
+        assert_eq!(pow(2, 8), 0x1D); // x^8 = poly - x^8 = 0x1D
+        assert_eq!(pow(0, 5), 0);
+        assert_eq!(pow(0, 0), 1);
+        // Fermat: a^255 = 1 for a != 0
+        for a in 1..=255u8 {
+            assert_eq!(pow(a, 255), 1);
+        }
+    }
+
+    #[test]
+    fn slice_ops_match_scalar() {
+        forall(50, |rng| {
+            let c = rng.byte();
+            let len = 1 + rng.index(300);
+            let src = rng.bytes(len);
+            let mut dst = rng.bytes(len);
+            let orig = dst.clone();
+
+            let mut want_mul = vec![0u8; src.len()];
+            let mut want_mx = orig.clone();
+            for i in 0..src.len() {
+                want_mul[i] = mul(c, src[i]);
+                want_mx[i] ^= mul(c, src[i]);
+            }
+
+            let mut got_mul = vec![0u8; src.len()];
+            mul_slice(c, &src, &mut got_mul);
+            assert_eq!(got_mul, want_mul);
+
+            mul_xor_slice(c, &src, &mut dst);
+            assert_eq!(dst, want_mx);
+        });
+    }
+
+    #[test]
+    fn xor_slice_odd_lengths() {
+        for len in [0usize, 1, 7, 8, 9, 63, 64, 65] {
+            let a0: Vec<u8> = (0..len as u32).map(|i| (i * 7) as u8).collect();
+            let b: Vec<u8> = (0..len as u32).map(|i| (i * 13 + 5) as u8).collect();
+            let mut a = a0.clone();
+            xor_slice(&mut a, &b);
+            for i in 0..len {
+                assert_eq!(a[i], a0[i] ^ b[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn simd_matches_scalar_all_constants() {
+        // Every constant, length straddling the 32-byte SIMD boundary.
+        for c in 0..=255u8 {
+            let src: Vec<u8> = (0..100u32).map(|i| (i * 37 + c as u32) as u8).collect();
+            let mut d1: Vec<u8> = (0..100u32).map(|i| (i * 11) as u8).collect();
+            let mut d2 = d1.clone();
+            mul_xor_slice(c, &src, &mut d1);
+            mul_xor_slice_scalar(c, &src, &mut d2);
+            assert_eq!(d1, d2, "mul_xor c={c}");
+            let mut m1 = vec![0u8; 100];
+            let mut m2 = vec![0u8; 100];
+            mul_slice(c, &src, &mut m1);
+            mul_slice_scalar(c, &src, &mut m2);
+            assert_eq!(m1, m2, "mul c={c}");
+        }
+    }
+
+    #[test]
+    fn mul_xor_slice_c0_is_noop_c1_is_xor() {
+        let src = vec![7u8; 33];
+        let mut dst = vec![1u8; 33];
+        mul_xor_slice(0, &src, &mut dst);
+        assert!(dst.iter().all(|&b| b == 1));
+        mul_xor_slice(1, &src, &mut dst);
+        assert!(dst.iter().all(|&b| b == 6));
+    }
+}

@@ -1,0 +1,356 @@
+//! Dense matrices over GF(2⁸): the decode-matrix machinery.
+//!
+//! Mirrors `python/compile/model.py` (`decode_matrix`, `_gf_invert`) and
+//! `ref.py` (`cauchy_matrix`, `vandermonde_matrix`) exactly; the artifacts
+//! bake the python Cauchy rows, so the rust side MUST generate identical
+//! bytes — `rust/tests/python_parity.rs` guards this.
+
+use super::arith::{inv, mul, mul_xor_slice};
+use crate::{Error, Result};
+
+/// A row-major byte matrix over GF(2⁸).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct GfMatrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<u8>,
+}
+
+impl GfMatrix {
+    pub fn zero(rows: usize, cols: usize) -> Self {
+        GfMatrix { rows, cols, data: vec![0; rows * cols] }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Self::zero(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: Vec<Vec<u8>>) -> Result<Self> {
+        let r = rows.len();
+        let c = rows.first().map_or(0, |x| x.len());
+        if rows.iter().any(|x| x.len() != c) {
+            return Err(Error::Ec("ragged matrix rows".into()));
+        }
+        Ok(GfMatrix { rows: r, cols: c, data: rows.into_iter().flatten().collect() })
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> u8 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: u8) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    pub fn row(&self, r: usize) -> &[u8] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.data
+    }
+
+    /// The Cauchy coding block `C[i,j] = 1/((k+i) ^ j)`, shape (m, k).
+    ///
+    /// Any square submatrix of a Cauchy matrix is invertible, which gives
+    /// the systematic generator `[I_k ; C]` the any-K-of-(K+M) property.
+    /// Identical construction to python `ref.cauchy_matrix(m, k)`.
+    pub fn cauchy(m: usize, k: usize) -> Result<Self> {
+        if k + m > 256 {
+            return Err(Error::Ec(format!(
+                "cauchy: k+m = {} exceeds field size 256",
+                k + m
+            )));
+        }
+        let mut out = Self::zero(m, k);
+        for i in 0..m {
+            for j in 0..k {
+                out.set(i, j, inv(((k + i) ^ j) as u8));
+            }
+        }
+        Ok(out)
+    }
+
+    /// Vandermonde `V[i,j] = i^j`, shape (rows, cols) — zfec's classical
+    /// construction, kept for the ablation bench.
+    pub fn vandermonde(rows: usize, cols: usize) -> Self {
+        let mut out = Self::zero(rows, cols);
+        for i in 0..rows {
+            let mut acc: u8 = 1;
+            for j in 0..cols {
+                out.set(i, j, acc);
+                acc = mul(acc, i as u8);
+            }
+        }
+        out
+    }
+
+    /// The full systematic generator `[I_k ; C(m,k)]`, shape (k+m, k).
+    pub fn systematic_generator(k: usize, m: usize) -> Result<Self> {
+        let mut gen = Self::zero(k + m, k);
+        for i in 0..k {
+            gen.set(i, i, 1);
+        }
+        let c = Self::cauchy(m, k)?;
+        for i in 0..m {
+            for j in 0..k {
+                gen.set(k + i, j, c.get(i, j));
+            }
+        }
+        Ok(gen)
+    }
+
+    /// Select a subset of rows (used to build the survivor sub-matrix).
+    pub fn select_rows(&self, idx: &[usize]) -> Result<Self> {
+        let mut out = Self::zero(idx.len(), self.cols);
+        for (r, &i) in idx.iter().enumerate() {
+            if i >= self.rows {
+                return Err(Error::Ec(format!("row index {i} out of range")));
+            }
+            let (dst_off, src_off) = (r * self.cols, i * self.cols);
+            out.data[dst_off..dst_off + self.cols]
+                .copy_from_slice(&self.data[src_off..src_off + self.cols]);
+        }
+        Ok(out)
+    }
+
+    /// Matrix product over the field.
+    pub fn matmul(&self, other: &GfMatrix) -> Result<GfMatrix> {
+        if self.cols != other.rows {
+            return Err(Error::Ec(format!(
+                "matmul shape mismatch: ({},{}) x ({},{})",
+                self.rows, self.cols, other.rows, other.cols
+            )));
+        }
+        let mut out = Self::zero(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let c = self.get(i, k);
+                if c != 0 {
+                    let src = &other.data[k * other.cols..(k + 1) * other.cols];
+                    let dst = &mut out.data[i * other.cols..(i + 1) * other.cols];
+                    mul_xor_slice(c, src, dst);
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Gauss–Jordan inversion; errors on singular input.
+    pub fn invert(&self) -> Result<GfMatrix> {
+        if self.rows != self.cols {
+            return Err(Error::Ec("invert: matrix not square".into()));
+        }
+        let n = self.rows;
+        let mut a = self.clone();
+        let mut b = Self::identity(n);
+        for col in 0..n {
+            // Find pivot.
+            let piv = (col..n).find(|&r| a.get(r, col) != 0).ok_or_else(|| {
+                Error::Ec("singular survivor matrix (not K-of-N decodable)".into())
+            })?;
+            if piv != col {
+                a.swap_rows(piv, col);
+                b.swap_rows(piv, col);
+            }
+            // Normalize pivot row.
+            let p = inv(a.get(col, col));
+            a.scale_row(col, p);
+            b.scale_row(col, p);
+            // Eliminate the column everywhere else.
+            for r in 0..n {
+                if r != col {
+                    let f = a.get(r, col);
+                    if f != 0 {
+                        a.row_mul_xor(r, col, f);
+                        b.row_mul_xor(r, col, f);
+                    }
+                }
+            }
+        }
+        Ok(b)
+    }
+
+    /// Rank via Gaussian elimination (used by placement/durability checks).
+    pub fn rank(&self) -> usize {
+        let mut a = self.clone();
+        let mut rank = 0;
+        for col in 0..a.cols {
+            if rank >= a.rows {
+                break;
+            }
+            if let Some(piv) = (rank..a.rows).find(|&r| a.get(r, col) != 0) {
+                a.swap_rows(piv, rank);
+                let p = inv(a.get(rank, col));
+                a.scale_row(rank, p);
+                for r in 0..a.rows {
+                    if r != rank {
+                        let f = a.get(r, col);
+                        if f != 0 {
+                            a.row_mul_xor(r, rank, f);
+                        }
+                    }
+                }
+                rank += 1;
+            }
+        }
+        rank
+    }
+
+    fn swap_rows(&mut self, r1: usize, r2: usize) {
+        if r1 == r2 {
+            return;
+        }
+        for c in 0..self.cols {
+            self.data.swap(r1 * self.cols + c, r2 * self.cols + c);
+        }
+    }
+
+    fn scale_row(&mut self, r: usize, f: u8) {
+        for c in 0..self.cols {
+            let v = self.get(r, c);
+            self.set(r, c, mul(v, f));
+        }
+    }
+
+    /// row[r] ^= f * row[src]
+    fn row_mul_xor(&mut self, r: usize, src: usize, f: u8) {
+        let cols = self.cols;
+        // Split borrow: copy the source row (rows are tiny, <= 32 bytes).
+        let src_row: Vec<u8> = self.row(src).to_vec();
+        let dst = &mut self.data[r * cols..(r + 1) * cols];
+        mul_xor_slice(f, &src_row, dst);
+    }
+}
+
+impl std::fmt::Display for GfMatrix {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                write!(f, "{:02x} ", self.get(r, c))?;
+            }
+            writeln!(f)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::forall;
+
+    #[test]
+    fn identity_is_neutral() {
+        let i4 = GfMatrix::identity(4);
+        let m = GfMatrix::vandermonde(4, 4);
+        assert_eq!(i4.matmul(&m).unwrap(), m);
+        assert_eq!(m.matmul(&GfMatrix::identity(4)).unwrap(), m);
+    }
+
+    #[test]
+    fn cauchy_matches_python_vector() {
+        // First row of cauchy(5, 10): inv(10^j) for j in 0..10, from ref.py.
+        let c = GfMatrix::cauchy(5, 10).unwrap();
+        let want: Vec<u8> = (0..10u8)
+            .map(|j| crate::gf::arith::inv(10 ^ j))
+            .collect();
+        assert_eq!(c.row(0), &want[..]);
+        assert!(c.as_bytes().iter().all(|&v| v != 0));
+    }
+
+    #[test]
+    fn cauchy_rejects_oversize() {
+        assert!(GfMatrix::cauchy(200, 100).is_err());
+    }
+
+    #[test]
+    fn invert_roundtrip_random() {
+        forall(60, |rng| {
+            let n = 1 + rng.index(8);
+            let mut m = GfMatrix::zero(n, n);
+            for r in 0..n {
+                for c in 0..n {
+                    m.set(r, c, rng.byte());
+                }
+            }
+            match m.invert() {
+                Ok(inv) => {
+                    let prod = m.matmul(&inv).unwrap();
+                    assert_eq!(prod, GfMatrix::identity(n));
+                    let prod2 = inv.matmul(&m).unwrap();
+                    assert_eq!(prod2, GfMatrix::identity(n));
+                }
+                Err(_) => assert!(m.rank() < n, "invert failed on full-rank matrix"),
+            }
+        });
+    }
+
+    #[test]
+    fn singular_detected() {
+        let m = GfMatrix::from_rows(vec![vec![1, 2], vec![1, 2]]).unwrap();
+        assert!(m.invert().is_err());
+        assert_eq!(m.rank(), 1);
+    }
+
+    #[test]
+    fn any_k_rows_of_generator_invertible_4_2() {
+        let gen = GfMatrix::systematic_generator(4, 2).unwrap();
+        // all C(6,4)=15 subsets
+        let n = 6;
+        for a in 0..n {
+            for b in a + 1..n {
+                for c in b + 1..n {
+                    for d in c + 1..n {
+                        let sub = gen.select_rows(&[a, b, c, d]).unwrap();
+                        assert!(sub.invert().is_ok(), "subset {:?}", (a, b, c, d));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn generator_top_is_identity() {
+        let gen = GfMatrix::systematic_generator(10, 5).unwrap();
+        for i in 0..10 {
+            for j in 0..10 {
+                assert_eq!(gen.get(i, j), u8::from(i == j));
+            }
+        }
+        assert_eq!(gen.rows(), 15);
+    }
+
+    #[test]
+    fn vandermonde_known_rows() {
+        let v = GfMatrix::vandermonde(4, 3);
+        assert_eq!(v.row(0), &[1, 0, 0]);
+        assert_eq!(v.row(1), &[1, 1, 1]);
+        assert_eq!(v.row(2), &[1, 2, 4]);
+    }
+
+    #[test]
+    fn rank_of_tall_generator_is_k() {
+        let gen = GfMatrix::systematic_generator(8, 2).unwrap();
+        assert_eq!(gen.rank(), 8);
+    }
+
+    #[test]
+    fn ragged_rows_rejected() {
+        assert!(GfMatrix::from_rows(vec![vec![1, 2], vec![3]]).is_err());
+    }
+}

@@ -1,0 +1,22 @@
+//! GF(2⁸) arithmetic over the storage-standard polynomial `0x11D`.
+//!
+//! This mirrors the python build-path field (`python/compile/kernels/ref.py`)
+//! bit-for-bit: the log/exp tables, the Cauchy/Vandermonde constructions and
+//! the Gauss–Jordan inversion all produce identical bytes on both sides —
+//! cross-checked by `rust/tests/python_parity.rs` against vectors exported
+//! at artifact-build time.
+//!
+//! Layout:
+//! * [`tables`] — lazily built log/exp/mul lookup tables.
+//! * [`arith`] — scalar ops and the slice kernels (`mul_slice`,
+//!   `mul_xor_slice`) that form the pure-rust codec hot path.
+//! * [`matrix`] — dense byte matrices: multiply, invert, rank,
+//!   Cauchy/Vandermonde generators.
+
+pub mod arith;
+pub mod matrix;
+pub mod tables;
+
+pub use arith::{add, div, inv, mul, mul_slice, mul_xor_slice, pow, xor_slice};
+pub use matrix::GfMatrix;
+pub use tables::GF_POLY;

@@ -1,0 +1,161 @@
+//! Lookup tables for GF(2⁸)/0x11D, built once at first use.
+//!
+//! Three table families serve three speed tiers:
+//! * `LOG`/`EXP` — the classical log/exp pair (512-entry doubled exp, same
+//!   zero-sink convention as the pallas kernel: `LOG[0] = 511`,
+//!   `EXP[510..512] = 0`).
+//! * `MUL` — the full 64 KiB product table `MUL[a][b]`; fastest for scalar
+//!   and row-constant inner loops (one load, no adds).
+//! * `MUL_LO`/`MUL_HI` — 4-bit split tables (ISA-L style): for a fixed
+//!   constant `c`, `mul(c, x) = MUL_LO[c][x & 0xF] ^ MUL_HI[c][x >> 4]`.
+//!   These are what a SIMD PSHUFB kernel would use; the scalar rust hot
+//!   path uses them via 8-byte unrolling (see `arith::mul_xor_slice`).
+
+use once_cell::sync::Lazy;
+
+/// The field polynomial: x⁸ + x⁴ + x³ + x² + 1 (0x11D), the same field as
+/// zfec, jerasure's default, ISA-L and par2.
+pub const GF_POLY: u16 = 0x11D;
+
+/// Bit-by-bit carry-less multiply + reduce; the table-free ground truth.
+pub const fn mul_slow(a: u8, mut b: u8) -> u8 {
+    let mut acc: u8 = 0;
+    let mut aa = a as u16;
+    while b != 0 {
+        if b & 1 != 0 {
+            acc ^= aa as u8;
+        }
+        b >>= 1;
+        aa <<= 1;
+        if aa & 0x100 != 0 {
+            aa ^= GF_POLY;
+        }
+    }
+    acc
+}
+
+pub struct Tables {
+    /// log[v] for v in 1..=255; log[0] = 511 (zero sink).
+    pub log: [u16; 256],
+    /// exp doubled to 512 entries; exp[510] = exp[511] = 0.
+    pub exp: [u8; 512],
+    /// Full product table, 64 KiB: mul[a][b].
+    pub mul: Box<[[u8; 256]; 256]>,
+    /// Split tables: mul_lo[c][n] = mul(c, n), mul_hi[c][n] = mul(c, n<<4).
+    pub mul_lo: Box<[[u8; 16]; 256]>,
+    pub mul_hi: Box<[[u8; 16]; 256]>,
+    /// inv[v] for v in 1..=255; inv[0] = 0 (never consulted for zero).
+    pub inv: [u8; 256],
+}
+
+pub static TABLES: Lazy<Tables> = Lazy::new(|| {
+    let mut log = [0u16; 256];
+    let mut exp = [0u8; 512];
+    let mut x: u16 = 1;
+    for i in 0..255 {
+        exp[i] = x as u8;
+        log[x as usize] = i as u16;
+        x <<= 1;
+        if x & 0x100 != 0 {
+            x ^= GF_POLY;
+        }
+    }
+    for i in 255..510 {
+        exp[i] = exp[i - 255];
+    }
+    exp[510] = 0;
+    exp[511] = 0;
+    log[0] = 511;
+
+    let mut mul = Box::new([[0u8; 256]; 256]);
+    for a in 0..256usize {
+        for b in a..256usize {
+            let p = if a == 0 || b == 0 {
+                0
+            } else {
+                exp[(log[a] + log[b]) as usize]
+            };
+            mul[a][b] = p;
+            mul[b][a] = p;
+        }
+    }
+
+    let mut mul_lo = Box::new([[0u8; 16]; 256]);
+    let mut mul_hi = Box::new([[0u8; 16]; 256]);
+    for c in 0..256usize {
+        for n in 0..16usize {
+            mul_lo[c][n] = mul[c][n];
+            mul_hi[c][n] = mul[c][n << 4];
+        }
+    }
+
+    let mut inv = [0u8; 256];
+    for v in 1..256usize {
+        inv[v] = exp[(255 - log[v]) as usize % 255];
+    }
+
+    Tables { log, exp, mul, mul_lo, mul_hi, inv }
+});
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_exp_roundtrip() {
+        let t = &*TABLES;
+        for v in 1..=255u16 {
+            assert_eq!(t.exp[t.log[v as usize] as usize], v as u8);
+        }
+    }
+
+    #[test]
+    fn zero_sink_convention_matches_python() {
+        let t = &*TABLES;
+        assert_eq!(t.log[0], 511);
+        assert_eq!(t.exp[510], 0);
+        assert_eq!(t.exp[511], 0);
+    }
+
+    #[test]
+    fn mul_table_matches_slow() {
+        let t = &*TABLES;
+        // Full 64k cross-check is cheap enough to run exhaustively.
+        for a in 0..256usize {
+            for b in 0..256usize {
+                assert_eq!(t.mul[a][b], mul_slow(a as u8, b as u8));
+            }
+        }
+    }
+
+    #[test]
+    fn split_tables_compose() {
+        let t = &*TABLES;
+        for c in [0usize, 1, 2, 0x1D, 255] {
+            for x in 0..256usize {
+                let split = t.mul_lo[c][x & 0xF] ^ t.mul_hi[c][x >> 4];
+                assert_eq!(split, t.mul[c][x], "c={c} x={x}");
+            }
+        }
+    }
+
+    #[test]
+    fn inverse_table() {
+        let t = &*TABLES;
+        for v in 1..256usize {
+            assert_eq!(t.mul[v][t.inv[v] as usize], 1, "v={v}");
+        }
+    }
+
+    #[test]
+    fn generator_period_is_255() {
+        // 2 generates the multiplicative group for 0x11D.
+        let t = &*TABLES;
+        let mut seen = [false; 256];
+        for i in 0..255 {
+            seen[t.exp[i] as usize] = true;
+        }
+        assert_eq!(seen.iter().filter(|&&s| s).count(), 255);
+        assert!(!seen[0]);
+    }
+}

@@ -1,0 +1,104 @@
+//! # DRS — Distributed Resilient Storage
+//!
+//! A production-grade reproduction of *"Extending DIRAC File Management
+//! with Erasure-Coding for efficient storage"* (Skipsey et al., CHEP2015,
+//! J. Phys.: Conf. Ser. 664 042051).
+//!
+//! The crate implements the paper's erasure-coding shim over a DIRAC-style
+//! file catalogue, plus every substrate it depends on:
+//!
+//! * [`gf`] — GF(2⁸) arithmetic and matrix algebra (the zfec field, poly
+//!   `0x11D`).
+//! * [`ec`] — the Reed–Solomon codec: striping, systematic Cauchy code,
+//!   zfec-style chunk container, pluggable compute backends (pure rust or
+//!   the AOT-compiled Pallas/XLA kernel via [`runtime`]).
+//! * [`catalog`] — the DIRAC File Catalogue (DFC) substrate: hierarchical
+//!   namespace, replica catalog, key-value metadata (with the paper's
+//!   `SPLIT`/`TOTAL` convention and §4 prefix hygiene).
+//! * [`se`] — Storage Elements: a trait with local-directory and
+//!   simulated-network backends, availability/failure injection, registry.
+//! * [`placement`] — chunk→SE placement policies (round-robin per the
+//!   paper, plus random / weighted / region-aware).
+//! * [`transfer`] — the §2.4 work-pool: bounded worker threads, retries,
+//!   early termination once K chunks have arrived.
+//! * [`dfm`] — the paper's contribution: the EC file-management shim
+//!   (`put`/`get`/`repair`) and the whole-file replication baseline.
+//! * [`sim`] — deterministic discrete-event simulator calibrated to the
+//!   paper's Table 1 (setup latency + shared uplink), used by the
+//!   figure-regeneration benches; Monte-Carlo durability analysis.
+//! * [`runtime`] — PJRT loader for the `artifacts/*.hlo.txt` produced by
+//!   the python build path (L1 pallas kernel + L2 jax graph).
+//!
+//! Python never runs at request time: `make artifacts` lowers the jax/pallas
+//! compute graph to HLO text once, and the rust binary loads it via PJRT.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use drs::prelude::*;
+//!
+//! let cluster = TestCluster::builder()
+//!     .ses(5)
+//!     .ec(EcParams::new(4, 2).unwrap())
+//!     .build()
+//!     .unwrap();
+//! let data = vec![42u8; 1 << 20];
+//! cluster.shim().put_bytes("/vo/user/demo.bin", &data, &PutOptions::default()).unwrap();
+//! let back = cluster.shim().get_bytes("/vo/user/demo.bin", &GetOptions::default()).unwrap();
+//! assert_eq!(back, data);
+//! ```
+
+pub mod catalog;
+pub mod cli;
+pub mod config;
+pub mod dfm;
+pub mod ec;
+pub mod federation;
+pub mod gf;
+pub mod metrics;
+pub mod placement;
+pub mod runtime;
+pub mod se;
+pub mod sim;
+pub mod testkit;
+pub mod transfer;
+pub mod util;
+
+/// Convenient re-exports for downstream users and the examples.
+pub mod prelude {
+    pub use crate::catalog::{Dfc, MetaValue};
+    pub use crate::config::Config;
+    pub use crate::dfm::{
+        EcShim, GetOptions, PutOptions, ReplicationManager, TestCluster,
+    };
+    pub use crate::ec::{Codec, EcParams, PureRustBackend};
+    pub use crate::placement::{PlacementPolicy, RoundRobin};
+    pub use crate::se::{NetworkProfile, SeRegistry, StorageElement};
+    pub use crate::sim::durability;
+    pub use crate::transfer::PoolConfig;
+}
+
+/// Crate-wide error type.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    #[error("erasure-coding error: {0}")]
+    Ec(String),
+    #[error("catalog error: {0}")]
+    Catalog(String),
+    #[error("storage element `{se}` error: {msg}")]
+    Se { se: String, msg: String },
+    #[error("transfer failed: {0}")]
+    Transfer(String),
+    #[error("not enough chunks: have {have}, need {need}")]
+    NotEnoughChunks { have: usize, need: usize },
+    #[error("integrity check failed for {path}: {detail}")]
+    Integrity { path: String, detail: String },
+    #[error("runtime error: {0}")]
+    Runtime(String),
+    #[error("config error: {0}")]
+    Config(String),
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

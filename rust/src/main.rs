@@ -1,0 +1,8 @@
+//! `drs` — the L3 coordinator binary.
+//!
+//! See `drs help` for usage; DESIGN.md for the architecture.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(drs::cli::run(argv));
+}

@@ -1,0 +1,218 @@
+//! Lightweight metrics: counters, gauges and timing histograms.
+//!
+//! The shim and benches record transfer/encode timings here; reports are
+//! plain text (EXPERIMENTS.md quality, no external sinks).
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// A fixed-boundary histogram of seconds.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    sum: f64,
+    total: u64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        // 1 ms .. ~17 min in half-decades.
+        let bounds: Vec<f64> = (-3..=3)
+            .flat_map(|e| {
+                [10f64.powi(e), 10f64.powi(e) * 3.162_277_660_168_379_5]
+            })
+            .collect();
+        Histogram {
+            counts: vec![0; bounds.len() + 1],
+            bounds,
+            sum: 0.0,
+            total: 0,
+            min: f64::INFINITY,
+            max: 0.0,
+        }
+    }
+}
+
+impl Histogram {
+    pub fn record(&mut self, seconds: f64) {
+        let idx = self
+            .bounds
+            .iter()
+            .position(|&b| seconds <= b)
+            .unwrap_or(self.bounds.len());
+        self.counts[idx] += 1;
+        self.sum += seconds;
+        self.total += 1;
+        self.min = self.min.min(seconds);
+        self.max = self.max.max(seconds);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum / self.total as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Approximate quantile from bucket midpoints.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.total as f64).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                let hi = self.bounds.get(i).copied().unwrap_or(self.max);
+                let lo = if i == 0 { 0.0 } else { self.bounds[i - 1] };
+                return (lo + hi) / 2.0;
+            }
+        }
+        self.max
+    }
+}
+
+/// Process-wide metrics registry.
+#[derive(Default)]
+pub struct Metrics {
+    counters: Mutex<BTreeMap<String, u64>>,
+    gauges: Mutex<BTreeMap<String, f64>>,
+    timers: Mutex<BTreeMap<String, Histogram>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc(&self, name: &str) {
+        self.add(name, 1);
+    }
+
+    pub fn add(&self, name: &str, by: u64) {
+        *self.counters.lock().unwrap().entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn gauge(&self, name: &str, value: f64) {
+        self.gauges.lock().unwrap().insert(name.to_string(), value);
+    }
+
+    pub fn time(&self, name: &str, seconds: f64) {
+        self.timers
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .record(seconds);
+    }
+
+    /// Time a closure and record under `name`.
+    pub fn timed<T>(&self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.time(name, t0.elapsed().as_secs_f64());
+        out
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.lock().unwrap().get(name).copied().unwrap_or(0)
+    }
+
+    /// Plain-text report, sorted by name.
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in self.counters.lock().unwrap().iter() {
+            out.push_str(&format!("counter {k} = {v}\n"));
+        }
+        for (k, v) in self.gauges.lock().unwrap().iter() {
+            out.push_str(&format!("gauge   {k} = {v:.6}\n"));
+        }
+        for (k, h) in self.timers.lock().unwrap().iter() {
+            out.push_str(&format!(
+                "timer   {k}: n={} mean={:.4}s p50={:.4}s p95={:.4}s min={:.4}s max={:.4}s\n",
+                h.count(),
+                h.mean(),
+                h.quantile(0.5),
+                h.quantile(0.95),
+                h.min(),
+                h.max()
+            ));
+        }
+        out
+    }
+}
+
+/// The process-global registry used by the shim/CLI.
+pub fn global() -> &'static Metrics {
+    static GLOBAL: once_cell::sync::Lazy<Metrics> = once_cell::sync::Lazy::new(Metrics::new);
+    &GLOBAL
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges() {
+        let m = Metrics::new();
+        m.inc("puts");
+        m.add("puts", 2);
+        m.gauge("availability", 0.9);
+        assert_eq!(m.counter("puts"), 3);
+        assert_eq!(m.counter("missing"), 0);
+        let r = m.report();
+        assert!(r.contains("counter puts = 3"));
+        assert!(r.contains("gauge   availability = 0.9"));
+    }
+
+    #[test]
+    fn histogram_stats() {
+        let mut h = Histogram::default();
+        for v in [0.01, 0.02, 0.03, 0.04, 10.0] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert!((h.mean() - 2.02).abs() < 1e-9);
+        assert!(h.min() <= 0.01 && h.max() >= 10.0);
+        assert!(h.quantile(0.5) < 1.0);
+        assert!(h.quantile(1.0) >= 3.0);
+    }
+
+    #[test]
+    fn timed_records() {
+        let m = Metrics::new();
+        let v = m.timed("op", || 42);
+        assert_eq!(v, 42);
+        assert!(m.report().contains("timer   op: n=1"));
+    }
+
+    #[test]
+    fn empty_histogram_safe() {
+        let h = Histogram::default();
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.min(), 0.0);
+    }
+}

@@ -1,0 +1,21 @@
+//! Chunk → SE placement policies.
+//!
+//! The paper's proof-of-concept uses round-robin over the VO's SE vector
+//! (`chunk n → SE n mod s`) and §2.3 discusses its weaknesses: early SEs
+//! accumulate more chunks unless `n_chunks % s == 0`, and geography is
+//! ignored ("a mature placement algorithm would be best targeted at
+//! distribution preferentially across SEs in a geographical region").
+//! All four policies below are exercised by the ablation bench:
+//!
+//! * [`RoundRobin`] — the paper's policy, verbatim.
+//! * [`Random`] — seeded uniform choice (breaks the early-SE bias across
+//!   files, not within one).
+//! * [`Weighted`] — least-loaded first (free-capacity balancing).
+//! * [`RegionAware`] — the paper's §2.3 future-work policy: prefer SEs in
+//!   the client's region, fall back round-robin across the rest.
+
+pub mod analysis;
+pub mod policies;
+
+pub use analysis::{assignment_counts, cumulative_skew, imbalance};
+pub use policies::{PlacementPolicy, Random, RegionAware, RoundRobin, Weighted};

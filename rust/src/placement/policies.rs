@@ -1,0 +1,252 @@
+//! The placement policy trait and its four implementations.
+
+use crate::se::SeInfo;
+use crate::util::prng::Rng;
+use crate::{Error, Result};
+
+/// A placement decision: for each of `n_chunks` chunks, the index into the
+/// SE vector that should receive it.
+pub trait PlacementPolicy: Send + Sync {
+    /// Assign `n_chunks` chunks over `ses` (the VO's SE vector, in its
+    /// stable catalog order). Implementations must return exactly
+    /// `n_chunks` indices, each `< ses.len()`.
+    fn place(&self, n_chunks: usize, ses: &[SeInfo]) -> Result<Vec<usize>>;
+
+    fn name(&self) -> &'static str;
+
+    /// Pick a *replacement* SE for a failed transfer of chunk `chunk_idx`,
+    /// avoiding SEs already tried. Default: next untried index in vector
+    /// order (the paper's "trying the next SE in the list"). `None` when
+    /// every SE has been tried.
+    fn fallback(&self, chunk_idx: usize, ses: &[SeInfo], tried: &[usize]) -> Option<usize> {
+        let _ = chunk_idx;
+        (0..ses.len()).find(|i| !tried.contains(i) && ses[*i].available)
+    }
+}
+
+fn ensure_nonempty(ses: &[SeInfo]) -> Result<()> {
+    if ses.is_empty() {
+        Err(Error::Ec("placement: no SEs support this VO".into()))
+    } else {
+        Ok(())
+    }
+}
+
+/// The paper's policy: `chunk n → SE (n mod s)`.
+#[derive(Default, Clone, Copy, Debug)]
+pub struct RoundRobin;
+
+impl PlacementPolicy for RoundRobin {
+    fn place(&self, n_chunks: usize, ses: &[SeInfo]) -> Result<Vec<usize>> {
+        ensure_nonempty(ses)?;
+        Ok((0..n_chunks).map(|n| n % ses.len()).collect())
+    }
+
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+}
+
+/// Seeded uniform random placement. Each call draws a fresh assignment
+/// (an internal nonce advances the stream) but the overall sequence is
+/// reproducible from `seed`.
+pub struct Random {
+    pub seed: u64,
+    nonce: std::sync::atomic::AtomicU64,
+}
+
+impl Random {
+    pub fn new(seed: u64) -> Self {
+        Random { seed, nonce: std::sync::atomic::AtomicU64::new(0) }
+    }
+}
+
+impl PlacementPolicy for Random {
+    fn place(&self, n_chunks: usize, ses: &[SeInfo]) -> Result<Vec<usize>> {
+        ensure_nonempty(ses)?;
+        let n = self.nonce.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let mut rng = Rng::new(self.seed ^ n.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        Ok((0..n_chunks).map(|_| rng.index(ses.len())).collect())
+    }
+
+    fn name(&self) -> &'static str {
+        "random"
+    }
+}
+
+/// Least-loaded placement: each chunk goes to the SE with the least
+/// (actual + pending-from-this-placement) bytes. Uses chunk count as the
+/// in-flight proxy since chunks are identically sized.
+#[derive(Default, Clone, Copy, Debug)]
+pub struct Weighted;
+
+impl PlacementPolicy for Weighted {
+    fn place(&self, n_chunks: usize, ses: &[SeInfo]) -> Result<Vec<usize>> {
+        ensure_nonempty(ses)?;
+        // Minimize (chunks pending from this placement, existing bytes,
+        // vector index): chunks are identically sized, so pending count is
+        // the first-order load; stored bytes break ties; the index makes
+        // the result deterministic.
+        let mut pending = vec![0usize; ses.len()];
+        let mut out = Vec::with_capacity(n_chunks);
+        for _ in 0..n_chunks {
+            let best = (0..ses.len())
+                .min_by_key(|&i| (pending[i], ses[i].used_bytes, i))
+                .unwrap();
+            out.push(best);
+            pending[best] += 1;
+        }
+        Ok(out)
+    }
+
+    fn name(&self) -> &'static str {
+        "weighted"
+    }
+}
+
+/// The §2.3 future-work policy: round-robin restricted to SEs in the
+/// client's region when enough exist; otherwise pad with out-of-region SEs
+/// (still in vector order).
+pub struct RegionAware {
+    pub client_region: String,
+    /// Minimum distinct SEs wanted before padding out-of-region (defaults
+    /// to "all chunks on distinct SEs when possible" if set to n_chunks).
+    pub min_ses: usize,
+}
+
+impl PlacementPolicy for RegionAware {
+    fn place(&self, n_chunks: usize, ses: &[SeInfo]) -> Result<Vec<usize>> {
+        ensure_nonempty(ses)?;
+        let mut order: Vec<usize> = (0..ses.len())
+            .filter(|&i| ses[i].region == self.client_region)
+            .collect();
+        if order.len() < self.min_ses.min(ses.len()) {
+            order.extend((0..ses.len()).filter(|&i| ses[i].region != self.client_region));
+            order.truncate(self.min_ses.max(1).min(ses.len()));
+        }
+        if order.is_empty() {
+            order = (0..ses.len()).collect();
+        }
+        Ok((0..n_chunks).map(|n| order[n % order.len()]).collect())
+    }
+
+    fn name(&self) -> &'static str {
+        "region-aware"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::forall;
+
+    fn ses(n: usize) -> Vec<SeInfo> {
+        (0..n)
+            .map(|i| SeInfo {
+                name: format!("SE-{i}"),
+                region: if i < 2 { "uk".into() } else { "eu".into() },
+                available: true,
+                used_bytes: (i as u64) * 1000,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn round_robin_matches_paper_fig1() {
+        // Fig 1: 8+2 = 10 chunks over 3 SEs (A..C):
+        // A gets chunks 0,3,6,9; B gets 1,4,7; C gets 2,5,8.
+        let p = RoundRobin.place(10, &ses(3)).unwrap();
+        assert_eq!(p, vec![0, 1, 2, 0, 1, 2, 0, 1, 2, 0]);
+    }
+
+    #[test]
+    fn round_robin_uniform_when_divisible() {
+        let p = RoundRobin.place(15, &ses(5)).unwrap();
+        let counts = crate::placement::assignment_counts(&p, 5);
+        assert!(counts.iter().all(|&c| c == 3));
+    }
+
+    #[test]
+    fn policies_return_valid_assignments() {
+        let policies: Vec<Box<dyn PlacementPolicy>> = vec![
+            Box::new(RoundRobin),
+            Box::new(Random::new(7)),
+            Box::new(Weighted),
+            Box::new(RegionAware { client_region: "uk".into(), min_ses: 3 }),
+        ];
+        forall(30, |rng| {
+            let s = 1 + rng.index(8);
+            let n = rng.index(30);
+            let v = ses(s);
+            for p in &policies {
+                let a = p.place(n, &v).unwrap();
+                assert_eq!(a.len(), n, "{}", p.name());
+                assert!(a.iter().all(|&i| i < s), "{}", p.name());
+            }
+        });
+    }
+
+    #[test]
+    fn empty_vector_rejected() {
+        assert!(RoundRobin.place(10, &[]).is_err());
+    }
+
+    #[test]
+    fn weighted_prefers_empty_ses() {
+        let v = ses(4); // used = 0,1000,2000,3000
+        let a = Weighted.place(4, &v).unwrap();
+        // First chunk must land on the emptiest SE.
+        assert_eq!(a[0], 0);
+        // All 4 chunks spread across all 4 SEs (pending-load term).
+        let counts = crate::placement::assignment_counts(&a, 4);
+        assert!(counts.iter().all(|&c| c == 1), "{a:?}");
+    }
+
+    #[test]
+    fn region_aware_prefers_home_region() {
+        let v = ses(5); // SE-0, SE-1 in uk
+        let p = RegionAware { client_region: "uk".into(), min_ses: 2 };
+        let a = p.place(10, &v).unwrap();
+        assert!(a.iter().all(|&i| i < 2), "{a:?}");
+    }
+
+    #[test]
+    fn region_aware_pads_when_region_too_small() {
+        let v = ses(5);
+        let p = RegionAware { client_region: "uk".into(), min_ses: 4 };
+        let a = p.place(8, &v).unwrap();
+        let distinct: std::collections::BTreeSet<_> = a.iter().collect();
+        assert_eq!(distinct.len(), 4);
+    }
+
+    #[test]
+    fn region_aware_unknown_region_falls_back() {
+        let v = ses(3);
+        let p = RegionAware { client_region: "mars".into(), min_ses: 0 };
+        let a = p.place(6, &v).unwrap();
+        assert_eq!(a.len(), 6);
+    }
+
+    #[test]
+    fn fallback_skips_tried_and_down() {
+        let mut v = ses(4);
+        v[1].available = false;
+        let f = RoundRobin.fallback(0, &v, &[0]);
+        assert_eq!(f, Some(2));
+        let f2 = RoundRobin.fallback(0, &v, &[0, 2, 3]);
+        assert_eq!(f2, None);
+    }
+
+    #[test]
+    fn random_deterministic_per_seed() {
+        let v = ses(5);
+        let a = Random::new(1).place(20, &v).unwrap();
+        let b = Random::new(1).place(20, &v).unwrap();
+        let c = Random::new(2).place(20, &v).unwrap();
+        assert_eq!(a, b, "fresh policies with equal seeds agree");
+        assert_ne!(a, c);
+        // Successive calls on ONE policy draw fresh assignments.
+        let p = Random::new(1);
+        assert_ne!(p.place(20, &v).unwrap(), p.place(20, &v).unwrap());
+    }
+}

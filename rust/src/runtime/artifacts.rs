@@ -1,0 +1,161 @@
+//! Artifact discovery: `artifacts/manifest.json` → typed index.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+/// Which lowered graph an artifact holds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum ArtifactOp {
+    /// `encode(data[K,B]) -> coding[M,B]` (Cauchy rows baked in).
+    Encode,
+    /// `decode(mat[K,K], chunks[K,B]) -> data[K,B]`.
+    Decode,
+}
+
+/// Lookup key: operation + geometry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ArtifactKey {
+    pub op: ArtifactOp,
+    pub k: usize,
+    /// Coding chunks (encode only; 0 for decode keys).
+    pub m: usize,
+    /// Stripe width B.
+    pub b: usize,
+}
+
+impl ArtifactKey {
+    pub fn encode(k: usize, m: usize, b: usize) -> Self {
+        ArtifactKey { op: ArtifactOp::Encode, k, m, b }
+    }
+
+    pub fn decode(k: usize, b: usize) -> Self {
+        ArtifactKey { op: ArtifactOp::Decode, k, m: 0, b }
+    }
+}
+
+/// Parsed manifest: key → HLO text file path.
+#[derive(Clone, Debug, Default)]
+pub struct ArtifactIndex {
+    files: BTreeMap<ArtifactKey, PathBuf>,
+}
+
+impl ArtifactIndex {
+    /// Load `<dir>/manifest.json`. A missing manifest yields an empty
+    /// index (the codec then falls back to the pure-rust backend).
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = dir.join("manifest.json");
+        if !manifest.exists() {
+            return Ok(Self::default());
+        }
+        let text = std::fs::read_to_string(&manifest)?;
+        let j = Json::parse(&text)
+            .map_err(|e| Error::Runtime(format!("manifest parse: {e}")))?;
+        if j.get("version").and_then(Json::as_u64) != Some(1) {
+            return Err(Error::Runtime("unsupported manifest version".into()));
+        }
+        let mut files = BTreeMap::new();
+        let arts = j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::Runtime("manifest missing `artifacts`".into()))?;
+        for a in arts {
+            let get_usize = |key: &str| -> Result<usize> {
+                a.get(key)
+                    .and_then(Json::as_u64)
+                    .map(|v| v as usize)
+                    .ok_or_else(|| Error::Runtime(format!("artifact missing `{key}`")))
+            };
+            let op = match a.get("op").and_then(Json::as_str) {
+                Some("encode") => ArtifactOp::Encode,
+                Some("decode") => ArtifactOp::Decode,
+                other => {
+                    return Err(Error::Runtime(format!("bad artifact op {other:?}")))
+                }
+            };
+            let file = a
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| Error::Runtime("artifact missing `file`".into()))?;
+            let key = match op {
+                ArtifactOp::Encode => {
+                    ArtifactKey::encode(get_usize("k")?, get_usize("m")?, get_usize("b")?)
+                }
+                ArtifactOp::Decode => ArtifactKey::decode(get_usize("k")?, get_usize("b")?),
+            };
+            let path = dir.join(file);
+            if !path.exists() {
+                return Err(Error::Runtime(format!(
+                    "manifest references missing file `{file}`"
+                )));
+            }
+            files.insert(key, path);
+        }
+        Ok(ArtifactIndex { files })
+    }
+
+    pub fn get(&self, key: &ArtifactKey) -> Option<&Path> {
+        self.files.get(key).map(PathBuf::as_path)
+    }
+
+    pub fn len(&self) -> usize {
+        self.files.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.files.is_empty()
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &ArtifactKey> {
+        self.files.keys()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_real_manifest_when_built() {
+        let dir = crate::runtime::default_artifact_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("artifacts not built; skipping");
+            return;
+        }
+        let idx = ArtifactIndex::load(&dir).unwrap();
+        assert!(idx.len() >= 8);
+        assert!(idx.get(&ArtifactKey::encode(10, 5, 65536)).is_some());
+        assert!(idx.get(&ArtifactKey::decode(10, 65536)).is_some());
+        assert!(idx.get(&ArtifactKey::encode(3, 3, 3)).is_none());
+    }
+
+    #[test]
+    fn missing_dir_is_empty_index() {
+        let idx = ArtifactIndex::load(Path::new("/nonexistent-drs")).unwrap();
+        assert!(idx.is_empty());
+    }
+
+    #[test]
+    fn malformed_manifest_rejected() {
+        let dir = std::env::temp_dir().join(format!(
+            "drs-manifest-{}-{}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), "{\"version\": 9}").unwrap();
+        assert!(ArtifactIndex::load(&dir).is_err());
+        std::fs::write(
+            dir.join("manifest.json"),
+            "{\"version\": 1, \"artifacts\": [{\"op\": \"encode\", \"k\": 1, \"m\": 1, \"b\": 8, \"file\": \"gone.hlo.txt\"}]}",
+        )
+        .unwrap();
+        assert!(ArtifactIndex::load(&dir).is_err());
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+}

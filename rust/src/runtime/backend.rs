@@ -1,0 +1,131 @@
+//! `PjrtBackend`: the paper-path [`EcBackend`] running the AOT pallas
+//! kernel, with transparent fallback to pure rust for unregistered shapes.
+//!
+//! Dispatch is by shape: the codec calls `matmul` with either the Cauchy
+//! coding block (M×K — encode) or a survivor-inverse (K×K — decode). For
+//! encode the artifact has the matrix *baked in*; we verify the caller's
+//! matrix is byte-identical to the expected Cauchy block before using it
+//! (a different generator must not silently produce wrong chunks).
+
+use std::sync::Arc;
+
+use crate::ec::backend::{EcBackend, PureRustBackend};
+use crate::gf::GfMatrix;
+use crate::Result;
+
+use super::artifacts::ArtifactKey;
+use super::pjrt::PjrtEngine;
+
+/// EC backend executing AOT artifacts via PJRT.
+pub struct PjrtBackend {
+    engine: Arc<PjrtEngine>,
+    fallback: PureRustBackend,
+    /// Count of stripe calls served by PJRT vs fallback (metrics).
+    pjrt_calls: std::sync::atomic::AtomicU64,
+    fallback_calls: std::sync::atomic::AtomicU64,
+}
+
+impl PjrtBackend {
+    pub fn new(engine: Arc<PjrtEngine>) -> Self {
+        PjrtBackend {
+            engine,
+            fallback: PureRustBackend,
+            pjrt_calls: Default::default(),
+            fallback_calls: Default::default(),
+        }
+    }
+
+    /// Engine over the default artifact dir.
+    pub fn from_default_dir() -> Result<Self> {
+        Ok(Self::new(Arc::new(PjrtEngine::from_default_dir()?)))
+    }
+
+    /// (pjrt stripe calls, fallback stripe calls).
+    pub fn call_counts(&self) -> (u64, u64) {
+        (
+            self.pjrt_calls.load(std::sync::atomic::Ordering::Relaxed),
+            self.fallback_calls.load(std::sync::atomic::Ordering::Relaxed),
+        )
+    }
+
+    fn try_pjrt(&self, mat: &GfMatrix, data: &[&[u8]]) -> Result<Option<Vec<Vec<u8>>>> {
+        let n_rows = data.len();
+        let b = data.first().map_or(0, |r| r.len());
+        if b == 0 || data.iter().any(|r| r.len() != b) {
+            return Ok(None);
+        }
+
+        let (key, operands_concat): (ArtifactKey, Vec<u8>) = if mat.rows() == mat.cols()
+            && mat.rows() == n_rows
+        {
+            // Decode shape: mat (K,K) is a runtime operand.
+            (ArtifactKey::decode(n_rows, b), concat(data))
+        } else if mat.cols() == n_rows {
+            // Encode shape (M,K): artifact only valid if the matrix is the
+            // baked Cauchy block.
+            let expected = GfMatrix::cauchy(mat.rows(), mat.cols())?;
+            if expected != *mat {
+                return Ok(None);
+            }
+            (ArtifactKey::encode(mat.cols(), mat.rows(), b), concat(data))
+        } else {
+            return Ok(None);
+        };
+
+        if !self.engine.supports(&key) {
+            return Ok(None);
+        }
+
+        let out_rows = mat.rows();
+        let flat = match key.op {
+            super::artifacts::ArtifactOp::Decode => self.engine.execute_u8(
+                &key,
+                &[
+                    (mat.rows(), mat.cols(), mat.as_bytes()),
+                    (n_rows, b, &operands_concat),
+                ],
+                out_rows,
+                b,
+            )?,
+            super::artifacts::ArtifactOp::Encode => self.engine.execute_u8(
+                &key,
+                &[(n_rows, b, &operands_concat)],
+                out_rows,
+                b,
+            )?,
+        };
+        Ok(Some(
+            flat.chunks_exact(b).map(|row| row.to_vec()).collect(),
+        ))
+    }
+}
+
+fn concat(rows: &[&[u8]]) -> Vec<u8> {
+    let b = rows.first().map_or(0, |r| r.len());
+    let mut out = Vec::with_capacity(rows.len() * b);
+    for r in rows {
+        out.extend_from_slice(r);
+    }
+    out
+}
+
+impl EcBackend for PjrtBackend {
+    fn matmul(&self, mat: &GfMatrix, data: &[&[u8]]) -> Result<Vec<Vec<u8>>> {
+        match self.try_pjrt(mat, data)? {
+            Some(out) => {
+                self.pjrt_calls
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                Ok(out)
+            }
+            None => {
+                self.fallback_calls
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                self.fallback.matmul(mat, data)
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt-aot"
+    }
+}

@@ -1,0 +1,29 @@
+//! The AOT bridge: load and execute the pallas/jax GF(2⁸) kernels.
+//!
+//! `make artifacts` (python, build-time only) lowers the L2 jax graphs —
+//! which call the L1 pallas kernel — to **HLO text** under `artifacts/`,
+//! with a `manifest.json` index. This module loads those artifacts through
+//! the PJRT CPU client (`xla` crate) and exposes them as an
+//! [`crate::ec::EcBackend`], so the L3 shim's encode/decode hot path runs
+//! the paper's kernel without any python at request time.
+//!
+//! HLO *text* (not serialized protos) is the interchange format: jax ≥ 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod artifacts;
+pub mod backend;
+pub mod pjrt;
+
+pub use artifacts::{ArtifactIndex, ArtifactKey, ArtifactOp};
+pub use backend::PjrtBackend;
+pub use pjrt::PjrtEngine;
+
+/// Default artifact directory: `$DRS_ARTIFACTS` or `<repo>/artifacts`.
+pub fn default_artifact_dir() -> std::path::PathBuf {
+    std::env::var("DRS_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| {
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+        })
+}

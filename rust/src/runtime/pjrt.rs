@@ -1,0 +1,130 @@
+//! PJRT execution engine: compile HLO-text artifacts once, execute many.
+//!
+//! Thread-safety: the `xla` crate's wrappers hold raw pointers and are not
+//! `Send`/`Sync`-annotated, but the underlying PJRT CPU client is
+//! internally synchronized. We serialize *all* engine access behind one
+//! `Mutex` anyway, so the `unsafe impl`s below only assert "moving these
+//! pointers between threads is fine", which holds for PJRT's C API.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use std::sync::Mutex;
+
+use crate::{Error, Result};
+
+use super::artifacts::{ArtifactIndex, ArtifactKey};
+
+struct Inner {
+    client: xla::PjRtClient,
+    index: ArtifactIndex,
+    /// Lazily compiled executables.
+    compiled: BTreeMap<ArtifactKey, xla::PjRtLoadedExecutable>,
+}
+
+// SAFETY: all access to `Inner` is serialized by `PjrtEngine::inner`'s
+// Mutex; PJRT CPU client objects may be used from any thread as long as
+// calls do not race (the C API is thread-safe; we are stricter).
+unsafe impl Send for Inner {}
+
+/// A shared PJRT engine over the artifact set.
+pub struct PjrtEngine {
+    inner: Mutex<Inner>,
+}
+
+impl PjrtEngine {
+    /// Create the CPU client and load the artifact index from `dir`.
+    pub fn new(dir: &Path) -> Result<Self> {
+        let index = ArtifactIndex::load(dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::Runtime(format!("PJRT client: {e}")))?;
+        Ok(PjrtEngine {
+            inner: Mutex::new(Inner { client, index, compiled: BTreeMap::new() }),
+        })
+    }
+
+    /// Engine over the default artifact directory.
+    pub fn from_default_dir() -> Result<Self> {
+        Self::new(&super::default_artifact_dir())
+    }
+
+    /// Whether an artifact exists for `key`.
+    pub fn supports(&self, key: &ArtifactKey) -> bool {
+        self.inner.lock().unwrap().index.get(key).is_some()
+    }
+
+    /// All registered artifact keys.
+    pub fn keys(&self) -> Vec<ArtifactKey> {
+        self.inner.lock().unwrap().index.keys().copied().collect()
+    }
+
+    /// Execute the artifact at `key` with u8 matrix operands
+    /// (`(rows, cols, data)` each) and return the u8 result matrix,
+    /// expected to have shape `out_rows × b`.
+    pub fn execute_u8(
+        &self,
+        key: &ArtifactKey,
+        operands: &[(usize, usize, &[u8])],
+        out_rows: usize,
+        out_cols: usize,
+    ) -> Result<Vec<u8>> {
+        let mut inner = self.inner.lock().unwrap();
+
+        // Compile on first use.
+        if !inner.compiled.contains_key(key) {
+            let path = inner
+                .index
+                .get(key)
+                .ok_or_else(|| Error::Runtime(format!("no artifact for {key:?}")))?
+                .to_path_buf();
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| Error::Runtime("bad path".into()))?,
+            )
+            .map_err(|e| Error::Runtime(format!("HLO parse `{}`: {e}", path.display())))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = inner
+                .client
+                .compile(&comp)
+                .map_err(|e| Error::Runtime(format!("XLA compile: {e}")))?;
+            inner.compiled.insert(*key, exe);
+        }
+
+        let mut lits = Vec::with_capacity(operands.len());
+        for (rows, cols, data) in operands {
+            if data.len() != rows * cols {
+                return Err(Error::Runtime(format!(
+                    "operand length {} != {rows}x{cols}",
+                    data.len()
+                )));
+            }
+            let lit = xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::U8,
+                &[*rows, *cols],
+                data,
+            )
+            .map_err(|e| Error::Runtime(format!("literal: {e}")))?;
+            lits.push(lit);
+        }
+
+        let exe = inner.compiled.get(key).expect("just inserted");
+        let result = exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| Error::Runtime(format!("execute: {e}")))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::Runtime(format!("to_literal: {e}")))?;
+        // aot.py lowers with return_tuple=True → unwrap the 1-tuple.
+        let out = result
+            .to_tuple1()
+            .map_err(|e| Error::Runtime(format!("tuple unwrap: {e}")))?;
+        let vec = out
+            .to_vec::<u8>()
+            .map_err(|e| Error::Runtime(format!("readback: {e}")))?;
+        if vec.len() != out_rows * out_cols {
+            return Err(Error::Runtime(format!(
+                "result length {} != expected {out_rows}x{out_cols}",
+                vec.len()
+            )));
+        }
+        Ok(vec)
+    }
+}

@@ -1,0 +1,126 @@
+//! Failure injection: scheduled outage windows and availability traces.
+//!
+//! The paper's resilience argument rests on SE availability statistics
+//! (">90% of SEs are available at any one time"). This module generates
+//! deterministic outage schedules for the simulator and the churn tests:
+//! each SE gets alternating up/down intervals drawn from exponential-ish
+//! distributions calibrated so the long-run availability matches a target.
+
+use crate::util::prng::Rng;
+
+/// One planned outage: `[start, end)` in simulation seconds.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Outage {
+    pub start: f64,
+    pub end: f64,
+}
+
+/// An availability schedule for one SE.
+#[derive(Clone, Debug, Default)]
+pub struct Schedule {
+    pub outages: Vec<Outage>,
+}
+
+impl Schedule {
+    /// Whether the SE is up at time `t`.
+    pub fn up_at(&self, t: f64) -> bool {
+        !self.outages.iter().any(|o| t >= o.start && t < o.end)
+    }
+
+    /// Fraction of `[0, horizon)` spent up.
+    pub fn availability(&self, horizon: f64) -> f64 {
+        let down: f64 = self
+            .outages
+            .iter()
+            .map(|o| (o.end.min(horizon) - o.start.max(0.0)).max(0.0))
+            .sum();
+        1.0 - down / horizon
+    }
+}
+
+/// Generate a schedule targeting long-run availability `p` over `horizon`
+/// seconds, with mean outage duration `mttr` seconds (exponential-ish via
+/// inverse-CDF on the deterministic RNG).
+pub fn generate_schedule(p: f64, mttr: f64, horizon: f64, rng: &mut Rng) -> Schedule {
+    assert!((0.0..=1.0).contains(&p));
+    if p >= 1.0 {
+        return Schedule::default();
+    }
+    // Alternating renewal process: mean up time so that up/(up+down) = p.
+    let mean_up = mttr * p / (1.0 - p);
+    let mut outages = Vec::new();
+    let mut t = 0.0;
+    let exp = |rng: &mut Rng, mean: f64| -mean * (1.0 - rng.f64()).max(1e-12).ln();
+    while t < horizon {
+        t += exp(rng, mean_up);
+        if t >= horizon {
+            break;
+        }
+        let end = t + exp(rng, mttr);
+        outages.push(Outage { start: t, end: end.min(horizon) });
+        t = end;
+    }
+    Schedule { outages }
+}
+
+/// Apply schedules to a registry at time `t` (flips `set_available`).
+pub fn apply_at(
+    registry: &crate::se::SeRegistry,
+    schedules: &[(String, Schedule)],
+    t: f64,
+) {
+    for (name, sched) in schedules {
+        if let Some(se) = registry.get(name) {
+            se.set_available(sched.up_at(t));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::forall;
+
+    #[test]
+    fn empty_schedule_always_up() {
+        let s = Schedule::default();
+        assert!(s.up_at(0.0) && s.up_at(1e9));
+        assert_eq!(s.availability(100.0), 1.0);
+    }
+
+    #[test]
+    fn outage_windows_respected() {
+        let s = Schedule { outages: vec![Outage { start: 10.0, end: 20.0 }] };
+        assert!(s.up_at(9.9));
+        assert!(!s.up_at(10.0));
+        assert!(!s.up_at(19.9));
+        assert!(s.up_at(20.0));
+        assert!((s.availability(100.0) - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn generated_availability_converges() {
+        forall(10, |rng| {
+            let p = 0.8 + 0.15 * rng.f64();
+            let s = generate_schedule(p, 3600.0, 5_000_000.0, rng);
+            let got = s.availability(5_000_000.0);
+            assert!((got - p).abs() < 0.05, "target {p} got {got}");
+        });
+    }
+
+    #[test]
+    fn apply_flips_registry() {
+        use crate::se::{MemSe, SeRegistry};
+        use std::sync::Arc;
+        let mut reg = SeRegistry::new();
+        reg.register(Arc::new(MemSe::new("SE-A", "uk")), &["vo"]).unwrap();
+        let scheds = vec![(
+            "SE-A".to_string(),
+            Schedule { outages: vec![Outage { start: 5.0, end: 10.0 }] },
+        )];
+        apply_at(&reg, &scheds, 7.0);
+        assert!(!reg.get("SE-A").unwrap().is_available());
+        apply_at(&reg, &scheds, 12.0);
+        assert!(reg.get("SE-A").unwrap().is_available());
+    }
+}

@@ -1,0 +1,244 @@
+//! Directory-backed Storage Element (real I/O for examples and the CLI).
+//!
+//! PFNs map to paths under the SE's base directory; path components are
+//! percent-encoded so arbitrary PFN strings stay inside the sandbox.
+//! Optionally sleeps according to a (scaled) [`NetworkProfile`] so the
+//! examples exhibit realistic relative timing without a real WAN.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use super::{check_up, NetworkProfile, StorageElement};
+use crate::{Error, Result};
+
+pub struct LocalSe {
+    name: String,
+    region: String,
+    base: PathBuf,
+    available: AtomicBool,
+    profile: Option<NetworkProfile>,
+    /// Wall-clock scale for profile sleeps (1.0 = real seconds; examples
+    /// use ~1e-3 so a "5.4 s" setup costs 5.4 ms).
+    sleep_scale: f64,
+}
+
+impl LocalSe {
+    pub fn new(name: impl Into<String>, region: impl Into<String>, base: impl Into<PathBuf>) -> Result<Self> {
+        let base = base.into();
+        std::fs::create_dir_all(&base)?;
+        Ok(LocalSe {
+            name: name.into(),
+            region: region.into(),
+            base,
+            available: AtomicBool::new(true),
+            profile: None,
+            sleep_scale: 0.0,
+        })
+    }
+
+    /// Attach a latency/bandwidth profile whose times are slept for real,
+    /// scaled by `scale`.
+    pub fn with_profile(mut self, profile: NetworkProfile, scale: f64) -> Self {
+        self.profile = Some(profile);
+        self.sleep_scale = scale;
+        self
+    }
+
+    pub fn base(&self) -> &Path {
+        &self.base
+    }
+
+    fn pfn_path(&self, pfn: &str) -> PathBuf {
+        // Percent-encode path separators &c so any PFN is one flat file.
+        let mut enc = String::with_capacity(pfn.len());
+        for c in pfn.chars() {
+            match c {
+                '/' => enc.push_str("%2F"),
+                '%' => enc.push_str("%25"),
+                c => enc.push(c),
+            }
+        }
+        self.base.join(enc)
+    }
+
+    fn simulate(&self, bytes: u64) {
+        if let Some(p) = &self.profile {
+            if self.sleep_scale > 0.0 {
+                let t = p.transfer_time(bytes, 1) * self.sleep_scale;
+                if t > 0.0 {
+                    std::thread::sleep(std::time::Duration::from_secs_f64(t));
+                }
+            }
+        }
+    }
+
+    fn io_err(&self, e: std::io::Error, pfn: &str) -> Error {
+        Error::Se { se: self.name.clone(), msg: format!("`{pfn}`: {e}") }
+    }
+}
+
+impl StorageElement for LocalSe {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn region(&self) -> &str {
+        &self.region
+    }
+
+    fn put(&self, pfn: &str, data: &[u8]) -> Result<()> {
+        check_up(self)?;
+        self.simulate(data.len() as u64);
+        let path = self.pfn_path(pfn);
+        let tmp = path.with_extension("part");
+        std::fs::write(&tmp, data).map_err(|e| self.io_err(e, pfn))?;
+        std::fs::rename(&tmp, &path).map_err(|e| self.io_err(e, pfn))?;
+        Ok(())
+    }
+
+    fn get(&self, pfn: &str) -> Result<Vec<u8>> {
+        check_up(self)?;
+        let data = std::fs::read(self.pfn_path(pfn)).map_err(|e| self.io_err(e, pfn))?;
+        self.simulate(data.len() as u64);
+        Ok(data)
+    }
+
+    fn get_range(&self, pfn: &str, offset: u64, len: usize) -> Result<Vec<u8>> {
+        use std::io::{Read, Seek, SeekFrom};
+        check_up(self)?;
+        let mut f = std::fs::File::open(self.pfn_path(pfn)).map_err(|e| self.io_err(e, pfn))?;
+        let size = f.metadata().map_err(|e| self.io_err(e, pfn))?.len();
+        let start = offset.min(size);
+        let take = len.min((size - start) as usize);
+        f.seek(SeekFrom::Start(start)).map_err(|e| self.io_err(e, pfn))?;
+        let mut buf = vec![0u8; take];
+        f.read_exact(&mut buf).map_err(|e| self.io_err(e, pfn))?;
+        self.simulate(take as u64);
+        Ok(buf)
+    }
+
+    fn delete(&self, pfn: &str) -> Result<()> {
+        check_up(self)?;
+        std::fs::remove_file(self.pfn_path(pfn)).map_err(|e| self.io_err(e, pfn))
+    }
+
+    fn exists(&self, pfn: &str) -> bool {
+        self.is_available() && self.pfn_path(pfn).exists()
+    }
+
+    fn list(&self, prefix: &str) -> Result<Vec<String>> {
+        check_up(self)?;
+        let mut out = Vec::new();
+        for entry in std::fs::read_dir(&self.base).map_err(|e| self.io_err(e, prefix))? {
+            let entry = entry.map_err(|e| self.io_err(e, prefix))?;
+            let name = entry.file_name().to_string_lossy().into_owned();
+            if name.ends_with(".part") {
+                continue; // in-flight temp file
+            }
+            let decoded = name.replace("%2F", "/").replace("%25", "%");
+            if decoded.starts_with(prefix) {
+                out.push(decoded);
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+
+    fn used_bytes(&self) -> u64 {
+        std::fs::read_dir(&self.base)
+            .map(|rd| {
+                rd.filter_map(|e| e.ok())
+                    .filter_map(|e| e.metadata().ok())
+                    .map(|m| m.len())
+                    .sum()
+            })
+            .unwrap_or(0)
+    }
+
+    fn is_available(&self) -> bool {
+        self.available.load(Ordering::Relaxed)
+    }
+
+    fn set_available(&self, up: bool) {
+        self.available.store(up, Ordering::Relaxed);
+    }
+
+    fn network_profile(&self) -> Option<&NetworkProfile> {
+        self.profile.as_ref()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "drs-localse-{tag}-{}-{}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn put_get_roundtrip() {
+        let dir = tmpdir("rt");
+        let se = LocalSe::new("SE-L", "uk", &dir).unwrap();
+        se.put("/vo/data/x.00_of_15.drs", b"payload").unwrap();
+        assert_eq!(se.get("/vo/data/x.00_of_15.drs").unwrap(), b"payload");
+        assert!(se.exists("/vo/data/x.00_of_15.drs"));
+        assert!(se.used_bytes() >= 7);
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn list_decodes_pfns() {
+        let dir = tmpdir("ls");
+        let se = LocalSe::new("SE-L", "uk", &dir).unwrap();
+        se.put("/a/1", b"x").unwrap();
+        se.put("/a/2", b"x").unwrap();
+        se.put("/b/3", b"x").unwrap();
+        assert_eq!(se.list("/a/").unwrap(), vec!["/a/1", "/a/2"]);
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn availability_gate() {
+        let dir = tmpdir("av");
+        let se = LocalSe::new("SE-L", "uk", &dir).unwrap();
+        se.put("/x", b"d").unwrap();
+        se.set_available(false);
+        assert!(se.get("/x").is_err());
+        se.set_available(true);
+        assert_eq!(se.get("/x").unwrap(), b"d");
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn delete_and_missing() {
+        let dir = tmpdir("del");
+        let se = LocalSe::new("SE-L", "uk", &dir).unwrap();
+        se.put("/x", b"d").unwrap();
+        se.delete("/x").unwrap();
+        assert!(se.get("/x").is_err());
+        assert!(se.delete("/x").is_err());
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn percent_encoding_prevents_escape() {
+        let dir = tmpdir("esc");
+        let se = LocalSe::new("SE-L", "uk", &dir).unwrap();
+        se.put("/../../etc/passwd", b"nope").unwrap();
+        // The object must be inside the base dir.
+        let entries: Vec<_> = std::fs::read_dir(&dir).unwrap().collect();
+        assert_eq!(entries.len(), 1);
+        assert_eq!(se.get("/../../etc/passwd").unwrap(), b"nope");
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+}

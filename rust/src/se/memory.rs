@@ -1,0 +1,198 @@
+//! In-memory Storage Element (tests + discrete-event simulation).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::{check_up, NetworkProfile, StorageElement};
+use crate::{Error, Result};
+
+/// A deterministic in-memory SE.
+pub struct MemSe {
+    name: String,
+    region: String,
+    store: Mutex<BTreeMap<String, Vec<u8>>>,
+    used: AtomicU64,
+    available: AtomicBool,
+    profile: Option<NetworkProfile>,
+}
+
+impl MemSe {
+    pub fn new(name: impl Into<String>, region: impl Into<String>) -> Self {
+        MemSe {
+            name: name.into(),
+            region: region.into(),
+            store: Mutex::new(BTreeMap::new()),
+            used: AtomicU64::new(0),
+            available: AtomicBool::new(true),
+            profile: None,
+        }
+    }
+
+    pub fn with_profile(mut self, profile: NetworkProfile) -> Self {
+        self.profile = Some(profile);
+        self
+    }
+
+    /// Number of objects stored (test helper).
+    pub fn object_count(&self) -> usize {
+        self.store.lock().unwrap().len()
+    }
+
+    /// Drop every stored object (models catastrophic SE loss for repair
+    /// tests) while staying "available".
+    pub fn wipe(&self) {
+        let mut s = self.store.lock().unwrap();
+        s.clear();
+        self.used.store(0, Ordering::Relaxed);
+    }
+}
+
+impl StorageElement for MemSe {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn region(&self) -> &str {
+        &self.region
+    }
+
+    fn put(&self, pfn: &str, data: &[u8]) -> Result<()> {
+        check_up(self)?;
+        let mut s = self.store.lock().unwrap();
+        if let Some(old) = s.insert(pfn.to_string(), data.to_vec()) {
+            self.used.fetch_sub(old.len() as u64, Ordering::Relaxed);
+        }
+        self.used.fetch_add(data.len() as u64, Ordering::Relaxed);
+        Ok(())
+    }
+
+    fn get(&self, pfn: &str) -> Result<Vec<u8>> {
+        check_up(self)?;
+        self.store
+            .lock()
+            .unwrap()
+            .get(pfn)
+            .cloned()
+            .ok_or_else(|| Error::Se {
+                se: self.name.clone(),
+                msg: format!("no such pfn: `{pfn}`"),
+            })
+    }
+
+    fn get_range(&self, pfn: &str, offset: u64, len: usize) -> Result<Vec<u8>> {
+        check_up(self)?;
+        let store = self.store.lock().unwrap();
+        let all = store.get(pfn).ok_or_else(|| Error::Se {
+            se: self.name.clone(),
+            msg: format!("no such pfn: `{pfn}`"),
+        })?;
+        let start = (offset as usize).min(all.len());
+        let end = (start + len).min(all.len());
+        Ok(all[start..end].to_vec())
+    }
+
+    fn delete(&self, pfn: &str) -> Result<()> {
+        check_up(self)?;
+        match self.store.lock().unwrap().remove(pfn) {
+            Some(old) => {
+                self.used.fetch_sub(old.len() as u64, Ordering::Relaxed);
+                Ok(())
+            }
+            None => Err(Error::Se {
+                se: self.name.clone(),
+                msg: format!("no such pfn: `{pfn}`"),
+            }),
+        }
+    }
+
+    fn exists(&self, pfn: &str) -> bool {
+        self.is_available() && self.store.lock().unwrap().contains_key(pfn)
+    }
+
+    fn list(&self, prefix: &str) -> Result<Vec<String>> {
+        check_up(self)?;
+        Ok(self
+            .store
+            .lock()
+            .unwrap()
+            .keys()
+            .filter(|k| k.starts_with(prefix))
+            .cloned()
+            .collect())
+    }
+
+    fn used_bytes(&self) -> u64 {
+        self.used.load(Ordering::Relaxed)
+    }
+
+    fn is_available(&self) -> bool {
+        self.available.load(Ordering::Relaxed)
+    }
+
+    fn set_available(&self, up: bool) {
+        self.available.store(up, Ordering::Relaxed);
+    }
+
+    fn network_profile(&self) -> Option<&NetworkProfile> {
+        self.profile.as_ref()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_get_delete() {
+        let se = MemSe::new("SE-A", "uk");
+        se.put("/x", b"hello").unwrap();
+        assert_eq!(se.get("/x").unwrap(), b"hello");
+        assert!(se.exists("/x"));
+        assert_eq!(se.used_bytes(), 5);
+        se.delete("/x").unwrap();
+        assert!(!se.exists("/x"));
+        assert_eq!(se.used_bytes(), 0);
+        assert!(se.get("/x").is_err());
+        assert!(se.delete("/x").is_err());
+    }
+
+    #[test]
+    fn overwrite_accounting() {
+        let se = MemSe::new("SE-A", "uk");
+        se.put("/x", &[0; 100]).unwrap();
+        se.put("/x", &[0; 40]).unwrap();
+        assert_eq!(se.used_bytes(), 40);
+    }
+
+    #[test]
+    fn unavailable_rejects_everything() {
+        let se = MemSe::new("SE-A", "uk");
+        se.put("/x", b"d").unwrap();
+        se.set_available(false);
+        assert!(se.put("/y", b"d").is_err());
+        assert!(se.get("/x").is_err());
+        assert!(!se.exists("/x"));
+        assert!(se.list("/").is_err());
+        se.set_available(true);
+        assert_eq!(se.get("/x").unwrap(), b"d");
+    }
+
+    #[test]
+    fn list_prefix() {
+        let se = MemSe::new("SE-A", "uk");
+        se.put("/a/1", b"x").unwrap();
+        se.put("/a/2", b"x").unwrap();
+        se.put("/b/1", b"x").unwrap();
+        assert_eq!(se.list("/a/").unwrap(), vec!["/a/1", "/a/2"]);
+    }
+
+    #[test]
+    fn wipe_clears() {
+        let se = MemSe::new("SE-A", "uk");
+        se.put("/a", &[1; 10]).unwrap();
+        se.wipe();
+        assert_eq!(se.object_count(), 0);
+        assert!(se.is_available());
+    }
+}

@@ -1,0 +1,88 @@
+//! Storage Elements — the grid storage endpoints the shim stripes across.
+//!
+//! The paper ran against real WLCG SEs behind `lcg_utils`; repro band 0
+//! means we simulate them (DESIGN.md §3). The [`StorageElement`] trait is
+//! the SRM-ish surface the shim needs (put/get/delete/list/exists), plus
+//! an availability flag for failure injection. Two backends:
+//!
+//! * [`MemSe`] — in-memory store; deterministic, used by tests and the DES.
+//! * [`LocalSe`] — directory-backed; used by the examples/CLI so uploads
+//!   actually hit a filesystem.
+//!
+//! Transfer *timing* is not modelled here — the wall-clock model
+//! ([`NetworkProfile`]) lives alongside and is consumed by the
+//! discrete-event simulator and (optionally, scaled) by real transfers.
+
+pub mod failure;
+pub mod local;
+pub mod memory;
+pub mod profile;
+pub mod registry;
+
+pub use failure::{generate_schedule, Outage, Schedule};
+pub use local::LocalSe;
+pub use memory::MemSe;
+pub use profile::NetworkProfile;
+pub use registry::{SeInfo, SeRegistry};
+
+use crate::Result;
+
+/// A grid Storage Element.
+pub trait StorageElement: Send + Sync {
+    /// Unique SE name (e.g. `UKI-SCOTGRID-GLASGOW-disk`).
+    fn name(&self) -> &str;
+
+    /// Geographic/administrative region tag (used by region-aware placement).
+    fn region(&self) -> &str;
+
+    /// Store bytes under a physical file name. Overwrites.
+    fn put(&self, pfn: &str, data: &[u8]) -> Result<()>;
+
+    /// Fetch bytes by PFN.
+    fn get(&self, pfn: &str) -> Result<Vec<u8>>;
+
+    /// Ranged GET (xrootd-style vector-read primitive; used by the §4
+    /// federated direct-IO reader). Default: whole-object get + slice —
+    /// backends override with real partial reads.
+    fn get_range(&self, pfn: &str, offset: u64, len: usize) -> Result<Vec<u8>> {
+        let all = self.get(pfn)?;
+        let start = (offset as usize).min(all.len());
+        let end = (start + len).min(all.len());
+        Ok(all[start..end].to_vec())
+    }
+
+    /// Delete by PFN (idempotent: deleting a missing PFN is an error).
+    fn delete(&self, pfn: &str) -> Result<()>;
+
+    fn exists(&self, pfn: &str) -> bool;
+
+    /// List PFNs under a prefix (sorted).
+    fn list(&self, prefix: &str) -> Result<Vec<String>>;
+
+    /// Total bytes stored (for weighted placement and the e2e report).
+    fn used_bytes(&self) -> u64;
+
+    /// Whether the SE is currently reachable. The paper cites ">90% of SEs
+    /// available at any one time"; the failure injector flips this.
+    fn is_available(&self) -> bool;
+
+    /// Failure injection hook.
+    fn set_available(&self, up: bool);
+
+    /// The network behaviour of the path client↔SE (None = instantaneous).
+    fn network_profile(&self) -> Option<&NetworkProfile> {
+        None
+    }
+}
+
+/// Guard: error out when the SE is down (shared by backends).
+pub(crate) fn check_up(se: &dyn StorageElement) -> Result<()> {
+    if se.is_available() {
+        Ok(())
+    } else {
+        Err(crate::Error::Se {
+            se: se.name().to_string(),
+            msg: "storage element unavailable".into(),
+        })
+    }
+}

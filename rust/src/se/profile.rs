@@ -1,0 +1,153 @@
+//! The client↔SE network model, calibrated to the paper's Table 1.
+//!
+//! Table 1 (upload, serial, no encoding) pins two constants:
+//!
+//! | workload        | total  | per-file |
+//! |-----------------|--------|----------|
+//! | 1 × 756 kB      | 6 s    | 6 s      |
+//! | 10 × 75.6 kB    | 54 s   | 5.5 s    |
+//! | 1 × 2.4 GB      | 142 s  | 142 s    |
+//! | 10 × 243 MB     | 206 s  | 20 s     |
+//!
+//! Small files are latency-bound (~5.4 s channel setup per transfer:
+//! SRM negotiation + TURL resolution + gridftp session), large files are
+//! bandwidth-bound (2.4 GB / 142 s ≈ 17.3 MB/s through the VM's NAT).
+//! `t(size, streams) = setup + size / (per-stream share of the uplink)`.
+//!
+//! Concurrent streams share the client uplink; `congestion_alpha` models
+//! the small aggregate-goodput loss per extra TCP stream that makes Fig 5
+//! show "parallelism appears to initially harm performance".
+
+/// Wall-clock model for one client↔SE path.
+#[derive(Clone, Debug)]
+pub struct NetworkProfile {
+    /// Per-transfer channel setup latency, seconds (SRM + session).
+    pub setup_s: f64,
+    /// Client uplink bandwidth, bytes/second, shared across streams.
+    pub bandwidth_bps: f64,
+    /// Aggregate-goodput multiplier per concurrent stream beyond the first:
+    /// effective aggregate = bandwidth · (1 − alpha·(streams−1)), floored.
+    pub congestion_alpha: f64,
+    /// Std-dev of multiplicative jitter on the whole transfer time.
+    pub jitter_frac: f64,
+}
+
+impl NetworkProfile {
+    /// The Table-1 calibration (the paper's SL6 VM behind VirtualBox NAT).
+    pub fn paper_testbed() -> Self {
+        NetworkProfile {
+            setup_s: 5.5,
+            bandwidth_bps: 17.3e6,
+            congestion_alpha: 0.01,
+            jitter_frac: 0.03,
+        }
+    }
+
+    /// An instantaneous profile (unit tests).
+    pub fn instant() -> Self {
+        NetworkProfile {
+            setup_s: 0.0,
+            bandwidth_bps: f64::INFINITY,
+            congestion_alpha: 0.0,
+            jitter_frac: 0.0,
+        }
+    }
+
+    /// A fast local profile for real-sleep examples (milliseconds scale).
+    pub fn fast_local() -> Self {
+        NetworkProfile {
+            setup_s: 0.005,
+            bandwidth_bps: 2.0e9,
+            congestion_alpha: 0.01,
+            jitter_frac: 0.02,
+        }
+    }
+
+    /// Aggregate uplink goodput with `streams` concurrent transfers.
+    pub fn aggregate_bandwidth(&self, streams: usize) -> f64 {
+        let s = streams.max(1) as f64;
+        let degraded = 1.0 - self.congestion_alpha * (s - 1.0);
+        self.bandwidth_bps * degraded.max(0.3)
+    }
+
+    /// Per-stream share of the uplink with `streams` concurrent transfers.
+    pub fn per_stream_bandwidth(&self, streams: usize) -> f64 {
+        self.aggregate_bandwidth(streams) / streams.max(1) as f64
+    }
+
+    /// Deterministic (jitter-free) transfer time for `size` bytes when
+    /// `streams` transfers share the uplink for the whole duration.
+    pub fn transfer_time(&self, size: u64, streams: usize) -> f64 {
+        let bw = self.per_stream_bandwidth(streams);
+        if bw.is_infinite() {
+            self.setup_s
+        } else {
+            self.setup_s + size as f64 / bw
+        }
+    }
+
+    /// Apply multiplicative jitter to a transfer time.
+    pub fn jittered(&self, t: f64, rng: &mut crate::util::prng::Rng) -> f64 {
+        if self.jitter_frac == 0.0 {
+            return t;
+        }
+        let f = 1.0 + self.jitter_frac * rng.gaussian();
+        t * f.max(0.1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reproduces_table1_serial_rows() {
+        // Serial transfers: one stream at a time.
+        let p = NetworkProfile::paper_testbed();
+        // 1 x 756 kB ≈ 6 s
+        let t_small = p.transfer_time(756_000, 1);
+        assert!((t_small - 6.0).abs() < 0.6, "{t_small}");
+        // 10 x 75.6 kB serial ≈ 54 s
+        let t_split_small = 10.0 * p.transfer_time(75_600, 1);
+        assert!((t_split_small - 54.0).abs() < 5.0, "{t_split_small}");
+        // 1 x 2.4 GB ≈ 142 s
+        let t_large = p.transfer_time(2_400_000_000, 1);
+        assert!((t_large - 142.0).abs() < 5.0, "{t_large}");
+        // 10 x 243 MB serial ≈ 206 s (paper: avg 20 s each)
+        let t_split_large = 10.0 * p.transfer_time(240_000_000, 1);
+        assert!((t_split_large - 206.0).abs() < 15.0, "{t_split_large}");
+    }
+
+    #[test]
+    fn bandwidth_shared_across_streams() {
+        let p = NetworkProfile::paper_testbed();
+        let one = p.per_stream_bandwidth(1);
+        let ten = p.per_stream_bandwidth(10);
+        assert!(ten < one / 9.0, "10 streams must share the uplink");
+        // Aggregate only mildly degraded.
+        assert!(p.aggregate_bandwidth(10) > 0.85 * p.aggregate_bandwidth(1));
+    }
+
+    #[test]
+    fn congestion_floor() {
+        let mut p = NetworkProfile::paper_testbed();
+        p.congestion_alpha = 0.2;
+        assert!(p.aggregate_bandwidth(100) >= 0.3 * p.bandwidth_bps - 1.0);
+    }
+
+    #[test]
+    fn instant_profile() {
+        let p = NetworkProfile::instant();
+        assert_eq!(p.transfer_time(1 << 30, 4), 0.0);
+    }
+
+    #[test]
+    fn jitter_statistics() {
+        let p = NetworkProfile::paper_testbed();
+        let mut rng = crate::util::prng::Rng::new(1);
+        let n = 5000;
+        let mean: f64 =
+            (0..n).map(|_| p.jittered(100.0, &mut rng)).sum::<f64>() / n as f64;
+        assert!((mean - 100.0).abs() < 1.0, "{mean}");
+    }
+}

@@ -1,0 +1,166 @@
+//! SE registry: the ordered vector of endpoints supporting a VO.
+//!
+//! The paper: "we retrieve a vector of all of the s Storage Element (SE)
+//! endpoints supporting the User's VO. Placement is performed as a
+//! round-robin loop over this vector" and notes the vector "is always
+//! ordered the same way" — which skews chunk counts toward early entries.
+//! The registry reproduces exactly that: a stable, insertion-ordered
+//! vector per VO.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use super::StorageElement;
+use crate::{Error, Result};
+
+/// Static facts about an SE, as consumed by placement policies.
+#[derive(Clone, Debug)]
+pub struct SeInfo {
+    pub name: String,
+    pub region: String,
+    pub available: bool,
+    pub used_bytes: u64,
+}
+
+/// Registry of SEs and VO support lists.
+#[derive(Default)]
+pub struct SeRegistry {
+    ses: Vec<Arc<dyn StorageElement>>,
+    by_name: BTreeMap<String, usize>,
+    vo_support: BTreeMap<String, Vec<usize>>,
+}
+
+impl SeRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register an SE and declare the VOs it supports.
+    pub fn register(&mut self, se: Arc<dyn StorageElement>, vos: &[&str]) -> Result<()> {
+        let name = se.name().to_string();
+        if self.by_name.contains_key(&name) {
+            return Err(Error::Config(format!("duplicate SE name `{name}`")));
+        }
+        let idx = self.ses.len();
+        self.ses.push(se);
+        self.by_name.insert(name, idx);
+        for vo in vos {
+            self.vo_support.entry(vo.to_string()).or_default().push(idx);
+        }
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.ses.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ses.is_empty()
+    }
+
+    pub fn get(&self, name: &str) -> Option<Arc<dyn StorageElement>> {
+        self.by_name.get(name).map(|&i| Arc::clone(&self.ses[i]))
+    }
+
+    pub fn all(&self) -> Vec<Arc<dyn StorageElement>> {
+        self.ses.iter().map(Arc::clone).collect()
+    }
+
+    /// The paper's "vector of all SE endpoints supporting the User's VO" —
+    /// stable order (registration order), including unavailable SEs (the
+    /// proof-of-concept shim discovers failures only when transfers fail).
+    pub fn vo_vector(&self, vo: &str) -> Vec<Arc<dyn StorageElement>> {
+        self.vo_support
+            .get(vo)
+            .map(|idxs| idxs.iter().map(|&i| Arc::clone(&self.ses[i])).collect())
+            .unwrap_or_default()
+    }
+
+    /// Placement-facing snapshot of the VO vector.
+    pub fn vo_infos(&self, vo: &str) -> Vec<SeInfo> {
+        self.vo_vector(vo)
+            .iter()
+            .map(|se| SeInfo {
+                name: se.name().to_string(),
+                region: se.region().to_string(),
+                available: se.is_available(),
+                used_bytes: se.used_bytes(),
+            })
+            .collect()
+    }
+
+    /// Fraction of registered SEs currently available (the paper's ">90%
+    /// of SEs are available at any one time" figure, measurable here).
+    pub fn availability(&self) -> f64 {
+        if self.ses.is_empty() {
+            return 1.0;
+        }
+        let up = self.ses.iter().filter(|se| se.is_available()).count();
+        up as f64 / self.ses.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::se::MemSe;
+
+    fn reg() -> SeRegistry {
+        let mut r = SeRegistry::new();
+        for (i, region) in ["uk", "uk", "fr", "de", "us"].iter().enumerate() {
+            r.register(
+                Arc::new(MemSe::new(format!("SE-{i}"), *region)),
+                if i < 3 { &["na62", "atlas"] } else { &["atlas"] },
+            )
+            .unwrap();
+        }
+        r
+    }
+
+    #[test]
+    fn vo_vector_stable_order() {
+        let r = reg();
+        let v1: Vec<String> =
+            r.vo_vector("na62").iter().map(|s| s.name().to_string()).collect();
+        let v2: Vec<String> =
+            r.vo_vector("na62").iter().map(|s| s.name().to_string()).collect();
+        assert_eq!(v1, v2);
+        assert_eq!(v1, vec!["SE-0", "SE-1", "SE-2"]);
+        assert_eq!(r.vo_vector("atlas").len(), 5);
+        assert!(r.vo_vector("unknown").is_empty());
+    }
+
+    #[test]
+    fn duplicate_name_rejected() {
+        let mut r = reg();
+        assert!(r
+            .register(Arc::new(MemSe::new("SE-0", "uk")), &["na62"])
+            .is_err());
+    }
+
+    #[test]
+    fn availability_fraction() {
+        let r = reg();
+        assert_eq!(r.availability(), 1.0);
+        r.get("SE-3").unwrap().set_available(false);
+        assert!((r.availability() - 0.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn vo_infos_reflect_state() {
+        let r = reg();
+        r.get("SE-1").unwrap().set_available(false);
+        let infos = r.vo_infos("na62");
+        assert_eq!(infos.len(), 3);
+        assert!(!infos[1].available);
+        assert_eq!(infos[2].region, "fr");
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        let r = reg();
+        assert!(r.get("SE-2").is_some());
+        assert!(r.get("nope").is_none());
+        assert_eq!(r.len(), 5);
+    }
+}

@@ -1,0 +1,307 @@
+//! The continuous-time transfer simulator.
+//!
+//! State machine per §2.4: a queue of transfers, `workers` slots. A
+//! transfer occupies its worker for `setup_s` (channel negotiation — no
+//! bandwidth consumed), then enters the data phase where every active
+//! data stream gets an equal share of the aggregate uplink
+//! `bandwidth · (1 − α·(streams−1))`. Rates are recomputed at every
+//! event (setup completion / transfer completion), which makes the
+//! trajectory piecewise-linear and exactly solvable — no time stepping.
+
+use crate::se::NetworkProfile;
+use crate::util::prng::Rng;
+
+/// One simulated transfer job.
+#[derive(Clone, Debug)]
+struct Job {
+    index: usize,
+    size: u64,
+}
+
+#[derive(Clone, Debug)]
+enum Phase {
+    Setup { ends_at: f64, job: Job },
+    Data { remaining: f64, job: Job },
+}
+
+/// Result of a simulated pool run.
+#[derive(Clone, Debug)]
+pub struct SimOutcome {
+    /// Wall-clock seconds until the quota (or everything) completed.
+    pub elapsed_s: f64,
+    /// (job index, completion time) in completion order.
+    pub completions: Vec<(usize, f64)>,
+    /// Jobs never started because the quota was met first.
+    pub skipped: usize,
+}
+
+impl SimOutcome {
+    pub fn completed_indices(&self) -> Vec<usize> {
+        self.completions.iter().map(|(i, _)| *i).collect()
+    }
+}
+
+/// The simulator.
+pub struct TransferSim {
+    profile: NetworkProfile,
+    workers: usize,
+}
+
+impl TransferSim {
+    pub fn new(profile: NetworkProfile, workers: usize) -> Self {
+        TransferSim { profile, workers: workers.max(1) }
+    }
+
+    /// Simulate transferring `sizes` (bytes per job, in queue order),
+    /// stopping once `quota` jobs have completed. Jitter is applied per
+    /// job from `rng`; pass a fresh seeded RNG for reproducibility.
+    pub fn run(&self, sizes: &[u64], quota: usize, rng: &mut Rng) -> SimOutcome {
+        let quota = quota.min(sizes.len());
+        let mut queue: std::collections::VecDeque<Job> = sizes
+            .iter()
+            .enumerate()
+            .map(|(index, &size)| Job { index, size })
+            .collect();
+
+        // Per-job multiplicative jitter on both setup and data phases.
+        let mut jitter: Vec<f64> = Vec::with_capacity(sizes.len());
+        for _ in 0..sizes.len() {
+            jitter.push(if self.profile.jitter_frac > 0.0 {
+                (1.0 + self.profile.jitter_frac * rng.gaussian()).max(0.1)
+            } else {
+                1.0
+            });
+        }
+
+        let mut active: Vec<Phase> = Vec::with_capacity(self.workers);
+        let mut now = 0.0f64;
+        let mut completions: Vec<(usize, f64)> = Vec::new();
+
+        // Fill initial worker slots.
+        while active.len() < self.workers {
+            match queue.pop_front() {
+                Some(job) => {
+                    let setup = self.profile.setup_s * jitter[job.index];
+                    active.push(Phase::Setup { ends_at: now + setup, job });
+                }
+                None => break,
+            }
+        }
+
+        while completions.len() < quota && !active.is_empty() {
+            // Current data-phase rate.
+            let data_streams = active
+                .iter()
+                .filter(|p| matches!(p, Phase::Data { .. }))
+                .count();
+            let rate = if data_streams > 0 {
+                self.profile.per_stream_bandwidth(data_streams)
+            } else {
+                f64::INFINITY
+            };
+
+            // Next event: earliest setup end or data completion.
+            let mut next_t = f64::INFINITY;
+            let mut next_i = 0usize;
+            for (i, p) in active.iter().enumerate() {
+                let t = match p {
+                    Phase::Setup { ends_at, .. } => *ends_at,
+                    Phase::Data { remaining, .. } => now + remaining / rate,
+                };
+                if t < next_t {
+                    next_t = t;
+                    next_i = i;
+                }
+            }
+            debug_assert!(next_t.is_finite());
+            let dt = (next_t - now).max(0.0);
+
+            // Drain data streams by dt; force-fire the argmin event so f64
+            // rounding residues can never stall the clock.
+            for (i, p) in active.iter_mut().enumerate() {
+                if let Phase::Data { remaining, .. } = p {
+                    *remaining = (*remaining - rate * dt).max(0.0);
+                    if i == next_i {
+                        *remaining = 0.0;
+                    }
+                }
+            }
+            now = next_t;
+
+            // Process all events landing at `now` (tolerances are relative
+            // to the magnitudes involved: seconds ~1e2, bytes ~1e9).
+            let mut i = 0;
+            while i < active.len() {
+                let fire = match &active[i] {
+                    Phase::Setup { ends_at, .. } => *ends_at <= now + 1e-9,
+                    Phase::Data { remaining, .. } => *remaining <= 1e-6,
+                };
+                if !fire {
+                    i += 1;
+                    continue;
+                }
+                match active.swap_remove(i) {
+                    Phase::Setup { job, .. } => {
+                        let bytes = job.size as f64 * jitter[job.index];
+                        active.push(Phase::Data { remaining: bytes, job });
+                        // (re-examine the slot we swapped into position i)
+                    }
+                    Phase::Data { job, .. } => {
+                        completions.push((job.index, now));
+                        if completions.len() >= quota {
+                            break;
+                        }
+                        if let Some(next_job) = queue.pop_front() {
+                            let setup = self.profile.setup_s * jitter[next_job.index];
+                            active.push(Phase::Setup {
+                                ends_at: now + setup,
+                                job: next_job,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+
+        SimOutcome { elapsed_s: now, completions, skipped: queue.len() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn no_jitter(setup: f64, bw: f64) -> NetworkProfile {
+        NetworkProfile {
+            setup_s: setup,
+            bandwidth_bps: bw,
+            congestion_alpha: 0.0,
+            jitter_frac: 0.0,
+        }
+    }
+
+    #[test]
+    fn single_transfer_time_exact() {
+        let sim = TransferSim::new(no_jitter(5.0, 100.0), 1);
+        let out = sim.run(&[1000], 1, &mut Rng::new(0));
+        assert!((out.elapsed_s - 15.0).abs() < 1e-9, "{}", out.elapsed_s);
+    }
+
+    #[test]
+    fn serial_transfers_sum() {
+        let sim = TransferSim::new(no_jitter(2.0, 100.0), 1);
+        let out = sim.run(&[100, 100, 100], 3, &mut Rng::new(0));
+        // 3 x (2 + 1) = 9
+        assert!((out.elapsed_s - 9.0).abs() < 1e-9, "{}", out.elapsed_s);
+        assert_eq!(out.completed_indices(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn parallel_setup_overlaps() {
+        // 2 workers, setup dominates: both setups run concurrently.
+        let sim = TransferSim::new(no_jitter(10.0, f64::INFINITY), 2);
+        let out = sim.run(&[1, 1], 2, &mut Rng::new(0));
+        assert!((out.elapsed_s - 10.0).abs() < 1e-9, "{}", out.elapsed_s);
+    }
+
+    #[test]
+    fn shared_bandwidth_halves_rate() {
+        // Two concurrent 1000-byte data phases over a 100 B/s uplink:
+        // each gets 50 B/s -> 20 s + no setup.
+        let sim = TransferSim::new(no_jitter(0.0, 100.0), 2);
+        let out = sim.run(&[1000, 1000], 2, &mut Rng::new(0));
+        assert!((out.elapsed_s - 20.0).abs() < 1e-6, "{}", out.elapsed_s);
+    }
+
+    #[test]
+    fn parallel_equals_serial_when_bandwidth_bound() {
+        // With zero setup, total bytes / uplink is invariant to workers.
+        let sizes = vec![5000u64; 10];
+        let serial = TransferSim::new(no_jitter(0.0, 1000.0), 1)
+            .run(&sizes, 10, &mut Rng::new(0));
+        let parallel = TransferSim::new(no_jitter(0.0, 1000.0), 10)
+            .run(&sizes, 10, &mut Rng::new(0));
+        assert!((serial.elapsed_s - 50.0).abs() < 1e-6);
+        assert!((parallel.elapsed_s - 50.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn early_stop_takes_fastest() {
+        // 4 jobs, quota 2, 4 workers, no contention: finish at size/bw.
+        let sim = TransferSim::new(no_jitter(0.0, f64::INFINITY), 4);
+        let out = sim.run(&[100, 100, 100, 100], 2, &mut Rng::new(0));
+        assert_eq!(out.completions.len(), 2);
+    }
+
+    #[test]
+    fn early_stop_skips_queue() {
+        let sim = TransferSim::new(no_jitter(1.0, 100.0), 1);
+        let out = sim.run(&[10, 10, 10, 10, 10], 2, &mut Rng::new(0));
+        assert_eq!(out.completions.len(), 2);
+        assert_eq!(out.skipped, 3);
+        // 2 x (1 + 0.1)
+        assert!((out.elapsed_s - 2.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn congestion_slows_aggregate() {
+        let mut p = no_jitter(0.0, 1000.0);
+        p.congestion_alpha = 0.05;
+        let sizes = vec![10_000u64; 4];
+        let serial = TransferSim::new(p.clone(), 1).run(&sizes, 4, &mut Rng::new(0));
+        let parallel = TransferSim::new(p, 4).run(&sizes, 4, &mut Rng::new(0));
+        assert!(
+            parallel.elapsed_s > serial.elapsed_s,
+            "parallel {} vs serial {}",
+            parallel.elapsed_s,
+            serial.elapsed_s
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let p = NetworkProfile::paper_testbed();
+        let sizes = vec![75_600u64; 15];
+        let a = TransferSim::new(p.clone(), 5).run(&sizes, 10, &mut Rng::new(42));
+        let b = TransferSim::new(p, 5).run(&sizes, 10, &mut Rng::new(42));
+        assert_eq!(a.elapsed_s, b.elapsed_s);
+        assert_eq!(a.completed_indices(), b.completed_indices());
+    }
+
+    #[test]
+    fn reproduces_table1_totals() {
+        // The DES must agree with the closed-form profile on serial runs.
+        let p = NetworkProfile {
+            jitter_frac: 0.0,
+            ..NetworkProfile::paper_testbed()
+        };
+        let sim = TransferSim::new(p.clone(), 1);
+        let t_small = sim.run(&[756_000], 1, &mut Rng::new(0)).elapsed_s;
+        assert!((t_small - 6.0).abs() < 0.6, "{t_small}");
+        let t_split = sim.run(&vec![75_600; 10], 10, &mut Rng::new(0)).elapsed_s;
+        assert!((t_split - 54.0).abs() < 5.0, "{t_split}");
+        let t_large = sim.run(&[2_400_000_000], 1, &mut Rng::new(0)).elapsed_s;
+        assert!((t_large - 142.0).abs() < 8.0, "{t_large}");
+        let t_large_split =
+            sim.run(&vec![240_000_000; 10], 10, &mut Rng::new(0)).elapsed_s;
+        assert!((t_large_split - 206.0).abs() < 20.0, "{t_large_split}");
+    }
+
+    #[test]
+    fn more_workers_never_slow_latency_bound_runs() {
+        // Small files (latency-dominated): time decreases with workers.
+        let p = NetworkProfile {
+            jitter_frac: 0.0,
+            ..NetworkProfile::paper_testbed()
+        };
+        let sizes = vec![76_800u64 + 64; 15];
+        let mut prev = f64::INFINITY;
+        for w in [1usize, 2, 5, 10, 15] {
+            let t = TransferSim::new(p.clone(), w)
+                .run(&sizes, 15, &mut Rng::new(0))
+                .elapsed_s;
+            assert!(t <= prev + 1e-6, "w={w}: {t} > {prev}");
+            prev = t;
+        }
+    }
+}

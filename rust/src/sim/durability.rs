@@ -1,0 +1,214 @@
+//! The §1.1 resilience analysis: file availability under SE outages.
+//!
+//! The paper argues that with ">90% of SEs available at any one time",
+//! two full replicas "may be a significant overcommitment", while erasure
+//! coding offers "rational" replication levels. This module quantifies
+//! that: for SE availability `p`,
+//!
+//! * replication r×: file available unless all r replicas are down —
+//!   `A = 1 − (1−p)^r` at storage cost `r`.
+//! * EC (k, k+m): available iff ≥ k of n chunk-holding SEs are up —
+//!   `A = Σ_{i=k}^{n} C(n,i) p^i (1−p)^{n−i}` at storage cost `n/k`.
+//!
+//! (Chunks are assumed on distinct SEs with independent failures — the
+//! standard model; the Monte-Carlo cross-check can correlate failures.)
+
+use crate::util::prng::Rng;
+
+/// Binomial coefficient as f64 (n ≤ 255 territory; exact within f64 for
+/// the sizes we use).
+pub fn binomial(n: usize, k: usize) -> f64 {
+    if k > n {
+        return 0.0;
+    }
+    let k = k.min(n - k);
+    let mut acc = 1.0f64;
+    for i in 0..k {
+        acc = acc * (n - i) as f64 / (i + 1) as f64;
+    }
+    acc
+}
+
+/// Availability of an r-replicated file at SE availability p.
+pub fn replication_availability(p: f64, r: usize) -> f64 {
+    1.0 - (1.0 - p).powi(r as i32)
+}
+
+/// Availability of a (k, n)-erasure-coded file at SE availability p.
+pub fn ec_availability(p: f64, k: usize, n: usize) -> f64 {
+    assert!(k <= n);
+    let q = 1.0 - p;
+    (k..=n)
+        .map(|i| binomial(n, i) * p.powi(i as i32) * q.powi((n - i) as i32))
+        .sum()
+}
+
+/// "Nines" of availability: −log10(1 − A), saturated at 16.
+pub fn nines(a: f64) -> f64 {
+    if a >= 1.0 {
+        16.0
+    } else {
+        (-(1.0 - a).log10()).min(16.0)
+    }
+}
+
+/// Monte-Carlo estimate of EC availability (cross-check + correlated
+/// failure support). Each trial samples n SE up/down states; with
+/// `correlation > 0`, a region-wide outage takes down a whole block of
+/// SEs together with that probability.
+pub fn ec_availability_mc(
+    p: f64,
+    k: usize,
+    n: usize,
+    trials: u64,
+    correlation: f64,
+    seed: u64,
+) -> f64 {
+    let mut rng = Rng::new(seed);
+    let mut ok = 0u64;
+    for _ in 0..trials {
+        let mut up = 0usize;
+        if correlation > 0.0 && rng.chance(correlation) {
+            // Correlated event: half the SEs share fate.
+            let block_up = rng.chance(p);
+            for i in 0..n {
+                let this_up = if i < n / 2 { block_up } else { rng.chance(p) };
+                up += this_up as usize;
+            }
+        } else {
+            for _ in 0..n {
+                up += rng.chance(p) as usize;
+            }
+        }
+        ok += (up >= k) as u64;
+    }
+    ok as f64 / trials as f64
+}
+
+/// One row of the durability table: a scheme, its storage overhead and
+/// its availability at a given p.
+#[derive(Clone, Debug)]
+pub struct DurabilityRow {
+    pub scheme: String,
+    pub overhead: f64,
+    pub availability: f64,
+    pub nines: f64,
+}
+
+/// The §1.1 comparison table at SE availability `p`.
+pub fn comparison_table(p: f64) -> Vec<DurabilityRow> {
+    let mut rows = Vec::new();
+    for r in 1..=3usize {
+        let a = replication_availability(p, r);
+        rows.push(DurabilityRow {
+            scheme: format!("replication x{r}"),
+            overhead: r as f64,
+            availability: a,
+            nines: nines(a),
+        });
+    }
+    for (k, m) in [(8usize, 2usize), (10, 5), (4, 2), (6, 3)] {
+        let a = ec_availability(p, k, k + m);
+        rows.push(DurabilityRow {
+            scheme: format!("EC {k}+{m}"),
+            overhead: (k + m) as f64 / k as f64,
+            availability: a,
+            nines: nines(a),
+        });
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn binomial_values() {
+        assert_eq!(binomial(5, 0), 1.0);
+        assert_eq!(binomial(5, 5), 1.0);
+        assert_eq!(binomial(5, 2), 10.0);
+        assert_eq!(binomial(15, 10), 3003.0);
+        assert_eq!(binomial(3, 7), 0.0);
+    }
+
+    #[test]
+    fn replication_formulae() {
+        assert!((replication_availability(0.9, 1) - 0.9).abs() < 1e-12);
+        assert!((replication_availability(0.9, 2) - 0.99).abs() < 1e-12);
+        assert!((replication_availability(0.9, 3) - 0.999).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ec_degenerate_cases() {
+        // k = n: all chunks needed -> p^n.
+        assert!((ec_availability(0.9, 3, 3) - 0.9f64.powi(3)).abs() < 1e-12);
+        // k = 1, n = r: identical to r-replication.
+        for r in 1..=4 {
+            assert!(
+                (ec_availability(0.9, 1, r) - replication_availability(0.9, r)).abs()
+                    < 1e-12
+            );
+        }
+    }
+
+    #[test]
+    fn binomial_sums_to_one() {
+        let p: f64 = 0.83;
+        let n = 15;
+        let total: f64 = (0..=n)
+            .map(|i| binomial(n, i) * p.powi(i as i32) * (1.0 - p).powi((n - i) as i32))
+            .sum();
+        assert!((total - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn paper_headline_comparison() {
+        // At p = 0.9: EC 10+5 (1.5x storage) beats 2x replication (0.99)
+        // by orders of magnitude — the paper's overcommitment argument.
+        let p = 0.9;
+        let two_rep = replication_availability(p, 2);
+        let ec = ec_availability(p, 10, 15);
+        assert!(ec > two_rep, "{ec} vs {two_rep}");
+        // 10+5 at p=0.9: ~2.65 nines at 1.5x storage, vs exactly 2 nines
+        // at 2.0x storage — strictly better on both axes.
+        assert!(nines(ec) > 2.5, "EC 10+5 at p=0.9 gives {} nines", nines(ec));
+        assert!(nines(two_rep) < 2.1);
+    }
+
+    #[test]
+    fn mc_matches_analytic() {
+        let p = 0.9;
+        let analytic = ec_availability(p, 10, 15);
+        let mc = ec_availability_mc(p, 10, 15, 200_000, 0.0, 7);
+        assert!(
+            (mc - analytic).abs() < 0.003,
+            "mc={mc} analytic={analytic}"
+        );
+    }
+
+    #[test]
+    fn correlation_hurts() {
+        let p = 0.85;
+        let indep = ec_availability_mc(p, 10, 15, 100_000, 0.0, 3);
+        let corr = ec_availability_mc(p, 10, 15, 100_000, 0.5, 3);
+        assert!(corr < indep, "correlated outages must reduce availability");
+    }
+
+    #[test]
+    fn table_is_complete_and_ordered() {
+        let rows = comparison_table(0.9);
+        assert_eq!(rows.len(), 7);
+        let ec105 = rows.iter().find(|r| r.scheme == "EC 10+5").unwrap();
+        assert!((ec105.overhead - 1.5).abs() < 1e-12);
+        let rep2 = rows.iter().find(|r| r.scheme == "replication x2").unwrap();
+        assert!(ec105.availability > rep2.availability);
+        assert!(ec105.overhead < rep2.overhead);
+    }
+
+    #[test]
+    fn nines_saturates() {
+        assert_eq!(nines(1.0), 16.0);
+        assert!((nines(0.99) - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,30 @@
+//! Deterministic simulation of the paper's testbed.
+//!
+//! The paper measured wall-clock times on an SL6 VM behind a slow NATed
+//! uplink; this box has neither that network nor 15 spare cores, so the
+//! figure benches drive a **continuous-time discrete-event simulator**
+//! calibrated to Table 1 (see [`crate::se::NetworkProfile`]). The DES
+//! models exactly the mechanics the paper describes:
+//!
+//! * P worker threads consuming a queue of chunk transfers (§2.4);
+//! * per-transfer channel-setup latency (the dominant small-file cost);
+//! * a client uplink shared by all in-flight data phases, with a mild
+//!   per-stream congestion penalty (the Fig-5 "parallelism initially
+//!   harms" effect);
+//! * a serial, non-parallelised encode/decode phase (the Fig-3 Amdahl
+//!   ceiling);
+//! * download early-stop after K successes.
+//!
+//! [`durability`] adds the §1.1 analysis: availability of replicated vs
+//! erasure-coded files as a function of SE availability, analytic
+//! (binomial) and Monte-Carlo.
+
+pub mod des;
+pub mod durability;
+pub mod runner;
+pub mod workload;
+
+pub use des::{SimOutcome, TransferSim};
+pub use runner::{
+    average, download_scenario, upload_scenario, upload_split, upload_whole, Scenario,
+};

@@ -1,0 +1,118 @@
+//! Workload generation: corpora of files with HEP-flavoured size mixes.
+//!
+//! The paper motivates the shim with small-VO data management (NA62 et
+//! al.): a few large raw/reco files plus many small user/log files. The
+//! generator produces deterministic corpora for the e2e example and the
+//! benches.
+
+use crate::util::prng::Rng;
+
+/// A class of files in a workload mix.
+#[derive(Clone, Debug)]
+pub struct FileClass {
+    pub label: &'static str,
+    /// Log-uniform size range [min, max] bytes.
+    pub min_bytes: u64,
+    pub max_bytes: u64,
+    /// Relative weight in the mix.
+    pub weight: f64,
+}
+
+/// The small-VO mix used by the examples.
+pub fn small_vo_mix() -> Vec<FileClass> {
+    vec![
+        FileClass { label: "raw", min_bytes: 4 << 20, max_bytes: 32 << 20, weight: 0.2 },
+        FileClass { label: "reco", min_bytes: 1 << 20, max_bytes: 8 << 20, weight: 0.3 },
+        FileClass { label: "user", min_bytes: 64 << 10, max_bytes: 1 << 20, weight: 0.4 },
+        FileClass { label: "log", min_bytes: 1 << 10, max_bytes: 64 << 10, weight: 0.1 },
+    ]
+}
+
+/// One generated file: name, class label, contents.
+#[derive(Clone, Debug)]
+pub struct WorkloadFile {
+    pub name: String,
+    pub class: &'static str,
+    pub data: Vec<u8>,
+}
+
+/// Generate `count` files from `mix`, deterministically from `seed`.
+/// Contents are pseudorandom (incompressible, like physics data).
+pub fn generate(mix: &[FileClass], count: usize, seed: u64) -> Vec<WorkloadFile> {
+    assert!(!mix.is_empty());
+    let total_w: f64 = mix.iter().map(|c| c.weight).sum();
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::with_capacity(count);
+    for i in 0..count {
+        // Weighted class pick.
+        let mut x = rng.f64() * total_w;
+        let mut class = &mix[0];
+        for c in mix {
+            if x < c.weight {
+                class = c;
+                break;
+            }
+            x -= c.weight;
+        }
+        // Log-uniform size.
+        let (lo, hi) = (class.min_bytes.max(1) as f64, class.max_bytes.max(2) as f64);
+        let size = (lo * (hi / lo).powf(rng.f64())) as usize;
+        out.push(WorkloadFile {
+            name: format!("{}_{i:04}.dat", class.label),
+            class: class.label,
+            data: rng.bytes(size),
+        });
+    }
+    out
+}
+
+/// Total bytes in a corpus.
+pub fn corpus_bytes(files: &[WorkloadFile]) -> u64 {
+    files.iter().map(|f| f.data.len() as u64).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let a = generate(&small_vo_mix(), 20, 1);
+        let b = generate(&small_vo_mix(), 20, 1);
+        assert_eq!(a.len(), 20);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.name, y.name);
+            assert_eq!(x.data, y.data);
+        }
+    }
+
+    #[test]
+    fn sizes_within_class_bounds() {
+        let mix = small_vo_mix();
+        for f in generate(&mix, 100, 2) {
+            let class = mix.iter().find(|c| c.label == f.class).unwrap();
+            assert!(f.data.len() as u64 >= class.min_bytes);
+            assert!(f.data.len() as u64 <= class.max_bytes + 1);
+        }
+    }
+
+    #[test]
+    fn mix_produces_multiple_classes() {
+        let files = generate(&small_vo_mix(), 100, 3);
+        let classes: std::collections::BTreeSet<_> =
+            files.iter().map(|f| f.class).collect();
+        assert!(classes.len() >= 3, "{classes:?}");
+    }
+
+    #[test]
+    fn contents_incompressible_ish() {
+        // Pseudorandom bytes: every value should appear in a 64 KiB file.
+        let files = generate(&small_vo_mix(), 30, 4);
+        let big = files.iter().max_by_key(|f| f.data.len()).unwrap();
+        let mut seen = [false; 256];
+        for &b in big.data.iter().take(1 << 16) {
+            seen[b as usize] = true;
+        }
+        assert!(seen.iter().filter(|&&s| s).count() > 250);
+    }
+}

@@ -1,0 +1,72 @@
+//! Lightweight property-testing support (proptest is unavailable offline).
+//!
+//! `forall(n, |rng| ...)` runs the closure `n` times with independently
+//! seeded deterministic RNGs. On panic the failing case's seed is printed
+//! so the case can be replayed with `replay(seed, ...)`. This loses
+//! proptest's shrinking but keeps the two properties that matter for CI:
+//! deterministic replay and coverage across many random cases.
+
+use crate::util::prng::Rng;
+
+/// Base seed; change DRS_PROP_SEED to explore a different universe.
+fn base_seed() -> u64 {
+    std::env::var("DRS_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xD15C_0000)
+}
+
+/// Run `f` against `cases` independently seeded RNGs.
+///
+/// Panics (re-raising the inner panic) with the failing seed in the message.
+pub fn forall<F: Fn(&mut Rng)>(cases: u64, f: F) {
+    let base = base_seed();
+    for case in 0..cases {
+        let seed = base.wrapping_add(case.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut rng = Rng::new(seed);
+            f(&mut rng);
+        }));
+        if let Err(payload) = result {
+            eprintln!(
+                "property failed at case {case}/{cases}, seed {seed:#x} \
+                 (replay with drs::testkit::replay({seed:#x}, ...))"
+            );
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+/// Replay a single failing case by seed.
+pub fn replay<F: Fn(&mut Rng)>(seed: u64, f: F) {
+    let mut rng = Rng::new(seed);
+    f(&mut rng);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_runs_all_cases() {
+        let count = std::cell::Cell::new(0u64);
+        forall(17, |_| count.set(count.get() + 1));
+        assert_eq!(count.get(), 17);
+    }
+
+    #[test]
+    fn forall_cases_get_distinct_randomness() {
+        let mut seen = std::collections::HashSet::new();
+        let seen_ref = std::cell::RefCell::new(&mut seen);
+        forall(10, |rng| {
+            seen_ref.borrow_mut().insert(rng.next_u64());
+        });
+        assert_eq!(seen.len(), 10);
+    }
+
+    #[test]
+    #[should_panic]
+    fn forall_propagates_failures() {
+        forall(5, |rng| assert!(rng.f64() < 0.5, "intentional"));
+    }
+}

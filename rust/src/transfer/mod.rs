@@ -1,0 +1,19 @@
+//! The §2.4 transfer machinery: a work-pool of transfer threads with
+//! early termination and per-op retries.
+//!
+//! The paper: *"a user-defined set of worker threads are created, and
+//! consume file transfer operations until enough chunks have been fetched
+//! in total ... In the limit where the number of threads is equal to the
+//! number of chunks, we essentially select the N fastest chunks out of the
+//! total stripe."* [`pool::WorkPool`] implements exactly that model with
+//! std threads (transfers are blocking calls against the SE trait).
+//!
+//! Retries are the paper's §4 further-work feature; [`retry::RetryPolicy`]
+//! implements both the easy serial variant and the pool-safe variant that
+//! re-queues onto a fallback SE.
+
+pub mod pool;
+pub mod retry;
+
+pub use pool::{PoolConfig, PoolOutcome, WorkPool};
+pub use retry::RetryPolicy;

@@ -1,0 +1,201 @@
+//! The work-pool executor.
+//!
+//! Jobs are indexed closures; `run` spawns `workers` threads that pull
+//! jobs off a shared queue until either the queue drains or `quota`
+//! successes have accumulated (download early-stop: K of K+M chunks).
+//! Jobs already in flight when the quota is reached run to completion
+//! (matching real transfer threads, which cannot be usefully cancelled
+//! mid-gridftp); queued jobs are abandoned.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::Result;
+
+/// Pool sizing: `workers == 1` reproduces the paper's serial tool.
+#[derive(Clone, Copy, Debug)]
+pub struct PoolConfig {
+    pub workers: usize,
+}
+
+impl PoolConfig {
+    pub fn serial() -> Self {
+        PoolConfig { workers: 1 }
+    }
+
+    pub fn parallel(workers: usize) -> Self {
+        PoolConfig { workers: workers.max(1) }
+    }
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        Self::serial()
+    }
+}
+
+/// Outcome of one pool run.
+#[derive(Debug)]
+pub struct PoolOutcome<T> {
+    /// (job index, value) for every success, in completion order.
+    pub successes: Vec<(usize, T)>,
+    /// (job index, error) for every failure, in completion order.
+    pub failures: Vec<(usize, crate::Error)>,
+    /// Jobs abandoned because the quota was already met.
+    pub skipped: usize,
+}
+
+impl<T> PoolOutcome<T> {
+    pub fn success_count(&self) -> usize {
+        self.successes.len()
+    }
+}
+
+/// A fixed-size work pool over indexed blocking jobs.
+pub struct WorkPool {
+    config: PoolConfig,
+}
+
+impl WorkPool {
+    pub fn new(config: PoolConfig) -> Self {
+        WorkPool { config }
+    }
+
+    /// Run `jobs`, stopping issue of new jobs once `quota` have succeeded.
+    /// `quota >= jobs.len()` means "run everything" (upload mode).
+    pub fn run<T, F>(&self, jobs: Vec<(usize, F)>, quota: usize) -> PoolOutcome<T>
+    where
+        T: Send,
+        F: FnOnce() -> Result<T> + Send,
+    {
+        let queue = Mutex::new(jobs.into_iter().collect::<std::collections::VecDeque<_>>());
+        let successes = Mutex::new(Vec::new());
+        let failures = Mutex::new(Vec::new());
+        let success_count = AtomicUsize::new(0);
+        let skipped = AtomicUsize::new(0);
+
+        std::thread::scope(|scope| {
+            for _ in 0..self.config.workers {
+                scope.spawn(|| loop {
+                    if success_count.load(Ordering::SeqCst) >= quota {
+                        // Quota met: drain-and-skip the rest.
+                        let mut q = queue.lock().unwrap();
+                        skipped.fetch_add(q.len(), Ordering::SeqCst);
+                        q.clear();
+                        return;
+                    }
+                    let job = queue.lock().unwrap().pop_front();
+                    let Some((idx, f)) = job else { return };
+                    match f() {
+                        Ok(v) => {
+                            successes.lock().unwrap().push((idx, v));
+                            success_count.fetch_add(1, Ordering::SeqCst);
+                        }
+                        Err(e) => failures.lock().unwrap().push((idx, e)),
+                    }
+                });
+            }
+        });
+
+        PoolOutcome {
+            successes: successes.into_inner().unwrap(),
+            failures: failures.into_inner().unwrap(),
+            skipped: skipped.into_inner(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::Error;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn jobs_ok(n: usize) -> Vec<(usize, impl FnOnce() -> Result<usize> + Send)> {
+        (0..n).map(|i| (i, move || Ok(i * 10))).collect()
+    }
+
+    #[test]
+    fn runs_everything_when_quota_large() {
+        let pool = WorkPool::new(PoolConfig::parallel(4));
+        let out = pool.run(jobs_ok(10), usize::MAX);
+        assert_eq!(out.success_count(), 10);
+        assert_eq!(out.failures.len(), 0);
+        assert_eq!(out.skipped, 0);
+        let mut vals: Vec<usize> = out.successes.iter().map(|(_, v)| *v).collect();
+        vals.sort_unstable();
+        assert_eq!(vals, (0..10).map(|i| i * 10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn early_stop_at_quota() {
+        // Serial pool: exactly quota jobs run, the rest are skipped.
+        let ran = AtomicUsize::new(0);
+        let jobs: Vec<(usize, _)> = (0..15)
+            .map(|i| {
+                let ran = &ran;
+                (i, move || {
+                    ran.fetch_add(1, Ordering::SeqCst);
+                    Ok(i)
+                })
+            })
+            .collect();
+        let out = WorkPool::new(PoolConfig::serial()).run(jobs, 10);
+        assert_eq!(out.success_count(), 10);
+        assert_eq!(ran.load(Ordering::SeqCst), 10);
+        assert_eq!(out.skipped, 5);
+    }
+
+    #[test]
+    fn early_stop_parallel_bounded_overshoot() {
+        // With w workers at most w-1 extra jobs can already be in flight
+        // when the quota lands.
+        let ran = AtomicUsize::new(0);
+        let jobs: Vec<(usize, _)> = (0..30)
+            .map(|i| {
+                let ran = &ran;
+                (i, move || {
+                    ran.fetch_add(1, Ordering::SeqCst);
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                    Ok(i)
+                })
+            })
+            .collect();
+        let workers = 4;
+        let out = WorkPool::new(PoolConfig::parallel(workers)).run(jobs, 10);
+        assert!(out.success_count() >= 10);
+        let total = ran.load(Ordering::SeqCst);
+        assert!(total <= 10 + workers, "ran {total}");
+    }
+
+    #[test]
+    fn failures_do_not_count_toward_quota() {
+        let jobs: Vec<(usize, Box<dyn FnOnce() -> Result<usize> + Send>)> = (0..10)
+            .map(|i| {
+                let f: Box<dyn FnOnce() -> Result<usize> + Send> = if i % 2 == 0 {
+                    Box::new(move || Err(Error::Transfer(format!("job {i}"))))
+                } else {
+                    Box::new(move || Ok(i))
+                };
+                (i, f)
+            })
+            .collect();
+        let out = WorkPool::new(PoolConfig::parallel(3)).run(jobs, 5);
+        assert_eq!(out.success_count(), 5);
+        assert_eq!(out.failures.len(), 5);
+    }
+
+    #[test]
+    fn zero_jobs() {
+        let out = WorkPool::new(PoolConfig::parallel(2)).run(jobs_ok(0), 5);
+        assert_eq!(out.success_count(), 0);
+        assert_eq!(out.skipped, 0);
+    }
+
+    #[test]
+    fn single_worker_preserves_queue_order() {
+        let out = WorkPool::new(PoolConfig::serial()).run(jobs_ok(8), usize::MAX);
+        let idxs: Vec<usize> = out.successes.iter().map(|(i, _)| *i).collect();
+        assert_eq!(idxs, (0..8).collect::<Vec<_>>());
+    }
+}

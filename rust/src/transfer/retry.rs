@@ -1,0 +1,57 @@
+//! Transfer retry policy (the paper's §4 further-work feature).
+
+/// How a failed chunk transfer is retried.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Total attempts per operation (1 = the paper's proof-of-concept:
+    /// "any failed transfer for any chunk will cause an upload to fail").
+    pub max_attempts: usize,
+    /// On upload failure, whether to fall back to the next SE in the
+    /// vector ("trying the next SE in the list ... disrupts the
+    /// distribution of chunks across the vector" — we do it anyway and let
+    /// the repair path re-balance later).
+    pub fallback_se: bool,
+}
+
+impl RetryPolicy {
+    /// The paper's proof-of-concept behaviour: no retries at all.
+    pub fn none() -> Self {
+        RetryPolicy { max_attempts: 1, fallback_se: false }
+    }
+
+    /// Sensible production default.
+    pub fn default_robust() -> Self {
+        RetryPolicy { max_attempts: 3, fallback_se: true }
+    }
+
+    pub fn retries_left(&self, attempts_made: usize) -> bool {
+        attempts_made < self.max_attempts
+    }
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self::none()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_is_single_shot() {
+        let r = RetryPolicy::none();
+        assert!(r.retries_left(0));
+        assert!(!r.retries_left(1));
+        assert!(!r.fallback_se);
+    }
+
+    #[test]
+    fn robust_allows_three() {
+        let r = RetryPolicy::default_robust();
+        assert!(r.retries_left(2));
+        assert!(!r.retries_left(3));
+        assert!(r.fallback_se);
+    }
+}

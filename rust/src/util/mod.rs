@@ -1,0 +1,49 @@
+//! Small self-contained utilities (no external deps are available offline,
+//! so JSON, PRNG and hex live here instead of serde/rand/hex).
+
+pub mod hexfmt;
+pub mod json;
+pub mod prng;
+
+/// Format a byte count human-readably (`1.5 MB`, `768 kB`, ...).
+pub fn fmt_bytes(n: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "kB", "MB", "GB", "TB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1000.0 && u < UNITS.len() - 1 {
+        v /= 1000.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n} B")
+    } else {
+        format!("{v:.1} {}", UNITS[u])
+    }
+}
+
+/// Format seconds as `mm:ss.t` / `12.3 s` depending on magnitude.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 120.0 {
+        format!("{}m{:04.1}s", (s / 60.0) as u64, s % 60.0)
+    } else {
+        format!("{s:.1}s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_units() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(756_000), "756.0 kB");
+        assert_eq!(fmt_bytes(2_400_000_000), "2.4 GB");
+    }
+
+    #[test]
+    fn secs_units() {
+        assert_eq!(fmt_secs(6.04), "6.0s");
+        assert_eq!(fmt_secs(206.0), "3m26.0s");
+    }
+}

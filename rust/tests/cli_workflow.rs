@@ -1,0 +1,122 @@
+//! End-to-end CLI workflow driven through `drs::cli::run` (the same code
+//! path as the binary): init → put → stat → kill → get (degraded) →
+//! repair → rm.
+
+use std::path::PathBuf;
+
+fn tmp(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!(
+        "drs-cli-{tag}-{}-{}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ))
+}
+
+fn run(ws: &PathBuf, args: &[&str]) -> i32 {
+    let mut argv = vec!["--workspace".to_string(), ws.display().to_string()];
+    argv.extend(args.iter().map(|s| s.to_string()));
+    drs::cli::run(argv)
+}
+
+#[test]
+fn full_workflow() {
+    let ws = tmp("flow");
+    let local_in = ws.join("input.dat");
+    let local_out = ws.join("output.dat");
+    std::fs::create_dir_all(&ws).unwrap();
+    let data: Vec<u8> = (0..100_000u32).map(|i| (i * 31 % 251) as u8).collect();
+    std::fs::write(&local_in, &data).unwrap();
+
+    assert_eq!(run(&ws, &["init", "--ses", "6", "--k", "4", "--m", "2"]), 0);
+    assert_eq!(
+        run(
+            &ws,
+            &["put", local_in.to_str().unwrap(), "/vo/data/run42.dat", "--workers", "3"]
+        ),
+        0
+    );
+    assert_eq!(run(&ws, &["ls", "/vo/data"]), 0);
+    assert_eq!(run(&ws, &["stat", "/vo/data/run42.dat"]), 0);
+    assert_eq!(run(&ws, &["meta", "/vo/data/run42.dat"]), 0);
+    assert_eq!(run(&ws, &["se", "list"]), 0);
+
+    // verify audits chunk checksums; read does a federated sparse read.
+    assert_eq!(run(&ws, &["verify", "/vo/data/run42.dat"]), 0);
+    assert_eq!(run(&ws, &["read", "/vo/data/run42.dat", "1000", "64"]), 0);
+
+    // Degraded read after two SE failures.
+    assert_eq!(run(&ws, &["se", "kill", "SE-01"]), 0);
+    assert_eq!(run(&ws, &["se", "kill", "SE-04"]), 0);
+    assert_eq!(
+        run(&ws, &["get", "/vo/data/run42.dat", local_out.to_str().unwrap(), "--workers", "4"]),
+        0
+    );
+    assert_eq!(std::fs::read(&local_out).unwrap(), data);
+
+    // Repair onto healthy SEs, then lose another one and still read.
+    assert_eq!(run(&ws, &["repair", "/vo/data/run42.dat"]), 0);
+    assert_eq!(run(&ws, &["se", "kill", "SE-02"]), 0);
+    std::fs::remove_file(&local_out).unwrap();
+    assert_eq!(
+        run(&ws, &["get", "/vo/data/run42.dat", local_out.to_str().unwrap()]),
+        0
+    );
+    assert_eq!(std::fs::read(&local_out).unwrap(), data);
+
+    // With SE-02 down one chunk is unfetchable: verify must flag it.
+    assert_eq!(run(&ws, &["verify", "/vo/data/run42.dat"]), 1);
+    // But the federated reader still serves sparse reads (decode path).
+    assert_eq!(run(&ws, &["read", "/vo/data/run42.dat", "0", "128"]), 0);
+
+    // rm cleans up.
+    assert_eq!(run(&ws, &["rm", "/vo/data/run42.dat"]), 0);
+    assert_eq!(run(&ws, &["stat", "/vo/data/run42.dat"]), 1);
+
+    // misc commands exercise without error
+    assert_eq!(run(&ws, &["durability", "--p", "0.9"]), 0);
+    assert_eq!(run(&ws, &["info"]), 0);
+    assert_eq!(run(&ws, &["help"]), 0);
+
+    std::fs::remove_dir_all(&ws).unwrap();
+}
+
+#[test]
+fn error_paths_return_nonzero() {
+    let ws = tmp("err");
+    std::fs::create_dir_all(&ws).unwrap();
+    // No workspace yet.
+    assert_eq!(run(&ws, &["ls", "/"]), 1);
+    assert_eq!(run(&ws, &["init", "--ses", "5"]), 0);
+    // Double init.
+    assert_eq!(run(&ws, &["init"]), 1);
+    // Missing file.
+    assert_eq!(run(&ws, &["get", "/vo/nothing", "/tmp/x"]), 1);
+    // Bad args.
+    assert_eq!(run(&ws, &["put", "only-one-arg"]), 2);
+    assert_eq!(run(&ws, &["se", "kill", "SE-99"]), 1);
+    std::fs::remove_dir_all(&ws).unwrap();
+}
+
+#[test]
+fn put_fails_cleanly_without_retry_when_se_down() {
+    let ws = tmp("down");
+    std::fs::create_dir_all(&ws).unwrap();
+    let local = ws.join("f.dat");
+    std::fs::write(&local, vec![7u8; 50_000]).unwrap();
+    assert_eq!(run(&ws, &["init", "--ses", "5", "--k", "4", "--m", "2"]), 0);
+    assert_eq!(run(&ws, &["se", "kill", "SE-02"]), 0);
+    // Paper semantics: no retry → put fails.
+    assert_eq!(run(&ws, &["put", local.to_str().unwrap(), "/vo/f.dat"]), 1);
+    // With --retry (further-work feature) it succeeds.
+    assert_eq!(
+        run(&ws, &["put", local.to_str().unwrap(), "/vo/f.dat", "--retry"]),
+        0
+    );
+    let out = ws.join("out.dat");
+    assert_eq!(run(&ws, &["get", "/vo/f.dat", out.to_str().unwrap()]), 0);
+    assert_eq!(std::fs::read(out).unwrap(), vec![7u8; 50_000]);
+    std::fs::remove_dir_all(&ws).unwrap();
+}

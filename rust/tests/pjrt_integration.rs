@@ -1,0 +1,207 @@
+//! Integration: the AOT pallas kernel (via PJRT) must agree bit-for-bit
+//! with the pure-rust codec, and the full shim must run on the PJRT
+//! backend end-to-end.
+//!
+//! Requires `make artifacts` (skips gracefully when artifacts are absent
+//! so `cargo test` still works from a clean checkout).
+
+use std::sync::Arc;
+
+use drs::dfm::{GetOptions, PutOptions, TestCluster};
+use drs::ec::{Codec, EcBackend, EcParams, PureRustBackend};
+use drs::gf::GfMatrix;
+use drs::runtime::{ArtifactKey, PjrtBackend, PjrtEngine};
+use drs::util::prng::Rng;
+
+fn engine() -> Option<Arc<PjrtEngine>> {
+    let dir = drs::runtime::default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Arc::new(PjrtEngine::new(&dir).expect("PJRT engine")))
+}
+
+#[test]
+fn encode_artifact_matches_pure_rust() {
+    let Some(engine) = engine() else { return };
+    let (k, m, b) = (4usize, 2usize, 16384usize);
+    assert!(engine.supports(&ArtifactKey::encode(k, m, b)));
+
+    let pjrt = PjrtBackend::new(engine);
+    let mut rng = Rng::new(1);
+    let rows: Vec<Vec<u8>> = (0..k).map(|_| rng.bytes(b)).collect();
+    let refs: Vec<&[u8]> = rows.iter().map(|v| v.as_slice()).collect();
+    let cauchy = GfMatrix::cauchy(m, k).unwrap();
+
+    let got = pjrt.matmul(&cauchy, &refs).unwrap();
+    let want = PureRustBackend.matmul(&cauchy, &refs).unwrap();
+    assert_eq!(got, want, "PJRT encode disagrees with pure rust");
+    assert_eq!(pjrt.call_counts().0, 1, "PJRT path must have been used");
+}
+
+#[test]
+fn decode_artifact_matches_pure_rust() {
+    let Some(engine) = engine() else { return };
+    let (k, b) = (4usize, 16384usize);
+    assert!(engine.supports(&ArtifactKey::decode(k, b)));
+
+    let pjrt = PjrtBackend::new(engine);
+    let mut rng = Rng::new(2);
+    let rows: Vec<Vec<u8>> = (0..k).map(|_| rng.bytes(b)).collect();
+    let refs: Vec<&[u8]> = rows.iter().map(|v| v.as_slice()).collect();
+    // A real survivor-inverse: survivors {1, 2, 4, 5} of 4+2.
+    let dec = drs::ec::codec::decode_matrix(
+        EcParams::new(4, 2).unwrap(),
+        &[1, 2, 4, 5],
+    )
+    .unwrap();
+
+    let got = pjrt.matmul(&dec, &refs).unwrap();
+    let want = PureRustBackend.matmul(&dec, &refs).unwrap();
+    assert_eq!(got, want, "PJRT decode disagrees with pure rust");
+    assert_eq!(pjrt.call_counts().0, 1);
+}
+
+#[test]
+fn paper_geometry_10_5_stripe_matches() {
+    let Some(engine) = engine() else { return };
+    let (k, m, b) = (10usize, 5usize, 65536usize);
+    if !engine.supports(&ArtifactKey::encode(k, m, b)) {
+        eprintln!("SKIP: 10+5 artifact missing");
+        return;
+    }
+    let pjrt = PjrtBackend::new(engine);
+    let mut rng = Rng::new(3);
+    let rows: Vec<Vec<u8>> = (0..k).map(|_| rng.bytes(b)).collect();
+    let refs: Vec<&[u8]> = rows.iter().map(|v| v.as_slice()).collect();
+    let cauchy = GfMatrix::cauchy(m, k).unwrap();
+    let got = pjrt.matmul(&cauchy, &refs).unwrap();
+    let want = PureRustBackend.matmul(&cauchy, &refs).unwrap();
+    assert_eq!(got, want);
+}
+
+#[test]
+fn unregistered_shapes_fall_back() {
+    let Some(engine) = engine() else { return };
+    let pjrt = PjrtBackend::new(engine);
+    let mut rng = Rng::new(4);
+    // 3+3 / b=100 has no artifact.
+    let rows: Vec<Vec<u8>> = (0..3).map(|_| rng.bytes(100)).collect();
+    let refs: Vec<&[u8]> = rows.iter().map(|v| v.as_slice()).collect();
+    let cauchy = GfMatrix::cauchy(3, 3).unwrap();
+    let got = pjrt.matmul(&cauchy, &refs).unwrap();
+    let want = PureRustBackend.matmul(&cauchy, &refs).unwrap();
+    assert_eq!(got, want);
+    let (p, f) = pjrt.call_counts();
+    assert_eq!((p, f), (0, 1), "must have taken the fallback path");
+}
+
+#[test]
+fn non_cauchy_generator_not_silently_accelerated() {
+    let Some(engine) = engine() else { return };
+    let pjrt = PjrtBackend::new(engine);
+    let mut rng = Rng::new(5);
+    let rows: Vec<Vec<u8>> = (0..4).map(|_| rng.bytes(16384)).collect();
+    let refs: Vec<&[u8]> = rows.iter().map(|v| v.as_slice()).collect();
+    // Right shape for the 4+2 artifact but a different generator.
+    let vand = GfMatrix::vandermonde(2, 4);
+    let got = pjrt.matmul(&vand, &refs).unwrap();
+    let want = PureRustBackend.matmul(&vand, &refs).unwrap();
+    assert_eq!(got, want);
+    let (p, _f) = pjrt.call_counts();
+    assert_eq!(p, 0, "baked-matrix artifact must not serve a foreign generator");
+}
+
+#[test]
+fn full_codec_roundtrip_on_pjrt_backend() {
+    let Some(engine) = engine() else { return };
+    let backend = Arc::new(PjrtBackend::new(engine));
+    let codec =
+        Codec::with_backend(EcParams::new(4, 2).unwrap(), 16384, backend.clone()).unwrap();
+    let mut rng = Rng::new(6);
+    let file = rng.bytes(200_000);
+    let chunks = codec.encode(&file).unwrap();
+    // decode from a coding-chunk-bearing subset
+    let subset: Vec<(usize, Vec<u8>)> =
+        [0usize, 2, 4, 5].iter().map(|&i| (i, chunks[i].clone())).collect();
+    assert_eq!(codec.decode(&subset).unwrap(), file);
+    let (p, _) = backend.call_counts();
+    assert!(p >= 2, "both encode and decode must have hit PJRT, got {p}");
+}
+
+#[test]
+fn shim_end_to_end_on_pjrt_backend() {
+    let Some(engine) = engine() else { return };
+    let backend = Arc::new(PjrtBackend::new(engine));
+    let cluster = TestCluster::builder()
+        .ses(6)
+        .ec(EcParams::new(4, 2).unwrap())
+        .backend(backend)
+        .build()
+        .unwrap();
+    let mut rng = Rng::new(7);
+    let data = rng.bytes(150_000);
+    let opts = PutOptions::default()
+        .with_params(EcParams::new(4, 2).unwrap())
+        .with_stripe(16384)
+        .with_workers(3);
+    cluster.shim().put_bytes("/vo/pjrt.bin", &data, &opts).unwrap();
+    cluster.kill_se("SE-01");
+    cluster.kill_se("SE-04");
+    let back = cluster
+        .shim()
+        .get_bytes("/vo/pjrt.bin", &GetOptions::default().with_workers(4))
+        .unwrap();
+    assert_eq!(back, data);
+}
+
+#[test]
+fn constant_payload_encode_matches() {
+    let Some(engine) = engine() else { return };
+    let (k, m, b) = (4usize, 2usize, 16384usize);
+    let pjrt = PjrtBackend::new(engine.clone());
+    // deterministic simple input: row r = constant r+1
+    let rows: Vec<Vec<u8>> = (0..k).map(|r| vec![(r + 1) as u8; b]).collect();
+    let refs: Vec<&[u8]> = rows.iter().map(|v| v.as_slice()).collect();
+    let cauchy = GfMatrix::cauchy(m, k).unwrap();
+    let got = pjrt.matmul(&cauchy, &refs).unwrap();
+    let want = PureRustBackend.matmul(&cauchy, &refs).unwrap();
+    eprintln!("cauchy = {:?}", cauchy.as_bytes());
+    for r in 0..m {
+        eprintln!("row {r}: got[..8]={:?} want[..8]={:?} got[b-8..]={:?}",
+            &got[r][..8], &want[r][..8], &got[r][b-8..]);
+    }
+    assert_eq!(got, want);
+}
+
+#[test]
+fn u8_literal_untyped_data_roundtrip() {
+    let data: Vec<u8> = (0..32u8).collect();
+    let lit = xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::U8, &[4, 8], &data,
+    ).unwrap();
+    let back = lit.to_vec::<u8>().unwrap();
+    eprintln!("shape={:?}", lit.shape());
+    eprintln!("back={back:?}");
+    assert_eq!(back, data);
+}
+
+#[test]
+fn u8_parameter_execution_via_builder() {
+    let client = xla::PjRtClient::cpu().unwrap();
+    let builder = xla::XlaBuilder::new("u8test");
+    let shape = xla::Shape::array::<u8>(vec![8]);
+    let p = builder.parameter_s(0, &shape, "x").unwrap();
+    let comp = p.add_(&p).unwrap().build().unwrap();
+    let exe = client.compile(&comp).unwrap();
+    let data: Vec<u8> = (0..8u8).collect();
+    let lit = xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::U8, &[8], &data,
+    ).unwrap();
+    let out = exe.execute::<xla::Literal>(&[lit]).unwrap()[0][0]
+        .to_literal_sync().unwrap();
+    let v = out.to_vec::<u8>().unwrap();
+    eprintln!("u8 x+x = {v:?}");
+    assert_eq!(v, (0..8u8).map(|x| x + x).collect::<Vec<_>>());
+}

@@ -1,0 +1,78 @@
+//! Cross-language parity: the rust GF(2⁸) construction must be
+//! byte-identical to the python build path (`ref.py` / `model.py`),
+//! because the artifacts bake python-generated Cauchy rows that rust's
+//! decode matrices must invert.
+//!
+//! The vectors below were computed with the python ground truth
+//! (`gf_mul_py`, `cauchy_matrix`, `vandermonde_matrix`) and are pinned
+//! here as constants.
+
+use drs::gf::{mul, GfMatrix};
+
+#[test]
+fn field_mul_vectors_match_python() {
+    // python: [gf_mul_py(a, b) for (a, b) in pairs] with poly 0x11D
+    let pairs: [(u8, u8, u8); 8] = [
+        (2, 2, 4),
+        (2, 128, 29), // overflow wraps through the polynomial
+        (0x53, 0xCA, 143),
+        (255, 255, 226),
+        (7, 11, 49),
+        (100, 200, 79),
+        (1, 173, 173),
+        (0, 99, 0),
+    ];
+    for (a, b, want) in pairs {
+        assert_eq!(mul(a, b), want, "mul({a},{b})");
+        assert_eq!(mul(b, a), want, "mul({b},{a})");
+    }
+}
+
+#[test]
+fn cauchy_10_5_first_rows_match_python() {
+    // python: ref.cauchy_matrix(5, 10)[0] and [4]
+    // C[i,j] = gf_inv((10+i) ^ j)
+    let c = GfMatrix::cauchy(5, 10).unwrap();
+    let inv = |x: u8| drs::gf::inv(x);
+    for i in 0..5usize {
+        for j in 0..10usize {
+            assert_eq!(c.get(i, j), inv(((10 + i) as u8) ^ (j as u8)));
+        }
+    }
+}
+
+#[test]
+fn vandermonde_matches_python_convention() {
+    // python ref.vandermonde_matrix: V[i,j] = i^j with 0^0 = 1.
+    let v = GfMatrix::vandermonde(5, 4);
+    assert_eq!(v.row(0), &[1, 0, 0, 0]);
+    assert_eq!(v.row(1), &[1, 1, 1, 1]);
+    assert_eq!(v.row(2), &[1, 2, 4, 8]);
+    assert_eq!(v.row(3), &[1, 3, 5, 15]);
+    assert_eq!(v.row(4), &[1, 4, 16, 64]);
+}
+
+#[test]
+fn decode_matrix_identity_for_data_rows() {
+    // model.decode_matrix(k, m, list(range(k))) == I_k in python.
+    let m = drs::ec::codec::decode_matrix(
+        drs::ec::EcParams::new(10, 5).unwrap(),
+        &(0..10).collect::<Vec<_>>(),
+    )
+    .unwrap();
+    assert_eq!(m, GfMatrix::identity(10));
+}
+
+#[test]
+fn exp_log_tables_match_python_zero_sink() {
+    // ref.gf_log_exp_tables(): log[0]=511, exp[510]=exp[511]=0,
+    // exp[0]=1, exp[1]=2, exp[8]=29 (0x1D).
+    use drs::gf::tables::TABLES;
+    let t = &*TABLES;
+    assert_eq!(t.log[0], 511);
+    assert_eq!(t.exp[0], 1);
+    assert_eq!(t.exp[1], 2);
+    assert_eq!(t.exp[8], 0x1D);
+    assert_eq!(t.exp[510], 0);
+    assert_eq!(t.exp[511], 0);
+}
