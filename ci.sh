@@ -1,0 +1,18 @@
+#!/usr/bin/env bash
+# CI gate: formatting, lints, build and the tier-1 test suite.
+# Run from the repo root (the cargo workspace lives here; the package in
+# rust/). The crate is dependency-free, so this works fully offline.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+echo "== cargo fmt --check =="
+cargo fmt --all -- --check
+
+echo "== cargo clippy (deny warnings) =="
+cargo clippy --workspace --all-targets -- -D warnings
+
+echo "== tier-1: build + test =="
+cargo build --release
+cargo test -q
+
+echo "CI green ✓"

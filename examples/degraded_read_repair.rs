@@ -12,7 +12,7 @@
 use drs::prelude::*;
 use drs::util::prng::Rng;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> drs::Result<()> {
     let params = EcParams::new(10, 5)?;
     let cluster = TestCluster::builder().ses(15).ec(params).build()?;
 

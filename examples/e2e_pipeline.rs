@@ -20,7 +20,7 @@ use drs::runtime::PjrtBackend;
 use drs::sim::workload;
 use drs::util::fmt_bytes;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> drs::Result<()> {
     let base = std::env::temp_dir().join(format!("drs-e2e-{}", std::process::id()));
     let params = EcParams::new(10, 5)?;
 

@@ -12,7 +12,7 @@
 use drs::placement::{assignment_counts, cumulative_skew, RoundRobin, Weighted};
 use drs::prelude::*;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> drs::Result<()> {
     let cluster = TestCluster::builder()
         .ses(3)
         .ec(EcParams::new(8, 2)?)

@@ -10,7 +10,7 @@
 
 use drs::prelude::*;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> drs::Result<()> {
     // A 6-SE cluster, erasure-coding 4 data + 2 coding chunks.
     let cluster = TestCluster::builder()
         .ses(6)

@@ -14,7 +14,7 @@ use drs::prelude::*;
 use drs::sim::workload;
 use drs::util::fmt_bytes;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> drs::Result<()> {
     let params = EcParams::new(10, 5)?;
     let cluster = TestCluster::builder()
         .ses(15)

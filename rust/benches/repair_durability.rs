@@ -1,0 +1,60 @@
+//! Repair-aware durability: file-loss probability vs scrub interval and
+//! repair MTTR — the design space of the maintenance engine.
+//!
+//! The §1.1 static availability table assumes failures never accumulate;
+//! this bench quantifies the dynamic picture: with 30-day SE MTBF and a
+//! one-year mission, a 10+5 file survives only if lost chunks are rebuilt
+//! before 6 are simultaneously down. Faster scrubs / more repair
+//! bandwidth (lower MTTR) push loss probability toward zero; a scrub
+//! cadence slower than the failure rate loses nearly everything.
+
+use drs::sim::durability::{file_loss_probability_mc, repair_table, RepairSim};
+
+fn main() {
+    let base = RepairSim::paper_default();
+    let trials = 4_000;
+    println!(
+        "# Repair-aware durability — EC {}+{}, SE MTBF {:.0} d, mission {:.0} d, {} trials/cell",
+        base.k,
+        base.m,
+        base.se_mtbf_h / 24.0,
+        base.mission_h / 24.0,
+        trials
+    );
+
+    let intervals = [6.0, 24.0, 72.0, 168.0, 720.0, 1440.0];
+    let mttrs = [1.0, 6.0, 24.0, 72.0];
+    let rows = repair_table(&base, &intervals, &mttrs, trials, 0xD15C);
+
+    print!("{:>14} |", "scrub \\ mttr");
+    for m in &mttrs {
+        print!(" {:>8}", format!("{m:.0}h"));
+    }
+    println!();
+    println!("{}", "-".repeat(16 + 9 * mttrs.len()));
+    for (i, interval) in intervals.iter().enumerate() {
+        print!("{:>13}h |", format!("{interval:.0}"));
+        for j in 0..mttrs.len() {
+            let r = &rows[i * mttrs.len() + j];
+            print!(" {:>8.4}", r.loss_probability);
+        }
+        println!();
+    }
+
+    // Headline claims the maintenance engine rests on.
+    let daily = file_loss_probability_mc(
+        &RepairSim { scrub_interval_h: 24.0, repair_mttr_h: 6.0, ..base },
+        trials,
+        1,
+    );
+    let never = file_loss_probability_mc(
+        &RepairSim { scrub_interval_h: 1e9, repair_mttr_h: 6.0, ..base },
+        trials,
+        1,
+    );
+    println!("\ndaily scrub + 6h repair: loss p = {daily:.4}");
+    println!("no scrubbing at all:     loss p = {never:.4}");
+    assert!(daily < 0.05, "daily scrub must keep loss rare (got {daily})");
+    assert!(never > 0.9, "unscrubbed fleet must decay (got {never})");
+    println!("\nclaims hold: scheduled scrub+repair turns near-certain loss into rare loss ✓");
+}

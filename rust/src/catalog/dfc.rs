@@ -329,6 +329,48 @@ impl Dfc {
         }
     }
 
+    // -- namespace iteration (maintenance engine support) -------------------
+
+    /// Directories under `root` (inclusive) whose metadata satisfies
+    /// `pred`. `root` must name an existing directory; `"/"` walks the
+    /// whole catalogue. The predicate sees (path, metadata).
+    pub fn dirs_where(
+        &self,
+        root: &str,
+        mut pred: impl FnMut(&str, &MetaMap) -> bool,
+    ) -> Result<Vec<String>> {
+        let start = self.lookup(root)?;
+        if matches!(start, Node::File(_)) {
+            return Err(Error::Catalog(format!("`{root}` is a file")));
+        }
+        let prefix = if root == "/" { String::new() } else { root.to_string() };
+        let mut out = Vec::new();
+        Self::walk(start, &prefix, &mut |path, node| {
+            if let Node::Dir { entry, .. } = node {
+                if !path.is_empty() && pred(path, &entry.meta) {
+                    out.push(path.to_string());
+                }
+            }
+        });
+        Ok(out)
+    }
+
+    /// Every file holding a replica on `se`, with the replica's PFN —
+    /// the drain/rebalance work-list.
+    pub fn files_with_replica_on(&self, se: &str) -> Vec<(String, String)> {
+        let mut out = Vec::new();
+        Self::walk(&self.root, "", &mut |path, node| {
+            if let Node::File(f) = node {
+                for r in &f.replicas {
+                    if r.se == se {
+                        out.push((path.to_string(), r.pfn.clone()));
+                    }
+                }
+            }
+        });
+        out
+    }
+
     // -- replicas -----------------------------------------------------------
 
     /// `registerReplica`.
@@ -597,6 +639,38 @@ mod tests {
         );
         // deterministic serialization
         assert_eq!(j.to_string(), back.to_json().to_string());
+    }
+
+    #[test]
+    fn iteration_helpers() {
+        let mut dfc = Dfc::new();
+        dfc.mkdir_p("/vo/data/f1.ec").unwrap();
+        dfc.mkdir_p("/vo/other").unwrap();
+        dfc.set_meta("/vo/data/f1.ec", "drs_ec_total", MetaValue::Int(6)).unwrap();
+        dfc.add_file("/vo/data/f1.ec/chunk0", fe(10)).unwrap();
+        dfc.add_file("/vo/other/plain", fe(20)).unwrap();
+        dfc.register_replica("/vo/data/f1.ec/chunk0", "SE-A", "/pfn/c0").unwrap();
+        dfc.register_replica("/vo/other/plain", "SE-A", "/pfn/p").unwrap();
+        dfc.register_replica("/vo/other/plain", "SE-B", "/pfn/p2").unwrap();
+
+        let tagged = dfc
+            .dirs_where("/", |_, meta| meta.contains_key("drs_ec_total"))
+            .unwrap();
+        assert_eq!(tagged, vec!["/vo/data/f1.ec"]);
+        // Scoped to a subtree; the root itself is considered.
+        let scoped = dfc.dirs_where("/vo/data", |_, _| true).unwrap();
+        assert_eq!(scoped, vec!["/vo/data", "/vo/data/f1.ec"]);
+        assert!(dfc.dirs_where("/nope", |_, _| true).is_err());
+
+        let on_a = dfc.files_with_replica_on("SE-A");
+        assert_eq!(
+            on_a,
+            vec![
+                ("/vo/data/f1.ec/chunk0".to_string(), "/pfn/c0".to_string()),
+                ("/vo/other/plain".to_string(), "/pfn/p".to_string()),
+            ]
+        );
+        assert_eq!(dfc.files_with_replica_on("SE-C").len(), 0);
     }
 
     #[test]

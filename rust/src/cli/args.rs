@@ -13,6 +13,13 @@ COMMANDS:
     ls [path]
     stat <lfn>
     repair <lfn> [--workers W]
+    scrub [--root PATH] [--workers W] [--shallow]
+                                               probe every EC file's chunks
+                                               (deep scrub checksums them)
+    repair-all [--root PATH] [--workers W] [--max-files N] [--max-mb MB] [--shallow]
+                                               scrub, then repair degraded
+                                               files, smallest margin first
+    drain <se-name> [--workers W]              evacuate all chunks off an SE
     rm <lfn>
     verify <lfn>
     read <lfn> <offset> <len>
@@ -39,6 +46,15 @@ pub enum Command {
     Ls { path: String },
     Stat { lfn: String },
     Repair { lfn: String, workers: Option<usize> },
+    Scrub { root: String, workers: Option<usize>, shallow: bool },
+    RepairAll {
+        root: String,
+        workers: Option<usize>,
+        max_files: Option<usize>,
+        max_mb: Option<u64>,
+        shallow: bool,
+    },
+    Drain { se: String, workers: Option<usize> },
     Rm { lfn: String },
     Verify { lfn: String },
     Read { lfn: String, offset: u64, len: usize },
@@ -149,6 +165,22 @@ pub fn parse_args(argv: Vec<String>) -> Result<Cli, String> {
             let workers = args.opt_parse("--workers")?;
             Command::Repair { lfn: args.required("lfn")?, workers }
         }
+        "scrub" => Command::Scrub {
+            root: args.opt_value("--root")?.unwrap_or_else(|| "/".into()),
+            workers: args.opt_parse("--workers")?,
+            shallow: args.opt_flag("--shallow"),
+        },
+        "repair-all" => Command::RepairAll {
+            root: args.opt_value("--root")?.unwrap_or_else(|| "/".into()),
+            workers: args.opt_parse("--workers")?,
+            max_files: args.opt_parse("--max-files")?,
+            max_mb: args.opt_parse("--max-mb")?,
+            shallow: args.opt_flag("--shallow"),
+        },
+        "drain" => {
+            let workers = args.opt_parse("--workers")?;
+            Command::Drain { se: args.required("se-name")?, workers }
+        }
         "rm" => Command::Rm { lfn: args.required("lfn")? },
         "verify" => Command::Verify { lfn: args.required("lfn")? },
         "read" => Command::Read {
@@ -219,6 +251,42 @@ mod tests {
         match p("durability").unwrap().command {
             Command::Durability { p } => assert_eq!(p, 0.9),
             other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn maintenance_commands() {
+        assert_eq!(
+            p("scrub").unwrap().command,
+            Command::Scrub { root: "/".into(), workers: None, shallow: false }
+        );
+        assert_eq!(
+            p("scrub --root /vo/data --workers 8 --shallow").unwrap().command,
+            Command::Scrub { root: "/vo/data".into(), workers: Some(8), shallow: true }
+        );
+        assert_eq!(
+            p("repair-all --max-files 10 --max-mb 500").unwrap().command,
+            Command::RepairAll {
+                root: "/".into(),
+                workers: None,
+                max_files: Some(10),
+                max_mb: Some(500),
+                shallow: false
+            }
+        );
+        assert!(matches!(
+            p("repair-all --shallow").unwrap().command,
+            Command::RepairAll { shallow: true, .. }
+        ));
+        assert_eq!(
+            p("drain SE-03 --workers 2").unwrap().command,
+            Command::Drain { se: "SE-03".into(), workers: Some(2) }
+        );
+        assert!(p("drain").is_err());
+        assert!(p("repair-all --max-files ten").is_err());
+        // The usage text documents the new verbs next to `repair <lfn>`.
+        for verb in ["scrub", "repair-all", "drain"] {
+            assert!(USAGE.contains(verb), "usage must document `{verb}`");
         }
     }
 

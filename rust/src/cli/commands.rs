@@ -5,6 +5,7 @@ use std::path::Path;
 use crate::config::Config;
 use crate::dfm::{GetOptions, PutOptions};
 use crate::ec::EcParams;
+use crate::maintenance::{DrainOptions, Maintainer, RepairBudget, ScrubOptions};
 use crate::sim::durability;
 use crate::transfer::RetryPolicy;
 use crate::util::{fmt_bytes, fmt_secs};
@@ -175,6 +176,124 @@ pub fn dispatch(cli: &Cli) -> Result<()> {
             let n = ws.shim().repair(lfn, &opts)?;
             println!("repaired {n} chunk(s) of {lfn}");
             ws.save()
+        }
+        Command::Scrub { root: scrub_root, workers, shallow } => {
+            let ws = Workspace::open(root)?;
+            let shim = ws.shim();
+            let maintainer = Maintainer::new(&shim);
+            let mut opts = ScrubOptions::default()
+                .with_root(scrub_root.clone())
+                .with_workers(workers.unwrap_or(ws.config.workers));
+            if *shallow {
+                opts = opts.shallow();
+            }
+            let t0 = std::time::Instant::now();
+            let report = maintainer.scrub(&opts)?;
+            for f in &report.files {
+                if f.needs_repair() {
+                    println!(
+                        "  [{}] {} — {}/{} chunks, margin {} (missing {:?}, {} corrupt)",
+                        match f.state() {
+                            crate::maintenance::HealthState::Lost => "LOST",
+                            _ => "DEGR",
+                        },
+                        f.lfn,
+                        f.available,
+                        f.n,
+                        f.margin(),
+                        f.missing,
+                        f.corrupt.len()
+                    );
+                }
+            }
+            for (lfn, why) in &report.skipped {
+                eprintln!("  skipped {lfn}: {why}");
+            }
+            println!("scrub: {} in {}", report.summary(), fmt_secs(t0.elapsed().as_secs_f64()));
+            Ok(())
+        }
+        Command::RepairAll { root: scrub_root, workers, max_files, max_mb, shallow } => {
+            let ws = Workspace::open(root)?;
+            let shim = ws.shim();
+            let maintainer = Maintainer::new(&shim);
+            let mut opts = ScrubOptions::default()
+                .with_root(scrub_root.clone())
+                .with_workers(workers.unwrap_or(ws.config.workers));
+            if *shallow {
+                opts = opts.shallow();
+            }
+            let mut budget = RepairBudget::default()
+                .with_workers(workers.unwrap_or(ws.config.workers));
+            if let Some(n) = max_files {
+                budget = budget.with_max_files(*n);
+            }
+            if let Some(mb) = max_mb {
+                budget = budget.with_max_bytes(mb.saturating_mul(1_000_000));
+            }
+            let t0 = std::time::Instant::now();
+            let (before, summary, after) = maintainer.scrub_and_repair(&opts, &budget)?;
+            println!("before: {}", before.summary());
+            for o in &summary.outcomes {
+                match &o.error {
+                    None => println!(
+                        "  repaired {} (+{} chunks, margin was {})",
+                        o.lfn, o.chunks_rebuilt, o.margin_before
+                    ),
+                    Some(e) => println!("  FAILED {}: {e}", o.lfn),
+                }
+            }
+            for lfn in &summary.deferred {
+                println!("  deferred (budget): {lfn}");
+            }
+            for lfn in &summary.lost {
+                println!("  LOST (unrepairable): {lfn}");
+            }
+            println!(
+                "after (repaired files only): {}; {} deferred, {} lost remain",
+                after.summary(),
+                summary.deferred.len(),
+                summary.lost.len()
+            );
+            println!(
+                "repair-all: {} in {}",
+                summary.summary(),
+                fmt_secs(t0.elapsed().as_secs_f64())
+            );
+            ws.save()?;
+            if summary.files_failed > 0 {
+                return Err(Error::Transfer(format!(
+                    "{} file(s) failed to repair",
+                    summary.files_failed
+                )));
+            }
+            Ok(())
+        }
+        Command::Drain { se, workers } => {
+            let ws = Workspace::open(root)?;
+            let shim = ws.shim();
+            let maintainer = Maintainer::new(&shim);
+            let opts = DrainOptions::default()
+                .with_workers(workers.unwrap_or(ws.config.workers));
+            let t0 = std::time::Instant::now();
+            let report = maintainer.drain(se, &opts)?;
+            for (path, err) in &report.failures {
+                eprintln!("  failed: {path}: {err}");
+            }
+            if report.residual_objects > 0 {
+                eprintln!(
+                    "  warning: {} uncatalogued object(s) remain on {se}",
+                    report.residual_objects
+                );
+            }
+            println!("{} in {}", report.summary(), fmt_secs(t0.elapsed().as_secs_f64()));
+            ws.save()?;
+            if !report.clean() {
+                return Err(Error::Transfer(format!(
+                    "drain of `{se}` incomplete ({} replica(s) not evacuated)",
+                    report.failures.len()
+                )));
+            }
+            Ok(())
         }
         Command::Rm { lfn } => {
             let ws = Workspace::open(root)?;

@@ -12,6 +12,9 @@
 //! drs ls <path>                     list catalog namespace
 //! drs stat <lfn>                    chunk health report
 //! drs repair <lfn>                  re-derive lost chunks
+//! drs scrub [--root P] [--shallow]  catalogue-wide chunk health report
+//! drs repair-all [--max-files N]    prioritized repair of degraded files
+//! drs drain <se-name>               evacuate all chunks off an SE
 //! drs rm <lfn>                      delete file + chunks
 //! drs se list|kill|revive           SE management / failure injection
 //! drs durability [--p 0.9]          the §1.1 comparison table

@@ -89,6 +89,12 @@ impl EcShim {
         Arc::clone(&self.registry)
     }
 
+    /// The placement policy (the maintenance engine re-places chunks
+    /// through the same policy the shim placed them with).
+    pub fn policy(&self) -> Arc<dyn PlacementPolicy> {
+        Arc::clone(&self.policy)
+    }
+
     pub fn vo(&self) -> &str {
         &self.vo
     }
@@ -373,6 +379,18 @@ impl EcShim {
     /// Returns the number of chunks repaired. The catalog replica records
     /// are updated to point at the new locations.
     pub fn repair(&self, lfn: &str, opts: &GetOptions) -> Result<usize> {
+        self.repair_excluding(lfn, opts, &[])
+    }
+
+    /// [`EcShim::repair`], but never placing rebuilt chunks on any SE in
+    /// `excluded` — the maintenance drain uses this so a repair cannot
+    /// re-populate the SE being evacuated.
+    pub fn repair_excluding(
+        &self,
+        lfn: &str,
+        opts: &GetOptions,
+        excluded: &[String],
+    ) -> Result<usize> {
         let stat = self.stat(lfn)?;
         if !stat.readable() {
             return Err(Error::NotEnoughChunks {
@@ -431,7 +449,7 @@ impl EcShim {
             let target = infos
                 .iter()
                 .enumerate()
-                .filter(|(_, s)| s.available)
+                .filter(|(_, s)| s.available && !excluded.contains(&s.name))
                 .min_by_key(|(i, s)| (holding.contains(&s.name) as usize, *i))
                 .map(|(i, _)| i)
                 .ok_or_else(|| Error::Transfer("no SE available for repair".into()))?;

@@ -22,8 +22,6 @@
 //! 32  32  SHA-256 of the original file
 //! ```
 
-use sha2::{Digest, Sha256};
-
 use crate::ec::params::EcParams;
 use crate::{Error, Result};
 
@@ -159,9 +157,7 @@ impl ChunkHeader {
 
 /// SHA-256 of a byte buffer (the whole-file digest stored in each header).
 pub fn sha256(data: &[u8]) -> [u8; 32] {
-    let mut h = Sha256::new();
-    h.update(data);
-    h.finalize().into()
+    crate::util::sha256::digest(data)
 }
 
 /// zfec-style chunk file name: `<base>.<idx>_of_<n>.drs`, zero-padded to

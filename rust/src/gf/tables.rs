@@ -11,7 +11,7 @@
 //!   These are what a SIMD PSHUFB kernel would use; the scalar rust hot
 //!   path uses them via 8-byte unrolling (see `arith::mul_xor_slice`).
 
-use once_cell::sync::Lazy;
+use std::sync::LazyLock as Lazy;
 
 /// The field polynomial: x⁸ + x⁴ + x³ + x² + 1 (0x11D), the same field as
 /// zfec, jerasure's default, ISA-L and par2.

@@ -23,6 +23,10 @@
 //!   early termination once K chunks have arrived.
 //! * [`dfm`] — the paper's contribution: the EC file-management shim
 //!   (`put`/`get`/`repair`) and the whole-file replication baseline.
+//! * [`maintenance`] — the site-resilience engine over the shim:
+//!   catalogue-wide scrub (per-file health + surviving margin),
+//!   prioritized repair under a bandwidth/concurrency budget, and SE
+//!   drain/rebalance for decommissioning.
 //! * [`sim`] — deterministic discrete-event simulator calibrated to the
 //!   paper's Table 1 (setup latency + shared uplink), used by the
 //!   figure-regeneration benches; Monte-Carlo durability analysis.
@@ -55,6 +59,7 @@ pub mod dfm;
 pub mod ec;
 pub mod federation;
 pub mod gf;
+pub mod maintenance;
 pub mod metrics;
 pub mod placement;
 pub mod runtime;
@@ -78,27 +83,53 @@ pub mod prelude {
     pub use crate::transfer::PoolConfig;
 }
 
-/// Crate-wide error type.
-#[derive(Debug, thiserror::Error)]
+/// Crate-wide error type (hand-rolled: `thiserror` is unavailable offline).
+#[derive(Debug)]
 pub enum Error {
-    #[error("erasure-coding error: {0}")]
     Ec(String),
-    #[error("catalog error: {0}")]
     Catalog(String),
-    #[error("storage element `{se}` error: {msg}")]
     Se { se: String, msg: String },
-    #[error("transfer failed: {0}")]
     Transfer(String),
-    #[error("not enough chunks: have {have}, need {need}")]
     NotEnoughChunks { have: usize, need: usize },
-    #[error("integrity check failed for {path}: {detail}")]
     Integrity { path: String, detail: String },
-    #[error("runtime error: {0}")]
     Runtime(String),
-    #[error("config error: {0}")]
     Config(String),
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Ec(msg) => write!(f, "erasure-coding error: {msg}"),
+            Error::Catalog(msg) => write!(f, "catalog error: {msg}"),
+            Error::Se { se, msg } => write!(f, "storage element `{se}` error: {msg}"),
+            Error::Transfer(msg) => write!(f, "transfer failed: {msg}"),
+            Error::NotEnoughChunks { have, need } => {
+                write!(f, "not enough chunks: have {have}, need {need}")
+            }
+            Error::Integrity { path, detail } => {
+                write!(f, "integrity check failed for {path}: {detail}")
+            }
+            Error::Runtime(msg) => write!(f, "runtime error: {msg}"),
+            Error::Config(msg) => write!(f, "config error: {msg}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,336 @@
+//! SE drain/rebalance: evacuate every chunk off a named SE.
+//!
+//! Walks the catalogue work-list ([`Dfc::files_with_replica_on`]) and, for
+//! each replica on the drained SE, copies the object to a destination
+//! chosen by the placement policy from the remaining VO vector (excluding
+//! SEs that already hold a replica of the same file), re-points the
+//! catalogue record, and deletes the source object. When the source
+//! object cannot be read (SE dead or bytes gone), recovery depends on
+//! what the replica was: an EC chunk's owning file is queued for a
+//! normal erasure-coding repair (drain degrades gracefully into repair;
+//! the record is replaced only once the rebuild succeeds, so a failed
+//! repair leaves the file recoverable if the SE revives); a whole-file
+//! replica's record is dropped only if another replica is verifiably
+//! alive — otherwise the record is kept and the replica reported as a
+//! failure rather than silently orphaned.
+//!
+//! Replicas are moved in parallel *across* files but sequentially *within*
+//! one file, so the sibling-SE anti-affinity check always sees the
+//! destinations already chosen for the file's other chunks.
+//!
+//! [`Dfc::files_with_replica_on`]: crate::catalog::Dfc::files_with_replica_on
+
+use std::collections::BTreeSet;
+use std::sync::Arc;
+
+use crate::catalog::Dfc;
+use crate::dfm::{EcShim, GetOptions};
+use crate::placement::PlacementPolicy;
+use crate::se::{SeInfo, SeRegistry, StorageElement};
+use crate::transfer::{PoolConfig, RetryPolicy, WorkPool};
+use crate::{Error, Result};
+
+/// Drain parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct DrainOptions {
+    /// Concurrent file evacuations (replicas of one file always move
+    /// sequentially so anti-affinity holds).
+    pub workers: usize,
+    /// Transfer workers for the fallback EC repairs.
+    pub transfer_workers: usize,
+}
+
+impl Default for DrainOptions {
+    fn default() -> Self {
+        DrainOptions { workers: 4, transfer_workers: 4 }
+    }
+}
+
+impl DrainOptions {
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.workers = workers.max(1);
+        self
+    }
+}
+
+/// Outcome of one drain run.
+#[derive(Clone, Debug, Default)]
+pub struct DrainReport {
+    pub se: String,
+    /// Replicas copied byte-for-byte to a new SE.
+    pub replicas_moved: usize,
+    pub bytes_moved: u64,
+    /// Chunks re-derived through EC repair because the source was
+    /// unreadable.
+    pub chunks_rebuilt: usize,
+    /// Unreadable whole-file replicas whose catalogue record was dropped
+    /// because other replicas still serve the file.
+    pub records_dropped: usize,
+    /// (path, error) pairs for replicas that could not be evacuated; the
+    /// catalogue still points at the drained SE for these.
+    pub failures: Vec<(String, String)>,
+    /// Objects still physically on the SE afterwards (0 when the SE is
+    /// unreachable). Informational: uncatalogued orphans (e.g. leftovers
+    /// of a half-failed put) show up here without being drain failures —
+    /// the drain's contract covers catalogued replicas only.
+    pub residual_objects: usize,
+}
+
+impl DrainReport {
+    /// Every catalogued replica was evacuated.
+    pub fn clean(&self) -> bool {
+        self.failures.is_empty()
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "drained `{}`: {} replica(s) moved ({} bytes), {} chunk(s) rebuilt, {} record(s) dropped, {} failure(s), {} residual object(s)",
+            self.se,
+            self.replicas_moved,
+            self.bytes_moved,
+            self.chunks_rebuilt,
+            self.records_dropped,
+            self.failures.len(),
+            self.residual_objects
+        )
+    }
+}
+
+/// What one move accomplished.
+enum MoveOutcome {
+    Copied { bytes: u64 },
+    /// EC chunk with an unreadable source; record dropped, parent dir
+    /// queued for EC repair.
+    NeedsRepair { parent: String },
+    /// Whole-file replica with an unreadable source but other replicas
+    /// alive; record dropped, nothing to rebuild.
+    RecordDropped,
+}
+
+/// Shared context for the move jobs.
+struct DrainCtx {
+    registry: Arc<SeRegistry>,
+    source: Arc<dyn StorageElement>,
+    policy: Arc<dyn PlacementPolicy>,
+    dfc: Arc<std::sync::Mutex<Dfc>>,
+    vo: String,
+    se_name: String,
+}
+
+fn parent_of(path: &str) -> String {
+    path.rsplit_once('/')
+        .map(|(d, _)| d.to_string())
+        .unwrap_or_else(|| "/".to_string())
+}
+
+/// Move one replica off the drained SE. `ordinal` spreads successive
+/// moves the way the policy spreads chunk ordinals.
+fn move_one(ctx: &DrainCtx, ordinal: usize, path: &str, pfn: &str) -> Result<MoveOutcome> {
+    let parent = parent_of(path);
+    // Keep chunks spread: SEs holding this file — or, for an EC chunk,
+    // any sibling chunk of the same EC file — are not eligible
+    // destinations. Relax to self-exclusion when that leaves nothing
+    // (fewer SEs than chunks).
+    let (replicas, own, siblings, parent_is_ec) = {
+        let dfc = ctx.dfc.lock().unwrap();
+        let replicas = dfc.replicas(path)?.to_vec();
+        let own: BTreeSet<String> = replicas.iter().map(|r| r.se.clone()).collect();
+        let mut siblings = own.clone();
+        let parent_is_ec = super::scrub::is_ec_dir(&dfc, &parent);
+        if parent_is_ec {
+            for item in dfc.list_dir(&parent).unwrap_or_default() {
+                if let crate::catalog::dfc::DirItem::File(name) = item {
+                    if let Ok(reps) = dfc.replicas(&format!("{parent}/{name}")) {
+                        siblings.extend(reps.iter().map(|r| r.se.clone()));
+                    }
+                }
+            }
+        }
+        (replicas, own, siblings, parent_is_ec)
+    };
+    let eligible = |holding: &BTreeSet<String>| -> Vec<SeInfo> {
+        ctx.registry
+            .vo_infos(&ctx.vo)
+            .into_iter()
+            .filter(|s| s.name != ctx.se_name && s.available && !holding.contains(&s.name))
+            .collect()
+    };
+    let mut candidates = eligible(&siblings);
+    if candidates.is_empty() {
+        candidates = eligible(&own);
+    }
+
+    match ctx.source.get(pfn) {
+        Ok(bytes) => {
+            if candidates.is_empty() {
+                return Err(Error::Transfer(format!(
+                    "no destination SE available for `{path}`"
+                )));
+            }
+            // One placement slot per move. Rotating the candidate list by
+            // the move ordinal spreads successive moves across the vector
+            // (round-robin stays round-robin) without asking the policy
+            // for `ordinal` slots it won't use.
+            candidates.rotate_left(ordinal % candidates.len());
+            let slot = *ctx
+                .policy
+                .place(1, &candidates)?
+                .first()
+                .expect("place returns one slot");
+            let dest = ctx
+                .registry
+                .get(&candidates[slot].name)
+                .ok_or_else(|| Error::Config("registry inconsistent".into()))?;
+            dest.put(pfn, &bytes)?;
+            {
+                let mut dfc = ctx.dfc.lock().unwrap();
+                dfc.remove_replica(path, &ctx.se_name)?;
+                dfc.register_replica(path, dest.name(), pfn)?;
+            }
+            let _ = ctx.source.delete(pfn);
+            Ok(MoveOutcome::Copied { bytes: bytes.len() as u64 })
+        }
+        Err(read_err) => {
+            if parent_is_ec {
+                // EC chunk: the erasure code can rebuild it elsewhere.
+                // The record is left in place — repair already treats the
+                // unreadable replica as missing, swaps the record only
+                // once the rebuild succeeds, and a failed repair then
+                // leaves the file exactly as the drain found it
+                // (recoverable if the SE revives).
+                Ok(MoveOutcome::NeedsRepair { parent })
+            } else {
+                // Whole-file replica: drop the record only when another
+                // replica is verifiably alive right now — record *count*
+                // is not enough (the other copy may be on a dead SE too).
+                let other_alive = replicas.iter().any(|r| {
+                    r.se != ctx.se_name
+                        && ctx
+                            .registry
+                            .get(&r.se)
+                            .map(|se| se.is_available() && se.exists(&r.pfn))
+                            .unwrap_or(false)
+                });
+                if other_alive {
+                    let mut dfc = ctx.dfc.lock().unwrap();
+                    let _ = dfc.remove_replica(path, &ctx.se_name);
+                    Ok(MoveOutcome::RecordDropped)
+                } else {
+                    // Keep the record (the bytes may come back with the
+                    // SE) and surface the failure.
+                    Err(Error::Transfer(format!(
+                        "no other live replica of `{path}`; keeping record on `{}` ({read_err})",
+                        ctx.se_name
+                    )))
+                }
+            }
+        }
+    }
+}
+
+/// Evacuate all chunks off `se_name` onto the remaining VO vector.
+pub fn drain_se(shim: &EcShim, se_name: &str, opts: &DrainOptions) -> Result<DrainReport> {
+    let registry = shim.registry();
+    let source = registry
+        .get(se_name)
+        .ok_or_else(|| Error::Config(format!("no SE named `{se_name}`")))?;
+
+    // Catalogue work-list, snapshotted under one lock, then grouped by
+    // owning directory so one file's moves run on one worker.
+    let work: Vec<(String, String)> = {
+        let dfc = shim.dfc();
+        let dfc = dfc.lock().unwrap();
+        dfc.files_with_replica_on(se_name)
+    };
+    let mut groups: std::collections::BTreeMap<String, Vec<(usize, &(String, String))>> =
+        std::collections::BTreeMap::new();
+    for (i, item) in work.iter().enumerate() {
+        groups.entry(parent_of(&item.0)).or_default().push((i, item));
+    }
+
+    let ctx = DrainCtx {
+        registry: Arc::clone(&registry),
+        source: Arc::clone(&source),
+        policy: shim.policy(),
+        dfc: shim.dfc(),
+        vo: shim.vo().to_string(),
+        se_name: se_name.to_string(),
+    };
+    let ctx = &ctx;
+    let jobs: Vec<(usize, _)> = groups
+        .values()
+        .enumerate()
+        .map(|(g, items)| {
+            (g, move || -> Result<Vec<(usize, std::result::Result<MoveOutcome, String>)>> {
+                Ok(items
+                    .iter()
+                    .enumerate()
+                    .map(|(j, &(i, (path, pfn)))| {
+                        // Ordinal varies across groups (g) and within a
+                        // file (j) so moves spread over the vector.
+                        (i, move_one(ctx, g + j, path, pfn).map_err(|e| e.to_string()))
+                    })
+                    .collect())
+            })
+        })
+        .collect();
+    let outcome = WorkPool::new(PoolConfig::parallel(opts.workers)).run(jobs, usize::MAX);
+
+    let mut report = DrainReport { se: se_name.to_string(), ..Default::default() };
+    // dir → stale PFNs still registered on the drained SE for that dir.
+    let mut repair_dirs: std::collections::BTreeMap<String, Vec<String>> =
+        std::collections::BTreeMap::new();
+    for (_, results) in outcome.successes {
+        for (i, res) in results {
+            match res {
+                Ok(MoveOutcome::Copied { bytes }) => {
+                    report.replicas_moved += 1;
+                    report.bytes_moved += bytes;
+                }
+                Ok(MoveOutcome::NeedsRepair { parent }) => {
+                    repair_dirs.entry(parent).or_default().push(work[i].1.clone());
+                }
+                Ok(MoveOutcome::RecordDropped) => {
+                    report.records_dropped += 1;
+                }
+                Err(e) => report.failures.push((work[i].0.clone(), e)),
+            }
+        }
+    }
+
+    // Fallback EC repairs for chunks whose bytes could not be copied —
+    // one pooled job per file, like the copy phase. The drained SE is
+    // excluded as a target, or an alive-but-object-lost SE would be
+    // immediately re-populated by its own drain.
+    let get_opts = GetOptions::default()
+        .with_workers(opts.transfer_workers.max(1))
+        .with_retry(RetryPolicy::default_robust());
+    let excluded = [se_name.to_string()];
+    let repair_list: Vec<(String, Vec<String>)> = repair_dirs.into_iter().collect();
+    let (get_opts, excluded) = (&get_opts, &excluded[..]);
+    let rjobs: Vec<(usize, _)> = repair_list
+        .iter()
+        .enumerate()
+        .map(|(i, (dir, _))| (i, move || shim.repair_excluding(dir, get_opts, excluded)))
+        .collect();
+    let r_outcome = WorkPool::new(PoolConfig::parallel(opts.workers)).run(rjobs, usize::MAX);
+    for (idx, rebuilt) in r_outcome.successes {
+        report.chunks_rebuilt += rebuilt;
+        // The repair re-registered these chunks elsewhere; clear the
+        // stale objects off the drained SE (no-op when unreachable).
+        for pfn in &repair_list[idx].1 {
+            let _ = source.delete(pfn);
+        }
+    }
+    for (idx, e) in r_outcome.failures {
+        report.failures.push((repair_list[idx].0.clone(), e.to_string()));
+    }
+
+    // Residual audit: what is still physically on the SE.
+    if source.is_available() {
+        if let Ok(objects) = source.list("") {
+            report.residual_objects = objects.len();
+        }
+    }
+    Ok(report)
+}

@@ -1,0 +1,468 @@
+//! The maintenance engine: catalogue-wide scrub, prioritized repair and
+//! SE drain/rebalance.
+//!
+//! The paper's durability argument (§1.1) prices erasure coding against
+//! replication under *independent* SE failures — but that only holds if
+//! lost chunks are re-encoded before further failures erode the K-of-N
+//! margin. The shim's one-shot [`crate::dfm::EcShim::repair`] fixes one
+//! file when an operator notices; this module turns it into an operable
+//! site-resilience loop (the repair-bandwidth/scheduling trade-off that
+//! dominates real EC deployments — Zhang et al., Cook et al.):
+//!
+//! * [`scrub`] — walk every EC directory in the DFC (via the catalogue
+//!   iteration helpers), probe each chunk replica's SE for existence and
+//!   (deep mode) checksum match, and produce per-file [`FileHealth`]
+//!   reports: healthy / degraded with margin `survivors − K` / lost.
+//! * [`repair`] — a prioritized repair queue: smallest surviving margin
+//!   first, driven through the §2.4 work pool under a configurable
+//!   concurrency + rebuild-byte budget ([`RepairBudget`]).
+//! * [`drain`] — evacuate all chunks off a named SE onto the remaining
+//!   vector via the placement policy (operator decommission/rebalance);
+//!   unreadable sources degrade gracefully into EC repairs.
+//!
+//! The matching *measurement* lives in [`crate::sim::durability`]: the
+//! repair-aware Monte-Carlo relates scrub interval + repair MTTR to
+//! file-loss probability, quantifying what this engine buys.
+//!
+//! Counts and timings are recorded in [`crate::metrics::global`] under
+//! `maintenance.*`; the CLI surfaces the loop as `drs scrub`,
+//! `drs repair-all` and `drs drain <se>`.
+
+pub mod drain;
+pub mod repair;
+pub mod scrub;
+
+pub use drain::{drain_se, DrainOptions, DrainReport};
+pub use repair::{repair_all, RepairBudget, RepairOutcome, RepairSummary};
+pub use scrub::{
+    find_ec_dirs, scrub, CorruptReplica, FileHealth, HealthState, ScrubOptions, ScrubReport,
+};
+
+use crate::dfm::EcShim;
+use crate::metrics;
+use crate::Result;
+
+/// Façade binding the maintenance operations to one shim (catalogue +
+/// registry + placement policy + VO), with metrics recording.
+pub struct Maintainer<'a> {
+    shim: &'a EcShim,
+}
+
+impl<'a> Maintainer<'a> {
+    pub fn new(shim: &'a EcShim) -> Self {
+        Maintainer { shim }
+    }
+
+    /// Scrub the catalogue subtree in `opts`.
+    pub fn scrub(&self, opts: &ScrubOptions) -> Result<ScrubReport> {
+        let m = metrics::global();
+        m.inc("maintenance.scrub.runs");
+        let report = m.timed("maintenance.scrub", || {
+            scrub::scrub(&self.shim.dfc(), &self.shim.registry(), opts)
+        })?;
+        m.add("maintenance.scrub.files", report.files.len() as u64);
+        m.add("maintenance.scrub.chunks_probed", report.chunks_probed as u64);
+        m.add("maintenance.scrub.chunks_missing", report.chunks_missing as u64);
+        m.add("maintenance.scrub.chunks_corrupt", report.chunks_corrupt as u64);
+        m.gauge("maintenance.scrub.degraded_files", report.degraded() as f64);
+        m.gauge("maintenance.scrub.lost_files", report.lost() as f64);
+        Ok(report)
+    }
+
+    /// Repair everything `report` found degraded, most-urgent first.
+    pub fn repair_all(&self, report: &ScrubReport, budget: &RepairBudget) -> RepairSummary {
+        let m = metrics::global();
+        m.inc("maintenance.repair.runs");
+        let summary =
+            m.timed("maintenance.repair", || repair::repair_all(self.shim, report, budget));
+        m.add("maintenance.repair.files", summary.files_repaired() as u64);
+        m.add("maintenance.repair.chunks_rebuilt", summary.chunks_rebuilt as u64);
+        m.add("maintenance.repair.failures", summary.files_failed as u64);
+        m.add("maintenance.repair.deferred", summary.deferred.len() as u64);
+        summary
+    }
+
+    /// One full maintenance cycle: scrub, repair in priority order, then
+    /// re-scrub **only the files the repair pass touched** to report the
+    /// post-repair state (a second full deep scrub would re-read every
+    /// byte in the subtree just to confirm a handful of repairs).
+    pub fn scrub_and_repair(
+        &self,
+        opts: &ScrubOptions,
+        budget: &RepairBudget,
+    ) -> Result<(ScrubReport, RepairSummary, ScrubReport)> {
+        let before = self.scrub(opts)?;
+        let summary = self.repair_all(&before, budget);
+        let mut after = ScrubReport::default();
+        for outcome in &summary.outcomes {
+            let scoped = ScrubOptions { root: outcome.lfn.clone(), ..opts.clone() };
+            let r = scrub::scrub(&self.shim.dfc(), &self.shim.registry(), &scoped)?;
+            after.files.extend(r.files);
+            after.skipped.extend(r.skipped);
+            after.chunks_probed += r.chunks_probed;
+            after.chunks_missing += r.chunks_missing;
+            after.chunks_corrupt += r.chunks_corrupt;
+        }
+        Ok((before, summary, after))
+    }
+
+    /// Evacuate all chunks off `se_name`.
+    pub fn drain(&self, se_name: &str, opts: &DrainOptions) -> Result<DrainReport> {
+        let m = metrics::global();
+        m.inc("maintenance.drain.runs");
+        let report =
+            m.timed("maintenance.drain", || drain::drain_se(self.shim, se_name, opts))?;
+        m.add("maintenance.drain.replicas_moved", report.replicas_moved as u64);
+        m.add("maintenance.drain.bytes_moved", report.bytes_moved);
+        m.add("maintenance.drain.chunks_rebuilt", report.chunks_rebuilt as u64);
+        m.add("maintenance.drain.failures", report.failures.len() as u64);
+        Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfm::{PutOptions, TestCluster};
+    use crate::ec::EcParams;
+
+    fn cluster_with_files(n_ses: usize, n_files: usize) -> (TestCluster, Vec<(String, Vec<u8>)>) {
+        let cluster = TestCluster::builder()
+            .ses(n_ses)
+            .ec(EcParams::new(4, 2).unwrap())
+            .build()
+            .unwrap();
+        let opts = PutOptions::default()
+            .with_params(EcParams::new(4, 2).unwrap())
+            .with_stripe(1024);
+        let mut files = Vec::new();
+        for i in 0..n_files {
+            let lfn = format!("/vo/data/f{i}.bin");
+            let data: Vec<u8> = (0..20_000 + i * 1000).map(|b| (b * 7 % 251) as u8).collect();
+            cluster.shim().put_bytes(&lfn, &data, &opts).unwrap();
+            files.push((lfn, data));
+        }
+        (cluster, files)
+    }
+
+    #[test]
+    fn scrub_all_healthy() {
+        let (cluster, files) = cluster_with_files(6, 3);
+        let report = Maintainer::new(cluster.shim())
+            .scrub(&ScrubOptions::default())
+            .unwrap();
+        assert_eq!(report.files.len(), files.len());
+        assert_eq!(report.healthy(), 3);
+        assert_eq!(report.degraded(), 0);
+        assert_eq!(report.lost(), 0);
+        assert_eq!(report.chunks_probed, 18);
+        assert!(report.repair_queue().is_empty());
+        for f in &report.files {
+            assert_eq!(f.state(), HealthState::Healthy);
+            assert_eq!(f.margin(), 2);
+            assert_eq!(f.full_margin(), 2);
+            assert!(!f.needs_repair());
+        }
+    }
+
+    #[test]
+    fn scrub_classifies_degraded_and_lost() {
+        let (cluster, _) = cluster_with_files(6, 2);
+        cluster.kill_se("SE-00");
+        let report = Maintainer::new(cluster.shim())
+            .scrub(&ScrubOptions::default())
+            .unwrap();
+        assert_eq!(report.degraded(), 2);
+        for f in &report.files {
+            assert_eq!(f.available, 5);
+            assert_eq!(f.margin(), 1);
+            assert_eq!(f.missing.len(), 1);
+            assert!(f.repair_bytes > 0);
+        }
+        // Lose more than m = 2: files become Lost and leave the queue.
+        cluster.kill_se("SE-01");
+        cluster.kill_se("SE-02");
+        let report = Maintainer::new(cluster.shim())
+            .scrub(&ScrubOptions::default())
+            .unwrap();
+        assert_eq!(report.lost(), 2);
+        assert!(report.repair_queue().is_empty());
+        for f in &report.files {
+            assert!(f.margin() < 0);
+        }
+    }
+
+    #[test]
+    fn repair_queue_orders_by_margin() {
+        let (cluster, _) = cluster_with_files(6, 3);
+        // f0 loses 2 chunks (margin 0), f1 loses 1 (margin 1), f2 none.
+        // 4+2 over 6 SEs: file i's chunk j is on SE (j mod 6) — every SE
+        // holds exactly one chunk of every file, so wipe objects instead.
+        let dfc = cluster.dfc();
+        let victim = |lfn: &str, se: &str| {
+            let dfc = dfc.lock().unwrap();
+            let (path, pfn) = dfc
+                .files_with_replica_on(se)
+                .into_iter()
+                .find(|(p, _)| p.starts_with(lfn))
+                .unwrap();
+            drop(dfc);
+            (path, pfn)
+        };
+        for se in ["SE-00", "SE-01"] {
+            let (_, pfn) = victim("/vo/data/f0.bin", se);
+            cluster.registry().get(se).unwrap().delete(&pfn).unwrap();
+        }
+        let (_, pfn) = victim("/vo/data/f1.bin", "SE-02");
+        cluster.registry().get("SE-02").unwrap().delete(&pfn).unwrap();
+
+        let report = Maintainer::new(cluster.shim())
+            .scrub(&ScrubOptions::default())
+            .unwrap();
+        let queue = report.repair_queue();
+        assert_eq!(queue.len(), 2);
+        assert_eq!(queue[0].lfn, "/vo/data/f0.bin");
+        assert_eq!(queue[0].margin(), 0);
+        assert_eq!(queue[1].lfn, "/vo/data/f1.bin");
+        assert_eq!(queue[1].margin(), 1);
+    }
+
+    #[test]
+    fn deep_scrub_finds_corruption_and_repair_heals_it() {
+        let (cluster, files) = cluster_with_files(6, 1);
+        let (lfn, data) = &files[0];
+        // Corrupt one chunk's bytes in place on its SE.
+        let dfc = cluster.dfc();
+        let (path, pfn) = {
+            let dfc = dfc.lock().unwrap();
+            dfc.files_with_replica_on("SE-03").into_iter().next().unwrap()
+        };
+        let se = cluster.registry().get("SE-03").unwrap();
+        let mut bytes = se.get(&pfn).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xFF;
+        se.put(&pfn, &bytes).unwrap();
+
+        let maintainer = Maintainer::new(cluster.shim());
+        // Shallow scrub misses it…
+        let shallow = maintainer
+            .scrub(&ScrubOptions::default().shallow())
+            .unwrap();
+        assert_eq!(shallow.healthy(), 1);
+        // …deep scrub flags the replica as corrupt.
+        let deep = maintainer.scrub(&ScrubOptions::default()).unwrap();
+        assert_eq!(deep.chunks_corrupt, 1);
+        assert_eq!(deep.degraded(), 1);
+        assert_eq!(deep.files[0].corrupt[0].pfn, pfn);
+        assert!(path.starts_with(lfn));
+
+        // Repair quarantines the bad replica and rebuilds the chunk.
+        let summary = maintainer.repair_all(&deep, &RepairBudget::default());
+        assert_eq!(summary.chunks_rebuilt, 1);
+        assert_eq!(summary.files_failed, 0);
+        let after = maintainer.scrub(&ScrubOptions::default()).unwrap();
+        assert_eq!(after.healthy(), 1);
+        assert_eq!(after.chunks_corrupt, 0);
+        let back = cluster
+            .shim()
+            .get_bytes(lfn, &crate::dfm::GetOptions::default())
+            .unwrap();
+        assert_eq!(&back, data);
+    }
+
+    #[test]
+    fn quarantine_cleans_corrupt_replica_beside_good_one() {
+        let (cluster, files) = cluster_with_files(6, 1);
+        let (lfn, data) = &files[0];
+        // Register an extra, corrupt replica of one chunk on SE-05 next
+        // to its good copy on SE-02.
+        let dfc = cluster.dfc();
+        let (path, _good_pfn) = {
+            let dfc = dfc.lock().unwrap();
+            dfc.files_with_replica_on("SE-02").into_iter().next().unwrap()
+        };
+        let bad_pfn = format!("{path}.stale");
+        cluster.registry().get("SE-05").unwrap().put(&bad_pfn, b"garbage").unwrap();
+        dfc.lock().unwrap().register_replica(&path, "SE-05", &bad_pfn).unwrap();
+
+        let maintainer = Maintainer::new(cluster.shim());
+        let deep = maintainer.scrub(&ScrubOptions::default()).unwrap();
+        // The good copy keeps the chunk available…
+        assert_eq!(deep.healthy(), 1, "{}", deep.summary());
+        // …but the bad copy must still be flagged.
+        assert_eq!(deep.chunks_corrupt, 1);
+        assert_eq!(deep.files[0].corrupt[0].pfn, bad_pfn);
+
+        // Repair quarantines it (object + record) without rebuilding.
+        let summary = maintainer.repair_all(&deep, &RepairBudget::default());
+        assert_eq!(summary.chunks_rebuilt, 0);
+        assert!(!cluster.registry().get("SE-05").unwrap().exists(&bad_pfn));
+        {
+            let dfc = dfc.lock().unwrap();
+            assert!(dfc
+                .files_with_replica_on("SE-05")
+                .iter()
+                .all(|(p, _)| p != &path));
+        }
+        let clean = maintainer.scrub(&ScrubOptions::default()).unwrap();
+        assert_eq!(clean.chunks_corrupt, 0);
+        assert_eq!(clean.healthy(), 1);
+        let back = cluster
+            .shim()
+            .get_bytes(lfn, &crate::dfm::GetOptions::default())
+            .unwrap();
+        assert_eq!(&back, data);
+    }
+
+    #[test]
+    fn repair_budget_defers_low_priority_files() {
+        let (cluster, _) = cluster_with_files(6, 3);
+        cluster.kill_se("SE-05");
+        let maintainer = Maintainer::new(cluster.shim());
+        let report = maintainer.scrub(&ScrubOptions::default()).unwrap();
+        assert_eq!(report.degraded(), 3);
+        let summary =
+            maintainer.repair_all(&report, &RepairBudget::default().with_max_files(1));
+        assert_eq!(summary.files_repaired(), 1);
+        assert_eq!(summary.deferred.len(), 2);
+        let after = maintainer.scrub(&ScrubOptions::default()).unwrap();
+        assert_eq!(after.degraded(), 2);
+        // A second unbudgeted pass finishes the queue.
+        let summary2 = maintainer.repair_all(&after, &RepairBudget::default());
+        assert_eq!(summary2.files_repaired(), 2);
+        assert_eq!(
+            maintainer.scrub(&ScrubOptions::default()).unwrap().healthy(),
+            3
+        );
+    }
+
+    #[test]
+    fn scrub_and_repair_cycle_reports_touched_files() {
+        let (cluster, _) = cluster_with_files(6, 3);
+        cluster.kill_se("SE-01");
+        let maintainer = Maintainer::new(cluster.shim());
+        let (before, summary, after) = maintainer
+            .scrub_and_repair(&ScrubOptions::default(), &RepairBudget::default())
+            .unwrap();
+        assert_eq!(before.degraded(), 3);
+        assert_eq!(summary.files_repaired(), 3);
+        // The after-report re-scrubs exactly the repaired files.
+        assert_eq!(after.files.len(), 3);
+        assert_eq!(after.healthy(), 3);
+        assert_eq!(after.chunks_probed, 18);
+        // A healthy cycle touches nothing and reports nothing.
+        let (b2, s2, a2) = maintainer
+            .scrub_and_repair(&ScrubOptions::default(), &RepairBudget::default())
+            .unwrap();
+        assert_eq!(b2.degraded(), 0);
+        assert_eq!(s2.files_repaired(), 0);
+        assert!(a2.files.is_empty());
+    }
+
+    #[test]
+    fn drain_empties_se_and_keeps_files_readable() {
+        let (cluster, files) = cluster_with_files(8, 3);
+        let maintainer = Maintainer::new(cluster.shim());
+        let report = maintainer
+            .drain("SE-02", &DrainOptions::default())
+            .unwrap();
+        assert!(report.clean(), "{report:?}");
+        assert_eq!(report.replicas_moved, 3); // one chunk of each file
+        let se = cluster.registry().get("SE-02").unwrap();
+        assert_eq!(se.used_bytes(), 0);
+        assert_eq!(se.list("").unwrap().len(), 0);
+        {
+            let dfc = cluster.dfc();
+            let dfc = dfc.lock().unwrap();
+            assert!(dfc.files_with_replica_on("SE-02").is_empty());
+        }
+        for (lfn, data) in &files {
+            let back = cluster
+                .shim()
+                .get_bytes(lfn, &crate::dfm::GetOptions::default())
+                .unwrap();
+            assert_eq!(&back, data);
+        }
+        // Post-drain scrub: still fully healthy.
+        let post = maintainer.scrub(&ScrubOptions::default()).unwrap();
+        assert_eq!(post.healthy(), 3);
+    }
+
+    #[test]
+    fn drain_with_lost_objects_rebuilds_off_the_drained_se() {
+        let (cluster, files) = cluster_with_files(6, 1);
+        // The SE is alive but its chunk object is gone (bit-rot): drain
+        // must rebuild elsewhere, never back onto the SE being drained.
+        let (_, pfn) = {
+            let dfc = cluster.dfc();
+            let dfc = dfc.lock().unwrap();
+            dfc.files_with_replica_on("SE-04").into_iter().next().unwrap()
+        };
+        cluster.registry().get("SE-04").unwrap().delete(&pfn).unwrap();
+
+        let maintainer = Maintainer::new(cluster.shim());
+        let report = maintainer.drain("SE-04", &DrainOptions::default()).unwrap();
+        assert!(report.clean(), "{report:?}");
+        assert_eq!(report.chunks_rebuilt, 1, "{report:?}");
+        assert_eq!(report.replicas_moved, 0);
+        assert_eq!(cluster.registry().get("SE-04").unwrap().used_bytes(), 0);
+        {
+            let dfc = cluster.dfc();
+            let dfc = dfc.lock().unwrap();
+            assert!(dfc.files_with_replica_on("SE-04").is_empty());
+        }
+        let (lfn, data) = &files[0];
+        let back = cluster
+            .shim()
+            .get_bytes(lfn, &crate::dfm::GetOptions::default())
+            .unwrap();
+        assert_eq!(&back, data);
+    }
+
+    #[test]
+    fn drain_of_dead_se_protects_sole_whole_file_replica() {
+        let (cluster, _) = cluster_with_files(6, 1);
+        // Two whole-file (replication-baseline) files: one with a second
+        // replica, one whose only copy lives on the SE about to die.
+        cluster
+            .replication()
+            .put_bytes("/vo/rep/two.bin", &[7u8; 5000], 2, 2)
+            .unwrap();
+        cluster
+            .replication()
+            .put_bytes("/vo/rep/solo.bin", &[9u8; 4000], 1, 1)
+            .unwrap();
+        // RoundRobin put both first replicas on SE-00.
+        cluster.kill_se("SE-00");
+
+        let maintainer = Maintainer::new(cluster.shim());
+        let report = maintainer.drain("SE-00", &DrainOptions::default()).unwrap();
+        // The EC chunk on SE-00 was rebuilt; two.bin's record was dropped
+        // (its other replica serves); solo.bin must NOT be orphaned.
+        assert!(report.chunks_rebuilt >= 1, "{report:?}");
+        assert_eq!(report.records_dropped, 1, "{report:?}");
+        assert_eq!(report.failures.len(), 1, "{report:?}");
+        assert!(report.failures[0].0.contains("solo"), "{report:?}");
+        assert!(!report.clean());
+
+        assert_eq!(
+            cluster.replication().get_bytes("/vo/rep/two.bin").unwrap(),
+            vec![7u8; 5000]
+        );
+        // The sole replica's record survives, so the bytes come back with
+        // the SE instead of being silently orphaned.
+        cluster.revive_se("SE-00");
+        assert_eq!(
+            cluster.replication().get_bytes("/vo/rep/solo.bin").unwrap(),
+            vec![9u8; 4000]
+        );
+    }
+
+    #[test]
+    fn drain_unknown_se_rejected() {
+        let (cluster, _) = cluster_with_files(6, 1);
+        assert!(Maintainer::new(cluster.shim())
+            .drain("SE-99", &DrainOptions::default())
+            .is_err());
+    }
+}

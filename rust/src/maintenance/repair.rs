@@ -1,0 +1,191 @@
+//! Prioritized repair: drive [`EcShim::repair`] over a scrub report.
+//!
+//! Files are repaired most-urgent first (smallest surviving margin — the
+//! next SE failure kills those first) through the §2.4 work pool, under a
+//! configurable concurrency + bandwidth budget. Corrupt replicas found by
+//! a deep scrub are quarantined (deleted from their SE) first, so the
+//! shim's stat-driven repair path rebuilds them like any missing chunk.
+
+use crate::dfm::EcShim;
+use crate::dfm::GetOptions;
+use crate::transfer::{PoolConfig, RetryPolicy, WorkPool};
+
+use super::scrub::{HealthState, ScrubReport};
+
+/// Concurrency/bandwidth budget for one repair pass.
+#[derive(Clone, Copy, Debug)]
+pub struct RepairBudget {
+    /// Concurrent file repairs.
+    pub workers: usize,
+    /// Transfer worker threads inside each file repair (fetch survivors +
+    /// upload rebuilt chunks).
+    pub transfer_workers: usize,
+    /// At most this many files per pass (the rest stay queued for the
+    /// next scrub cycle).
+    pub max_files: usize,
+    /// Approximate rebuild-byte ceiling per pass — the repair-bandwidth
+    /// knob the repair-scheduling literature optimizes. Files are taken
+    /// in priority order until the estimate is exhausted (the first file
+    /// is always taken).
+    pub max_bytes: u64,
+}
+
+impl Default for RepairBudget {
+    fn default() -> Self {
+        RepairBudget {
+            workers: 2,
+            transfer_workers: 4,
+            max_files: usize::MAX,
+            max_bytes: u64::MAX,
+        }
+    }
+}
+
+impl RepairBudget {
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.workers = workers.max(1);
+        self
+    }
+
+    pub fn with_max_files(mut self, max_files: usize) -> Self {
+        self.max_files = max_files;
+        self
+    }
+
+    pub fn with_max_bytes(mut self, max_bytes: u64) -> Self {
+        self.max_bytes = max_bytes;
+        self
+    }
+}
+
+/// Result of one file's repair attempt.
+#[derive(Clone, Debug)]
+pub struct RepairOutcome {
+    pub lfn: String,
+    /// Margin when the scrub saw the file (repair priority key).
+    pub margin_before: isize,
+    pub chunks_rebuilt: usize,
+    /// Error text when the repair failed (file stays degraded).
+    pub error: Option<String>,
+}
+
+/// Aggregate outcome of a repair pass.
+#[derive(Clone, Debug, Default)]
+pub struct RepairSummary {
+    /// Per-file outcomes, in completion order.
+    pub outcomes: Vec<RepairOutcome>,
+    pub chunks_rebuilt: usize,
+    pub files_failed: usize,
+    /// Files deferred by the `max_files`/`max_bytes` budget, still in
+    /// priority order.
+    pub deferred: Vec<String>,
+    /// Unreadable files repair cannot help (margin < 0).
+    pub lost: Vec<String>,
+}
+
+impl RepairSummary {
+    pub fn files_repaired(&self) -> usize {
+        self.outcomes.iter().filter(|o| o.error.is_none()).count()
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "repaired {} file(s) / {} chunk(s); {} failed, {} deferred by budget, {} lost",
+            self.files_repaired(),
+            self.chunks_rebuilt,
+            self.files_failed,
+            self.deferred.len(),
+            self.lost.len()
+        )
+    }
+}
+
+/// Repair every degraded file in `report`, most-urgent first, within
+/// `budget`.
+pub fn repair_all(shim: &EcShim, report: &ScrubReport, budget: &RepairBudget) -> RepairSummary {
+    let mut summary = RepairSummary {
+        lost: report
+            .files
+            .iter()
+            .filter(|f| f.state() == HealthState::Lost)
+            .map(|f| f.lfn.clone())
+            .collect(),
+        ..Default::default()
+    };
+
+    // Budgeting: walk the priority queue, spending the byte estimate.
+    let queue = report.repair_queue();
+    let mut planned = Vec::new();
+    let mut spent_bytes = 0u64;
+    for (i, f) in queue.iter().enumerate() {
+        let over_files = planned.len() >= budget.max_files;
+        let over_bytes =
+            !planned.is_empty() && spent_bytes.saturating_add(f.repair_bytes) > budget.max_bytes;
+        if over_files || over_bytes {
+            summary.deferred.extend(queue[i..].iter().map(|f| f.lfn.clone()));
+            break;
+        }
+        spent_bytes = spent_bytes.saturating_add(f.repair_bytes);
+        planned.push(*f);
+    }
+
+    // Quarantine checksum-bad replicas catalogue-wide — not only the
+    // files planned for rebuild this pass: a bad copy beside a good one
+    // (file still Healthy) or on a budget-deferred file would otherwise
+    // survive every cycle and mask its chunk as available. The object is
+    // deleted and its record dropped; the stat-driven repair then sees a
+    // rebuilt-needed chunk as plainly missing. Lost files are left
+    // untouched (their corrupt copies may be the only bytes remaining).
+    let registry = shim.registry();
+    let dfc = shim.dfc();
+    for f in report.files.iter().filter(|f| f.state() != HealthState::Lost) {
+        for c in &f.corrupt {
+            if let Some(se) = registry.get(&c.se) {
+                let _ = se.delete(&c.pfn);
+            }
+            let mut dfc = dfc.lock().unwrap();
+            let _ = dfc.remove_replica(&c.path, &c.se);
+        }
+    }
+
+    // One pool job per file; queue order is priority order, so the most
+    // urgent files start first.
+    let transfer_workers = budget.transfer_workers.max(1);
+    let jobs: Vec<(usize, _)> = planned
+        .iter()
+        .enumerate()
+        .map(|(i, f)| {
+            let lfn = f.lfn.clone();
+            let margin_before = f.margin();
+            (i, move || {
+                let opts = GetOptions::default()
+                    .with_workers(transfer_workers)
+                    .with_retry(RetryPolicy::default_robust());
+                shim.repair(&lfn, &opts)
+                    .map(|rebuilt| (lfn.clone(), margin_before, rebuilt))
+                    .map_err(|e| crate::Error::Transfer(format!("repair of `{lfn}`: {e}")))
+            })
+        })
+        .collect();
+    let outcome = WorkPool::new(PoolConfig::parallel(budget.workers)).run(jobs, usize::MAX);
+
+    for (_, (lfn, margin_before, rebuilt)) in outcome.successes {
+        summary.chunks_rebuilt += rebuilt;
+        summary.outcomes.push(RepairOutcome {
+            lfn,
+            margin_before,
+            chunks_rebuilt: rebuilt,
+            error: None,
+        });
+    }
+    for (idx, err) in outcome.failures {
+        summary.files_failed += 1;
+        summary.outcomes.push(RepairOutcome {
+            lfn: planned[idx].lfn.clone(),
+            margin_before: planned[idx].margin(),
+            chunks_rebuilt: 0,
+            error: Some(err.to_string()),
+        });
+    }
+    summary
+}

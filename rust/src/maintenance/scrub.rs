@@ -1,0 +1,381 @@
+//! The scrubber: catalogue-wide health assessment of erasure-coded files.
+//!
+//! A scrub walks every EC directory under a root (found through the DFC
+//! iteration helpers by their `TOTAL`/`SPLIT` metadata, either key style),
+//! probes each chunk replica's SE for existence — and, in deep mode, for a
+//! checksum match against the catalogue record — and folds the results
+//! into one [`FileHealth`] per file. The probe phase runs through the
+//! §2.4 work pool, one job per file.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::catalog::{dfc::DirItem, Dfc, MetaKeyStyle, Replica};
+use crate::se::SeRegistry;
+use crate::transfer::{PoolConfig, WorkPool};
+use crate::{Error, Result};
+
+/// Scrub parameters.
+#[derive(Clone, Debug)]
+pub struct ScrubOptions {
+    /// Catalogue subtree to scrub (`"/"` = everything).
+    pub root: String,
+    /// Deep scrub: fetch every surviving replica and verify its SHA-256
+    /// against the catalogue checksum. Shallow scrubs only probe
+    /// existence + SE availability.
+    pub verify_checksums: bool,
+    /// Probe worker threads (one job per file).
+    pub workers: usize,
+}
+
+impl Default for ScrubOptions {
+    fn default() -> Self {
+        ScrubOptions { root: "/".into(), verify_checksums: true, workers: 4 }
+    }
+}
+
+impl ScrubOptions {
+    pub fn with_root(mut self, root: impl Into<String>) -> Self {
+        self.root = root.into();
+        self
+    }
+
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.workers = workers.max(1);
+        self
+    }
+
+    pub fn shallow(mut self) -> Self {
+        self.verify_checksums = false;
+        self
+    }
+}
+
+/// Health classification of one EC file.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HealthState {
+    /// All N chunks fetchable.
+    Healthy,
+    /// Some chunks lost but ≥ K survive — repairable.
+    Degraded,
+    /// Fewer than K chunks survive — unrecoverable by repair.
+    Lost,
+}
+
+/// A replica whose bytes exist but fail the catalogue checksum.
+#[derive(Clone, Debug)]
+pub struct CorruptReplica {
+    pub index: usize,
+    /// Catalogue path of the chunk file (for record removal).
+    pub path: String,
+    pub se: String,
+    pub pfn: String,
+}
+
+/// Per-file scrub verdict.
+#[derive(Clone, Debug)]
+pub struct FileHealth {
+    pub lfn: String,
+    /// Data chunks needed to reconstruct (the catalogue `SPLIT`).
+    pub k: usize,
+    /// Total chunks (the catalogue `TOTAL`).
+    pub n: usize,
+    /// Chunks with at least one good replica.
+    pub available: usize,
+    /// Chunk indices with no live replica at all.
+    pub missing: Vec<usize>,
+    /// Replicas present but checksum-bad (deep scrub only; one entry per
+    /// bad replica, including bad copies of chunks that remain available
+    /// through a good replica). A chunk with only corrupt replicas is
+    /// counted unavailable.
+    pub corrupt: Vec<CorruptReplica>,
+    /// Estimated bytes a repair must rebuild (sum of lost chunk sizes).
+    pub repair_bytes: u64,
+}
+
+impl FileHealth {
+    pub fn state(&self) -> HealthState {
+        if self.available == self.n {
+            HealthState::Healthy
+        } else if self.available >= self.k {
+            HealthState::Degraded
+        } else {
+            HealthState::Lost
+        }
+    }
+
+    /// Surviving margin: chunks that can still be lost before the file
+    /// is. Negative once the file is already unreadable.
+    pub fn margin(&self) -> isize {
+        self.available as isize - self.k as isize
+    }
+
+    /// The margin of a fully healthy file (N − K).
+    pub fn full_margin(&self) -> usize {
+        self.n - self.k
+    }
+
+    pub fn needs_repair(&self) -> bool {
+        self.available < self.n
+    }
+}
+
+/// Aggregate scrub outcome.
+#[derive(Clone, Debug, Default)]
+pub struct ScrubReport {
+    /// One entry per EC file, in catalogue order.
+    pub files: Vec<FileHealth>,
+    /// EC-tagged directories that could not be parsed (missing/garbled
+    /// metadata, no chunk files) — surfaced rather than silently skipped.
+    pub skipped: Vec<(String, String)>,
+    pub chunks_probed: usize,
+    pub chunks_missing: usize,
+    pub chunks_corrupt: usize,
+}
+
+impl ScrubReport {
+    pub fn healthy(&self) -> usize {
+        self.count(HealthState::Healthy)
+    }
+
+    pub fn degraded(&self) -> usize {
+        self.count(HealthState::Degraded)
+    }
+
+    pub fn lost(&self) -> usize {
+        self.count(HealthState::Lost)
+    }
+
+    fn count(&self, state: HealthState) -> usize {
+        self.files.iter().filter(|f| f.state() == state).count()
+    }
+
+    /// Repairable files ordered most-urgent first: smallest surviving
+    /// margin, ties broken by LFN for determinism. Lost files are not in
+    /// the queue (repair cannot help them); fully healthy files neither.
+    pub fn repair_queue(&self) -> Vec<&FileHealth> {
+        let mut q: Vec<&FileHealth> = self
+            .files
+            .iter()
+            .filter(|f| f.state() == HealthState::Degraded)
+            .collect();
+        q.sort_by(|a, b| a.margin().cmp(&b.margin()).then_with(|| a.lfn.cmp(&b.lfn)));
+        q
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} files: {} healthy, {} degraded, {} lost ({} chunks probed, {} missing, {} corrupt)",
+            self.files.len(),
+            self.healthy(),
+            self.degraded(),
+            self.lost(),
+            self.chunks_probed,
+            self.chunks_missing,
+            self.chunks_corrupt
+        )
+    }
+}
+
+/// Catalogue snapshot of one EC file, taken under the DFC lock so the
+/// probe phase runs lock-free.
+struct FileLayout {
+    lfn: String,
+    k: usize,
+    n: usize,
+    chunks: Vec<ChunkRecord>,
+}
+
+struct ChunkRecord {
+    index: usize,
+    /// Catalogue path of the chunk file.
+    path: String,
+    checksum: String,
+    size: u64,
+    replicas: Vec<Replica>,
+}
+
+/// Whether a metadata map carries the EC TOTAL+SPLIT tags, under either
+/// the paper's generic (V1) or the prefixed (V2) key style.
+fn is_ec_meta(meta: &crate::catalog::meta::MetaMap) -> bool {
+    [MetaKeyStyle::V2Prefixed, MetaKeyStyle::V1Generic]
+        .iter()
+        .any(|s| meta.contains_key(s.total_key()) && meta.contains_key(s.split_key()))
+}
+
+/// Whether `path` names an EC file directory (single metadata lookup; no
+/// subtree walk).
+pub fn is_ec_dir(dfc: &Dfc, path: &str) -> bool {
+    dfc.is_dir(path) && dfc.meta(path).map(is_ec_meta).unwrap_or(false)
+}
+
+/// Find every EC file directory under `root`.
+pub fn find_ec_dirs(dfc: &Dfc, root: &str) -> Result<Vec<String>> {
+    dfc.dirs_where(root, |_, meta| is_ec_meta(meta))
+}
+
+fn meta_int(dfc: &Dfc, lfn: &str, key_v2: &str, key_v1: &str) -> Option<i64> {
+    dfc.get_meta(lfn, key_v2)
+        .ok()
+        .flatten()
+        .or_else(|| dfc.get_meta(lfn, key_v1).ok().flatten())
+        .and_then(|v| v.as_int())
+}
+
+fn snapshot(dfc: &Dfc, lfn: &str) -> Result<FileLayout> {
+    let v2 = MetaKeyStyle::V2Prefixed;
+    let v1 = MetaKeyStyle::V1Generic;
+    let total = meta_int(dfc, lfn, v2.total_key(), v1.total_key())
+        .ok_or_else(|| Error::Catalog(format!("`{lfn}`: missing TOTAL metadata")))?;
+    let split = meta_int(dfc, lfn, v2.split_key(), v1.split_key())
+        .ok_or_else(|| Error::Catalog(format!("`{lfn}`: missing SPLIT metadata")))?;
+    let (n, k) = (total as usize, split as usize);
+    if k == 0 || k > n {
+        return Err(Error::Catalog(format!("`{lfn}`: bad geometry k={k} n={n}")));
+    }
+
+    let mut chunks = Vec::new();
+    for item in dfc.list_dir(lfn)? {
+        if let DirItem::File(name) = &item {
+            if let Some((_base, index, n_from_name)) = crate::ec::parse_chunk_name(name) {
+                if n_from_name != n {
+                    return Err(Error::Catalog(format!(
+                        "`{lfn}`: chunk `{name}` claims n={n_from_name}, metadata says {n}"
+                    )));
+                }
+                let path = format!("{lfn}/{name}");
+                let entry = dfc.file(&path)?;
+                chunks.push(ChunkRecord {
+                    index,
+                    path,
+                    checksum: entry.checksum.clone(),
+                    size: entry.size,
+                    replicas: entry.replicas.clone(),
+                });
+            }
+        }
+    }
+    if chunks.is_empty() {
+        return Err(Error::Catalog(format!("`{lfn}` holds no chunk files")));
+    }
+    chunks.sort_by_key(|c| c.index);
+    Ok(FileLayout { lfn: lfn.to_string(), k, n, chunks })
+}
+
+/// Probe one file's chunks against the registry. Pure function of the
+/// snapshot + live SE state; no catalogue access.
+fn probe(layout: &FileLayout, registry: &SeRegistry, verify: bool) -> FileHealth {
+    let mut missing = Vec::new();
+    let mut corrupt = Vec::new();
+    let mut available = 0usize;
+    let mut repair_bytes = 0u64;
+
+    for chunk in &layout.chunks {
+        let mut ok = false;
+        // Deep mode probes *every* replica — no early break on the first
+        // good copy — and records each checksum-bad one, so the repair
+        // pass can quarantine a corrupt copy sitting beside a good one.
+        let mut bad_replicas: Vec<CorruptReplica> = Vec::new();
+        for r in &chunk.replicas {
+            let Some(se) = registry.get(&r.se) else { continue };
+            if !se.is_available() || !se.exists(&r.pfn) {
+                continue;
+            }
+            if verify && !chunk.checksum.is_empty() {
+                match se.get(&r.pfn) {
+                    Ok(bytes) => {
+                        let got =
+                            crate::util::hexfmt::encode(&crate::util::sha256::digest(&bytes));
+                        if got == chunk.checksum {
+                            ok = true;
+                        } else {
+                            bad_replicas.push(CorruptReplica {
+                                index: chunk.index,
+                                path: chunk.path.clone(),
+                                se: r.se.clone(),
+                                pfn: r.pfn.clone(),
+                            });
+                        }
+                    }
+                    Err(_) => continue,
+                }
+            } else {
+                ok = true;
+                break;
+            }
+        }
+        if ok {
+            available += 1;
+        } else {
+            repair_bytes += chunk.size;
+            if bad_replicas.is_empty() {
+                missing.push(chunk.index);
+            }
+        }
+        corrupt.extend(bad_replicas);
+    }
+
+    FileHealth {
+        lfn: layout.lfn.clone(),
+        k: layout.k,
+        n: layout.n,
+        available,
+        missing,
+        corrupt,
+        repair_bytes,
+    }
+}
+
+/// Run a scrub over the catalogue.
+pub fn scrub(
+    dfc: &Arc<std::sync::Mutex<Dfc>>,
+    registry: &Arc<SeRegistry>,
+    opts: &ScrubOptions,
+) -> Result<ScrubReport> {
+    // Snapshot phase: one catalogue lock, no SE traffic.
+    let (layouts, skipped) = {
+        let dfc = dfc.lock().unwrap();
+        let mut layouts = Vec::new();
+        let mut skipped = Vec::new();
+        for lfn in find_ec_dirs(&dfc, &opts.root)? {
+            match snapshot(&dfc, &lfn) {
+                Ok(l) => layouts.push(l),
+                Err(e) => skipped.push((lfn, e.to_string())),
+            }
+        }
+        (layouts, skipped)
+    };
+
+    // Probe phase: one pool job per file. The closures borrow `layouts`;
+    // the pool's scoped threads make that sound without boxing.
+    let verify = opts.verify_checksums;
+    let jobs: Vec<(usize, _)> = layouts
+        .iter()
+        .enumerate()
+        .map(|(i, layout)| {
+            let registry = Arc::clone(registry);
+            (i, move || Ok((i, probe(layout, &registry, verify))))
+        })
+        .collect();
+    let outcome = WorkPool::new(PoolConfig::parallel(opts.workers)).run(jobs, usize::MAX);
+
+    let mut by_index: BTreeMap<usize, FileHealth> = outcome
+        .successes
+        .into_iter()
+        .map(|(_, (i, h))| (i, h))
+        .collect();
+    let files: Vec<FileHealth> = (0..layouts.len()).filter_map(|i| by_index.remove(&i)).collect();
+
+    let mut report = ScrubReport { files, skipped, ..Default::default() };
+    for f in &report.files {
+        report.chunks_probed += f.n;
+        report.chunks_missing += f.missing.len();
+        // `corrupt` is replica-level (a chunk can have several bad
+        // replicas); count chunks, not replicas.
+        let distinct: std::collections::BTreeSet<usize> =
+            f.corrupt.iter().map(|c| c.index).collect();
+        report.chunks_corrupt += distinct.len();
+    }
+    Ok(report)
+}

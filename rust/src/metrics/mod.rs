@@ -166,8 +166,8 @@ impl Metrics {
 
 /// The process-global registry used by the shim/CLI.
 pub fn global() -> &'static Metrics {
-    static GLOBAL: once_cell::sync::Lazy<Metrics> = once_cell::sync::Lazy::new(Metrics::new);
-    &GLOBAL
+    static GLOBAL: std::sync::OnceLock<Metrics> = std::sync::OnceLock::new();
+    GLOBAL.get_or_init(Metrics::new)
 }
 
 #[cfg(test)]

@@ -6,15 +6,64 @@
 //! `Mutex` anyway, so the `unsafe impl`s below only assert "moving these
 //! pointers between threads is fine", which holds for PJRT's C API.
 
+//! When built without the `pjrt` cargo feature (the offline default — the
+//! `xla` crate cannot be fetched), a stub engine with the same API is
+//! compiled instead: `new` fails cleanly and callers fall back to the
+//! pure-rust backend, exactly as they do when artifacts are absent.
+
+#[cfg(feature = "pjrt")]
 use std::collections::BTreeMap;
 use std::path::Path;
 
+#[cfg(feature = "pjrt")]
 use std::sync::Mutex;
 
 use crate::{Error, Result};
 
-use super::artifacts::{ArtifactIndex, ArtifactKey};
+#[cfg(feature = "pjrt")]
+use super::artifacts::ArtifactIndex;
+use super::artifacts::ArtifactKey;
 
+/// Stub engine compiled when the `pjrt` feature (and thus the `xla`
+/// crate) is unavailable. Construction always fails, so every caller
+/// takes its pure-rust fallback path.
+#[cfg(not(feature = "pjrt"))]
+pub struct PjrtEngine {
+    _private: (),
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl PjrtEngine {
+    pub fn new(_dir: &Path) -> Result<Self> {
+        Err(Error::Runtime(
+            "PJRT support not compiled in (enable the `pjrt` cargo feature)".into(),
+        ))
+    }
+
+    pub fn from_default_dir() -> Result<Self> {
+        Self::new(&super::default_artifact_dir())
+    }
+
+    pub fn supports(&self, _key: &ArtifactKey) -> bool {
+        false
+    }
+
+    pub fn keys(&self) -> Vec<ArtifactKey> {
+        Vec::new()
+    }
+
+    pub fn execute_u8(
+        &self,
+        _key: &ArtifactKey,
+        _operands: &[(usize, usize, &[u8])],
+        _out_rows: usize,
+        _out_cols: usize,
+    ) -> Result<Vec<u8>> {
+        Err(Error::Runtime("PJRT support not compiled in".into()))
+    }
+}
+
+#[cfg(feature = "pjrt")]
 struct Inner {
     client: xla::PjRtClient,
     index: ArtifactIndex,
@@ -25,13 +74,16 @@ struct Inner {
 // SAFETY: all access to `Inner` is serialized by `PjrtEngine::inner`'s
 // Mutex; PJRT CPU client objects may be used from any thread as long as
 // calls do not race (the C API is thread-safe; we are stricter).
+#[cfg(feature = "pjrt")]
 unsafe impl Send for Inner {}
 
 /// A shared PJRT engine over the artifact set.
+#[cfg(feature = "pjrt")]
 pub struct PjrtEngine {
     inner: Mutex<Inner>,
 }
 
+#[cfg(feature = "pjrt")]
 impl PjrtEngine {
     /// Create the CPU client and load the artifact index from `dir`.
     pub fn new(dir: &Path) -> Result<Self> {

@@ -4,6 +4,7 @@
 pub mod hexfmt;
 pub mod json;
 pub mod prng;
+pub mod sha256;
 
 /// Format a byte count human-readably (`1.5 MB`, `768 kB`, ...).
 pub fn fmt_bytes(n: u64) -> String {

@@ -1,0 +1,162 @@
+//! Maintenance-engine integration: the full site-resilience loop on a
+//! MemSe cluster — outage injection via `se::failure`, one scrub+repair
+//! cycle back to full health, and a clean SE drain.
+
+use drs::dfm::{GetOptions, PutOptions, TestCluster};
+use drs::ec::EcParams;
+use drs::maintenance::{
+    DrainOptions, HealthState, Maintainer, RepairBudget, ScrubOptions,
+};
+use drs::se::failure::{apply_at, Outage, Schedule};
+use drs::util::prng::Rng;
+
+const N_SES: usize = 8;
+const N_FILES: usize = 5;
+
+fn cluster_with_corpus() -> (TestCluster, Vec<(String, Vec<u8>)>) {
+    let params = EcParams::new(4, 2).unwrap();
+    let cluster = TestCluster::builder().ses(N_SES).ec(params).build().unwrap();
+    let opts = PutOptions::default().with_params(params).with_stripe(1024).with_workers(4);
+    let mut rng = Rng::new(0xA11);
+    let mut files = Vec::new();
+    for i in 0..N_FILES {
+        let lfn = format!("/vo/fleet/file{i}.dat");
+        let data = rng.bytes(10_000 + 7_000 * i);
+        cluster.shim().put_bytes(&lfn, &data, &opts).unwrap();
+        files.push((lfn, data));
+    }
+    (cluster, files)
+}
+
+#[test]
+fn outage_scrub_repair_cycle_restores_full_health() {
+    let (cluster, files) = cluster_with_corpus();
+    let shim = cluster.shim();
+    let maintainer = Maintainer::new(shim);
+
+    // Inject outages on 2 of the 8 endpoints through the failure
+    // scheduler: both SEs are inside their outage window at t = 50.
+    let dead = ["SE-01", "SE-04"];
+    let schedules: Vec<(String, Schedule)> = dead
+        .iter()
+        .map(|name| {
+            (
+                name.to_string(),
+                Schedule { outages: vec![Outage { start: 10.0, end: 1_000.0 }] },
+            )
+        })
+        .collect();
+    apply_at(cluster.registry(), &schedules, 50.0);
+    assert!(!cluster.registry().get("SE-01").unwrap().is_available());
+    assert!(!cluster.registry().get("SE-04").unwrap().is_available());
+
+    // Scrub sees the degradation: 4+2 over 8 SEs round-robin means a
+    // file touches 6 consecutive SEs, so every file lost 1–2 chunks.
+    let report = maintainer.scrub(&ScrubOptions::default()).unwrap();
+    assert_eq!(report.files.len(), N_FILES);
+    assert_eq!(report.healthy(), 0);
+    assert_eq!(report.lost(), 0);
+    assert_eq!(report.degraded(), N_FILES);
+    // The repair queue is ordered most-urgent (smallest margin) first.
+    let queue = report.repair_queue();
+    for pair in queue.windows(2) {
+        assert!(pair[0].margin() <= pair[1].margin());
+    }
+
+    // One repair cycle, then re-scrub with the two SEs still dead.
+    let summary = maintainer.repair_all(&report, &RepairBudget::default());
+    assert_eq!(summary.files_failed, 0, "{:?}", summary.outcomes);
+    assert_eq!(summary.files_repaired(), N_FILES);
+    assert!(summary.chunks_rebuilt >= N_FILES);
+
+    let after = maintainer.scrub(&ScrubOptions::default()).unwrap();
+    assert_eq!(after.healthy(), N_FILES, "{}", after.summary());
+    for f in &after.files {
+        // Full health: margin back to N − K.
+        assert_eq!(f.state(), HealthState::Healthy);
+        assert_eq!(f.margin(), f.full_margin() as isize);
+        assert_eq!(f.available, f.n);
+    }
+
+    // Re-placed chunks live off the dead SEs: the catalogue no longer
+    // points any *fetchable* replica at them, and every file reads back
+    // bit-identical while the outage persists.
+    {
+        let dfc = cluster.dfc();
+        let dfc = dfc.lock().unwrap();
+        for name in dead {
+            for (path, _) in dfc.files_with_replica_on(name) {
+                panic!("`{path}` still has a replica registered on dead `{name}`");
+            }
+        }
+    }
+    for (lfn, data) in &files {
+        let back = shim.get_bytes(lfn, &GetOptions::default().with_workers(4)).unwrap();
+        assert_eq!(&back, data, "{lfn} corrupted by repair");
+    }
+
+    // The outage window ends; the SEs return with stale objects, but the
+    // catalogue already points elsewhere — files must still be healthy.
+    apply_at(cluster.registry(), &schedules, 2_000.0);
+    assert!(cluster.registry().get("SE-01").unwrap().is_available());
+    let healed = maintainer.scrub(&ScrubOptions::default()).unwrap();
+    assert_eq!(healed.healthy(), N_FILES);
+}
+
+#[test]
+fn drain_leaves_se_empty_and_files_readable() {
+    let (cluster, files) = cluster_with_corpus();
+    let shim = cluster.shim();
+    let maintainer = Maintainer::new(shim);
+
+    let report = maintainer.drain("SE-03", &DrainOptions::default()).unwrap();
+    assert!(report.clean(), "{report:?}");
+    assert!(report.replicas_moved > 0);
+
+    // The drained SE holds zero chunks…
+    let se = cluster.registry().get("SE-03").unwrap();
+    assert_eq!(se.used_bytes(), 0);
+    assert_eq!(se.list("").unwrap().len(), 0);
+    {
+        let dfc = cluster.dfc();
+        let dfc = dfc.lock().unwrap();
+        assert!(dfc.files_with_replica_on("SE-03").is_empty());
+    }
+
+    // …while every file stays readable (even with the drained SE then
+    // taken offline for decommissioning).
+    cluster.kill_se("SE-03");
+    for (lfn, data) in &files {
+        let back = shim.get_bytes(lfn, &GetOptions::default()).unwrap();
+        assert_eq!(&back, data, "{lfn} unreadable after drain");
+    }
+    let post = maintainer.scrub(&ScrubOptions::default()).unwrap();
+    assert_eq!(post.healthy(), N_FILES, "{}", post.summary());
+}
+
+#[test]
+fn drain_of_dead_se_falls_back_to_ec_repair() {
+    let (cluster, files) = cluster_with_corpus();
+    let shim = cluster.shim();
+    let maintainer = Maintainer::new(shim);
+
+    // The SE dies *before* it can be drained: byte-copy is impossible,
+    // so the engine must re-derive its chunks from the survivors.
+    cluster.kill_se("SE-02");
+    let report = maintainer.drain("SE-02", &DrainOptions::default()).unwrap();
+    assert_eq!(report.replicas_moved, 0);
+    assert!(report.chunks_rebuilt > 0, "{report:?}");
+    assert!(report.failures.is_empty(), "{report:?}");
+
+    {
+        let dfc = cluster.dfc();
+        let dfc = dfc.lock().unwrap();
+        assert!(dfc.files_with_replica_on("SE-02").is_empty());
+    }
+    for (lfn, data) in &files {
+        let back = shim.get_bytes(lfn, &GetOptions::default()).unwrap();
+        assert_eq!(&back, data);
+    }
+    let post = maintainer.scrub(&ScrubOptions::default()).unwrap();
+    assert_eq!(post.healthy(), N_FILES, "{}", post.summary());
+}
