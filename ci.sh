@@ -15,4 +15,7 @@ echo "== tier-1: build + test =="
 cargo build --release
 cargo test -q
 
+echo "== docs (deny warnings, missing_docs enforced) =="
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+
 echo "CI green ✓"

@@ -73,11 +73,7 @@ fn main() -> drs::Result<()> {
     println!("all {verified} files reconstructed and SHA-verified under the outage ✓");
 
     // Catalog metadata query: find every EC file in the namespace.
-    let dfc = cluster.dfc();
-    let hits = dfc
-        .lock()
-        .unwrap()
-        .find_dirs_by_meta(&[("drs_ec_total", MetaValue::Int(15))]);
+    let hits = cluster.dfc().find_dirs_by_meta(&[("drs_ec_total", MetaValue::Int(15))]);
     println!("catalog metadata query found {} EC file directories", hits.len());
     assert_eq!(hits.len(), corpus.len());
     Ok(())

@@ -56,16 +56,14 @@ fn main() {
                 .put_bytes(&format!("/vo/s{i}"), &[1u8; 2000], &opts)
                 .unwrap();
         }
-        let dfc = cluster.dfc();
-        let dfc = dfc.lock().unwrap();
-        let collision_prone = dfc
-            .global_tags()
+        let tags = cluster.dfc().global_tags();
+        let collision_prone = tags
             .keys()
             .filter(|k| MetaKeyStyle::is_collision_prone(k))
             .count();
         println!(
             "  {style:?}: {} global tags, {collision_prone} collision-prone",
-            dfc.global_tags().len()
+            tags.len()
         );
     }
 

@@ -28,11 +28,14 @@ impl Node {
 /// Listing element returned by [`Dfc::list_dir`].
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum DirItem {
+    /// A subdirectory, by name.
     Dir(String),
+    /// A file, by name.
     File(String),
 }
 
 impl DirItem {
+    /// The entry's name (the last path component).
     pub fn name(&self) -> &str {
         match self {
             DirItem::Dir(n) | DirItem::File(n) => n,
@@ -41,6 +44,11 @@ impl DirItem {
 }
 
 /// The DIRAC File Catalogue.
+///
+/// One in-memory namespace tree. `Dfc` itself is single-threaded; the
+/// concurrent, shard-partitioned catalogue built on top of it is
+/// [`super::store::ShardedDfc`], which also hands out plain `Dfc` values
+/// as point-in-time snapshots for lock-free scans.
 pub struct Dfc {
     root: Node,
     /// The *global* metadata tag index (key → use count). Reproduces the
@@ -56,13 +64,16 @@ impl Default for Dfc {
 }
 
 impl Dfc {
+    /// An empty catalogue: just the root directory.
     pub fn new() -> Self {
         Dfc { root: Node::empty_dir(), tag_index: BTreeMap::new() }
     }
 
     // -- path helpers -----------------------------------------------------
 
-    fn split(path: &str) -> Result<Vec<&str>> {
+    /// Validate and split an absolute path into its components
+    /// (`"/a//b"` → `["a", "b"]`; `.`/`..` rejected).
+    pub(crate) fn split(path: &str) -> Result<Vec<&str>> {
         if !path.starts_with('/') {
             return Err(Error::Catalog(format!("path must be absolute: `{path}`")));
         }
@@ -158,14 +169,17 @@ impl Dfc {
         Ok(())
     }
 
+    /// Whether `path` names any entry (directory or file).
     pub fn exists(&self, path: &str) -> bool {
         self.lookup(path).is_ok()
     }
 
+    /// Whether `path` names a directory.
     pub fn is_dir(&self, path: &str) -> bool {
         matches!(self.lookup(path), Ok(Node::Dir { .. }))
     }
 
+    /// Whether `path` names a file.
     pub fn is_file(&self, path: &str) -> bool {
         matches!(self.lookup(path), Ok(Node::File(_)))
     }
@@ -198,6 +212,7 @@ impl Dfc {
         }
     }
 
+    /// Mutable access to a file record (replica/metadata updates).
     pub fn file_mut(&mut self, path: &str) -> Result<&mut FileEntry> {
         match self.lookup_mut(path)? {
             Node::File(f) => Ok(f),
@@ -278,6 +293,7 @@ impl Dfc {
         })
     }
 
+    /// One metadata value (`None` when the key is unset).
     pub fn get_meta(&self, path: &str, key: &str) -> Result<Option<&MetaValue>> {
         Ok(self.meta(path)?.get(key))
     }
@@ -390,6 +406,7 @@ impl Dfc {
         Ok(&self.file(path)?.replicas)
     }
 
+    /// `removeReplica`: drop the record of `path`'s replica on `se`.
     pub fn remove_replica(&mut self, path: &str, se: &str) -> Result<()> {
         let f = self.file_mut(path)?;
         let before = f.replicas.len();
@@ -398,6 +415,81 @@ impl Dfc {
             return Err(Error::Catalog(format!("no replica of `{path}` at `{se}`")));
         }
         Ok(())
+    }
+
+    // -- subtree snapshots (sharded-store support) ---------------------------
+
+    /// Deep-clone the subtree rooted at `root` (a directory), wrapped in
+    /// its ancestor chain so paths keep their absolute form. Ancestor
+    /// directories keep their metadata but lose their other children.
+    /// The tag index is cloned wholesale (it is catalogue-global).
+    ///
+    /// This is the per-shard "clone-on-scan" primitive behind
+    /// [`super::store::ShardedDfc::snapshot_subtree`].
+    pub(crate) fn clone_subtree(&self, root: &str) -> Result<Dfc> {
+        let parts = Self::split(root)?;
+        // Walk down to the subtree root, remembering each ancestor's entry.
+        let mut node = &self.root;
+        let mut entries: Vec<DirEntry> = Vec::with_capacity(parts.len());
+        for part in &parts {
+            match node {
+                Node::Dir { entry, children } => {
+                    entries.push(entry.clone());
+                    node = children.get(*part).ok_or_else(|| {
+                        Error::Catalog(format!("no such entry: `{root}`"))
+                    })?;
+                }
+                Node::File(_) => {
+                    return Err(Error::Catalog(format!(
+                        "`{root}` is a file, not a directory"
+                    )))
+                }
+            }
+        }
+        if matches!(node, Node::File(_)) {
+            return Err(Error::Catalog(format!("`{root}` is a file, not a directory")));
+        }
+        // Wrap a deep clone of the subtree in the ancestor chain.
+        let mut wrapped = node.clone();
+        for (part, entry) in parts.iter().zip(entries).rev() {
+            let mut children = BTreeMap::new();
+            children.insert(part.to_string(), wrapped);
+            wrapped = Node::Dir { entry, children };
+        }
+        Ok(Dfc { root: wrapped, tag_index: self.tag_index.clone() })
+    }
+
+    /// Merge another catalogue tree into this one: directories union
+    /// (existing metadata wins key-by-key), missing entries move over,
+    /// tag-index use counts add up. Used to fold per-shard subtree clones
+    /// into one snapshot; the shards hold disjoint files, so file
+    /// collisions cannot occur under the sharding invariants.
+    pub(crate) fn merge_from(&mut self, other: Dfc) {
+        fn merge(dst: &mut Node, src: Node) {
+            let Node::Dir { entry: src_entry, children: src_children } = src else {
+                return;
+            };
+            let Node::Dir { entry: dst_entry, children: dst_children } = dst else {
+                return;
+            };
+            for (k, v) in src_entry.meta {
+                dst_entry.meta.entry(k).or_insert(v);
+            }
+            for (name, child) in src_children {
+                match dst_children.entry(name) {
+                    std::collections::btree_map::Entry::Occupied(mut e) => {
+                        merge(e.get_mut(), child)
+                    }
+                    std::collections::btree_map::Entry::Vacant(e) => {
+                        e.insert(child);
+                    }
+                }
+            }
+        }
+        merge(&mut self.root, other.root);
+        for (k, v) in other.tag_index {
+            *self.tag_index.entry(k).or_insert(0) += v;
+        }
     }
 
     // -- stats & persistence --------------------------------------------------
@@ -412,6 +504,7 @@ impl Dfc {
         (d - 1, f) // exclude the root itself
     }
 
+    /// Serialize the whole namespace (deterministically) to JSON.
     pub fn to_json(&self) -> Json {
         fn node_json(node: &Node) -> Json {
             match node {
@@ -445,6 +538,7 @@ impl Dfc {
         ])
     }
 
+    /// Rebuild a catalogue from its [`Dfc::to_json`] form.
     pub fn from_json(j: &Json) -> Result<Dfc> {
         fn node_from(j: &Json) -> Option<Node> {
             if let Some(fj) = j.get("file") {

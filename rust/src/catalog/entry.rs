@@ -8,17 +8,22 @@ use super::meta::{MetaMap, MetaValue};
 /// physical file name (PFN).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Replica {
+    /// The SE holding the copy.
     pub se: String,
+    /// Physical file name on that SE.
     pub pfn: String,
 }
 
 /// A logical file entry (LFN) in the DFC.
 #[derive(Clone, Debug, Default)]
 pub struct FileEntry {
+    /// Logical size in bytes.
     pub size: u64,
     /// Hex SHA-256 of the logical file contents ("" when unknown).
     pub checksum: String,
+    /// Known physical copies.
     pub replicas: Vec<Replica>,
+    /// Key → value metadata tags.
     pub meta: MetaMap,
 }
 
@@ -26,10 +31,12 @@ pub struct FileEntry {
 /// per-file chunk directory with TOTAL/SPLIT).
 #[derive(Clone, Debug, Default)]
 pub struct DirEntry {
+    /// Key → value metadata tags.
     pub meta: MetaMap,
 }
 
 impl FileEntry {
+    /// Serialize to the snapshot JSON form.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("size", Json::num(self.size as f64)),
@@ -52,6 +59,7 @@ impl FileEntry {
         ])
     }
 
+    /// Parse from the snapshot JSON form.
     pub fn from_json(j: &Json) -> Option<FileEntry> {
         let mut replicas = Vec::new();
         for r in j.get("replicas")?.as_arr()? {
@@ -70,10 +78,12 @@ impl FileEntry {
 }
 
 impl DirEntry {
+    /// Serialize to the snapshot JSON form.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![("meta", meta_to_json(&self.meta))])
     }
 
+    /// Parse from the snapshot JSON form.
     pub fn from_json(j: &Json) -> Option<DirEntry> {
         Some(DirEntry { meta: meta_from_json(j.get("meta")?)? })
     }

@@ -7,12 +7,16 @@ use crate::util::json::Json;
 /// A typed metadata value (the DFC stores key → value pairs per entry).
 #[derive(Clone, Debug, PartialEq)]
 pub enum MetaValue {
+    /// A string tag.
     Str(String),
+    /// An integer tag.
     Int(i64),
+    /// A floating-point tag.
     Float(f64),
 }
 
 impl MetaValue {
+    /// The integer payload, if this is an `Int`.
     pub fn as_int(&self) -> Option<i64> {
         match self {
             MetaValue::Int(i) => Some(*i),
@@ -20,6 +24,7 @@ impl MetaValue {
         }
     }
 
+    /// The string payload, if this is a `Str`.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             MetaValue::Str(s) => Some(s),
@@ -27,6 +32,7 @@ impl MetaValue {
         }
     }
 
+    /// Serialize to the snapshot JSON form.
     pub fn to_json(&self) -> Json {
         match self {
             MetaValue::Str(s) => Json::Str(s.clone()),
@@ -35,6 +41,7 @@ impl MetaValue {
         }
     }
 
+    /// Parse from the snapshot JSON form.
     pub fn from_json(j: &Json) -> Option<MetaValue> {
         match j {
             Json::Str(s) => Some(MetaValue::Str(s.clone())),
@@ -59,6 +66,7 @@ impl From<i64> for MetaValue {
     }
 }
 
+/// Per-entry metadata: ordered key → value map.
 pub type MetaMap = BTreeMap<String, MetaValue>;
 
 /// How the EC shim names its metadata tags in the (global!) DFC namespace.

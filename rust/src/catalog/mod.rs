@@ -13,11 +13,18 @@
 //!   (the paper's original keys) and `V2Prefixed` (`drs_ec_*`, the fix).
 //! * JSON snapshot persistence (`save`/`load`) so examples/CLI runs keep
 //!   state across invocations.
+//! * [`ShardedDfc`] — the concurrent catalogue the shim and maintenance
+//!   engine run against: the namespace hash-partitioned over
+//!   independently locked shards (directory-subtree affinity keeps
+//!   `list_dir` and file operations single-shard) with lock-free
+//!   snapshot scans ([`ShardedDfc::snapshot_subtree`]) for scrub/drain.
 
 pub mod dfc;
 pub mod entry;
 pub mod meta;
+pub mod store;
 
 pub use dfc::Dfc;
 pub use entry::{DirEntry, FileEntry, Replica};
 pub use meta::{MetaKeyStyle, MetaValue};
+pub use store::{ShardedDfc, DEFAULT_SHARDS};

@@ -1,0 +1,659 @@
+//! `ShardedDfc`: the concurrent, hash-partitioned DFC namespace.
+//!
+//! The paper's system is a thin shim over the DIRAC File Catalogue, so
+//! catalogue throughput is the ceiling for every workload. A single
+//! `Mutex<Dfc>` serializes concurrent client uploads against each other
+//! *and* against maintenance walks (catalogue-wide scrub, drain). This
+//! store removes that ceiling with two ideas:
+//!
+//! **Directory-affinity sharding.** The namespace is partitioned over `S`
+//! independently locked shards. A directory's *owner* shard is
+//! `hash(dir-path) % S`; the owner holds the directory's authoritative
+//! metadata and all of its immediate file children. The directory
+//! *skeleton* (the tree of directory names, without metadata) is mirrored
+//! into every shard, so parent-exists checks and `list_dir` resolve
+//! entirely inside one shard. An erasure-coded file — one directory
+//! carrying `TOTAL`/`SPLIT` metadata plus its chunk files — therefore
+//! lives wholly in a single shard, which keeps every hot client operation
+//! (`mkdir_p` aside) single-lock and lets concurrent uploads of different
+//! files proceed in parallel.
+//!
+//! **Snapshot scans.** [`ShardedDfc::snapshot_subtree`] clones the
+//! requested subtree out of each shard in turn (cheap clone-on-scan: each
+//! shard's lock is held only for its own clone) and merges the clones
+//! into one plain [`Dfc`] value. Scrub and drain walk that snapshot with
+//! *no* locks held, so a full catalogue walk never blocks a client
+//! operation. The snapshot is consistent per shard — and because a
+//! directory plus its files live in one shard, every directory in the
+//! snapshot is internally consistent (metadata, file set and replica
+//! records were cloned atomically together).
+//!
+//! Routing table (S = shard count, `owner(d) = hash(d) % S`):
+//!
+//! | operation                   | shards touched                       |
+//! |-----------------------------|--------------------------------------|
+//! | `add/remove_file`, replicas | 1 — `owner(parent(path))`            |
+//! | `list_dir`, dir meta        | 1 — `owner(path)`                    |
+//! | `mkdir_p`, `remove_dir`     | all (skeleton broadcast, in order)   |
+//! | `find_*`, `dirs_where`      | all, one at a time (never nested)    |
+//! | `snapshot_subtree`          | all, one at a time (clone-on-scan)   |
+//!
+//! Locks are only ever taken one at a time (never nested), so the store
+//! is deadlock-free by construction. Cross-shard operations (broadcasts,
+//! scans) are not atomic as a group; per-shard consistency plus the
+//! directory-affinity invariant is what the maintenance engine relies on.
+
+use std::collections::BTreeMap;
+use std::sync::{Mutex, MutexGuard};
+
+use crate::{Error, Result};
+
+use super::dfc::{Dfc, DirItem};
+use super::entry::{FileEntry, Replica};
+use super::meta::{MetaMap, MetaValue};
+
+/// Default shard count for new catalogues. Eight shards keep lock
+/// contention negligible for tens of concurrent clients while the
+/// per-shard mirror overhead (directory skeleton only) stays tiny.
+pub const DEFAULT_SHARDS: usize = 8;
+
+/// A DFC namespace hash-partitioned into independently locked shards,
+/// exposing the [`Dfc`] API plus lock-free snapshot scans. See the
+/// module docs for the sharding scheme.
+pub struct ShardedDfc {
+    shards: Vec<Mutex<Dfc>>,
+}
+
+impl Default for ShardedDfc {
+    fn default() -> Self {
+        Self::new(DEFAULT_SHARDS)
+    }
+}
+
+impl ShardedDfc {
+    /// An empty catalogue over `shards` shards (clamped to ≥ 1; one shard
+    /// degenerates to the old single-mutex behaviour and is the baseline
+    /// in `benches/catalog_contention.rs`).
+    pub fn new(shards: usize) -> Self {
+        ShardedDfc {
+            shards: (0..shards.max(1)).map(|_| Mutex::new(Dfc::new())).collect(),
+        }
+    }
+
+    /// How many shards the namespace is partitioned over.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    // -- routing -----------------------------------------------------------
+
+    /// FNV-1a over the normalized directory components (so `"/a//b"` and
+    /// `"/a/b"` land on the same shard).
+    fn hash_dir(parts: &[&str]) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for part in parts {
+            for b in part.as_bytes() {
+                h ^= u64::from(*b);
+                h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+            h ^= u64::from(b'/');
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        h
+    }
+
+    /// The shard owning the directory with the given components.
+    fn owner_of(&self, dir_parts: &[&str]) -> usize {
+        (Self::hash_dir(dir_parts) % self.shards.len() as u64) as usize
+    }
+
+    fn lock(&self, idx: usize) -> MutexGuard<'_, Dfc> {
+        self.shards[idx].lock().unwrap()
+    }
+
+    /// The shard holding the *file* entry at `path` (its parent
+    /// directory's owner). Errors on `/` itself.
+    fn file_home(&self, path: &str) -> Result<usize> {
+        let parts = Dfc::split(path)?;
+        if parts.is_empty() {
+            return Err(Error::Catalog(format!("`{path}` is a directory")));
+        }
+        Ok(self.owner_of(&parts[..parts.len() - 1]))
+    }
+
+    /// Whether shard `idx` owns the directory at `path` (dedup filter for
+    /// cross-shard scans: mirrored skeleton dirs are reported only by
+    /// their owner).
+    fn owns_dir(&self, path: &str, idx: usize) -> bool {
+        Dfc::split(path).map(|parts| self.owner_of(&parts) == idx).unwrap_or(false)
+    }
+
+    // -- namespace ops -----------------------------------------------------
+
+    /// `createDirectory` with `-p` semantics. The directory skeleton is
+    /// broadcast to every shard (taking each lock briefly in turn), after
+    /// a pre-check that no path prefix exists as a file. If a shard
+    /// rejects the broadcast mid-flight (a file raced into a prefix
+    /// path), the skeleton created in earlier shards is rolled back so
+    /// the mirror invariant holds on error.
+    pub fn mkdir_p(&self, path: &str) -> Result<()> {
+        let parts = Dfc::split(path)?;
+        for depth in 1..=parts.len() {
+            let prefix = format!("/{}", parts[..depth].join("/"));
+            if self.lock(self.owner_of(&parts[..depth - 1])).is_file(&prefix) {
+                return Err(Error::Catalog(format!(
+                    "`{prefix}` in `{path}` exists as a file"
+                )));
+            }
+        }
+        let mut created: Vec<(usize, String)> = Vec::new();
+        for (i, shard) in self.shards.iter().enumerate() {
+            let mut guard = shard.lock().unwrap();
+            // Shallowest prefix this shard does not have yet: removing it
+            // on rollback removes everything this call created here.
+            let mut fresh_prefix = None;
+            for depth in 1..=parts.len() {
+                let prefix = format!("/{}", parts[..depth].join("/"));
+                if !guard.is_dir(&prefix) {
+                    fresh_prefix = Some(prefix);
+                    break;
+                }
+            }
+            if let Err(e) = guard.mkdir_p(path) {
+                drop(guard);
+                for (j, prefix) in &created {
+                    let _ = self.lock(*j).remove_dir(prefix);
+                }
+                return Err(e);
+            }
+            if let Some(p) = fresh_prefix {
+                created.push((i, p));
+            }
+        }
+        Ok(())
+    }
+
+    /// `addFile`: register a logical file (parent dir must exist).
+    pub fn add_file(&self, path: &str, entry: FileEntry) -> Result<()> {
+        self.lock(self.file_home(path)?).add_file(path, entry)
+    }
+
+    /// `removeFile`.
+    pub fn remove_file(&self, path: &str) -> Result<FileEntry> {
+        self.lock(self.file_home(path)?).remove_file(path)
+    }
+
+    /// `removeDirectory` (recursive): broadcast to every shard, each of
+    /// which drops the part of the subtree it holds.
+    pub fn remove_dir(&self, path: &str) -> Result<()> {
+        let parts = Dfc::split(path)?;
+        if parts.is_empty() {
+            return Err(Error::Catalog("cannot operate on `/`".into()));
+        }
+        if self.is_file(path) {
+            return Err(Error::Catalog(format!("`{path}` is a file")));
+        }
+        if !self.is_dir(path) {
+            return Err(Error::Catalog(format!("no such directory: `{path}`")));
+        }
+        for shard in &self.shards {
+            let _ = shard.lock().unwrap().remove_dir(path);
+        }
+        Ok(())
+    }
+
+    /// Whether `path` names any entry (directory or file).
+    pub fn exists(&self, path: &str) -> bool {
+        self.is_dir(path) || self.is_file(path)
+    }
+
+    /// Whether `path` names a directory.
+    pub fn is_dir(&self, path: &str) -> bool {
+        match Dfc::split(path) {
+            Ok(parts) => self.lock(self.owner_of(&parts)).is_dir(path),
+            Err(_) => false,
+        }
+    }
+
+    /// Whether `path` names a file.
+    pub fn is_file(&self, path: &str) -> bool {
+        match self.file_home(path) {
+            Ok(home) => self.lock(home).is_file(path),
+            Err(_) => false,
+        }
+    }
+
+    /// `listDirectory`: immediate children, dirs first then files, each
+    /// group sorted — resolved entirely inside the directory's owner
+    /// shard (subdirectory names are mirrored there, files live there).
+    pub fn list_dir(&self, path: &str) -> Result<Vec<DirItem>> {
+        if self.is_file(path) {
+            return Err(Error::Catalog(format!("`{path}` is a file")));
+        }
+        let parts = Dfc::split(path)?;
+        self.lock(self.owner_of(&parts)).list_dir(path)
+    }
+
+    /// `getFile` record (cloned out of the owning shard).
+    pub fn file(&self, path: &str) -> Result<FileEntry> {
+        Ok(self.lock(self.file_home(path)?).file(path)?.clone())
+    }
+
+    // -- metadata ops ------------------------------------------------------
+
+    /// `setMetadata` on a file or directory. Directory metadata is written
+    /// to the directory's owner shard only (mirrored skeleton copies stay
+    /// bare); file metadata goes to the file's home shard.
+    pub fn set_meta(&self, path: &str, key: &str, value: MetaValue) -> Result<()> {
+        let parts = Dfc::split(path)?;
+        {
+            let mut owner = self.lock(self.owner_of(&parts));
+            if owner.is_dir(path) {
+                return owner.set_meta(path, key, value);
+            }
+        }
+        if parts.is_empty() {
+            return Err(Error::Catalog(format!("no such entry: `{path}`")));
+        }
+        self.lock(self.owner_of(&parts[..parts.len() - 1])).set_meta(path, key, value)
+    }
+
+    /// `getMetadata` for one entry (cloned map).
+    pub fn meta(&self, path: &str) -> Result<MetaMap> {
+        let parts = Dfc::split(path)?;
+        {
+            let owner = self.lock(self.owner_of(&parts));
+            if owner.is_dir(path) {
+                return Ok(owner.meta(path)?.clone());
+            }
+        }
+        if parts.is_empty() {
+            return Err(Error::Catalog(format!("no such entry: `{path}`")));
+        }
+        Ok(self.lock(self.owner_of(&parts[..parts.len() - 1])).meta(path)?.clone())
+    }
+
+    /// One metadata value (`None` when the key is unset).
+    pub fn get_meta(&self, path: &str, key: &str) -> Result<Option<MetaValue>> {
+        Ok(self.meta(path)?.get(key).cloned())
+    }
+
+    /// The catalogue-wide tag index (key → use count), folded over all
+    /// shards. See [`Dfc::global_tags`] for why this is global.
+    pub fn global_tags(&self) -> BTreeMap<String, u64> {
+        let mut out = BTreeMap::new();
+        for shard in &self.shards {
+            for (k, v) in shard.lock().unwrap().global_tags() {
+                *out.entry(k.clone()).or_insert(0) += *v;
+            }
+        }
+        out
+    }
+
+    /// `findDirectoriesByMetadata`, catalogue-wide, sorted. Each shard is
+    /// scanned in turn; mirrored skeleton directories are reported only
+    /// by their owner shard (where their metadata lives).
+    pub fn find_dirs_by_meta(&self, query: &[(&str, MetaValue)]) -> Vec<String> {
+        let mut out = Vec::new();
+        for (i, shard) in self.shards.iter().enumerate() {
+            out.extend(
+                shard
+                    .lock()
+                    .unwrap()
+                    .find_dirs_by_meta(query)
+                    .into_iter()
+                    .filter(|p| self.owns_dir(p, i)),
+            );
+        }
+        out.sort();
+        out
+    }
+
+    /// `findFilesByMetadata`, catalogue-wide, sorted.
+    pub fn find_files_by_meta(&self, query: &[(&str, MetaValue)]) -> Vec<String> {
+        let mut out: Vec<String> = Vec::new();
+        for shard in &self.shards {
+            out.extend(shard.lock().unwrap().find_files_by_meta(query));
+        }
+        out.sort();
+        out
+    }
+
+    /// Directories under `root` (inclusive) whose metadata satisfies
+    /// `pred`, sorted. The predicate only ever sees a directory's
+    /// authoritative metadata (owner shard), never a bare mirror.
+    pub fn dirs_where(
+        &self,
+        root: &str,
+        mut pred: impl FnMut(&str, &MetaMap) -> bool,
+    ) -> Result<Vec<String>> {
+        let mut out = Vec::new();
+        for (i, shard) in self.shards.iter().enumerate() {
+            let hits = shard
+                .lock()
+                .unwrap()
+                .dirs_where(root, |path, meta| self.owns_dir(path, i) && pred(path, meta))?;
+            out.extend(hits);
+        }
+        out.sort();
+        Ok(out)
+    }
+
+    /// Every file holding a replica on `se`, with the replica's PFN,
+    /// sorted — the drain/rebalance work-list.
+    pub fn files_with_replica_on(&self, se: &str) -> Vec<(String, String)> {
+        let mut out: Vec<(String, String)> = Vec::new();
+        for shard in &self.shards {
+            out.extend(shard.lock().unwrap().files_with_replica_on(se));
+        }
+        out.sort();
+        out
+    }
+
+    // -- replicas ----------------------------------------------------------
+
+    /// `registerReplica`.
+    pub fn register_replica(&self, path: &str, se: &str, pfn: &str) -> Result<()> {
+        self.lock(self.file_home(path)?).register_replica(path, se, pfn)
+    }
+
+    /// `getReplicas` (cloned out of the owning shard).
+    pub fn replicas(&self, path: &str) -> Result<Vec<Replica>> {
+        Ok(self.lock(self.file_home(path)?).replicas(path)?.to_vec())
+    }
+
+    /// `removeReplica`: drop the record of `path`'s replica on `se`.
+    pub fn remove_replica(&self, path: &str, se: &str) -> Result<()> {
+        self.lock(self.file_home(path)?).remove_replica(path, se)
+    }
+
+    // -- snapshot scans ----------------------------------------------------
+
+    /// A point-in-time copy of the subtree at `root` as a plain [`Dfc`],
+    /// built by cloning each shard's part of the subtree while holding
+    /// only that shard's lock ("clone-on-scan"). Walks over the returned
+    /// value are completely lock-free and never block client operations.
+    ///
+    /// Consistency: atomic per shard, not across shards. Because a
+    /// directory's metadata and files live together in one shard, every
+    /// directory in the snapshot is internally consistent — the property
+    /// scrub and drain rely on. Entries created or removed in other
+    /// shards while the scan is in flight may or may not appear.
+    pub fn snapshot_subtree(&self, root: &str) -> Result<Dfc> {
+        if self.is_file(root) {
+            return Err(Error::Catalog(format!("`{root}` is a file, not a directory")));
+        }
+        if !self.is_dir(root) {
+            return Err(Error::Catalog(format!("no such entry: `{root}`")));
+        }
+        let mut merged: Option<Dfc> = None;
+        for shard in &self.shards {
+            let part = shard.lock().unwrap().clone_subtree(root)?;
+            match &mut merged {
+                None => merged = Some(part),
+                Some(m) => m.merge_from(part),
+            }
+        }
+        Ok(merged.expect("at least one shard"))
+    }
+
+    /// [`ShardedDfc::snapshot_subtree`] of the whole namespace.
+    pub fn snapshot(&self) -> Dfc {
+        self.snapshot_subtree("/").expect("root always exists")
+    }
+
+    /// Single-shard point-in-time copy of one directory: its metadata,
+    /// its immediate files (with replica records) and the names of its
+    /// subdirectories — everything the directory's owner shard holds.
+    ///
+    /// This is the cheap path for per-file reads (the shim's layout
+    /// parsing): by the directory-affinity invariant an EC file
+    /// directory lives wholly in its owner shard, so one lock and one
+    /// subtree clone capture it atomically. Contents *inside
+    /// subdirectories* owned by other shards are not included — use
+    /// [`ShardedDfc::snapshot_subtree`] for recursive walks.
+    pub fn snapshot_dir(&self, path: &str) -> Result<Dfc> {
+        if self.is_file(path) {
+            return Err(Error::Catalog(format!("`{path}` is a file, not a directory")));
+        }
+        let parts = Dfc::split(path)?;
+        self.lock(self.owner_of(&parts)).clone_subtree(path)
+    }
+
+    // -- stats & persistence -----------------------------------------------
+
+    /// (directories, files) counts for the whole namespace. The directory
+    /// skeleton is mirrored, so any one shard has the directory count;
+    /// files are summed across shards.
+    pub fn counts(&self) -> (usize, usize) {
+        let dirs = self.lock(0).counts().0;
+        let files = self.shards.iter().map(|s| s.lock().unwrap().counts().1).sum();
+        (dirs, files)
+    }
+
+    /// Persist a whole-namespace snapshot to disk (same format as
+    /// [`Dfc::save`]; a sharded catalogue round-trips with any shard
+    /// count).
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        self.snapshot().save(path)
+    }
+
+    /// Load a [`Dfc::save`]/[`ShardedDfc::save`] snapshot and partition
+    /// it over `shards` shards.
+    pub fn load(path: &std::path::Path, shards: usize) -> Result<ShardedDfc> {
+        Self::from_dfc(&Dfc::load(path)?, shards)
+    }
+
+    /// Partition an existing plain catalogue over `shards` shards.
+    pub fn from_dfc(src: &Dfc, shards: usize) -> Result<ShardedDfc> {
+        fn rec(src: &Dfc, out: &ShardedDfc, dir: &str) -> Result<()> {
+            for item in src.list_dir(dir)? {
+                let path = if dir == "/" {
+                    format!("/{}", item.name())
+                } else {
+                    format!("{dir}/{}", item.name())
+                };
+                match item {
+                    DirItem::Dir(_) => {
+                        out.mkdir_p(&path)?;
+                        for (k, v) in src.meta(&path)? {
+                            out.set_meta(&path, k, v.clone())?;
+                        }
+                        rec(src, out, &path)?;
+                    }
+                    DirItem::File(_) => {
+                        out.add_file(&path, src.file(&path)?.clone())?;
+                    }
+                }
+            }
+            Ok(())
+        }
+        let out = ShardedDfc::new(shards);
+        for (k, v) in src.meta("/")? {
+            out.set_meta("/", k, v.clone())?;
+        }
+        rec(src, &out, "/")?;
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fe(size: u64) -> FileEntry {
+        FileEntry { size, ..Default::default() }
+    }
+
+    /// Apply the same namespace to a ShardedDfc and a plain Dfc.
+    fn build_pair(shards: usize) -> (ShardedDfc, Dfc) {
+        let s = ShardedDfc::new(shards);
+        let mut d = Dfc::new();
+        for dir in ["/vo/data/f1.ec", "/vo/data/f2.ec", "/vo/other", "/deep/nest/ed"] {
+            s.mkdir_p(dir).unwrap();
+            d.mkdir_p(dir).unwrap();
+        }
+        for (path, key, value) in [
+            ("/vo/data/f1.ec", "drs_ec_total", MetaValue::Int(6)),
+            ("/vo/data/f1.ec", "drs_ec_split", MetaValue::Int(4)),
+            ("/vo/data/f2.ec", "drs_ec_total", MetaValue::Int(10)),
+            ("/vo/other", "owner", MetaValue::Str("na62".into())),
+        ] {
+            s.set_meta(path, key, value.clone()).unwrap();
+            d.set_meta(path, key, value).unwrap();
+        }
+        for (i, path) in ["/vo/data/f1.ec/c0", "/vo/data/f1.ec/c1", "/vo/other/plain", "/deep/nest/ed/x"]
+            .iter()
+            .enumerate()
+        {
+            s.add_file(path, fe(100 + i as u64)).unwrap();
+            d.add_file(path, fe(100 + i as u64)).unwrap();
+            let se = format!("SE-{:02}", i % 2);
+            s.register_replica(path, &se, path).unwrap();
+            d.register_replica(path, &se, path).unwrap();
+        }
+        (s, d)
+    }
+
+    #[test]
+    fn routed_ops_match_plain_dfc() {
+        for shards in [1, 3, 8] {
+            let (s, d) = build_pair(shards);
+            assert_eq!(s.shard_count(), shards);
+            assert_eq!(s.counts(), d.counts(), "{shards} shards");
+            assert_eq!(s.list_dir("/vo/data").unwrap(), d.list_dir("/vo/data").unwrap());
+            assert_eq!(s.list_dir("/").unwrap(), d.list_dir("/").unwrap());
+            assert_eq!(s.meta("/vo/data/f1.ec").unwrap(), *d.meta("/vo/data/f1.ec").unwrap());
+            assert_eq!(
+                s.get_meta("/vo/data/f1.ec", "drs_ec_total").unwrap(),
+                Some(MetaValue::Int(6))
+            );
+            assert_eq!(s.file("/vo/other/plain").unwrap().size, 102);
+            assert_eq!(s.replicas("/vo/data/f1.ec/c1").unwrap().len(), 1);
+            assert_eq!(s.global_tags(), d.global_tags().clone());
+
+            let q = [("drs_ec_total", MetaValue::Int(6))];
+            let mut want = d.find_dirs_by_meta(&q);
+            want.sort();
+            assert_eq!(s.find_dirs_by_meta(&q), want);
+
+            let mut want = d.files_with_replica_on("SE-00");
+            want.sort();
+            assert_eq!(s.files_with_replica_on("SE-00"), want);
+
+            let mut want = d.dirs_where("/vo", |_, _| true).unwrap();
+            want.sort();
+            assert_eq!(s.dirs_where("/vo", |_, _| true).unwrap(), want);
+        }
+    }
+
+    #[test]
+    fn snapshot_merges_to_identical_json() {
+        for shards in [1, 4, 8] {
+            let (s, d) = build_pair(shards);
+            assert_eq!(
+                s.snapshot().to_json().to_string(),
+                d.to_json().to_string(),
+                "{shards} shards"
+            );
+        }
+    }
+
+    #[test]
+    fn snapshot_subtree_scopes_and_errors() {
+        let (s, _) = build_pair(8);
+        let snap = s.snapshot_subtree("/vo/data").unwrap();
+        assert!(snap.is_dir("/vo/data/f1.ec"));
+        assert!(snap.is_file("/vo/data/f1.ec/c0"));
+        // Siblings outside the subtree are absent.
+        assert!(!snap.exists("/vo/other"));
+        assert!(!snap.exists("/deep"));
+        // Errors: missing root, file root.
+        assert!(s.snapshot_subtree("/nope").is_err());
+        assert!(s.snapshot_subtree("/vo/other/plain").is_err());
+    }
+
+    #[test]
+    fn snapshot_dir_is_single_shard_but_complete_for_the_dir() {
+        for shards in [1, 8] {
+            let (s, _) = build_pair(shards);
+            // An EC-style directory: meta + immediate files all captured.
+            let snap = s.snapshot_dir("/vo/data/f1.ec").unwrap();
+            assert_eq!(
+                snap.get_meta("/vo/data/f1.ec", "drs_ec_total").unwrap(),
+                Some(&MetaValue::Int(6))
+            );
+            assert!(snap.is_file("/vo/data/f1.ec/c0"));
+            assert!(snap.is_file("/vo/data/f1.ec/c1"));
+            assert_eq!(snap.replicas("/vo/data/f1.ec/c0").unwrap().len(), 1);
+            assert!(s.snapshot_dir("/vo/other/plain").is_err());
+            assert!(s.snapshot_dir("/nope").is_err());
+        }
+    }
+
+    #[test]
+    fn duplicate_and_shadowing_rejected() {
+        let s = ShardedDfc::new(8);
+        s.mkdir_p("/d").unwrap();
+        s.add_file("/d/x", fe(1)).unwrap();
+        assert!(s.add_file("/d/x", fe(2)).is_err());
+        assert!(s.mkdir_p("/d/x").is_err());
+        assert!(s.mkdir_p("/d/x/y").is_err());
+        assert!(s.add_file("/nodir/x", fe(1)).is_err());
+        assert!(s.mkdir_p("relative").is_err());
+        // The failed mkdirs must not have leaked skeleton dirs anywhere.
+        assert!(s.is_file("/d/x"));
+        assert!(!s.is_dir("/d/x"));
+        assert_eq!(s.counts(), (1, 1));
+    }
+
+    #[test]
+    fn remove_file_and_dir_across_shards() {
+        let (s, _) = build_pair(8);
+        let (dirs0, files0) = s.counts();
+        s.remove_file("/vo/other/plain").unwrap();
+        assert!(!s.exists("/vo/other/plain"));
+        assert!(s.remove_file("/vo/other/plain").is_err());
+        // Recursive dir removal drops the files owned by other shards too.
+        s.remove_dir("/vo/data").unwrap();
+        assert!(!s.exists("/vo/data"));
+        assert!(!s.exists("/vo/data/f1.ec/c0"));
+        assert!(s.remove_dir("/vo/data").is_err());
+        assert!(s.remove_dir("/vo/other/nope").is_err());
+        let (dirs, files) = s.counts();
+        assert_eq!(dirs, dirs0 - 3); // /vo/data{,f1.ec,f2.ec}
+        assert_eq!(files, files0 - 3); // plain + the two chunks
+    }
+
+    #[test]
+    fn save_load_roundtrip_repartitions() {
+        let (s, _) = build_pair(5);
+        let path = std::env::temp_dir().join(format!(
+            "drs-sharded-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        s.save(&path).unwrap();
+        let back = ShardedDfc::load(&path, 3).unwrap();
+        std::fs::remove_file(&path).unwrap();
+        assert_eq!(back.shard_count(), 3);
+        assert_eq!(back.counts(), s.counts());
+        assert_eq!(
+            back.snapshot().to_json().to_string(),
+            s.snapshot().to_json().to_string()
+        );
+        assert_eq!(
+            back.get_meta("/vo/data/f1.ec", "drs_ec_split").unwrap(),
+            Some(MetaValue::Int(4))
+        );
+    }
+
+    #[test]
+    fn single_shard_degenerates_cleanly() {
+        let s = ShardedDfc::new(0); // clamped to 1
+        assert_eq!(s.shard_count(), 1);
+        s.mkdir_p("/a/b").unwrap();
+        s.add_file("/a/b/f", fe(9)).unwrap();
+        assert_eq!(s.counts(), (2, 1));
+    }
+}

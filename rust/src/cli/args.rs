@@ -1,5 +1,6 @@
 //! Hand-rolled argument parsing (clap is unavailable offline).
 
+/// The `drs help` text.
 pub const USAGE: &str = "\
 drs — erasure-coded DIRAC-style file management (CHEP2015 reproduction)
 
@@ -13,9 +14,11 @@ COMMANDS:
     ls [path]
     stat <lfn>
     repair <lfn> [--workers W]
-    scrub [--root PATH] [--workers W] [--shallow]
+    scrub [--root PATH] [--workers W] [--shallow] [--incremental N]
                                                probe every EC file's chunks
-                                               (deep scrub checksums them)
+                                               (deep scrub checksums them);
+                                               --incremental N scrubs the next
+                                               N files after the saved cursor
     repair-all [--root PATH] [--workers W] [--max-files N] [--max-mb MB] [--shallow]
                                                scrub, then repair degraded
                                                files, smallest margin first
@@ -34,11 +37,15 @@ COMMANDS:
 /// Parsed command line.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Cli {
+    /// Workspace directory (`--workspace`, default `drs-workspace`).
     pub workspace: String,
+    /// The subcommand to run.
     pub command: Command,
 }
 
+/// One `drs` subcommand with its parsed arguments (see [`USAGE`]).
 #[derive(Clone, Debug, PartialEq)]
+#[allow(missing_docs)] // variants mirror USAGE one-to-one
 pub enum Command {
     Init { ses: usize, k: usize, m: usize, vo: String },
     Put { local: String, lfn: String, workers: Option<usize>, k: Option<usize>, m: Option<usize>, retry: bool },
@@ -46,7 +53,7 @@ pub enum Command {
     Ls { path: String },
     Stat { lfn: String },
     Repair { lfn: String, workers: Option<usize> },
-    Scrub { root: String, workers: Option<usize>, shallow: bool },
+    Scrub { root: String, workers: Option<usize>, shallow: bool, incremental: Option<usize> },
     RepairAll {
         root: String,
         workers: Option<usize>,
@@ -169,6 +176,7 @@ pub fn parse_args(argv: Vec<String>) -> Result<Cli, String> {
             root: args.opt_value("--root")?.unwrap_or_else(|| "/".into()),
             workers: args.opt_parse("--workers")?,
             shallow: args.opt_flag("--shallow"),
+            incremental: args.opt_parse("--incremental")?,
         },
         "repair-all" => Command::RepairAll {
             root: args.opt_value("--root")?.unwrap_or_else(|| "/".into()),
@@ -258,12 +266,22 @@ mod tests {
     fn maintenance_commands() {
         assert_eq!(
             p("scrub").unwrap().command,
-            Command::Scrub { root: "/".into(), workers: None, shallow: false }
+            Command::Scrub { root: "/".into(), workers: None, shallow: false, incremental: None }
         );
         assert_eq!(
             p("scrub --root /vo/data --workers 8 --shallow").unwrap().command,
-            Command::Scrub { root: "/vo/data".into(), workers: Some(8), shallow: true }
+            Command::Scrub {
+                root: "/vo/data".into(),
+                workers: Some(8),
+                shallow: true,
+                incremental: None
+            }
         );
+        assert_eq!(
+            p("scrub --incremental 25").unwrap().command,
+            Command::Scrub { root: "/".into(), workers: None, shallow: false, incremental: Some(25) }
+        );
+        assert!(p("scrub --incremental many").is_err());
         assert_eq!(
             p("repair-all --max-files 10 --max-mb 500").unwrap().command,
             Command::RepairAll {

@@ -17,18 +17,13 @@ use super::workspace::Workspace;
 /// Audit every chunk of `lfn` against its catalog checksum without
 /// reconstructing the file.
 fn verify_chunks(ws: &Workspace, lfn: &str) -> Result<(usize, usize)> {
-    let items = {
-        let dfc = ws.dfc.lock().unwrap();
-        dfc.list_dir(lfn)?
-    };
+    let items = ws.dfc.list_dir(lfn)?;
     let (mut ok, mut bad) = (0usize, 0usize);
     for item in items {
         let crate::catalog::dfc::DirItem::File(name) = item else { continue };
         let path = format!("{lfn}/{name}");
-        let (replicas, want) = {
-            let dfc = ws.dfc.lock().unwrap();
-            (dfc.replicas(&path)?.to_vec(), dfc.file(&path)?.checksum.clone())
-        };
+        let replicas = ws.dfc.replicas(&path)?;
+        let want = ws.dfc.file(&path)?.checksum;
         let mut good = false;
         for r in &replicas {
             if let Some(se) = ws.registry.get(&r.se) {
@@ -51,6 +46,7 @@ fn verify_chunks(ws: &Workspace, lfn: &str) -> Result<(usize, usize)> {
     Ok((ok, bad))
 }
 
+/// Execute one parsed command against its workspace.
 pub fn dispatch(cli: &Cli) -> Result<()> {
     let root = Path::new(&cli.workspace);
     match &cli.command {
@@ -138,8 +134,7 @@ pub fn dispatch(cli: &Cli) -> Result<()> {
         }
         Command::Ls { path } => {
             let ws = Workspace::open(root)?;
-            let dfc = ws.dfc.lock().unwrap();
-            for item in dfc.list_dir(path)? {
+            for item in ws.dfc.list_dir(path)? {
                 match item {
                     crate::catalog::dfc::DirItem::Dir(n) => println!("d {n}"),
                     crate::catalog::dfc::DirItem::File(n) => println!("f {n}"),
@@ -177,7 +172,7 @@ pub fn dispatch(cli: &Cli) -> Result<()> {
             println!("repaired {n} chunk(s) of {lfn}");
             ws.save()
         }
-        Command::Scrub { root: scrub_root, workers, shallow } => {
+        Command::Scrub { root: scrub_root, workers, shallow, incremental } => {
             let ws = Workspace::open(root)?;
             let shim = ws.shim();
             let maintainer = Maintainer::new(&shim);
@@ -186,6 +181,12 @@ pub fn dispatch(cli: &Cli) -> Result<()> {
                 .with_workers(workers.unwrap_or(ws.config.workers));
             if *shallow {
                 opts = opts.shallow();
+            }
+            if let Some(n) = incremental {
+                opts = opts.with_max_dirs(*n);
+                if let Some(cursor) = ws.load_scrub_cursor(scrub_root) {
+                    opts = opts.resume_after(cursor);
+                }
             }
             let t0 = std::time::Instant::now();
             let report = maintainer.scrub(&opts)?;
@@ -210,6 +211,15 @@ pub fn dispatch(cli: &Cli) -> Result<()> {
                 eprintln!("  skipped {lfn}: {why}");
             }
             println!("scrub: {} in {}", report.summary(), fmt_secs(t0.elapsed().as_secs_f64()));
+            if incremental.is_some() {
+                ws.save_scrub_cursor(scrub_root, report.cursor.as_deref())?;
+                match &report.cursor {
+                    Some(c) => println!(
+                        "incremental: stopped after `{c}`; cursor saved, next run resumes there"
+                    ),
+                    None => println!("incremental: walk complete; cursor reset to the start"),
+                }
+            }
             Ok(())
         }
         Command::RepairAll { root: scrub_root, workers, max_files, max_mb, shallow } => {
@@ -331,8 +341,7 @@ pub fn dispatch(cli: &Cli) -> Result<()> {
         }
         Command::Meta { lfn } => {
             let ws = Workspace::open(root)?;
-            let dfc = ws.dfc.lock().unwrap();
-            for (k, v) in dfc.meta(lfn)? {
+            for (k, v) in ws.dfc.meta(lfn)? {
                 println!("{k} = {}", v.to_json());
             }
             Ok(())

@@ -12,7 +12,9 @@
 //! drs ls <path>                     list catalog namespace
 //! drs stat <lfn>                    chunk health report
 //! drs repair <lfn>                  re-derive lost chunks
-//! drs scrub [--root P] [--shallow]  catalogue-wide chunk health report
+//! drs scrub [--root P] [--shallow] [--incremental N]
+//!                                   catalogue-wide chunk health report
+//!                                   (incremental: resume-cursor slices)
 //! drs repair-all [--max-files N]    prioritized repair of degraded files
 //! drs drain <se-name>               evacuate all chunks off an SE
 //! drs rm <lfn>                      delete file + chunks

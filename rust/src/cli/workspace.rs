@@ -3,16 +3,17 @@
 //! Layout:
 //! ```text
 //! <workspace>/
-//!   drs.json        config (see config module)
-//!   catalog.json    DFC snapshot, saved after every mutating command
-//!   ses/<NAME>/     one directory per (local) storage element
-//!   down_ses.json   names of SEs currently marked unavailable
+//!   drs.json           config (see config module)
+//!   catalog.json       DFC snapshot, saved after every mutating command
+//!   ses/<NAME>/        one directory per (local) storage element
+//!   down_ses.json      names of SEs currently marked unavailable
+//!   scrub_cursor.json  incremental-scrub resume point (scrub --incremental)
 //! ```
 
 use std::path::{Path, PathBuf};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
-use crate::catalog::Dfc;
+use crate::catalog::{Dfc, ShardedDfc};
 use crate::config::Config;
 use crate::dfm::{EcShim, ReplicationManager};
 use crate::ec::{EcBackend, PureRustBackend};
@@ -21,10 +22,15 @@ use crate::se::{LocalSe, SeRegistry, StorageElement};
 use crate::util::json::Json;
 use crate::{Error, Result};
 
+/// The on-disk state the CLI operates on.
 pub struct Workspace {
+    /// Workspace directory.
     pub root: PathBuf,
+    /// Parsed `drs.json`.
     pub config: Config,
-    pub dfc: Arc<Mutex<Dfc>>,
+    /// The catalogue, partitioned over `config.catalog_shards` shards.
+    pub dfc: Arc<ShardedDfc>,
+    /// The registered (local, directory-backed) storage elements.
     pub registry: Arc<SeRegistry>,
     backend_name: &'static str,
     backend: Arc<dyn EcBackend>,
@@ -50,9 +56,9 @@ impl Workspace {
     pub fn open(root: &Path) -> Result<Self> {
         let config = Config::load(&root.join("drs.json"))?;
         let dfc = if root.join("catalog.json").exists() {
-            Dfc::load(&root.join("catalog.json"))?
+            ShardedDfc::load(&root.join("catalog.json"), config.catalog_shards)?
         } else {
-            Dfc::new()
+            ShardedDfc::new(config.catalog_shards)
         };
         let down: Vec<String> = std::fs::read_to_string(root.join("down_ses.json"))
             .ok()
@@ -87,17 +93,19 @@ impl Workspace {
         Ok(Workspace {
             root: root.to_path_buf(),
             config,
-            dfc: Arc::new(Mutex::new(dfc)),
+            dfc: Arc::new(dfc),
             registry: Arc::new(registry),
             backend_name,
             backend,
         })
     }
 
+    /// Which coding backend `open` selected (`pjrt-aot` or `pure-rust`).
     pub fn backend_name(&self) -> &'static str {
         self.backend_name
     }
 
+    /// An erasure-coding shim wired over this workspace.
     pub fn shim(&self) -> EcShim {
         let policy = self
             .config
@@ -112,6 +120,7 @@ impl Workspace {
         )
     }
 
+    /// The whole-file replication baseline over this workspace.
     pub fn replication(&self) -> ReplicationManager {
         let policy = self
             .config
@@ -125,9 +134,36 @@ impl Workspace {
         )
     }
 
+    /// Incremental-scrub cursor from the previous `scrub --incremental`
+    /// run *for the same scrub root*: the last EC directory examined, or
+    /// `None` when the previous walk completed, no cursor has been saved
+    /// yet, or the saved cursor belongs to a different root (a cursor
+    /// from `/vo/b` must not filter a walk of `/vo/a`).
+    pub fn load_scrub_cursor(&self, scrub_root: &str) -> Option<String> {
+        let text = std::fs::read_to_string(self.root.join("scrub_cursor.json")).ok()?;
+        let j = Json::parse(&text).ok()?;
+        if j.get("root")?.as_str()? != scrub_root {
+            return None;
+        }
+        j.get("after")?.as_str().map(str::to_string)
+    }
+
+    /// Persist (or clear, with `None`) the incremental-scrub cursor,
+    /// tagged with the scrub root it belongs to.
+    pub fn save_scrub_cursor(&self, scrub_root: &str, cursor: Option<&str>) -> Result<()> {
+        let j = match cursor {
+            Some(c) => {
+                Json::obj(vec![("root", Json::str(scrub_root)), ("after", Json::str(c))])
+            }
+            None => Json::obj(vec![]),
+        };
+        std::fs::write(self.root.join("scrub_cursor.json"), j.to_string())?;
+        Ok(())
+    }
+
     /// Persist the catalog and SE availability after a mutating command.
     pub fn save(&self) -> Result<()> {
-        self.dfc.lock().unwrap().save(&self.root.join("catalog.json"))?;
+        self.dfc.save(&self.root.join("catalog.json"))?;
         let down: Vec<Json> = self
             .registry
             .all()
@@ -167,6 +203,22 @@ mod tests {
         drop(ws);
         let ws2 = Workspace::open(&root).unwrap();
         assert_eq!(ws2.config.ses.len(), 4);
+        std::fs::remove_dir_all(root).unwrap();
+    }
+
+    #[test]
+    fn scrub_cursor_roundtrip() {
+        let root = tmp("cursor");
+        let mut cfg = Config::default();
+        cfg.ses.truncate(2);
+        let ws = Workspace::init(&root, cfg).unwrap();
+        assert_eq!(ws.load_scrub_cursor("/"), None);
+        ws.save_scrub_cursor("/", Some("/vo/data/f9.ec")).unwrap();
+        assert_eq!(ws.load_scrub_cursor("/"), Some("/vo/data/f9.ec".to_string()));
+        // A cursor is bound to its root: a different root ignores it.
+        assert_eq!(ws.load_scrub_cursor("/vo/other"), None);
+        ws.save_scrub_cursor("/", None).unwrap();
+        assert_eq!(ws.load_scrub_cursor("/"), None);
         std::fs::remove_dir_all(root).unwrap();
     }
 

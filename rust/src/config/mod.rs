@@ -12,6 +12,7 @@
 //!   "ec": {"k": 10, "m": 5, "stripe_b": 65536},
 //!   "placement": "round-robin",
 //!   "workers": 5,
+//!   "catalog_shards": 8,
 //!   "ses": [
 //!     {"name": "UKI-GLASGOW", "region": "uk"},
 //!     {"name": "UKI-IC", "region": "uk"}
@@ -30,21 +31,28 @@ use crate::{Error, Result};
 /// One SE declaration.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct SeConfig {
+    /// SE name (also its directory under `<workspace>/ses/`).
     pub name: String,
+    /// Geographical region label.
     pub region: String,
 }
 
 /// Placement policy selector.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
 pub enum PolicyKind {
+    /// The paper's `chunk n → SE (n mod s)` policy.
     #[default]
     RoundRobin,
+    /// Seeded uniform random placement.
     Random,
+    /// Least-loaded-first placement.
     Weighted,
+    /// Prefer SEs in the client's region, pad with the rest.
     RegionAware,
 }
 
 impl PolicyKind {
+    /// Parse a policy name as it appears in `drs.json`.
     pub fn parse(s: &str) -> Result<Self> {
         match s {
             "round-robin" => Ok(PolicyKind::RoundRobin),
@@ -55,6 +63,7 @@ impl PolicyKind {
         }
     }
 
+    /// The policy's `drs.json` spelling.
     pub fn as_str(&self) -> &'static str {
         match self {
             PolicyKind::RoundRobin => "round-robin",
@@ -82,14 +91,26 @@ impl PolicyKind {
 /// Full workspace configuration.
 #[derive(Clone, Debug)]
 pub struct Config {
+    /// Virtual organisation whose SE vector the shim places over.
     pub vo: String,
+    /// Coding geometry (K data + M coding chunks).
     pub params: EcParams,
+    /// Stripe width in bytes.
     pub stripe_b: usize,
+    /// Chunk → SE placement policy.
     pub policy: PolicyKind,
+    /// Client region (used by the region-aware policy).
     pub client_region: String,
+    /// Default transfer worker threads.
     pub workers: usize,
+    /// The storage elements the workspace wires up.
     pub ses: Vec<SeConfig>,
+    /// Optional simulated network profile attached to each SE.
     pub network: Option<NetworkProfile>,
+    /// Shard count for the catalogue namespace
+    /// ([`crate::catalog::ShardedDfc`]); 1 reproduces the old
+    /// single-mutex catalogue.
+    pub catalog_shards: usize,
 }
 
 impl Default for Config {
@@ -108,11 +129,13 @@ impl Default for Config {
                 })
                 .collect(),
             network: None,
+            catalog_shards: crate::catalog::DEFAULT_SHARDS,
         }
     }
 }
 
 impl Config {
+    /// Parse a config, filling unset fields from the defaults.
     pub fn from_json(j: &Json) -> Result<Self> {
         let mut cfg = Config::default();
         if let Some(vo) = j.get("vo").and_then(Json::as_str) {
@@ -134,6 +157,9 @@ impl Config {
         }
         if let Some(w) = j.get("workers").and_then(Json::as_u64) {
             cfg.workers = (w as usize).max(1);
+        }
+        if let Some(s) = j.get("catalog_shards").and_then(Json::as_u64) {
+            cfg.catalog_shards = (s as usize).max(1);
         }
         if let Some(ses) = j.get("ses").and_then(Json::as_arr) {
             cfg.ses = ses
@@ -173,6 +199,7 @@ impl Config {
         Ok(cfg)
     }
 
+    /// Serialize to the `drs.json` form.
     pub fn to_json(&self) -> Json {
         let mut pairs = vec![
             ("vo", Json::str(self.vo.clone())),
@@ -187,6 +214,7 @@ impl Config {
             ("placement", Json::str(self.policy.as_str())),
             ("client_region", Json::str(self.client_region.clone())),
             ("workers", Json::num(self.workers as f64)),
+            ("catalog_shards", Json::num(self.catalog_shards as f64)),
             (
                 "ses",
                 Json::Arr(
@@ -225,14 +253,20 @@ impl Config {
         Ok(cfg)
     }
 
+    /// Write the config to a file.
     pub fn save(&self, path: &Path) -> Result<()> {
         std::fs::write(path, self.to_json().to_string())?;
         Ok(())
     }
 
     /// Apply environment overrides: `DRS_VO`, `DRS_WORKERS`, `DRS_K`,
-    /// `DRS_M`, `DRS_STRIPE_B`, `DRS_PLACEMENT`.
+    /// `DRS_M`, `DRS_STRIPE_B`, `DRS_PLACEMENT`, `DRS_CATALOG_SHARDS`.
     pub fn apply_env(&mut self) {
+        if let Ok(s) = std::env::var("DRS_CATALOG_SHARDS") {
+            if let Ok(s) = s.parse::<usize>() {
+                self.catalog_shards = s.max(1);
+            }
+        }
         if let Ok(vo) = std::env::var("DRS_VO") {
             self.vo = vo;
         }
@@ -281,12 +315,22 @@ mod tests {
         c.vo = "na62".into();
         c.network = Some(NetworkProfile::paper_testbed());
         c.policy = PolicyKind::RegionAware;
+        c.catalog_shards = 4;
         let j = c.to_json();
         let back = Config::from_json(&j).unwrap();
         assert_eq!(back.vo, "na62");
         assert_eq!(back.policy, PolicyKind::RegionAware);
         assert_eq!(back.ses, c.ses);
+        assert_eq!(back.catalog_shards, 4);
         assert!((back.network.unwrap().setup_s - 5.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn catalog_shards_defaults_when_absent() {
+        // Old configs (no catalog_shards key) keep working.
+        let j = Json::parse(r#"{"vo":"demo"}"#).unwrap();
+        let c = Config::from_json(&j).unwrap();
+        assert_eq!(c.catalog_shards, crate::catalog::DEFAULT_SHARDS);
     }
 
     #[test]

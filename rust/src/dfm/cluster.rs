@@ -1,9 +1,9 @@
 //! `TestCluster`: one-call wiring of DFC + SEs + shim, used by the
 //! examples, tests and benches.
 
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
-use crate::catalog::Dfc;
+use crate::catalog::ShardedDfc;
 use crate::ec::{EcBackend, EcParams, PureRustBackend};
 use crate::placement::{PlacementPolicy, RoundRobin};
 use crate::se::{LocalSe, MemSe, NetworkProfile, SeRegistry, StorageElement};
@@ -23,34 +23,49 @@ pub struct TestClusterBuilder {
     local_base: Option<std::path::PathBuf>,
     profile: Option<NetworkProfile>,
     profile_scale: f64,
+    catalog_shards: usize,
 }
 
 impl TestClusterBuilder {
+    /// Number of storage elements.
     pub fn ses(mut self, n: usize) -> Self {
         self.n_ses = n;
         self
     }
 
+    /// Shard count for the catalogue namespace (default
+    /// [`crate::catalog::DEFAULT_SHARDS`]; 1 reproduces the old
+    /// single-mutex catalogue).
+    pub fn catalog_shards(mut self, shards: usize) -> Self {
+        self.catalog_shards = shards;
+        self
+    }
+
+    /// Region labels, cycled over the SEs.
     pub fn regions(mut self, regions: &[&str]) -> Self {
         self.regions = regions.iter().map(|s| s.to_string()).collect();
         self
     }
 
+    /// The VO every SE supports.
     pub fn vo(mut self, vo: &str) -> Self {
         self.vo = vo.to_string();
         self
     }
 
+    /// Default coding geometry.
     pub fn ec(mut self, params: EcParams) -> Self {
         self.params = params;
         self
     }
 
+    /// Placement policy.
     pub fn policy(mut self, policy: Arc<dyn PlacementPolicy>) -> Self {
         self.policy = policy;
         self
     }
 
+    /// Coding compute backend.
     pub fn backend(mut self, backend: Arc<dyn EcBackend>) -> Self {
         self.backend = backend;
         self
@@ -69,6 +84,7 @@ impl TestClusterBuilder {
         self
     }
 
+    /// Wire everything up.
     pub fn build(self) -> Result<TestCluster> {
         let mut registry = SeRegistry::new();
         for i in 0..self.n_ses {
@@ -93,7 +109,7 @@ impl TestClusterBuilder {
             registry.register(se, &[self.vo.as_str()])?;
         }
         let registry = Arc::new(registry);
-        let dfc = Arc::new(Mutex::new(Dfc::new()));
+        let dfc = Arc::new(ShardedDfc::new(self.catalog_shards));
         let shim = EcShim::new(
             Arc::clone(&dfc),
             Arc::clone(&registry),
@@ -113,7 +129,7 @@ impl TestClusterBuilder {
 
 /// A wired-up cluster: catalog, SEs, shim, replication baseline.
 pub struct TestCluster {
-    dfc: Arc<Mutex<Dfc>>,
+    dfc: Arc<ShardedDfc>,
     registry: Arc<SeRegistry>,
     shim: EcShim,
     repl: ReplicationManager,
@@ -121,6 +137,7 @@ pub struct TestCluster {
 }
 
 impl TestCluster {
+    /// Start building a cluster (5 in-memory SEs, 4+2, round-robin).
     pub fn builder() -> TestClusterBuilder {
         TestClusterBuilder {
             n_ses: 5,
@@ -132,25 +149,31 @@ impl TestCluster {
             local_base: None,
             profile: None,
             profile_scale: 0.0,
+            catalog_shards: crate::catalog::DEFAULT_SHARDS,
         }
     }
 
+    /// The erasure-coding shim wired over this cluster.
     pub fn shim(&self) -> &EcShim {
         &self.shim
     }
 
+    /// The whole-file replication baseline over the same catalogue/SEs.
     pub fn replication(&self) -> &ReplicationManager {
         &self.repl
     }
 
+    /// The SE registry.
     pub fn registry(&self) -> &SeRegistry {
         &self.registry
     }
 
-    pub fn dfc(&self) -> Arc<Mutex<Dfc>> {
+    /// The sharded catalogue.
+    pub fn dfc(&self) -> Arc<ShardedDfc> {
         Arc::clone(&self.dfc)
     }
 
+    /// The cluster's default coding geometry.
     pub fn params(&self) -> EcParams {
         self.params
     }
@@ -260,7 +283,7 @@ mod tests {
             .unwrap_err();
         assert!(matches!(err, crate::Error::Transfer(_)));
         // Catalog must be clean after the abort.
-        assert!(!cluster.dfc().lock().unwrap().exists("/vo/x.bin"));
+        assert!(!cluster.dfc().exists("/vo/x.bin"));
         // No stray objects left behind.
         assert_eq!(cluster.total_stored_bytes(), 0);
     }
@@ -311,6 +334,30 @@ mod tests {
     }
 
     #[test]
+    fn repair_spreads_rebuilt_chunks_via_policy() {
+        // 4+2 over 8 SEs: chunks land on SE-00..05. Kill SE-00 and SE-01
+        // — the two rebuilt chunks must go through the placement policy
+        // with sibling anti-affinity, i.e. land on the two SEs holding no
+        // chunk of this file (SE-06, SE-07), one each, never stacked.
+        let cluster = TestCluster::builder().ses(8).build().unwrap();
+        let data = vec![0xABu8; 40_000];
+        let opts = small_put_opts(&cluster);
+        cluster.shim().put_bytes("/vo/aa.bin", &data, &opts).unwrap();
+        cluster.kill_se("SE-00");
+        cluster.kill_se("SE-01");
+        let fixed = cluster.shim().repair("/vo/aa.bin", &GetOptions::default()).unwrap();
+        assert_eq!(fixed, 2);
+        let stat = cluster.shim().stat("/vo/aa.bin").unwrap();
+        assert_eq!(stat.available_chunks, 6);
+        let ses: std::collections::BTreeSet<String> =
+            stat.chunks.iter().map(|c| c.se.clone()).collect();
+        assert_eq!(ses.len(), 6, "rebuilt chunks double-placed: {stat:?}");
+        assert!(!ses.contains("SE-00") && !ses.contains("SE-01"), "{stat:?}");
+        let back = cluster.shim().get_bytes("/vo/aa.bin", &GetOptions::default()).unwrap();
+        assert_eq!(back, data);
+    }
+
+    #[test]
     fn repair_noop_when_healthy() {
         let cluster = TestCluster::builder().ses(6).build().unwrap();
         let opts = small_put_opts(&cluster);
@@ -329,7 +376,7 @@ mod tests {
         assert!(cluster.total_stored_bytes() > 0);
         cluster.shim().rm("/vo/z.bin").unwrap();
         assert_eq!(cluster.total_stored_bytes(), 0);
-        assert!(!cluster.dfc().lock().unwrap().exists("/vo/z.bin"));
+        assert!(!cluster.dfc().exists("/vo/z.bin"));
     }
 
     #[test]
@@ -347,15 +394,14 @@ mod tests {
             .with_key_style(crate::catalog::MetaKeyStyle::V1Generic);
         cluster.shim().put_bytes("/vo/meta.bin", &[3u8; 100], &opts).unwrap();
         let dfc = cluster.dfc();
-        let dfc = dfc.lock().unwrap();
         use crate::catalog::MetaValue;
         assert_eq!(
             dfc.get_meta("/vo/meta.bin", "TOTAL").unwrap(),
-            Some(&MetaValue::Int(6))
+            Some(MetaValue::Int(6))
         );
         assert_eq!(
             dfc.get_meta("/vo/meta.bin", "SPLIT").unwrap(),
-            Some(&MetaValue::Int(4))
+            Some(MetaValue::Int(4))
         );
         // The §4 pitfall is visible: generic tags in the global index.
         assert!(dfc.global_tags().contains_key("TOTAL"));
@@ -366,9 +412,7 @@ mod tests {
         let cluster = TestCluster::builder().ses(5).build().unwrap();
         let opts = small_put_opts(&cluster);
         cluster.shim().put_bytes("/vo/nm.bin", &[1u8; 100], &opts).unwrap();
-        let dfc = cluster.dfc();
-        let dfc = dfc.lock().unwrap();
-        let items = dfc.list_dir("/vo/nm.bin").unwrap();
+        let items = cluster.dfc().list_dir("/vo/nm.bin").unwrap();
         assert_eq!(items.len(), 6);
         assert_eq!(items[0].name(), "nm.bin.0_of_6.drs");
     }

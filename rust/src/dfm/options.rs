@@ -33,26 +33,31 @@ impl Default for PutOptions {
 }
 
 impl PutOptions {
+    /// Set the coding geometry.
     pub fn with_params(mut self, params: EcParams) -> Self {
         self.params = params;
         self
     }
 
+    /// Set the transfer worker count (clamped to ≥ 1).
     pub fn with_workers(mut self, workers: usize) -> Self {
         self.workers = workers.max(1);
         self
     }
 
+    /// Set the stripe width.
     pub fn with_stripe(mut self, stripe_b: usize) -> Self {
         self.stripe_b = stripe_b;
         self
     }
 
+    /// Set the retry policy.
     pub fn with_retry(mut self, retry: RetryPolicy) -> Self {
         self.retry = retry;
         self
     }
 
+    /// Set the metadata tag style.
     pub fn with_key_style(mut self, style: MetaKeyStyle) -> Self {
         self.key_style = style;
         self
@@ -75,11 +80,13 @@ impl Default for GetOptions {
 }
 
 impl GetOptions {
+    /// Set the transfer worker count (clamped to ≥ 1).
     pub fn with_workers(mut self, workers: usize) -> Self {
         self.workers = workers.max(1);
         self
     }
 
+    /// Set the retry policy.
     pub fn with_retry(mut self, retry: RetryPolicy) -> Self {
         self.retry = retry;
         self

@@ -1,9 +1,9 @@
 //! The baseline the paper compares against: classical whole-file
 //! replication, "one full copy per site".
 
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
-use crate::catalog::{Dfc, FileEntry};
+use crate::catalog::{FileEntry, ShardedDfc};
 use crate::placement::PlacementPolicy;
 use crate::se::SeRegistry;
 use crate::transfer::{PoolConfig, WorkPool};
@@ -11,15 +11,17 @@ use crate::{Error, Result};
 
 /// Whole-file integer replication manager.
 pub struct ReplicationManager {
-    dfc: Arc<Mutex<Dfc>>,
+    dfc: Arc<ShardedDfc>,
     registry: Arc<SeRegistry>,
     policy: Arc<dyn PlacementPolicy>,
     vo: String,
 }
 
 impl ReplicationManager {
+    /// Wire a replication manager over a catalogue, registry and policy
+    /// for one VO.
     pub fn new(
-        dfc: Arc<Mutex<Dfc>>,
+        dfc: Arc<ShardedDfc>,
         registry: Arc<SeRegistry>,
         policy: Arc<dyn PlacementPolicy>,
         vo: impl Into<String>,
@@ -69,11 +71,8 @@ impl ReplicationManager {
             )));
         }
 
-        {
-            let dfc = self.dfc.lock().unwrap();
-            if dfc.exists(lfn) {
-                return Err(Error::Catalog(format!("`{lfn}` already exists")));
-            }
+        if self.dfc.exists(lfn) {
+            return Err(Error::Catalog(format!("`{lfn}` already exists")));
         }
 
         let ses = self.registry.vo_vector(&self.vo);
@@ -101,12 +100,11 @@ impl ReplicationManager {
         }
 
         let digest = crate::ec::chunk::sha256(data);
-        let mut dfc = self.dfc.lock().unwrap();
         let parent = lfn.rsplit_once('/').map(|(d, _)| d).unwrap_or("");
         if !parent.is_empty() {
-            dfc.mkdir_p(parent)?;
+            self.dfc.mkdir_p(parent)?;
         }
-        dfc.add_file(
+        self.dfc.add_file(
             lfn,
             FileEntry {
                 size: data.len() as u64,
@@ -117,7 +115,7 @@ impl ReplicationManager {
         )?;
         let mut names = Vec::new();
         for (_, se_name) in &outcome.successes {
-            dfc.register_replica(lfn, se_name, &pfn)?;
+            self.dfc.register_replica(lfn, se_name, &pfn)?;
             names.push(se_name.clone());
         }
         Ok(names)
@@ -126,14 +124,8 @@ impl ReplicationManager {
     /// Fetch the file, trying replicas in catalog order (the classical
     /// data-management behaviour).
     pub fn get_bytes(&self, lfn: &str) -> Result<Vec<u8>> {
-        let replicas = {
-            let dfc = self.dfc.lock().unwrap();
-            dfc.replicas(lfn)?.to_vec()
-        };
-        let expected_checksum = {
-            let dfc = self.dfc.lock().unwrap();
-            dfc.file(lfn)?.checksum.clone()
-        };
+        let replicas = self.dfc.replicas(lfn)?;
+        let expected_checksum = self.dfc.file(lfn)?.checksum;
         let mut last = Error::Transfer(format!("`{lfn}`: no replicas"));
         for r in &replicas {
             if let Some(se) = self.registry.get(&r.se) {
@@ -159,10 +151,7 @@ impl ReplicationManager {
 
     /// How many replicas are currently fetchable.
     pub fn available_replicas(&self, lfn: &str) -> Result<usize> {
-        let replicas = {
-            let dfc = self.dfc.lock().unwrap();
-            dfc.replicas(lfn)?.to_vec()
-        };
+        let replicas = self.dfc.replicas(lfn)?;
         Ok(replicas
             .iter()
             .filter(|r| {

@@ -1,11 +1,12 @@
 //! `EcShim`: put / get / repair / rm over erasure-coded files.
 
-use std::sync::{Arc, Mutex};
+use std::collections::BTreeSet;
+use std::sync::Arc;
 
-use crate::catalog::{Dfc, MetaKeyStyle, MetaValue};
+use crate::catalog::{MetaKeyStyle, MetaValue, ShardedDfc};
 use crate::ec::{chunk_name, Codec, EcBackend, EcParams, PureRustBackend};
 use crate::placement::PlacementPolicy;
-use crate::se::{SeRegistry, StorageElement};
+use crate::se::{SeInfo, SeRegistry, StorageElement};
 use crate::transfer::{PoolConfig, RetryPolicy, WorkPool};
 use crate::{Error, Result};
 
@@ -17,19 +18,28 @@ pub const SHIM_VERSION: i64 = 2;
 /// Status of one erasure-coded file, as reported by [`EcShim::stat`].
 #[derive(Clone, Debug)]
 pub struct EcFileStat {
+    /// The file's logical path (its chunk directory).
     pub lfn: String,
+    /// Coding geometry (K data + M coding chunks).
     pub params: EcParams,
+    /// Stripe width in bytes.
     pub stripe_b: usize,
+    /// Per-chunk status, in chunk-index order.
     pub chunks: Vec<ChunkStat>,
     /// Chunks currently fetchable (replica SE up and object present).
     pub available_chunks: usize,
 }
 
+/// Status of one chunk within an [`EcFileStat`].
 #[derive(Clone, Debug)]
 pub struct ChunkStat {
+    /// Chunk file name (`<base>.<i>_of_<n>.drs`).
     pub name: String,
+    /// Chunk index within the code word.
     pub index: usize,
+    /// The SE the catalogue points at (last replica probed).
     pub se: String,
+    /// Whether the chunk is currently fetchable.
     pub available: bool,
 }
 
@@ -47,7 +57,7 @@ impl EcFileStat {
 
 /// The erasure-coding DFC shim (the paper's system).
 pub struct EcShim {
-    dfc: Arc<Mutex<Dfc>>,
+    dfc: Arc<ShardedDfc>,
     registry: Arc<SeRegistry>,
     policy: Arc<dyn PlacementPolicy>,
     backend: Arc<dyn EcBackend>,
@@ -55,8 +65,10 @@ pub struct EcShim {
 }
 
 impl EcShim {
+    /// Wire a shim over a catalogue, SE registry, placement policy and
+    /// coding backend for one VO.
     pub fn new(
-        dfc: Arc<Mutex<Dfc>>,
+        dfc: Arc<ShardedDfc>,
         registry: Arc<SeRegistry>,
         policy: Arc<dyn PlacementPolicy>,
         backend: Arc<dyn EcBackend>,
@@ -68,7 +80,7 @@ impl EcShim {
     /// Convenience constructor with the paper's round-robin policy and the
     /// pure-rust backend.
     pub fn with_defaults(
-        dfc: Arc<Mutex<Dfc>>,
+        dfc: Arc<ShardedDfc>,
         registry: Arc<SeRegistry>,
         vo: impl Into<String>,
     ) -> Self {
@@ -81,10 +93,12 @@ impl EcShim {
         )
     }
 
-    pub fn dfc(&self) -> Arc<Mutex<Dfc>> {
+    /// The sharded catalogue this shim operates on.
+    pub fn dfc(&self) -> Arc<ShardedDfc> {
         Arc::clone(&self.dfc)
     }
 
+    /// The SE registry this shim places chunks over.
     pub fn registry(&self) -> Arc<SeRegistry> {
         Arc::clone(&self.registry)
     }
@@ -95,6 +109,7 @@ impl EcShim {
         Arc::clone(&self.policy)
     }
 
+    /// The VO whose SE vector this shim places over.
     pub fn vo(&self) -> &str {
         &self.vo
     }
@@ -122,11 +137,8 @@ impl EcShim {
         if infos.is_empty() {
             return Err(Error::Config(format!("no SEs support VO `{}`", self.vo)));
         }
-        {
-            let dfc = self.dfc.lock().unwrap();
-            if dfc.exists(lfn) {
-                return Err(Error::Catalog(format!("`{lfn}` already exists")));
-            }
+        if self.dfc.exists(lfn) {
+            return Err(Error::Catalog(format!("`{lfn}` already exists")));
         }
         let base = Self::base_name(lfn)?;
         let codec = Codec::with_backend(opts.params, opts.stripe_b, Arc::clone(&self.backend))?;
@@ -134,16 +146,16 @@ impl EcShim {
         let n = opts.params.n();
         let assignment = self.policy.place(n, &infos)?;
 
-        // Register the chunk directory + the paper's metadata keys.
-        {
-            let mut dfc = self.dfc.lock().unwrap();
-            dfc.mkdir_p(lfn)?;
-            let style = opts.key_style;
-            dfc.set_meta(lfn, style.total_key(), MetaValue::Int(n as i64))?;
-            dfc.set_meta(lfn, style.split_key(), MetaValue::Int(opts.params.k() as i64))?;
-            dfc.set_meta(lfn, style.version_key(), MetaValue::Int(SHIM_VERSION))?;
-            dfc.set_meta(lfn, style.stripe_key(), MetaValue::Int(opts.stripe_b as i64))?;
-        }
+        // Register the chunk directory + the paper's metadata keys. The
+        // directory (and with it every chunk file below) lives in one
+        // catalogue shard, so concurrent uploads of different files do
+        // not contend.
+        self.dfc.mkdir_p(lfn)?;
+        let style = opts.key_style;
+        self.dfc.set_meta(lfn, style.total_key(), MetaValue::Int(n as i64))?;
+        self.dfc.set_meta(lfn, style.split_key(), MetaValue::Int(opts.params.k() as i64))?;
+        self.dfc.set_meta(lfn, style.version_key(), MetaValue::Int(SHIM_VERSION))?;
+        self.dfc.set_meta(lfn, style.stripe_key(), MetaValue::Int(opts.stripe_b as i64))?;
 
         // Upload jobs: chunk i → SE assignment[i], with optional retry /
         // fallback to the next SE in the vector.
@@ -181,8 +193,7 @@ impl EcShim {
                     let _ = se.delete(pfn);
                 }
             }
-            let mut dfc = self.dfc.lock().unwrap();
-            let _ = dfc.remove_dir(lfn);
+            let _ = self.dfc.remove_dir(lfn);
             let (idx, err) = &outcome.failures[0];
             return Err(Error::Transfer(format!(
                 "upload of chunk {idx} failed ({err}); put aborted per paper semantics"
@@ -191,23 +202,20 @@ impl EcShim {
 
         // Register chunk files + replicas.
         let mut per_chunk_se = vec![String::new(); n];
-        {
-            let mut dfc = self.dfc.lock().unwrap();
-            let mut rows: Vec<&(usize, String, String, u64, String)> =
-                outcome.successes.iter().map(|(_, v)| v).collect();
-            rows.sort_by_key(|r| r.0);
-            for (i, se_name, pfn, size, checksum) in rows {
-                let name = chunk_name(&base, *i, n);
-                let entry = crate::catalog::FileEntry {
-                    size: *size,
-                    checksum: checksum.clone(),
-                    replicas: vec![],
-                    meta: Default::default(),
-                };
-                dfc.add_file(&format!("{lfn}/{name}"), entry)?;
-                dfc.register_replica(&format!("{lfn}/{name}"), se_name, pfn)?;
-                per_chunk_se[*i] = se_name.clone();
-            }
+        let mut rows: Vec<&(usize, String, String, u64, String)> =
+            outcome.successes.iter().map(|(_, v)| v).collect();
+        rows.sort_by_key(|r| r.0);
+        for (i, se_name, pfn, size, checksum) in rows {
+            let name = chunk_name(&base, *i, n);
+            let entry = crate::catalog::FileEntry {
+                size: *size,
+                checksum: checksum.clone(),
+                replicas: vec![],
+                meta: Default::default(),
+            };
+            self.dfc.add_file(&format!("{lfn}/{name}"), entry)?;
+            self.dfc.register_replica(&format!("{lfn}/{name}"), se_name, pfn)?;
+            per_chunk_se[*i] = se_name.clone();
         }
         Ok(per_chunk_se)
     }
@@ -255,14 +263,20 @@ impl EcShim {
 
     /// Parse the catalog layout of an EC file: params, stripe width and
     /// the chunk files with their replicas, ordered by chunk index.
+    ///
+    /// Reads from a point-in-time snapshot of the file's directory
+    /// ([`ShardedDfc::snapshot_dir`] — one shard lock, one clone: the
+    /// directory-affinity invariant puts the whole EC directory in its
+    /// owner shard), so the layout is internally consistent and no
+    /// catalogue lock is held while it is interpreted.
     fn read_layout(
         &self,
         lfn: &str,
     ) -> Result<(EcParams, usize, Vec<(usize, String, Vec<crate::catalog::Replica>)>)> {
-        let dfc = self.dfc.lock().unwrap();
-        if !dfc.is_dir(lfn) {
+        if !self.dfc.is_dir(lfn) {
             return Err(Error::Catalog(format!("`{lfn}` is not an EC file directory")));
         }
+        let dfc = self.dfc.snapshot_dir(lfn)?;
         // Read TOTAL/SPLIT under either key style (V1 files remain readable).
         let meta_int = |key1: &str, key2: &str| -> Option<i64> {
             dfc.get_meta(lfn, key1)
@@ -433,47 +447,72 @@ impl EcShim {
         let codec = Codec::with_backend(params, stripe_b, Arc::clone(&self.backend))?;
         let rebuilt = codec.repair(&survivors, &missing)?;
 
-        // Place rebuilt chunks on available SEs, preferring ones that do
-        // not already hold a chunk of this file.
+        // Place rebuilt chunks through the placement policy with sibling
+        // anti-affinity, like the drain path: SEs already holding a live
+        // chunk of this file — or chosen for an earlier rebuilt chunk of
+        // this pass — are not eligible, so a multi-chunk repair cannot
+        // stack several rebuilt chunks on one SE. When that leaves no
+        // candidate (fewer SEs than chunks), relax to avoiding only this
+        // pass's own placements; `excluded` is never relaxed.
         let infos = self.registry.vo_infos(&self.vo);
-        let holding: Vec<String> = stat
+        let mut holding: BTreeSet<String> = stat
             .chunks
             .iter()
             .filter(|c| c.available)
             .map(|c| c.se.clone())
             .collect();
+        let mut chosen: BTreeSet<String> = BTreeSet::new();
         let base = Self::base_name(lfn)?;
         let n = params.n();
         let mut repaired = 0usize;
-        for (idx, wire) in rebuilt {
-            let target = infos
-                .iter()
-                .enumerate()
-                .filter(|(_, s)| s.available && !excluded.contains(&s.name))
-                .min_by_key(|(i, s)| (holding.contains(&s.name) as usize, *i))
-                .map(|(i, _)| i)
-                .ok_or_else(|| Error::Transfer("no SE available for repair".into()))?;
+        for (ordinal, (idx, wire)) in rebuilt.into_iter().enumerate() {
+            let eligible = |avoid: &BTreeSet<String>| -> Vec<SeInfo> {
+                infos
+                    .iter()
+                    .filter(|s| {
+                        s.available && !excluded.contains(&s.name) && !avoid.contains(&s.name)
+                    })
+                    .cloned()
+                    .collect()
+            };
+            let mut candidates = eligible(&holding);
+            if candidates.is_empty() {
+                candidates = eligible(&chosen);
+            }
+            if candidates.is_empty() {
+                return Err(Error::Transfer("no SE available for repair".into()));
+            }
+            // One placement slot per chunk; rotating the candidate list by
+            // the rebuild ordinal spreads successive chunks across the
+            // vector (round-robin stays round-robin) without asking the
+            // policy for slots it will not use.
+            candidates.rotate_left(ordinal % candidates.len());
+            let slot = *self
+                .policy
+                .place(1, &candidates)?
+                .first()
+                .ok_or_else(|| Error::Ec("placement returned no slot".into()))?;
+            let target = candidates[slot].name.clone();
             let se = self
                 .registry
-                .get(&infos[target].name)
+                .get(&target)
                 .ok_or_else(|| Error::Config("registry inconsistent".into()))?;
             let name = chunk_name(&base, idx, n);
             let pfn = format!("{lfn}/{name}");
             se.put(&pfn, &wire)?;
-            {
-                let mut dfc = self.dfc.lock().unwrap();
-                let path = format!("{lfn}/{name}");
-                // Drop stale replica records, then register the new one.
-                let old: Vec<String> = dfc
-                    .replicas(&path)?
-                    .iter()
-                    .map(|r| r.se.clone())
-                    .collect();
-                for se_name in old {
-                    let _ = dfc.remove_replica(&path, &se_name);
-                }
-                dfc.register_replica(&path, se.name(), &pfn)?;
+            // Drop stale replica records, then register the new one.
+            let old: Vec<String> = self
+                .dfc
+                .replicas(&pfn)?
+                .iter()
+                .map(|r| r.se.clone())
+                .collect();
+            for se_name in old {
+                let _ = self.dfc.remove_replica(&pfn, &se_name);
             }
+            self.dfc.register_replica(&pfn, se.name(), &pfn)?;
+            holding.insert(target.clone());
+            chosen.insert(target);
             repaired += 1;
         }
         Ok(repaired)
@@ -490,7 +529,7 @@ impl EcShim {
                 }
             }
         }
-        self.dfc.lock().unwrap().remove_dir(lfn)
+        self.dfc.remove_dir(lfn)
     }
 }
 

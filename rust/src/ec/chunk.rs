@@ -25,24 +25,36 @@
 use crate::ec::params::EcParams;
 use crate::{Error, Result};
 
+/// Wire-format magic bytes.
 pub const MAGIC: &[u8; 4] = b"DRSC";
+/// Current chunk container format version.
 pub const FORMAT_VERSION: u16 = 1;
+/// Fixed header length in bytes.
 pub const HEADER_LEN: usize = 64;
 
 /// Parsed chunk header.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ChunkHeader {
+    /// Container format version.
     pub version: u16,
+    /// Data chunks K.
     pub k: u8,
+    /// Coding chunks M.
     pub m: u8,
+    /// This chunk's index in the code word.
     pub index: u8,
+    /// Stripe width in bytes.
     pub stripe_b: u32,
+    /// Logical file length.
     pub file_len: u64,
+    /// Payload bytes following the header.
     pub payload_len: u64,
+    /// SHA-256 of the logical file.
     pub file_sha256: [u8; 32],
 }
 
 impl ChunkHeader {
+    /// Header for chunk `index` of a file with the given geometry.
     pub fn new(
         params: EcParams,
         index: usize,
@@ -63,14 +75,17 @@ impl ChunkHeader {
         }
     }
 
+    /// The geometry the header claims.
     pub fn params(&self) -> Result<EcParams> {
         EcParams::new(self.k as usize, self.m as usize)
     }
 
+    /// Whether this is a coding (parity) chunk.
     pub fn is_coding(&self) -> bool {
         self.index >= self.k
     }
 
+    /// Serialize to the 64-byte wire header.
     pub fn encode(&self) -> [u8; HEADER_LEN] {
         let mut buf = [0u8; HEADER_LEN];
         buf[0..4].copy_from_slice(MAGIC);
@@ -85,6 +100,7 @@ impl ChunkHeader {
         buf
     }
 
+    /// Parse and validate a wire header.
     pub fn decode(buf: &[u8]) -> Result<Self> {
         if buf.len() < HEADER_LEN {
             return Err(Error::Ec(format!(

@@ -40,6 +40,7 @@ impl Codec {
         Self::with_backend(params, DEFAULT_STRIPE_B, Arc::new(PureRustBackend))
     }
 
+    /// Codec with an explicit stripe width and compute backend.
     pub fn with_backend(
         params: EcParams,
         stripe_b: usize,
@@ -52,14 +53,17 @@ impl Codec {
         Ok(Codec { params, stripe_b, coding, backend })
     }
 
+    /// The coding geometry.
     pub fn params(&self) -> EcParams {
         self.params
     }
 
+    /// The stripe width in bytes.
     pub fn stripe_b(&self) -> usize {
         self.stripe_b
     }
 
+    /// Which compute backend is in use.
     pub fn backend_name(&self) -> &'static str {
         self.backend.name()
     }

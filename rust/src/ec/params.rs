@@ -13,6 +13,7 @@ pub struct EcParams {
 }
 
 impl EcParams {
+    /// Validate and build a geometry (k ≥ 1, k+m ≤ 255).
     pub fn new(k: usize, m: usize) -> Result<Self> {
         if k == 0 {
             return Err(Error::Ec("k must be >= 1".into()));

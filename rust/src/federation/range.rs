@@ -9,10 +9,13 @@
 /// payload at segment `seg`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Cell {
+    /// Segment index.
     pub seg: u64,
+    /// Data-chunk row within the segment.
     pub row: usize,
     /// Range within the cell (byte offsets into the sb-wide row).
     pub start: usize,
+    /// End of the range (exclusive).
     pub end: usize,
     /// Where this cell's bytes land in the reader's output buffer.
     pub out_off: usize,

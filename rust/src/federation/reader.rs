@@ -80,14 +80,17 @@ impl EcFileReader {
         Ok(reader)
     }
 
+    /// Logical file length in bytes.
     pub fn file_len(&self) -> u64 {
         self.file_len
     }
 
+    /// IO counters accumulated so far.
     pub fn stats(&self) -> ReaderStats {
         self.stats
     }
 
+    /// Resize the decoded-segment cache.
     pub fn set_cache_capacity(&mut self, segments: usize) {
         self.cache_cap = segments.max(1);
     }

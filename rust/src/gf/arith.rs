@@ -149,6 +149,7 @@ mod simd {
     use super::TABLES;
     use std::arch::x86_64::*;
 
+    /// Whether the AVX2 path can run on this CPU (cached detection).
     pub fn available() -> bool {
         use std::sync::atomic::{AtomicU8, Ordering};
         static CACHED: AtomicU8 = AtomicU8::new(2);

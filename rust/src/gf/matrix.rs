@@ -17,10 +17,12 @@ pub struct GfMatrix {
 }
 
 impl GfMatrix {
+    /// An all-zero matrix.
     pub fn zero(rows: usize, cols: usize) -> Self {
         GfMatrix { rows, cols, data: vec![0; rows * cols] }
     }
 
+    /// The n×n identity.
     pub fn identity(n: usize) -> Self {
         let mut m = Self::zero(n, n);
         for i in 0..n {
@@ -29,6 +31,7 @@ impl GfMatrix {
         m
     }
 
+    /// Build from row vectors (all must have equal length).
     pub fn from_rows(rows: Vec<Vec<u8>>) -> Result<Self> {
         let r = rows.len();
         let c = rows.first().map_or(0, |x| x.len());
@@ -38,28 +41,34 @@ impl GfMatrix {
         Ok(GfMatrix { rows: r, cols: c, data: rows.into_iter().flatten().collect() })
     }
 
+    /// Row count.
     pub fn rows(&self) -> usize {
         self.rows
     }
 
+    /// Column count.
     pub fn cols(&self) -> usize {
         self.cols
     }
 
+    /// Element at (r, c).
     #[inline]
     pub fn get(&self, r: usize, c: usize) -> u8 {
         self.data[r * self.cols + c]
     }
 
+    /// Set element (r, c).
     #[inline]
     pub fn set(&mut self, r: usize, c: usize, v: u8) {
         self.data[r * self.cols + c] = v;
     }
 
+    /// One row as a byte slice.
     pub fn row(&self, r: usize) -> &[u8] {
         &self.data[r * self.cols..(r + 1) * self.cols]
     }
 
+    /// The whole matrix, row-major.
     pub fn as_bytes(&self) -> &[u8] {
         &self.data
     }

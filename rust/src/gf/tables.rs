@@ -34,6 +34,7 @@ pub const fn mul_slow(a: u8, mut b: u8) -> u8 {
     acc
 }
 
+/// Precomputed GF(2⁸) lookup tables.
 pub struct Tables {
     /// log[v] for v in 1..=255; log[0] = 511 (zero sink).
     pub log: [u16; 256],
@@ -43,11 +44,13 @@ pub struct Tables {
     pub mul: Box<[[u8; 256]; 256]>,
     /// Split tables: mul_lo[c][n] = mul(c, n), mul_hi[c][n] = mul(c, n<<4).
     pub mul_lo: Box<[[u8; 16]; 256]>,
+    /// High-nibble half of the split tables (see `mul_lo`).
     pub mul_hi: Box<[[u8; 16]; 256]>,
     /// inv[v] for v in 1..=255; inv[0] = 0 (never consulted for zero).
     pub inv: [u8; 256],
 }
 
+/// The process-wide table set, built on first use.
 pub static TABLES: Lazy<Tables> = Lazy::new(|| {
     let mut log = [0u16; 256];
     let mut exp = [0u8; 512];

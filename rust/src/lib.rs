@@ -14,7 +14,11 @@
 //!   the AOT-compiled Pallas/XLA kernel via [`runtime`]).
 //! * [`catalog`] — the DIRAC File Catalogue (DFC) substrate: hierarchical
 //!   namespace, replica catalog, key-value metadata (with the paper's
-//!   `SPLIT`/`TOTAL` convention and §4 prefix hygiene).
+//!   `SPLIT`/`TOTAL` convention and §4 prefix hygiene). Served
+//!   concurrently by [`catalog::ShardedDfc`]: the namespace
+//!   hash-partitioned over independently locked shards with
+//!   directory-subtree affinity, plus lock-free snapshot scans
+//!   (`snapshot_subtree`) so maintenance walks never block clients.
 //! * [`se`] — Storage Elements: a trait with local-directory and
 //!   simulated-network backends, availability/failure injection, registry.
 //! * [`placement`] — chunk→SE placement policies (round-robin per the
@@ -51,6 +55,17 @@
 //! let back = cluster.shim().get_bytes("/vo/user/demo.bin", &GetOptions::default()).unwrap();
 //! assert_eq!(back, data);
 //! ```
+//!
+//! ## Further reading
+//!
+//! * `docs/ARCHITECTURE.md` — module map, the life of a file
+//!   (upload → scrub → repair → drain), and where the sharded catalogue
+//!   and its snapshot scans sit.
+//! * `docs/OPERATIONS.md` — operator runbook for `drs scrub`,
+//!   `drs repair-all` and `drs drain` (flags, budgets, health reports,
+//!   incremental-scrub cursors).
+
+#![warn(missing_docs)]
 
 pub mod catalog;
 pub mod cli;
@@ -71,7 +86,7 @@ pub mod util;
 
 /// Convenient re-exports for downstream users and the examples.
 pub mod prelude {
-    pub use crate::catalog::{Dfc, MetaValue};
+    pub use crate::catalog::{Dfc, MetaValue, ShardedDfc};
     pub use crate::config::Config;
     pub use crate::dfm::{
         EcShim, GetOptions, PutOptions, ReplicationManager, TestCluster,
@@ -85,6 +100,7 @@ pub mod prelude {
 
 /// Crate-wide error type (hand-rolled: `thiserror` is unavailable offline).
 #[derive(Debug)]
+#[allow(missing_docs)] // variant names + Display impls are the documentation
 pub enum Error {
     Ec(String),
     Catalog(String),
@@ -132,4 +148,5 @@ impl From<std::io::Error> for Error {
     }
 }
 
+/// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;

@@ -1,6 +1,7 @@
 //! `drs` — the L3 coordinator binary.
 //!
-//! See `drs help` for usage; DESIGN.md for the architecture.
+//! See `drs help` for usage, `docs/OPERATIONS.md` for the operator
+//! runbook and `docs/ARCHITECTURE.md` for the architecture.
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();

@@ -18,12 +18,12 @@
 //! one file, so the sibling-SE anti-affinity check always sees the
 //! destinations already chosen for the file's other chunks.
 //!
-//! [`Dfc::files_with_replica_on`]: crate::catalog::Dfc::files_with_replica_on
+//! [`Dfc::files_with_replica_on`]: crate::catalog::ShardedDfc::files_with_replica_on
 
 use std::collections::BTreeSet;
 use std::sync::Arc;
 
-use crate::catalog::Dfc;
+use crate::catalog::ShardedDfc;
 use crate::dfm::{EcShim, GetOptions};
 use crate::placement::PlacementPolicy;
 use crate::se::{SeInfo, SeRegistry, StorageElement};
@@ -47,6 +47,7 @@ impl Default for DrainOptions {
 }
 
 impl DrainOptions {
+    /// Set the concurrent file-evacuation worker count (clamped to ≥ 1).
     pub fn with_workers(mut self, workers: usize) -> Self {
         self.workers = workers.max(1);
         self
@@ -56,9 +57,11 @@ impl DrainOptions {
 /// Outcome of one drain run.
 #[derive(Clone, Debug, Default)]
 pub struct DrainReport {
+    /// The drained SE's name.
     pub se: String,
     /// Replicas copied byte-for-byte to a new SE.
     pub replicas_moved: usize,
+    /// Bytes copied during those moves.
     pub bytes_moved: u64,
     /// Chunks re-derived through EC repair because the source was
     /// unreadable.
@@ -82,6 +85,7 @@ impl DrainReport {
         self.failures.is_empty()
     }
 
+    /// One-line human summary.
     pub fn summary(&self) -> String {
         format!(
             "drained `{}`: {} replica(s) moved ({} bytes), {} chunk(s) rebuilt, {} record(s) dropped, {} failure(s), {} residual object(s)",
@@ -112,7 +116,7 @@ struct DrainCtx {
     registry: Arc<SeRegistry>,
     source: Arc<dyn StorageElement>,
     policy: Arc<dyn PlacementPolicy>,
-    dfc: Arc<std::sync::Mutex<Dfc>>,
+    dfc: Arc<ShardedDfc>,
     vo: String,
     se_name: String,
 }
@@ -131,23 +135,19 @@ fn move_one(ctx: &DrainCtx, ordinal: usize, path: &str, pfn: &str) -> Result<Mov
     // any sibling chunk of the same EC file — are not eligible
     // destinations. Relax to self-exclusion when that leaves nothing
     // (fewer SEs than chunks).
-    let (replicas, own, siblings, parent_is_ec) = {
-        let dfc = ctx.dfc.lock().unwrap();
-        let replicas = dfc.replicas(path)?.to_vec();
-        let own: BTreeSet<String> = replicas.iter().map(|r| r.se.clone()).collect();
-        let mut siblings = own.clone();
-        let parent_is_ec = super::scrub::is_ec_dir(&dfc, &parent);
-        if parent_is_ec {
-            for item in dfc.list_dir(&parent).unwrap_or_default() {
-                if let crate::catalog::dfc::DirItem::File(name) = item {
-                    if let Ok(reps) = dfc.replicas(&format!("{parent}/{name}")) {
-                        siblings.extend(reps.iter().map(|r| r.se.clone()));
-                    }
+    let replicas = ctx.dfc.replicas(path)?;
+    let own: BTreeSet<String> = replicas.iter().map(|r| r.se.clone()).collect();
+    let mut siblings = own.clone();
+    let parent_is_ec = super::scrub::is_ec_dir_sharded(&ctx.dfc, &parent);
+    if parent_is_ec {
+        for item in ctx.dfc.list_dir(&parent).unwrap_or_default() {
+            if let crate::catalog::dfc::DirItem::File(name) = item {
+                if let Ok(reps) = ctx.dfc.replicas(&format!("{parent}/{name}")) {
+                    siblings.extend(reps.iter().map(|r| r.se.clone()));
                 }
             }
         }
-        (replicas, own, siblings, parent_is_ec)
-    };
+    }
     let eligible = |holding: &BTreeSet<String>| -> Vec<SeInfo> {
         ctx.registry
             .vo_infos(&ctx.vo)
@@ -182,11 +182,11 @@ fn move_one(ctx: &DrainCtx, ordinal: usize, path: &str, pfn: &str) -> Result<Mov
                 .get(&candidates[slot].name)
                 .ok_or_else(|| Error::Config("registry inconsistent".into()))?;
             dest.put(pfn, &bytes)?;
-            {
-                let mut dfc = ctx.dfc.lock().unwrap();
-                dfc.remove_replica(path, &ctx.se_name)?;
-                dfc.register_replica(path, dest.name(), pfn)?;
-            }
+            // Register the new location before dropping the old record, so
+            // an interruption between the two calls can only leave an
+            // extra (stale) record, never an orphaned file.
+            ctx.dfc.register_replica(path, dest.name(), pfn)?;
+            ctx.dfc.remove_replica(path, &ctx.se_name)?;
             let _ = ctx.source.delete(pfn);
             Ok(MoveOutcome::Copied { bytes: bytes.len() as u64 })
         }
@@ -212,8 +212,7 @@ fn move_one(ctx: &DrainCtx, ordinal: usize, path: &str, pfn: &str) -> Result<Mov
                             .unwrap_or(false)
                 });
                 if other_alive {
-                    let mut dfc = ctx.dfc.lock().unwrap();
-                    let _ = dfc.remove_replica(path, &ctx.se_name);
+                    let _ = ctx.dfc.remove_replica(path, &ctx.se_name);
                     Ok(MoveOutcome::RecordDropped)
                 } else {
                     // Keep the record (the bytes may come back with the
@@ -235,13 +234,10 @@ pub fn drain_se(shim: &EcShim, se_name: &str, opts: &DrainOptions) -> Result<Dra
         .get(se_name)
         .ok_or_else(|| Error::Config(format!("no SE named `{se_name}`")))?;
 
-    // Catalogue work-list, snapshotted under one lock, then grouped by
-    // owning directory so one file's moves run on one worker.
-    let work: Vec<(String, String)> = {
-        let dfc = shim.dfc();
-        let dfc = dfc.lock().unwrap();
-        dfc.files_with_replica_on(se_name)
-    };
+    // Catalogue work-list (each shard scanned in turn, no lock held
+    // across the scan), then grouped by owning directory so one file's
+    // moves run on one worker.
+    let work: Vec<(String, String)> = shim.dfc().files_with_replica_on(se_name);
     let mut groups: std::collections::BTreeMap<String, Vec<(usize, &(String, String))>> =
         std::collections::BTreeMap::new();
     for (i, item) in work.iter().enumerate() {

@@ -9,10 +9,13 @@
 //! site-resilience loop (the repair-bandwidth/scheduling trade-off that
 //! dominates real EC deployments — Zhang et al., Cook et al.):
 //!
-//! * [`scrub`] — walk every EC directory in the DFC (via the catalogue
-//!   iteration helpers), probe each chunk replica's SE for existence and
-//!   (deep mode) checksum match, and produce per-file [`FileHealth`]
-//!   reports: healthy / degraded with margin `survivors − K` / lost.
+//! * [`scrub`] — walk every EC directory in the DFC, probe each chunk
+//!   replica's SE for existence and (deep mode) checksum match, and
+//!   produce per-file [`FileHealth`] reports: healthy / degraded with
+//!   margin `survivors − K` / lost. The walk runs on a lock-free
+//!   catalogue snapshot ([`crate::catalog::ShardedDfc::snapshot_subtree`])
+//!   so it never blocks client traffic, and supports incremental
+//!   per-subtree slices with a resume cursor (`scrub --incremental`).
 //! * [`repair`] — a prioritized repair queue: smallest surviving margin
 //!   first, driven through the §2.4 work pool under a configurable
 //!   concurrency + rebuild-byte budget ([`RepairBudget`]).
@@ -49,6 +52,7 @@ pub struct Maintainer<'a> {
 }
 
 impl<'a> Maintainer<'a> {
+    /// Bind the maintenance operations to one shim.
     pub fn new(shim: &'a EcShim) -> Self {
         Maintainer { shim }
     }
@@ -95,7 +99,14 @@ impl<'a> Maintainer<'a> {
         let summary = self.repair_all(&before, budget);
         let mut after = ScrubReport::default();
         for outcome in &summary.outcomes {
-            let scoped = ScrubOptions { root: outcome.lfn.clone(), ..opts.clone() };
+            // Scoped to one repaired file: drop any incremental bounds so
+            // the cursor/budget cannot filter the file back out.
+            let scoped = ScrubOptions {
+                root: outcome.lfn.clone(),
+                max_dirs: None,
+                resume_after: None,
+                ..opts.clone()
+            };
             let r = scrub::scrub(&self.shim.dfc(), &self.shim.registry(), &scoped)?;
             after.files.extend(r.files);
             after.skipped.extend(r.skipped);
@@ -200,14 +211,10 @@ mod tests {
         // holds exactly one chunk of every file, so wipe objects instead.
         let dfc = cluster.dfc();
         let victim = |lfn: &str, se: &str| {
-            let dfc = dfc.lock().unwrap();
-            let (path, pfn) = dfc
-                .files_with_replica_on(se)
+            dfc.files_with_replica_on(se)
                 .into_iter()
                 .find(|(p, _)| p.starts_with(lfn))
-                .unwrap();
-            drop(dfc);
-            (path, pfn)
+                .unwrap()
         };
         for se in ["SE-00", "SE-01"] {
             let (_, pfn) = victim("/vo/data/f0.bin", se);
@@ -233,10 +240,7 @@ mod tests {
         let (lfn, data) = &files[0];
         // Corrupt one chunk's bytes in place on its SE.
         let dfc = cluster.dfc();
-        let (path, pfn) = {
-            let dfc = dfc.lock().unwrap();
-            dfc.files_with_replica_on("SE-03").into_iter().next().unwrap()
-        };
+        let (path, pfn) = dfc.files_with_replica_on("SE-03").into_iter().next().unwrap();
         let se = cluster.registry().get("SE-03").unwrap();
         let mut bytes = se.get(&pfn).unwrap();
         let last = bytes.len() - 1;
@@ -277,13 +281,11 @@ mod tests {
         // Register an extra, corrupt replica of one chunk on SE-05 next
         // to its good copy on SE-02.
         let dfc = cluster.dfc();
-        let (path, _good_pfn) = {
-            let dfc = dfc.lock().unwrap();
-            dfc.files_with_replica_on("SE-02").into_iter().next().unwrap()
-        };
+        let (path, _good_pfn) =
+            dfc.files_with_replica_on("SE-02").into_iter().next().unwrap();
         let bad_pfn = format!("{path}.stale");
         cluster.registry().get("SE-05").unwrap().put(&bad_pfn, b"garbage").unwrap();
-        dfc.lock().unwrap().register_replica(&path, "SE-05", &bad_pfn).unwrap();
+        dfc.register_replica(&path, "SE-05", &bad_pfn).unwrap();
 
         let maintainer = Maintainer::new(cluster.shim());
         let deep = maintainer.scrub(&ScrubOptions::default()).unwrap();
@@ -297,13 +299,10 @@ mod tests {
         let summary = maintainer.repair_all(&deep, &RepairBudget::default());
         assert_eq!(summary.chunks_rebuilt, 0);
         assert!(!cluster.registry().get("SE-05").unwrap().exists(&bad_pfn));
-        {
-            let dfc = dfc.lock().unwrap();
-            assert!(dfc
-                .files_with_replica_on("SE-05")
-                .iter()
-                .all(|(p, _)| p != &path));
-        }
+        assert!(dfc
+            .files_with_replica_on("SE-05")
+            .iter()
+            .all(|(p, _)| p != &path));
         let clean = maintainer.scrub(&ScrubOptions::default()).unwrap();
         assert_eq!(clean.chunks_corrupt, 0);
         assert_eq!(clean.healthy(), 1);
@@ -334,6 +333,32 @@ mod tests {
             maintainer.scrub(&ScrubOptions::default()).unwrap().healthy(),
             3
         );
+    }
+
+    #[test]
+    fn incremental_scrub_covers_catalogue_in_slices() {
+        let (cluster, files) = cluster_with_files(6, 3);
+        let maintainer = Maintainer::new(cluster.shim());
+        // Slice 1: two files, cursor at the second.
+        let r1 = maintainer.scrub(&ScrubOptions::default().with_max_dirs(2)).unwrap();
+        assert_eq!(r1.files.len(), 2);
+        let cursor = r1.cursor.clone().expect("walk must stop early");
+        assert_eq!(cursor, r1.files[1].lfn);
+        // Slice 2 resumes after the cursor and completes the walk.
+        let r2 = maintainer
+            .scrub(&ScrubOptions::default().with_max_dirs(2).resume_after(cursor))
+            .unwrap();
+        assert_eq!(r2.files.len(), 1);
+        assert!(r2.cursor.is_none(), "completed walk must reset the cursor");
+        // The two slices cover every file exactly once.
+        let mut seen: Vec<String> =
+            r1.files.iter().chain(r2.files.iter()).map(|f| f.lfn.clone()).collect();
+        seen.sort();
+        let mut want: Vec<String> = files.iter().map(|(l, _)| l.clone()).collect();
+        want.sort();
+        assert_eq!(seen, want);
+        // A full (non-incremental) scrub never reports a cursor.
+        assert!(maintainer.scrub(&ScrubOptions::default()).unwrap().cursor.is_none());
     }
 
     #[test]
@@ -371,11 +396,7 @@ mod tests {
         let se = cluster.registry().get("SE-02").unwrap();
         assert_eq!(se.used_bytes(), 0);
         assert_eq!(se.list("").unwrap().len(), 0);
-        {
-            let dfc = cluster.dfc();
-            let dfc = dfc.lock().unwrap();
-            assert!(dfc.files_with_replica_on("SE-02").is_empty());
-        }
+        assert!(cluster.dfc().files_with_replica_on("SE-02").is_empty());
         for (lfn, data) in &files {
             let back = cluster
                 .shim()
@@ -393,11 +414,8 @@ mod tests {
         let (cluster, files) = cluster_with_files(6, 1);
         // The SE is alive but its chunk object is gone (bit-rot): drain
         // must rebuild elsewhere, never back onto the SE being drained.
-        let (_, pfn) = {
-            let dfc = cluster.dfc();
-            let dfc = dfc.lock().unwrap();
-            dfc.files_with_replica_on("SE-04").into_iter().next().unwrap()
-        };
+        let (_, pfn) =
+            cluster.dfc().files_with_replica_on("SE-04").into_iter().next().unwrap();
         cluster.registry().get("SE-04").unwrap().delete(&pfn).unwrap();
 
         let maintainer = Maintainer::new(cluster.shim());
@@ -406,11 +424,7 @@ mod tests {
         assert_eq!(report.chunks_rebuilt, 1, "{report:?}");
         assert_eq!(report.replicas_moved, 0);
         assert_eq!(cluster.registry().get("SE-04").unwrap().used_bytes(), 0);
-        {
-            let dfc = cluster.dfc();
-            let dfc = dfc.lock().unwrap();
-            assert!(dfc.files_with_replica_on("SE-04").is_empty());
-        }
+        assert!(cluster.dfc().files_with_replica_on("SE-04").is_empty());
         let (lfn, data) = &files[0];
         let back = cluster
             .shim()

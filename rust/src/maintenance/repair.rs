@@ -42,16 +42,19 @@ impl Default for RepairBudget {
 }
 
 impl RepairBudget {
+    /// Set the concurrent file-repair worker count (clamped to ≥ 1).
     pub fn with_workers(mut self, workers: usize) -> Self {
         self.workers = workers.max(1);
         self
     }
 
+    /// Cap the number of files repaired per pass.
     pub fn with_max_files(mut self, max_files: usize) -> Self {
         self.max_files = max_files;
         self
     }
 
+    /// Cap the (estimated) rebuilt bytes per pass.
     pub fn with_max_bytes(mut self, max_bytes: u64) -> Self {
         self.max_bytes = max_bytes;
         self
@@ -61,9 +64,11 @@ impl RepairBudget {
 /// Result of one file's repair attempt.
 #[derive(Clone, Debug)]
 pub struct RepairOutcome {
+    /// The repaired file's logical path.
     pub lfn: String,
     /// Margin when the scrub saw the file (repair priority key).
     pub margin_before: isize,
+    /// Chunks re-derived and re-placed.
     pub chunks_rebuilt: usize,
     /// Error text when the repair failed (file stays degraded).
     pub error: Option<String>,
@@ -74,7 +79,9 @@ pub struct RepairOutcome {
 pub struct RepairSummary {
     /// Per-file outcomes, in completion order.
     pub outcomes: Vec<RepairOutcome>,
+    /// Total chunks re-derived across all repaired files.
     pub chunks_rebuilt: usize,
+    /// Files whose repair attempt failed.
     pub files_failed: usize,
     /// Files deferred by the `max_files`/`max_bytes` budget, still in
     /// priority order.
@@ -84,10 +91,12 @@ pub struct RepairSummary {
 }
 
 impl RepairSummary {
+    /// Files whose repair completed without error.
     pub fn files_repaired(&self) -> usize {
         self.outcomes.iter().filter(|o| o.error.is_none()).count()
     }
 
+    /// One-line human summary.
     pub fn summary(&self) -> String {
         format!(
             "repaired {} file(s) / {} chunk(s); {} failed, {} deferred by budget, {} lost",
@@ -143,7 +152,6 @@ pub fn repair_all(shim: &EcShim, report: &ScrubReport, budget: &RepairBudget) ->
             if let Some(se) = registry.get(&c.se) {
                 let _ = se.delete(&c.pfn);
             }
-            let mut dfc = dfc.lock().unwrap();
             let _ = dfc.remove_replica(&c.path, &c.se);
         }
     }

@@ -6,11 +6,18 @@
 //! checksum match against the catalogue record — and folds the results
 //! into one [`FileHealth`] per file. The probe phase runs through the
 //! §2.4 work pool, one job per file.
+//!
+//! The walk itself runs against a lock-free point-in-time snapshot
+//! ([`crate::catalog::ShardedDfc::snapshot_subtree`]), so a full
+//! catalogue scrub never blocks client operations. Incremental mode
+//! (`max_dirs` + `resume_after`) bounds one run to a slice of the
+//! namespace and reports a cursor ([`ScrubReport::cursor`]) to resume
+//! from, which is what a maintenance daemon persists between runs.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
-use crate::catalog::{dfc::DirItem, Dfc, MetaKeyStyle, Replica};
+use crate::catalog::{dfc::DirItem, Dfc, MetaKeyStyle, Replica, ShardedDfc};
 use crate::se::SeRegistry;
 use crate::transfer::{PoolConfig, WorkPool};
 use crate::{Error, Result};
@@ -26,27 +33,57 @@ pub struct ScrubOptions {
     pub verify_checksums: bool,
     /// Probe worker threads (one job per file).
     pub workers: usize,
+    /// Incremental mode: scrub at most this many EC directories per run
+    /// (in sorted LFN order), reporting where the run stopped in
+    /// [`ScrubReport::cursor`]. `None` scrubs the whole subtree.
+    pub max_dirs: Option<usize>,
+    /// Incremental mode: skip EC directories up to and including this
+    /// LFN (a [`ScrubReport::cursor`] from the previous run).
+    pub resume_after: Option<String>,
 }
 
 impl Default for ScrubOptions {
     fn default() -> Self {
-        ScrubOptions { root: "/".into(), verify_checksums: true, workers: 4 }
+        ScrubOptions {
+            root: "/".into(),
+            verify_checksums: true,
+            workers: 4,
+            max_dirs: None,
+            resume_after: None,
+        }
     }
 }
 
 impl ScrubOptions {
+    /// Scope the scrub to a catalogue subtree.
     pub fn with_root(mut self, root: impl Into<String>) -> Self {
         self.root = root.into();
         self
     }
 
+    /// Set the probe worker count (clamped to ≥ 1).
     pub fn with_workers(mut self, workers: usize) -> Self {
         self.workers = workers.max(1);
         self
     }
 
+    /// Skip checksum verification (existence/availability probes only).
     pub fn shallow(mut self) -> Self {
         self.verify_checksums = false;
+        self
+    }
+
+    /// Incremental mode: bound one run to `max_dirs` EC directories
+    /// (clamped to ≥ 1).
+    pub fn with_max_dirs(mut self, max_dirs: usize) -> Self {
+        self.max_dirs = Some(max_dirs.max(1));
+        self
+    }
+
+    /// Incremental mode: resume after the given cursor (the last LFN the
+    /// previous run examined).
+    pub fn resume_after(mut self, cursor: impl Into<String>) -> Self {
+        self.resume_after = Some(cursor.into());
         self
     }
 }
@@ -65,16 +102,20 @@ pub enum HealthState {
 /// A replica whose bytes exist but fail the catalogue checksum.
 #[derive(Clone, Debug)]
 pub struct CorruptReplica {
+    /// Chunk index within the code word.
     pub index: usize,
     /// Catalogue path of the chunk file (for record removal).
     pub path: String,
+    /// SE holding the corrupt copy.
     pub se: String,
+    /// Physical file name of the corrupt copy.
     pub pfn: String,
 }
 
 /// Per-file scrub verdict.
 #[derive(Clone, Debug)]
 pub struct FileHealth {
+    /// The EC file's logical path (its chunk directory).
     pub lfn: String,
     /// Data chunks needed to reconstruct (the catalogue `SPLIT`).
     pub k: usize,
@@ -94,6 +135,7 @@ pub struct FileHealth {
 }
 
 impl FileHealth {
+    /// Classify the file from its surviving chunk count.
     pub fn state(&self) -> HealthState {
         if self.available == self.n {
             HealthState::Healthy
@@ -115,6 +157,7 @@ impl FileHealth {
         self.n - self.k
     }
 
+    /// Whether any chunk needs rebuilding.
     pub fn needs_repair(&self) -> bool {
         self.available < self.n
     }
@@ -128,20 +171,30 @@ pub struct ScrubReport {
     /// EC-tagged directories that could not be parsed (missing/garbled
     /// metadata, no chunk files) — surfaced rather than silently skipped.
     pub skipped: Vec<(String, String)>,
+    /// Total chunks examined (N per file).
     pub chunks_probed: usize,
+    /// Chunks with no live replica at all.
     pub chunks_missing: usize,
+    /// Chunks with at least one checksum-bad replica (deep scrub).
     pub chunks_corrupt: usize,
+    /// Incremental mode: the last EC directory this run examined, when
+    /// the `max_dirs` budget stopped the walk early. `None` means the
+    /// subtree walk completed — the next incremental run starts over.
+    pub cursor: Option<String>,
 }
 
 impl ScrubReport {
+    /// Files with every chunk fetchable.
     pub fn healthy(&self) -> usize {
         self.count(HealthState::Healthy)
     }
 
+    /// Files with lost chunks but still ≥ K survivors.
     pub fn degraded(&self) -> usize {
         self.count(HealthState::Degraded)
     }
 
+    /// Files with fewer than K surviving chunks.
     pub fn lost(&self) -> usize {
         self.count(HealthState::Lost)
     }
@@ -198,7 +251,7 @@ struct ChunkRecord {
 
 /// Whether a metadata map carries the EC TOTAL+SPLIT tags, under either
 /// the paper's generic (V1) or the prefixed (V2) key style.
-fn is_ec_meta(meta: &crate::catalog::meta::MetaMap) -> bool {
+pub(crate) fn is_ec_meta(meta: &crate::catalog::meta::MetaMap) -> bool {
     [MetaKeyStyle::V2Prefixed, MetaKeyStyle::V1Generic]
         .iter()
         .any(|s| meta.contains_key(s.total_key()) && meta.contains_key(s.split_key()))
@@ -208,6 +261,12 @@ fn is_ec_meta(meta: &crate::catalog::meta::MetaMap) -> bool {
 /// subtree walk).
 pub fn is_ec_dir(dfc: &Dfc, path: &str) -> bool {
     dfc.is_dir(path) && dfc.meta(path).map(is_ec_meta).unwrap_or(false)
+}
+
+/// [`is_ec_dir`] against the live sharded catalogue (one owner-shard
+/// metadata lookup).
+pub fn is_ec_dir_sharded(dfc: &ShardedDfc, path: &str) -> bool {
+    dfc.is_dir(path) && dfc.meta(path).map(|m| is_ec_meta(&m)).unwrap_or(false)
 }
 
 /// Find every EC file directory under `root`.
@@ -329,17 +388,35 @@ fn probe(layout: &FileLayout, registry: &SeRegistry, verify: bool) -> FileHealth
 
 /// Run a scrub over the catalogue.
 pub fn scrub(
-    dfc: &Arc<std::sync::Mutex<Dfc>>,
+    dfc: &ShardedDfc,
     registry: &Arc<SeRegistry>,
     opts: &ScrubOptions,
 ) -> Result<ScrubReport> {
-    // Snapshot phase: one catalogue lock, no SE traffic.
+    // Snapshot phase: clone the subtree out of each catalogue shard
+    // (each shard's lock held only for its own clone), then walk the
+    // snapshot with no locks at all — client operations are never
+    // blocked for the duration of the walk.
+    let snap = dfc.snapshot_subtree(&opts.root)?;
+    let mut dirs = find_ec_dirs(&snap, &opts.root)?;
+    // Sorted order makes the incremental cursor well-defined across runs
+    // (the walk's DFS order is not globally lexicographic).
+    dirs.sort();
+    if let Some(after) = &opts.resume_after {
+        dirs.retain(|d| d.as_str() > after.as_str());
+    }
+    let mut cursor = None;
+    if let Some(max) = opts.max_dirs {
+        let max = max.max(1);
+        if dirs.len() > max {
+            dirs.truncate(max);
+            cursor = dirs.last().cloned();
+        }
+    }
     let (layouts, skipped) = {
-        let dfc = dfc.lock().unwrap();
         let mut layouts = Vec::new();
         let mut skipped = Vec::new();
-        for lfn in find_ec_dirs(&dfc, &opts.root)? {
-            match snapshot(&dfc, &lfn) {
+        for lfn in dirs {
+            match snapshot(&snap, &lfn) {
                 Ok(l) => layouts.push(l),
                 Err(e) => skipped.push((lfn, e.to_string())),
             }
@@ -367,7 +444,7 @@ pub fn scrub(
         .collect();
     let files: Vec<FileHealth> = (0..layouts.len()).filter_map(|i| by_index.remove(&i)).collect();
 
-    let mut report = ScrubReport { files, skipped, ..Default::default() };
+    let mut report = ScrubReport { files, skipped, cursor, ..Default::default() };
     for f in &report.files {
         report.chunks_probed += f.n;
         report.chunks_missing += f.missing.len();

@@ -38,6 +38,7 @@ impl Default for Histogram {
 }
 
 impl Histogram {
+    /// Record one observation.
     pub fn record(&mut self, seconds: f64) {
         let idx = self
             .bounds
@@ -51,10 +52,12 @@ impl Histogram {
         self.max = self.max.max(seconds);
     }
 
+    /// Number of observations recorded.
     pub fn count(&self) -> u64 {
         self.total
     }
 
+    /// Mean of all observations (0 when empty).
     pub fn mean(&self) -> f64 {
         if self.total == 0 {
             0.0
@@ -63,6 +66,7 @@ impl Histogram {
         }
     }
 
+    /// Smallest observation (0 when empty).
     pub fn min(&self) -> f64 {
         if self.total == 0 {
             0.0
@@ -71,6 +75,7 @@ impl Histogram {
         }
     }
 
+    /// Largest observation.
     pub fn max(&self) -> f64 {
         self.max
     }
@@ -103,22 +108,27 @@ pub struct Metrics {
 }
 
 impl Metrics {
+    /// An empty registry.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Increment a counter by one.
     pub fn inc(&self, name: &str) {
         self.add(name, 1);
     }
 
+    /// Add to a counter.
     pub fn add(&self, name: &str, by: u64) {
         *self.counters.lock().unwrap().entry(name.to_string()).or_insert(0) += by;
     }
 
+    /// Set a gauge to its latest value.
     pub fn gauge(&self, name: &str, value: f64) {
         self.gauges.lock().unwrap().insert(name.to_string(), value);
     }
 
+    /// Record a duration under a timer histogram.
     pub fn time(&self, name: &str, seconds: f64) {
         self.timers
             .lock()
@@ -136,6 +146,7 @@ impl Metrics {
         out
     }
 
+    /// Read a counter (0 when never written).
     pub fn counter(&self, name: &str) -> u64 {
         self.counters.lock().unwrap().get(name).copied().unwrap_or(0)
     }

@@ -51,11 +51,13 @@ impl PlacementPolicy for RoundRobin {
 /// (an internal nonce advances the stream) but the overall sequence is
 /// reproducible from `seed`.
 pub struct Random {
+    /// Base seed for the reproducible stream.
     pub seed: u64,
     nonce: std::sync::atomic::AtomicU64,
 }
 
 impl Random {
+    /// A policy drawing reproducibly from `seed`.
     pub fn new(seed: u64) -> Self {
         Random { seed, nonce: std::sync::atomic::AtomicU64::new(0) }
     }
@@ -108,6 +110,7 @@ impl PlacementPolicy for Weighted {
 /// client's region when enough exist; otherwise pad with out-of-region SEs
 /// (still in vector order).
 pub struct RegionAware {
+    /// The client's region (preferred placement target).
     pub client_region: String,
     /// Minimum distinct SEs wanted before padding out-of-region (defaults
     /// to "all chunks on distinct SEs when possible" if set to n_chunks).

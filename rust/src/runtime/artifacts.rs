@@ -18,7 +18,9 @@ pub enum ArtifactOp {
 /// Lookup key: operation + geometry.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct ArtifactKey {
+    /// Which kernel.
     pub op: ArtifactOp,
+    /// Data chunks K.
     pub k: usize,
     /// Coding chunks (encode only; 0 for decode keys).
     pub m: usize,
@@ -27,10 +29,12 @@ pub struct ArtifactKey {
 }
 
 impl ArtifactKey {
+    /// Key for the encode kernel.
     pub fn encode(k: usize, m: usize, b: usize) -> Self {
         ArtifactKey { op: ArtifactOp::Encode, k, m, b }
     }
 
+    /// Key for the decode kernel.
     pub fn decode(k: usize, b: usize) -> Self {
         ArtifactKey { op: ArtifactOp::Decode, k, m: 0, b }
     }
@@ -96,18 +100,22 @@ impl ArtifactIndex {
         Ok(ArtifactIndex { files })
     }
 
+    /// HLO file for a key, when present.
     pub fn get(&self, key: &ArtifactKey) -> Option<&Path> {
         self.files.get(key).map(PathBuf::as_path)
     }
 
+    /// Number of indexed artifacts.
     pub fn len(&self) -> usize {
         self.files.len()
     }
 
+    /// Whether the index holds no artifacts.
     pub fn is_empty(&self) -> bool {
         self.files.is_empty()
     }
 
+    /// Every indexed key.
     pub fn keys(&self) -> impl Iterator<Item = &ArtifactKey> {
         self.files.keys()
     }

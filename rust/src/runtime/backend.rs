@@ -26,6 +26,7 @@ pub struct PjrtBackend {
 }
 
 impl PjrtBackend {
+    /// Wrap an engine, with the pure-rust backend as fallback.
     pub fn new(engine: Arc<PjrtEngine>) -> Self {
         PjrtBackend {
             engine,

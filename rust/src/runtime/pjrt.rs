@@ -34,24 +34,29 @@ pub struct PjrtEngine {
 
 #[cfg(not(feature = "pjrt"))]
 impl PjrtEngine {
+    /// Always fails: the `pjrt` feature is off.
     pub fn new(_dir: &Path) -> Result<Self> {
         Err(Error::Runtime(
             "PJRT support not compiled in (enable the `pjrt` cargo feature)".into(),
         ))
     }
 
+    /// Always fails: the `pjrt` feature is off.
     pub fn from_default_dir() -> Result<Self> {
         Self::new(&super::default_artifact_dir())
     }
 
+    /// Always false in the stub.
     pub fn supports(&self, _key: &ArtifactKey) -> bool {
         false
     }
 
+    /// Always empty in the stub.
     pub fn keys(&self) -> Vec<ArtifactKey> {
         Vec::new()
     }
 
+    /// Always fails: the `pjrt` feature is off.
     pub fn execute_u8(
         &self,
         _key: &ArtifactKey,

@@ -11,13 +11,16 @@ use crate::util::prng::Rng;
 /// One planned outage: `[start, end)` in simulation seconds.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Outage {
+    /// Outage start (simulation seconds).
     pub start: f64,
+    /// Outage end (exclusive).
     pub end: f64,
 }
 
 /// An availability schedule for one SE.
 #[derive(Clone, Debug, Default)]
 pub struct Schedule {
+    /// Planned outages, in start order.
     pub outages: Vec<Outage>,
 }
 

@@ -11,6 +11,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use super::{check_up, NetworkProfile, StorageElement};
 use crate::{Error, Result};
 
+/// A directory-backed SE.
 pub struct LocalSe {
     name: String,
     region: String,
@@ -23,6 +24,7 @@ pub struct LocalSe {
 }
 
 impl LocalSe {
+    /// Create (and mkdir) an SE rooted at `base`.
     pub fn new(name: impl Into<String>, region: impl Into<String>, base: impl Into<PathBuf>) -> Result<Self> {
         let base = base.into();
         std::fs::create_dir_all(&base)?;
@@ -44,6 +46,7 @@ impl LocalSe {
         self
     }
 
+    /// The SE's base directory.
     pub fn base(&self) -> &Path {
         &self.base
     }

@@ -18,6 +18,7 @@ pub struct MemSe {
 }
 
 impl MemSe {
+    /// An empty in-memory SE.
     pub fn new(name: impl Into<String>, region: impl Into<String>) -> Self {
         MemSe {
             name: name.into(),
@@ -29,6 +30,7 @@ impl MemSe {
         }
     }
 
+    /// Attach a simulated network profile (used by the DES, not slept).
     pub fn with_profile(mut self, profile: NetworkProfile) -> Self {
         self.profile = Some(profile);
         self

@@ -16,9 +16,13 @@ use crate::{Error, Result};
 /// Static facts about an SE, as consumed by placement policies.
 #[derive(Clone, Debug)]
 pub struct SeInfo {
+    /// SE name.
     pub name: String,
+    /// Geographical region label.
     pub region: String,
+    /// Whether the SE is currently reachable.
     pub available: bool,
+    /// Bytes currently stored (load-balancing input).
     pub used_bytes: u64,
 }
 
@@ -31,6 +35,7 @@ pub struct SeRegistry {
 }
 
 impl SeRegistry {
+    /// An empty registry.
     pub fn new() -> Self {
         Self::default()
     }
@@ -50,18 +55,22 @@ impl SeRegistry {
         Ok(())
     }
 
+    /// Number of registered SEs.
     pub fn len(&self) -> usize {
         self.ses.len()
     }
 
+    /// Whether no SE is registered.
     pub fn is_empty(&self) -> bool {
         self.ses.is_empty()
     }
 
+    /// Look an SE up by name.
     pub fn get(&self, name: &str) -> Option<Arc<dyn StorageElement>> {
         self.by_name.get(name).map(|&i| Arc::clone(&self.ses[i]))
     }
 
+    /// Every registered SE, in registration order.
     pub fn all(&self) -> Vec<Arc<dyn StorageElement>> {
         self.ses.iter().map(Arc::clone).collect()
     }

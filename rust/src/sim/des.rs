@@ -36,6 +36,7 @@ pub struct SimOutcome {
 }
 
 impl SimOutcome {
+    /// Indices of the jobs that completed, in completion order.
     pub fn completed_indices(&self) -> Vec<usize> {
         self.completions.iter().map(|(i, _)| *i).collect()
     }
@@ -48,6 +49,7 @@ pub struct TransferSim {
 }
 
 impl TransferSim {
+    /// A simulator over one network profile and worker count.
     pub fn new(profile: NetworkProfile, workers: usize) -> Self {
         TransferSim { profile, workers: workers.max(1) }
     }

@@ -89,9 +89,13 @@ pub fn ec_availability_mc(
 /// its availability at a given p.
 #[derive(Clone, Debug)]
 pub struct DurabilityRow {
+    /// Scheme label (e.g. `ec 10+5`, `2-rep`).
     pub scheme: String,
+    /// Storage overhead factor.
     pub overhead: f64,
+    /// Probability the file is readable.
     pub availability: f64,
+    /// `-log10(1 - availability)`.
     pub nines: f64,
 }
 
@@ -132,7 +136,9 @@ pub fn comparison_table(p: f64) -> Vec<DurabilityRow> {
 /// short.
 #[derive(Clone, Copy, Debug)]
 pub struct RepairSim {
+    /// Data chunks.
     pub k: usize,
+    /// Coding chunks.
     pub m: usize,
     /// Mean time between failures of one chunk's SE, in hours.
     pub se_mtbf_h: f64,
@@ -227,8 +233,11 @@ pub fn file_loss_probability_mc(sim: &RepairSim, trials: u64, seed: u64) -> f64 
 /// One row of the repair-aware table.
 #[derive(Clone, Debug)]
 pub struct RepairRow {
+    /// Scrub cadence, hours.
     pub scrub_interval_h: f64,
+    /// Repair mean-time-to-repair, hours.
     pub repair_mttr_h: f64,
+    /// Monte-Carlo file-loss probability over the mission.
     pub loss_probability: f64,
 }
 

@@ -14,11 +14,17 @@ use super::des::TransferSim;
 /// A named scenario configuration (one point on a paper figure).
 #[derive(Clone, Debug)]
 pub struct Scenario {
+    /// Network model for every transfer.
     pub profile: NetworkProfile,
+    /// Logical file size in bytes.
     pub file_size: u64,
+    /// Data chunks.
     pub k: usize,
+    /// Coding chunks.
     pub m: usize,
+    /// Stripe width in bytes.
     pub stripe_b: usize,
+    /// Transfer worker threads.
     pub workers: usize,
     /// Client-side encode throughput, bytes of input per second (0 =
     /// instantaneous; use a measured value or the paper-era zfec figure).
@@ -28,6 +34,7 @@ pub struct Scenario {
 }
 
 impl Scenario {
+    /// The paper's testbed scenario (10+5, Table 1 network).
     pub fn paper(file_size: u64, workers: usize) -> Self {
         Scenario {
             profile: NetworkProfile::paper_testbed(),

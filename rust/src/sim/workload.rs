@@ -10,9 +10,11 @@ use crate::util::prng::Rng;
 /// A class of files in a workload mix.
 #[derive(Clone, Debug)]
 pub struct FileClass {
+    /// Class name (e.g. `raw`, `user`).
     pub label: &'static str,
     /// Log-uniform size range [min, max] bytes.
     pub min_bytes: u64,
+    /// Upper bound of the size range.
     pub max_bytes: u64,
     /// Relative weight in the mix.
     pub weight: f64,
@@ -31,8 +33,11 @@ pub fn small_vo_mix() -> Vec<FileClass> {
 /// One generated file: name, class label, contents.
 #[derive(Clone, Debug)]
 pub struct WorkloadFile {
+    /// Generated file name.
     pub name: String,
+    /// The class it was drawn from.
     pub class: &'static str,
+    /// Pseudorandom (incompressible) contents.
     pub data: Vec<u8>,
 }
 

@@ -15,14 +15,17 @@ use crate::Result;
 /// Pool sizing: `workers == 1` reproduces the paper's serial tool.
 #[derive(Clone, Copy, Debug)]
 pub struct PoolConfig {
+    /// Worker threads pulling jobs off the queue.
     pub workers: usize,
 }
 
 impl PoolConfig {
+    /// One worker (the paper's serial proof-of-concept).
     pub fn serial() -> Self {
         PoolConfig { workers: 1 }
     }
 
+    /// `workers` threads (clamped to ≥ 1).
     pub fn parallel(workers: usize) -> Self {
         PoolConfig { workers: workers.max(1) }
     }
@@ -46,6 +49,7 @@ pub struct PoolOutcome<T> {
 }
 
 impl<T> PoolOutcome<T> {
+    /// How many jobs succeeded.
     pub fn success_count(&self) -> usize {
         self.successes.len()
     }
@@ -57,6 +61,7 @@ pub struct WorkPool {
 }
 
 impl WorkPool {
+    /// A pool with the given sizing.
     pub fn new(config: PoolConfig) -> Self {
         WorkPool { config }
     }

@@ -24,6 +24,7 @@ impl RetryPolicy {
         RetryPolicy { max_attempts: 3, fallback_se: true }
     }
 
+    /// Whether another attempt is allowed after `attempts_made`.
     pub fn retries_left(&self, attempts_made: usize) -> bool {
         attempts_made < self.max_attempts
     }

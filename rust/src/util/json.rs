@@ -10,6 +10,7 @@ use std::fmt;
 /// A JSON value. Object keys are ordered (BTreeMap) so serialization is
 /// deterministic — snapshot files diff cleanly.
 #[derive(Clone, Debug, PartialEq)]
+#[allow(missing_docs)] // variants mirror the JSON grammar one-to-one
 pub enum Json {
     Null,
     Bool(bool),
@@ -20,6 +21,7 @@ pub enum Json {
 }
 
 impl Json {
+    /// The string payload, if this is a `Str`.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -27,6 +29,7 @@ impl Json {
         }
     }
 
+    /// The numeric payload, if this is a `Num`.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -34,6 +37,7 @@ impl Json {
         }
     }
 
+    /// The numeric payload as a non-negative integer, if it is one.
     pub fn as_u64(&self) -> Option<u64> {
         match self {
             Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 => Some(*n as u64),
@@ -41,6 +45,7 @@ impl Json {
         }
     }
 
+    /// The boolean payload, if this is a `Bool`.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -48,6 +53,7 @@ impl Json {
         }
     }
 
+    /// The element slice, if this is an `Arr`.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -55,6 +61,7 @@ impl Json {
         }
     }
 
+    /// The key → value map, if this is an `Obj`.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(o) => Some(o),
@@ -67,14 +74,17 @@ impl Json {
         self.as_obj().and_then(|o| o.get(key))
     }
 
+    /// Build an object from (key, value) pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Build a string value.
     pub fn str(s: impl Into<String>) -> Json {
         Json::Str(s.into())
     }
 
+    /// Build a numeric value.
     pub fn num(n: impl Into<f64>) -> Json {
         Json::Num(n.into())
     }
@@ -92,9 +102,12 @@ impl Json {
     }
 }
 
+/// A parse failure, with the byte offset it occurred at.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct JsonError {
+    /// Byte offset of the error in the input.
     pub offset: usize,
+    /// What went wrong.
     pub msg: String,
 }
 

@@ -41,10 +41,12 @@ impl Default for Sha256 {
 }
 
 impl Sha256 {
+    /// A fresh hasher state.
     pub fn new() -> Self {
         Sha256 { h: H0, buf: [0u8; 64], buf_len: 0, len: 0 }
     }
 
+    /// Absorb more message bytes.
     pub fn update(&mut self, mut data: &[u8]) {
         self.len = self.len.wrapping_add(data.len() as u64);
         if self.buf_len > 0 {
@@ -70,6 +72,7 @@ impl Sha256 {
         }
     }
 
+    /// Pad and produce the 32-byte digest.
     pub fn finalize(mut self) -> [u8; 32] {
         let bit_len = self.len.wrapping_mul(8);
         // Padding: 0x80, zeros, 64-bit big-endian length.

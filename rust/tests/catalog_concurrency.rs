@@ -1,0 +1,187 @@
+//! Concurrency over the sharded catalogue: parallel uploaders and readers
+//! against `ShardedDfc` while scrub-style snapshot scans walk the tree —
+//! no lost updates, and every snapshot internally consistent.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use drs::catalog::{dfc::DirItem, FileEntry, MetaValue, ShardedDfc};
+use drs::dfm::{GetOptions, PutOptions, TestCluster};
+use drs::ec::EcParams;
+use drs::maintenance::{Maintainer, ScrubOptions};
+
+const WRITERS: usize = 4;
+const FILES_PER_WRITER: usize = 40;
+const CHUNKS: usize = 6;
+
+fn ec_dir(w: usize, i: usize) -> String {
+    format!("/vo/client{w}/f{i}.ec")
+}
+
+/// Register one complete EC-file directory: meta, chunk files, replicas,
+/// then a `complete` marker. The marker is set *last*, so any snapshot
+/// that sees it must — by the per-shard atomicity of the clone plus the
+/// directory-affinity invariant — also see the full chunk set.
+fn populate(dfc: &ShardedDfc, w: usize, i: usize) {
+    let dir = ec_dir(w, i);
+    dfc.mkdir_p(&dir).unwrap();
+    dfc.set_meta(&dir, "drs_ec_total", MetaValue::Int(CHUNKS as i64)).unwrap();
+    dfc.set_meta(&dir, "drs_ec_split", MetaValue::Int(4)).unwrap();
+    for c in 0..CHUNKS {
+        let path = format!("{dir}/chunk{c}");
+        dfc.add_file(&path, FileEntry { size: 100, ..Default::default() }).unwrap();
+        dfc.register_replica(&path, &format!("SE-{c:02}"), &path).unwrap();
+    }
+    dfc.set_meta(&dir, "complete", MetaValue::Int(1)).unwrap();
+}
+
+#[test]
+fn parallel_writers_and_readers_with_snapshot_scans() {
+    let dfc = ShardedDfc::new(8);
+    let done = AtomicBool::new(false);
+
+    std::thread::scope(|s| {
+        let writers: Vec<_> = (0..WRITERS)
+            .map(|w| {
+                let dfc = &dfc;
+                s.spawn(move || {
+                    for i in 0..FILES_PER_WRITER {
+                        populate(dfc, w, i);
+                    }
+                })
+            })
+            .collect();
+
+        // Readers hammer point lookups on whatever exists yet.
+        for w in 0..2usize {
+            let dfc = &dfc;
+            let done = &done;
+            s.spawn(move || {
+                while !done.load(Ordering::Relaxed) {
+                    let _ = dfc.list_dir("/");
+                    let _ = dfc.meta(&ec_dir(w, 0));
+                    let _ = dfc.replicas(&format!("{}/chunk0", ec_dir(w, 0)));
+                    let _ = dfc.exists(&ec_dir(w, 1));
+                }
+            });
+        }
+
+        // The scrubber: repeated snapshot scans; every directory carrying
+        // the `complete` marker must be fully populated in the snapshot.
+        {
+            let dfc = &dfc;
+            let done = &done;
+            s.spawn(move || {
+                let mut scans = 0usize;
+                while !done.load(Ordering::Relaxed) || scans == 0 {
+                    let snap = dfc.snapshot_subtree("/").unwrap();
+                    let complete =
+                        snap.dirs_where("/", |_, m| m.contains_key("complete")).unwrap();
+                    for d in &complete {
+                        assert_eq!(
+                            snap.get_meta(d, "drs_ec_total").unwrap(),
+                            Some(&MetaValue::Int(CHUNKS as i64)),
+                            "snapshot lost the EC metadata of `{d}`"
+                        );
+                        let files = snap
+                            .list_dir(d)
+                            .unwrap()
+                            .iter()
+                            .filter(|item| matches!(item, DirItem::File(_)))
+                            .count();
+                        assert_eq!(files, CHUNKS, "snapshot caught `{d}` mid-population");
+                        for c in 0..CHUNKS {
+                            assert_eq!(
+                                snap.replicas(&format!("{d}/chunk{c}")).unwrap().len(),
+                                1,
+                                "snapshot lost a replica record under `{d}`"
+                            );
+                        }
+                    }
+                    scans += 1;
+                }
+            });
+        }
+
+        for h in writers {
+            h.join().unwrap();
+        }
+        done.store(true, Ordering::Relaxed);
+    });
+
+    // No lost updates: every write made by every thread is present.
+    for w in 0..WRITERS {
+        for i in 0..FILES_PER_WRITER {
+            let dir = ec_dir(w, i);
+            assert_eq!(
+                dfc.get_meta(&dir, "complete").unwrap(),
+                Some(MetaValue::Int(1)),
+                "`{dir}` lost its completion marker"
+            );
+            for c in 0..CHUNKS {
+                let f = dfc.file(&format!("{dir}/chunk{c}")).unwrap();
+                assert_eq!(f.replicas.len(), 1, "`{dir}/chunk{c}` lost its replica");
+            }
+        }
+    }
+    let (dirs, files) = dfc.counts();
+    assert_eq!(files, WRITERS * FILES_PER_WRITER * CHUNKS);
+    assert_eq!(dirs, 1 + WRITERS + WRITERS * FILES_PER_WRITER); // /vo + clients + EC dirs
+}
+
+#[test]
+fn shim_uploads_race_background_scrub() {
+    let cluster = TestCluster::builder()
+        .ses(6)
+        .ec(EcParams::new(4, 2).unwrap())
+        .build()
+        .unwrap();
+    let shim = cluster.shim();
+    let opts = PutOptions::default()
+        .with_params(EcParams::new(4, 2).unwrap())
+        .with_stripe(1024);
+
+    std::thread::scope(|s| {
+        let uploads: Vec<_> = (0..3usize)
+            .map(|t| {
+                let shim = &shim;
+                let opts = &opts;
+                s.spawn(move || {
+                    for i in 0..5usize {
+                        let lfn = format!("/vo/up{t}/f{i}.bin");
+                        let data: Vec<u8> =
+                            (0..10_000usize).map(|b| ((b + t * 7 + i) % 251) as u8).collect();
+                        shim.put_bytes(&lfn, &data, opts).unwrap();
+                    }
+                })
+            })
+            .collect();
+        // Scrub continuously while the uploads run. Mid-upload files may
+        // transiently show up skipped or degraded; the scrub itself must
+        // never fail or block the uploads.
+        let scrubs = s.spawn(|| {
+            let maintainer = Maintainer::new(&shim);
+            for _ in 0..5 {
+                maintainer.scrub(&ScrubOptions::default().shallow()).unwrap();
+            }
+        });
+        for h in uploads {
+            h.join().unwrap();
+        }
+        scrubs.join().unwrap();
+    });
+
+    // Settled state: everything healthy and readable.
+    let report = Maintainer::new(&shim).scrub(&ScrubOptions::default()).unwrap();
+    assert_eq!(report.healthy(), 15, "{}", report.summary());
+    assert!(report.skipped.is_empty(), "{:?}", report.skipped);
+    for t in 0..3usize {
+        for i in 0..5usize {
+            let want: Vec<u8> =
+                (0..10_000usize).map(|b| ((b + t * 7 + i) % 251) as u8).collect();
+            let got = shim
+                .get_bytes(&format!("/vo/up{t}/f{i}.bin"), &GetOptions::default())
+                .unwrap();
+            assert_eq!(got, want);
+        }
+    }
+}

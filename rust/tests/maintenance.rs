@@ -83,7 +83,6 @@ fn outage_scrub_repair_cycle_restores_full_health() {
     // bit-identical while the outage persists.
     {
         let dfc = cluster.dfc();
-        let dfc = dfc.lock().unwrap();
         for name in dead {
             for (path, _) in dfc.files_with_replica_on(name) {
                 panic!("`{path}` still has a replica registered on dead `{name}`");
@@ -117,11 +116,7 @@ fn drain_leaves_se_empty_and_files_readable() {
     let se = cluster.registry().get("SE-03").unwrap();
     assert_eq!(se.used_bytes(), 0);
     assert_eq!(se.list("").unwrap().len(), 0);
-    {
-        let dfc = cluster.dfc();
-        let dfc = dfc.lock().unwrap();
-        assert!(dfc.files_with_replica_on("SE-03").is_empty());
-    }
+    assert!(cluster.dfc().files_with_replica_on("SE-03").is_empty());
 
     // …while every file stays readable (even with the drained SE then
     // taken offline for decommissioning).
@@ -148,11 +143,7 @@ fn drain_of_dead_se_falls_back_to_ec_repair() {
     assert!(report.chunks_rebuilt > 0, "{report:?}");
     assert!(report.failures.is_empty(), "{report:?}");
 
-    {
-        let dfc = cluster.dfc();
-        let dfc = dfc.lock().unwrap();
-        assert!(dfc.files_with_replica_on("SE-02").is_empty());
-    }
+    assert!(cluster.dfc().files_with_replica_on("SE-02").is_empty());
     for (lfn, data) in &files {
         let back = shim.get_bytes(lfn, &GetOptions::default()).unwrap();
         assert_eq!(&back, data);

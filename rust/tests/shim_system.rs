@@ -109,11 +109,13 @@ fn ec_vs_replication_storage_and_resilience() {
     assert!((1.99..2.01).contains(&rep_overhead), "{rep_overhead}");
 
     // Resilience: kill the two SEs that hold the replicas.
-    let rep_ses: Vec<String> = {
-        let dfc = cluster.dfc();
-        let dfc = dfc.lock().unwrap();
-        dfc.replicas("/vo/rep-copy").unwrap().iter().map(|r| r.se.clone()).collect()
-    };
+    let rep_ses: Vec<String> = cluster
+        .dfc()
+        .replicas("/vo/rep-copy")
+        .unwrap()
+        .iter()
+        .map(|r| r.se.clone())
+        .collect();
     for se in &rep_ses {
         cluster.kill_se(se);
     }
@@ -223,7 +225,6 @@ fn catalog_metadata_survives_shim_operations() {
     cluster.shim().put_bytes("/vo/m1", &data, &opts_4_2()).unwrap();
     cluster.shim().put_bytes("/vo/m2", &data, &opts_4_2()).unwrap();
     let dfc = cluster.dfc();
-    let dfc = dfc.lock().unwrap();
     use drs::catalog::MetaValue;
     // find by EC metadata: both files are 4+2
     let hits = dfc.find_dirs_by_meta(&[("drs_ec_total", MetaValue::Int(6))]);
