@@ -15,6 +15,12 @@ echo "== tier-1: build + test =="
 cargo build --release
 cargo test -q
 
+echo "== catalogue journal recovery tests (crash-consistency gate) =="
+# Intentionally re-runs a suite the line above already covered: the
+# journal recovery tests gate crash consistency and must fail loudly,
+# by name, even if the tier-1 invocation is ever narrowed.
+cargo test -q --test catalog_journal
+
 echo "== docs (deny warnings, missing_docs enforced) =="
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 

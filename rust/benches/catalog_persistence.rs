@@ -1,0 +1,137 @@
+//! Catalogue persistence: per-op journal append vs legacy whole-snapshot
+//! save, across namespace sizes, plus recovery time vs journal length.
+//!
+//! The old persistence model rewrote the entire `catalog.json` after
+//! every mutating command — O(namespace) per op. The write-ahead journal
+//! appends O(1) checksummed records instead. This bench quantifies both
+//! sides of the trade:
+//!
+//! * **append vs snapshot** — time to persist one more file-registration
+//!   (mkdir + meta + chunk adds + replicas) under each model, at 1k, 10k
+//!   and 100k files already in the namespace. Snapshot cost grows
+//!   linearly; append cost stays flat.
+//! * **recovery vs journal length** — time for `open_journaled` to
+//!   replay a journal of N ops with no checkpoint, versus the same
+//!   namespace recovered from a compacted (checkpoint-only) journal.
+//!
+//! Set `DRS_BENCH_QUICK=1` to cap the namespace at 10k files.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use drs::catalog::{FileEntry, JournalConfig, MetaValue, ShardedDfc};
+
+const CHUNKS: usize = 6;
+const SHARDS: usize = 8;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(format!(
+        "drs-bench-persist-{tag}-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&p);
+    p
+}
+
+/// Catalogue footprint of one EC upload: 1 dir + meta + CHUNKS files
+/// with one replica each.
+fn register_file(dfc: &ShardedDfc, i: usize) {
+    let dir = format!("/vo/data/f{i}.ec");
+    dfc.mkdir_p(&dir).unwrap();
+    dfc.set_meta(&dir, "drs_ec_total", MetaValue::Int(CHUNKS as i64)).unwrap();
+    for c in 0..CHUNKS {
+        let path = format!("{dir}/chunk{c}");
+        dfc.add_file(&path, FileEntry { size: 1 << 20, ..Default::default() }).unwrap();
+        dfc.register_replica(&path, &format!("SE-{:02}", c % 4), &path).unwrap();
+    }
+}
+
+fn populate(dfc: &ShardedDfc, files: usize) {
+    for i in 0..files {
+        register_file(dfc, i);
+    }
+}
+
+fn append_vs_snapshot(files: usize) {
+    // Legacy model: in-memory store + whole-namespace save per op.
+    let plain = ShardedDfc::new(SHARDS);
+    populate(&plain, files);
+    let snap_path = tmpdir(&format!("snap-{files}")).with_extension("json");
+    let t0 = Instant::now();
+    const SNAP_OPS: usize = 5;
+    for i in 0..SNAP_OPS {
+        register_file(&plain, files + i);
+        plain.save(&snap_path).unwrap();
+    }
+    let snapshot_ms = t0.elapsed().as_secs_f64() * 1e3 / SNAP_OPS as f64;
+    let snap_bytes = std::fs::metadata(&snap_path).map(|m| m.len()).unwrap_or(0);
+    let _ = std::fs::remove_file(&snap_path);
+
+    // Journal model: same namespace, O(1) records per op.
+    let jdir = tmpdir(&format!("journal-{files}"));
+    let journaled =
+        ShardedDfc::open_journaled(&jdir, SHARDS, JournalConfig::default()).unwrap();
+    populate(&journaled, files);
+    let t0 = Instant::now();
+    const APPEND_OPS: usize = 200;
+    for i in 0..APPEND_OPS {
+        register_file(&journaled, files + i);
+    }
+    let append_ms = t0.elapsed().as_secs_f64() * 1e3 / APPEND_OPS as f64;
+    let _ = std::fs::remove_dir_all(&jdir);
+
+    println!(
+        "{files:>7} {snapshot_ms:>16.3} {append_ms:>15.4} {:>9.0}x {:>12}",
+        snapshot_ms / append_ms.max(1e-9),
+        drs::util::fmt_bytes(snap_bytes)
+    );
+}
+
+fn recovery(files: usize) {
+    // Long-tail journal: no checkpoints at all (worst-case replay).
+    let jdir = tmpdir(&format!("recover-{files}"));
+    let cfg = JournalConfig { checkpoint_ops: u64::MAX, ..Default::default() };
+    let dfc = ShardedDfc::open_journaled(&jdir, SHARDS, cfg).unwrap();
+    populate(&dfc, files);
+    let ops = files * (2 + 2 * CHUNKS); // mkdir + meta + adds + replicas
+    drop(dfc);
+    let t0 = Instant::now();
+    let recovered = ShardedDfc::open_journaled(&jdir, SHARDS, cfg).unwrap();
+    let replay_ms = t0.elapsed().as_secs_f64() * 1e3;
+    assert_eq!(recovered.counts().1, files * CHUNKS);
+
+    // Compacted journal: one checkpoint per shard, empty tail.
+    recovered.compact_journal(u64::MAX).unwrap();
+    drop(recovered);
+    let t0 = Instant::now();
+    let recovered = ShardedDfc::open_journaled(&jdir, SHARDS, cfg).unwrap();
+    let ckpt_ms = t0.elapsed().as_secs_f64() * 1e3;
+    assert_eq!(recovered.counts().1, files * CHUNKS);
+    let _ = std::fs::remove_dir_all(&jdir);
+
+    println!("{files:>7} {ops:>9} {replay_ms:>14.1} {ckpt_ms:>16.1}");
+}
+
+fn main() {
+    let quick = std::env::var("DRS_BENCH_QUICK").is_ok();
+    let sizes: &[usize] = if quick { &[1_000, 10_000] } else { &[1_000, 10_000, 100_000] };
+
+    println!("# per-op persistence cost: whole-snapshot save vs journal append");
+    println!(
+        "{:>7} {:>16} {:>15} {:>10} {:>12}",
+        "files", "snapshot ms/op", "journal ms/op", "speedup", "snap size"
+    );
+    for &files in sizes {
+        append_vs_snapshot(files);
+    }
+
+    println!();
+    println!("# recovery time vs journal length (8 shards)");
+    println!(
+        "{:>7} {:>9} {:>14} {:>16}",
+        "files", "ops", "replay ms", "checkpointed ms"
+    );
+    for &files in sizes {
+        recovery(files);
+    }
+}

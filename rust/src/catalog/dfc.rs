@@ -564,10 +564,13 @@ impl Dfc {
         Ok(Dfc { root, tag_index })
     }
 
-    /// Persist a snapshot to disk.
+    /// Persist a snapshot to disk (crash-safe: temp file + fsync +
+    /// rename). This whole-namespace format is the *legacy* persistence
+    /// path — journal-backed workspaces only read it once, during
+    /// migration — but it remains the interchange format for
+    /// checkpoints, `save`/`load` round-trips and re-partitioning.
     pub fn save(&self, path: &std::path::Path) -> Result<()> {
-        std::fs::write(path, self.to_json().to_string())?;
-        Ok(())
+        crate::util::atomic_write(path, self.to_json().to_string().as_bytes())
     }
 
     /// Load a snapshot from disk.

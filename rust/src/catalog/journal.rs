@@ -1,0 +1,915 @@
+//! Per-shard write-ahead journal: incremental, crash-consistent
+//! catalogue persistence.
+//!
+//! The sharded namespace used to persist as one whole-namespace
+//! `catalog.json` rewritten after every mutating command — O(namespace)
+//! per operation, and a crash mid-write tore the only copy. This module
+//! inverts the model: every shard mutation is encoded as a typed
+//! [`CatalogOp`] and appended to the owning shard's journal, so a
+//! mutating command costs O(1) journal records and an acknowledged op
+//! has been written to the journal file before the command returns.
+//!
+//! **On-disk layout.** Each shard owns a directory `shard-<i>/` holding
+//! append-only segment files `seg-<n>.log`. A segment is a sequence of
+//! records framed as
+//!
+//! ```text
+//! [4-byte BE payload length][8-byte checksum][JSON payload]
+//! ```
+//!
+//! where the checksum is the first 8 bytes of the SHA-256 of the
+//! payload. A record's payload is either one [`CatalogOp`] or a
+//! *checkpoint* — a full [`Dfc`] snapshot of the shard
+//! (`{"op":"checkpoint","dfc":…}`). Checkpoints always open a fresh
+//! segment (written via [`crate::util::atomic_write`]), so every segment
+//! older than the newest checkpoint segment is sealed garbage.
+//!
+//! **Recovery** ([`ShardJournal::open`]) starts at the newest segment
+//! that opens with a valid checkpoint record (older segments are sealed
+//! garbage and are never read, so corruption there cannot touch live
+//! state): the checkpoint resets the in-memory shard to the embedded
+//! snapshot and every later op record replays on top. The first torn or
+//! bad-checksum record marks the crash frontier: the segment is
+//! truncated at that offset, any later segments are deleted, and
+//! appends resume from the cut. Everything acknowledged before the
+//! crash survives; a half-written tail record (the only thing a crash
+//! between `write` calls can produce) is dropped.
+//!
+//! **Compaction.** Appends auto-checkpoint every
+//! [`JournalConfig::checkpoint_ops`] ops (bounding replay length), and
+//! [`ShardJournal::gc`] deletes sealed pre-checkpoint segments under a
+//! byte budget so reclamation never stalls a client for more than one
+//! segment's unlink. `drs catalog compact` forces both.
+//!
+//! **Durability model.** Appends reach the journal file (the kernel)
+//! before the op is acknowledged, so a killed or crashed *process*
+//! loses nothing acknowledged. Appends are *not* individually fsync'd —
+//! the write path stays O(1) syscalls — so against power loss the
+//! window is the OS page-cache flush interval; segment rolls,
+//! checkpoints and [`crate::util::atomic_write`]-backed state files are
+//! fsync'd, and a partially flushed tail is exactly what torn-tail
+//! truncation cleans up.
+//!
+//! **Failed writes.** Ops are applied in memory first and journaled
+//! second (application is also validation). If an append fails, the
+//! partial record is rewound off the segment — or, if the rewind also
+//! fails, the journal is *poisoned* (further appends refused) until a
+//! checkpoint opens a clean segment — and the store immediately
+//! attempts a re-sync checkpoint so the journal catches back up with
+//! memory; the error is surfaced to the caller either way. During
+//! recovery, a checksum-valid record that fails to *parse* aborts the
+//! open with an error rather than truncating (version skew / writer
+//! bug, never a crash artifact); one that parses but no longer
+//! *applies* — possible only downstream of such a surfaced write
+//! failure — is skipped and counted (`catalog.journal.replay_skipped`).
+
+use std::fs::{self, File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+use crate::util::sha256;
+use crate::{Error, Result};
+
+use super::dfc::Dfc;
+use super::entry::FileEntry;
+use super::meta::MetaValue;
+
+/// Bytes of framing before each record payload (length + checksum).
+const RECORD_HEADER: usize = 12;
+
+/// Checkpoint payloads are serialized with this fixed prefix (the `op`
+/// key first, by hand — [`Json`] object order is alphabetical) so the
+/// recovery scan can identify a checkpoint-opening segment cheaply.
+const CHECKPOINT_PREFIX: &[u8] = b"{\"op\":\"checkpoint\"";
+
+/// Default segment roll threshold (1 MiB).
+pub const DEFAULT_SEGMENT_BYTES: u64 = 1 << 20;
+
+/// Default op count between automatic checkpoints.
+pub const DEFAULT_CHECKPOINT_OPS: u64 = 1024;
+
+/// Journal tuning knobs (`drs.json`: `journal_segment_bytes`,
+/// `journal_checkpoint_ops`; env: `DRS_JOURNAL_SEGMENT_BYTES`,
+/// `DRS_JOURNAL_CHECKPOINT_OPS`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct JournalConfig {
+    /// Roll to a new segment once the current one would exceed this.
+    pub segment_bytes: u64,
+    /// Write a checkpoint after this many appended ops.
+    pub checkpoint_ops: u64,
+}
+
+impl Default for JournalConfig {
+    fn default() -> Self {
+        JournalConfig {
+            segment_bytes: DEFAULT_SEGMENT_BYTES,
+            checkpoint_ops: DEFAULT_CHECKPOINT_OPS,
+        }
+    }
+}
+
+/// One mutation of a single catalogue shard, as journaled and replayed.
+///
+/// Every [`super::ShardedDfc`] write is lowered to one of these (the
+/// broadcast ops — `mkdir_p`, `remove_dir` — to one per shard touched),
+/// applied in memory and appended to the owning shard's journal under
+/// the same lock, so replay order always matches apply order.
+#[derive(Clone, Debug)]
+pub enum CatalogOp {
+    /// `createDirectory -p` (idempotent).
+    PutDir {
+        /// Absolute directory path.
+        path: String,
+    },
+    /// `addFile`: register a logical file under an existing directory.
+    PutFile {
+        /// Absolute file path.
+        path: String,
+        /// The full file record (size, checksum, replicas, metadata).
+        entry: FileEntry,
+    },
+    /// Remove the entry at `path` (file or directory subtree); replay
+    /// is a no-op when the entry is already gone, so compensating
+    /// removes and broadcast removes replay cleanly.
+    Remove {
+        /// Absolute path of the entry to drop.
+        path: String,
+    },
+    /// `registerReplica`.
+    AddReplica {
+        /// Absolute file path.
+        path: String,
+        /// SE holding the new replica.
+        se: String,
+        /// Physical file name on that SE.
+        pfn: String,
+    },
+    /// `removeReplica`.
+    RemoveReplica {
+        /// Absolute file path.
+        path: String,
+        /// SE whose replica record is dropped.
+        se: String,
+    },
+    /// `setMetadata` on a file or directory.
+    SetMeta {
+        /// Absolute path of the entry.
+        path: String,
+        /// Metadata key.
+        key: String,
+        /// Metadata value.
+        value: MetaValue,
+    },
+}
+
+impl CatalogOp {
+    /// Serialize to the journal's JSON payload form.
+    pub fn to_json(&self) -> Json {
+        match self {
+            CatalogOp::PutDir { path } => {
+                Json::obj(vec![("op", Json::str("put_dir")), ("path", Json::str(path.clone()))])
+            }
+            CatalogOp::PutFile { path, entry } => Json::obj(vec![
+                ("op", Json::str("put_file")),
+                ("path", Json::str(path.clone())),
+                ("entry", entry.to_json()),
+            ]),
+            CatalogOp::Remove { path } => {
+                Json::obj(vec![("op", Json::str("remove")), ("path", Json::str(path.clone()))])
+            }
+            CatalogOp::AddReplica { path, se, pfn } => Json::obj(vec![
+                ("op", Json::str("add_replica")),
+                ("path", Json::str(path.clone())),
+                ("se", Json::str(se.clone())),
+                ("pfn", Json::str(pfn.clone())),
+            ]),
+            CatalogOp::RemoveReplica { path, se } => Json::obj(vec![
+                ("op", Json::str("remove_replica")),
+                ("path", Json::str(path.clone())),
+                ("se", Json::str(se.clone())),
+            ]),
+            CatalogOp::SetMeta { path, key, value } => Json::obj(vec![
+                ("op", Json::str("set_meta")),
+                ("path", Json::str(path.clone())),
+                ("key", Json::str(key.clone())),
+                ("value", value.to_json()),
+            ]),
+        }
+    }
+
+    /// Parse from the journal's JSON payload form (`None` on any
+    /// malformed record — the caller treats that as a bad record).
+    pub fn from_json(j: &Json) -> Option<CatalogOp> {
+        let path = j.get("path")?.as_str()?.to_string();
+        Some(match j.get("op")?.as_str()? {
+            "put_dir" => CatalogOp::PutDir { path },
+            "put_file" => {
+                CatalogOp::PutFile { path, entry: FileEntry::from_json(j.get("entry")?)? }
+            }
+            "remove" => CatalogOp::Remove { path },
+            "add_replica" => CatalogOp::AddReplica {
+                path,
+                se: j.get("se")?.as_str()?.to_string(),
+                pfn: j.get("pfn")?.as_str()?.to_string(),
+            },
+            "remove_replica" => CatalogOp::RemoveReplica {
+                path,
+                se: j.get("se")?.as_str()?.to_string(),
+            },
+            "set_meta" => CatalogOp::SetMeta {
+                path,
+                key: j.get("key")?.as_str()?.to_string(),
+                value: MetaValue::from_json(j.get("value")?)?,
+            },
+            _ => return None,
+        })
+    }
+
+    /// Replay this op against a shard's in-memory state.
+    pub fn apply(&self, dfc: &mut Dfc) -> Result<()> {
+        match self {
+            CatalogOp::PutDir { path } => dfc.mkdir_p(path),
+            CatalogOp::PutFile { path, entry } => dfc.add_file(path, entry.clone()),
+            CatalogOp::Remove { path } => {
+                if dfc.is_file(path) {
+                    dfc.remove_file(path).map(|_| ())
+                } else if dfc.is_dir(path) {
+                    dfc.remove_dir(path)
+                } else {
+                    Ok(()) // already gone: removes are idempotent on replay
+                }
+            }
+            CatalogOp::AddReplica { path, se, pfn } => dfc.register_replica(path, se, pfn),
+            CatalogOp::RemoveReplica { path, se } => dfc.remove_replica(path, se),
+            CatalogOp::SetMeta { path, key, value } => dfc.set_meta(path, key, value.clone()),
+        }
+    }
+}
+
+/// What [`ShardJournal::open`] reconstructed.
+pub struct Recovery {
+    /// The shard's state: latest checkpoint + replayed tail.
+    pub state: Dfc,
+    /// Tail ops replayed on top of the last checkpoint loaded.
+    pub ops_replayed: u64,
+    /// Whether a torn/bad-checksum tail was truncated away.
+    pub truncated: bool,
+}
+
+/// Per-shard journal health, for `drs catalog stats`.
+#[derive(Clone, Debug, Default)]
+pub struct ShardJournalStats {
+    /// Segment files currently on disk.
+    pub segments: u64,
+    /// Bytes in the newest-checkpoint segment and everything after it —
+    /// what recovery actually reads.
+    pub live_bytes: u64,
+    /// Bytes in sealed pre-checkpoint segments, reclaimable by GC.
+    pub garbage_bytes: u64,
+    /// Segment index of the newest checkpoint, if any exists.
+    pub last_checkpoint_seg: Option<u64>,
+    /// Ops appended since that checkpoint (the replay length).
+    pub ops_since_checkpoint: u64,
+}
+
+/// What a [`super::ShardedDfc::compact_journal`] pass did.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CompactReport {
+    /// Shards that received a fresh checkpoint.
+    pub checkpoints: u64,
+    /// Sealed segments deleted.
+    pub segments_removed: u64,
+    /// Bytes reclaimed by those deletions.
+    pub bytes_removed: u64,
+}
+
+/// The append-only journal of one catalogue shard. See the module docs
+/// for the record format and recovery procedure.
+pub struct ShardJournal {
+    dir: PathBuf,
+    cfg: JournalConfig,
+    seg_index: u64,
+    writer: File,
+    seg_bytes: u64,
+    ops_since_ckpt: u64,
+    last_ckpt_seg: Option<u64>,
+    /// Set when a failed append left bytes we could not rewind; further
+    /// appends are refused until a checkpoint opens a clean segment.
+    poisoned: bool,
+}
+
+fn seg_path(dir: &Path, n: u64) -> PathBuf {
+    dir.join(format!("seg-{n}.log"))
+}
+
+/// Segment indices present in `dir`, ascending.
+fn list_segments(dir: &Path) -> Result<Vec<u64>> {
+    let mut out = Vec::new();
+    for entry in fs::read_dir(dir)? {
+        let name = entry?.file_name();
+        let Some(name) = name.to_str() else { continue };
+        if let Some(n) = name.strip_prefix("seg-").and_then(|s| s.strip_suffix(".log")) {
+            if let Ok(n) = n.parse::<u64>() {
+                out.push(n);
+            }
+        }
+    }
+    out.sort_unstable();
+    Ok(out)
+}
+
+fn encode_record(payload: &[u8]) -> Vec<u8> {
+    let digest = sha256::digest(payload);
+    let mut out = Vec::with_capacity(RECORD_HEADER + payload.len());
+    out.extend_from_slice(&(payload.len() as u32).to_be_bytes());
+    out.extend_from_slice(&digest[..8]);
+    out.extend_from_slice(payload);
+    out
+}
+
+enum Scan<'a> {
+    /// A whole, checksum-valid record; `.1` is the offset after it.
+    Record(&'a [u8], usize),
+    /// Clean end of the segment.
+    End,
+    /// Torn or corrupt bytes at this offset.
+    Bad,
+}
+
+fn scan_record(buf: &[u8], at: usize) -> Scan<'_> {
+    if at == buf.len() {
+        return Scan::End;
+    }
+    if buf.len() - at < RECORD_HEADER {
+        return Scan::Bad;
+    }
+    let len = u32::from_be_bytes(buf[at..at + 4].try_into().unwrap()) as usize;
+    let start = at + RECORD_HEADER;
+    let Some(end) = start.checked_add(len) else { return Scan::Bad };
+    if end > buf.len() {
+        return Scan::Bad;
+    }
+    let payload = &buf[start..end];
+    if sha256::digest(payload)[..8] != buf[at + 4..at + 12] {
+        return Scan::Bad;
+    }
+    Scan::Record(payload, end)
+}
+
+fn open_append(path: &Path) -> Result<File> {
+    Ok(OpenOptions::new().create(true).append(true).open(path)?)
+}
+
+impl ShardJournal {
+    /// Open (or create) the journal directory for one shard and recover
+    /// its state: load the latest checkpoint, replay the op tail, and
+    /// truncate at the first torn or bad-checksum record (deleting any
+    /// segments after the cut). Appends resume where recovery stopped.
+    pub fn open(dir: &Path, cfg: JournalConfig) -> Result<(ShardJournal, Recovery)> {
+        fs::create_dir_all(dir)?;
+        let segs = list_segments(dir)?;
+        // Replay starts at the newest segment that opens with a whole,
+        // checksum-valid checkpoint record; everything older is sealed
+        // garbage that recovery never reads — corruption there cannot
+        // touch live state, and replay length is bounded by the
+        // checkpoint interval rather than journal history. Segments are
+        // read newest→oldest until that start is found, keeping the
+        // buffers so replay reads each live segment from disk once.
+        let mut cached: std::collections::VecDeque<(u64, Vec<u8>)> =
+            std::collections::VecDeque::new();
+        for &n in segs.iter().rev() {
+            let buf = fs::read(seg_path(dir, n))?;
+            let opens_ckpt = matches!(
+                scan_record(&buf, 0),
+                Scan::Record(payload, _) if payload.starts_with(CHECKPOINT_PREFIX)
+            );
+            cached.push_front((n, buf));
+            if opens_ckpt {
+                break;
+            }
+        }
+        let live_ids: Vec<u64> = cached.iter().map(|(n, _)| *n).collect();
+        let mut state = Dfc::new();
+        let mut ops_replayed = 0u64;
+        let mut ops_since_ckpt = 0u64;
+        let mut last_ckpt_seg = None;
+        let mut truncated = false;
+        // Where appends resume: (segment index, bytes already in it).
+        let mut tail: Option<(u64, u64)> = None;
+
+        'segments: for (si, (n, buf)) in cached.into_iter().enumerate() {
+            let path = seg_path(dir, n);
+            let mut at = 0usize;
+            loop {
+                let bad_at = match scan_record(&buf, at) {
+                    Scan::End => break,
+                    Scan::Bad => at,
+                    Scan::Record(payload, next) => {
+                        match Self::replay_record(payload, &mut state) {
+                            Some(Replayed::Checkpoint) => {
+                                last_ckpt_seg = Some(n);
+                                ops_since_ckpt = 0;
+                                ops_replayed = 0;
+                            }
+                            Some(Replayed::Op) | Some(Replayed::Skipped) => {
+                                ops_replayed += 1;
+                                ops_since_ckpt += 1;
+                            }
+                            None => {
+                                // Checksum-valid but unparseable:
+                                // version skew or a writer bug, NOT a
+                                // crash artifact. Refuse to truncate
+                                // acknowledged data.
+                                return Err(Error::Catalog(format!(
+                                    "unparseable journal record at byte {at} of {}; \
+                                     refusing to truncate acknowledged history",
+                                    path.display()
+                                )));
+                            }
+                        }
+                        at = next;
+                        continue;
+                    }
+                };
+                truncate_from(dir, &live_ids[si..], &path, bad_at)?;
+                truncated = true;
+                tail = Some((n, bad_at as u64));
+                break 'segments;
+            }
+            tail = Some((n, buf.len() as u64));
+        }
+
+        let (seg_index, seg_bytes) = tail.unwrap_or((0, 0));
+        let writer = open_append(&seg_path(dir, seg_index))?;
+        let journal = ShardJournal {
+            dir: dir.to_path_buf(),
+            cfg,
+            seg_index,
+            writer,
+            seg_bytes,
+            ops_since_ckpt,
+            last_ckpt_seg,
+            poisoned: false,
+        };
+        Ok((journal, Recovery { state, ops_replayed, truncated }))
+    }
+
+    /// Replay one checksum-valid record. `None` means the payload does
+    /// not parse (version skew / writer bug — the caller aborts rather
+    /// than truncate). An op that parses but no longer applies — only
+    /// possible downstream of a journal-write failure whose error was
+    /// surfaced at the time — is skipped and counted; the next
+    /// checkpoint re-seals fully consistent state.
+    fn replay_record(payload: &[u8], state: &mut Dfc) -> Option<Replayed> {
+        let text = std::str::from_utf8(payload).ok()?;
+        let j = Json::parse(text).ok()?;
+        if j.get("op")?.as_str()? == "checkpoint" {
+            *state = Dfc::from_json(j.get("dfc")?).ok()?;
+            return Some(Replayed::Checkpoint);
+        }
+        let op = CatalogOp::from_json(&j)?;
+        if op.apply(state).is_err() {
+            crate::metrics::global().inc("catalog.journal.replay_skipped");
+            return Some(Replayed::Skipped);
+        }
+        Some(Replayed::Op)
+    }
+
+    /// Append one op. Must be called with the owning shard's lock held
+    /// and `shard` being that shard's current (post-op) state, so the
+    /// journal order matches the apply order and an automatic checkpoint
+    /// (every [`JournalConfig::checkpoint_ops`] appends) snapshots a
+    /// state consistent with the journal position.
+    pub fn append(&mut self, op: &CatalogOp, shard: &Dfc) -> Result<()> {
+        if self.poisoned {
+            return Err(Error::Catalog(
+                "shard journal poisoned by an earlier failed write; \
+                 run `drs catalog compact` (or reopen) to re-checkpoint"
+                    .into(),
+            ));
+        }
+        let rec = encode_record(op.to_json().to_string().as_bytes());
+        if self.seg_bytes > 0 && self.seg_bytes + rec.len() as u64 > self.cfg.segment_bytes {
+            self.roll()?;
+        }
+        if let Err(e) = self.writer.write_all(&rec) {
+            // A partial record may now sit at the tail. Rewind to the
+            // last good offset so later appends never land beyond torn
+            // bytes (recovery would truncate there, silently dropping
+            // them); if even the rewind fails, poison the journal —
+            // the next successful checkpoint opens a clean segment.
+            if self.writer.set_len(self.seg_bytes).is_err() {
+                self.poisoned = true;
+            }
+            return Err(e.into());
+        }
+        self.seg_bytes += rec.len() as u64;
+        self.ops_since_ckpt += 1;
+        let m = crate::metrics::global();
+        m.inc("catalog.journal.appends");
+        m.add("catalog.journal.bytes", rec.len() as u64);
+        if self.ops_since_ckpt >= self.cfg.checkpoint_ops {
+            // The op record is already durably appended; a failed
+            // auto-checkpoint must not fail the append — it only delays
+            // compaction and is retried on the next append.
+            if self.checkpoint(shard).is_err() {
+                crate::metrics::global().inc("catalog.journal.checkpoint_failures");
+            }
+        }
+        Ok(())
+    }
+
+    /// Seal the current segment and start a new empty one.
+    fn roll(&mut self) -> Result<()> {
+        self.writer.sync_data()?;
+        self.seg_index += 1;
+        let path = seg_path(&self.dir, self.seg_index);
+        self.writer = open_append(&path)?;
+        self.seg_bytes = 0;
+        Ok(())
+    }
+
+    /// Write a checkpoint: a fresh segment whose first record embeds the
+    /// shard snapshot (crash-safe via [`crate::util::atomic_write`]).
+    /// Everything before that segment becomes sealed garbage for
+    /// [`ShardJournal::gc`]. Same locking contract as
+    /// [`ShardJournal::append`].
+    pub fn checkpoint(&mut self, shard: &Dfc) -> Result<()> {
+        // Serialized by hand so the payload starts with
+        // [`CHECKPOINT_PREFIX`] (object order would put `dfc` first).
+        let payload = format!("{{\"op\":\"checkpoint\",\"dfc\":{}}}", shard.to_json());
+        let rec = encode_record(payload.as_bytes());
+        self.writer.sync_data()?;
+        let next = self.seg_index + 1;
+        let path = seg_path(&self.dir, next);
+        crate::util::atomic_write(&path, &rec)?;
+        let writer = match open_append(&path) {
+            Ok(w) => w,
+            Err(e) => {
+                // All-or-nothing: a checkpoint segment we will not
+                // append after must not exist — recovery would prefer
+                // it and bypass later appends to the old segment.
+                if fs::remove_file(&path).is_err() {
+                    self.poisoned = true;
+                }
+                return Err(e);
+            }
+        };
+        self.seg_index = next;
+        self.writer = writer;
+        self.seg_bytes = rec.len() as u64;
+        self.last_ckpt_seg = Some(next);
+        self.ops_since_ckpt = 0;
+        // A checkpoint opens a clean segment consistent with the shard's
+        // in-memory state, so any earlier poisoning is healed.
+        self.poisoned = false;
+        crate::metrics::global().inc("catalog.journal.checkpoints");
+        Ok(())
+    }
+
+    /// Delete sealed garbage segments (strictly older than the newest
+    /// checkpoint), oldest first, stopping once `budget_bytes` have been
+    /// reclaimed (the budget may overshoot by at most one segment).
+    /// Returns (segments, bytes) removed.
+    pub fn gc(&mut self, budget_bytes: u64) -> Result<(u64, u64)> {
+        let Some(ckpt) = self.last_ckpt_seg else { return Ok((0, 0)) };
+        let (mut segs, mut bytes) = (0u64, 0u64);
+        for n in list_segments(&self.dir)? {
+            if n >= ckpt || bytes >= budget_bytes {
+                break;
+            }
+            let path = seg_path(&self.dir, n);
+            let len = fs::metadata(&path)?.len();
+            fs::remove_file(&path)?;
+            segs += 1;
+            bytes += len;
+        }
+        Ok((segs, bytes))
+    }
+
+    /// Ops appended since the newest checkpoint (the replay length a
+    /// recovery would pay right now).
+    pub fn ops_since_checkpoint(&self) -> u64 {
+        self.ops_since_ckpt
+    }
+
+    /// Segment index of the newest checkpoint, if one exists.
+    pub fn last_checkpoint_seg(&self) -> Option<u64> {
+        self.last_ckpt_seg
+    }
+
+    /// Current on-disk shape of this shard's journal.
+    pub fn stats(&self) -> Result<ShardJournalStats> {
+        let mut s = ShardJournalStats {
+            last_checkpoint_seg: self.last_ckpt_seg,
+            ops_since_checkpoint: self.ops_since_ckpt,
+            ..Default::default()
+        };
+        let live_from = self.last_ckpt_seg.unwrap_or(0);
+        for n in list_segments(&self.dir)? {
+            let len = fs::metadata(seg_path(&self.dir, n))?.len();
+            s.segments += 1;
+            if n >= live_from {
+                s.live_bytes += len;
+            } else {
+                s.garbage_bytes += len;
+            }
+        }
+        Ok(s)
+    }
+}
+
+enum Replayed {
+    Checkpoint,
+    Op,
+    Skipped,
+}
+
+/// Cut the journal at a bad record: truncate `path` to `offset` and
+/// delete every segment after it (`segs` is the bad segment and its
+/// successors).
+fn truncate_from(dir: &Path, segs: &[u64], path: &Path, offset: usize) -> Result<()> {
+    let f = OpenOptions::new().write(true).open(path)?;
+    f.set_len(offset as u64)?;
+    f.sync_data()?;
+    for &n in &segs[1..] {
+        fs::remove_file(seg_path(dir, n))?;
+    }
+    crate::metrics::global().inc("catalog.journal.torn_truncations");
+    Ok(())
+}
+
+/// How many `shard-<i>/` directories already exist under a journal
+/// root — 0 for a fresh root. Used to detect shard-count changes.
+pub(crate) fn existing_shard_count(dir: &Path) -> Result<usize> {
+    if !dir.is_dir() {
+        return Ok(0);
+    }
+    let mut n = 0usize;
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let name = entry.file_name();
+        if let Some(idx) = name.to_str().and_then(|s| s.strip_prefix("shard-")) {
+            if idx.parse::<usize>().is_ok() && entry.file_type()?.is_dir() {
+                n += 1;
+            }
+        }
+    }
+    Ok(n)
+}
+
+/// The per-shard journal directory under a journal root.
+pub(crate) fn shard_dir(root: &Path, idx: usize) -> PathBuf {
+    root.join(format!("shard-{idx}"))
+}
+
+/// The error journal-maintenance entry points return when called on an
+/// in-memory (journal-less) store.
+pub(crate) fn no_journal_err() -> Error {
+    Error::Catalog("catalogue has no journal attached".into())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let p = std::env::temp_dir().join(format!(
+            "drs-journal-{tag}-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = fs::remove_dir_all(&p);
+        fs::create_dir_all(&p).unwrap();
+        p
+    }
+
+    fn ops() -> Vec<CatalogOp> {
+        vec![
+            CatalogOp::PutDir { path: "/vo/data/f1.ec".into() },
+            CatalogOp::SetMeta {
+                path: "/vo/data/f1.ec".into(),
+                key: "drs_ec_total".into(),
+                value: MetaValue::Int(6),
+            },
+            CatalogOp::PutFile {
+                path: "/vo/data/f1.ec/c0".into(),
+                entry: FileEntry { size: 42, ..Default::default() },
+            },
+            CatalogOp::AddReplica {
+                path: "/vo/data/f1.ec/c0".into(),
+                se: "SE-00".into(),
+                pfn: "/pfn/c0".into(),
+            },
+            CatalogOp::RemoveReplica { path: "/vo/data/f1.ec/c0".into(), se: "SE-00".into() },
+            CatalogOp::Remove { path: "/vo/data/f1.ec/c0".into() },
+        ]
+    }
+
+    #[test]
+    fn op_json_roundtrip() {
+        let mut a = Dfc::new();
+        let mut b = Dfc::new();
+        for op in ops() {
+            let back = CatalogOp::from_json(&op.to_json()).unwrap();
+            op.apply(&mut a).unwrap();
+            back.apply(&mut b).unwrap();
+        }
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+        assert!(CatalogOp::from_json(&Json::parse(r#"{"op":"warp","path":"/x"}"#).unwrap())
+            .is_none());
+    }
+
+    #[test]
+    fn record_framing_detects_corruption() {
+        let rec = encode_record(b"{\"op\":\"put_dir\",\"path\":\"/a\"}");
+        match scan_record(&rec, 0) {
+            Scan::Record(p, next) => {
+                assert_eq!(p, &rec[RECORD_HEADER..]);
+                assert_eq!(next, rec.len());
+            }
+            _ => panic!("valid record must scan"),
+        }
+        // Flip one payload byte → checksum mismatch.
+        let mut bad = rec.clone();
+        bad[RECORD_HEADER + 3] ^= 0xFF;
+        assert!(matches!(scan_record(&bad, 0), Scan::Bad));
+        // Truncated mid-payload → torn.
+        assert!(matches!(scan_record(&rec[..rec.len() - 1], 0), Scan::Bad));
+        // Truncated mid-header → torn.
+        assert!(matches!(scan_record(&rec[..5], 0), Scan::Bad));
+        // Clean end.
+        assert!(matches!(scan_record(&rec, rec.len()), Scan::End));
+    }
+
+    #[test]
+    fn append_recover_roundtrip() {
+        let dir = tmp("roundtrip");
+        let mut shard = Dfc::new();
+        {
+            let (mut j, rec) = ShardJournal::open(&dir, JournalConfig::default()).unwrap();
+            assert_eq!(rec.ops_replayed, 0);
+            for op in ops() {
+                op.apply(&mut shard).unwrap();
+                j.append(&op, &shard).unwrap();
+            }
+        }
+        let (_, rec) = ShardJournal::open(&dir, JournalConfig::default()).unwrap();
+        assert!(!rec.truncated);
+        assert_eq!(rec.ops_replayed, ops().len() as u64);
+        assert_eq!(rec.state.to_json().to_string(), shard.to_json().to_string());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn segments_roll_and_checkpoint_resets_replay() {
+        let dir = tmp("roll");
+        let cfg = JournalConfig { segment_bytes: 128, checkpoint_ops: 4 };
+        let mut shard = Dfc::new();
+        {
+            let (mut j, _) = ShardJournal::open(&dir, cfg).unwrap();
+            for i in 0..20 {
+                let op = CatalogOp::PutDir { path: format!("/d{i}") };
+                op.apply(&mut shard).unwrap();
+                j.append(&op, &shard).unwrap();
+            }
+            // 20 ops at checkpoint_ops=4 → 5 checkpoints, short replay tail.
+            assert!(j.last_checkpoint_seg().is_some());
+            assert_eq!(j.ops_since_checkpoint(), 0);
+            let stats = j.stats().unwrap();
+            assert!(stats.segments > 1, "{stats:?}");
+            assert!(stats.garbage_bytes > 0, "{stats:?}");
+            // GC reclaims every sealed pre-checkpoint segment.
+            let (segs, bytes) = j.gc(u64::MAX).unwrap();
+            assert!(segs > 0 && bytes > 0);
+            assert_eq!(j.stats().unwrap().garbage_bytes, 0);
+        }
+        let (_, rec) = ShardJournal::open(&dir, cfg).unwrap();
+        assert_eq!(rec.state.to_json().to_string(), shard.to_json().to_string());
+        assert_eq!(rec.ops_replayed, 0, "checkpoint replay tail must be empty");
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn gc_respects_budget() {
+        let dir = tmp("budget");
+        // Tiny segments, no auto-checkpoints: garbage appears only after
+        // an explicit checkpoint.
+        let cfg = JournalConfig { segment_bytes: 64, checkpoint_ops: u64::MAX };
+        let mut shard = Dfc::new();
+        let (mut j, _) = ShardJournal::open(&dir, cfg).unwrap();
+        for i in 0..16 {
+            let op = CatalogOp::PutDir { path: format!("/dir-number-{i:04}") };
+            op.apply(&mut shard).unwrap();
+            j.append(&op, &shard).unwrap();
+        }
+        j.checkpoint(&shard).unwrap();
+        let garbage = j.stats().unwrap().garbage_bytes;
+        assert!(garbage > 128, "{garbage}");
+        let (_, freed) = j.gc(1).unwrap();
+        assert!(freed < garbage, "budget must stop GC early: {freed} vs {garbage}");
+        let (_, rest) = j.gc(u64::MAX).unwrap();
+        assert_eq!(freed + rest, garbage);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn torn_tail_is_truncated_and_appendable() {
+        let dir = tmp("torn");
+        let cfg = JournalConfig::default();
+        let mut shard = Dfc::new();
+        {
+            let (mut j, _) = ShardJournal::open(&dir, cfg).unwrap();
+            for i in 0..5 {
+                let op = CatalogOp::PutDir { path: format!("/d{i}") };
+                op.apply(&mut shard).unwrap();
+                j.append(&op, &shard).unwrap();
+            }
+        }
+        // Simulate a crash mid-append: half a record at the tail.
+        let seg = seg_path(&dir, 0);
+        let mut bytes = fs::read(&seg).unwrap();
+        let torn = encode_record(b"{\"op\":\"put_dir\",\"path\":\"/never\"}");
+        bytes.extend_from_slice(&torn[..torn.len() / 2]);
+        fs::write(&seg, &bytes).unwrap();
+
+        let (mut j, rec) = ShardJournal::open(&dir, cfg).unwrap();
+        assert!(rec.truncated);
+        assert_eq!(rec.ops_replayed, 5);
+        assert!(!rec.state.is_dir("/never"));
+        // The journal stays usable after the cut.
+        let op = CatalogOp::PutDir { path: "/after".into() };
+        let mut state = rec.state;
+        op.apply(&mut state).unwrap();
+        j.append(&op, &state).unwrap();
+        drop(j);
+        let (_, rec2) = ShardJournal::open(&dir, cfg).unwrap();
+        assert!(!rec2.truncated);
+        assert_eq!(rec2.state.to_json().to_string(), state.to_json().to_string());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn garbage_corruption_cannot_touch_live_state() {
+        let dir = tmp("garbage");
+        let cfg = JournalConfig { segment_bytes: 96, checkpoint_ops: u64::MAX };
+        let mut shard = Dfc::new();
+        {
+            let (mut j, _) = ShardJournal::open(&dir, cfg).unwrap();
+            for i in 0..8 {
+                let op = CatalogOp::PutDir { path: format!("/dir-{i:03}") };
+                op.apply(&mut shard).unwrap();
+                j.append(&op, &shard).unwrap();
+            }
+            // Seal everything so far behind a checkpoint, keep garbage.
+            j.checkpoint(&shard).unwrap();
+            let op = CatalogOp::PutDir { path: "/tail".into() };
+            op.apply(&mut shard).unwrap();
+            j.append(&op, &shard).unwrap();
+            assert!(j.stats().unwrap().garbage_bytes > 0);
+        }
+        // Bit-rot inside a sealed pre-checkpoint segment: recovery must
+        // never read it, let alone treat it as the crash frontier.
+        let first = list_segments(&dir).unwrap()[0];
+        let mut bytes = fs::read(seg_path(&dir, first)).unwrap();
+        bytes[RECORD_HEADER + 1] ^= 0xFF;
+        fs::write(seg_path(&dir, first), &bytes).unwrap();
+
+        let (_, rec) = ShardJournal::open(&dir, cfg).unwrap();
+        assert!(!rec.truncated, "garbage corruption must not cut the journal");
+        assert_eq!(rec.ops_replayed, 1, "only the post-checkpoint tail replays");
+        assert_eq!(rec.state.to_json().to_string(), shard.to_json().to_string());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn corruption_drops_later_segments() {
+        let dir = tmp("cascade");
+        let cfg = JournalConfig { segment_bytes: 96, checkpoint_ops: u64::MAX };
+        let mut shard = Dfc::new();
+        {
+            let (mut j, _) = ShardJournal::open(&dir, cfg).unwrap();
+            for i in 0..12 {
+                let op = CatalogOp::PutDir { path: format!("/dir-{i:03}") };
+                op.apply(&mut shard).unwrap();
+                j.append(&op, &shard).unwrap();
+            }
+        }
+        let segs = list_segments(&dir).unwrap();
+        assert!(segs.len() >= 3, "{segs:?}");
+        // Corrupt the first record of a middle segment.
+        let mid = segs[1];
+        let mut bytes = fs::read(seg_path(&dir, mid)).unwrap();
+        bytes[RECORD_HEADER + 1] ^= 0xFF;
+        fs::write(seg_path(&dir, mid), &bytes).unwrap();
+
+        let (_, rec) = ShardJournal::open(&dir, cfg).unwrap();
+        assert!(rec.truncated);
+        // Everything from the corrupt record on is gone.
+        let remaining = list_segments(&dir).unwrap();
+        assert_eq!(remaining.last(), Some(&mid));
+        assert_eq!(fs::metadata(seg_path(&dir, mid)).unwrap().len(), 0);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+}

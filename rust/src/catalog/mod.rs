@@ -11,20 +11,30 @@
 //!   `TOTAL`/`SPLIT` keys leaked into the Imperial DIRAC's *global* tag
 //!   namespace. [`MetaKeyStyle`] reproduces both behaviours: `V1Generic`
 //!   (the paper's original keys) and `V2Prefixed` (`drs_ec_*`, the fix).
-//! * JSON snapshot persistence (`save`/`load`) so examples/CLI runs keep
-//!   state across invocations.
 //! * [`ShardedDfc`] — the concurrent catalogue the shim and maintenance
 //!   engine run against: the namespace hash-partitioned over
 //!   independently locked shards (directory-subtree affinity keeps
 //!   `list_dir` and file operations single-shard) with lock-free
 //!   snapshot scans ([`ShardedDfc::snapshot_subtree`]) for scrub/drain.
+//! * **Persistence** — a per-shard write-ahead journal
+//!   ([`journal`]): every mutation appends one checksummed
+//!   [`CatalogOp`] record to the owning shard's segment log, recovery
+//!   replays the latest checkpoint plus the op tail, and compaction
+//!   folds sealed segments into fresh checkpoints. The legacy
+//!   whole-namespace JSON snapshot (`save`/`load`) remains readable and
+//!   is migrated transparently on first open.
 
 pub mod dfc;
 pub mod entry;
+pub mod journal;
 pub mod meta;
 pub mod store;
 
 pub use dfc::Dfc;
 pub use entry::{DirEntry, FileEntry, Replica};
+pub use journal::{
+    CatalogOp, CompactReport, JournalConfig, ShardJournal, ShardJournalStats,
+    DEFAULT_CHECKPOINT_OPS, DEFAULT_SEGMENT_BYTES,
+};
 pub use meta::{MetaKeyStyle, MetaValue};
 pub use store::{ShardedDfc, DEFAULT_SHARDS};

@@ -44,12 +44,17 @@
 //! directory-affinity invariant is what the maintenance engine relies on.
 
 use std::collections::BTreeMap;
+use std::path::Path;
 use std::sync::{Mutex, MutexGuard};
 
 use crate::{Error, Result};
 
 use super::dfc::{Dfc, DirItem};
 use super::entry::{FileEntry, Replica};
+use super::journal::{
+    existing_shard_count, no_journal_err, shard_dir, CatalogOp, CompactReport, JournalConfig,
+    ShardJournal, ShardJournalStats,
+};
 use super::meta::{MetaMap, MetaValue};
 
 /// Default shard count for new catalogues. Eight shards keep lock
@@ -60,8 +65,18 @@ pub const DEFAULT_SHARDS: usize = 8;
 /// A DFC namespace hash-partitioned into independently locked shards,
 /// exposing the [`Dfc`] API plus lock-free snapshot scans. See the
 /// module docs for the sharding scheme.
+///
+/// A store opened with [`ShardedDfc::open_journaled`] (or seeded with
+/// [`ShardedDfc::attach_journal`]) is additionally *persistent*: every
+/// mutation is lowered to a [`CatalogOp`] and appended to the owning
+/// shard's write-ahead journal while that shard's lock is still held,
+/// so journal order always matches apply order and a crash replays to
+/// exactly the acknowledged state (see [`super::journal`]).
 pub struct ShardedDfc {
     shards: Vec<Mutex<Dfc>>,
+    /// One journal per shard when the store is persistence-backed.
+    /// Lock order is always shard → journal, never the reverse.
+    journals: Option<Vec<Mutex<ShardJournal>>>,
 }
 
 impl Default for ShardedDfc {
@@ -71,18 +86,212 @@ impl Default for ShardedDfc {
 }
 
 impl ShardedDfc {
-    /// An empty catalogue over `shards` shards (clamped to ≥ 1; one shard
-    /// degenerates to the old single-mutex behaviour and is the baseline
-    /// in `benches/catalog_contention.rs`).
+    /// An empty, in-memory-only catalogue over `shards` shards (clamped
+    /// to ≥ 1; one shard degenerates to the old single-mutex behaviour
+    /// and is the baseline in `benches/catalog_contention.rs`).
     pub fn new(shards: usize) -> Self {
         ShardedDfc {
             shards: (0..shards.max(1)).map(|_| Mutex::new(Dfc::new())).collect(),
+            journals: None,
         }
     }
 
     /// How many shards the namespace is partitioned over.
     pub fn shard_count(&self) -> usize {
         self.shards.len()
+    }
+
+    /// Whether this store persists through a write-ahead journal.
+    pub fn is_journaled(&self) -> bool {
+        self.journals.is_some()
+    }
+
+    // -- journal-backed construction ---------------------------------------
+
+    /// Open a journal-backed catalogue rooted at `dir`
+    /// (`dir/shard-<i>/seg-<n>.log`), recovering each shard from its
+    /// latest checkpoint plus replayed op tail (torn tails truncated —
+    /// see [`ShardJournal::open`]). A fresh `dir` yields an empty
+    /// catalogue whose first mutations create the journal. If `dir` was
+    /// written with a different shard count, the old partitioning is
+    /// recovered, re-partitioned over `shards`, and re-journaled.
+    pub fn open_journaled(dir: &Path, shards: usize, cfg: JournalConfig) -> Result<ShardedDfc> {
+        let shards = shards.max(1);
+        // Finish (or discard) a re-partition that crashed mid-swap. The
+        // marker file is written only once the staging copy is complete,
+        // so its presence — not the (possibly half-deleted) state of the
+        // live dir — decides which side is authoritative.
+        let staging = Self::staging_dir(dir);
+        if staging.is_dir() {
+            if staging.join(Self::STAGING_COMPLETE).is_file() {
+                if dir.exists() {
+                    std::fs::remove_dir_all(dir)?;
+                }
+                std::fs::rename(&staging, dir)?;
+            } else {
+                // Incomplete staging build: the old journal stands.
+                std::fs::remove_dir_all(&staging)?;
+            }
+        }
+        // Marker litter from a swap that crashed after the rename.
+        let _ = std::fs::remove_file(dir.join(Self::STAGING_COMPLETE));
+        let existing = existing_shard_count(dir)?;
+        if existing != 0 && existing != shards {
+            // Re-partition: recover at the old count, checkpoint the
+            // snapshot into a staging journal, mark it complete, then
+            // swap directories. A crash at any point leaves either the
+            // old journal intact or a complete marked staging copy —
+            // never an authoritative half-written mix.
+            let snap = Self::open_journaled_exact(dir, existing, cfg)?.snapshot();
+            let mut fresh = Self::from_dfc(&snap, shards)?;
+            fresh.attach_journal(&staging, cfg)?;
+            drop(fresh); // close the staging segment writers pre-rename
+            crate::util::atomic_write(&staging.join(Self::STAGING_COMPLETE), b"")?;
+            std::fs::remove_dir_all(dir)?;
+            std::fs::rename(&staging, dir)?;
+            let _ = std::fs::remove_file(dir.join(Self::STAGING_COMPLETE));
+        }
+        Self::open_journaled_exact(dir, shards, cfg)
+    }
+
+    /// Marker written into a staging journal once every shard has been
+    /// checkpointed — only then may the staging copy replace the live
+    /// directory.
+    const STAGING_COMPLETE: &'static str = ".complete";
+
+    /// Sibling directory used to build a replacement journal before an
+    /// atomic directory swap (re-partitioning, legacy migration).
+    fn staging_dir(dir: &Path) -> std::path::PathBuf {
+        let name = dir.file_name().and_then(|n| n.to_str()).unwrap_or("journal");
+        dir.with_file_name(format!("{name}.staging"))
+    }
+
+    fn open_journaled_exact(dir: &Path, shards: usize, cfg: JournalConfig) -> Result<ShardedDfc> {
+        let mut dfcs = Vec::with_capacity(shards);
+        let mut journals = Vec::with_capacity(shards);
+        for i in 0..shards {
+            let (journal, recovery) = ShardJournal::open(&shard_dir(dir, i), cfg)?;
+            dfcs.push(Mutex::new(recovery.state));
+            journals.push(Mutex::new(journal));
+        }
+        crate::metrics::global().inc("catalog.journal.recoveries");
+        Ok(ShardedDfc { shards: dfcs, journals: Some(journals) })
+    }
+
+    /// Attach a *fresh* journal under `dir` to an in-memory catalogue
+    /// and make the current state durable immediately (one checkpoint
+    /// per shard). This is the migration path for legacy whole-snapshot
+    /// workspaces: load `catalog.json`, partition with
+    /// [`ShardedDfc::from_dfc`], then attach. `dir` must not already
+    /// hold journal state for live shards.
+    pub fn attach_journal(&mut self, dir: &Path, cfg: JournalConfig) -> Result<()> {
+        let mut journals = Vec::with_capacity(self.shards.len());
+        for (i, shard) in self.shards.iter().enumerate() {
+            let (mut journal, _) = ShardJournal::open(&shard_dir(dir, i), cfg)?;
+            journal.checkpoint(&shard.lock().unwrap())?;
+            journals.push(Mutex::new(journal));
+        }
+        self.journals = Some(journals);
+        Ok(())
+    }
+
+    // -- journal plumbing --------------------------------------------------
+
+    /// Build `op` only when the store journals (mutation fast path stays
+    /// allocation-free for in-memory stores).
+    fn op_if_journaled(&self, op: impl FnOnce() -> CatalogOp) -> Option<CatalogOp> {
+        self.journals.as_ref().map(|_| op())
+    }
+
+    /// Append `op` to shard `idx`'s journal. Callers hold the shard's
+    /// lock (`shard` is its guard) so journal order matches apply order.
+    fn journal_append(&self, idx: usize, op: &CatalogOp, shard: &Dfc) -> Result<()> {
+        if let Some(journals) = &self.journals {
+            journals[idx].lock().unwrap().append(op, shard)?;
+        }
+        Ok(())
+    }
+
+    /// Apply a mutation to shard `idx` and, on success, append the op
+    /// that reproduces it — while the shard lock is still held. If the
+    /// append fails, the shard's journal is re-synced to memory with a
+    /// best-effort checkpoint before the error is surfaced.
+    fn mutate<T>(
+        &self,
+        idx: usize,
+        op: Option<CatalogOp>,
+        f: impl FnOnce(&mut Dfc) -> Result<T>,
+    ) -> Result<T> {
+        let mut guard = self.lock(idx);
+        let out = f(&mut guard)?;
+        if let Some(op) = op {
+            if let Err(e) = self.journal_append(idx, &op, &guard) {
+                self.resync_shard(idx, &guard);
+                return Err(e);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Best-effort recovery from a failed journal append: checkpoint the
+    /// shard's current in-memory state (a fresh, atomically written
+    /// segment), so the journal catches back up with memory. If even
+    /// the checkpoint fails, the journal stays poisoned/behind until a
+    /// later checkpoint succeeds (see the caveat in [`super::journal`]).
+    fn resync_shard(&self, idx: usize, shard: &Dfc) {
+        if let Some(journals) = &self.journals {
+            let _ = journals[idx].lock().unwrap().checkpoint(shard);
+        }
+    }
+
+    /// Force a checkpoint of every shard that has pending ops (or no
+    /// checkpoint at all) and GC sealed segments, reclaiming at most
+    /// `budget_bytes` of garbage across the catalogue. Shards are
+    /// visited one at a time; each is locked only for its own
+    /// checkpoint. Errors if the store has no journal.
+    pub fn compact_journal(&self, budget_bytes: u64) -> Result<CompactReport> {
+        let journals = self.journals.as_ref().ok_or_else(no_journal_err)?;
+        let mut report = CompactReport::default();
+        let mut remaining = budget_bytes;
+        for (shard, journal) in self.shards.iter().zip(journals) {
+            let guard = shard.lock().unwrap();
+            let mut journal = journal.lock().unwrap();
+            if journal.ops_since_checkpoint() > 0 || journal.last_checkpoint_seg().is_none() {
+                journal.checkpoint(&guard)?;
+                report.checkpoints += 1;
+            }
+            drop(guard); // GC needs no shard state — don't stall clients
+            let (segs, bytes) = journal.gc(remaining)?;
+            report.segments_removed += segs;
+            report.bytes_removed += bytes;
+            remaining = remaining.saturating_sub(bytes);
+        }
+        Ok(report)
+    }
+
+    /// GC already-sealed garbage segments only (no checkpoints, no
+    /// shard locks), reclaiming at most `budget_bytes`. The cheap
+    /// housekeeping step the CLI runs after mutating commands. No-op
+    /// for in-memory stores. Returns (segments, bytes) removed.
+    pub fn journal_gc(&self, budget_bytes: u64) -> Result<(u64, u64)> {
+        let Some(journals) = &self.journals else { return Ok((0, 0)) };
+        let (mut segs, mut bytes) = (0u64, 0u64);
+        for journal in journals {
+            let (s, b) = journal.lock().unwrap().gc(budget_bytes.saturating_sub(bytes))?;
+            segs += s;
+            bytes += b;
+            if bytes >= budget_bytes {
+                break;
+            }
+        }
+        Ok((segs, bytes))
+    }
+
+    /// Per-shard journal health for `drs catalog stats`. Errors if the
+    /// store has no journal.
+    pub fn journal_stats(&self) -> Result<Vec<ShardJournalStats>> {
+        let journals = self.journals.as_ref().ok_or_else(no_journal_err)?;
+        journals.iter().map(|j| j.lock().unwrap().stats()).collect()
     }
 
     // -- routing -----------------------------------------------------------
@@ -161,26 +370,59 @@ impl ShardedDfc {
             }
             if let Err(e) = guard.mkdir_p(path) {
                 drop(guard);
-                for (j, prefix) in &created {
-                    let _ = self.lock(*j).remove_dir(prefix);
-                }
+                self.rollback_mkdir(&created);
                 return Err(e);
             }
             if let Some(p) = fresh_prefix {
+                // Journal only the shards that actually gained entries.
+                if let Some(op) = self.op_if_journaled(|| CatalogOp::PutDir { path: path.into() })
+                {
+                    if let Err(e) = self.journal_append(i, &op, &guard) {
+                        // Applied in memory but not journaled: undo this
+                        // shard and every earlier one so memory and
+                        // journals agree, then surface the error.
+                        let _ = guard.remove_dir(&p);
+                        drop(guard);
+                        self.rollback_mkdir(&created);
+                        return Err(e);
+                    }
+                }
                 created.push((i, p));
             }
         }
         Ok(())
     }
 
+    /// Undo a half-broadcast `mkdir_p`, journaling compensating removes
+    /// so replay converges to the rolled-back (error) state.
+    fn rollback_mkdir(&self, created: &[(usize, String)]) {
+        for (j, prefix) in created {
+            let mut guard = self.lock(*j);
+            if guard.remove_dir(prefix).is_ok() {
+                if let Some(op) =
+                    self.op_if_journaled(|| CatalogOp::Remove { path: prefix.clone() })
+                {
+                    if self.journal_append(*j, &op, &guard).is_err() {
+                        self.resync_shard(*j, &guard);
+                    }
+                }
+            }
+        }
+    }
+
     /// `addFile`: register a logical file (parent dir must exist).
     pub fn add_file(&self, path: &str, entry: FileEntry) -> Result<()> {
-        self.lock(self.file_home(path)?).add_file(path, entry)
+        let home = self.file_home(path)?;
+        let op = self
+            .op_if_journaled(|| CatalogOp::PutFile { path: path.into(), entry: entry.clone() });
+        self.mutate(home, op, |d| d.add_file(path, entry))
     }
 
     /// `removeFile`.
     pub fn remove_file(&self, path: &str) -> Result<FileEntry> {
-        self.lock(self.file_home(path)?).remove_file(path)
+        let home = self.file_home(path)?;
+        let op = self.op_if_journaled(|| CatalogOp::Remove { path: path.into() });
+        self.mutate(home, op, |d| d.remove_file(path))
     }
 
     /// `removeDirectory` (recursive): broadcast to every shard, each of
@@ -196,10 +438,29 @@ impl ShardedDfc {
         if !self.is_dir(path) {
             return Err(Error::Catalog(format!("no such directory: `{path}`")));
         }
-        for shard in &self.shards {
-            let _ = shard.lock().unwrap().remove_dir(path);
+        // The broadcast always completes over every shard (a retry would
+        // fail the pre-check once the owner shard dropped the dir); a
+        // per-shard journal failure is re-synced in place and the first
+        // error surfaced afterwards.
+        let mut first_err = None;
+        for (i, shard) in self.shards.iter().enumerate() {
+            let mut guard = shard.lock().unwrap();
+            if guard.remove_dir(path).is_ok() {
+                if let Some(op) = self.op_if_journaled(|| CatalogOp::Remove { path: path.into() })
+                {
+                    if let Err(e) = self.journal_append(i, &op, &guard) {
+                        // A recursive removal cannot be cheaply undone;
+                        // re-sync this shard's journal to memory instead.
+                        self.resync_shard(i, &guard);
+                        first_err.get_or_insert(e);
+                    }
+                }
+            }
         }
-        Ok(())
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
     }
 
     /// Whether `path` names any entry (directory or file).
@@ -246,16 +507,30 @@ impl ShardedDfc {
     /// bare); file metadata goes to the file's home shard.
     pub fn set_meta(&self, path: &str, key: &str, value: MetaValue) -> Result<()> {
         let parts = Dfc::split(path)?;
+        let op = self.op_if_journaled(|| CatalogOp::SetMeta {
+            path: path.into(),
+            key: key.into(),
+            value: value.clone(),
+        });
         {
-            let mut owner = self.lock(self.owner_of(&parts));
+            let owner_idx = self.owner_of(&parts);
+            let mut owner = self.lock(owner_idx);
             if owner.is_dir(path) {
-                return owner.set_meta(path, key, value);
+                owner.set_meta(path, key, value)?;
+                if let Some(op) = op {
+                    if let Err(e) = self.journal_append(owner_idx, &op, &owner) {
+                        self.resync_shard(owner_idx, &owner);
+                        return Err(e);
+                    }
+                }
+                return Ok(());
             }
         }
         if parts.is_empty() {
             return Err(Error::Catalog(format!("no such entry: `{path}`")));
         }
-        self.lock(self.owner_of(&parts[..parts.len() - 1])).set_meta(path, key, value)
+        let home = self.owner_of(&parts[..parts.len() - 1]);
+        self.mutate(home, op, |d| d.set_meta(path, key, value))
     }
 
     /// `getMetadata` for one entry (cloned map).
@@ -354,7 +629,13 @@ impl ShardedDfc {
 
     /// `registerReplica`.
     pub fn register_replica(&self, path: &str, se: &str, pfn: &str) -> Result<()> {
-        self.lock(self.file_home(path)?).register_replica(path, se, pfn)
+        let home = self.file_home(path)?;
+        let op = self.op_if_journaled(|| CatalogOp::AddReplica {
+            path: path.into(),
+            se: se.into(),
+            pfn: pfn.into(),
+        });
+        self.mutate(home, op, |d| d.register_replica(path, se, pfn))
     }
 
     /// `getReplicas` (cloned out of the owning shard).
@@ -364,7 +645,10 @@ impl ShardedDfc {
 
     /// `removeReplica`: drop the record of `path`'s replica on `se`.
     pub fn remove_replica(&self, path: &str, se: &str) -> Result<()> {
-        self.lock(self.file_home(path)?).remove_replica(path, se)
+        let home = self.file_home(path)?;
+        let op = self
+            .op_if_journaled(|| CatalogOp::RemoveReplica { path: path.into(), se: se.into() });
+        self.mutate(home, op, |d| d.remove_replica(path, se))
     }
 
     // -- snapshot scans ----------------------------------------------------
@@ -655,5 +939,99 @@ mod tests {
         s.mkdir_p("/a/b").unwrap();
         s.add_file("/a/b/f", fe(9)).unwrap();
         assert_eq!(s.counts(), (2, 1));
+    }
+
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let p = std::env::temp_dir().join(format!(
+            "drs-store-{tag}-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&p);
+        p
+    }
+
+    #[test]
+    fn journaled_store_recovers_identically() {
+        let dir = tmpdir("recover");
+        let cfg = JournalConfig { segment_bytes: 512, checkpoint_ops: 7 };
+        let want = {
+            let s = ShardedDfc::open_journaled(&dir, 4, cfg).unwrap();
+            assert!(s.is_journaled());
+            for d in ["/vo/data/f1.ec", "/vo/data/f2.ec", "/deep/nest"] {
+                s.mkdir_p(d).unwrap();
+            }
+            s.set_meta("/vo/data/f1.ec", "drs_ec_total", MetaValue::Int(6)).unwrap();
+            for (i, f) in ["/vo/data/f1.ec/c0", "/vo/data/f2.ec/c0", "/deep/nest/x"]
+                .iter()
+                .enumerate()
+            {
+                s.add_file(f, fe(i as u64)).unwrap();
+                s.register_replica(f, "SE-00", f).unwrap();
+            }
+            s.remove_replica("/deep/nest/x", "SE-00").unwrap();
+            s.remove_file("/deep/nest/x").unwrap();
+            s.remove_dir("/vo/data/f2.ec").unwrap();
+            s.snapshot().to_json().to_string()
+        };
+        // Same shard count: recovery replays to the identical namespace.
+        let back = ShardedDfc::open_journaled(&dir, 4, cfg).unwrap();
+        assert_eq!(back.snapshot().to_json().to_string(), want);
+        drop(back);
+        // Different shard count: transparently re-partitioned.
+        let back = ShardedDfc::open_journaled(&dir, 2, cfg).unwrap();
+        assert_eq!(back.shard_count(), 2);
+        assert_eq!(back.snapshot().to_json().to_string(), want);
+        // And the store stays writable + durable after re-partitioning.
+        back.add_file("/deep/nest/y", fe(9)).unwrap();
+        drop(back);
+        let again = ShardedDfc::open_journaled(&dir, 2, cfg).unwrap();
+        assert!(again.is_file("/deep/nest/y"));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn journaled_mkdir_rollback_replays_to_error_state() {
+        let dir = tmpdir("rollback");
+        let cfg = JournalConfig::default();
+        let want = {
+            let s = ShardedDfc::open_journaled(&dir, 8, cfg).unwrap();
+            s.mkdir_p("/d").unwrap();
+            s.add_file("/d/x", fe(1)).unwrap();
+            // Fails in the pre-check (a file shadows the prefix); the
+            // compensating removes must leave replay == in-memory state.
+            assert!(s.mkdir_p("/d/x/y").is_err());
+            assert_eq!(s.counts(), (1, 1));
+            s.snapshot().to_json().to_string()
+        };
+        let back = ShardedDfc::open_journaled(&dir, 8, cfg).unwrap();
+        assert_eq!(back.snapshot().to_json().to_string(), want);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn compact_and_stats_reclaim_garbage() {
+        let dir = tmpdir("compact");
+        // Tiny segments + frequent auto-checkpoints → plenty of sealed
+        // garbage to reclaim.
+        let cfg = JournalConfig { segment_bytes: 256, checkpoint_ops: 5 };
+        let s = ShardedDfc::open_journaled(&dir, 2, cfg).unwrap();
+        for i in 0..40 {
+            s.mkdir_p(&format!("/vo/d{i}")).unwrap();
+        }
+        let garbage: u64 = s.journal_stats().unwrap().iter().map(|x| x.garbage_bytes).sum();
+        assert!(garbage > 0);
+        let report = s.compact_journal(u64::MAX).unwrap();
+        assert!(report.segments_removed > 0);
+        let after = s.journal_stats().unwrap();
+        assert_eq!(after.iter().map(|x| x.garbage_bytes).sum::<u64>(), 0);
+        assert!(after.iter().all(|x| x.last_checkpoint_seg.is_some()));
+        // In-memory stores refuse journal maintenance but allow the
+        // no-op GC the workspace save path uses.
+        let plain = ShardedDfc::new(2);
+        assert!(plain.compact_journal(u64::MAX).is_err());
+        assert!(plain.journal_stats().is_err());
+        assert_eq!(plain.journal_gc(u64::MAX).unwrap(), (0, 0));
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

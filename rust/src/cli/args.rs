@@ -27,6 +27,12 @@ COMMANDS:
     verify <lfn>
     read <lfn> <offset> <len>
     meta <lfn>
+    catalog compact [--budget-mb MB]           checkpoint every catalogue shard
+                                               and GC sealed journal segments
+                                               (at most MB of garbage removed)
+    catalog stats                              per-shard journal health: segment
+                                               count, live/garbage bytes, last
+                                               checkpoint, ops since it
     se list
     se kill <name>
     se revive <name>
@@ -66,6 +72,8 @@ pub enum Command {
     Verify { lfn: String },
     Read { lfn: String, offset: u64, len: usize },
     Meta { lfn: String },
+    CatalogCompact { budget_mb: Option<u64> },
+    CatalogStats,
     SeList,
     SeKill { name: String },
     SeRevive { name: String },
@@ -203,6 +211,11 @@ pub fn parse_args(argv: Vec<String>) -> Result<Cli, String> {
                 .map_err(|_| "bad <len>".to_string())?,
         },
         "meta" => Command::Meta { lfn: args.required("lfn")? },
+        "catalog" => match args.required("catalog-subcommand")?.as_str() {
+            "compact" => Command::CatalogCompact { budget_mb: args.opt_parse("--budget-mb")? },
+            "stats" => Command::CatalogStats,
+            other => return Err(format!("unknown catalog subcommand `{other}`")),
+        },
         "se" => match args.required("se-subcommand")?.as_str() {
             "list" => Command::SeList,
             "kill" => Command::SeKill { name: args.required("name")? },
@@ -304,6 +317,26 @@ mod tests {
         assert!(p("repair-all --max-files ten").is_err());
         // The usage text documents the new verbs next to `repair <lfn>`.
         for verb in ["scrub", "repair-all", "drain"] {
+            assert!(USAGE.contains(verb), "usage must document `{verb}`");
+        }
+    }
+
+    #[test]
+    fn catalog_subcommands() {
+        assert_eq!(p("catalog stats").unwrap().command, Command::CatalogStats);
+        assert_eq!(
+            p("catalog compact").unwrap().command,
+            Command::CatalogCompact { budget_mb: None }
+        );
+        assert_eq!(
+            p("catalog compact --budget-mb 64").unwrap().command,
+            Command::CatalogCompact { budget_mb: Some(64) }
+        );
+        assert!(p("catalog compact --budget-mb lots").is_err());
+        assert!(p("catalog defrag").is_err());
+        assert!(p("catalog").is_err());
+        // The usage text documents the new verbs.
+        for verb in ["catalog compact", "catalog stats"] {
             assert!(USAGE.contains(verb), "usage must document `{verb}`");
         }
     }

@@ -346,6 +346,51 @@ pub fn dispatch(cli: &Cli) -> Result<()> {
             }
             Ok(())
         }
+        Command::CatalogCompact { budget_mb } => {
+            let ws = Workspace::open(root)?;
+            let budget = budget_mb.map_or(u64::MAX, |mb| mb.saturating_mul(1_000_000));
+            let t0 = std::time::Instant::now();
+            let report = ws.dfc.compact_journal(budget)?;
+            println!(
+                "compacted: {} shard checkpoint(s), {} sealed segment(s) removed ({}) in {}",
+                report.checkpoints,
+                report.segments_removed,
+                fmt_bytes(report.bytes_removed),
+                fmt_secs(t0.elapsed().as_secs_f64())
+            );
+            Ok(())
+        }
+        Command::CatalogStats => {
+            let ws = Workspace::open(root)?;
+            let stats = ws.dfc.journal_stats()?;
+            let (dirs, files) = ws.dfc.counts();
+            println!(
+                "catalogue: {dirs} dir(s), {files} file(s) over {} journaled shard(s)",
+                stats.len()
+            );
+            let (mut live, mut garbage) = (0u64, 0u64);
+            for (i, s) in stats.iter().enumerate() {
+                let ckpt = s
+                    .last_checkpoint_seg
+                    .map_or("none".to_string(), |n| format!("seg-{n}"));
+                println!(
+                    "  shard {i}: {} segment(s), live {}, garbage {}, last checkpoint {}, {} op(s) since",
+                    s.segments,
+                    fmt_bytes(s.live_bytes),
+                    fmt_bytes(s.garbage_bytes),
+                    ckpt,
+                    s.ops_since_checkpoint
+                );
+                live += s.live_bytes;
+                garbage += s.garbage_bytes;
+            }
+            println!(
+                "total: live {}, garbage {} (run `drs catalog compact` to reclaim)",
+                fmt_bytes(live),
+                fmt_bytes(garbage)
+            );
+            Ok(())
+        }
         Command::SeList => {
             let ws = Workspace::open(root)?;
             println!("{} SEs, availability {:.0}%", ws.registry.len(), ws.registry.availability() * 100.0);

@@ -1,9 +1,9 @@
 //! The `drs` command-line interface.
 //!
 //! A workspace directory (default `./drs-workspace`, or `--workspace DIR`)
-//! holds the catalog snapshot (`catalog.json`), the config (`drs.json`)
-//! and one subdirectory per (directory-backed) SE. Commands mirror the
-//! paper's tool plus the further-work features:
+//! holds the catalogue's per-shard write-ahead journal (`journal/`), the
+//! config (`drs.json`) and one subdirectory per (directory-backed) SE.
+//! Commands mirror the paper's tool plus the further-work features:
 //!
 //! ```text
 //! drs init [--ses N]                create a workspace
@@ -18,6 +18,7 @@
 //! drs repair-all [--max-files N]    prioritized repair of degraded files
 //! drs drain <se-name>               evacuate all chunks off an SE
 //! drs rm <lfn>                      delete file + chunks
+//! drs catalog compact|stats         journal checkpoint/GC + health report
 //! drs se list|kill|revive           SE management / failure injection
 //! drs durability [--p 0.9]          the §1.1 comparison table
 //! drs meta <lfn>                    show catalog metadata

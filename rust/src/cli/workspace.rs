@@ -3,12 +3,22 @@
 //! Layout:
 //! ```text
 //! <workspace>/
-//!   drs.json           config (see config module)
-//!   catalog.json       DFC snapshot, saved after every mutating command
-//!   ses/<NAME>/        one directory per (local) storage element
-//!   down_ses.json      names of SEs currently marked unavailable
-//!   scrub_cursor.json  incremental-scrub resume point (scrub --incremental)
+//!   drs.json                     config (see config module)
+//!   journal/shard-<i>/seg-<n>.log  catalogue write-ahead journal: every
+//!                                mutation appends O(1) records to the
+//!                                owning shard's segment log
+//!   catalog.json.migrated        legacy whole-snapshot catalogue, kept
+//!                                (renamed) after one-time migration
+//!   ses/<NAME>/                  one directory per (local) storage element
+//!   down_ses.json                names of SEs currently marked unavailable
+//!   scrub_cursor.json            incremental-scrub resume point
 //! ```
+//!
+//! Opening a pre-journal workspace (a `catalog.json` and no `journal/`)
+//! migrates transparently: the snapshot is loaded once, partitioned,
+//! checkpointed into a fresh journal, and the legacy file renamed out of
+//! the way. All small state files are written crash-safely via
+//! [`crate::util::atomic_write`].
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
@@ -47,19 +57,38 @@ impl Workspace {
         }
         std::fs::create_dir_all(root.join("ses"))?;
         config.save(&root.join("drs.json"))?;
-        Dfc::new().save(&root.join("catalog.json"))?;
-        std::fs::write(root.join("down_ses.json"), "[]")?;
+        crate::util::atomic_write(&root.join("down_ses.json"), b"[]")?;
         Self::open(root)
     }
 
-    /// Open an existing workspace.
+    /// Open an existing workspace, recovering the catalogue from its
+    /// per-shard journal (or migrating a legacy `catalog.json` into a
+    /// fresh journal on first open).
     pub fn open(root: &Path) -> Result<Self> {
         let config = Config::load(&root.join("drs.json"))?;
-        let dfc = if root.join("catalog.json").exists() {
-            ShardedDfc::load(&root.join("catalog.json"), config.catalog_shards)?
-        } else {
-            ShardedDfc::new(config.catalog_shards)
-        };
+        let journal_dir = root.join("journal");
+        let legacy = root.join("catalog.json");
+        if !journal_dir.is_dir() && legacy.exists() {
+            // One-time migration from the whole-snapshot format: load,
+            // partition, checkpoint into a *staging* journal, then
+            // atomically move it into place and retire the legacy file.
+            // A crash at any point leaves either a readable legacy
+            // snapshot (migration re-runs) or a complete journal.
+            let staging = root.join("journal.migrating");
+            let _ = std::fs::remove_dir_all(&staging);
+            let mut migrated =
+                ShardedDfc::from_dfc(&Dfc::load(&legacy)?, config.catalog_shards)?;
+            migrated.attach_journal(&staging, config.journal())?;
+            drop(migrated); // close staging writers before the rename
+            std::fs::rename(&staging, &journal_dir)?;
+        }
+        if journal_dir.is_dir() && legacy.exists() {
+            // Retire the legacy snapshot (also heals a crash that landed
+            // between the two renames on a previous open).
+            std::fs::rename(&legacy, root.join("catalog.json.migrated"))?;
+        }
+        let dfc =
+            ShardedDfc::open_journaled(&journal_dir, config.catalog_shards, config.journal())?;
         let down: Vec<String> = std::fs::read_to_string(root.join("down_ses.json"))
             .ok()
             .and_then(|t| Json::parse(&t).ok())
@@ -157,13 +186,20 @@ impl Workspace {
             }
             None => Json::obj(vec![]),
         };
-        std::fs::write(self.root.join("scrub_cursor.json"), j.to_string())?;
-        Ok(())
+        crate::util::atomic_write(&self.root.join("scrub_cursor.json"), j.to_string().as_bytes())
     }
 
-    /// Persist the catalog and SE availability after a mutating command.
+    /// How much sealed journal garbage one post-command housekeeping
+    /// pass may reclaim. Small enough that `save` stays O(1)-ish; the
+    /// rest is left for the next command or `drs catalog compact`.
+    const SAVE_GC_BUDGET: u64 = 4 << 20;
+
+    /// Persist SE availability after a mutating command and do a bounded
+    /// pass of journal housekeeping. The catalogue itself needs no save:
+    /// every mutation was already appended to its shard's write-ahead
+    /// journal when it happened.
     pub fn save(&self) -> Result<()> {
-        self.dfc.save(&self.root.join("catalog.json"))?;
+        let _ = self.dfc.journal_gc(Self::SAVE_GC_BUDGET)?;
         let down: Vec<Json> = self
             .registry
             .all()
@@ -171,8 +207,10 @@ impl Workspace {
             .filter(|se| !se.is_available())
             .map(|se| Json::str(se.name()))
             .collect();
-        std::fs::write(self.root.join("down_ses.json"), Json::Arr(down).to_string())?;
-        Ok(())
+        crate::util::atomic_write(
+            &self.root.join("down_ses.json"),
+            Json::Arr(down).to_string().as_bytes(),
+        )
     }
 }
 

@@ -13,6 +13,8 @@
 //!   "placement": "round-robin",
 //!   "workers": 5,
 //!   "catalog_shards": 8,
+//!   "journal_segment_bytes": 1048576,
+//!   "journal_checkpoint_ops": 1024,
 //!   "ses": [
 //!     {"name": "UKI-GLASGOW", "region": "uk"},
 //!     {"name": "UKI-IC", "region": "uk"}
@@ -111,6 +113,12 @@ pub struct Config {
     /// ([`crate::catalog::ShardedDfc`]); 1 reproduces the old
     /// single-mutex catalogue.
     pub catalog_shards: usize,
+    /// Catalogue journal: roll to a new segment file once the current
+    /// one exceeds this many bytes.
+    pub journal_segment_bytes: u64,
+    /// Catalogue journal: write a per-shard checkpoint after this many
+    /// appended ops (bounds recovery replay length).
+    pub journal_checkpoint_ops: u64,
 }
 
 impl Default for Config {
@@ -130,6 +138,8 @@ impl Default for Config {
                 .collect(),
             network: None,
             catalog_shards: crate::catalog::DEFAULT_SHARDS,
+            journal_segment_bytes: crate::catalog::DEFAULT_SEGMENT_BYTES,
+            journal_checkpoint_ops: crate::catalog::DEFAULT_CHECKPOINT_OPS,
         }
     }
 }
@@ -160,6 +170,12 @@ impl Config {
         }
         if let Some(s) = j.get("catalog_shards").and_then(Json::as_u64) {
             cfg.catalog_shards = (s as usize).max(1);
+        }
+        if let Some(b) = j.get("journal_segment_bytes").and_then(Json::as_u64) {
+            cfg.journal_segment_bytes = b.max(1);
+        }
+        if let Some(n) = j.get("journal_checkpoint_ops").and_then(Json::as_u64) {
+            cfg.journal_checkpoint_ops = n.max(1);
         }
         if let Some(ses) = j.get("ses").and_then(Json::as_arr) {
             cfg.ses = ses
@@ -215,6 +231,8 @@ impl Config {
             ("client_region", Json::str(self.client_region.clone())),
             ("workers", Json::num(self.workers as f64)),
             ("catalog_shards", Json::num(self.catalog_shards as f64)),
+            ("journal_segment_bytes", Json::num(self.journal_segment_bytes as f64)),
+            ("journal_checkpoint_ops", Json::num(self.journal_checkpoint_ops as f64)),
             (
                 "ses",
                 Json::Arr(
@@ -253,18 +271,36 @@ impl Config {
         Ok(cfg)
     }
 
-    /// Write the config to a file.
+    /// Write the config to a file (crash-safe: temp file + rename).
     pub fn save(&self, path: &Path) -> Result<()> {
-        std::fs::write(path, self.to_json().to_string())?;
-        Ok(())
+        crate::util::atomic_write(path, self.to_json().to_string().as_bytes())
+    }
+
+    /// The catalogue journal tuning this config describes.
+    pub fn journal(&self) -> crate::catalog::JournalConfig {
+        crate::catalog::JournalConfig {
+            segment_bytes: self.journal_segment_bytes.max(1),
+            checkpoint_ops: self.journal_checkpoint_ops.max(1),
+        }
     }
 
     /// Apply environment overrides: `DRS_VO`, `DRS_WORKERS`, `DRS_K`,
-    /// `DRS_M`, `DRS_STRIPE_B`, `DRS_PLACEMENT`, `DRS_CATALOG_SHARDS`.
+    /// `DRS_M`, `DRS_STRIPE_B`, `DRS_PLACEMENT`, `DRS_CATALOG_SHARDS`,
+    /// `DRS_JOURNAL_SEGMENT_BYTES`, `DRS_JOURNAL_CHECKPOINT_OPS`.
     pub fn apply_env(&mut self) {
         if let Ok(s) = std::env::var("DRS_CATALOG_SHARDS") {
             if let Ok(s) = s.parse::<usize>() {
                 self.catalog_shards = s.max(1);
+            }
+        }
+        if let Ok(b) = std::env::var("DRS_JOURNAL_SEGMENT_BYTES") {
+            if let Ok(b) = b.parse::<u64>() {
+                self.journal_segment_bytes = b.max(1);
+            }
+        }
+        if let Ok(n) = std::env::var("DRS_JOURNAL_CHECKPOINT_OPS") {
+            if let Ok(n) = n.parse::<u64>() {
+                self.journal_checkpoint_ops = n.max(1);
             }
         }
         if let Ok(vo) = std::env::var("DRS_VO") {
@@ -331,6 +367,31 @@ mod tests {
         let j = Json::parse(r#"{"vo":"demo"}"#).unwrap();
         let c = Config::from_json(&j).unwrap();
         assert_eq!(c.catalog_shards, crate::catalog::DEFAULT_SHARDS);
+        assert_eq!(c.journal_segment_bytes, crate::catalog::DEFAULT_SEGMENT_BYTES);
+        assert_eq!(c.journal_checkpoint_ops, crate::catalog::DEFAULT_CHECKPOINT_OPS);
+    }
+
+    #[test]
+    fn journal_knobs_roundtrip_and_env() {
+        let mut c = Config::default();
+        c.journal_segment_bytes = 4096;
+        c.journal_checkpoint_ops = 32;
+        let back = Config::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.journal_segment_bytes, 4096);
+        assert_eq!(back.journal_checkpoint_ops, 32);
+        assert_eq!(back.journal(), crate::catalog::JournalConfig {
+            segment_bytes: 4096,
+            checkpoint_ops: 32
+        });
+
+        let mut c = Config::default();
+        std::env::set_var("DRS_JOURNAL_SEGMENT_BYTES", "65536");
+        std::env::set_var("DRS_JOURNAL_CHECKPOINT_OPS", "7");
+        c.apply_env();
+        std::env::remove_var("DRS_JOURNAL_SEGMENT_BYTES");
+        std::env::remove_var("DRS_JOURNAL_CHECKPOINT_OPS");
+        assert_eq!(c.journal_segment_bytes, 65536);
+        assert_eq!(c.journal_checkpoint_ops, 7);
     }
 
     #[test]

@@ -1,4 +1,13 @@
 //! `EcShim`: put / get / repair / rm over erasure-coded files.
+//!
+//! Persistence note: the shim never saves the catalogue itself. Every
+//! mutation it performs (`mkdir_p`/`set_meta` for the layout directory,
+//! `add_file`/`register_replica` per chunk, replica swaps during
+//! repair, `remove_dir` on `rm`) is lowered by [`ShardedDfc`] to a
+//! typed [`crate::catalog::CatalogOp`] and appended to the owning
+//! shard's write-ahead journal at the moment it happens — an upload
+//! costs O(chunks) journal records, not an O(namespace) snapshot
+//! rewrite after the command.
 
 use std::collections::BTreeSet;
 use std::sync::Arc;

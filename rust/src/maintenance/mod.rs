@@ -30,6 +30,12 @@
 //! Counts and timings are recorded in [`crate::metrics::global`] under
 //! `maintenance.*`; the CLI surfaces the loop as `drs scrub`,
 //! `drs repair-all` and `drs drain <se>`.
+//!
+//! Repair and drain mutate the catalogue through [`crate::catalog::ShardedDfc`]
+//! only (replica swaps, chunk re-registration), so on a journal-backed
+//! store every fix they apply is durably appended to the owning shard's
+//! write-ahead journal as it lands — a maintenance run interrupted by a
+//! crash keeps all completed repairs after recovery.
 
 pub mod drain;
 pub mod repair;

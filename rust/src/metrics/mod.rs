@@ -2,6 +2,15 @@
 //!
 //! The shim and benches record transfer/encode timings here; reports are
 //! plain text (EXPERIMENTS.md quality, no external sinks).
+//!
+//! Catalogue persistence instruments itself under `catalog.journal.*`:
+//! `appends` / `bytes` (records and framed bytes written),
+//! `checkpoints` (automatic + forced shard snapshots), `recoveries`
+//! (journal-backed opens), `torn_truncations` (bad-tail cuts during
+//! recovery), `replay_skipped` (records that no longer applied —
+//! downstream of a previously surfaced write failure) and
+//! `checkpoint_failures` (auto-checkpoints that failed and will be
+//! retried; the triggering append itself was durable).
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;

@@ -6,6 +6,36 @@ pub mod json;
 pub mod prng;
 pub mod sha256;
 
+/// Crash-safe file write: the bytes land in a hidden temp sibling, are
+/// fsync'd, and the temp file is atomically renamed over `path`. A crash
+/// at any point leaves either the old file or the new one — never a torn
+/// mix. Used for every workspace state file (`drs.json`, `down_ses.json`,
+/// `scrub_cursor.json`, catalogue snapshots and journal checkpoints).
+pub fn atomic_write(path: &std::path::Path, bytes: &[u8]) -> crate::Result<()> {
+    use std::io::Write;
+    let name = path
+        .file_name()
+        .and_then(|n| n.to_str())
+        .ok_or_else(|| crate::Error::Config(format!("bad path: {}", path.display())))?;
+    let tmp = path.with_file_name(format!(".{name}.tmp"));
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(bytes)?;
+        f.sync_all()?;
+    }
+    if let Err(e) = std::fs::rename(&tmp, path) {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e.into());
+    }
+    // Best-effort directory fsync so the rename itself is durable.
+    if let Some(dir) = path.parent() {
+        if let Ok(d) = std::fs::File::open(dir) {
+            let _ = d.sync_all();
+        }
+    }
+    Ok(())
+}
+
 /// Format a byte count human-readably (`1.5 MB`, `768 kB`, ...).
 pub fn fmt_bytes(n: u64) -> String {
     const UNITS: [&str; 5] = ["B", "kB", "MB", "GB", "TB"];
@@ -46,5 +76,28 @@ mod tests {
     fn secs_units() {
         assert_eq!(fmt_secs(6.04), "6.0s");
         assert_eq!(fmt_secs(206.0), "3m26.0s");
+    }
+
+    #[test]
+    fn atomic_write_replaces_and_cleans_up() {
+        let dir = std::env::temp_dir().join(format!(
+            "drs-aw-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let target = dir.join("state.json");
+        atomic_write(&target, b"v1").unwrap();
+        assert_eq!(std::fs::read(&target).unwrap(), b"v1");
+        atomic_write(&target, b"version-two").unwrap();
+        assert_eq!(std::fs::read(&target).unwrap(), b"version-two");
+        // No temp litter left behind.
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().contains("tmp"))
+            .collect();
+        assert!(leftovers.is_empty(), "{leftovers:?}");
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

@@ -1,0 +1,217 @@
+//! Recovery tests for the per-shard catalogue write-ahead journal:
+//! torn-tail truncation, replay equivalence over randomized op
+//! sequences, legacy `catalog.json` migration, and workspace-level
+//! crash/kill persistence.
+
+use std::path::PathBuf;
+
+use drs::catalog::{Dfc, FileEntry, JournalConfig, MetaValue, ShardedDfc};
+use drs::cli::Workspace;
+use drs::config::Config;
+use drs::util::prng::Rng;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(format!(
+        "drs-jtest-{tag}-{}-{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    let _ = std::fs::remove_dir_all(&p);
+    p
+}
+
+fn snap(dfc: &ShardedDfc) -> String {
+    dfc.snapshot().to_json().to_string()
+}
+
+/// Apply one random namespace mutation, mirrored to a journaled store
+/// and an in-memory reference store (success/failure must agree).
+fn random_op(rng: &mut Rng, a: &ShardedDfc, b: &ShardedDfc) {
+    let dir = format!("/vo/d{}", rng.index(8));
+    let file = format!("{dir}/f{}", rng.index(6));
+    let se = format!("SE-{:02}", rng.index(4));
+    match rng.index(8) {
+        0 => {
+            let deep = format!("{dir}/sub{}", rng.index(3));
+            assert_eq!(a.mkdir_p(&deep).is_ok(), b.mkdir_p(&deep).is_ok());
+        }
+        1 => {
+            let entry = FileEntry { size: rng.next_u64() >> 40, ..Default::default() };
+            assert_eq!(
+                a.add_file(&file, entry.clone()).is_ok(),
+                b.add_file(&file, entry).is_ok()
+            );
+        }
+        2 => assert_eq!(a.remove_file(&file).is_ok(), b.remove_file(&file).is_ok()),
+        3 => {
+            let sub = format!("{dir}/sub{}", rng.index(3));
+            assert_eq!(a.remove_dir(&sub).is_ok(), b.remove_dir(&sub).is_ok());
+        }
+        4 => assert_eq!(
+            a.register_replica(&file, &se, &file).is_ok(),
+            b.register_replica(&file, &se, &file).is_ok()
+        ),
+        5 => assert_eq!(
+            a.remove_replica(&file, &se).is_ok(),
+            b.remove_replica(&file, &se).is_ok()
+        ),
+        6 => {
+            let v = MetaValue::Int(rng.index(100) as i64);
+            assert_eq!(
+                a.set_meta(&dir, "tag", v.clone()).is_ok(),
+                b.set_meta(&dir, "tag", v).is_ok()
+            );
+        }
+        _ => {
+            let v = MetaValue::Str(format!("v{}", rng.index(10)));
+            assert_eq!(
+                a.set_meta(&file, "owner", v.clone()).is_ok(),
+                b.set_meta(&file, "owner", v).is_ok()
+            );
+        }
+    }
+}
+
+#[test]
+fn replay_equivalence_over_randomized_ops() {
+    // Aggressive segment rolls + checkpoints so recovery exercises the
+    // checkpoint-plus-tail path, not just a single linear replay.
+    let cfg = JournalConfig { segment_bytes: 512, checkpoint_ops: 13 };
+    for seed in [1u64, 7, 42] {
+        let dir = tmpdir(&format!("replay-{seed}"));
+        let mut rng = Rng::new(seed);
+        let journaled = ShardedDfc::open_journaled(&dir, 4, cfg).unwrap();
+        let reference = ShardedDfc::new(4);
+        for d in ["/vo/d0", "/vo/d1"] {
+            journaled.mkdir_p(d).unwrap();
+            reference.mkdir_p(d).unwrap();
+        }
+        for _ in 0..300 {
+            random_op(&mut rng, &journaled, &reference);
+        }
+        assert_eq!(snap(&journaled), snap(&reference), "seed {seed}: live divergence");
+        let want = snap(&journaled);
+        drop(journaled); // "kill" the process with no final save
+
+        let recovered = ShardedDfc::open_journaled(&dir, 4, cfg).unwrap();
+        assert_eq!(snap(&recovered), want, "seed {seed}: replay divergence");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}
+
+#[test]
+fn torn_tail_loses_only_the_unacknowledged_record() {
+    let cfg = JournalConfig::default();
+    let dir = tmpdir("torn");
+    let dfc = ShardedDfc::open_journaled(&dir, 1, cfg).unwrap();
+    dfc.mkdir_p("/vo/data").unwrap();
+    for i in 0..10 {
+        dfc.add_file(&format!("/vo/data/f{i}"), FileEntry::default()).unwrap();
+    }
+    let want = snap(&dfc);
+    drop(dfc);
+
+    // Byte-level corruption of the last record in the single shard's
+    // tail segment: flip a byte inside its payload.
+    let shard = dir.join("shard-0");
+    let seg = std::fs::read_dir(&shard)
+        .unwrap()
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .max()
+        .unwrap();
+    let mut bytes = std::fs::read(&seg).unwrap();
+    let n = bytes.len();
+    bytes[n - 2] ^= 0xFF;
+    std::fs::write(&seg, &bytes).unwrap();
+
+    let recovered = ShardedDfc::open_journaled(&dir, 1, cfg).unwrap();
+    // Exactly the corrupted record is gone — every earlier append
+    // (including all of /vo/data's other files) survived.
+    assert!(recovered.is_dir("/vo/data"));
+    for i in 0..9 {
+        assert!(recovered.is_file(&format!("/vo/data/f{i}")), "f{i} must survive");
+    }
+    assert!(!recovered.is_file("/vo/data/f9"), "torn record must be dropped");
+    assert_ne!(snap(&recovered), want);
+    // Re-adding the lost file converges back to the acknowledged state.
+    recovered.add_file("/vo/data/f9", FileEntry::default()).unwrap();
+    assert_eq!(snap(&recovered), want);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn legacy_catalog_json_migrates_on_first_open() {
+    let root = tmpdir("migrate");
+    std::fs::create_dir_all(root.join("ses")).unwrap();
+
+    // Fabricate a pre-journal workspace by hand: drs.json + catalog.json.
+    let mut cfg = Config::default();
+    cfg.ses.truncate(3);
+    cfg.catalog_shards = 4;
+    cfg.save(&root.join("drs.json")).unwrap();
+    std::fs::write(root.join("down_ses.json"), "[]").unwrap();
+    let mut legacy = Dfc::new();
+    legacy.mkdir_p("/vo/data/f1.ec").unwrap();
+    legacy.set_meta("/vo/data/f1.ec", "drs_ec_total", MetaValue::Int(6)).unwrap();
+    legacy.add_file("/vo/data/f1.ec/c0", FileEntry { size: 7, ..Default::default() }).unwrap();
+    legacy.register_replica("/vo/data/f1.ec/c0", "SE-00", "/pfn/c0").unwrap();
+    legacy.save(&root.join("catalog.json")).unwrap();
+    let want = legacy.to_json().to_string();
+
+    // First open: migrated into a journal, legacy file moved aside.
+    let ws = Workspace::open(&root).unwrap();
+    assert!(ws.dfc.is_journaled());
+    assert_eq!(snap(&ws.dfc), want);
+    assert!(!root.join("catalog.json").exists());
+    assert!(root.join("catalog.json.migrated").exists());
+    assert!(root.join("journal").join("shard-0").is_dir());
+    // The migrated snapshot is already durable: a mutation plus an
+    // immediate "kill" (no save) must both survive reopening.
+    ws.dfc.add_file("/vo/data/f1.ec/c1", FileEntry { size: 8, ..Default::default() }).unwrap();
+    drop(ws);
+
+    let ws2 = Workspace::open(&root).unwrap();
+    assert!(ws2.dfc.is_file("/vo/data/f1.ec/c0"));
+    assert!(ws2.dfc.is_file("/vo/data/f1.ec/c1"));
+    assert_eq!(
+        ws2.dfc.get_meta("/vo/data/f1.ec", "drs_ec_total").unwrap(),
+        Some(MetaValue::Int(6))
+    );
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn workspace_mutations_persist_without_save() {
+    // The acceptance property: an acknowledged mutating op survives a
+    // process kill between journal append and any checkpoint/save.
+    let root = tmpdir("nosave");
+    let mut cfg = Config::default();
+    cfg.ses.truncate(2);
+    let ws = Workspace::init(&root, cfg).unwrap();
+    ws.dfc.mkdir_p("/vo/ack").unwrap();
+    ws.dfc.add_file("/vo/ack/f", FileEntry { size: 1, ..Default::default() }).unwrap();
+    drop(ws); // no Workspace::save — the journal already has the ops
+
+    let ws2 = Workspace::open(&root).unwrap();
+    assert!(ws2.dfc.is_file("/vo/ack/f"));
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn compaction_preserves_state_and_bounds_replay() {
+    let cfg = JournalConfig { segment_bytes: 1024, checkpoint_ops: u64::MAX };
+    let dir = tmpdir("compact");
+    let dfc = ShardedDfc::open_journaled(&dir, 3, cfg).unwrap();
+    for i in 0..60 {
+        dfc.mkdir_p(&format!("/vo/d{i}")).unwrap();
+    }
+    let want = snap(&dfc);
+    let report = dfc.compact_journal(u64::MAX).unwrap();
+    assert_eq!(report.checkpoints, 3, "every shard gets a checkpoint");
+    let stats = dfc.journal_stats().unwrap();
+    assert!(stats.iter().all(|s| s.garbage_bytes == 0 && s.ops_since_checkpoint == 0));
+    drop(dfc);
+    let recovered = ShardedDfc::open_journaled(&dir, 3, cfg).unwrap();
+    assert_eq!(snap(&recovered), want);
+    std::fs::remove_dir_all(&dir).unwrap();
+}

@@ -75,6 +75,13 @@ fn full_workflow() {
     assert_eq!(run(&ws, &["rm", "/vo/data/run42.dat"]), 0);
     assert_eq!(run(&ws, &["stat", "/vo/data/run42.dat"]), 1);
 
+    // Journal housekeeping: stats + forced compaction both succeed on a
+    // workspace that has seen puts, repairs and removes.
+    assert_eq!(run(&ws, &["catalog", "stats"]), 0);
+    assert_eq!(run(&ws, &["catalog", "compact"]), 0);
+    assert_eq!(run(&ws, &["catalog", "compact", "--budget-mb", "1"]), 0);
+    assert_eq!(run(&ws, &["catalog", "frobnicate"]), 2);
+
     // misc commands exercise without error
     assert_eq!(run(&ws, &["durability", "--p", "0.9"]), 0);
     assert_eq!(run(&ws, &["info"]), 0);
