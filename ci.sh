@@ -15,6 +15,13 @@ echo "== tier-1: build + test =="
 cargo build --release
 cargo test -q
 
+echo "== maintenance daemon gate =="
+# The `drs maintain` scheduler must keep converging unattended: the
+# daemon_* integration tests run the loop with zero-length tick
+# intervals (bounded tick counts) so the gate stays fast. Named
+# explicitly so a narrowed tier-1 invocation can never silently drop it.
+cargo test -q --test maintenance daemon_
+
 echo "== catalogue journal recovery tests (crash-consistency gate) =="
 # Intentionally re-runs a suite the line above already covered: the
 # journal recovery tests gate crash consistency and must fail loudly,

@@ -23,6 +23,16 @@ COMMANDS:
                                                scrub, then repair degraded
                                                files, smallest margin first
     drain <se-name> [--workers W]              evacuate all chunks off an SE
+    maintain [--root PATH] [--interval-s S] [--slice N] [--deep-every N]
+             [--max-files N] [--max-mb MB] [--workers W] [--ticks N]
+                                               long-running maintenance daemon:
+                                               incremental scrub + budgeted
+                                               repair + journal GC on a cadence;
+                                               writes maintain_status.json;
+                                               SIGINT/SIGTERM (or --ticks) ends
+                                               the run after the in-flight pass
+    maintain --stop                            ask a running daemon to stop
+                                               cleanly (writes maintain.stop)
     rm <lfn>
     verify <lfn>
     read <lfn> <offset> <len>
@@ -68,6 +78,17 @@ pub enum Command {
         shallow: bool,
     },
     Drain { se: String, workers: Option<usize> },
+    Maintain {
+        root: String,
+        interval_s: Option<f64>,
+        slice: Option<usize>,
+        deep_every: Option<u64>,
+        max_files: Option<usize>,
+        max_mb: Option<u64>,
+        workers: Option<usize>,
+        ticks: Option<u64>,
+        stop: bool,
+    },
     Rm { lfn: String },
     Verify { lfn: String },
     Read { lfn: String, offset: u64, len: usize },
@@ -197,6 +218,17 @@ pub fn parse_args(argv: Vec<String>) -> Result<Cli, String> {
             let workers = args.opt_parse("--workers")?;
             Command::Drain { se: args.required("se-name")?, workers }
         }
+        "maintain" => Command::Maintain {
+            root: args.opt_value("--root")?.unwrap_or_else(|| "/".into()),
+            interval_s: args.opt_parse("--interval-s")?,
+            slice: args.opt_parse("--slice")?,
+            deep_every: args.opt_parse("--deep-every")?,
+            max_files: args.opt_parse("--max-files")?,
+            max_mb: args.opt_parse("--max-mb")?,
+            workers: args.opt_parse("--workers")?,
+            ticks: args.opt_parse("--ticks")?,
+            stop: args.opt_flag("--stop"),
+        },
         "rm" => Command::Rm { lfn: args.required("lfn")? },
         "verify" => Command::Verify { lfn: args.required("lfn")? },
         "read" => Command::Read {
@@ -316,9 +348,51 @@ mod tests {
         assert!(p("drain").is_err());
         assert!(p("repair-all --max-files ten").is_err());
         // The usage text documents the new verbs next to `repair <lfn>`.
-        for verb in ["scrub", "repair-all", "drain"] {
+        for verb in ["scrub", "repair-all", "drain", "maintain"] {
             assert!(USAGE.contains(verb), "usage must document `{verb}`");
         }
+    }
+
+    #[test]
+    fn maintain_command() {
+        assert_eq!(
+            p("maintain").unwrap().command,
+            Command::Maintain {
+                root: "/".into(),
+                interval_s: None,
+                slice: None,
+                deep_every: None,
+                max_files: None,
+                max_mb: None,
+                workers: None,
+                ticks: None,
+                stop: false,
+            }
+        );
+        assert_eq!(
+            p("maintain --root /vo --interval-s 0.5 --slice 16 --deep-every 3 \
+               --max-files 4 --max-mb 100 --workers 2 --ticks 10")
+            .unwrap()
+            .command,
+            Command::Maintain {
+                root: "/vo".into(),
+                interval_s: Some(0.5),
+                slice: Some(16),
+                deep_every: Some(3),
+                max_files: Some(4),
+                max_mb: Some(100),
+                workers: Some(2),
+                ticks: Some(10),
+                stop: false,
+            }
+        );
+        assert!(matches!(
+            p("maintain --stop").unwrap().command,
+            Command::Maintain { stop: true, .. }
+        ));
+        assert!(p("maintain --interval-s soon").is_err());
+        assert!(p("maintain --ticks forever").is_err());
+        assert!(USAGE.contains("maintain --stop"));
     }
 
     #[test]

@@ -5,6 +5,7 @@ use std::path::Path;
 use crate::config::Config;
 use crate::dfm::{GetOptions, PutOptions};
 use crate::ec::EcParams;
+use crate::maintenance::daemon::{self, Daemon, DaemonOptions, StopToken};
 use crate::maintenance::{DrainOptions, Maintainer, RepairBudget, ScrubOptions};
 use crate::sim::durability;
 use crate::transfer::RetryPolicy;
@@ -304,6 +305,65 @@ pub fn dispatch(cli: &Cli) -> Result<()> {
                 )));
             }
             Ok(())
+        }
+        Command::Maintain {
+            root: scrub_root,
+            interval_s,
+            slice,
+            deep_every,
+            max_files,
+            max_mb,
+            workers,
+            ticks,
+            stop,
+        } => {
+            let ws = Workspace::open(root)?;
+            let stop_path = daemon::stop_file_path(&ws.root);
+            if *stop {
+                crate::util::atomic_write(&stop_path, b"stop\n")?;
+                println!(
+                    "stop requested: wrote {} (the daemon finishes its in-flight pass, \
+                     dumps a final status and removes the file)",
+                    stop_path.display()
+                );
+                return Ok(());
+            }
+            let cfg = &ws.config;
+            let mut budget =
+                RepairBudget::default().with_workers(workers.unwrap_or(cfg.workers));
+            let files_cap = max_files.unwrap_or(cfg.maintain_repair_budget_files);
+            if files_cap > 0 {
+                budget = budget.with_max_files(files_cap);
+            }
+            let mb_cap = max_mb.unwrap_or(cfg.maintain_repair_budget_mb);
+            if mb_cap > 0 {
+                budget = budget.with_max_bytes(mb_cap.saturating_mul(1_000_000));
+            }
+            let interval = interval_s.unwrap_or(cfg.maintain_scrub_interval_s).max(0.0);
+            let interval_d = std::time::Duration::try_from_secs_f64(interval)
+                .map_err(|e| Error::Config(format!("bad maintain interval {interval}: {e}")))?;
+            let opts = DaemonOptions::default()
+                .with_root(scrub_root.clone())
+                .with_interval(interval_d)
+                .with_slice(slice.unwrap_or(cfg.maintain_scrub_slice))
+                .with_deep_every(deep_every.unwrap_or(cfg.maintain_deep_every))
+                .with_budget(budget)
+                .with_workers(workers.unwrap_or(cfg.workers))
+                .with_max_ticks(*ticks);
+            let shim = ws.shim();
+            let stop_token = StopToken::with_stop_file(&stop_path);
+            stop_token.hook_signals();
+            println!(
+                "maintenance daemon: root {} every {interval}s, slice {}, deep every {} \
+                 pass(es); status {}; stop with SIGINT/SIGTERM or `drs maintain --stop`",
+                opts.root,
+                opts.scrub_slice,
+                opts.deep_every,
+                daemon::status_path(&ws.root).display()
+            );
+            let report = Daemon::new(&shim, opts, ws.root.clone()).run(&stop_token)?;
+            println!("daemon exit ({}): {}", report.stopped_by, report.summary());
+            ws.save()
         }
         Command::Rm { lfn } => {
             let ws = Workspace::open(root)?;

@@ -17,6 +17,9 @@
 //!                                   (incremental: resume-cursor slices)
 //! drs repair-all [--max-files N]    prioritized repair of degraded files
 //! drs drain <se-name>               evacuate all chunks off an SE
+//! drs maintain [--ticks N] [--stop] unattended scrub/repair daemon
+//!                                   (incremental slices, deep cadence,
+//!                                   budgeted repairs, status file)
 //! drs rm <lfn>                      delete file + chunks
 //! drs catalog compact|stats         journal checkpoint/GC + health report
 //! drs se list|kill|revive           SE management / failure injection

@@ -11,7 +11,12 @@
 //!                                (renamed) after one-time migration
 //!   ses/<NAME>/                  one directory per (local) storage element
 //!   down_ses.json                names of SEs currently marked unavailable
-//!   scrub_cursor.json            incremental-scrub resume point
+//!   scrub_cursor.json            incremental-scrub resume point (shared by
+//!                                `drs scrub --incremental` and `drs maintain`)
+//!   maintain_status.json         `drs maintain` daemon status, rewritten
+//!                                every tick
+//!   maintain.stop                present while a daemon stop is pending
+//!                                (`drs maintain --stop`)
 //! ```
 //!
 //! Opening a pre-journal workspace (a `catalog.json` and no `journal/`)
@@ -164,29 +169,20 @@ impl Workspace {
     }
 
     /// Incremental-scrub cursor from the previous `scrub --incremental`
-    /// run *for the same scrub root*: the last EC directory examined, or
-    /// `None` when the previous walk completed, no cursor has been saved
-    /// yet, or the saved cursor belongs to a different root (a cursor
-    /// from `/vo/b` must not filter a walk of `/vo/a`).
+    /// or `drs maintain` run *for the same scrub root*: the last EC
+    /// directory examined, or `None` when the previous walk completed, no
+    /// cursor has been saved yet, or the saved cursor belongs to a
+    /// different root (a cursor from `/vo/b` must not filter a walk of
+    /// `/vo/a`). Delegates to [`crate::maintenance::daemon::load_scrub_cursor`]
+    /// so manual scrubs and the daemon share one resume point.
     pub fn load_scrub_cursor(&self, scrub_root: &str) -> Option<String> {
-        let text = std::fs::read_to_string(self.root.join("scrub_cursor.json")).ok()?;
-        let j = Json::parse(&text).ok()?;
-        if j.get("root")?.as_str()? != scrub_root {
-            return None;
-        }
-        j.get("after")?.as_str().map(str::to_string)
+        crate::maintenance::daemon::load_scrub_cursor(&self.root, scrub_root)
     }
 
     /// Persist (or clear, with `None`) the incremental-scrub cursor,
     /// tagged with the scrub root it belongs to.
     pub fn save_scrub_cursor(&self, scrub_root: &str, cursor: Option<&str>) -> Result<()> {
-        let j = match cursor {
-            Some(c) => {
-                Json::obj(vec![("root", Json::str(scrub_root)), ("after", Json::str(c))])
-            }
-            None => Json::obj(vec![]),
-        };
-        crate::util::atomic_write(&self.root.join("scrub_cursor.json"), j.to_string().as_bytes())
+        crate::maintenance::daemon::save_scrub_cursor(&self.root, scrub_root, cursor)
     }
 
     /// How much sealed journal garbage one post-command housekeeping

@@ -15,6 +15,11 @@
 //!   "catalog_shards": 8,
 //!   "journal_segment_bytes": 1048576,
 //!   "journal_checkpoint_ops": 1024,
+//!   "maintain_scrub_interval_s": 30.0,
+//!   "maintain_scrub_slice": 64,
+//!   "maintain_deep_every": 4,
+//!   "maintain_repair_budget_files": 0,
+//!   "maintain_repair_budget_mb": 0,
 //!   "ses": [
 //!     {"name": "UKI-GLASGOW", "region": "uk"},
 //!     {"name": "UKI-IC", "region": "uk"}
@@ -119,6 +124,19 @@ pub struct Config {
     /// Catalogue journal: write a per-shard checkpoint after this many
     /// appended ops (bounds recovery replay length).
     pub journal_checkpoint_ops: u64,
+    /// `drs maintain`: seconds the daemon sleeps between scheduler ticks.
+    pub maintain_scrub_interval_s: f64,
+    /// `drs maintain`: EC directories scrubbed per tick (0 = the whole
+    /// subtree every tick).
+    pub maintain_scrub_slice: usize,
+    /// `drs maintain`: every Nth full namespace pass runs a deep
+    /// (checksum) scrub; 0 disables deep passes, 1 makes every pass deep.
+    pub maintain_deep_every: u64,
+    /// `drs maintain`: per-tick repair budget, max files (0 = unlimited).
+    pub maintain_repair_budget_files: usize,
+    /// `drs maintain`: per-tick repair budget, max rebuilt megabytes
+    /// (0 = unlimited).
+    pub maintain_repair_budget_mb: u64,
 }
 
 impl Default for Config {
@@ -140,6 +158,11 @@ impl Default for Config {
             catalog_shards: crate::catalog::DEFAULT_SHARDS,
             journal_segment_bytes: crate::catalog::DEFAULT_SEGMENT_BYTES,
             journal_checkpoint_ops: crate::catalog::DEFAULT_CHECKPOINT_OPS,
+            maintain_scrub_interval_s: 30.0,
+            maintain_scrub_slice: 64,
+            maintain_deep_every: 4,
+            maintain_repair_budget_files: 0,
+            maintain_repair_budget_mb: 0,
         }
     }
 }
@@ -176,6 +199,21 @@ impl Config {
         }
         if let Some(n) = j.get("journal_checkpoint_ops").and_then(Json::as_u64) {
             cfg.journal_checkpoint_ops = n.max(1);
+        }
+        if let Some(s) = j.get("maintain_scrub_interval_s").and_then(Json::as_f64) {
+            cfg.maintain_scrub_interval_s = s.max(0.0);
+        }
+        if let Some(n) = j.get("maintain_scrub_slice").and_then(Json::as_u64) {
+            cfg.maintain_scrub_slice = n as usize;
+        }
+        if let Some(n) = j.get("maintain_deep_every").and_then(Json::as_u64) {
+            cfg.maintain_deep_every = n;
+        }
+        if let Some(n) = j.get("maintain_repair_budget_files").and_then(Json::as_u64) {
+            cfg.maintain_repair_budget_files = n as usize;
+        }
+        if let Some(n) = j.get("maintain_repair_budget_mb").and_then(Json::as_u64) {
+            cfg.maintain_repair_budget_mb = n;
         }
         if let Some(ses) = j.get("ses").and_then(Json::as_arr) {
             cfg.ses = ses
@@ -233,6 +271,14 @@ impl Config {
             ("catalog_shards", Json::num(self.catalog_shards as f64)),
             ("journal_segment_bytes", Json::num(self.journal_segment_bytes as f64)),
             ("journal_checkpoint_ops", Json::num(self.journal_checkpoint_ops as f64)),
+            ("maintain_scrub_interval_s", Json::Num(self.maintain_scrub_interval_s)),
+            ("maintain_scrub_slice", Json::num(self.maintain_scrub_slice as f64)),
+            ("maintain_deep_every", Json::num(self.maintain_deep_every as f64)),
+            (
+                "maintain_repair_budget_files",
+                Json::num(self.maintain_repair_budget_files as f64),
+            ),
+            ("maintain_repair_budget_mb", Json::num(self.maintain_repair_budget_mb as f64)),
             (
                 "ses",
                 Json::Arr(
@@ -286,8 +332,36 @@ impl Config {
 
     /// Apply environment overrides: `DRS_VO`, `DRS_WORKERS`, `DRS_K`,
     /// `DRS_M`, `DRS_STRIPE_B`, `DRS_PLACEMENT`, `DRS_CATALOG_SHARDS`,
-    /// `DRS_JOURNAL_SEGMENT_BYTES`, `DRS_JOURNAL_CHECKPOINT_OPS`.
+    /// `DRS_JOURNAL_SEGMENT_BYTES`, `DRS_JOURNAL_CHECKPOINT_OPS`,
+    /// `DRS_MAINTAIN_SCRUB_INTERVAL_S`, `DRS_MAINTAIN_SCRUB_SLICE`,
+    /// `DRS_MAINTAIN_DEEP_EVERY`, `DRS_MAINTAIN_REPAIR_BUDGET_FILES`,
+    /// `DRS_MAINTAIN_REPAIR_BUDGET_MB`.
     pub fn apply_env(&mut self) {
+        if let Ok(s) = std::env::var("DRS_MAINTAIN_SCRUB_INTERVAL_S") {
+            if let Ok(s) = s.parse::<f64>() {
+                self.maintain_scrub_interval_s = s.max(0.0);
+            }
+        }
+        if let Ok(n) = std::env::var("DRS_MAINTAIN_SCRUB_SLICE") {
+            if let Ok(n) = n.parse::<usize>() {
+                self.maintain_scrub_slice = n;
+            }
+        }
+        if let Ok(n) = std::env::var("DRS_MAINTAIN_DEEP_EVERY") {
+            if let Ok(n) = n.parse::<u64>() {
+                self.maintain_deep_every = n;
+            }
+        }
+        if let Ok(n) = std::env::var("DRS_MAINTAIN_REPAIR_BUDGET_FILES") {
+            if let Ok(n) = n.parse::<usize>() {
+                self.maintain_repair_budget_files = n;
+            }
+        }
+        if let Ok(n) = std::env::var("DRS_MAINTAIN_REPAIR_BUDGET_MB") {
+            if let Ok(n) = n.parse::<u64>() {
+                self.maintain_repair_budget_mb = n;
+            }
+        }
         if let Ok(s) = std::env::var("DRS_CATALOG_SHARDS") {
             if let Ok(s) = s.parse::<usize>() {
                 self.catalog_shards = s.max(1);
@@ -392,6 +466,48 @@ mod tests {
         std::env::remove_var("DRS_JOURNAL_CHECKPOINT_OPS");
         assert_eq!(c.journal_segment_bytes, 65536);
         assert_eq!(c.journal_checkpoint_ops, 7);
+    }
+
+    #[test]
+    fn maintain_knobs_roundtrip_env_and_defaults() {
+        // Old configs (no maintain_* keys) get the defaults.
+        let c = Config::from_json(&Json::parse(r#"{"vo":"demo"}"#).unwrap()).unwrap();
+        assert!((c.maintain_scrub_interval_s - 30.0).abs() < 1e-12);
+        assert_eq!(c.maintain_scrub_slice, 64);
+        assert_eq!(c.maintain_deep_every, 4);
+        assert_eq!(c.maintain_repair_budget_files, 0);
+        assert_eq!(c.maintain_repair_budget_mb, 0);
+
+        let mut c = Config::default();
+        c.maintain_scrub_interval_s = 2.5;
+        c.maintain_scrub_slice = 10;
+        c.maintain_deep_every = 7;
+        c.maintain_repair_budget_files = 3;
+        c.maintain_repair_budget_mb = 128;
+        let back = Config::from_json(&c.to_json()).unwrap();
+        assert!((back.maintain_scrub_interval_s - 2.5).abs() < 1e-12);
+        assert_eq!(back.maintain_scrub_slice, 10);
+        assert_eq!(back.maintain_deep_every, 7);
+        assert_eq!(back.maintain_repair_budget_files, 3);
+        assert_eq!(back.maintain_repair_budget_mb, 128);
+
+        let mut c = Config::default();
+        std::env::set_var("DRS_MAINTAIN_SCRUB_INTERVAL_S", "0.25");
+        std::env::set_var("DRS_MAINTAIN_SCRUB_SLICE", "5");
+        std::env::set_var("DRS_MAINTAIN_DEEP_EVERY", "2");
+        std::env::set_var("DRS_MAINTAIN_REPAIR_BUDGET_FILES", "9");
+        std::env::set_var("DRS_MAINTAIN_REPAIR_BUDGET_MB", "77");
+        c.apply_env();
+        std::env::remove_var("DRS_MAINTAIN_SCRUB_INTERVAL_S");
+        std::env::remove_var("DRS_MAINTAIN_SCRUB_SLICE");
+        std::env::remove_var("DRS_MAINTAIN_DEEP_EVERY");
+        std::env::remove_var("DRS_MAINTAIN_REPAIR_BUDGET_FILES");
+        std::env::remove_var("DRS_MAINTAIN_REPAIR_BUDGET_MB");
+        assert!((c.maintain_scrub_interval_s - 0.25).abs() < 1e-12);
+        assert_eq!(c.maintain_scrub_slice, 5);
+        assert_eq!(c.maintain_deep_every, 2);
+        assert_eq!(c.maintain_repair_budget_files, 9);
+        assert_eq!(c.maintain_repair_budget_mb, 77);
     }
 
     #[test]

@@ -29,8 +29,10 @@
 //!   (`put`/`get`/`repair`) and the whole-file replication baseline.
 //! * [`maintenance`] — the site-resilience engine over the shim:
 //!   catalogue-wide scrub (per-file health + surviving margin),
-//!   prioritized repair under a bandwidth/concurrency budget, and SE
-//!   drain/rebalance for decommissioning.
+//!   prioritized repair under a bandwidth/concurrency budget, SE
+//!   drain/rebalance for decommissioning, and the `drs maintain`
+//!   daemon ([`maintenance::daemon`]) that runs the whole loop
+//!   unattended on a cadence.
 //! * [`sim`] — deterministic discrete-event simulator calibrated to the
 //!   paper's Table 1 (setup latency + shared uplink), used by the
 //!   figure-regeneration benches; Monte-Carlo durability analysis.

@@ -1,0 +1,673 @@
+//! `drs maintain` — the long-running maintenance scheduler.
+//!
+//! The scrub/repair primitives ([`super::scrub`], [`super::repair`]) fix a
+//! cluster when an operator runs them; this module runs them *unattended*,
+//! the Ceph-style background maintenance loop the paper's small-VO pitch
+//! needs: placements stay repairable without anyone babysitting `drs
+//! scrub` / `drs repair-all` by hand. One daemon tick:
+//!
+//! 1. **Shallow incremental scrub** of the next [`DaemonOptions::scrub_slice`]
+//!    EC directories after the persisted cursor (`scrub_cursor.json`, the
+//!    same file `drs scrub --incremental` uses, so the daemon and manual
+//!    runs share one resume point).
+//! 2. **Deep scrub cadence**: once every [`DaemonOptions::deep_every`]
+//!    full namespace passes, the whole pass runs in deep (checksum) mode,
+//!    catching bit-rot that existence probes cannot see.
+//! 3. **Budgeted repair** of whatever the slice found, most-urgent first,
+//!    under the tick's [`RepairBudget`] — clients keep their bandwidth.
+//! 4. **Journal housekeeping**: a bounded GC of sealed journal segments
+//!    each tick, and a full checkpoint+GC ([`crate::catalog::ShardedDfc::compact_journal`])
+//!    when a namespace pass completes, so a daemon workspace never
+//!    balloons. No-op for in-memory (journal-less) catalogues.
+//!
+//! Between ticks the daemon sleeps [`DaemonOptions::scrub_interval`],
+//! rewrites `maintain_status.json` (crash-safely, via
+//! [`crate::util::atomic_write`]) with the current phase, cursor,
+//! last-pass health counts, repair outcomes and a `maintenance.*` metrics
+//! snapshot, and checks for a stop request. Stop requests arrive three
+//! ways — SIGINT/SIGTERM (hooked by [`StopToken::hook_signals`]), a
+//! `maintain.stop` file in the workspace (written by `drs maintain
+//! --stop`), or [`StopToken::request_stop`] from another thread — and all
+//! of them let the in-flight scrub/repair pass finish before the daemon
+//! writes a final status dump and exits.
+//!
+//! Counters and timers land under `maintenance.daemon.*` in
+//! [`crate::metrics::global`].
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::dfm::EcShim;
+use crate::metrics;
+use crate::util::json::Json;
+use crate::Result;
+
+use super::repair::{RepairBudget, RepairSummary};
+use super::scrub::{ScrubOptions, ScrubReport};
+use super::Maintainer;
+
+/// File (inside the daemon's state directory) holding the incremental
+/// scrub resume cursor, shared with `drs scrub --incremental`.
+pub const SCRUB_CURSOR_FILE: &str = "scrub_cursor.json";
+/// File the daemon rewrites every tick with its current status.
+pub const STATUS_FILE: &str = "maintain_status.json";
+/// Touching this file in the state directory asks a running daemon to
+/// stop after its in-flight pass (`drs maintain --stop` writes it).
+pub const STOP_FILE: &str = "maintain.stop";
+
+/// The daemon's status-file path inside `dir`.
+pub fn status_path(dir: &Path) -> PathBuf {
+    dir.join(STATUS_FILE)
+}
+
+/// The daemon's stop-file path inside `dir`.
+pub fn stop_file_path(dir: &Path) -> PathBuf {
+    dir.join(STOP_FILE)
+}
+
+/// Load the incremental-scrub cursor persisted in `dir` *for the same
+/// scrub root*: the last EC directory examined, or `None` when the
+/// previous walk completed, no cursor has been saved yet, or the saved
+/// cursor belongs to a different root (a cursor from `/vo/b` must not
+/// filter a walk of `/vo/a`).
+pub fn load_scrub_cursor(dir: &Path, scrub_root: &str) -> Option<String> {
+    let text = std::fs::read_to_string(dir.join(SCRUB_CURSOR_FILE)).ok()?;
+    let j = Json::parse(&text).ok()?;
+    if j.get("root")?.as_str()? != scrub_root {
+        return None;
+    }
+    j.get("after")?.as_str().map(str::to_string)
+}
+
+/// Persist (or clear, with `None`) the incremental-scrub cursor in `dir`,
+/// tagged with the scrub root it belongs to. Crash-safe.
+pub fn save_scrub_cursor(dir: &Path, scrub_root: &str, cursor: Option<&str>) -> Result<()> {
+    let j = match cursor {
+        Some(c) => Json::obj(vec![("root", Json::str(scrub_root)), ("after", Json::str(c))]),
+        None => Json::obj(vec![]),
+    };
+    crate::util::atomic_write(&dir.join(SCRUB_CURSOR_FILE), j.to_string().as_bytes())
+}
+
+/// Set by the process signal handler; checked by every [`StopToken`].
+static SIGNAL_STOP: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+mod sig {
+    use super::SIGNAL_STOP;
+    use std::sync::atomic::Ordering;
+
+    extern "C" fn on_signal(_signum: i32) {
+        // Async-signal-safe: a single atomic store, nothing else.
+        SIGNAL_STOP.store(true, Ordering::SeqCst);
+    }
+
+    // The libc crate is unavailable offline; std already links the C
+    // library, so declare the one symbol we need directly.
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+
+    pub(super) fn install() {
+        const SIGINT: i32 = 2;
+        const SIGTERM: i32 = 15;
+        unsafe {
+            signal(SIGINT, on_signal);
+            signal(SIGTERM, on_signal);
+        }
+    }
+}
+
+/// Cooperative shutdown handle for a daemon run: carries an in-process
+/// stop flag, optionally watches a stop file, and can hook the process
+/// SIGINT/SIGTERM handlers. Clones share the same flag.
+#[derive(Clone, Debug, Default)]
+pub struct StopToken {
+    requested: Arc<AtomicBool>,
+    /// Whether this token (or a clone) opted into the process-global
+    /// signal flag — a token that never hooked signals must not be
+    /// stopped by a signal an earlier daemon run in the same process
+    /// received.
+    signals_hooked: Arc<AtomicBool>,
+    stop_file: Option<PathBuf>,
+}
+
+impl StopToken {
+    /// A token stoppable only via [`StopToken::request_stop`] (tests,
+    /// embedded daemons).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A token that additionally treats the existence of `path` as a stop
+    /// request. The daemon removes the file on clean exit so the next run
+    /// starts fresh.
+    pub fn with_stop_file(path: impl Into<PathBuf>) -> Self {
+        StopToken { stop_file: Some(path.into()), ..Self::default() }
+    }
+
+    /// Ask the daemon to stop after its in-flight pass.
+    pub fn request_stop(&self) {
+        self.requested.store(true, Ordering::SeqCst);
+    }
+
+    /// Route the process's SIGINT/SIGTERM to a stop request (no-op on
+    /// non-unix targets). The handler only flips an atomic, so the
+    /// in-flight pass still completes before the daemon exits. Clears any
+    /// signal left over from a previous hooked run in this process — each
+    /// hook starts a fresh signal session.
+    pub fn hook_signals(&self) {
+        SIGNAL_STOP.store(false, Ordering::SeqCst);
+        self.signals_hooked.store(true, Ordering::SeqCst);
+        #[cfg(unix)]
+        sig::install();
+    }
+
+    /// Why the daemon should stop, if it should: `"signal"`,
+    /// `"stop-request"` or `"stop-file"`. `None` means keep running.
+    pub fn cause(&self) -> Option<&'static str> {
+        if self.signals_hooked.load(Ordering::SeqCst) && SIGNAL_STOP.load(Ordering::SeqCst) {
+            return Some("signal");
+        }
+        if self.requested.load(Ordering::SeqCst) {
+            return Some("stop-request");
+        }
+        if self.stop_file.as_ref().is_some_and(|p| p.exists()) {
+            return Some("stop-file");
+        }
+        None
+    }
+
+    /// Whether a stop has been requested by any channel.
+    pub fn should_stop(&self) -> bool {
+        self.cause().is_some()
+    }
+
+    /// Remove the stop file (clean-exit housekeeping).
+    fn consume_stop_file(&self) {
+        if let Some(p) = &self.stop_file {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+}
+
+/// Cadences and budgets for one daemon run. All knobs have `drs.json` /
+/// `DRS_MAINTAIN_*` counterparts (see [`crate::config::Config`]).
+#[derive(Clone, Debug)]
+pub struct DaemonOptions {
+    /// Catalogue subtree the daemon maintains (`"/"` = everything).
+    pub root: String,
+    /// Sleep between ticks (`maintain_scrub_interval_s`). Zero means
+    /// back-to-back ticks (tests).
+    pub scrub_interval: Duration,
+    /// EC directories scrubbed per tick (`maintain_scrub_slice`); 0 means
+    /// the whole subtree every tick.
+    pub scrub_slice: usize,
+    /// Every `deep_every`-th full namespace pass runs in deep (checksum)
+    /// mode (`maintain_deep_every`); 0 disables deep passes, 1 makes
+    /// every pass deep.
+    pub deep_every: u64,
+    /// Per-tick repair budget (`maintain_repair_budget_*`).
+    pub budget: RepairBudget,
+    /// Scrub probe worker threads.
+    pub workers: usize,
+    /// Stop after this many ticks (`--ticks`); `None` runs until a stop
+    /// request arrives.
+    pub max_ticks: Option<u64>,
+    /// Journal-GC byte budget per housekeeping tick.
+    pub gc_budget: u64,
+}
+
+impl Default for DaemonOptions {
+    fn default() -> Self {
+        DaemonOptions {
+            root: "/".into(),
+            scrub_interval: Duration::from_secs(30),
+            scrub_slice: 64,
+            deep_every: 4,
+            budget: RepairBudget::default(),
+            workers: 4,
+            max_ticks: None,
+            gc_budget: 4 << 20,
+        }
+    }
+}
+
+impl DaemonOptions {
+    /// Scope the daemon to a catalogue subtree.
+    pub fn with_root(mut self, root: impl Into<String>) -> Self {
+        self.root = root.into();
+        self
+    }
+
+    /// Set the inter-tick sleep.
+    pub fn with_interval(mut self, interval: Duration) -> Self {
+        self.scrub_interval = interval;
+        self
+    }
+
+    /// Set the EC-directories-per-tick slice (0 = whole subtree).
+    pub fn with_slice(mut self, slice: usize) -> Self {
+        self.scrub_slice = slice;
+        self
+    }
+
+    /// Set the deep-scrub cadence in full passes (0 = never deep).
+    pub fn with_deep_every(mut self, deep_every: u64) -> Self {
+        self.deep_every = deep_every;
+        self
+    }
+
+    /// Set the per-tick repair budget.
+    pub fn with_budget(mut self, budget: RepairBudget) -> Self {
+        self.budget = budget;
+        self
+    }
+
+    /// Set the scrub probe worker count (clamped to ≥ 1).
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.workers = workers.max(1);
+        self
+    }
+
+    /// Bound the run to `ticks` ticks (`None` = run until stopped).
+    pub fn with_max_ticks(mut self, ticks: Option<u64>) -> Self {
+        self.max_ticks = ticks;
+        self
+    }
+}
+
+/// Health counts of one completed namespace pass (pre-repair, summed over
+/// its incremental slices).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PassHealth {
+    /// EC files examined in the pass.
+    pub files: usize,
+    /// Files with every chunk fetchable when scrubbed.
+    pub healthy: usize,
+    /// Files found degraded (queued for repair).
+    pub degraded: usize,
+    /// Files found unrecoverable.
+    pub lost: usize,
+    /// Whether the pass ran in deep (checksum) mode.
+    pub deep: bool,
+}
+
+/// Aggregate outcome of one daemon run.
+#[derive(Clone, Debug, Default)]
+pub struct DaemonReport {
+    /// Scheduler ticks executed.
+    pub ticks: u64,
+    /// Full namespace passes completed.
+    pub passes: u64,
+    /// How many of those ran in deep (checksum) mode.
+    pub deep_passes: u64,
+    /// EC files scrubbed across all ticks (files in completed+partial passes).
+    pub files_scrubbed: usize,
+    /// Files successfully repaired.
+    pub files_repaired: usize,
+    /// Chunks re-derived by those repairs.
+    pub chunks_rebuilt: usize,
+    /// File repairs that failed (will be retried next pass).
+    pub repair_failures: usize,
+    /// Corrupt replicas whose quarantine failed (retried next deep pass).
+    pub quarantine_failed: usize,
+    /// Scrub slices that errored (daemon continued).
+    pub scrub_errors: usize,
+    /// Health counts of the most recently completed pass.
+    pub last_pass: Option<PassHealth>,
+    /// Why the run ended: `"tick-budget"`, `"signal"`, `"stop-request"`
+    /// or `"stop-file"`.
+    pub stopped_by: String,
+}
+
+impl DaemonReport {
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} tick(s), {} pass(es) ({} deep): {} file(s) scrubbed, {} repaired \
+             ({} chunks), {} repair failure(s), {} quarantine failure(s)",
+            self.ticks,
+            self.passes,
+            self.deep_passes,
+            self.files_scrubbed,
+            self.files_repaired,
+            self.chunks_rebuilt,
+            self.repair_failures,
+            self.quarantine_failed
+        )
+    }
+}
+
+/// Abort the run after this many *consecutive* failed scrub slices — a
+/// persistently broken catalogue root should surface as an error, not an
+/// infinite error loop.
+const MAX_CONSECUTIVE_SCRUB_ERRORS: u32 = 10;
+
+/// The `drs maintain` scheduler, bound to one shim and one state
+/// directory (where the cursor, status and stop files live — the CLI
+/// passes the workspace root).
+pub struct Daemon<'a> {
+    shim: &'a EcShim,
+    opts: DaemonOptions,
+    state_dir: PathBuf,
+}
+
+impl<'a> Daemon<'a> {
+    /// Bind a daemon to a shim and a state directory.
+    pub fn new(shim: &'a EcShim, opts: DaemonOptions, state_dir: impl Into<PathBuf>) -> Self {
+        Daemon { shim, opts, state_dir: state_dir.into() }
+    }
+
+    /// Whether namespace pass `pass_no` (1-based) runs in deep mode.
+    fn deep_pass(&self, pass_no: u64) -> bool {
+        self.opts.deep_every > 0 && pass_no % self.opts.deep_every == 0
+    }
+
+    /// Run the scheduler until the tick budget is exhausted or `stop`
+    /// fires. Every exit path — including the error one — writes a final
+    /// status dump first.
+    pub fn run(&self, stop: &StopToken) -> Result<DaemonReport> {
+        let m = metrics::global();
+        let mut report = DaemonReport::default();
+        let mut cursor = load_scrub_cursor(&self.state_dir, &self.opts.root);
+        let mut pass_no: u64 = 1;
+        let mut pass = PassHealth { deep: self.deep_pass(1), ..Default::default() };
+        let mut last_tick: Option<(ScrubReport, RepairSummary)> = None;
+        let mut consecutive_errors: u32 = 0;
+
+        loop {
+            if let Some(cause) = stop.cause() {
+                report.stopped_by = cause.to_string();
+                break;
+            }
+            if self.opts.max_ticks.is_some_and(|max| report.ticks >= max) {
+                report.stopped_by = "tick-budget".to_string();
+                break;
+            }
+            report.ticks += 1;
+            m.inc("maintenance.daemon.ticks");
+
+            // (a)/(b) One scrub slice: shallow on ordinary passes, deep
+            // (checksum) once per deep_every full passes.
+            let deep = self.deep_pass(pass_no);
+            let mut sopts = ScrubOptions::default()
+                .with_root(self.opts.root.clone())
+                .with_workers(self.opts.workers);
+            if !deep {
+                sopts = sopts.shallow();
+            }
+            if self.opts.scrub_slice > 0 {
+                sopts = sopts.with_max_dirs(self.opts.scrub_slice);
+            }
+            if let Some(c) = &cursor {
+                sopts = sopts.resume_after(c.clone());
+            }
+            self.write_status(&report, "scrub", pass_no, deep, cursor.as_deref(), &last_tick);
+
+            let maintainer = Maintainer::new(self.shim);
+            let scrub = m.timed("maintenance.daemon.tick", || maintainer.scrub(&sopts));
+            let scrub = match scrub {
+                Ok(r) => {
+                    consecutive_errors = 0;
+                    r
+                }
+                Err(e) => {
+                    // A transient scrub failure (e.g. an SE flapping
+                    // mid-probe) must not kill an unattended daemon;
+                    // a persistent one must not loop silently forever.
+                    report.scrub_errors += 1;
+                    m.inc("maintenance.daemon.scrub_errors");
+                    consecutive_errors += 1;
+                    if consecutive_errors >= MAX_CONSECUTIVE_SCRUB_ERRORS {
+                        report.stopped_by = "scrub-errors".to_string();
+                        self.finish(&report, pass_no, cursor.as_deref(), &last_tick, stop);
+                        return Err(e);
+                    }
+                    self.sleep(stop);
+                    continue;
+                }
+            };
+            cursor = scrub.cursor.clone();
+            if save_scrub_cursor(&self.state_dir, &self.opts.root, cursor.as_deref()).is_err() {
+                // Cursor loss only costs a re-scan from the subtree start.
+                m.inc("maintenance.daemon.cursor_errors");
+            }
+
+            // (c) Budgeted repair of whatever this slice found.
+            self.write_status(&report, "repair", pass_no, deep, cursor.as_deref(), &last_tick);
+            let summary = maintainer.repair_all(&scrub, &self.opts.budget);
+
+            // (d) Journal housekeeping: cheap GC every tick, a full
+            // checkpoint+GC when a namespace pass completes.
+            let completed_pass = scrub.cursor.is_none();
+            let dfc = self.shim.dfc();
+            if dfc.is_journaled() {
+                let gc = if completed_pass {
+                    dfc.compact_journal(self.opts.gc_budget).map(|r| r.bytes_removed)
+                } else {
+                    dfc.journal_gc(self.opts.gc_budget).map(|(_, b)| b)
+                };
+                match gc {
+                    Ok(bytes) => m.add("maintenance.daemon.gc_bytes", bytes),
+                    Err(_) => m.inc("maintenance.daemon.journal_errors"),
+                }
+            }
+
+            // Account the tick into the current pass and the run totals.
+            pass.files += scrub.files.len();
+            pass.healthy += scrub.healthy();
+            pass.degraded += scrub.degraded();
+            pass.lost += scrub.lost();
+            report.files_scrubbed += scrub.files.len();
+            report.files_repaired += summary.files_repaired();
+            report.chunks_rebuilt += summary.chunks_rebuilt;
+            report.repair_failures += summary.files_failed;
+            report.quarantine_failed += summary.quarantine_failed;
+            last_tick = Some((scrub, summary));
+            if completed_pass {
+                report.passes += 1;
+                m.inc("maintenance.daemon.passes");
+                if pass.deep {
+                    report.deep_passes += 1;
+                    m.inc("maintenance.daemon.deep_passes");
+                }
+                report.last_pass = Some(pass);
+                pass_no += 1;
+                pass = PassHealth { deep: self.deep_pass(pass_no), ..Default::default() };
+            }
+
+            // Recompute the deep flag for the idle dump: a completed pass
+            // bumped pass_no, and `deep` must describe the *upcoming*
+            // pass for whoever polls the status file during the sleep.
+            let next_deep = self.deep_pass(pass_no);
+            self.write_status(&report, "idle", pass_no, next_deep, cursor.as_deref(), &last_tick);
+            self.sleep(stop);
+        }
+
+        self.finish(&report, pass_no, cursor.as_deref(), &last_tick, stop);
+        Ok(report)
+    }
+
+    /// Final status dump + stop-file consumption, shared by every exit
+    /// path.
+    fn finish(
+        &self,
+        report: &DaemonReport,
+        pass_no: u64,
+        cursor: Option<&str>,
+        last_tick: &Option<(ScrubReport, RepairSummary)>,
+        stop: &StopToken,
+    ) {
+        self.write_status(report, "stopped", pass_no, self.deep_pass(pass_no), cursor, last_tick);
+        stop.consume_stop_file();
+    }
+
+    /// Sleep the inter-tick interval in small increments so a stop
+    /// request interrupts the wait promptly.
+    fn sleep(&self, stop: &StopToken) {
+        let mut remaining = self.opts.scrub_interval;
+        let step = Duration::from_millis(25);
+        while !remaining.is_zero() && !stop.should_stop() {
+            let d = remaining.min(step);
+            std::thread::sleep(d);
+            remaining = remaining.saturating_sub(d);
+        }
+    }
+
+    /// Rewrite `maintain_status.json` (best-effort; failures are counted,
+    /// never fatal — the status file is observability, not state).
+    fn write_status(
+        &self,
+        report: &DaemonReport,
+        phase: &str,
+        pass_no: u64,
+        deep: bool,
+        cursor: Option<&str>,
+        last_tick: &Option<(ScrubReport, RepairSummary)>,
+    ) {
+        let m = metrics::global();
+        let mut pairs = vec![
+            ("phase", Json::str(phase)),
+            ("root", Json::str(self.opts.root.clone())),
+            ("tick", Json::num(report.ticks as f64)),
+            ("pass", Json::num(pass_no as f64)),
+            ("deep", Json::Bool(deep)),
+            ("cursor", cursor.map_or(Json::Null, Json::str)),
+            (
+                "totals",
+                Json::obj(vec![
+                    ("ticks", Json::num(report.ticks as f64)),
+                    ("passes", Json::num(report.passes as f64)),
+                    ("deep_passes", Json::num(report.deep_passes as f64)),
+                    ("files_scrubbed", Json::num(report.files_scrubbed as f64)),
+                    ("files_repaired", Json::num(report.files_repaired as f64)),
+                    ("chunks_rebuilt", Json::num(report.chunks_rebuilt as f64)),
+                    ("repair_failures", Json::num(report.repair_failures as f64)),
+                    ("quarantine_failed", Json::num(report.quarantine_failed as f64)),
+                    ("scrub_errors", Json::num(report.scrub_errors as f64)),
+                ]),
+            ),
+        ];
+        if !report.stopped_by.is_empty() {
+            pairs.push(("stopped_by", Json::str(report.stopped_by.clone())));
+        }
+        if let Some(p) = &report.last_pass {
+            pairs.push((
+                "last_pass",
+                Json::obj(vec![
+                    ("files", Json::num(p.files as f64)),
+                    ("healthy", Json::num(p.healthy as f64)),
+                    ("degraded", Json::num(p.degraded as f64)),
+                    ("lost", Json::num(p.lost as f64)),
+                    ("deep", Json::Bool(p.deep)),
+                ]),
+            ));
+        }
+        if let Some((scrub, repair)) = last_tick {
+            pairs.push((
+                "last_tick",
+                Json::obj(vec![
+                    ("files", Json::num(scrub.files.len() as f64)),
+                    ("healthy", Json::num(scrub.healthy() as f64)),
+                    ("degraded", Json::num(scrub.degraded() as f64)),
+                    ("lost", Json::num(scrub.lost() as f64)),
+                    ("chunks_probed", Json::num(scrub.chunks_probed as f64)),
+                    ("chunks_missing", Json::num(scrub.chunks_missing as f64)),
+                    ("chunks_corrupt", Json::num(scrub.chunks_corrupt as f64)),
+                    ("repaired", Json::num(repair.files_repaired() as f64)),
+                    ("chunks_rebuilt", Json::num(repair.chunks_rebuilt as f64)),
+                    ("repair_failed", Json::num(repair.files_failed as f64)),
+                    ("deferred", Json::num(repair.deferred.len() as f64)),
+                    ("quarantined", Json::num(repair.quarantined as f64)),
+                    ("quarantine_failed", Json::num(repair.quarantine_failed as f64)),
+                ]),
+            ));
+        }
+        let metrics_snap: Vec<(String, Json)> = m
+            .counters_with_prefix("maintenance.")
+            .into_iter()
+            .map(|(k, v)| (k, Json::num(v as f64)))
+            .collect();
+        pairs.push(("metrics", Json::Obj(metrics_snap.into_iter().collect())));
+        let body = Json::obj(pairs).to_string();
+        if crate::util::atomic_write(&status_path(&self.state_dir), body.as_bytes()).is_err() {
+            m.inc("maintenance.daemon.status_errors");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "drs-daemon-{tag}-{}-{}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn cursor_roundtrip_and_root_binding() {
+        let dir = tmp("cursor");
+        assert_eq!(load_scrub_cursor(&dir, "/"), None);
+        save_scrub_cursor(&dir, "/", Some("/vo/data/f9.ec")).unwrap();
+        assert_eq!(load_scrub_cursor(&dir, "/"), Some("/vo/data/f9.ec".to_string()));
+        // Bound to its root: a different root ignores it.
+        assert_eq!(load_scrub_cursor(&dir, "/vo/other"), None);
+        save_scrub_cursor(&dir, "/", None).unwrap();
+        assert_eq!(load_scrub_cursor(&dir, "/"), None);
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn stop_token_channels() {
+        let t = StopToken::new();
+        assert!(!t.should_stop());
+        let t2 = t.clone();
+        t2.request_stop();
+        assert_eq!(t.cause(), Some("stop-request"));
+
+        let dir = tmp("stop");
+        let path = stop_file_path(&dir);
+        let f = StopToken::with_stop_file(&path);
+        assert!(!f.should_stop());
+        std::fs::write(&path, b"stop").unwrap();
+        assert_eq!(f.cause(), Some("stop-file"));
+        f.consume_stop_file();
+        assert!(!f.should_stop());
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn deep_cadence() {
+        let cluster = crate::dfm::TestCluster::builder()
+            .ses(4)
+            .ec(crate::ec::EcParams::new(2, 1).unwrap())
+            .build()
+            .unwrap();
+        let mk = |every| {
+            Daemon::new(
+                cluster.shim(),
+                DaemonOptions::default().with_deep_every(every),
+                std::env::temp_dir(),
+            )
+        };
+        let d = mk(4);
+        assert!(!d.deep_pass(1) && !d.deep_pass(3));
+        assert!(d.deep_pass(4) && d.deep_pass(8));
+        let every = mk(1);
+        assert!(every.deep_pass(1) && every.deep_pass(2));
+        let never = mk(0);
+        assert!(!never.deep_pass(1) && !never.deep_pass(100));
+    }
+}

@@ -172,14 +172,25 @@ fn move_one(ctx: &DrainCtx, ordinal: usize, path: &str, pfn: &str) -> Result<Mov
             // (round-robin stays round-robin) without asking the policy
             // for `ordinal` slots it won't use.
             candidates.rotate_left(ordinal % candidates.len());
-            let slot = *ctx
-                .policy
-                .place(1, &candidates)?
-                .first()
-                .expect("place returns one slot");
+            // A policy that returns no (or an out-of-range) slot is a
+            // per-file transfer failure reported in the drain summary —
+            // never a panic that kills the whole pass.
+            let slot = *ctx.policy.place(1, &candidates)?.first().ok_or_else(|| {
+                Error::Transfer(format!(
+                    "placement policy `{}` returned no slot for `{path}`",
+                    ctx.policy.name()
+                ))
+            })?;
+            let dest_info = candidates.get(slot).ok_or_else(|| {
+                Error::Transfer(format!(
+                    "placement policy `{}` returned slot {slot} of {} for `{path}`",
+                    ctx.policy.name(),
+                    candidates.len()
+                ))
+            })?;
             let dest = ctx
                 .registry
-                .get(&candidates[slot].name)
+                .get(&dest_info.name)
                 .ok_or_else(|| Error::Config("registry inconsistent".into()))?;
             dest.put(pfn, &bytes)?;
             // Register the new location before dropping the old record, so

@@ -27,9 +27,16 @@
 //! repair-aware Monte-Carlo relates scrub interval + repair MTTR to
 //! file-loss probability, quantifying what this engine buys.
 //!
+//! * [`daemon`] — the `drs maintain` scheduler: a long-running loop of
+//!   shallow incremental scrubs (persisted cursor), periodic deep scrubs
+//!   (once per [`daemon::DaemonOptions::deep_every`] namespace passes),
+//!   budgeted repairs and journal housekeeping, with clean shutdown on
+//!   SIGINT/SIGTERM or a stop file and a periodically rewritten
+//!   `maintain_status.json`.
+//!
 //! Counts and timings are recorded in [`crate::metrics::global`] under
 //! `maintenance.*`; the CLI surfaces the loop as `drs scrub`,
-//! `drs repair-all` and `drs drain <se>`.
+//! `drs repair-all`, `drs drain <se>` and `drs maintain`.
 //!
 //! Repair and drain mutate the catalogue through [`crate::catalog::ShardedDfc`]
 //! only (replica swaps, chunk re-registration), so on a journal-backed
@@ -37,10 +44,12 @@
 //! write-ahead journal as it lands — a maintenance run interrupted by a
 //! crash keeps all completed repairs after recovery.
 
+pub mod daemon;
 pub mod drain;
 pub mod repair;
 pub mod scrub;
 
+pub use daemon::{Daemon, DaemonOptions, DaemonReport, PassHealth, StopToken};
 pub use drain::{drain_se, DrainOptions, DrainReport};
 pub use repair::{repair_all, RepairBudget, RepairOutcome, RepairSummary};
 pub use scrub::{
@@ -89,6 +98,8 @@ impl<'a> Maintainer<'a> {
         m.add("maintenance.repair.chunks_rebuilt", summary.chunks_rebuilt as u64);
         m.add("maintenance.repair.failures", summary.files_failed as u64);
         m.add("maintenance.repair.deferred", summary.deferred.len() as u64);
+        m.add("maintenance.repair.quarantined", summary.quarantined as u64);
+        m.add("maintenance.quarantine_failed", summary.quarantine_failed as u64);
         summary
     }
 
@@ -339,6 +350,169 @@ mod tests {
             maintainer.scrub(&ScrubOptions::default()).unwrap().healthy(),
             3
         );
+    }
+
+    #[test]
+    fn repair_budget_first_fit_avoids_head_of_line_blocking() {
+        let cluster = TestCluster::builder()
+            .ses(6)
+            .ec(EcParams::new(4, 2).unwrap())
+            .build()
+            .unwrap();
+        let opts = PutOptions::default()
+            .with_params(EcParams::new(4, 2).unwrap())
+            .with_stripe(1024);
+        let huge = "/vo/data/a-huge.bin";
+        let smalls = ["/vo/data/b-small.bin", "/vo/data/c-small.bin"];
+        let big_data = vec![0xEEu8; 240_000];
+        let small_data = vec![0x11u8; 20_000];
+        cluster.shim().put_bytes(huge, &big_data, &opts).unwrap();
+        for lfn in smalls {
+            cluster.shim().put_bytes(lfn, &small_data, &opts).unwrap();
+        }
+        // b-small loses 2 chunks (margin 0 — heads the queue); the huge
+        // file and c-small lose 1 each (margin 1; lfn tie-break puts the
+        // huge file *before* c-small, i.e. mid-queue).
+        let dfc = cluster.dfc();
+        let victim = |lfn: &str, se: &str| {
+            dfc.files_with_replica_on(se)
+                .into_iter()
+                .find(|(p, _)| p.starts_with(lfn))
+                .unwrap()
+        };
+        for se in ["SE-00", "SE-01"] {
+            let (_, pfn) = victim(smalls[0], se);
+            cluster.registry().get(se).unwrap().delete(&pfn).unwrap();
+        }
+        for (lfn, se) in [(huge, "SE-02"), (smalls[1], "SE-03")] {
+            let (_, pfn) = victim(lfn, se);
+            cluster.registry().get(se).unwrap().delete(&pfn).unwrap();
+        }
+
+        let maintainer = Maintainer::new(cluster.shim());
+        let report = maintainer.scrub(&ScrubOptions::default()).unwrap();
+        assert_eq!(report.degraded(), 3);
+        let queue: Vec<&str> =
+            report.repair_queue().iter().map(|f| f.lfn.as_str()).collect();
+        assert_eq!(queue, vec![smalls[0], huge, smalls[1]], "huge file must sit mid-queue");
+        let small_bytes: u64 = report
+            .files
+            .iter()
+            .filter(|f| f.lfn != huge)
+            .map(|f| f.repair_bytes)
+            .sum();
+        let huge_bytes =
+            report.files.iter().find(|f| f.lfn == huge).unwrap().repair_bytes;
+        assert!(huge_bytes > small_bytes);
+
+        // Budget fits both smalls but not the huge mid-queue file:
+        // first-fit planning must repair both smalls and defer ONLY the
+        // huge one (the old planner broke at it and deferred the whole
+        // tail, starving c-small with budget left).
+        let summary = maintainer
+            .repair_all(&report, &RepairBudget::default().with_max_bytes(small_bytes));
+        assert_eq!(summary.files_repaired(), 2, "{}", summary.summary());
+        assert!(summary.outcomes.iter().all(|o| o.lfn != huge));
+        assert_eq!(summary.deferred, vec![huge.to_string()]);
+
+        // Head guarantee: the most urgent file is taken even when it
+        // exceeds the whole byte budget — it can never starve behind
+        // smaller files.
+        let report2 = maintainer.scrub(&ScrubOptions::default()).unwrap();
+        assert_eq!(report2.degraded(), 1);
+        let summary2 =
+            maintainer.repair_all(&report2, &RepairBudget::default().with_max_bytes(1));
+        assert_eq!(summary2.files_repaired(), 1);
+        assert_eq!(summary2.outcomes[0].lfn, huge);
+        assert!(summary2.deferred.is_empty());
+        assert_eq!(maintainer.scrub(&ScrubOptions::default()).unwrap().healthy(), 3);
+    }
+
+    struct NoSlots;
+
+    impl crate::placement::PlacementPolicy for NoSlots {
+        fn place(&self, _n_chunks: usize, _ses: &[crate::se::SeInfo]) -> crate::Result<Vec<usize>> {
+            Ok(Vec::new())
+        }
+
+        fn name(&self) -> &'static str {
+            "no-slots"
+        }
+    }
+
+    #[test]
+    fn drain_reports_empty_placement_as_failure_not_panic() {
+        let (cluster, files) = cluster_with_files(6, 2);
+        // Wire a shim whose policy returns no slot at all: each replica
+        // move must fail into the drain summary instead of panicking the
+        // whole pass.
+        let shim = cluster.shim();
+        let broken = crate::dfm::EcShim::new(
+            shim.dfc(),
+            shim.registry(),
+            std::sync::Arc::new(NoSlots),
+            std::sync::Arc::new(crate::ec::PureRustBackend),
+            shim.vo(),
+        );
+        let report = drain::drain_se(&broken, "SE-00", &DrainOptions::default()).unwrap();
+        assert!(!report.clean());
+        assert_eq!(report.replicas_moved, 0);
+        assert_eq!(report.failures.len(), 2, "{report:?}");
+        for (_, err) in &report.failures {
+            assert!(err.contains("no slot"), "{err}");
+        }
+        // Nothing was lost: the records still point at SE-00 and every
+        // file still reads back.
+        assert_eq!(cluster.dfc().files_with_replica_on("SE-00").len(), 2);
+        for (lfn, data) in &files {
+            let back = cluster
+                .shim()
+                .get_bytes(lfn, &crate::dfm::GetOptions::default())
+                .unwrap();
+            assert_eq!(&back, data);
+        }
+    }
+
+    #[test]
+    fn quarantine_failure_is_counted_and_retried() {
+        let (cluster, files) = cluster_with_files(6, 1);
+        // A corrupt extra replica on SE-05 beside the good copy on SE-02.
+        let dfc = cluster.dfc();
+        let (path, _) = dfc.files_with_replica_on("SE-02").into_iter().next().unwrap();
+        let bad_pfn = format!("{path}.stale");
+        cluster.registry().get("SE-05").unwrap().put(&bad_pfn, b"garbage").unwrap();
+        dfc.register_replica(&path, "SE-05", &bad_pfn).unwrap();
+
+        let maintainer = Maintainer::new(cluster.shim());
+        let deep = maintainer.scrub(&ScrubOptions::default()).unwrap();
+        assert_eq!(deep.chunks_corrupt, 1);
+
+        // The SE goes down between scrub and repair: the object delete
+        // fails and must be counted — and leave the record in place for a
+        // retry — not silently swallowed.
+        cluster.kill_se("SE-05");
+        let summary = maintainer.repair_all(&deep, &RepairBudget::default());
+        assert_eq!(summary.quarantined, 0);
+        assert_eq!(summary.quarantine_failed, 1, "{}", summary.summary());
+        assert!(dfc.files_with_replica_on("SE-05").iter().any(|(p, _)| p == &path));
+        assert!(crate::metrics::global().counter("maintenance.quarantine_failed") >= 1);
+
+        // The SE returns: the next deep scrub re-flags the replica and
+        // the retried quarantine completes.
+        cluster.revive_se("SE-05");
+        let deep2 = maintainer.scrub(&ScrubOptions::default()).unwrap();
+        assert_eq!(deep2.chunks_corrupt, 1);
+        let summary2 = maintainer.repair_all(&deep2, &RepairBudget::default());
+        assert_eq!(summary2.quarantine_failed, 0, "{}", summary2.summary());
+        assert_eq!(summary2.quarantined, 1);
+        assert!(!cluster.registry().get("SE-05").unwrap().exists(&bad_pfn));
+        assert!(dfc.files_with_replica_on("SE-05").iter().all(|(p, _)| p != &path));
+        let (lfn, data) = &files[0];
+        let back = cluster
+            .shim()
+            .get_bytes(lfn, &crate::dfm::GetOptions::default())
+            .unwrap();
+        assert_eq!(&back, data);
     }
 
     #[test]

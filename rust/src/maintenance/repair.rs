@@ -24,9 +24,11 @@ pub struct RepairBudget {
     /// next scrub cycle).
     pub max_files: usize,
     /// Approximate rebuild-byte ceiling per pass — the repair-bandwidth
-    /// knob the repair-scheduling literature optimizes. Files are taken
-    /// in priority order until the estimate is exhausted (the first file
-    /// is always taken).
+    /// knob the repair-scheduling literature optimizes. The queue head
+    /// (most urgent file) is always taken, even over budget, so it can
+    /// never be starved by its own size; the rest of the queue is
+    /// planned first-fit within the remaining budget, so an over-budget
+    /// file defers *itself*, never the smaller files behind it.
     pub max_bytes: u64,
 }
 
@@ -88,6 +90,13 @@ pub struct RepairSummary {
     pub deferred: Vec<String>,
     /// Unreadable files repair cannot help (margin < 0).
     pub lost: Vec<String>,
+    /// Corrupt replicas fully quarantined (object deleted *and* record
+    /// dropped).
+    pub quarantined: usize,
+    /// Corrupt replicas whose quarantine failed (object delete or record
+    /// drop errored). The replica's record is kept, so the next deep
+    /// scrub re-flags it and the quarantine is retried.
+    pub quarantine_failed: usize,
 }
 
 impl RepairSummary {
@@ -99,12 +108,15 @@ impl RepairSummary {
     /// One-line human summary.
     pub fn summary(&self) -> String {
         format!(
-            "repaired {} file(s) / {} chunk(s); {} failed, {} deferred by budget, {} lost",
+            "repaired {} file(s) / {} chunk(s); {} failed, {} deferred by budget, {} lost, \
+             {} replica(s) quarantined ({} quarantine failure(s))",
             self.files_repaired(),
             self.chunks_rebuilt,
             self.files_failed,
             self.deferred.len(),
-            self.lost.len()
+            self.lost.len(),
+            self.quarantined,
+            self.quarantine_failed
         )
     }
 }
@@ -122,37 +134,63 @@ pub fn repair_all(shim: &EcShim, report: &ScrubReport, budget: &RepairBudget) ->
         ..Default::default()
     };
 
-    // Budgeting: walk the priority queue, spending the byte estimate.
+    // Budgeting: walk the priority queue first-fit, spending the byte
+    // estimate. A file that exceeds the remaining budget is deferred
+    // without consuming it, and the walk *continues* — one huge
+    // over-budget file must not starve every smaller repair behind it
+    // (head-of-line blocking). The one exception is the queue head: the
+    // most urgent file is always taken, even over budget, so it cannot
+    // itself be starved for passes on end while smaller files keep
+    // claiming the budget. Deferral keeps priority order.
     let queue = report.repair_queue();
     let mut planned = Vec::new();
     let mut spent_bytes = 0u64;
     for (i, f) in queue.iter().enumerate() {
-        let over_files = planned.len() >= budget.max_files;
-        let over_bytes =
-            !planned.is_empty() && spent_bytes.saturating_add(f.repair_bytes) > budget.max_bytes;
-        if over_files || over_bytes {
-            summary.deferred.extend(queue[i..].iter().map(|f| f.lfn.clone()));
-            break;
+        let fits_files = planned.len() < budget.max_files;
+        let fits_bytes = spent_bytes.saturating_add(f.repair_bytes) <= budget.max_bytes;
+        if fits_files && (fits_bytes || i == 0) {
+            spent_bytes = spent_bytes.saturating_add(f.repair_bytes);
+            planned.push(*f);
+        } else {
+            summary.deferred.push(f.lfn.clone());
         }
-        spent_bytes = spent_bytes.saturating_add(f.repair_bytes);
-        planned.push(*f);
     }
 
     // Quarantine checksum-bad replicas catalogue-wide — not only the
     // files planned for rebuild this pass: a bad copy beside a good one
     // (file still Healthy) or on a budget-deferred file would otherwise
     // survive every cycle and mask its chunk as available. The object is
-    // deleted and its record dropped; the stat-driven repair then sees a
-    // rebuilt-needed chunk as plainly missing. Lost files are left
-    // untouched (their corrupt copies may be the only bytes remaining).
+    // deleted first, and only then its record dropped; the stat-driven
+    // repair then sees a rebuilt-needed chunk as plainly missing. Either
+    // step failing is counted (`quarantine_failed`, surfaced as the
+    // `maintenance.quarantine_failed` metric) instead of swallowed: a
+    // corrupt replica whose object delete failed keeps its record, so the
+    // next deep scrub re-flags it and the quarantine is retried. Lost
+    // files are left untouched (their corrupt copies may be the only
+    // bytes remaining).
     let registry = shim.registry();
     let dfc = shim.dfc();
     for f in report.files.iter().filter(|f| f.state() != HealthState::Lost) {
         for c in &f.corrupt {
-            if let Some(se) = registry.get(&c.se) {
-                let _ = se.delete(&c.pfn);
+            let object_gone = match registry.get(&c.se) {
+                // A delete error on an SE that verifiably no longer holds
+                // the object (already gone) still counts as success; an
+                // unavailable SE does not — the corrupt bytes may return
+                // with it.
+                Some(se) => match se.delete(&c.pfn) {
+                    Ok(()) => true,
+                    Err(_) => se.is_available() && !se.exists(&c.pfn),
+                },
+                None => false,
+            };
+            if !object_gone {
+                summary.quarantine_failed += 1;
+                continue;
             }
-            let _ = dfc.remove_replica(&c.path, &c.se);
+            match dfc.remove_replica(&c.path, &c.se) {
+                Ok(()) => summary.quarantined += 1,
+                Err(_) => summary.quarantine_failed += 1,
+            }
         }
     }
 

@@ -11,6 +11,16 @@
 //! downstream of a previously surfaced write failure) and
 //! `checkpoint_failures` (auto-checkpoints that failed and will be
 //! retried; the triggering append itself was durable).
+//!
+//! The maintenance engine records under `maintenance.*`: scrub/repair/
+//! drain run counts and outcomes, `maintenance.quarantine_failed`
+//! (corrupt-replica quarantines whose object delete or record drop
+//! errored — retried on the next deep pass), and the `drs maintain`
+//! daemon's `maintenance.daemon.*` family (`ticks`, `passes`,
+//! `deep_passes`, `scrub_errors`, `gc_bytes`, `status_errors`, plus the
+//! `maintenance.daemon.tick` timer). The daemon snapshots every
+//! `maintenance.` counter into `maintain_status.json` each tick via
+//! [`Metrics::counters_with_prefix`].
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;
@@ -160,6 +170,18 @@ impl Metrics {
         self.counters.lock().unwrap().get(name).copied().unwrap_or(0)
     }
 
+    /// Snapshot every counter whose name starts with `prefix`, sorted by
+    /// name (used by the maintenance daemon's status file).
+    pub fn counters_with_prefix(&self, prefix: &str) -> Vec<(String, u64)> {
+        self.counters
+            .lock()
+            .unwrap()
+            .range(prefix.to_string()..)
+            .take_while(|(k, _)| k.starts_with(prefix))
+            .map(|(k, v)| (k.clone(), *v))
+            .collect()
+    }
+
     /// Plain-text report, sorted by name.
     pub fn report(&self) -> String {
         let mut out = String::new();
@@ -218,6 +240,23 @@ mod tests {
         assert!(h.min() <= 0.01 && h.max() >= 10.0);
         assert!(h.quantile(0.5) < 1.0);
         assert!(h.quantile(1.0) >= 3.0);
+    }
+
+    #[test]
+    fn prefix_snapshot() {
+        let m = Metrics::new();
+        m.add("maintenance.daemon.ticks", 3);
+        m.add("maintenance.scrub.runs", 2);
+        m.inc("transfer.puts");
+        let snap = m.counters_with_prefix("maintenance.");
+        assert_eq!(
+            snap,
+            vec![
+                ("maintenance.daemon.ticks".to_string(), 3),
+                ("maintenance.scrub.runs".to_string(), 2),
+            ]
+        );
+        assert!(m.counters_with_prefix("nope.").is_empty());
     }
 
     #[test]

@@ -2,13 +2,31 @@
 //! MemSe cluster — outage injection via `se::failure`, one scrub+repair
 //! cycle back to full health, and a clean SE drain.
 
+use std::path::PathBuf;
+use std::time::Duration;
+
 use drs::dfm::{GetOptions, PutOptions, TestCluster};
 use drs::ec::EcParams;
 use drs::maintenance::{
-    DrainOptions, HealthState, Maintainer, RepairBudget, ScrubOptions,
+    daemon, Daemon, DaemonOptions, DrainOptions, HealthState, Maintainer, RepairBudget,
+    ScrubOptions, StopToken,
 };
 use drs::se::failure::{apply_at, Outage, Schedule};
+use drs::util::json::Json;
 use drs::util::prng::Rng;
+
+fn state_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "drs-maint-{tag}-{}-{}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
 
 const N_SES: usize = 8;
 const N_FILES: usize = 5;
@@ -150,4 +168,197 @@ fn drain_of_dead_se_falls_back_to_ec_repair() {
     }
     let post = maintainer.scrub(&ScrubOptions::default()).unwrap();
     assert_eq!(post.healthy(), N_FILES, "{}", post.summary());
+}
+
+/// Tentpole acceptance: the `drs maintain` scheduler, pointed at a
+/// cluster with a 2-of-8 SE outage, converges to zero degraded files
+/// without any manual `scrub`/`repair-all` invocation, advancing the
+/// persisted cursor slice by slice and rewriting a valid status file.
+#[test]
+fn daemon_converges_on_outage_without_manual_commands() {
+    let (cluster, files) = cluster_with_corpus();
+    let dir = state_dir("converge");
+
+    // 2-of-8 outage through the failure scheduler.
+    let schedules: Vec<(String, Schedule)> = ["SE-01", "SE-04"]
+        .iter()
+        .map(|name| {
+            (
+                name.to_string(),
+                Schedule { outages: vec![Outage { start: 10.0, end: 1_000.0 }] },
+            )
+        })
+        .collect();
+    apply_at(cluster.registry(), &schedules, 50.0);
+    assert_eq!(
+        Maintainer::new(cluster.shim())
+            .scrub(&ScrubOptions::default())
+            .unwrap()
+            .degraded(),
+        N_FILES
+    );
+
+    let opts = DaemonOptions::default()
+        .with_interval(Duration::ZERO)
+        .with_slice(2)
+        .with_deep_every(2)
+        .with_budget(RepairBudget::default().with_max_files(2))
+        .with_max_ticks(Some(12));
+    let report = Daemon::new(cluster.shim(), opts, &dir)
+        .run(&StopToken::new())
+        .unwrap();
+
+    assert_eq!(report.stopped_by, "tick-budget");
+    assert_eq!(report.ticks, 12);
+    assert!(report.passes >= 2, "{report:?}");
+    assert!(report.deep_passes >= 1, "every 2nd pass must be deep: {report:?}");
+    assert!(report.files_repaired >= N_FILES, "{report:?}");
+    assert_eq!(report.repair_failures, 0, "{report:?}");
+    // The last completed pass saw a fully healthy namespace.
+    let last = report.last_pass.expect("at least one completed pass");
+    assert_eq!(last.files, N_FILES);
+    assert_eq!(last.healthy, N_FILES, "{last:?}");
+    assert_eq!(last.degraded, 0);
+
+    // Converged: no degraded files, everything readable off the dead SEs.
+    let post = Maintainer::new(cluster.shim()).scrub(&ScrubOptions::default()).unwrap();
+    assert_eq!(post.healthy(), N_FILES, "{}", post.summary());
+    for (lfn, data) in &files {
+        let back = cluster.shim().get_bytes(lfn, &GetOptions::default()).unwrap();
+        assert_eq!(&back, data);
+    }
+
+    // The status file is valid JSON with the final ("stopped") dump.
+    let status = std::fs::read_to_string(daemon::status_path(&dir)).unwrap();
+    let j = Json::parse(&status).unwrap();
+    assert_eq!(j.get("phase").and_then(Json::as_str), Some("stopped"));
+    assert_eq!(j.get("stopped_by").and_then(Json::as_str), Some("tick-budget"));
+    let totals = j.get("totals").expect("totals object");
+    assert!(totals.get("files_repaired").and_then(Json::as_u64).unwrap() >= N_FILES as u64);
+    assert!(j
+        .get("metrics")
+        .and_then(|m| m.get("maintenance.daemon.ticks"))
+        .and_then(Json::as_u64)
+        .is_some());
+
+    std::fs::remove_dir_all(dir).unwrap();
+}
+
+/// The cursor advances across bounded daemon runs (i.e. survives a
+/// daemon restart): each 1-tick, 1-slice run picks up where the last
+/// one stopped.
+#[test]
+fn daemon_cursor_advances_across_restarts() {
+    let (cluster, _) = cluster_with_corpus();
+    let dir = state_dir("cursor");
+    let one_tick = || {
+        let opts = DaemonOptions::default()
+            .with_interval(Duration::ZERO)
+            .with_slice(1)
+            .with_max_ticks(Some(1));
+        Daemon::new(cluster.shim(), opts, &dir).run(&StopToken::new()).unwrap()
+    };
+
+    one_tick();
+    let c1 = daemon::load_scrub_cursor(&dir, "/").expect("cursor after slice 1");
+    one_tick();
+    let c2 = daemon::load_scrub_cursor(&dir, "/").expect("cursor after slice 2");
+    assert!(c2 > c1, "cursor must advance: {c1} -> {c2}");
+    assert!(c1.starts_with("/vo/fleet/"), "{c1}");
+
+    // Running out the remaining slices completes the pass and resets the
+    // cursor.
+    for _ in 0..N_FILES - 2 {
+        one_tick();
+    }
+    assert_eq!(daemon::load_scrub_cursor(&dir, "/"), None);
+    std::fs::remove_dir_all(dir).unwrap();
+}
+
+/// A stop request against an unbounded daemon lets the in-flight pass
+/// finish, writes a final status dump and returns cleanly.
+#[test]
+fn daemon_stop_request_exits_cleanly() {
+    let (cluster, _) = cluster_with_corpus();
+    let dir = state_dir("stop");
+    let stop = StopToken::new();
+
+    let (stop2, dir2) = (stop.clone(), dir.clone());
+    let handle = std::thread::spawn(move || {
+        let opts = DaemonOptions::default()
+            .with_interval(Duration::from_millis(5))
+            .with_slice(0); // whole namespace every tick
+        Daemon::new(cluster.shim(), opts, &dir2).run(&stop2).unwrap()
+    });
+
+    // Wait for the daemon to prove it is ticking, then ask it to stop.
+    let status = daemon::status_path(&dir);
+    let t0 = std::time::Instant::now();
+    while !status.exists() && t0.elapsed() < Duration::from_secs(10) {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    stop.request_stop();
+    let report = handle.join().expect("daemon thread must not panic");
+
+    assert_eq!(report.stopped_by, "stop-request");
+    assert_eq!(report.repair_failures, 0);
+    let j = Json::parse(&std::fs::read_to_string(&status).unwrap()).unwrap();
+    assert_eq!(j.get("phase").and_then(Json::as_str), Some("stopped"));
+    assert_eq!(j.get("stopped_by").and_then(Json::as_str), Some("stop-request"));
+    std::fs::remove_dir_all(dir).unwrap();
+}
+
+/// End-to-end through the CLI (`drs maintain`), same code path as the
+/// binary: a bounded daemon run heals a workspace with two SEs down, and
+/// `drs maintain --stop` makes the next run exit immediately and consume
+/// the stop file.
+#[test]
+fn daemon_cli_maintain_heals_and_honors_stop_file() {
+    let ws = state_dir("cli");
+    let run = |args: &[&str]| {
+        let mut argv = vec!["--workspace".to_string(), ws.display().to_string()];
+        argv.extend(args.iter().map(|s| s.to_string()));
+        drs::cli::run(argv)
+    };
+
+    assert_eq!(run(&["init", "--ses", "8", "--k", "4", "--m", "2"]), 0);
+    for i in 0..3 {
+        let local = ws.join(format!("in{i}.dat"));
+        std::fs::write(&local, vec![0x5Au8 ^ i as u8; 30_000]).unwrap();
+        let lfn = format!("/vo/data/f{i}.bin");
+        assert_eq!(run(&["put", local.to_str().unwrap(), lfn.as_str()]), 0);
+    }
+    assert_eq!(run(&["se", "kill", "SE-01"]), 0);
+    assert_eq!(run(&["se", "kill", "SE-02"]), 0);
+
+    // A bounded daemon run: no manual scrub/repair-all, short ticks.
+    assert_eq!(
+        run(&[
+            "maintain", "--ticks", "8", "--interval-s", "0", "--slice", "2", "--deep-every", "2",
+        ]),
+        0
+    );
+
+    // Healed: re-open the workspace and verify via a library scrub.
+    {
+        let ws_open = drs::cli::Workspace::open(&ws).unwrap();
+        let shim = ws_open.shim();
+        let post = Maintainer::new(&shim).scrub(&ScrubOptions::default()).unwrap();
+        assert_eq!(post.healthy(), 3, "{}", post.summary());
+    }
+    let status = daemon::status_path(&ws);
+    let j = Json::parse(&std::fs::read_to_string(&status).unwrap()).unwrap();
+    assert_eq!(j.get("phase").and_then(Json::as_str), Some("stopped"));
+
+    // `maintain --stop` leaves a stop file; the next (unbounded!) run
+    // sees it, exits immediately with a final dump, and removes it.
+    assert_eq!(run(&["maintain", "--stop"]), 0);
+    let stop_file = daemon::stop_file_path(&ws);
+    assert!(stop_file.exists());
+    assert_eq!(run(&["maintain"]), 0);
+    assert!(!stop_file.exists(), "clean exit must consume the stop file");
+    let j = Json::parse(&std::fs::read_to_string(&status).unwrap()).unwrap();
+    assert_eq!(j.get("stopped_by").and_then(Json::as_str), Some("stop-file"));
+
+    std::fs::remove_dir_all(ws).unwrap();
 }
