@@ -22,6 +22,18 @@ echo "== maintenance daemon gate =="
 # explicitly so a narrowed tier-1 invocation can never silently drop it.
 cargo test -q --test maintenance daemon_
 
+echo "== streaming-path gate (bounded-memory pipelined data plane) =="
+# The whole chunk path (encode → transfer → decode) must stay streamed:
+# these tests assert byte-identical wire chunks vs the buffered codec,
+# the N·(2 blocks)+c memory bound, encode/transfer overlap, mid-stream
+# failover and put-failure unwinding. Named explicitly so a narrowed
+# tier-1 invocation can never silently drop it.
+cargo test -q --test streaming_path
+# Smoke-run the data-plane bench: it asserts the same structural
+# invariants (memory bound, overlap, round-trip) on a small file, so a
+# pipeline regression fails CI fast rather than waiting for a full run.
+cargo bench --bench streaming_path -- --quick
+
 echo "== catalogue journal recovery tests (crash-consistency gate) =="
 # Intentionally re-runs a suite the line above already covered: the
 # journal recovery tests gate crash consistency and must fail loudly,

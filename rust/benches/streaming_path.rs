@@ -1,0 +1,219 @@
+//! Buffered vs streamed data-plane: throughput, peak live bytes, and
+//! encode/transfer overlap at 64 MiB / 512 MiB / 2 GiB (default) or a
+//! small smoke size with `--quick` (the CI `streaming-path` gate).
+//!
+//! The buffered baseline materializes the file *and* all N wire chunks
+//! (the pre-refactor data plane: ~2.5× the file size resident); the
+//! streamed path holds N·(2 blocks) + constants. The bench prints both,
+//! plus wall vs (encode + transfer) to show the pipeline's overlap, and
+//! asserts the structural invariants so a regression to
+//! encode-everything-then-transfer fails fast.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use drs::dfm::{GetOptions, PutOptions, TestCluster};
+use drs::ec::{chunk_name, Codec, EcParams, PureRustBackend};
+use drs::util::prng::Rng;
+use drs::util::{fmt_bytes, fmt_secs};
+
+const BLOCK: usize = 4 * 1024 * 1024;
+const STRIPE: usize = 64 * 1024;
+
+fn gen_file(path: &Path, len: u64, rng: &mut Rng) {
+    use std::io::Write;
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path).unwrap());
+    let mut left = len;
+    let mut buf = vec![0u8; 1 << 20];
+    while left > 0 {
+        let take = (buf.len() as u64).min(left) as usize;
+        rng.fill_bytes(&mut buf[..take]);
+        f.write_all(&buf[..take]).unwrap();
+        left -= take as u64;
+    }
+    f.flush().unwrap();
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_size(size: u64, params: EcParams, workers: usize, quick: bool, tmp: &Path) {
+    let n = params.n();
+    let base = tmp.join(format!("ses-{size}"));
+    let cluster = TestCluster::builder()
+        .ses(n)
+        .ec(params)
+        .local_dirs(&base)
+        .build()
+        .unwrap();
+    let src = tmp.join(format!("src-{size}.bin"));
+    let mut rng = Rng::new(0xB10C ^ size);
+    gen_file(&src, size, &mut rng);
+
+    println!("== file {} (EC {params}, {workers} workers, {} blocks) ==",
+        fmt_bytes(size), fmt_bytes(BLOCK as u64));
+
+    // Pure encode pass: StreamEncoder over the file, output discarded.
+    let codec = Codec::with_backend(params, STRIPE, Arc::new(PureRustBackend)).unwrap();
+    let digest = {
+        use std::io::Read;
+        let mut h = drs::util::sha256::Sha256::new();
+        let mut f = std::fs::File::open(&src).unwrap();
+        let mut buf = vec![0u8; 1 << 20];
+        loop {
+            let got = f.read(&mut buf).unwrap();
+            if got == 0 {
+                break;
+            }
+            h.update(&buf[..got]);
+        }
+        h.finalize()
+    };
+    let t0 = Instant::now();
+    {
+        use std::io::Read;
+        let mut enc = codec.stream_encoder(size, digest, BLOCK).unwrap();
+        let mut f = std::fs::File::open(&src).unwrap();
+        let mut buf = vec![0u8; enc.block_input_bytes()];
+        loop {
+            let mut got = 0usize;
+            while got < buf.len() {
+                let r = f.read(&mut buf[got..]).unwrap();
+                if r == 0 {
+                    break;
+                }
+                got += r;
+            }
+            std::hint::black_box(enc.push(&buf[..got]).unwrap());
+            if got < buf.len() {
+                break;
+            }
+        }
+        std::hint::black_box(enc.finish().unwrap());
+    }
+    let encode_s = t0.elapsed().as_secs_f64();
+
+    // Buffered baseline: file + all wire chunks resident, then transfer.
+    // At 2 GiB this needs ~5 GiB RAM — exactly the problem — so it is
+    // skipped there and the arithmetic peak printed instead.
+    let buffered_peak = size + size / params.k() as u64 * n as u64;
+    let mut transfer_s = f64::NAN;
+    if size <= 512 * 1024 * 1024 {
+        let data = std::fs::read(&src).unwrap();
+        let t0 = Instant::now();
+        let wires = codec.encode(&data).unwrap();
+        let enc_buf_s = t0.elapsed().as_secs_f64();
+        let ses = cluster.registry().all();
+        let t0 = Instant::now();
+        for (i, wire) in wires.iter().enumerate() {
+            let pfn = format!("/bench/buf.bin/{}", chunk_name("buf.bin", i, n));
+            ses[i % ses.len()].put(&pfn, wire).unwrap();
+        }
+        transfer_s = t0.elapsed().as_secs_f64();
+        for (i, _) in wires.iter().enumerate() {
+            let pfn = format!("/bench/buf.bin/{}", chunk_name("buf.bin", i, n));
+            let _ = ses[i % ses.len()].delete(&pfn);
+        }
+        println!(
+            "  buffered : encode {} + transfer {} = {} [peak ~{}]",
+            fmt_secs(enc_buf_s),
+            fmt_secs(transfer_s),
+            fmt_secs(enc_buf_s + transfer_s),
+            fmt_bytes(buffered_peak)
+        );
+    } else {
+        println!(
+            "  buffered : SKIPPED (would hold ~{} resident)",
+            fmt_bytes(buffered_peak)
+        );
+    }
+
+    // Streamed put: pipelined encode + transfer.
+    let opts = PutOptions::default()
+        .with_params(params)
+        .with_stripe(STRIPE)
+        .with_workers(workers)
+        .with_block_bytes(BLOCK);
+    let t0 = Instant::now();
+    let (_, stats) = cluster.shim().put_file_stats("/bench/s.bin", &src, &opts).unwrap();
+    let put_s = t0.elapsed().as_secs_f64();
+    println!(
+        "  streamed : put {} [{:.1} MB/s] peak {} ({} blocks, {} stalls, {} overlapped writes)",
+        fmt_secs(put_s),
+        size as f64 / put_s.max(1e-9) / 1e6,
+        fmt_bytes(stats.peak_buffered_bytes),
+        stats.blocks,
+        stats.stalls,
+        stats.overlapped_writes
+    );
+    if transfer_s.is_finite() {
+        let overlap_ok = put_s < encode_s + transfer_s;
+        println!(
+            "  overlap  : wall {} vs encode {} + transfer {} → {}",
+            fmt_secs(put_s),
+            fmt_secs(encode_s),
+            fmt_secs(transfer_s),
+            if overlap_ok { "OVERLAPPED ✓" } else { "no overlap measured ✗" }
+        );
+    }
+
+    // Streamed get.
+    let out = tmp.join(format!("out-{size}.bin"));
+    let gopts = GetOptions::default().with_workers(workers).with_block_bytes(BLOCK);
+    let t0 = Instant::now();
+    let (bytes, gstats) = cluster.shim().get_file_stats("/bench/s.bin", &out, &gopts).unwrap();
+    let get_s = t0.elapsed().as_secs_f64();
+    assert_eq!(bytes, size);
+    println!(
+        "  streamed : get {} [{:.1} MB/s] peak {}",
+        fmt_secs(get_s),
+        bytes as f64 / get_s.max(1e-9) / 1e6,
+        fmt_bytes(gstats.peak_buffered_bytes)
+    );
+
+    // Regression gates (always on; the `--quick` CI smoke relies on
+    // these): bounded memory and structural encode/transfer overlap.
+    let bound = n as u64 * 2 * BLOCK as u64 + 4 * BLOCK as u64;
+    assert!(
+        stats.peak_buffered_bytes <= bound,
+        "streamed put peak {} exceeds N·(2 blocks)+c = {bound}",
+        stats.peak_buffered_bytes
+    );
+    assert!(
+        gstats.peak_buffered_bytes <= bound,
+        "streamed get peak {} exceeds N·(2 blocks)+c = {bound}",
+        gstats.peak_buffered_bytes
+    );
+    if size as usize >= 4 * BLOCK {
+        assert!(
+            stats.overlapped_writes > 0,
+            "no transfer write began before encode finished — pipeline serialized"
+        );
+    }
+    if quick {
+        // Smoke mode also verifies the round-trip payload.
+        let a = std::fs::read(&src).unwrap();
+        let b = std::fs::read(&out).unwrap();
+        assert_eq!(a, b, "round-trip mismatch");
+    }
+    let _ = std::fs::remove_file(&src);
+    let _ = std::fs::remove_file(&out);
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let tmp = std::env::temp_dir().join(format!("drs-streaming-bench-{}", std::process::id()));
+    std::fs::create_dir_all(&tmp).unwrap();
+    let params = EcParams::new(10, 5).unwrap();
+    if quick {
+        // CI smoke: 32 MiB = 8 blocks, enough to exercise backpressure,
+        // overlap and the memory bound without hammering the runner.
+        run_size(32 * 1024 * 1024, params, 8, true, &tmp);
+    } else {
+        for size in [64u64 << 20, 512 << 20, 2 << 30] {
+            run_size(size, params, 8, false, &tmp);
+        }
+    }
+    let _ = std::fs::remove_dir_all(&tmp);
+    println!("streaming-path bench done");
+}

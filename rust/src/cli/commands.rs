@@ -16,8 +16,11 @@ use super::args::{Cli, Command, USAGE};
 use super::workspace::Workspace;
 
 /// Audit every chunk of `lfn` against its catalog checksum without
-/// reconstructing the file.
+/// reconstructing the file. Chunks are hashed block-by-block through
+/// [`crate::se::hash_object`], so even huge chunks are never
+/// materialized in memory.
 fn verify_chunks(ws: &Workspace, lfn: &str) -> Result<(usize, usize)> {
+    let block = ws.config.transfer_block_bytes;
     let items = ws.dfc.list_dir(lfn)?;
     let (mut ok, mut bad) = (0usize, 0usize);
     for item in items {
@@ -28,9 +31,8 @@ fn verify_chunks(ws: &Workspace, lfn: &str) -> Result<(usize, usize)> {
         let mut good = false;
         for r in &replicas {
             if let Some(se) = ws.registry.get(&r.se) {
-                if let Ok(bytes) = se.get(&r.pfn) {
-                    let got = crate::util::hexfmt::encode(&crate::ec::chunk::sha256(&bytes));
-                    if got == want {
+                if let Ok(digest) = crate::se::hash_object(se.as_ref(), &r.pfn, block) {
+                    if crate::util::hexfmt::encode(&digest) == want {
                         good = true;
                         break;
                     }
@@ -78,7 +80,7 @@ pub fn dispatch(cli: &Cli) -> Result<()> {
         }
         Command::Put { local, lfn, workers, k, m, retry } => {
             let ws = Workspace::open(root)?;
-            let data = std::fs::read(local)?;
+            let size = std::fs::metadata(local)?.len();
             let params = match (k, m) {
                 (Some(k), Some(m)) => EcParams::new(*k, *m)?,
                 (Some(k), None) => EcParams::new(*k, ws.config.params.m())?,
@@ -89,22 +91,30 @@ pub fn dispatch(cli: &Cli) -> Result<()> {
                 .with_params(params)
                 .with_stripe(ws.config.stripe_b)
                 .with_workers(workers.unwrap_or(ws.config.workers))
+                .with_block_bytes(ws.config.transfer_block_bytes)
                 .with_retry(if *retry {
                     RetryPolicy::default_robust()
                 } else {
                     RetryPolicy::none()
                 });
             let t0 = std::time::Instant::now();
-            let placed = ws.shim().put_bytes(lfn, &data, &opts)?;
+            // Streamed: the file is encoded and uploaded block-by-block
+            // (O(N·block) memory), never read into RAM whole.
+            let (placed, stats) =
+                ws.shim().put_file_stats(lfn, Path::new(local), &opts)?;
             let dt = t0.elapsed().as_secs_f64();
             println!(
-                "put {} ({}) as {} chunks ({params}) in {} [{:.1} MB/s] via {}",
+                "put {} ({}) as {} chunks ({params}) in {} [{:.1} MB/s] via {} \
+                 [streamed: {} blocks, {} stalls, peak {}]",
                 lfn,
-                fmt_bytes(data.len() as u64),
+                fmt_bytes(size),
                 placed.len(),
                 fmt_secs(dt),
-                data.len() as f64 / dt.max(1e-9) / 1e6,
+                size as f64 / dt.max(1e-9) / 1e6,
                 ws.backend_name(),
+                stats.blocks,
+                stats.stalls,
+                fmt_bytes(stats.peak_buffered_bytes),
             );
             for (i, se) in placed.iter().enumerate() {
                 println!("  chunk {i:02} -> {se}");
@@ -115,21 +125,23 @@ pub fn dispatch(cli: &Cli) -> Result<()> {
             let ws = Workspace::open(root)?;
             let opts = GetOptions::default()
                 .with_workers(workers.unwrap_or(ws.config.workers))
+                .with_block_bytes(ws.config.transfer_block_bytes)
                 .with_retry(if *retry {
                     RetryPolicy::default_robust()
                 } else {
                     RetryPolicy::none()
                 });
             let t0 = std::time::Instant::now();
-            let data = ws.shim().get_bytes(lfn, &opts)?;
+            // Streamed: parallel same-offset block fetches across K
+            // chunks, decoded straight into the destination file.
+            let (bytes, _stats) = ws.shim().get_file_stats(lfn, Path::new(local), &opts)?;
             let dt = t0.elapsed().as_secs_f64();
-            std::fs::write(local, &data)?;
             println!(
                 "got {} ({}) in {} [{:.1} MB/s], SHA-verified",
                 lfn,
-                fmt_bytes(data.len() as u64),
+                fmt_bytes(bytes),
                 fmt_secs(dt),
-                data.len() as f64 / dt.max(1e-9) / 1e6
+                bytes as f64 / dt.max(1e-9) / 1e6
             );
             Ok(())
         }
@@ -168,7 +180,9 @@ pub fn dispatch(cli: &Cli) -> Result<()> {
         }
         Command::Repair { lfn, workers } => {
             let ws = Workspace::open(root)?;
-            let opts = GetOptions::default().with_workers(workers.unwrap_or(ws.config.workers));
+            let opts = GetOptions::default()
+                .with_workers(workers.unwrap_or(ws.config.workers))
+                .with_block_bytes(ws.config.transfer_block_bytes);
             let n = ws.shim().repair(lfn, &opts)?;
             println!("repaired {n} chunk(s) of {lfn}");
             ws.save()
@@ -234,7 +248,8 @@ pub fn dispatch(cli: &Cli) -> Result<()> {
                 opts = opts.shallow();
             }
             let mut budget = RepairBudget::default()
-                .with_workers(workers.unwrap_or(ws.config.workers));
+                .with_workers(workers.unwrap_or(ws.config.workers))
+                .with_block_bytes(ws.config.transfer_block_bytes);
             if let Some(n) = max_files {
                 budget = budget.with_max_files(*n);
             }
@@ -284,7 +299,8 @@ pub fn dispatch(cli: &Cli) -> Result<()> {
             let shim = ws.shim();
             let maintainer = Maintainer::new(&shim);
             let opts = DrainOptions::default()
-                .with_workers(workers.unwrap_or(ws.config.workers));
+                .with_workers(workers.unwrap_or(ws.config.workers))
+                .with_block_bytes(ws.config.transfer_block_bytes);
             let t0 = std::time::Instant::now();
             let report = maintainer.drain(se, &opts)?;
             for (path, err) in &report.failures {
@@ -329,8 +345,9 @@ pub fn dispatch(cli: &Cli) -> Result<()> {
                 return Ok(());
             }
             let cfg = &ws.config;
-            let mut budget =
-                RepairBudget::default().with_workers(workers.unwrap_or(cfg.workers));
+            let mut budget = RepairBudget::default()
+                .with_workers(workers.unwrap_or(cfg.workers))
+                .with_block_bytes(cfg.transfer_block_bytes);
             let files_cap = max_files.unwrap_or(cfg.maintain_repair_budget_files);
             if files_cap > 0 {
                 budget = budget.with_max_files(files_cap);

@@ -12,6 +12,7 @@
 //!   "ec": {"k": 10, "m": 5, "stripe_b": 65536},
 //!   "placement": "round-robin",
 //!   "workers": 5,
+//!   "transfer_block_bytes": 4194304,
 //!   "catalog_shards": 8,
 //!   "journal_segment_bytes": 1048576,
 //!   "journal_checkpoint_ops": 1024,
@@ -110,6 +111,10 @@ pub struct Config {
     pub client_region: String,
     /// Default transfer worker threads.
     pub workers: usize,
+    /// Streaming data plane: file bytes per pipeline block (the unit of
+    /// encode/transfer overlap; peak transfer memory is
+    /// N·(2 blocks) + constants). See docs/OPERATIONS.md for tuning.
+    pub transfer_block_bytes: usize,
     /// The storage elements the workspace wires up.
     pub ses: Vec<SeConfig>,
     /// Optional simulated network profile attached to each SE.
@@ -148,6 +153,7 @@ impl Default for Config {
             policy: PolicyKind::RoundRobin,
             client_region: "uk".into(),
             workers: 1,
+            transfer_block_bytes: crate::dfm::DEFAULT_TRANSFER_BLOCK_BYTES,
             ses: (0..15)
                 .map(|i| SeConfig {
                     name: format!("SE-{i:02}"),
@@ -190,6 +196,9 @@ impl Config {
         }
         if let Some(w) = j.get("workers").and_then(Json::as_u64) {
             cfg.workers = (w as usize).max(1);
+        }
+        if let Some(b) = j.get("transfer_block_bytes").and_then(Json::as_u64) {
+            cfg.transfer_block_bytes = (b as usize).max(1);
         }
         if let Some(s) = j.get("catalog_shards").and_then(Json::as_u64) {
             cfg.catalog_shards = (s as usize).max(1);
@@ -268,6 +277,7 @@ impl Config {
             ("placement", Json::str(self.policy.as_str())),
             ("client_region", Json::str(self.client_region.clone())),
             ("workers", Json::num(self.workers as f64)),
+            ("transfer_block_bytes", Json::num(self.transfer_block_bytes as f64)),
             ("catalog_shards", Json::num(self.catalog_shards as f64)),
             ("journal_segment_bytes", Json::num(self.journal_segment_bytes as f64)),
             ("journal_checkpoint_ops", Json::num(self.journal_checkpoint_ops as f64)),
@@ -331,7 +341,8 @@ impl Config {
     }
 
     /// Apply environment overrides: `DRS_VO`, `DRS_WORKERS`, `DRS_K`,
-    /// `DRS_M`, `DRS_STRIPE_B`, `DRS_PLACEMENT`, `DRS_CATALOG_SHARDS`,
+    /// `DRS_M`, `DRS_STRIPE_B`, `DRS_PLACEMENT`, `DRS_TRANSFER_BLOCK_BYTES`,
+    /// `DRS_CATALOG_SHARDS`,
     /// `DRS_JOURNAL_SEGMENT_BYTES`, `DRS_JOURNAL_CHECKPOINT_OPS`,
     /// `DRS_MAINTAIN_SCRUB_INTERVAL_S`, `DRS_MAINTAIN_SCRUB_SLICE`,
     /// `DRS_MAINTAIN_DEEP_EVERY`, `DRS_MAINTAIN_REPAIR_BUDGET_FILES`,
@@ -385,6 +396,11 @@ impl Config {
                 self.workers = w.max(1);
             }
         }
+        if let Ok(b) = std::env::var("DRS_TRANSFER_BLOCK_BYTES") {
+            if let Ok(b) = b.parse::<usize>() {
+                self.transfer_block_bytes = b.max(1);
+            }
+        }
         let k = std::env::var("DRS_K").ok().and_then(|v| v.parse().ok());
         let m = std::env::var("DRS_M").ok().and_then(|v| v.parse().ok());
         if k.is_some() || m.is_some() {
@@ -433,6 +449,25 @@ mod tests {
         assert_eq!(back.ses, c.ses);
         assert_eq!(back.catalog_shards, 4);
         assert!((back.network.unwrap().setup_s - 5.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn transfer_block_bytes_roundtrip_env_and_default() {
+        // Old configs (no transfer_block_bytes key) get the default.
+        let j = Json::parse(r#"{"vo":"demo"}"#).unwrap();
+        let c = Config::from_json(&j).unwrap();
+        assert_eq!(c.transfer_block_bytes, crate::dfm::DEFAULT_TRANSFER_BLOCK_BYTES);
+
+        let mut c = Config::default();
+        c.transfer_block_bytes = 1 << 20;
+        let back = Config::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.transfer_block_bytes, 1 << 20);
+
+        let mut c = Config::default();
+        std::env::set_var("DRS_TRANSFER_BLOCK_BYTES", "65536");
+        c.apply_env();
+        std::env::remove_var("DRS_TRANSFER_BLOCK_BYTES");
+        assert_eq!(c.transfer_block_bytes, 65536);
     }
 
     #[test]

@@ -14,13 +14,21 @@
 //! further-work items: transfer retries (serial and pool-safe), prefixed
 //! metadata keys, and chunk repair; plus the whole-file
 //! [`ReplicationManager`] baseline every benchmark compares against.
+//!
+//! Since the streaming-data-plane refactor the "staged through the
+//! client" part no longer means *materialized in* the client: the
+//! [`stream`] module moves data in bounded blocks, overlapping codec
+//! work with per-chunk parallel I/O — `put`/`get` of a larger-than-RAM
+//! file holds only O(N · block) bytes.
 
 pub mod cluster;
 pub mod options;
 pub mod replication;
 pub mod shim;
+pub mod stream;
 
 pub use cluster::TestCluster;
 pub use options::{GetOptions, PutOptions};
 pub use replication::ReplicationManager;
 pub use shim::{EcFileStat, EcShim};
+pub use stream::{StreamStats, DEFAULT_TRANSFER_BLOCK_BYTES};

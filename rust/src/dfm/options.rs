@@ -1,6 +1,7 @@
 //! Put/get options for the shim.
 
 use crate::catalog::MetaKeyStyle;
+use crate::dfm::stream::DEFAULT_TRANSFER_BLOCK_BYTES;
 use crate::ec::{EcParams, DEFAULT_STRIPE_B};
 use crate::transfer::RetryPolicy;
 
@@ -18,6 +19,9 @@ pub struct PutOptions {
     pub retry: RetryPolicy,
     /// Metadata tag style (§4: V2Prefixed avoids global-tag collisions).
     pub key_style: MetaKeyStyle,
+    /// File bytes per streaming pipeline block (`transfer_block_bytes`):
+    /// the unit of encode/transfer overlap and the memory bound's block.
+    pub block_bytes: usize,
 }
 
 impl Default for PutOptions {
@@ -28,6 +32,7 @@ impl Default for PutOptions {
             workers: 1,
             retry: RetryPolicy::none(),
             key_style: MetaKeyStyle::V2Prefixed,
+            block_bytes: DEFAULT_TRANSFER_BLOCK_BYTES,
         }
     }
 }
@@ -62,6 +67,12 @@ impl PutOptions {
         self.key_style = style;
         self
     }
+
+    /// Set the streaming block size in bytes (clamped to ≥ 1).
+    pub fn with_block_bytes(mut self, block_bytes: usize) -> Self {
+        self.block_bytes = block_bytes.max(1);
+        self
+    }
 }
 
 /// Options for [`crate::dfm::EcShim::get_bytes`].
@@ -71,11 +82,17 @@ pub struct GetOptions {
     pub workers: usize,
     /// Retry policy for individual chunk fetches.
     pub retry: RetryPolicy,
+    /// File bytes per streaming pipeline block (`transfer_block_bytes`).
+    pub block_bytes: usize,
 }
 
 impl Default for GetOptions {
     fn default() -> Self {
-        GetOptions { workers: 1, retry: RetryPolicy::none() }
+        GetOptions {
+            workers: 1,
+            retry: RetryPolicy::none(),
+            block_bytes: DEFAULT_TRANSFER_BLOCK_BYTES,
+        }
     }
 }
 
@@ -91,6 +108,12 @@ impl GetOptions {
         self.retry = retry;
         self
     }
+
+    /// Set the streaming block size in bytes (clamped to ≥ 1).
+    pub fn with_block_bytes(mut self, block_bytes: usize) -> Self {
+        self.block_bytes = block_bytes.max(1);
+        self
+    }
 }
 
 #[cfg(test)]
@@ -103,8 +126,10 @@ mod tests {
         assert_eq!(p.params, EcParams::new(10, 5).unwrap());
         assert_eq!(p.workers, 1);
         assert_eq!(p.retry, RetryPolicy::none());
+        assert_eq!(p.block_bytes, DEFAULT_TRANSFER_BLOCK_BYTES);
         let g = GetOptions::default();
         assert_eq!(g.workers, 1);
+        assert_eq!(g.block_bytes, DEFAULT_TRANSFER_BLOCK_BYTES);
     }
 
     #[test]
@@ -112,8 +137,12 @@ mod tests {
         let p = PutOptions::default()
             .with_params(EcParams::new(4, 2).unwrap())
             .with_workers(0)
-            .with_stripe(1024);
+            .with_stripe(1024)
+            .with_block_bytes(0);
         assert_eq!(p.workers, 1); // clamped
         assert_eq!(p.stripe_b, 1024);
+        assert_eq!(p.block_bytes, 1); // clamped
+        let g = GetOptions::default().with_block_bytes(8192);
+        assert_eq!(g.block_bytes, 8192);
     }
 }

@@ -10,16 +10,20 @@
 //! rewrite after the command.
 
 use std::collections::BTreeSet;
+use std::path::Path;
 use std::sync::Arc;
 
 use crate::catalog::{MetaKeyStyle, MetaValue, ShardedDfc};
 use crate::ec::{chunk_name, Codec, EcBackend, EcParams, PureRustBackend};
 use crate::placement::PlacementPolicy;
 use crate::se::{SeInfo, SeRegistry, StorageElement};
-use crate::transfer::{PoolConfig, RetryPolicy, WorkPool};
 use crate::{Error, Result};
 
 use super::options::{GetOptions, PutOptions};
+use super::stream::{
+    self, BlockSource, FetchChunk, FileSource, Gauge, PipeCfg, RebuildTarget, SliceSource,
+    StreamStats, UploadOutcome, UploadTarget,
+};
 
 /// Shim format version written to catalog metadata.
 pub const SHIM_VERSION: i64 = 2;
@@ -139,9 +143,46 @@ impl EcShim {
     ///
     /// Creates DFC directory `lfn` containing one DFC file per chunk,
     /// tagged with the paper's metadata; chunks are placed over the VO's
-    /// SE vector by the configured policy and uploaded through the work
-    /// pool. Returns the SE name chosen for each chunk.
+    /// SE vector by the configured policy and streamed through the block
+    /// pipeline (encode of block *b+1* overlaps transfer of block *b*).
+    /// Returns the SE name chosen for each chunk.
     pub fn put_bytes(&self, lfn: &str, data: &[u8], opts: &PutOptions) -> Result<Vec<String>> {
+        let digest = crate::util::sha256::digest(data);
+        let mut source = SliceSource::new(data);
+        self.put_stream(lfn, &mut source, digest, opts).map(|(placed, _)| placed)
+    }
+
+    /// Upload the local file at `local` as an erasure-coded file at
+    /// `lfn`, without ever materializing it: one streaming hash pre-pass
+    /// (the headers carry the whole-file digest and are written first),
+    /// then the block pipeline. Peak memory is O(N · block), so files
+    /// larger than RAM upload fine.
+    pub fn put_file(&self, lfn: &str, local: &Path, opts: &PutOptions) -> Result<Vec<String>> {
+        self.put_file_stats(lfn, local, opts).map(|(placed, _)| placed)
+    }
+
+    /// [`EcShim::put_file`], additionally returning the pipeline's
+    /// [`StreamStats`] (blocks, stalls, peak resident bytes, overlap).
+    pub fn put_file_stats(
+        &self,
+        lfn: &str,
+        local: &Path,
+        opts: &PutOptions,
+    ) -> Result<(Vec<String>, StreamStats)> {
+        let mut source = FileSource::open(local)?;
+        let digest = stream::hash_source(&mut source, opts.block_bytes)?;
+        self.put_stream(lfn, &mut source, digest, opts)
+    }
+
+    /// The shared upload pipeline behind [`EcShim::put_bytes`] and
+    /// [`EcShim::put_file`].
+    fn put_stream(
+        &self,
+        lfn: &str,
+        source: &mut dyn BlockSource,
+        digest: [u8; 32],
+        opts: &PutOptions,
+    ) -> Result<(Vec<String>, StreamStats)> {
         let infos = self.registry.vo_infos(&self.vo);
         if infos.is_empty() {
             return Err(Error::Config(format!("no SEs support VO `{}`", self.vo)));
@@ -151,8 +192,8 @@ impl EcShim {
         }
         let base = Self::base_name(lfn)?;
         let codec = Codec::with_backend(opts.params, opts.stripe_b, Arc::clone(&self.backend))?;
-        let chunks = codec.encode(data)?;
         let n = opts.params.n();
+        let file_len = source.total_len();
         let assignment = self.policy.place(n, &infos)?;
 
         // Register the chunk directory + the paper's metadata keys. The
@@ -160,73 +201,165 @@ impl EcShim {
         // catalogue shard, so concurrent uploads of different files do
         // not contend.
         self.dfc.mkdir_p(lfn)?;
+        let gauge = Gauge::default();
+        let mut placed: Vec<Option<UploadOutcome>> = (0..n).map(|_| None).collect();
+        let result = self.put_stream_body(
+            lfn, &base, source, &codec, file_len, digest, assignment, opts, &gauge,
+            &mut placed,
+        );
+        match result {
+            Ok(()) => {
+                let stats = gauge.snapshot();
+                stream::record_stream_metrics(&stats);
+                let names = placed
+                    .into_iter()
+                    .map(|o| o.expect("every chunk placed on success").se_name)
+                    .collect();
+                Ok((names, stats))
+            }
+            Err(e) => {
+                // Failure unwinding: any error after `mkdir_p` — metadata
+                // write, upload, or catalogue registration — deletes the
+                // chunks that landed and removes the directory, so a
+                // failed put never leaves a ghost catalogue entry. The
+                // removals are lowered to journaled compensating ops by
+                // the sharded catalogue.
+                self.unwind_put(lfn, &placed);
+                Err(e)
+            }
+        }
+    }
+
+    /// Everything a put does after `mkdir_p`: metadata, upload passes,
+    /// catalogue registration. Split out so `put_stream` can unwind the
+    /// directory on *any* error this returns.
+    #[allow(clippy::too_many_arguments)]
+    fn put_stream_body(
+        &self,
+        lfn: &str,
+        base: &str,
+        source: &mut dyn BlockSource,
+        codec: &Codec,
+        file_len: u64,
+        digest: [u8; 32],
+        assignment: Vec<usize>,
+        opts: &PutOptions,
+        gauge: &Gauge,
+        placed: &mut [Option<UploadOutcome>],
+    ) -> Result<()> {
+        let n = placed.len();
         let style = opts.key_style;
         self.dfc.set_meta(lfn, style.total_key(), MetaValue::Int(n as i64))?;
         self.dfc.set_meta(lfn, style.split_key(), MetaValue::Int(opts.params.k() as i64))?;
         self.dfc.set_meta(lfn, style.version_key(), MetaValue::Int(SHIM_VERSION))?;
         self.dfc.set_meta(lfn, style.stripe_key(), MetaValue::Int(opts.stripe_b as i64))?;
-
-        // Upload jobs: chunk i → SE assignment[i], with optional retry /
-        // fallback to the next SE in the vector.
-        let ses = self.registry.vo_vector(&self.vo);
-        let mut jobs: Vec<(usize, Box<dyn FnOnce() -> Result<(usize, String, String, u64, String)> + Send>)> =
-            Vec::with_capacity(n);
-        for (i, wire) in chunks.into_iter().enumerate() {
-            let name = chunk_name(&base, i, n);
-            let pfn = format!("{lfn}/{name}");
-            let primary = assignment[i];
-            let ses = ses.clone();
-            let infos = infos.clone();
-            let policy = Arc::clone(&self.policy);
-            let retry = opts.retry;
-            jobs.push((
-                i,
-                Box::new(move || {
-                    upload_with_retry(&ses, &infos, policy.as_ref(), retry, i, primary, &pfn, &wire)
-                        .map(|se_name| {
-                            let digest = crate::ec::chunk::sha256(&wire);
-                            (i, se_name, pfn, wire.len() as u64, crate::util::hexfmt::encode(&digest))
-                        })
-                }),
-            ));
-        }
-
-        let pool = WorkPool::new(PoolConfig::parallel(opts.workers));
-        let outcome = pool.run(jobs, usize::MAX);
-
-        if !outcome.failures.is_empty() {
-            // The paper's semantics: any failed chunk fails the upload.
-            // Clean up what landed, then remove the catalog entries.
-            for (_, se_name, pfn, _, _) in outcome.successes.iter().map(|(_, v)| v) {
-                if let Some(se) = self.registry.get(se_name) {
-                    let _ = se.delete(pfn);
-                }
-            }
-            let _ = self.dfc.remove_dir(lfn);
-            let (idx, err) = &outcome.failures[0];
-            return Err(Error::Transfer(format!(
-                "upload of chunk {idx} failed ({err}); put aborted per paper semantics"
-            )));
-        }
-
-        // Register chunk files + replicas.
-        let mut per_chunk_se = vec![String::new(); n];
-        let mut rows: Vec<&(usize, String, String, u64, String)> =
-            outcome.successes.iter().map(|(_, v)| v).collect();
-        rows.sort_by_key(|r| r.0);
-        for (i, se_name, pfn, size, checksum) in rows {
-            let name = chunk_name(&base, *i, n);
+        self.run_upload_passes(
+            lfn, base, source, codec, file_len, digest, assignment, opts, gauge, placed,
+        )?;
+        // Register chunk files + replicas, in chunk-index order.
+        for o in placed.iter().flatten() {
             let entry = crate::catalog::FileEntry {
-                size: *size,
-                checksum: checksum.clone(),
+                size: o.size,
+                checksum: o.checksum_hex.clone(),
                 replicas: vec![],
                 meta: Default::default(),
             };
-            self.dfc.add_file(&format!("{lfn}/{name}"), entry)?;
-            self.dfc.register_replica(&format!("{lfn}/{name}"), se_name, pfn)?;
-            per_chunk_se[*i] = se_name.clone();
+            self.dfc.add_file(&o.pfn, entry)?;
+            self.dfc.register_replica(&o.pfn, &o.se_name, &o.pfn)?;
         }
-        Ok(per_chunk_se)
+        Ok(())
+    }
+
+    /// Streamed upload passes: pass 1 targets the policy's assignment;
+    /// chunks that fail are retried (same SE, or the policy's fallback)
+    /// in follow-up passes that re-stream the source and re-encode only
+    /// the failed subset. SE availability is re-checked inside each
+    /// transfer job, so a mid-upload outage fails that chunk with a
+    /// clean [`Error::SeDown`] rather than a backend I/O error.
+    #[allow(clippy::too_many_arguments)]
+    fn run_upload_passes(
+        &self,
+        lfn: &str,
+        base: &str,
+        source: &mut dyn BlockSource,
+        codec: &Codec,
+        file_len: u64,
+        digest: [u8; 32],
+        assignment: Vec<usize>,
+        opts: &PutOptions,
+        gauge: &Gauge,
+        placed: &mut [Option<UploadOutcome>],
+    ) -> Result<()> {
+        let infos = self.registry.vo_infos(&self.vo);
+        let ses = self.registry.vo_vector(&self.vo);
+        let n = placed.len();
+        let cfg = PipeCfg { workers: opts.workers.max(1), block_bytes: opts.block_bytes };
+        let mut current = assignment;
+        let mut tried: Vec<Vec<usize>> = vec![Vec::new(); n];
+        let mut pass = 0usize;
+        loop {
+            pass += 1;
+            let targets: Vec<UploadTarget> = (0..n)
+                .filter(|i| placed[*i].is_none())
+                .map(|i| UploadTarget {
+                    index: i,
+                    se: Arc::clone(&ses[current[i]]),
+                    pfn: format!("{lfn}/{}", chunk_name(base, i, n)),
+                })
+                .collect();
+            if targets.is_empty() {
+                return Ok(());
+            }
+            let (successes, failures) =
+                stream::upload_pass(source, codec, file_len, digest, &targets, &cfg, gauge)?;
+            for o in successes {
+                placed[o.index] = Some(o);
+            }
+            if failures.is_empty() {
+                return Ok(());
+            }
+            for (idx, _) in &failures {
+                tried[*idx].push(current[*idx]);
+            }
+            if !opts.retry.retries_left(pass) {
+                // The paper's semantics: any failed chunk fails the
+                // upload (the caller unwinds what landed).
+                let (idx, err) = &failures[0];
+                return Err(Error::Transfer(format!(
+                    "upload of chunk {idx} failed ({err}); put aborted per paper semantics"
+                )));
+            }
+            if opts.retry.fallback_se {
+                for (idx, err) in &failures {
+                    match self.policy.fallback(*idx, &infos, &tried[*idx]) {
+                        Some(next) => current[*idx] = next,
+                        None => {
+                            return Err(Error::Transfer(format!(
+                                "upload of chunk {idx} failed ({err}); no fallback SE left"
+                            )))
+                        }
+                    }
+                }
+            }
+            // !fallback_se: retry the same SE (transient failures).
+        }
+    }
+
+    /// Best-effort cleanup of a failed put: delete landed chunk objects,
+    /// then remove the catalogue subtree (journaled compensating ops).
+    ///
+    /// Only reachable after this call's own `mkdir_p` — a put against an
+    /// lfn that already exists is rejected before any mutation, so the
+    /// unwind can never erase a previously committed file. Two *racing*
+    /// puts of the same lfn have always been undefined (they write the
+    /// same chunk pfns); the unwind does not change that.
+    fn unwind_put(&self, lfn: &str, placed: &[Option<UploadOutcome>]) {
+        for o in placed.iter().flatten() {
+            if let Some(se) = self.registry.get(&o.se_name) {
+                let _ = se.delete(&o.pfn);
+            }
+        }
+        let _ = self.dfc.remove_dir(lfn);
     }
 
     // ------------------------------------------------------------------
@@ -235,39 +368,99 @@ impl EcShim {
 
     /// Download and reconstruct the file at `lfn`.
     ///
-    /// Fetch jobs are queued in chunk order (data chunks first, so a fully
-    /// healthy file decodes on the identity path) and the pool stops after
-    /// K successes — the paper's early-stop optimisation.
+    /// Streams block-by-block: the pipeline picks the first K chunks in
+    /// index order (data chunks first, so a fully healthy file decodes
+    /// on the identity path — the paper's early-stop optimisation),
+    /// issues parallel same-offset block fetches across all K at once,
+    /// and swaps a failed chunk for a spare mid-stream.
     pub fn get_bytes(&self, lfn: &str, opts: &GetOptions) -> Result<Vec<u8>> {
+        let mut sink = stream::VecSink(Vec::new());
+        self.get_into(lfn, &mut sink, opts)?;
+        Ok(sink.0)
+    }
+
+    /// Download and reconstruct `lfn` straight into the local file at
+    /// `local`, decoding block-by-block — peak memory is O(K · block),
+    /// so files larger than RAM download fine.
+    pub fn get_file(&self, lfn: &str, local: &Path, opts: &GetOptions) -> Result<u64> {
+        self.get_file_stats(lfn, local, opts).map(|(bytes, _)| bytes)
+    }
+
+    /// [`EcShim::get_file`], additionally returning the pipeline's
+    /// [`StreamStats`].
+    pub fn get_file_stats(
+        &self,
+        lfn: &str,
+        local: &Path,
+        opts: &GetOptions,
+    ) -> Result<(u64, StreamStats)> {
+        // Stream into a uniquely named sibling temp file and rename only
+        // on success, so a failed download (bad lfn, mid-stream SE
+        // losses, digest mismatch) never clobbers a pre-existing
+        // destination file — and concurrent gets to the same destination
+        // never share a temp (last rename wins, each file whole).
+        static TMP_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+        let tmp = {
+            let name = local
+                .file_name()
+                .map(|n| n.to_string_lossy().into_owned())
+                .unwrap_or_else(|| "out".into());
+            let seq = TMP_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            local.with_file_name(format!(
+                "{name}.{}-{seq}.drs-part",
+                std::process::id()
+            ))
+        };
+        let mut sink = stream::FileSink::create(&tmp)?;
+        match self.get_into_stats(lfn, &mut sink, opts) {
+            Ok((bytes, stats)) => {
+                sink.finish()?;
+                std::fs::rename(&tmp, local)?;
+                Ok((bytes, stats))
+            }
+            Err(e) => {
+                drop(sink);
+                let _ = std::fs::remove_file(&tmp);
+                Err(e)
+            }
+        }
+    }
+
+    fn get_into(
+        &self,
+        lfn: &str,
+        sink: &mut dyn stream::BlockSink,
+        opts: &GetOptions,
+    ) -> Result<u64> {
+        self.get_into_stats(lfn, sink, opts).map(|(bytes, _)| bytes)
+    }
+
+    fn get_into_stats(
+        &self,
+        lfn: &str,
+        sink: &mut dyn stream::BlockSink,
+        opts: &GetOptions,
+    ) -> Result<(u64, StreamStats)> {
         let (params, stripe_b, chunk_files) = self.read_layout(lfn)?;
-
-        // Build fetch jobs.
-        let mut jobs: Vec<(usize, Box<dyn FnOnce() -> Result<(usize, Vec<u8>)> + Send>)> =
-            Vec::new();
-        for (index, _name, replicas) in &chunk_files {
-            let index = *index;
-            let replicas = replicas.clone();
-            let registry = Arc::clone(&self.registry);
-            let retry = opts.retry;
-            jobs.push((
-                index,
-                Box::new(move || fetch_with_retry(&registry, &replicas, retry, index)),
-            ));
-        }
-
-        let pool = WorkPool::new(PoolConfig::parallel(opts.workers));
-        let outcome = pool.run(jobs, params.k());
-        if outcome.success_count() < params.k() {
-            return Err(Error::NotEnoughChunks {
-                have: outcome.success_count(),
-                need: params.k(),
-            });
-        }
-
         let codec = Codec::with_backend(params, stripe_b, Arc::clone(&self.backend))?;
-        let fetched: Vec<(usize, Vec<u8>)> =
-            outcome.successes.into_iter().map(|(_, v)| v).collect();
-        codec.decode(&fetched)
+        let candidates: Vec<FetchChunk> = chunk_files
+            .into_iter()
+            .map(|(index, _name, replicas)| FetchChunk { index, replicas })
+            .collect();
+        let cfg = PipeCfg { workers: opts.workers.max(1), block_bytes: opts.block_bytes };
+        let gauge = Gauge::default();
+        let bytes = stream::download_pipeline(
+            &self.registry,
+            &codec,
+            &candidates,
+            sink,
+            &cfg,
+            opts.retry,
+            &gauge,
+        )?;
+        let stats = gauge.snapshot();
+        stream::record_stream_metrics(&stats);
+        Ok((bytes, stats))
     }
 
     /// Parse the catalog layout of an EC file: params, stripe width and
@@ -428,33 +621,17 @@ impl EcShim {
         }
 
         let (params, stripe_b, chunk_files) = self.read_layout(lfn)?;
-        // Fetch K surviving chunks (early-stop pool, like get).
-        let mut jobs: Vec<(usize, Box<dyn FnOnce() -> Result<(usize, Vec<u8>)> + Send>)> =
-            Vec::new();
-        for (index, _name, replicas) in &chunk_files {
-            if missing.contains(index) {
-                continue;
-            }
-            let index = *index;
-            let replicas = replicas.clone();
-            let registry = Arc::clone(&self.registry);
-            let retry = opts.retry;
-            jobs.push((
-                index,
-                Box::new(move || fetch_with_retry(&registry, &replicas, retry, index)),
-            ));
-        }
-        let outcome = WorkPool::new(PoolConfig::parallel(opts.workers)).run(jobs, params.k());
-        if outcome.success_count() < params.k() {
-            return Err(Error::NotEnoughChunks {
-                have: outcome.success_count(),
-                need: params.k(),
-            });
-        }
-        let survivors: Vec<(usize, Vec<u8>)> =
-            outcome.successes.into_iter().map(|(_, v)| v).collect();
         let codec = Codec::with_backend(params, stripe_b, Arc::clone(&self.backend))?;
-        let rebuilt = codec.repair(&survivors, &missing)?;
+        // Survivor candidates, in index order (data chunks first): the
+        // rebuild pipeline streams K of them block-by-block, so repairing
+        // one large file never spikes memory beyond O(K · block).
+        let available: BTreeSet<usize> =
+            stat.chunks.iter().filter(|c| c.available).map(|c| c.index).collect();
+        let candidates: Vec<FetchChunk> = chunk_files
+            .iter()
+            .filter(|(i, _, _)| available.contains(i))
+            .map(|(i, _, reps)| FetchChunk { index: *i, replicas: reps.clone() })
+            .collect();
 
         // Place rebuilt chunks through the placement policy with sibling
         // anti-affinity, like the drain path: SEs already holding a live
@@ -473,8 +650,8 @@ impl EcShim {
         let mut chosen: BTreeSet<String> = BTreeSet::new();
         let base = Self::base_name(lfn)?;
         let n = params.n();
-        let mut repaired = 0usize;
-        for (ordinal, (idx, wire)) in rebuilt.into_iter().enumerate() {
+        let mut placements: Vec<(usize, Arc<dyn StorageElement>, String)> = Vec::new();
+        for (ordinal, &idx) in missing.iter().enumerate() {
             let eligible = |avoid: &BTreeSet<String>| -> Vec<SeInfo> {
                 infos
                     .iter()
@@ -484,47 +661,71 @@ impl EcShim {
                     .cloned()
                     .collect()
             };
-            let mut candidates = eligible(&holding);
-            if candidates.is_empty() {
-                candidates = eligible(&chosen);
+            let mut eligible_ses = eligible(&holding);
+            if eligible_ses.is_empty() {
+                eligible_ses = eligible(&chosen);
             }
-            if candidates.is_empty() {
+            if eligible_ses.is_empty() {
                 return Err(Error::Transfer("no SE available for repair".into()));
             }
             // One placement slot per chunk; rotating the candidate list by
             // the rebuild ordinal spreads successive chunks across the
             // vector (round-robin stays round-robin) without asking the
             // policy for slots it will not use.
-            candidates.rotate_left(ordinal % candidates.len());
+            eligible_ses.rotate_left(ordinal % eligible_ses.len());
             let slot = *self
                 .policy
-                .place(1, &candidates)?
+                .place(1, &eligible_ses)?
                 .first()
                 .ok_or_else(|| Error::Ec("placement returned no slot".into()))?;
-            let target = candidates[slot].name.clone();
+            let target = eligible_ses
+                .get(slot)
+                .ok_or_else(|| Error::Ec("placement slot out of range".into()))?
+                .name
+                .clone();
             let se = self
                 .registry
                 .get(&target)
                 .ok_or_else(|| Error::Config("registry inconsistent".into()))?;
-            let name = chunk_name(&base, idx, n);
-            let pfn = format!("{lfn}/{name}");
-            se.put(&pfn, &wire)?;
-            // Drop stale replica records, then register the new one.
-            let old: Vec<String> = self
-                .dfc
-                .replicas(&pfn)?
-                .iter()
-                .map(|r| r.se.clone())
-                .collect();
-            for se_name in old {
-                let _ = self.dfc.remove_replica(&pfn, &se_name);
-            }
-            self.dfc.register_replica(&pfn, se.name(), &pfn)?;
+            let pfn = format!("{lfn}/{}", chunk_name(&base, idx, n));
             holding.insert(target.clone());
             chosen.insert(target);
-            repaired += 1;
+            placements.push((idx, se, pfn));
         }
-        Ok(repaired)
+
+        // Stream: fetch K survivors once, re-derive every missing chunk
+        // per block (`missing rows = R · survivor rows`), committing the
+        // rebuilt sinks only after the whole-file digest verifies. The
+        // rebuilt wire chunks are bit-identical to the originals.
+        let targets: Vec<RebuildTarget<'_>> = placements
+            .iter()
+            .map(|(idx, se, pfn)| {
+                Ok(RebuildTarget { index: *idx, sink: se.put_writer(pfn)? })
+            })
+            .collect::<Result<_>>()?;
+        let cfg = PipeCfg { workers: opts.workers.max(1), block_bytes: opts.block_bytes };
+        let gauge = Gauge::default();
+        stream::rebuild_pipeline(
+            &self.registry,
+            &codec,
+            &candidates,
+            targets,
+            &cfg,
+            opts.retry,
+            &gauge,
+        )?;
+        stream::record_stream_metrics(&gauge.snapshot());
+
+        // Drop stale replica records, then register the new locations.
+        for (_, se, pfn) in &placements {
+            let old: Vec<String> =
+                self.dfc.replicas(pfn)?.iter().map(|r| r.se.clone()).collect();
+            for se_name in old {
+                let _ = self.dfc.remove_replica(pfn, &se_name);
+            }
+            self.dfc.register_replica(pfn, se.name(), pfn)?;
+        }
+        Ok(placements.len())
     }
 
     /// Delete the EC file: best-effort removal of chunk objects, then the
@@ -542,71 +743,3 @@ impl EcShim {
     }
 }
 
-/// Upload one chunk with retry/fallback (free function so the pool closure
-/// stays small).
-#[allow(clippy::too_many_arguments)]
-fn upload_with_retry(
-    ses: &[Arc<dyn StorageElement>],
-    infos: &[crate::se::SeInfo],
-    policy: &dyn PlacementPolicy,
-    retry: RetryPolicy,
-    chunk_idx: usize,
-    primary: usize,
-    pfn: &str,
-    wire: &[u8],
-) -> Result<String> {
-    let mut tried: Vec<usize> = Vec::new();
-    let mut target = primary;
-    let mut attempts = 0usize;
-    loop {
-        attempts += 1;
-        match ses[target].put(pfn, wire) {
-            Ok(()) => return Ok(ses[target].name().to_string()),
-            Err(e) => {
-                tried.push(target);
-                if !retry.retries_left(attempts) {
-                    return Err(e);
-                }
-                if retry.fallback_se {
-                    match policy.fallback(chunk_idx, infos, &tried) {
-                        Some(next) => target = next,
-                        None => return Err(e),
-                    }
-                }
-                // !fallback_se: retry the same SE (transient failures).
-            }
-        }
-    }
-}
-
-/// Fetch one chunk, walking its replica list, with retries.
-fn fetch_with_retry(
-    registry: &SeRegistry,
-    replicas: &[crate::catalog::Replica],
-    retry: RetryPolicy,
-    index: usize,
-) -> Result<(usize, Vec<u8>)> {
-    let mut attempts = 0usize;
-    let mut last_err = Error::Transfer(format!("chunk {index}: no replicas registered"));
-    loop {
-        for r in replicas {
-            attempts += 1;
-            match registry.get(&r.se) {
-                Some(se) => match se.get(&r.pfn) {
-                    Ok(bytes) => return Ok((index, bytes)),
-                    Err(e) => last_err = e,
-                },
-                None => {
-                    last_err =
-                        Error::Config(format!("replica SE `{}` not in registry", r.se))
-                }
-            }
-            if !retry.retries_left(attempts) {
-                return Err(last_err);
-            }
-        }
-        if replicas.is_empty() || !retry.retries_left(attempts) {
-            return Err(last_err);
-        }
-    }
-}

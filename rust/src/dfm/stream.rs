@@ -1,0 +1,1217 @@
+//! The block-streaming data plane: bounded-memory, pipelined
+//! encode → transfer → decode over the whole chunk path.
+//!
+//! The paper's conclusion singles out "overheads for multiple file
+//! transfers" as the biggest threat to EC competitiveness, and its
+//! headline win is "parallelising access across all of the distributed
+//! chunks at once". This module is that access pattern turned into the
+//! default data plane:
+//!
+//! * **Upload** (`upload_pass`): a [`crate::ec::StreamEncoder`] feeds N
+//!   per-chunk bounded double-buffered queues (capacity
+//!   [`QUEUE_DEPTH`] blocks — the encoder *stalls* when a queue is full,
+//!   which is the backpressure that caps memory), drained by
+//!   [`crate::transfer::WorkPool`] transfer workers that append blocks to
+//!   [`crate::se::ChunkSink`]s. Encode of block *b+1* overlaps transfer
+//!   of block *b*; peak residency is O(N · block), never O(file).
+//! * **Download** (`download_pipeline`): K per-chunk reader threads
+//!   issue parallel `get_range` fetches for the *same block offset*
+//!   across all K chunks at once (the GridFTP-striped-streams /
+//!   LDPC-segment-parallel pattern), a [`crate::ec::StreamDecoder`]
+//!   folds each block straight into the destination sink, and a failed
+//!   chunk is swapped for a spare *mid-stream* — already-decoded blocks
+//!   are kept, only the survivor matrix is re-derived.
+//! * **Rebuild** (`rebuild_pipeline`): the repair path streams K
+//!   survivors once and re-derives every lost chunk per block via the
+//!   precomputed [`crate::ec::rebuild_matrix`], committing the rebuilt
+//!   sinks only after the whole-file digest verifies.
+//!
+//! Pipeline health is exported as `transfer.stream.{blocks,bytes,stalls}`
+//! metrics and per-call [`StreamStats`] (used by the bounded-memory tests
+//! and `benches/streaming_path.rs`).
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::catalog::Replica;
+use crate::ec::chunk::HEADER_LEN;
+use crate::ec::stripe::{chunk_payload_len, segment_count};
+use crate::ec::{rebuild_matrix, ChunkHeader, Codec, EncodedBlock, StreamEncoder};
+use crate::se::{check_up, ChunkSink, SeRegistry, StorageElement};
+use crate::transfer::{PoolConfig, RetryPolicy, WorkPool};
+use crate::{Error, Result};
+
+/// Default streaming block size (`transfer_block_bytes`): 4 MiB of file
+/// payload per pipeline block. See `docs/OPERATIONS.md` for tuning.
+pub const DEFAULT_TRANSFER_BLOCK_BYTES: usize = 4 * 1024 * 1024;
+
+/// Per-chunk queue capacity in blocks. Two means the encoder can build
+/// block *b+1* while block *b* is in flight — classic double buffering —
+/// and bounds pipeline residency at N·(2 blocks) + constants.
+pub const QUEUE_DEPTH: usize = 2;
+
+/// Pipeline health counters for one streamed transfer.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StreamStats {
+    /// Blocks moved through the per-chunk queues.
+    pub blocks: u64,
+    /// Payload bytes moved through the queues.
+    pub bytes: u64,
+    /// Times a producer blocked on a full queue (backpressure events).
+    pub stalls: u64,
+    /// Peak bytes resident in queues and in-flight writes at any instant
+    /// — the bounded-memory guarantee, measured.
+    pub peak_buffered_bytes: u64,
+    /// Payload-block writes that began before encoding finished (header
+    /// writes excluded); a positive count is direct evidence of
+    /// encode/transfer overlap.
+    pub overlapped_writes: u64,
+}
+
+/// Shared accounting for one pipeline run.
+#[derive(Default)]
+pub(crate) struct Gauge {
+    cur: AtomicU64,
+    peak: AtomicU64,
+    blocks: AtomicU64,
+    bytes: AtomicU64,
+    stalls: AtomicU64,
+    overlapped: AtomicU64,
+    encode_done: AtomicBool,
+}
+
+impl Gauge {
+    fn add(&self, n: u64) {
+        let now = self.cur.fetch_add(n, Ordering::SeqCst) + n;
+        self.peak.fetch_max(now, Ordering::SeqCst);
+    }
+
+    fn sub(&self, n: u64) {
+        self.cur.fetch_sub(n, Ordering::SeqCst);
+    }
+
+    fn note_block(&self, bytes: u64) {
+        self.blocks.fetch_add(1, Ordering::Relaxed);
+        self.bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    fn note_write(&self) {
+        if !self.encode_done.load(Ordering::SeqCst) {
+            self.overlapped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub(crate) fn snapshot(&self) -> StreamStats {
+        StreamStats {
+            blocks: self.blocks.load(Ordering::Relaxed),
+            bytes: self.bytes.load(Ordering::Relaxed),
+            stalls: self.stalls.load(Ordering::Relaxed),
+            peak_buffered_bytes: self.peak.load(Ordering::SeqCst),
+            overlapped_writes: self.overlapped.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Record a finished transfer's pipeline counters into the global
+/// metrics registry.
+pub(crate) fn record_stream_metrics(stats: &StreamStats) {
+    let m = crate::metrics::global();
+    m.add("transfer.stream.blocks", stats.blocks);
+    m.add("transfer.stream.bytes", stats.bytes);
+    m.add("transfer.stream.stalls", stats.stalls);
+}
+
+// ---------------------------------------------------------------------
+// Bounded block queue + worker-permit semaphore (std-only primitives).
+// ---------------------------------------------------------------------
+
+struct QState<T> {
+    items: VecDeque<T>,
+    closed: bool,
+    killed: bool,
+}
+
+/// A bounded MPSC block queue with explicit close (producer done) and
+/// kill (abandon: wakes a blocked producer with its item back).
+struct BlockQueue<T> {
+    state: Mutex<QState<T>>,
+    cv: Condvar,
+    cap: usize,
+}
+
+impl<T> BlockQueue<T> {
+    fn new(cap: usize) -> Self {
+        BlockQueue {
+            state: Mutex::new(QState { items: VecDeque::new(), closed: false, killed: false }),
+            cv: Condvar::new(),
+            cap: cap.max(1),
+        }
+    }
+
+    /// Blocking push; counts one stall if the queue was full. Returns the
+    /// item back if the queue was killed.
+    fn push(&self, item: T, stalls: &AtomicU64) -> std::result::Result<(), T> {
+        let mut st = self.state.lock().unwrap();
+        let mut stalled = false;
+        while st.items.len() >= self.cap && !st.killed {
+            if !stalled {
+                stalls.fetch_add(1, Ordering::Relaxed);
+                stalled = true;
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+        if st.killed {
+            return Err(item);
+        }
+        st.items.push_back(item);
+        self.cv.notify_all();
+        Ok(())
+    }
+
+    /// Blocking pop; `None` once the queue is closed (or killed) and
+    /// drained.
+    fn pop(&self) -> Option<T> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.killed {
+                return None;
+            }
+            if let Some(x) = st.items.pop_front() {
+                self.cv.notify_all();
+                return Some(x);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Producer signal: no more items will arrive.
+    fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Abandon the queue from either side, draining queued items so the
+    /// caller can settle their accounting.
+    fn kill(&self) -> Vec<T> {
+        let mut st = self.state.lock().unwrap();
+        st.killed = true;
+        let drained = st.items.drain(..).collect();
+        self.cv.notify_all();
+        drained
+    }
+
+    fn was_killed(&self) -> bool {
+        self.state.lock().unwrap().killed
+    }
+}
+
+/// Kills every queue when dropped — placed at the top of a pipeline's
+/// scope so that *any* exit path (including `?` early returns) unblocks
+/// reader/writer threads before the scope joins them.
+struct KillGuard<'a, T>(&'a [BlockQueue<T>]);
+
+impl<T> Drop for KillGuard<'_, T> {
+    fn drop(&mut self) {
+        for q in self.0 {
+            let _ = q.kill();
+        }
+    }
+}
+
+/// Counting semaphore gating concurrent SE writes/reads to the
+/// configured transfer worker count.
+struct Semaphore {
+    permits: Mutex<usize>,
+    cv: Condvar,
+}
+
+struct SemGuard<'a>(&'a Semaphore);
+
+impl Semaphore {
+    fn new(n: usize) -> Self {
+        Semaphore { permits: Mutex::new(n.max(1)), cv: Condvar::new() }
+    }
+
+    fn acquire(&self) -> SemGuard<'_> {
+        let mut p = self.permits.lock().unwrap();
+        while *p == 0 {
+            p = self.cv.wait(p).unwrap();
+        }
+        *p -= 1;
+        SemGuard(self)
+    }
+}
+
+impl Drop for SemGuard<'_> {
+    fn drop(&mut self) {
+        let mut p = self.0.permits.lock().unwrap();
+        *p += 1;
+        self.0.cv.notify_one();
+    }
+}
+
+// ---------------------------------------------------------------------
+// Byte sources and sinks.
+// ---------------------------------------------------------------------
+
+/// A resettable, length-known byte stream feeding the upload encoder.
+pub(crate) trait BlockSource: Send {
+    /// Total bytes the source will yield.
+    fn total_len(&self) -> u64;
+
+    /// Fill `buf`, returning bytes read (short ⇒ EOF).
+    fn read_block(&mut self, buf: &mut [u8]) -> Result<usize>;
+
+    /// Rewind to the start (hash pre-pass and retry passes re-stream).
+    fn reset(&mut self) -> Result<()>;
+}
+
+/// In-memory source over a borrowed slice (`put_bytes`).
+pub(crate) struct SliceSource<'a> {
+    data: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> SliceSource<'a> {
+    pub(crate) fn new(data: &'a [u8]) -> Self {
+        SliceSource { data, pos: 0 }
+    }
+}
+
+impl BlockSource for SliceSource<'_> {
+    fn total_len(&self) -> u64 {
+        self.data.len() as u64
+    }
+
+    fn read_block(&mut self, buf: &mut [u8]) -> Result<usize> {
+        let n = buf.len().min(self.data.len() - self.pos);
+        buf[..n].copy_from_slice(&self.data[self.pos..self.pos + n]);
+        self.pos += n;
+        Ok(n)
+    }
+
+    fn reset(&mut self) -> Result<()> {
+        self.pos = 0;
+        Ok(())
+    }
+}
+
+/// File-backed source (`put_file`): one open descriptor, block reads.
+pub(crate) struct FileSource {
+    file: std::fs::File,
+    len: u64,
+}
+
+impl FileSource {
+    pub(crate) fn open(path: &std::path::Path) -> Result<Self> {
+        let file = std::fs::File::open(path)?;
+        let len = file.metadata()?.len();
+        Ok(FileSource { file, len })
+    }
+}
+
+impl BlockSource for FileSource {
+    fn total_len(&self) -> u64 {
+        self.len
+    }
+
+    fn read_block(&mut self, buf: &mut [u8]) -> Result<usize> {
+        use std::io::Read;
+        let mut filled = 0usize;
+        while filled < buf.len() {
+            let n = self.file.read(&mut buf[filled..])?;
+            if n == 0 {
+                break;
+            }
+            filled += n;
+        }
+        Ok(filled)
+    }
+
+    fn reset(&mut self) -> Result<()> {
+        use std::io::{Seek, SeekFrom};
+        self.file.seek(SeekFrom::Start(0))?;
+        Ok(())
+    }
+}
+
+/// SHA-256 of a source, streamed block-by-block, leaving it rewound —
+/// the upload's digest pre-pass (headers carry the whole-file digest and
+/// are the first bytes written, so the digest must exist up front).
+pub(crate) fn hash_source(src: &mut dyn BlockSource, block: usize) -> Result<[u8; 32]> {
+    let mut h = crate::util::sha256::Sha256::new();
+    let mut buf = vec![0u8; block.max(1)];
+    loop {
+        let n = src.read_block(&mut buf)?;
+        if n == 0 {
+            break;
+        }
+        h.update(&buf[..n]);
+        if n < buf.len() {
+            break;
+        }
+    }
+    src.reset()?;
+    Ok(h.finalize())
+}
+
+/// Ordered sink for decoded file bytes (download destination).
+pub(crate) trait BlockSink {
+    /// Append the next run of decoded bytes.
+    fn write_block(&mut self, data: &[u8]) -> Result<()>;
+}
+
+/// Collects into a `Vec` (`get_bytes`).
+pub(crate) struct VecSink(pub(crate) Vec<u8>);
+
+impl BlockSink for VecSink {
+    fn write_block(&mut self, data: &[u8]) -> Result<()> {
+        self.0.extend_from_slice(data);
+        Ok(())
+    }
+}
+
+/// Writes straight to a local file (`get_file`).
+pub(crate) struct FileSink {
+    w: std::io::BufWriter<std::fs::File>,
+}
+
+impl FileSink {
+    pub(crate) fn create(path: &std::path::Path) -> Result<Self> {
+        Ok(FileSink { w: std::io::BufWriter::new(std::fs::File::create(path)?) })
+    }
+
+    pub(crate) fn finish(mut self) -> Result<()> {
+        use std::io::Write;
+        self.w.flush()?;
+        // fsync before the caller renames over a (possibly pre-existing)
+        // destination — the repo's tmp+fsync+rename convention
+        // (`util::atomic_write`); rename-before-durable could otherwise
+        // replace a good file with a truncated one on power loss.
+        self.w.get_ref().sync_all()?;
+        Ok(())
+    }
+}
+
+impl BlockSink for FileSink {
+    fn write_block(&mut self, data: &[u8]) -> Result<()> {
+        use std::io::Write;
+        self.w.write_all(data)?;
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Shared replica fetch.
+// ---------------------------------------------------------------------
+
+/// One ranged read against a chunk's replica list, walking replicas with
+/// the retry budget — the block-fetch primitive shared by the download
+/// pipeline, the rebuild pipeline and the federated reader.
+pub(crate) fn read_replicas(
+    registry: &SeRegistry,
+    replicas: &[Replica],
+    offset: u64,
+    len: usize,
+    retry: RetryPolicy,
+) -> Result<Vec<u8>> {
+    let mut attempts = 0usize;
+    let mut last = Error::Transfer("no replicas registered".into());
+    loop {
+        for r in replicas {
+            attempts += 1;
+            match registry.get(&r.se) {
+                Some(se) => match se.get_range(&r.pfn, offset, len) {
+                    Ok(bytes) => return Ok(bytes),
+                    Err(e) => last = e,
+                },
+                None => {
+                    last = Error::Config(format!("replica SE `{}` not in registry", r.se));
+                }
+            }
+            if !retry.retries_left(attempts) {
+                return Err(last);
+            }
+        }
+        if replicas.is_empty() || !retry.retries_left(attempts) {
+            return Err(last);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Upload.
+// ---------------------------------------------------------------------
+
+/// Pipeline sizing for one streamed transfer.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct PipeCfg {
+    /// Concurrent SE operations (the transfer worker count).
+    pub workers: usize,
+    /// File bytes per pipeline block (`transfer_block_bytes`).
+    pub block_bytes: usize,
+}
+
+/// One chunk's upload destination for a pass.
+pub(crate) struct UploadTarget {
+    pub index: usize,
+    pub se: Arc<dyn StorageElement>,
+    pub pfn: String,
+}
+
+/// A committed chunk upload.
+#[derive(Clone, Debug)]
+pub(crate) struct UploadOutcome {
+    pub index: usize,
+    pub se_name: String,
+    pub pfn: String,
+    pub size: u64,
+    pub checksum_hex: String,
+}
+
+struct ConsumerCtx<'a> {
+    q: &'a BlockQueue<Vec<u8>>,
+    sem: &'a Semaphore,
+    gauge: &'a Gauge,
+}
+
+/// Drain one chunk's queue into its SE sink, hashing the wire bytes.
+/// Every error exit kills the queue — otherwise the encoder would block
+/// forever pushing blocks nobody will pop.
+fn consume_chunk(
+    ctx: &ConsumerCtx<'_>,
+    se: &Arc<dyn StorageElement>,
+    pfn: &str,
+    header: &[u8],
+) -> Result<(u64, String)> {
+    let res = consume_chunk_steps(ctx, se, pfn, header);
+    if res.is_err() {
+        for item in ctx.q.kill() {
+            ctx.gauge.sub(item.len() as u64);
+        }
+    }
+    res
+}
+
+fn consume_chunk_steps(
+    ctx: &ConsumerCtx<'_>,
+    se: &Arc<dyn StorageElement>,
+    pfn: &str,
+    header: &[u8],
+) -> Result<(u64, String)> {
+    // Availability is re-checked *here*, inside the transfer closure, and
+    // again per block: an SE taken down between job build and execution
+    // (or mid-upload) yields a clean per-chunk `Error::SeDown` instead of
+    // a backend-specific I/O error.
+    check_up(&**se)?;
+    let mut sink = se.put_writer(pfn)?;
+    let mut hasher = crate::util::sha256::Sha256::new();
+    let mut size = 0u64;
+    {
+        // Header write: deliberately NOT counted in `overlapped_writes` —
+        // headers go out before any block exists, so counting them would
+        // make the overlap metric (and the CI gates on it) vacuous.
+        let _permit = ctx.sem.acquire();
+        if let Err(e) = sink.write_block(header) {
+            sink.abort();
+            return Err(e);
+        }
+    }
+    hasher.update(header);
+    size += header.len() as u64;
+    while let Some(block) = ctx.q.pop() {
+        let blen = block.len() as u64;
+        let res = {
+            let _permit = ctx.sem.acquire();
+            ctx.gauge.note_write();
+            match check_up(&**se) {
+                Ok(()) => sink.write_block(&block),
+                Err(e) => Err(e),
+            }
+        };
+        ctx.gauge.sub(blen);
+        match res {
+            Ok(()) => {
+                hasher.update(&block);
+                size += blen;
+            }
+            Err(e) => {
+                // The wrapper kills the queue on the way out.
+                sink.abort();
+                return Err(e);
+            }
+        }
+    }
+    if ctx.q.was_killed() {
+        sink.abort();
+        return Err(Error::Transfer("upload aborted: encode stream failed".into()));
+    }
+    {
+        let _permit = ctx.sem.acquire();
+        sink.commit()?;
+    }
+    Ok((size, crate::util::hexfmt::encode(&hasher.finalize())))
+}
+
+fn dispatch_block(
+    block: EncodedBlock,
+    queues: &[BlockQueue<Vec<u8>>],
+    slot_of: &BTreeMap<usize, usize>,
+    alive: &mut [bool],
+    gauge: &Gauge,
+) {
+    for (idx, row) in block.rows {
+        let slot = slot_of[&idx];
+        if !alive[slot] {
+            continue;
+        }
+        let len = row.len() as u64;
+        gauge.add(len);
+        gauge.note_block(len);
+        if queues[slot].push(row, &gauge.stalls).is_err() {
+            gauge.sub(len);
+            alive[slot] = false;
+        }
+    }
+}
+
+/// The encoder loop body: read → encode → fan out to the chunk queues.
+fn feed_loop(
+    source: &mut dyn BlockSource,
+    mut encoder: StreamEncoder,
+    queues: &[BlockQueue<Vec<u8>>],
+    slot_of: &BTreeMap<usize, usize>,
+    gauge: &Gauge,
+) -> Result<()> {
+    let mut alive = vec![true; queues.len()];
+    let mut buf = vec![0u8; encoder.block_input_bytes()];
+    loop {
+        if alive.iter().all(|a| !*a) {
+            return Ok(()); // every consumer failed; stop encoding
+        }
+        let got = source.read_block(&mut buf)?;
+        for b in encoder.push(&buf[..got])? {
+            dispatch_block(b, queues, slot_of, &mut alive, gauge);
+        }
+        if got < buf.len() {
+            break;
+        }
+    }
+    if let Some(b) = encoder.finish()? {
+        dispatch_block(b, queues, slot_of, &mut alive, gauge);
+    }
+    Ok(())
+}
+
+/// The encoder thread: run the feed loop, then settle the queues —
+/// close them on success, kill them (consumers abort) on failure.
+fn encode_feed(
+    source: &mut dyn BlockSource,
+    encoder: StreamEncoder,
+    queues: &[BlockQueue<Vec<u8>>],
+    slot_of: &BTreeMap<usize, usize>,
+    gauge: &Gauge,
+) -> Result<()> {
+    let res = feed_loop(source, encoder, queues, slot_of, gauge);
+    gauge.encode_done.store(true, Ordering::SeqCst);
+    match res {
+        Ok(()) => {
+            for q in queues {
+                q.close();
+            }
+            Ok(())
+        }
+        Err(e) => {
+            for q in queues {
+                for item in q.kill() {
+                    gauge.sub(item.len() as u64);
+                }
+            }
+            Err(e)
+        }
+    }
+}
+
+/// One streamed upload pass over `targets`: encode blocks on a dedicated
+/// thread, drain the per-chunk queues through a [`WorkPool`], return
+/// per-chunk outcomes. An `Err` means the *source/encode* side failed
+/// (every sink was aborted); per-chunk transfer failures come back in
+/// the second vector for the caller's retry policy.
+pub(crate) fn upload_pass(
+    source: &mut dyn BlockSource,
+    codec: &Codec,
+    file_len: u64,
+    digest: [u8; 32],
+    targets: &[UploadTarget],
+    cfg: &PipeCfg,
+    gauge: &Gauge,
+) -> Result<(Vec<UploadOutcome>, Vec<(usize, Error)>)> {
+    source.reset()?;
+    let indices: Vec<usize> = targets.iter().map(|t| t.index).collect();
+    let encoder = codec.stream_encoder_for(file_len, digest, cfg.block_bytes, &indices)?;
+    let headers: Vec<[u8; HEADER_LEN]> =
+        indices.iter().map(|&i| encoder.header(i)).collect::<Result<Vec<_>>>()?;
+    let queues: Vec<BlockQueue<Vec<u8>>> =
+        targets.iter().map(|_| BlockQueue::new(QUEUE_DEPTH)).collect();
+    let slot_of: BTreeMap<usize, usize> =
+        indices.iter().enumerate().map(|(s, &i)| (i, s)).collect();
+    let sem = Semaphore::new(cfg.workers);
+
+    let jobs: Vec<(usize, Box<dyn FnOnce() -> Result<UploadOutcome> + Send + '_>)> = targets
+        .iter()
+        .enumerate()
+        .map(|(slot, t)| {
+            let q = &queues[slot];
+            let sem = &sem;
+            let se = Arc::clone(&t.se);
+            let pfn = t.pfn.clone();
+            let header = headers[slot];
+            let index = t.index;
+            let job: Box<dyn FnOnce() -> Result<UploadOutcome> + Send + '_> =
+                Box::new(move || {
+                    let ctx = ConsumerCtx { q, sem, gauge };
+                    consume_chunk(&ctx, &se, &pfn, &header).map(|(size, checksum_hex)| {
+                        UploadOutcome {
+                            index,
+                            se_name: se.name().to_string(),
+                            pfn: pfn.clone(),
+                            size,
+                            checksum_hex,
+                        }
+                    })
+                });
+            (slot, job)
+        })
+        .collect();
+
+    // Every chunk consumer must be runnable concurrently or the bounded
+    // queues would deadlock; the semaphore (not the pool width) enforces
+    // the configured transfer-worker cap.
+    let pool = WorkPool::new(PoolConfig::parallel(targets.len().max(1)));
+    let (enc_res, outcome) = std::thread::scope(|s| {
+        let queues_ref = &queues;
+        let slots_ref = &slot_of;
+        let handle = s.spawn(move || encode_feed(source, encoder, queues_ref, slots_ref, gauge));
+        let outcome = pool.run(jobs, usize::MAX);
+        let enc_res = handle
+            .join()
+            .unwrap_or_else(|_| Err(Error::Transfer("encoder thread panicked".into())));
+        (enc_res, outcome)
+    });
+    enc_res?;
+    let successes = outcome.successes.into_iter().map(|(_, o)| o).collect();
+    let failures = outcome
+        .failures
+        .into_iter()
+        .map(|(slot, e)| (targets[slot].index, e))
+        .collect();
+    Ok((successes, failures))
+}
+
+// ---------------------------------------------------------------------
+// Download.
+// ---------------------------------------------------------------------
+
+/// One fetchable chunk: its code-word index and catalogue replicas.
+#[derive(Clone)]
+pub(crate) struct FetchChunk {
+    pub index: usize,
+    pub replicas: Vec<Replica>,
+}
+
+#[derive(Clone, Copy)]
+struct DownGeom {
+    row_block: u64,
+    payload_len: u64,
+    n_blocks: u64,
+}
+
+/// Validate a chunk's own header against the reference one.
+fn header_agrees(h: &ChunkHeader, expect: &ChunkHeader, index: usize) -> bool {
+    h.index as usize == index
+        && h.k == expect.k
+        && h.m == expect.m
+        && h.stripe_b == expect.stripe_b
+        && h.file_len == expect.file_len
+        && h.payload_len == expect.payload_len
+        && h.file_sha256 == expect.file_sha256
+}
+
+/// Sequentially fetch one chunk's payload blocks into its queue.
+#[allow(clippy::too_many_arguments)]
+fn chunk_reader(
+    q: &BlockQueue<Result<Vec<u8>>>,
+    sem: &Semaphore,
+    gauge: &Gauge,
+    registry: &SeRegistry,
+    chunk: &FetchChunk,
+    expect: &ChunkHeader,
+    start_block: u64,
+    geom: DownGeom,
+    retry: RetryPolicy,
+) {
+    let hdr = {
+        let _permit = sem.acquire();
+        read_replicas(registry, &chunk.replicas, 0, HEADER_LEN, retry)
+            .and_then(|b| ChunkHeader::decode(&b))
+    };
+    match hdr {
+        Ok(h) if header_agrees(&h, expect, chunk.index) => {}
+        Ok(_) => {
+            let _ = q.push(
+                Err(Error::Ec(format!(
+                    "chunk {} header disagrees with the file's geometry/digest",
+                    chunk.index
+                ))),
+                &gauge.stalls,
+            );
+            return;
+        }
+        Err(e) => {
+            let _ = q.push(Err(e), &gauge.stalls);
+            return;
+        }
+    }
+    for b in start_block..geom.n_blocks {
+        let off = b * geom.row_block;
+        let want = (geom.payload_len - off).min(geom.row_block) as usize;
+        let res = {
+            let _permit = sem.acquire();
+            read_replicas(registry, &chunk.replicas, HEADER_LEN as u64 + off, want, retry)
+        };
+        match res {
+            Ok(bytes) if bytes.len() == want => {
+                gauge.add(want as u64);
+                gauge.note_block(want as u64);
+                if q.push(Ok(bytes), &gauge.stalls).is_err() {
+                    gauge.sub(want as u64);
+                    return;
+                }
+            }
+            Ok(short) => {
+                let _ = q.push(
+                    Err(Error::Transfer(format!(
+                        "chunk {}: short block read ({} of {want} bytes)",
+                        chunk.index,
+                        short.len()
+                    ))),
+                    &gauge.stalls,
+                );
+                return;
+            }
+            Err(e) => {
+                let _ = q.push(Err(e), &gauge.stalls);
+                return;
+            }
+        }
+    }
+    q.close();
+}
+
+/// Find one readable, geometry-consistent header among the candidates.
+fn probe_header(
+    registry: &SeRegistry,
+    codec: &Codec,
+    candidates: &[FetchChunk],
+    retry: RetryPolicy,
+) -> Result<ChunkHeader> {
+    let mut last = Error::NotEnoughChunks { have: 0, need: 1 };
+    for c in candidates {
+        match read_replicas(registry, &c.replicas, 0, HEADER_LEN, retry)
+            .and_then(|b| ChunkHeader::decode(&b))
+        {
+            Ok(h) => {
+                // A readable-but-disagreeing header is a *single-chunk*
+                // corruption: remember it and keep probing the other
+                // survivors, exactly like the per-reader check does.
+                let geometry_ok = h
+                    .params()
+                    .map(|p| p == codec.params() && h.stripe_b as usize == codec.stripe_b())
+                    .unwrap_or(false);
+                if !geometry_ok {
+                    last = Error::Ec(format!(
+                        "chunk {} geometry {}+{}/{} disagrees with catalogue {}/{}",
+                        c.index,
+                        h.k,
+                        h.m,
+                        h.stripe_b,
+                        codec.params(),
+                        codec.stripe_b()
+                    ));
+                    continue;
+                }
+                if h.index as usize != c.index {
+                    last = Error::Ec(format!(
+                        "chunk header index {} disagrees with catalog index {}",
+                        h.index, c.index
+                    ));
+                    continue;
+                }
+                return Ok(h);
+            }
+            Err(e) => last = e,
+        }
+    }
+    Err(last)
+}
+
+/// Streamed download: parallel same-offset block fetches across K chunks,
+/// block-by-block decode straight into `out`, mid-stream failover onto
+/// spare chunks. Returns the decoded byte count.
+pub(crate) fn download_pipeline(
+    registry: &Arc<SeRegistry>,
+    codec: &Codec,
+    candidates: &[FetchChunk],
+    out: &mut dyn BlockSink,
+    cfg: &PipeCfg,
+    retry: RetryPolicy,
+    gauge: &Gauge,
+) -> Result<u64> {
+    let k = codec.params().k();
+    if candidates.len() < k {
+        return Err(Error::NotEnoughChunks { have: candidates.len(), need: k });
+    }
+    let hdr = probe_header(registry, codec, candidates, retry)?;
+    let sb = codec.stripe_b();
+    let segs = segment_count(hdr.file_len, k, sb);
+    let payload_len = chunk_payload_len(hdr.file_len, k, sb);
+    if hdr.payload_len != payload_len {
+        return Err(Error::Ec(format!(
+            "chunk header claims payload {} but geometry implies {payload_len}",
+            hdr.payload_len
+        )));
+    }
+    let block_segs = (cfg.block_bytes / (k * sb)).max(1) as u64;
+    let geom = DownGeom {
+        row_block: block_segs * sb as u64,
+        payload_len,
+        n_blocks: segs.div_ceil(block_segs),
+    };
+    let sem = Semaphore::new(cfg.workers);
+    let queues: Vec<BlockQueue<Result<Vec<u8>>>> =
+        candidates.iter().map(|_| BlockQueue::new(QUEUE_DEPTH)).collect();
+
+    std::thread::scope(|s| -> Result<u64> {
+        // Dropped on every exit path (before the scope joins): unblocks
+        // any reader still pushing prefetched blocks.
+        let _kill = KillGuard(&queues);
+        let queues_ref = &queues;
+        let sem_ref = &sem;
+        let hdr_ref = &hdr;
+        let spawn_reader = |slot: usize, start_block: u64| {
+            let q = &queues_ref[slot];
+            let chunk = &candidates[slot];
+            let registry = Arc::clone(registry);
+            s.spawn(move || {
+                chunk_reader(
+                    q, sem_ref, gauge, &registry, chunk, hdr_ref, start_block, geom, retry,
+                )
+            });
+        };
+        let mut decoder = codec.stream_decoder(hdr.file_len, hdr.file_sha256);
+        let mut active: Vec<usize> = (0..k).collect();
+        for slot in 0..k {
+            spawn_reader(slot, 0);
+        }
+        let mut next_candidate = k;
+        let mut written = 0u64;
+        for b in 0..geom.n_blocks {
+            let mut rows: Vec<(usize, Vec<u8>)> = Vec::with_capacity(k);
+            let mut pos = 0usize;
+            while pos < active.len() {
+                let slot = active[pos];
+                match queues[slot].pop() {
+                    Some(Ok(bytes)) => {
+                        rows.push((candidates[slot].index, bytes));
+                        pos += 1;
+                    }
+                    _ => {
+                        // A chunk died mid-stream: swap in the next
+                        // spare from block `b` onward; everything
+                        // decoded so far is kept.
+                        if next_candidate >= candidates.len() {
+                            return Err(Error::NotEnoughChunks { have: k - 1, need: k });
+                        }
+                        let ns = next_candidate;
+                        next_candidate += 1;
+                        spawn_reader(ns, b);
+                        active[pos] = ns;
+                    }
+                }
+            }
+            let refs: Vec<(usize, &[u8])> =
+                rows.iter().map(|(i, v)| (*i, v.as_slice())).collect();
+            let bytes = decoder.push_block(&refs)?;
+            out.write_block(&bytes)?;
+            for (_, v) in &rows {
+                gauge.sub(v.len() as u64);
+            }
+            written += bytes.len() as u64;
+        }
+        decoder.finish()?;
+        Ok(written)
+    })
+}
+
+// ---------------------------------------------------------------------
+// Rebuild (streaming repair).
+// ---------------------------------------------------------------------
+
+/// A lost chunk being re-derived into a destination sink.
+pub(crate) struct RebuildTarget<'a> {
+    pub index: usize,
+    pub sink: Box<dyn ChunkSink + 'a>,
+}
+
+/// Stream K survivors once and re-derive every chunk in `targets` block
+/// by block (`missing rows = R · survivor rows`), committing the sinks
+/// only after the reassembled file's digest verifies. Rebuilt wire
+/// chunks are bit-identical to the originals.
+pub(crate) fn rebuild_pipeline(
+    registry: &Arc<SeRegistry>,
+    codec: &Codec,
+    candidates: &[FetchChunk],
+    mut targets: Vec<RebuildTarget<'_>>,
+    cfg: &PipeCfg,
+    retry: RetryPolicy,
+    gauge: &Gauge,
+) -> Result<()> {
+    let params = codec.params();
+    let k = params.k();
+    if candidates.len() < k {
+        return Err(Error::NotEnoughChunks { have: candidates.len(), need: k });
+    }
+    let hdr = probe_header(registry, codec, candidates, retry)?;
+    let sb = codec.stripe_b();
+    let segs = segment_count(hdr.file_len, k, sb);
+    let payload_len = chunk_payload_len(hdr.file_len, k, sb);
+    if hdr.payload_len != payload_len {
+        return Err(Error::Ec(format!(
+            "chunk header claims payload {} but geometry implies {payload_len}",
+            hdr.payload_len
+        )));
+    }
+    let block_segs = (cfg.block_bytes / (k * sb)).max(1) as u64;
+    let geom = DownGeom {
+        row_block: block_segs * sb as u64,
+        payload_len,
+        n_blocks: segs.div_ceil(block_segs),
+    };
+    let missing_idx: Vec<usize> = targets.iter().map(|t| t.index).collect();
+    let sem = Semaphore::new(cfg.workers);
+    let queues: Vec<BlockQueue<Result<Vec<u8>>>> =
+        candidates.iter().map(|_| BlockQueue::new(QUEUE_DEPTH)).collect();
+
+    let targets_ref = &mut targets;
+    let run = std::thread::scope(|s| -> Result<()> {
+        // Dropped on every exit path (before the scope joins): unblocks
+        // any reader still pushing prefetched blocks.
+        let _kill = KillGuard(&queues);
+        let queues_ref = &queues;
+        let sem_ref = &sem;
+        let hdr_ref = &hdr;
+        let spawn_reader = |slot: usize, start_block: u64| {
+            let q = &queues_ref[slot];
+            let chunk = &candidates[slot];
+            let registry = Arc::clone(registry);
+            s.spawn(move || {
+                chunk_reader(
+                    q, sem_ref, gauge, &registry, chunk, hdr_ref, start_block, geom, retry,
+                )
+            });
+        };
+        // Headers first: rebuilt chunks carry the same sealed header
+        // as the originals.
+        for t in targets_ref.iter_mut() {
+            let h = ChunkHeader::new(
+                params,
+                t.index,
+                sb,
+                hdr.file_len,
+                payload_len,
+                hdr.file_sha256,
+            )
+            .encode();
+            t.sink.write_block(&h)?;
+        }
+        let mut decoder = codec.stream_decoder(hdr.file_len, hdr.file_sha256);
+        let mut active: Vec<usize> = (0..k).collect();
+        for slot in 0..k {
+            spawn_reader(slot, 0);
+        }
+        let mut next_candidate = k;
+        let mut rb: Option<(Vec<usize>, crate::gf::GfMatrix)> = None;
+        for b in 0..geom.n_blocks {
+            let mut rows: Vec<(usize, Vec<u8>)> = Vec::with_capacity(k);
+            let mut pos = 0usize;
+            while pos < active.len() {
+                let slot = active[pos];
+                match queues[slot].pop() {
+                    Some(Ok(bytes)) => {
+                        rows.push((candidates[slot].index, bytes));
+                        pos += 1;
+                    }
+                    _ => {
+                        if next_candidate >= candidates.len() {
+                            return Err(Error::NotEnoughChunks { have: k - 1, need: k });
+                        }
+                        let ns = next_candidate;
+                        next_candidate += 1;
+                        spawn_reader(ns, b);
+                        active[pos] = ns;
+                    }
+                }
+            }
+            let present: Vec<usize> = rows.iter().map(|(i, _)| *i).collect();
+            let stale = rb.as_ref().map(|(p, _)| p != &present).unwrap_or(true);
+            if stale {
+                rb = Some((
+                    present.clone(),
+                    rebuild_matrix(params, &present, &missing_idx)?,
+                ));
+            }
+            let (_, rbm) = rb.as_ref().expect("rebuild matrix ensured");
+            let row_len = rows[0].1.len();
+            let segs_in_block = row_len / sb;
+            let mut rebuilt: Vec<Vec<u8>> = vec![vec![0u8; row_len]; targets_ref.len()];
+            for seg in 0..segs_in_block {
+                let data_refs: Vec<&[u8]> =
+                    rows.iter().map(|(_, p)| &p[seg * sb..(seg + 1) * sb]).collect();
+                let mut out_refs: Vec<&mut [u8]> = rebuilt
+                    .iter_mut()
+                    .map(|v| &mut v[seg * sb..(seg + 1) * sb])
+                    .collect();
+                codec.backend().matmul_into(rbm, &data_refs, &mut out_refs)?;
+            }
+            for (t, block_bytes) in targets_ref.iter_mut().zip(&rebuilt) {
+                t.sink.write_block(block_bytes)?;
+            }
+            // Reassemble (and hash) the file bytes so the rebuilt
+            // chunks only commit once the digest verifies.
+            let refs: Vec<(usize, &[u8])> =
+                rows.iter().map(|(i, v)| (*i, v.as_slice())).collect();
+            let _ = decoder.push_block(&refs)?;
+            for (_, v) in &rows {
+                gauge.sub(v.len() as u64);
+            }
+        }
+        decoder.finish()
+    });
+
+    match run {
+        Ok(()) => {
+            let mut err: Option<Error> = None;
+            for t in targets {
+                if err.is_none() {
+                    if let Err(e) = t.sink.commit() {
+                        err = Some(e);
+                    }
+                } else {
+                    t.sink.abort();
+                }
+            }
+            match err {
+                None => Ok(()),
+                Some(e) => Err(e),
+            }
+        }
+        Err(e) => {
+            for t in targets {
+                t.sink.abort();
+            }
+            Err(e)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn queue_backpressure_and_close() {
+        let q: BlockQueue<u32> = BlockQueue::new(2);
+        let stalls = AtomicU64::new(0);
+        q.push(1, &stalls).unwrap();
+        q.push(2, &stalls).unwrap();
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                // Third push must block until the consumer pops.
+                q.push(3, &stalls).unwrap();
+                q.close();
+            });
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            assert_eq!(q.pop(), Some(1));
+            assert_eq!(q.pop(), Some(2));
+            assert_eq!(q.pop(), Some(3));
+            assert_eq!(q.pop(), None);
+        });
+        assert_eq!(stalls.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn queue_kill_unblocks_producer_and_returns_items() {
+        let q: BlockQueue<u32> = BlockQueue::new(1);
+        let stalls = AtomicU64::new(0);
+        q.push(7, &stalls).unwrap();
+        std::thread::scope(|s| {
+            let h = s.spawn(|| q.push(8, &stalls));
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            let drained = q.kill();
+            assert_eq!(drained, vec![7]);
+            assert_eq!(h.join().unwrap(), Err(8));
+        });
+        assert!(q.was_killed());
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn semaphore_caps_concurrency() {
+        let sem = Semaphore::new(2);
+        let peak = AtomicU64::new(0);
+        let cur = AtomicU64::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..6 {
+                s.spawn(|| {
+                    let _p = sem.acquire();
+                    let now = cur.fetch_add(1, Ordering::SeqCst) + 1;
+                    peak.fetch_max(now, Ordering::SeqCst);
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                    cur.fetch_sub(1, Ordering::SeqCst);
+                });
+            }
+        });
+        assert!(peak.load(Ordering::SeqCst) <= 2);
+    }
+
+    #[test]
+    fn slice_source_reads_and_resets() {
+        let data: Vec<u8> = (0..100u8).collect();
+        let mut src = SliceSource::new(&data);
+        assert_eq!(src.total_len(), 100);
+        let mut buf = vec![0u8; 64];
+        assert_eq!(src.read_block(&mut buf).unwrap(), 64);
+        assert_eq!(src.read_block(&mut buf).unwrap(), 36);
+        assert_eq!(src.read_block(&mut buf).unwrap(), 0);
+        src.reset().unwrap();
+        assert_eq!(src.read_block(&mut buf).unwrap(), 64);
+        assert_eq!(&buf[..4], &[0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn hash_source_matches_oneshot_and_rewinds() {
+        let data: Vec<u8> = (0..5000u32).map(|i| (i % 251) as u8).collect();
+        let mut src = SliceSource::new(&data);
+        let h = hash_source(&mut src, 97).unwrap();
+        assert_eq!(h, crate::util::sha256::digest(&data));
+        let mut buf = [0u8; 4];
+        assert_eq!(src.read_block(&mut buf).unwrap(), 4);
+        assert_eq!(buf, [0, 1, 2, 3]);
+    }
+}

@@ -14,6 +14,11 @@
 //! concatenation, mirroring the paper's observation that "file
 //! reconstruction requires little overheads if the original data blocks
 //! are the first to be retrieved".
+//!
+//! Both directions also exist in block-streaming form —
+//! [`StreamEncoder`] / [`StreamDecoder`] — producing byte-identical wire
+//! chunks while holding only O(block) bytes: the data plane's pipelined
+//! upload/download path is built on them ([`crate::dfm::stream`]).
 
 use std::sync::Arc;
 
@@ -66,6 +71,11 @@ impl Codec {
     /// Which compute backend is in use.
     pub fn backend_name(&self) -> &'static str {
         self.backend.name()
+    }
+
+    /// The compute backend itself (the streaming pipelines share it).
+    pub fn backend(&self) -> &Arc<dyn EcBackend> {
+        &self.backend
     }
 
     /// Encode `file` into K+M sealed wire chunks (header + payload).
@@ -241,6 +251,451 @@ impl Codec {
             })
             .collect()
     }
+}
+
+impl Codec {
+    /// A [`StreamEncoder`] over this codec's geometry, emitting every
+    /// chunk of the code word.
+    ///
+    /// `file_len` and the whole-file `digest` must be known up front (a
+    /// path-based caller computes them with one cheap hashing pre-pass):
+    /// they are stamped into every chunk header, which is the *first*
+    /// thing a streaming upload writes.
+    pub fn stream_encoder(
+        &self,
+        file_len: u64,
+        digest: [u8; 32],
+        block_bytes: usize,
+    ) -> Result<StreamEncoder> {
+        let all: Vec<usize> = (0..self.params.n()).collect();
+        self.stream_encoder_for(file_len, digest, block_bytes, &all)
+    }
+
+    /// A [`StreamEncoder`] that emits only the chunks in `indices`
+    /// (upload retry passes and the streaming repair path re-derive a
+    /// failed subset without re-materializing the others).
+    pub fn stream_encoder_for(
+        &self,
+        file_len: u64,
+        digest: [u8; 32],
+        block_bytes: usize,
+        indices: &[usize],
+    ) -> Result<StreamEncoder> {
+        let (k, n) = (self.params.k(), self.params.n());
+        let mut seen = vec![false; n];
+        for &i in indices {
+            if i >= n {
+                return Err(Error::Ec(format!("chunk index {i} out of range for n={n}")));
+            }
+            if seen[i] {
+                return Err(Error::Ec(format!("duplicate chunk index {i}")));
+            }
+            seen[i] = true;
+        }
+        let mut data_idx: Vec<usize> = indices.iter().copied().filter(|&i| i < k).collect();
+        let mut coding_idx: Vec<usize> = indices.iter().copied().filter(|&i| i >= k).collect();
+        data_idx.sort_unstable();
+        coding_idx.sort_unstable();
+        let coding_sel: Vec<usize> = coding_idx.iter().map(|&i| i - k).collect();
+        let coding_rows = self.coding.select_rows(&coding_sel)?;
+        let seg_bytes = k * self.stripe_b;
+        let block_segs = (block_bytes / seg_bytes).max(1);
+        Ok(StreamEncoder {
+            params: self.params,
+            stripe_b: self.stripe_b,
+            backend: Arc::clone(&self.backend),
+            coding_rows,
+            coding_idx,
+            data_idx,
+            file_len,
+            digest,
+            segs: segment_count(file_len, k, self.stripe_b),
+            payload_len: chunk_payload_len(file_len, k, self.stripe_b),
+            block_segs,
+            pending: Vec::new(),
+            next_seg: 0,
+            fed: 0,
+            hasher: crate::util::sha256::Sha256::new(),
+        })
+    }
+
+    /// A [`StreamDecoder`] for reassembling a file block-by-block from
+    /// chunk payload rows fetched at matching offsets.
+    pub fn stream_decoder(&self, file_len: u64, digest: [u8; 32]) -> StreamDecoder {
+        StreamDecoder {
+            params: self.params,
+            stripe_b: self.stripe_b,
+            file_len,
+            digest,
+            segs: segment_count(file_len, self.params.k(), self.stripe_b),
+            next_seg: 0,
+            hasher: crate::util::sha256::Sha256::new(),
+            segdec: SegmentDecoder::new(self.params, Arc::clone(&self.backend)),
+        }
+    }
+}
+
+/// One streamed run of consecutive segments, encoded into per-chunk
+/// payload rows (`seg_count × stripe_b` bytes per emitted chunk).
+#[derive(Clone, Debug)]
+pub struct EncodedBlock {
+    /// Index of the first segment this block covers.
+    pub first_seg: u64,
+    /// Number of consecutive segments in the block.
+    pub seg_count: usize,
+    /// `(chunk index, payload bytes)` pairs in ascending chunk order.
+    pub rows: Vec<(usize, Vec<u8>)>,
+}
+
+/// Block-at-a-time encoder: feeds of arbitrary size accumulate into
+/// segment-aligned blocks, each encoded with the same striping math (and
+/// therefore the same output bytes) as the whole-file [`Codec::encode`].
+///
+/// Memory stays O(block): one partial input block plus the emitted rows,
+/// never the file and never whole chunks.
+pub struct StreamEncoder {
+    params: EcParams,
+    stripe_b: usize,
+    backend: Arc<dyn EcBackend>,
+    /// Coding rows to compute (subset of the Cauchy block).
+    coding_rows: GfMatrix,
+    /// Chunk indices of `coding_rows`, ascending.
+    coding_idx: Vec<usize>,
+    /// Data chunk indices to emit, ascending.
+    data_idx: Vec<usize>,
+    file_len: u64,
+    digest: [u8; 32],
+    segs: u64,
+    payload_len: u64,
+    block_segs: usize,
+    pending: Vec<u8>,
+    next_seg: u64,
+    fed: u64,
+    hasher: crate::util::sha256::Sha256,
+}
+
+impl StreamEncoder {
+    /// Total segments the stream will produce.
+    pub fn segs(&self) -> u64 {
+        self.segs
+    }
+
+    /// Per-chunk payload length (identical for every chunk).
+    pub fn payload_len(&self) -> u64 {
+        self.payload_len
+    }
+
+    /// Segments per emitted block.
+    pub fn block_segs(&self) -> usize {
+        self.block_segs
+    }
+
+    /// Input bytes consumed per full block (`block_segs · K · stripe_b`);
+    /// the natural read size for a streaming source.
+    pub fn block_input_bytes(&self) -> usize {
+        self.block_segs * self.params.k() * self.stripe_b
+    }
+
+    /// The sealed 64-byte wire header for chunk `index` — available
+    /// before any payload byte, so streaming uploads write it first.
+    pub fn header(&self, index: usize) -> Result<[u8; crate::ec::chunk::HEADER_LEN]> {
+        if index >= self.params.n() {
+            return Err(Error::Ec(format!("chunk index {index} out of range")));
+        }
+        Ok(ChunkHeader::new(
+            self.params,
+            index,
+            self.stripe_b,
+            self.file_len,
+            self.payload_len,
+            self.digest,
+        )
+        .encode())
+    }
+
+    /// Absorb the next run of file bytes, returning any blocks that
+    /// became complete. Feeds may be any size, including empty.
+    pub fn push(&mut self, data: &[u8]) -> Result<Vec<EncodedBlock>> {
+        self.fed = self.fed.wrapping_add(data.len() as u64);
+        if self.fed > self.file_len {
+            return Err(Error::Ec(format!(
+                "stream encoder fed {} bytes, {} declared",
+                self.fed, self.file_len
+            )));
+        }
+        self.hasher.update(data);
+        let full = self.block_input_bytes();
+        // Hot path: the pipeline feeds exactly one aligned block per
+        // push — encode straight from the caller's buffer, skipping the
+        // two `pending` copies.
+        if self.pending.is_empty() && data.len() == full {
+            return Ok(vec![self.encode_block(data, self.block_segs)?]);
+        }
+        self.pending.extend_from_slice(data);
+        let mut out = Vec::new();
+        while self.pending.len() >= full {
+            let buf: Vec<u8> = self.pending.drain(..full).collect();
+            out.push(self.encode_block(&buf, self.block_segs)?);
+        }
+        Ok(out)
+    }
+
+    /// Flush the tail (zero-padded to the segment boundary, exactly like
+    /// the buffered codec) and verify the declared length and digest.
+    pub fn finish(mut self) -> Result<Option<EncodedBlock>> {
+        if self.fed != self.file_len {
+            return Err(Error::Ec(format!(
+                "stream encoder fed {} of {} declared bytes",
+                self.fed, self.file_len
+            )));
+        }
+        if self.hasher.clone().finalize() != self.digest {
+            return Err(Error::Integrity {
+                path: "<stream-encode>".into(),
+                detail: "source bytes disagree with the declared SHA-256".into(),
+            });
+        }
+        let rem = (self.segs - self.next_seg) as usize;
+        if rem == 0 {
+            return Ok(None);
+        }
+        let buf = std::mem::take(&mut self.pending);
+        Ok(Some(self.encode_block(&buf, rem)?))
+    }
+
+    fn encode_block(&mut self, buf: &[u8], seg_count: usize) -> Result<EncodedBlock> {
+        let (k, sb) = (self.params.k(), self.stripe_b);
+        let need = seg_count * k * sb;
+        let owned: Vec<u8>;
+        let buf: &[u8] = if buf.len() == need {
+            buf
+        } else {
+            let mut p = buf.to_vec();
+            p.resize(need, 0);
+            owned = p;
+            &owned
+        };
+        let mut rows: Vec<(usize, Vec<u8>)> =
+            Vec::with_capacity(self.data_idx.len() + self.coding_idx.len());
+        // Data rows: stripe copies straight out of the block buffer.
+        for &r in &self.data_idx {
+            let mut row = vec![0u8; seg_count * sb];
+            for s in 0..seg_count {
+                let src = &buf[(s * k + r) * sb..(s * k + r + 1) * sb];
+                row[s * sb..(s + 1) * sb].copy_from_slice(src);
+            }
+            rows.push((r, row));
+        }
+        // Coding rows: in-place stripe matmul per segment of the block.
+        if !self.coding_idx.is_empty() {
+            let mut coding: Vec<Vec<u8>> =
+                vec![vec![0u8; seg_count * sb]; self.coding_idx.len()];
+            for s in 0..seg_count {
+                let data_refs: Vec<&[u8]> =
+                    (0..k).map(|r| &buf[(s * k + r) * sb..(s * k + r + 1) * sb]).collect();
+                let mut out_refs: Vec<&mut [u8]> =
+                    coding.iter_mut().map(|v| &mut v[s * sb..(s + 1) * sb]).collect();
+                self.backend.matmul_into(&self.coding_rows, &data_refs, &mut out_refs)?;
+            }
+            for (&j, row) in self.coding_idx.iter().zip(coding) {
+                rows.push((j, row));
+            }
+        }
+        rows.sort_by_key(|(i, _)| *i);
+        let first_seg = self.next_seg;
+        self.next_seg += seg_count as u64;
+        Ok(EncodedBlock { first_seg, seg_count, rows })
+    }
+}
+
+/// Segment-level decoder with a cached survivor matrix: invert once per
+/// survivor set, apply per segment. Shared by the streaming decoder, the
+/// repair rebuild path and the federated random-access reader.
+pub struct SegmentDecoder {
+    params: EcParams,
+    backend: Arc<dyn EcBackend>,
+    cached: Option<(Vec<usize>, GfMatrix, bool)>,
+}
+
+impl SegmentDecoder {
+    /// A decoder for one coding geometry.
+    pub fn new(params: EcParams, backend: Arc<dyn EcBackend>) -> Self {
+        SegmentDecoder { params, backend, cached: None }
+    }
+
+    /// Ensure the cached matrix matches `present`; returns whether the
+    /// survivor set is the identity (all data chunks, in order).
+    fn ensure(&mut self, present: &[usize]) -> Result<bool> {
+        let stale = match &self.cached {
+            Some((p, _, _)) => p.as_slice() != present,
+            None => true,
+        };
+        if stale {
+            let k = self.params.k();
+            let identity =
+                present.len() == k && present.iter().enumerate().all(|(r, &i)| r == i);
+            let mat = decode_matrix(self.params, present)?;
+            self.cached = Some((present.to_vec(), mat, identity));
+        }
+        Ok(self.cached.as_ref().map(|(_, _, id)| *id).unwrap_or(false))
+    }
+
+    /// Decode one segment's K data rows from K survivor rows (stacked in
+    /// `present` order), allocating the output rows.
+    pub fn decode_rows(&mut self, present: &[usize], rows: &[&[u8]]) -> Result<Vec<Vec<u8>>> {
+        let identity = self.ensure(present)?;
+        if identity {
+            return Ok(rows.iter().map(|r| r.to_vec()).collect());
+        }
+        let (_, mat, _) = self.cached.as_ref().expect("ensured");
+        self.backend.matmul(mat, rows)
+    }
+
+    /// Decode one segment straight into caller-provided row buffers.
+    pub fn decode_into(
+        &mut self,
+        present: &[usize],
+        rows: &[&[u8]],
+        out: &mut [&mut [u8]],
+    ) -> Result<()> {
+        let identity = self.ensure(present)?;
+        if identity {
+            if out.len() != rows.len() {
+                return Err(Error::Ec("decode_into: row count mismatch".into()));
+            }
+            for (dst, src) in out.iter_mut().zip(rows) {
+                dst.copy_from_slice(src);
+            }
+            return Ok(());
+        }
+        let (_, mat, _) = self.cached.as_ref().expect("ensured");
+        self.backend.matmul_into(mat, rows, out)
+    }
+}
+
+/// Block-at-a-time decoder: feed matching payload runs from any K chunks
+/// and get the file bytes back in order, with the whole-file SHA-256
+/// accumulated incrementally and checked at [`StreamDecoder::finish`].
+///
+/// The survivor set may change between blocks (mid-stream SE failover):
+/// the decode matrix is re-derived only when it does.
+pub struct StreamDecoder {
+    params: EcParams,
+    stripe_b: usize,
+    file_len: u64,
+    digest: [u8; 32],
+    segs: u64,
+    next_seg: u64,
+    hasher: crate::util::sha256::Sha256,
+    segdec: SegmentDecoder,
+}
+
+impl StreamDecoder {
+    /// Total segments the stream covers.
+    pub fn segs(&self) -> u64 {
+        self.segs
+    }
+
+    /// Segments decoded so far.
+    pub fn segs_done(&self) -> u64 {
+        self.next_seg
+    }
+
+    /// Decode the next run of segments. `rows` holds exactly K
+    /// `(chunk index, payload bytes)` pairs covering the same offsets;
+    /// row lengths must be equal and a multiple of the stripe width.
+    /// Returns the decoded file bytes (clipped at EOF).
+    pub fn push_block(&mut self, rows: &[(usize, &[u8])]) -> Result<Vec<u8>> {
+        let (k, sb) = (self.params.k(), self.stripe_b);
+        if rows.len() != k {
+            return Err(Error::NotEnoughChunks { have: rows.len(), need: k });
+        }
+        let row_len = rows[0].1.len();
+        if row_len == 0 || row_len % sb != 0 || rows.iter().any(|(_, r)| r.len() != row_len) {
+            return Err(Error::Ec("stream decoder: ragged or misaligned block rows".into()));
+        }
+        let bc = (row_len / sb) as u64;
+        if self.next_seg + bc > self.segs {
+            return Err(Error::Ec(format!(
+                "stream decoder overrun: {} segments past {}",
+                self.next_seg + bc,
+                self.segs
+            )));
+        }
+        let present: Vec<usize> = rows.iter().map(|(i, _)| *i).collect();
+        let seg_bytes = (k * sb) as u64;
+        let out_start = self.next_seg * seg_bytes;
+        let out_end = ((self.next_seg + bc) * seg_bytes).min(self.file_len);
+        let mut out = vec![0u8; out_end.saturating_sub(out_start) as usize];
+        let mut scratch: Vec<Vec<u8>> = Vec::new();
+        for s in 0..bc as usize {
+            let seg_rows: Vec<&[u8]> =
+                rows.iter().map(|(_, p)| &p[s * sb..(s + 1) * sb]).collect();
+            let ostart = s * k * sb;
+            if ostart >= out.len() {
+                break; // fully past EOF (zero-padding only)
+            }
+            if ostart + k * sb <= out.len() {
+                // Interior segment: decode straight into the output run.
+                let dst = &mut out[ostart..ostart + k * sb];
+                let mut out_refs: Vec<&mut [u8]> = dst.chunks_exact_mut(sb).collect();
+                self.segdec.decode_into(&present, &seg_rows, &mut out_refs)?;
+            } else {
+                // Tail segment: decode to scratch, copy clipped.
+                if scratch.is_empty() {
+                    scratch = self.segdec.decode_rows(&present, &seg_rows)?;
+                } else {
+                    let mut refs: Vec<&mut [u8]> =
+                        scratch.iter_mut().map(|v| v.as_mut_slice()).collect();
+                    self.segdec.decode_into(&present, &seg_rows, &mut refs)?;
+                }
+                for (r, row) in scratch.iter().enumerate() {
+                    let start = ostart + r * sb;
+                    if start >= out.len() {
+                        break;
+                    }
+                    let n = (out.len() - start).min(sb);
+                    out[start..start + n].copy_from_slice(&row[..n]);
+                }
+            }
+        }
+        self.hasher.update(&out);
+        self.next_seg += bc;
+        Ok(out)
+    }
+
+    /// Verify every segment arrived and the reassembled bytes match the
+    /// whole-file digest (the paper's further-work integrity check).
+    pub fn finish(self) -> Result<()> {
+        if self.next_seg != self.segs {
+            return Err(Error::Ec(format!(
+                "stream decoder stopped at segment {} of {}",
+                self.next_seg, self.segs
+            )));
+        }
+        if self.hasher.finalize() != self.digest {
+            return Err(Error::Integrity {
+                path: "<stream-decode>".into(),
+                detail: "SHA-256 mismatch after reconstruction".into(),
+            });
+        }
+        Ok(())
+    }
+}
+
+/// The matrix `R` with `missing rows = R · survivor rows` per segment:
+/// `R = G[missing] · decode_matrix(present)`. The streaming repair path
+/// re-derives lost chunks block-by-block with one matmul per segment,
+/// never materializing the file or whole chunks.
+pub fn rebuild_matrix(params: EcParams, present: &[usize], missing: &[usize]) -> Result<GfMatrix> {
+    for &i in missing {
+        if i >= params.n() {
+            return Err(Error::Ec(format!("missing index {i} out of range")));
+        }
+    }
+    let dec = decode_matrix(params, present)?;
+    let gen = GfMatrix::systematic_generator(params.k(), params.m())?;
+    gen.select_rows(missing)?.matmul(&dec)
 }
 
 /// Decode-matrix construction, free-standing for reuse (mirrors python
@@ -447,6 +902,239 @@ mod tests {
         let subset: Vec<(usize, Vec<u8>)> =
             (0..10).map(|i| (i, chunks[i].clone())).collect();
         assert_eq!(c.decode(&subset).unwrap(), file);
+    }
+
+    /// Streamed encode of `file` in `feed`-sized pushes, reassembled into
+    /// whole wire chunks (header + concatenated block rows).
+    fn stream_encode_wires(
+        c: &Codec,
+        file: &[u8],
+        block_bytes: usize,
+        feed: usize,
+    ) -> Vec<Vec<u8>> {
+        let digest = sha256(file);
+        let mut enc = c
+            .stream_encoder(file.len() as u64, digest, block_bytes)
+            .unwrap();
+        let n = c.params().n();
+        let mut wires: Vec<Vec<u8>> =
+            (0..n).map(|i| enc.header(i).unwrap().to_vec()).collect();
+        let mut deliver = |blocks: Vec<EncodedBlock>, wires: &mut Vec<Vec<u8>>| {
+            for b in blocks {
+                for (idx, row) in b.rows {
+                    wires[idx].extend_from_slice(&row);
+                }
+            }
+        };
+        let feed = feed.max(1);
+        for chunk in file.chunks(feed) {
+            let blocks = enc.push(chunk).unwrap();
+            deliver(blocks, &mut wires);
+        }
+        if let Some(last) = enc.finish().unwrap() {
+            deliver(vec![last], &mut wires);
+        }
+        wires
+    }
+
+    #[test]
+    fn stream_encode_matches_buffered() {
+        forall(40, |rng| {
+            let k = 1 + rng.index(6);
+            let m = rng.index(4);
+            let sb = 1 + rng.index(48);
+            let len = match rng.index(6) {
+                0 => 0,
+                1 => 1,
+                2 => sb.saturating_sub(1),
+                3 => sb + 1,
+                4 => k * sb,
+                _ => rng.index(6000),
+            };
+            let block = 1 + rng.index(4 * k * sb);
+            let feed = 1 + rng.index(700);
+            let c = codec(k, m, sb);
+            let file = rng.bytes(len);
+            let buffered = c.encode(&file).unwrap();
+            let streamed = stream_encode_wires(&c, &file, block, feed);
+            assert_eq!(
+                streamed, buffered,
+                "k={k} m={m} sb={sb} len={len} block={block} feed={feed}"
+            );
+        });
+    }
+
+    #[test]
+    fn stream_encoder_subset_matches_full() {
+        let c = codec(4, 2, 16);
+        let file: Vec<u8> = (0..1000u32).map(|i| (i * 11) as u8).collect();
+        let full = c.encode(&file).unwrap();
+        for subset in [vec![0usize], vec![5], vec![1, 4], vec![0, 3, 5]] {
+            let digest = sha256(&file);
+            let mut enc = c
+                .stream_encoder_for(file.len() as u64, digest, 128, &subset)
+                .unwrap();
+            let mut wires: std::collections::BTreeMap<usize, Vec<u8>> = subset
+                .iter()
+                .map(|&i| (i, enc.header(i).unwrap().to_vec()))
+                .collect();
+            let mut blocks = enc.push(&file).unwrap();
+            blocks.extend(enc.finish().unwrap());
+            for b in blocks {
+                for (idx, row) in b.rows {
+                    wires.get_mut(&idx).unwrap().extend_from_slice(&row);
+                }
+            }
+            for (&idx, wire) in &wires {
+                assert_eq!(wire, &full[idx], "subset {subset:?} chunk {idx}");
+            }
+        }
+    }
+
+    #[test]
+    fn stream_decode_roundtrip_any_k() {
+        forall(30, |rng| {
+            let k = 1 + rng.index(5);
+            let m = rng.index(4);
+            let sb = 1 + rng.index(32);
+            let len = rng.index(4000);
+            let block_segs = 1 + rng.index(5);
+            let c = codec(k, m, sb);
+            let file = rng.bytes(len);
+            let wires = c.encode(&file).unwrap();
+            let pick = rng.sample_indices(k + m, k);
+            let (hdr, _) = ChunkHeader::unseal(&wires[0]).unwrap();
+            let mut dec = c.stream_decoder(hdr.file_len, hdr.file_sha256);
+            let payload_len = hdr.payload_len as usize;
+            let mut got = Vec::new();
+            let row_block = block_segs * sb;
+            let mut off = 0usize;
+            while off < payload_len {
+                let take = row_block.min(payload_len - off);
+                let rows: Vec<(usize, &[u8])> = pick
+                    .iter()
+                    .map(|&i| {
+                        let p = &wires[i][crate::ec::chunk::HEADER_LEN..];
+                        (i, &p[off..off + take])
+                    })
+                    .collect();
+                got.extend_from_slice(&dec.push_block(&rows).unwrap());
+                off += take;
+            }
+            dec.finish().unwrap();
+            assert_eq!(got, file, "k={k} m={m} sb={sb} len={len}");
+        });
+    }
+
+    #[test]
+    fn stream_decode_survivor_set_may_change_between_blocks() {
+        let c = codec(4, 2, 16);
+        let file: Vec<u8> = (0..2000u32).map(|i| (i ^ 37) as u8).collect();
+        let wires = c.encode(&file).unwrap();
+        let (hdr, _) = ChunkHeader::unseal(&wires[0]).unwrap();
+        let payload_len = hdr.payload_len as usize;
+        let mut dec = c.stream_decoder(hdr.file_len, hdr.file_sha256);
+        let mut got = Vec::new();
+        let sets: [&[usize]; 2] = [&[0, 1, 2, 3], &[0, 1, 4, 5]];
+        let mut off = 0usize;
+        let mut turn = 0usize;
+        while off < payload_len {
+            let take = 16.min(payload_len - off);
+            let pick = sets[turn % 2];
+            turn += 1;
+            let rows: Vec<(usize, &[u8])> = pick
+                .iter()
+                .map(|&i| (i, &wires[i][64 + off..64 + off + take]))
+                .collect();
+            got.extend_from_slice(&dec.push_block(&rows).unwrap());
+            off += take;
+        }
+        dec.finish().unwrap();
+        assert_eq!(got, file);
+    }
+
+    #[test]
+    fn stream_decode_corruption_caught_at_finish() {
+        let c = codec(3, 1, 8);
+        let file = vec![5u8; 300];
+        let mut wires = c.encode(&file).unwrap();
+        let l = wires[1].len();
+        wires[1][l - 1] ^= 0x40;
+        let (hdr, _) = ChunkHeader::unseal(&wires[0]).unwrap();
+        let mut dec = c.stream_decoder(hdr.file_len, hdr.file_sha256);
+        let payload_len = hdr.payload_len as usize;
+        let rows: Vec<(usize, &[u8])> =
+            (0..3).map(|i| (i, &wires[i][64..64 + payload_len])).collect();
+        dec.push_block(&rows).unwrap();
+        assert!(matches!(dec.finish(), Err(Error::Integrity { .. })));
+    }
+
+    #[test]
+    fn stream_encoder_rejects_wrong_length_or_digest() {
+        let c = codec(4, 2, 16);
+        let file = vec![7u8; 100];
+        // Wrong digest.
+        let mut enc = c.stream_encoder(100, [0u8; 32], 64).unwrap();
+        enc.push(&file).unwrap();
+        assert!(matches!(enc.finish(), Err(Error::Integrity { .. })));
+        // Short feed.
+        let enc = c.stream_encoder(200, sha256(&file), 64).unwrap();
+        assert!(enc.finish().is_err());
+        // Over-feed.
+        let mut enc = c.stream_encoder(10, sha256(&file[..10]), 64).unwrap();
+        assert!(enc.push(&file).is_err());
+    }
+
+    #[test]
+    fn rebuild_matrix_rederives_rows() {
+        forall(20, |rng| {
+            let k = 1 + rng.index(5);
+            let m = 1 + rng.index(3);
+            let sb = 1 + rng.index(24);
+            let c = codec(k, m, sb);
+            let file = rng.bytes(500 + rng.index(1000));
+            let wires = c.encode(&file).unwrap();
+            let present = rng.sample_indices(k + m, k);
+            let not_present: Vec<usize> =
+                (0..k + m).filter(|i| !present.contains(i)).collect();
+            if not_present.is_empty() {
+                return;
+            }
+            let rb = rebuild_matrix(c.params(), &present, &not_present).unwrap();
+            let payload_len = wires[0].len() - 64;
+            let segs = payload_len / sb;
+            for s in 0..segs {
+                let off = 64 + s * sb;
+                let rows: Vec<&[u8]> =
+                    present.iter().map(|&i| &wires[i][off..off + sb]).collect();
+                let rebuilt = PureRustBackend.matmul(&rb, &rows).unwrap();
+                for (j, &mi) in not_present.iter().enumerate() {
+                    assert_eq!(
+                        rebuilt[j],
+                        &wires[mi][off..off + sb],
+                        "k={k} m={m} seg={s} missing={mi}"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn segment_decoder_caches_across_calls() {
+        let c = codec(4, 2, 16);
+        let file = vec![0x3Cu8; 640];
+        let wires = c.encode(&file).unwrap();
+        let mut sd = SegmentDecoder::new(c.params(), Arc::new(PureRustBackend));
+        let present = [1usize, 2, 4, 5];
+        for s in 0..(wires[0].len() - 64) / 16 {
+            let off = 64 + s * 16;
+            let rows: Vec<&[u8]> =
+                present.iter().map(|&i| &wires[i][off..off + 16]).collect();
+            let decoded = sd.decode_rows(&present, &rows).unwrap();
+            for (r, row) in decoded.iter().enumerate() {
+                assert_eq!(row, &wires[r][off..off + 16], "seg {s} row {r}");
+            }
+        }
     }
 
     #[test]

@@ -18,6 +18,8 @@ pub mod stripe;
 
 pub use backend::{EcBackend, PureRustBackend};
 pub use chunk::{chunk_name, parse_chunk_name, ChunkHeader};
-pub use codec::Codec;
+pub use codec::{
+    rebuild_matrix, Codec, EncodedBlock, SegmentDecoder, StreamDecoder, StreamEncoder,
+};
 pub use params::EcParams;
 pub use stripe::DEFAULT_STRIPE_B;

@@ -5,9 +5,9 @@ use std::sync::Arc;
 
 use crate::catalog::Replica;
 use crate::ec::chunk::{ChunkHeader, HEADER_LEN};
-use crate::ec::codec::decode_matrix;
-use crate::ec::{EcBackend, EcParams};
+use crate::ec::{EcBackend, EcParams, SegmentDecoder};
 use crate::se::SeRegistry;
+use crate::transfer::RetryPolicy;
 use crate::{Error, Result};
 
 use super::range::cells_for_range;
@@ -28,12 +28,15 @@ pub struct ReaderStats {
 /// A random-access reader over one erasure-coded DFC file.
 pub struct EcFileReader {
     registry: Arc<SeRegistry>,
-    backend: Arc<dyn EcBackend>,
     params: EcParams,
     stripe_b: usize,
     file_len: u64,
     /// replicas[chunk index] (may be empty for lost chunks).
     replicas: Vec<Vec<Replica>>,
+    /// Shared block-decode machinery ([`crate::ec::SegmentDecoder`]):
+    /// the survivor matrix is inverted once and cached across segments
+    /// instead of re-derived per degraded segment.
+    segdec: SegmentDecoder,
     /// Decoded-segment cache: seg → (lru tick, K data rows).
     cache: BTreeMap<u64, (u64, Vec<Vec<u8>>)>,
     cache_cap: usize,
@@ -61,11 +64,11 @@ impl EcFileReader {
         }
         let mut reader = EcFileReader {
             registry,
-            backend,
             params,
             stripe_b,
             file_len: 0,
             replicas,
+            segdec: SegmentDecoder::new(params, backend),
             cache: BTreeMap::new(),
             cache_cap: 8,
             tick: 0,
@@ -104,23 +107,26 @@ impl EcFileReader {
         Err(Error::NotEnoughChunks { have: 0, need: 1 })
     }
 
-    /// One ranged GET against the first live replica of chunk `idx`.
+    /// One ranged GET against chunk `idx`'s replica list, through the
+    /// shared block-fetch machinery (`dfm::stream::read_replicas` — the
+    /// same primitive the streaming download pipeline uses). Each
+    /// replica is tried once.
     fn ranged_get(&mut self, idx: usize, offset: u64, len: usize) -> Result<Vec<u8>> {
         let replicas = self.replicas.get(idx).cloned().unwrap_or_default();
-        let mut last = Error::Transfer(format!("chunk {idx}: no replicas"));
-        for r in &replicas {
-            if let Some(se) = self.registry.get(&r.se) {
-                match se.get_range(&r.pfn, offset, len) {
-                    Ok(bytes) => {
-                        self.stats.range_gets += 1;
-                        self.stats.bytes_fetched += bytes.len() as u64;
-                        return Ok(bytes);
-                    }
-                    Err(e) => last = e,
-                }
-            }
+        if replicas.is_empty() {
+            return Err(Error::Transfer(format!("chunk {idx}: no replicas")));
         }
-        Err(last)
+        let walk_once = RetryPolicy { max_attempts: replicas.len(), fallback_se: false };
+        let bytes = crate::dfm::stream::read_replicas(
+            &self.registry,
+            &replicas,
+            offset,
+            len,
+            walk_once,
+        )?;
+        self.stats.range_gets += 1;
+        self.stats.bytes_fetched += bytes.len() as u64;
+        Ok(bytes)
     }
 
     /// Whether chunk `idx` currently has a live replica.
@@ -209,9 +215,10 @@ impl EcFileReader {
             return Err(Error::NotEnoughChunks { have: survivors.len(), need: k });
         }
         self.stats.segments_decoded += 1;
-        let dec = decode_matrix(self.params, &survivors)?;
         let refs: Vec<&[u8]> = rows.iter().map(|r| r.as_slice()).collect();
-        self.backend.matmul(&dec, &refs)
+        // Shared segment-decode path: the survivor matrix is cached, so
+        // a degraded sequential scan inverts it once, not per segment.
+        self.segdec.decode_rows(&survivors, &refs)
     }
 
     fn cache_insert(&mut self, seg: u64, rows: Vec<Vec<u8>>) {

@@ -27,6 +27,10 @@
 //!   early termination once K chunks have arrived.
 //! * [`dfm`] — the paper's contribution: the EC file-management shim
 //!   (`put`/`get`/`repair`) and the whole-file replication baseline.
+//!   Its data plane is the block-streaming pipeline ([`dfm::stream`]):
+//!   bounded-memory, pipelined encode/transfer/decode — `put`/`get` of
+//!   larger-than-RAM files hold O(N · block) bytes, with encode of one
+//!   block overlapping transfer of the previous.
 //! * [`maintenance`] — the site-resilience engine over the shim:
 //!   catalogue-wide scrub (per-file health + surviving margin),
 //!   prioritized repair under a bandwidth/concurrency budget, SE
@@ -107,6 +111,9 @@ pub enum Error {
     Ec(String),
     Catalog(String),
     Se { se: String, msg: String },
+    /// The SE's availability flag is down — distinct from backend I/O
+    /// errors so mid-transfer outages surface cleanly per chunk.
+    SeDown { se: String },
     Transfer(String),
     NotEnoughChunks { have: usize, need: usize },
     Integrity { path: String, detail: String },
@@ -121,6 +128,7 @@ impl std::fmt::Display for Error {
             Error::Ec(msg) => write!(f, "erasure-coding error: {msg}"),
             Error::Catalog(msg) => write!(f, "catalog error: {msg}"),
             Error::Se { se, msg } => write!(f, "storage element `{se}` error: {msg}"),
+            Error::SeDown { se } => write!(f, "storage element `{se}` unavailable"),
             Error::Transfer(msg) => write!(f, "transfer failed: {msg}"),
             Error::NotEnoughChunks { have, need } => {
                 write!(f, "not enough chunks: have {have}, need {need}")

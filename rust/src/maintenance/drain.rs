@@ -38,11 +38,18 @@ pub struct DrainOptions {
     pub workers: usize,
     /// Transfer workers for the fallback EC repairs.
     pub transfer_workers: usize,
+    /// Bytes per streamed copy block (`transfer_block_bytes`): object
+    /// moves and the fallback repairs hold one block, never an object.
+    pub block_bytes: usize,
 }
 
 impl Default for DrainOptions {
     fn default() -> Self {
-        DrainOptions { workers: 4, transfer_workers: 4 }
+        DrainOptions {
+            workers: 4,
+            transfer_workers: 4,
+            block_bytes: crate::dfm::DEFAULT_TRANSFER_BLOCK_BYTES,
+        }
     }
 }
 
@@ -50,6 +57,12 @@ impl DrainOptions {
     /// Set the concurrent file-evacuation worker count (clamped to ≥ 1).
     pub fn with_workers(mut self, workers: usize) -> Self {
         self.workers = workers.max(1);
+        self
+    }
+
+    /// Set the streamed-copy block size in bytes (clamped to ≥ 1).
+    pub fn with_block_bytes(mut self, block_bytes: usize) -> Self {
+        self.block_bytes = block_bytes.max(1);
         self
     }
 }
@@ -119,6 +132,8 @@ struct DrainCtx {
     dfc: Arc<ShardedDfc>,
     vo: String,
     se_name: String,
+    /// Streamed-copy block size (from [`DrainOptions::block_bytes`]).
+    block_bytes: usize,
 }
 
 fn parent_of(path: &str) -> String {
@@ -160,8 +175,19 @@ fn move_one(ctx: &DrainCtx, ordinal: usize, path: &str, pfn: &str) -> Result<Mov
         candidates = eligible(&own);
     }
 
-    match ctx.source.get(pfn) {
-        Ok(bytes) => {
+    // Probe the source's first block before consulting the (possibly
+    // stateful) placement policy or touching any destination state, then
+    // copy block-by-block through [`crate::se::stream_copy`]: draining
+    // terabyte-scale chunks holds one block, never a whole object.
+    let block = ctx.block_bytes;
+    // One-byte probe: establishes readability without paying a full
+    // block read that stream_copy would immediately repeat.
+    let probe: Result<()> = ctx
+        .source
+        .open_reader(pfn)
+        .and_then(|mut r| r.read_at(0, 1).map(|_| ()));
+    match probe {
+        Ok(()) => {
             if candidates.is_empty() {
                 return Err(Error::Transfer(format!(
                     "no destination SE available for `{path}`"
@@ -192,48 +218,68 @@ fn move_one(ctx: &DrainCtx, ordinal: usize, path: &str, pfn: &str) -> Result<Mov
                 .registry
                 .get(&dest_info.name)
                 .ok_or_else(|| Error::Config("registry inconsistent".into()))?;
-            dest.put(pfn, &bytes)?;
+            let copied =
+                match crate::se::stream_copy(&*ctx.source, &*dest, pfn, block) {
+                    Ok(copied) => copied,
+                    // Source died mid-copy (the partial destination was
+                    // aborted): fall back to the unreadable-source paths.
+                    Err((crate::se::CopySide::Read, e)) => {
+                        return unreadable_source(ctx, path, parent_is_ec, parent, &replicas, e)
+                    }
+                    Err((crate::se::CopySide::Write, e)) => return Err(e),
+                };
             // Register the new location before dropping the old record, so
             // an interruption between the two calls can only leave an
             // extra (stale) record, never an orphaned file.
             ctx.dfc.register_replica(path, dest.name(), pfn)?;
             ctx.dfc.remove_replica(path, &ctx.se_name)?;
             let _ = ctx.source.delete(pfn);
-            Ok(MoveOutcome::Copied { bytes: bytes.len() as u64 })
+            Ok(MoveOutcome::Copied { bytes: copied })
         }
-        Err(read_err) => {
-            if parent_is_ec {
-                // EC chunk: the erasure code can rebuild it elsewhere.
-                // The record is left in place — repair already treats the
-                // unreadable replica as missing, swaps the record only
-                // once the rebuild succeeds, and a failed repair then
-                // leaves the file exactly as the drain found it
-                // (recoverable if the SE revives).
-                Ok(MoveOutcome::NeedsRepair { parent })
-            } else {
-                // Whole-file replica: drop the record only when another
-                // replica is verifiably alive right now — record *count*
-                // is not enough (the other copy may be on a dead SE too).
-                let other_alive = replicas.iter().any(|r| {
-                    r.se != ctx.se_name
-                        && ctx
-                            .registry
-                            .get(&r.se)
-                            .map(|se| se.is_available() && se.exists(&r.pfn))
-                            .unwrap_or(false)
-                });
-                if other_alive {
-                    let _ = ctx.dfc.remove_replica(path, &ctx.se_name);
-                    Ok(MoveOutcome::RecordDropped)
-                } else {
-                    // Keep the record (the bytes may come back with the
-                    // SE) and surface the failure.
-                    Err(Error::Transfer(format!(
-                        "no other live replica of `{path}`; keeping record on `{}` ({read_err})",
-                        ctx.se_name
-                    )))
-                }
-            }
+        Err(read_err) => unreadable_source(ctx, path, parent_is_ec, parent, &replicas, read_err),
+    }
+}
+
+/// Recovery for a replica whose source cannot be read (dead SE, bytes
+/// gone, or a mid-copy failure).
+fn unreadable_source(
+    ctx: &DrainCtx,
+    path: &str,
+    parent_is_ec: bool,
+    parent: String,
+    replicas: &[crate::catalog::Replica],
+    read_err: Error,
+) -> Result<MoveOutcome> {
+    if parent_is_ec {
+        // EC chunk: the erasure code can rebuild it elsewhere.
+        // The record is left in place — repair already treats the
+        // unreadable replica as missing, swaps the record only
+        // once the rebuild succeeds, and a failed repair then
+        // leaves the file exactly as the drain found it
+        // (recoverable if the SE revives).
+        Ok(MoveOutcome::NeedsRepair { parent })
+    } else {
+        // Whole-file replica: drop the record only when another
+        // replica is verifiably alive right now — record *count*
+        // is not enough (the other copy may be on a dead SE too).
+        let other_alive = replicas.iter().any(|r| {
+            r.se != ctx.se_name
+                && ctx
+                    .registry
+                    .get(&r.se)
+                    .map(|se| se.is_available() && se.exists(&r.pfn))
+                    .unwrap_or(false)
+        });
+        if other_alive {
+            let _ = ctx.dfc.remove_replica(path, &ctx.se_name);
+            Ok(MoveOutcome::RecordDropped)
+        } else {
+            // Keep the record (the bytes may come back with the
+            // SE) and surface the failure.
+            Err(Error::Transfer(format!(
+                "no other live replica of `{path}`; keeping record on `{}` ({read_err})",
+                ctx.se_name
+            )))
         }
     }
 }
@@ -262,6 +308,7 @@ pub fn drain_se(shim: &EcShim, se_name: &str, opts: &DrainOptions) -> Result<Dra
         dfc: shim.dfc(),
         vo: shim.vo().to_string(),
         se_name: se_name.to_string(),
+        block_bytes: opts.block_bytes.max(1),
     };
     let ctx = &ctx;
     let jobs: Vec<(usize, _)> = groups
@@ -311,6 +358,7 @@ pub fn drain_se(shim: &EcShim, se_name: &str, opts: &DrainOptions) -> Result<Dra
     // immediately re-populated by its own drain.
     let get_opts = GetOptions::default()
         .with_workers(opts.transfer_workers.max(1))
+        .with_block_bytes(opts.block_bytes)
         .with_retry(RetryPolicy::default_robust());
     let excluded = [se_name.to_string()];
     let repair_list: Vec<(String, Vec<String>)> = repair_dirs.into_iter().collect();

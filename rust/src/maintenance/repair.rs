@@ -30,6 +30,11 @@ pub struct RepairBudget {
     /// planned first-fit within the remaining budget, so an over-budget
     /// file defers *itself*, never the smaller files behind it.
     pub max_bytes: u64,
+    /// Streaming block size for the rebuild transfers
+    /// (`transfer_block_bytes`): each concurrent repair holds
+    /// O(K · block), so `workers · K · 2 · block_bytes` bounds the
+    /// pass's transfer memory.
+    pub block_bytes: usize,
 }
 
 impl Default for RepairBudget {
@@ -39,6 +44,7 @@ impl Default for RepairBudget {
             transfer_workers: 4,
             max_files: usize::MAX,
             max_bytes: u64::MAX,
+            block_bytes: crate::dfm::DEFAULT_TRANSFER_BLOCK_BYTES,
         }
     }
 }
@@ -59,6 +65,12 @@ impl RepairBudget {
     /// Cap the (estimated) rebuilt bytes per pass.
     pub fn with_max_bytes(mut self, max_bytes: u64) -> Self {
         self.max_bytes = max_bytes;
+        self
+    }
+
+    /// Set the streaming block size for rebuild transfers (clamped ≥ 1).
+    pub fn with_block_bytes(mut self, block_bytes: usize) -> Self {
+        self.block_bytes = block_bytes.max(1);
         self
     }
 }
@@ -197,6 +209,7 @@ pub fn repair_all(shim: &EcShim, report: &ScrubReport, budget: &RepairBudget) ->
     // One pool job per file; queue order is priority order, so the most
     // urgent files start first.
     let transfer_workers = budget.transfer_workers.max(1);
+    let block_bytes = budget.block_bytes.max(1);
     let jobs: Vec<(usize, _)> = planned
         .iter()
         .enumerate()
@@ -206,6 +219,7 @@ pub fn repair_all(shim: &EcShim, report: &ScrubReport, budget: &RepairBudget) ->
             (i, move || {
                 let opts = GetOptions::default()
                     .with_workers(transfer_workers)
+                    .with_block_bytes(block_bytes)
                     .with_retry(RetryPolicy::default_robust());
                 shim.repair(&lfn, &opts)
                     .map(|rebuilt| (lfn.clone(), margin_before, rebuilt))

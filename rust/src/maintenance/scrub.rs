@@ -22,6 +22,11 @@ use crate::se::SeRegistry;
 use crate::transfer::{PoolConfig, WorkPool};
 use crate::{Error, Result};
 
+/// Block size for streamed deep-scrub checksumming (1 MiB: large enough
+/// to amortize per-read overhead, small enough that N probe workers stay
+/// cheap).
+const SCRUB_HASH_BLOCK: usize = 1 << 20;
+
 /// Scrub parameters.
 #[derive(Clone, Debug)]
 pub struct ScrubOptions {
@@ -342,10 +347,12 @@ fn probe(layout: &FileLayout, registry: &SeRegistry, verify: bool) -> FileHealth
                 continue;
             }
             if verify && !chunk.checksum.is_empty() {
-                match se.get(&r.pfn) {
-                    Ok(bytes) => {
-                        let got =
-                            crate::util::hexfmt::encode(&crate::util::sha256::digest(&bytes));
+                // Deep mode streams the object through the incremental
+                // hasher block-by-block (`se::hash_object`): a deep scrub
+                // of terabyte-scale chunks holds one block, not a chunk.
+                match crate::se::hash_object(se.as_ref(), &r.pfn, SCRUB_HASH_BLOCK) {
+                    Ok(digest) => {
+                        let got = crate::util::hexfmt::encode(&digest);
                         if got == chunk.checksum {
                             ok = true;
                         } else {

@@ -12,6 +12,14 @@
 //! `checkpoint_failures` (auto-checkpoints that failed and will be
 //! retried; the triggering append itself was durable).
 //!
+//! The streaming data plane records under `transfer.stream.*`:
+//! `blocks` / `bytes` (pipeline blocks and payload bytes moved through
+//! the per-chunk queues), and `stalls` (times a producer blocked on a
+//! full queue — the backpressure events that bound transfer memory; a
+//! persistently high stall rate means the SEs, not the codec, are the
+//! bottleneck, so raising `workers` helps and raising
+//! `transfer_block_bytes` does not).
+//!
 //! The maintenance engine records under `maintenance.*`: scrub/repair/
 //! drain run counts and outcomes, `maintenance.quarantine_failed`
 //! (corrupt-replica quarantines whose object delete or record drop

@@ -8,7 +8,7 @@
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
 
-use super::{check_up, NetworkProfile, StorageElement};
+use super::{check_up, ChunkSink, ChunkSource, NetworkProfile, StorageElement};
 use crate::{Error, Result};
 
 /// A directory-backed SE.
@@ -75,8 +75,42 @@ impl LocalSe {
         }
     }
 
+    /// Profile sleep for one streamed block: bandwidth only — a stream
+    /// pays the per-transfer setup latency once at open, not per block.
+    fn simulate_block(&self, bytes: u64) {
+        if let Some(p) = &self.profile {
+            if self.sleep_scale > 0.0 && p.bandwidth_bps.is_finite() && p.bandwidth_bps > 0.0 {
+                let t = bytes as f64 / p.bandwidth_bps * self.sleep_scale;
+                if t > 0.0 {
+                    std::thread::sleep(std::time::Duration::from_secs_f64(t));
+                }
+            }
+        }
+    }
+
+    /// Profile sleep for a stream's one-time channel setup.
+    fn simulate_setup(&self) {
+        if let Some(p) = &self.profile {
+            let t = p.setup_s * self.sleep_scale;
+            if t > 0.0 {
+                std::thread::sleep(std::time::Duration::from_secs_f64(t));
+            }
+        }
+    }
+
     fn io_err(&self, e: std::io::Error, pfn: &str) -> Error {
         Error::Se { se: self.name.clone(), msg: format!("`{pfn}`: {e}") }
+    }
+
+    /// In-flight temp path for an upload: the *full* encoded object name
+    /// plus a `.part` suffix. Appending (rather than
+    /// `Path::with_extension`, which *replaces* the extension) keeps the
+    /// temp names of `x.bin` and `x.txt` distinct — concurrent streaming
+    /// uploads of different pfns must never share a temp file.
+    fn part_path(dest: &Path) -> PathBuf {
+        let mut os = dest.as_os_str().to_os_string();
+        os.push(".part");
+        PathBuf::from(os)
     }
 }
 
@@ -93,7 +127,7 @@ impl StorageElement for LocalSe {
         check_up(self)?;
         self.simulate(data.len() as u64);
         let path = self.pfn_path(pfn);
-        let tmp = path.with_extension("part");
+        let tmp = Self::part_path(&path);
         std::fs::write(&tmp, data).map_err(|e| self.io_err(e, pfn))?;
         std::fs::rename(&tmp, &path).map_err(|e| self.io_err(e, pfn))?;
         Ok(())
@@ -169,6 +203,110 @@ impl StorageElement for LocalSe {
     fn network_profile(&self) -> Option<&NetworkProfile> {
         self.profile.as_ref()
     }
+
+    /// Native streaming upload: append blocks to the `.part` temp file,
+    /// commit = flush + rename (same atomicity as [`LocalSe::put`]).
+    fn put_writer(&self, pfn: &str) -> Result<Box<dyn ChunkSink + '_>> {
+        check_up(self)?;
+        self.simulate_setup();
+        let dest = self.pfn_path(pfn);
+        let tmp = Self::part_path(&dest);
+        let file = std::fs::File::create(&tmp).map_err(|e| self.io_err(e, pfn))?;
+        Ok(Box::new(LocalSink {
+            se: self,
+            pfn: pfn.to_string(),
+            tmp,
+            dest,
+            file: Some(std::io::BufWriter::new(file)),
+            committed: false,
+        }))
+    }
+
+    /// Native streaming reader: one open descriptor, seek per block.
+    fn open_reader(&self, pfn: &str) -> Result<Box<dyn ChunkSource + '_>> {
+        check_up(self)?;
+        self.simulate_setup();
+        let file =
+            std::fs::File::open(self.pfn_path(pfn)).map_err(|e| self.io_err(e, pfn))?;
+        Ok(Box::new(LocalSource { se: self, pfn: pfn.to_string(), file }))
+    }
+}
+
+/// Streaming upload into a `.part` temp file (see [`LocalSe::put_writer`]).
+struct LocalSink<'a> {
+    se: &'a LocalSe,
+    pfn: String,
+    tmp: PathBuf,
+    dest: PathBuf,
+    file: Option<std::io::BufWriter<std::fs::File>>,
+    committed: bool,
+}
+
+impl ChunkSink for LocalSink<'_> {
+    fn write_block(&mut self, data: &[u8]) -> Result<()> {
+        use std::io::Write;
+        check_up(self.se)?;
+        self.se.simulate_block(data.len() as u64);
+        self.file
+            .as_mut()
+            .expect("sink already finalized")
+            .write_all(data)
+            .map_err(|e| self.se.io_err(e, &self.pfn))
+    }
+
+    fn commit(mut self: Box<Self>) -> Result<()> {
+        use std::io::Write;
+        check_up(self.se)?;
+        let mut w = self.file.take().expect("sink already finalized");
+        w.flush().map_err(|e| self.se.io_err(e, &self.pfn))?;
+        drop(w);
+        std::fs::rename(&self.tmp, &self.dest).map_err(|e| self.se.io_err(e, &self.pfn))?;
+        self.committed = true;
+        Ok(())
+    }
+
+    fn abort(mut self: Box<Self>) {
+        self.file.take();
+        let _ = std::fs::remove_file(&self.tmp);
+        self.committed = true; // Drop must not re-remove
+    }
+}
+
+impl Drop for LocalSink<'_> {
+    fn drop(&mut self) {
+        // Leak guard: a sink dropped without commit/abort leaves no
+        // `.part` litter behind.
+        if !self.committed {
+            self.file.take();
+            let _ = std::fs::remove_file(&self.tmp);
+        }
+    }
+}
+
+/// Streaming reader over one open descriptor (see [`LocalSe::open_reader`]).
+struct LocalSource<'a> {
+    se: &'a LocalSe,
+    pfn: String,
+    file: std::fs::File,
+}
+
+impl ChunkSource for LocalSource<'_> {
+    fn read_at(&mut self, offset: u64, len: usize) -> Result<Vec<u8>> {
+        use std::io::{Read, Seek, SeekFrom};
+        check_up(self.se)?;
+        let size = self.file.metadata().map_err(|e| self.se.io_err(e, &self.pfn))?.len();
+        let start = offset.min(size);
+        let take = len.min((size - start) as usize);
+        self.file
+            .seek(SeekFrom::Start(start))
+            .map_err(|e| self.se.io_err(e, &self.pfn))?;
+        let mut buf = vec![0u8; take];
+        self.file
+            .read_exact(&mut buf)
+            .map_err(|e| self.se.io_err(e, &self.pfn))?;
+        self.se.simulate_block(take as u64);
+        Ok(buf)
+    }
 }
 
 #[cfg(test)]
@@ -230,6 +368,88 @@ mod tests {
         se.delete("/x").unwrap();
         assert!(se.get("/x").is_err());
         assert!(se.delete("/x").is_err());
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn streamed_sink_roundtrip_and_inflight_invisibility() {
+        let dir = tmpdir("sink");
+        let se = LocalSe::new("SE-L", "uk", &dir).unwrap();
+        let mut sink = se.put_writer("/vo/s.bin").unwrap();
+        sink.write_block(b"hello ").unwrap();
+        // In-flight upload is invisible: not listed, not readable.
+        assert!(!se.exists("/vo/s.bin"));
+        assert!(se.list("/vo/").unwrap().is_empty());
+        sink.write_block(b"world").unwrap();
+        sink.commit().unwrap();
+        assert_eq!(se.get("/vo/s.bin").unwrap(), b"hello world");
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn concurrent_sinks_for_extension_siblings_do_not_collide() {
+        // `x.bin` and `x.txt` must not share a temp file: extension-
+        // replacing temp naming would interleave two in-flight streams.
+        let dir = tmpdir("sib");
+        let se = LocalSe::new("SE-L", "uk", &dir).unwrap();
+        let mut a = se.put_writer("/vo/x.bin").unwrap();
+        let mut b = se.put_writer("/vo/x.txt").unwrap();
+        a.write_block(b"AAAA").unwrap();
+        b.write_block(b"BBBB").unwrap();
+        a.write_block(b"aaaa").unwrap();
+        a.commit().unwrap();
+        b.commit().unwrap();
+        assert_eq!(se.get("/vo/x.bin").unwrap(), b"AAAAaaaa");
+        assert_eq!(se.get("/vo/x.txt").unwrap(), b"BBBB");
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn aborted_sink_leaves_nothing() {
+        let dir = tmpdir("abort");
+        let se = LocalSe::new("SE-L", "uk", &dir).unwrap();
+        let mut sink = se.put_writer("/vo/a.bin").unwrap();
+        sink.write_block(b"partial").unwrap();
+        sink.abort();
+        assert!(!se.exists("/vo/a.bin"));
+        assert_eq!(std::fs::read_dir(&dir).unwrap().count(), 0);
+        // Dropping a sink without commit/abort cleans up too.
+        let mut sink = se.put_writer("/vo/b.bin").unwrap();
+        sink.write_block(b"x").unwrap();
+        drop(sink);
+        assert_eq!(std::fs::read_dir(&dir).unwrap().count(), 0);
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn streamed_source_reads_ranges() {
+        let dir = tmpdir("src");
+        let se = LocalSe::new("SE-L", "uk", &dir).unwrap();
+        let data: Vec<u8> = (0..100u8).collect();
+        se.put("/vo/r.bin", &data).unwrap();
+        let mut src = se.open_reader("/vo/r.bin").unwrap();
+        assert_eq!(src.read_at(0, 10).unwrap(), &data[..10]);
+        assert_eq!(src.read_at(90, 20).unwrap(), &data[90..]); // clamped
+        assert_eq!(src.read_at(200, 10).unwrap(), Vec::<u8>::new());
+        assert!(se.open_reader("/vo/missing").is_err());
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn sink_and_source_respect_availability() {
+        let dir = tmpdir("down");
+        let se = LocalSe::new("SE-L", "uk", &dir).unwrap();
+        se.put("/x", b"d").unwrap();
+        let mut sink = se.put_writer("/y").unwrap();
+        let mut src = se.open_reader("/x").unwrap();
+        se.set_available(false);
+        assert!(matches!(
+            sink.write_block(b"z"),
+            Err(crate::Error::SeDown { .. })
+        ));
+        assert!(matches!(src.read_at(0, 1), Err(crate::Error::SeDown { .. })));
+        assert!(matches!(se.put_writer("/z"), Err(crate::Error::SeDown { .. })));
+        sink.abort();
         std::fs::remove_dir_all(dir).unwrap();
     }
 

@@ -1,0 +1,700 @@
+//! Streaming data-plane system tests: streamed/buffered equivalence,
+//! bounded memory, encode/transfer overlap, mid-stream failover, clean
+//! `SeDown` surfacing, and ghost-entry unwinding (`ci.sh` gate:
+//! `cargo test --test streaming_path`).
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use drs::catalog::ShardedDfc;
+use drs::dfm::{EcShim, GetOptions, PutOptions, TestCluster};
+use drs::ec::{chunk_name, Codec, EcParams, PureRustBackend};
+use drs::se::{ChunkSink, MemSe, NetworkProfile, SeRegistry, StorageElement};
+use drs::testkit::forall;
+use drs::Error;
+
+fn tmpfile(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!(
+        "drs-streaming-{tag}-{}-{}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ))
+}
+
+fn patterned(len: usize, salt: u32) -> Vec<u8> {
+    (0..len as u32).map(|i| (i.wrapping_mul(31).wrapping_add(salt) % 251) as u8).collect()
+}
+
+/// Find the wire bytes of chunk `i` of `lfn` wherever it landed.
+fn chunk_bytes(cluster: &TestCluster, lfn: &str, base: &str, i: usize, n: usize) -> Vec<u8> {
+    let pfn = format!("{lfn}/{}", chunk_name(base, i, n));
+    for se in cluster.registry().all() {
+        if se.exists(&pfn) {
+            return se.get(&pfn).unwrap();
+        }
+    }
+    panic!("chunk {i} of {lfn} not found on any SE");
+}
+
+// ---------------------------------------------------------------------
+// Equivalence: streamed put/get ≡ buffered codec, byte for byte.
+// ---------------------------------------------------------------------
+
+#[test]
+fn streamed_and_buffered_produce_identical_wire_chunks() {
+    forall(18, |rng| {
+        let k = 1 + rng.index(5);
+        let m = rng.index(3);
+        let n = k + m;
+        let sb = 1 + rng.index(64);
+        let len = match rng.index(7) {
+            0 => 0,
+            1 => 1,
+            2 => sb.saturating_sub(1),
+            3 => sb + 1,
+            4 => k * sb,
+            5 => k * sb + 1,
+            _ => rng.index(20_000),
+        };
+        let block = 1 + rng.index(3 * k * sb);
+        let params = EcParams::new(k, m).unwrap();
+        let data = rng.bytes(len);
+
+        let cluster = TestCluster::builder().ses(n.max(3)).ec(params).build().unwrap();
+        let opts = PutOptions::default()
+            .with_params(params)
+            .with_stripe(sb)
+            .with_workers(1 + rng.index(4))
+            .with_block_bytes(block);
+
+        // put_file path: write a temp file, stream it up.
+        let path = tmpfile("eq");
+        std::fs::write(&path, &data).unwrap();
+        let placed = cluster.shim().put_file("/vo/eq.bin", &path, &opts).unwrap();
+        assert_eq!(placed.len(), n);
+
+        // Every wire chunk must equal the buffered codec's output.
+        let codec =
+            Codec::with_backend(params, sb, std::sync::Arc::new(PureRustBackend)).unwrap();
+        let expected = codec.encode(&data).unwrap();
+        for i in 0..n {
+            let wire = chunk_bytes(&cluster, "/vo/eq.bin", "eq.bin", i, n);
+            assert_eq!(
+                wire, expected[i],
+                "k={k} m={m} sb={sb} len={len} block={block}: wire chunk {i} differs"
+            );
+        }
+
+        // get_file and get_bytes both round-trip.
+        let out = tmpfile("eq-out");
+        let gopts = GetOptions::default().with_block_bytes(1 + rng.index(3 * k * sb));
+        let bytes = cluster.shim().get_file("/vo/eq.bin", &out, &gopts).unwrap();
+        assert_eq!(bytes, data.len() as u64);
+        assert_eq!(std::fs::read(&out).unwrap(), data);
+        assert_eq!(cluster.shim().get_bytes("/vo/eq.bin", &gopts).unwrap(), data);
+
+        // put_bytes goes through the same pipeline: identical chunks too.
+        let cluster2 = TestCluster::builder().ses(n.max(3)).ec(params).build().unwrap();
+        cluster2.shim().put_bytes("/vo/eq.bin", &data, &opts).unwrap();
+        for i in 0..n {
+            let wire = chunk_bytes(&cluster2, "/vo/eq.bin", "eq.bin", i, n);
+            assert_eq!(wire, expected[i], "put_bytes wire chunk {i} differs");
+        }
+
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(&out);
+    });
+}
+
+#[test]
+fn degraded_streamed_get_matches_on_coding_chunks() {
+    // Kill data-chunk SEs so the streamed decode takes the matrix path.
+    let params = EcParams::new(4, 2).unwrap();
+    let cluster = TestCluster::builder().ses(6).ec(params).build().unwrap();
+    let data = patterned(300_000, 7);
+    let opts = PutOptions::default()
+        .with_params(params)
+        .with_stripe(1024)
+        .with_block_bytes(8192);
+    cluster.shim().put_bytes("/vo/deg.bin", &data, &opts).unwrap();
+    cluster.kill_se("SE-00");
+    cluster.kill_se("SE-02");
+    let gopts = GetOptions::default().with_block_bytes(4096).with_workers(4);
+    assert_eq!(cluster.shim().get_bytes("/vo/deg.bin", &gopts).unwrap(), data);
+}
+
+// ---------------------------------------------------------------------
+// Bounded memory + overlap: the acceptance-criterion test.
+// ---------------------------------------------------------------------
+
+/// A MemSe wrapper that records the size of every streamed sink write,
+/// proving data truly moves block-by-block through the SE API.
+struct RecordingSe {
+    inner: MemSe,
+    max_write: AtomicU64,
+    writes: AtomicU64,
+}
+
+impl RecordingSe {
+    fn new(name: &str) -> Self {
+        RecordingSe {
+            inner: MemSe::new(name, "uk"),
+            max_write: AtomicU64::new(0),
+            writes: AtomicU64::new(0),
+        }
+    }
+}
+
+struct RecordingSink<'a> {
+    inner: Box<dyn ChunkSink + 'a>,
+    max_write: &'a AtomicU64,
+    writes: &'a AtomicU64,
+}
+
+impl ChunkSink for RecordingSink<'_> {
+    fn write_block(&mut self, data: &[u8]) -> drs::Result<()> {
+        self.max_write.fetch_max(data.len() as u64, Ordering::SeqCst);
+        self.writes.fetch_add(1, Ordering::SeqCst);
+        self.inner.write_block(data)
+    }
+
+    fn commit(self: Box<Self>) -> drs::Result<()> {
+        self.inner.commit()
+    }
+
+    fn abort(self: Box<Self>) {
+        self.inner.abort()
+    }
+}
+
+impl StorageElement for RecordingSe {
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+    fn region(&self) -> &str {
+        self.inner.region()
+    }
+    fn put(&self, pfn: &str, data: &[u8]) -> drs::Result<()> {
+        self.inner.put(pfn, data)
+    }
+    fn get(&self, pfn: &str) -> drs::Result<Vec<u8>> {
+        self.inner.get(pfn)
+    }
+    fn get_range(&self, pfn: &str, offset: u64, len: usize) -> drs::Result<Vec<u8>> {
+        self.inner.get_range(pfn, offset, len)
+    }
+    fn delete(&self, pfn: &str) -> drs::Result<()> {
+        self.inner.delete(pfn)
+    }
+    fn exists(&self, pfn: &str) -> bool {
+        self.inner.exists(pfn)
+    }
+    fn list(&self, prefix: &str) -> drs::Result<Vec<String>> {
+        self.inner.list(prefix)
+    }
+    fn used_bytes(&self) -> u64 {
+        self.inner.used_bytes()
+    }
+    fn is_available(&self) -> bool {
+        self.inner.is_available()
+    }
+    fn set_available(&self, up: bool) {
+        self.inner.set_available(up)
+    }
+    fn put_writer(&self, pfn: &str) -> drs::Result<Box<dyn ChunkSink + '_>> {
+        Ok(Box::new(RecordingSink {
+            inner: self.inner.put_writer(pfn)?,
+            max_write: &self.max_write,
+            writes: &self.writes,
+        }))
+    }
+}
+
+fn recording_cluster(n_ses: usize) -> (Arc<ShardedDfc>, Arc<SeRegistry>, Vec<Arc<RecordingSe>>) {
+    let mut registry = SeRegistry::new();
+    let mut ses = Vec::new();
+    for i in 0..n_ses {
+        let se = Arc::new(RecordingSe::new(&format!("SE-{i:02}")));
+        ses.push(Arc::clone(&se));
+        registry.register(se, &["demo"]).unwrap();
+    }
+    (Arc::new(ShardedDfc::new(4)), Arc::new(registry), ses)
+}
+
+#[test]
+fn put_get_hold_bounded_memory_and_overlap_encode_with_transfer() {
+    let (dfc, registry, recorders) = recording_cluster(6);
+    let shim = EcShim::with_defaults(Arc::clone(&dfc), Arc::clone(&registry), "demo");
+    let params = EcParams::new(4, 2).unwrap();
+    let n = params.n() as u64;
+    let block: usize = 256 * 1024;
+    let file_len: usize = 16 * 1024 * 1024; // 64 blocks ≥ 4× block size
+    let data = patterned(file_len, 3);
+    let path = tmpfile("mem");
+    std::fs::write(&path, &data).unwrap();
+
+    let opts = PutOptions::default()
+        .with_params(params)
+        .with_stripe(16 * 1024)
+        .with_workers(6)
+        .with_block_bytes(block);
+    let (placed, stats) = shim.put_file_stats("/vo/big.bin", &path, &opts).unwrap();
+    assert_eq!(placed.len(), 6);
+
+    // The acceptance bound: never more than N·(2 blocks) + constant of
+    // payload resident at once — and far below the file size.
+    let bound = n * 2 * block as u64 + 4 * block as u64;
+    assert!(
+        stats.peak_buffered_bytes <= bound,
+        "peak {} exceeds N·(2 blocks)+c bound {bound}",
+        stats.peak_buffered_bytes
+    );
+    assert!(
+        stats.peak_buffered_bytes < file_len as u64 / 2,
+        "peak {} not clearly below the {file_len}-byte file — pipeline is materializing",
+        stats.peak_buffered_bytes
+    );
+    // Pipelining: some transfer writes began before encoding finished.
+    assert!(
+        stats.overlapped_writes > 0,
+        "no transfer write overlapped encoding: pipeline has serialized"
+    );
+    // Backpressure-counted blocks flowed through the queues.
+    assert!(stats.blocks >= 6 * 64, "expected ≥ 384 queued blocks, got {}", stats.blocks);
+
+    // The SEs saw genuine block-granularity writes, never a whole chunk.
+    for se in &recorders {
+        let max = se.max_write.load(Ordering::SeqCst);
+        assert!(max > 0 && max <= block as u64, "single write of {max} bytes on {}", se.name());
+        assert!(se.writes.load(Ordering::SeqCst) >= 64, "too few streamed writes");
+    }
+
+    // Download side: same bound, straight into a file, byte-identical.
+    let out = tmpfile("mem-out");
+    let gopts = GetOptions::default().with_workers(6).with_block_bytes(block);
+    let (bytes, gstats) = shim.get_file_stats("/vo/big.bin", &out, &gopts).unwrap();
+    assert_eq!(bytes, file_len as u64);
+    assert!(
+        gstats.peak_buffered_bytes <= bound,
+        "download peak {} exceeds bound {bound}",
+        gstats.peak_buffered_bytes
+    );
+    assert_eq!(std::fs::read(&out).unwrap(), data);
+
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_file(&out);
+}
+
+// ---------------------------------------------------------------------
+// Satellite: ghost catalogue entries are unwound on failed puts.
+// ---------------------------------------------------------------------
+
+#[test]
+fn failed_put_unwinds_catalogue_entry() {
+    let cluster = TestCluster::builder().ses(5).build().unwrap();
+    for se in cluster.registry().all() {
+        se.set_available(false);
+    }
+    let opts = PutOptions::default()
+        .with_params(cluster.params())
+        .with_stripe(512)
+        .with_block_bytes(2048);
+    let data = patterned(10_000, 1);
+
+    let err = cluster.shim().put_bytes("/vo/ghost.bin", &data, &opts).unwrap_err();
+    assert!(matches!(err, Error::Transfer(_)), "unexpected error: {err}");
+    // No ghost: neither the directory nor any chunk file survives.
+    assert!(!cluster.dfc().exists("/vo/ghost.bin"));
+    assert!(!cluster.dfc().is_dir("/vo/ghost.bin"));
+    assert_eq!(cluster.total_stored_bytes(), 0);
+
+    // And the same lfn is immediately reusable once SEs return.
+    for se in cluster.registry().all() {
+        se.set_available(true);
+    }
+    cluster.shim().put_bytes("/vo/ghost.bin", &data, &opts).unwrap();
+    assert_eq!(
+        cluster.shim().get_bytes("/vo/ghost.bin", &GetOptions::default()).unwrap(),
+        data
+    );
+}
+
+#[test]
+fn failed_put_file_unwinds_too() {
+    let cluster = TestCluster::builder().ses(4).build().unwrap();
+    for se in cluster.registry().all() {
+        se.set_available(false);
+    }
+    let path = tmpfile("ghost");
+    std::fs::write(&path, patterned(5000, 9)).unwrap();
+    let opts =
+        PutOptions::default().with_params(cluster.params()).with_stripe(256);
+    assert!(cluster.shim().put_file("/vo/gf.bin", &path, &opts).is_err());
+    assert!(!cluster.dfc().exists("/vo/gf.bin"));
+    assert_eq!(cluster.total_stored_bytes(), 0);
+    let _ = std::fs::remove_file(&path);
+}
+
+// ---------------------------------------------------------------------
+// Satellite: mid-upload SE outage surfaces as a clean SeDown.
+// ---------------------------------------------------------------------
+
+/// A MemSe wrapper that takes itself down after a set number of
+/// streamed sink writes — models an SE dying mid-upload.
+struct DieMidUploadSe {
+    inner: MemSe,
+    writes_left: AtomicI64,
+}
+
+struct CountdownSink<'a> {
+    inner: Box<dyn ChunkSink + 'a>,
+    se: &'a DieMidUploadSe,
+}
+
+impl ChunkSink for CountdownSink<'_> {
+    fn write_block(&mut self, data: &[u8]) -> drs::Result<()> {
+        if self.se.writes_left.fetch_sub(1, Ordering::SeqCst) <= 0 {
+            self.se.inner.set_available(false);
+        }
+        self.inner.write_block(data)
+    }
+    fn commit(self: Box<Self>) -> drs::Result<()> {
+        self.inner.commit()
+    }
+    fn abort(self: Box<Self>) {
+        self.inner.abort()
+    }
+}
+
+impl StorageElement for DieMidUploadSe {
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+    fn region(&self) -> &str {
+        self.inner.region()
+    }
+    fn put(&self, pfn: &str, data: &[u8]) -> drs::Result<()> {
+        self.inner.put(pfn, data)
+    }
+    fn get(&self, pfn: &str) -> drs::Result<Vec<u8>> {
+        self.inner.get(pfn)
+    }
+    fn delete(&self, pfn: &str) -> drs::Result<()> {
+        self.inner.delete(pfn)
+    }
+    fn exists(&self, pfn: &str) -> bool {
+        self.inner.exists(pfn)
+    }
+    fn list(&self, prefix: &str) -> drs::Result<Vec<String>> {
+        self.inner.list(prefix)
+    }
+    fn used_bytes(&self) -> u64 {
+        self.inner.used_bytes()
+    }
+    fn is_available(&self) -> bool {
+        self.inner.is_available()
+    }
+    fn set_available(&self, up: bool) {
+        self.inner.set_available(up)
+    }
+    fn put_writer(&self, pfn: &str) -> drs::Result<Box<dyn ChunkSink + '_>> {
+        Ok(Box::new(CountdownSink { inner: self.inner.put_writer(pfn)?, se: self }))
+    }
+}
+
+#[test]
+fn mid_upload_outage_yields_clean_sedown_and_unwinds() {
+    let mut registry = SeRegistry::new();
+    registry
+        .register(
+            Arc::new(DieMidUploadSe {
+                inner: MemSe::new("SE-00", "uk"),
+                writes_left: AtomicI64::new(3),
+            }),
+            &["demo"],
+        )
+        .unwrap();
+    for i in 1..3 {
+        registry.register(Arc::new(MemSe::new(format!("SE-{i:02}"), "uk")), &["demo"]).unwrap();
+    }
+    let registry = Arc::new(registry);
+    let dfc = Arc::new(ShardedDfc::new(2));
+    let shim = EcShim::with_defaults(Arc::clone(&dfc), Arc::clone(&registry), "demo");
+
+    let opts = PutOptions::default()
+        .with_params(EcParams::new(2, 1).unwrap())
+        .with_stripe(512)
+        .with_block_bytes(1024)
+        .with_workers(3);
+    let data = patterned(64 * 1024, 5); // 64 blocks: dies mid-stream
+    let err = shim.put_bytes("/vo/mid.bin", &data, &opts).unwrap_err();
+    let msg = err.to_string();
+    assert!(
+        msg.contains("unavailable"),
+        "expected a clean SeDown-based failure, got: {msg}"
+    );
+    // Unwound: catalogue clean, nothing stored anywhere.
+    assert!(!dfc.exists("/vo/mid.bin"));
+    for se in registry.all() {
+        assert_eq!(se.used_bytes(), 0, "{} still holds bytes", se.name());
+    }
+}
+
+#[test]
+fn sedown_error_variant_from_backends() {
+    let se = MemSe::new("SE-X", "uk");
+    se.put("/x", b"d").unwrap();
+    se.set_available(false);
+    assert!(matches!(se.get("/x"), Err(Error::SeDown { .. })));
+    assert!(matches!(se.put("/y", b"z"), Err(Error::SeDown { .. })));
+    assert!(matches!(se.get_range("/x", 0, 1), Err(Error::SeDown { .. })));
+}
+
+// ---------------------------------------------------------------------
+// Mid-stream download failover.
+// ---------------------------------------------------------------------
+
+/// A MemSe wrapper whose ranged reads start failing after a countdown —
+/// models an SE dying mid-download.
+struct DieMidReadSe {
+    inner: MemSe,
+    reads_left: AtomicI64,
+}
+
+impl StorageElement for DieMidReadSe {
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+    fn region(&self) -> &str {
+        self.inner.region()
+    }
+    fn put(&self, pfn: &str, data: &[u8]) -> drs::Result<()> {
+        self.inner.put(pfn, data)
+    }
+    fn get(&self, pfn: &str) -> drs::Result<Vec<u8>> {
+        self.inner.get(pfn)
+    }
+    fn get_range(&self, pfn: &str, offset: u64, len: usize) -> drs::Result<Vec<u8>> {
+        if self.reads_left.fetch_sub(1, Ordering::SeqCst) <= 0 {
+            return Err(Error::Transfer(format!("{}: injected read failure", self.name())));
+        }
+        self.inner.get_range(pfn, offset, len)
+    }
+    fn delete(&self, pfn: &str) -> drs::Result<()> {
+        self.inner.delete(pfn)
+    }
+    fn exists(&self, pfn: &str) -> bool {
+        self.inner.exists(pfn)
+    }
+    fn list(&self, prefix: &str) -> drs::Result<Vec<String>> {
+        self.inner.list(prefix)
+    }
+    fn used_bytes(&self) -> u64 {
+        self.inner.used_bytes()
+    }
+    fn is_available(&self) -> bool {
+        self.inner.is_available()
+    }
+    fn set_available(&self, up: bool) {
+        self.inner.set_available(up)
+    }
+}
+
+#[test]
+fn download_fails_over_to_spare_chunk_mid_stream() {
+    let mut registry = SeRegistry::new();
+    let flaky = Arc::new(DieMidReadSe {
+        inner: MemSe::new("SE-00", "uk"),
+        reads_left: AtomicI64::new(i64::MAX),
+    });
+    registry.register(Arc::clone(&flaky) as Arc<dyn StorageElement>, &["demo"]).unwrap();
+    for i in 1..6 {
+        registry.register(Arc::new(MemSe::new(format!("SE-{i:02}"), "uk")), &["demo"]).unwrap();
+    }
+    let registry = Arc::new(registry);
+    let dfc = Arc::new(ShardedDfc::new(2));
+    let shim = EcShim::with_defaults(Arc::clone(&dfc), Arc::clone(&registry), "demo");
+
+    let params = EcParams::new(4, 2).unwrap();
+    let data = patterned(200_000, 11);
+    let opts = PutOptions::default()
+        .with_params(params)
+        .with_stripe(1024)
+        .with_block_bytes(4096);
+    shim.put_bytes("/vo/fo.bin", &data, &opts).unwrap();
+
+    // Chunk 0 lives on the flaky SE (round-robin). Let it serve its
+    // header + a few blocks, then die: the pipeline must swap in a
+    // coding chunk mid-stream and still verify the digest.
+    flaky.reads_left.store(5, Ordering::SeqCst);
+    let gopts = GetOptions::default().with_block_bytes(4096).with_workers(4);
+    assert_eq!(shim.get_bytes("/vo/fo.bin", &gopts).unwrap(), data);
+
+    // With no spare left (both coding SEs down too) it fails cleanly.
+    flaky.reads_left.store(0, Ordering::SeqCst);
+    registry.get("SE-04").unwrap().set_available(false);
+    registry.get("SE-05").unwrap().set_available(false);
+    assert!(matches!(
+        shim.get_bytes("/vo/fo.bin", &gopts),
+        Err(Error::NotEnoughChunks { .. })
+    ));
+}
+
+// ---------------------------------------------------------------------
+// Streaming repair stays bit-identical.
+// ---------------------------------------------------------------------
+
+#[test]
+fn streaming_repair_rebuilds_bitidentical_chunks() {
+    let params = EcParams::new(4, 2).unwrap();
+    let cluster = TestCluster::builder().ses(8).ec(params).build().unwrap();
+    let data = patterned(150_000, 13);
+    let opts = PutOptions::default()
+        .with_params(params)
+        .with_stripe(1024)
+        .with_block_bytes(8192);
+    cluster.shim().put_bytes("/vo/rep.bin", &data, &opts).unwrap();
+    let codec = Codec::with_backend(params, 1024, Arc::new(PureRustBackend)).unwrap();
+    let expected = codec.encode(&data).unwrap();
+
+    cluster.kill_se("SE-00"); // chunk 0
+    cluster.kill_se("SE-05"); // chunk 5 (coding)
+    let gopts = GetOptions::default().with_block_bytes(4096);
+    let fixed = cluster.shim().repair("/vo/rep.bin", &gopts).unwrap();
+    assert_eq!(fixed, 2);
+
+    for &i in &[0usize, 5] {
+        let wire = chunk_bytes(&cluster, "/vo/rep.bin", "rep.bin", i, 6);
+        assert_eq!(wire, expected[i], "rebuilt chunk {i} not bit-identical");
+    }
+    // File still reads with the dead SEs down.
+    assert_eq!(cluster.shim().get_bytes("/vo/rep.bin", &gopts).unwrap(), data);
+}
+
+// ---------------------------------------------------------------------
+// Local (filesystem) SEs through the native streaming sinks/sources.
+// ---------------------------------------------------------------------
+
+#[test]
+fn local_se_cluster_streams_end_to_end() {
+    let base = tmpfile("local-cluster");
+    let params = EcParams::new(3, 2).unwrap();
+    let cluster = TestCluster::builder()
+        .ses(5)
+        .ec(params)
+        .local_dirs(&base)
+        .network(NetworkProfile::instant(), 0.0)
+        .build()
+        .unwrap();
+    let data = patterned(500_000, 17);
+    let path = tmpfile("local-in");
+    std::fs::write(&path, &data).unwrap();
+    let opts = PutOptions::default()
+        .with_params(params)
+        .with_stripe(4096)
+        .with_workers(5)
+        .with_block_bytes(64 * 1024);
+    let (_, stats) = cluster.shim().put_file_stats("/vo/l.bin", &path, &opts).unwrap();
+    assert!(stats.overlapped_writes > 0);
+
+    let out = tmpfile("local-out");
+    let gopts = GetOptions::default().with_block_bytes(64 * 1024).with_workers(3);
+    cluster.shim().get_file("/vo/l.bin", &out, &gopts).unwrap();
+    assert_eq!(std::fs::read(&out).unwrap(), data);
+
+    // Degraded read through native seek-based sources.
+    cluster.kill_se("SE-01");
+    assert_eq!(cluster.shim().get_bytes("/vo/l.bin", &gopts).unwrap(), data);
+
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_file(&out);
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+#[test]
+fn failed_get_preserves_existing_destination_file() {
+    let cluster = TestCluster::builder().ses(6).build().unwrap();
+    let data = patterned(60_000, 29);
+    let opts = PutOptions::default()
+        .with_params(cluster.params())
+        .with_stripe(1024)
+        .with_block_bytes(4096);
+    cluster.shim().put_bytes("/vo/keep.bin", &data, &opts).unwrap();
+
+    // Dedicated directory so the temp-litter scan below cannot see other
+    // tests' in-flight temp files.
+    let dir = tmpfile("keep-dir");
+    std::fs::create_dir_all(&dir).unwrap();
+    let out = dir.join("out.dat");
+    std::fs::write(&out, b"precious").unwrap();
+
+    // Bad lfn: destination untouched.
+    assert!(cluster.shim().get_file("/vo/nope", &out, &GetOptions::default()).is_err());
+    assert_eq!(std::fs::read(&out).unwrap(), b"precious");
+
+    // Mid-transfer failure (too many SEs down): destination untouched,
+    // no temp-file litter left beside it.
+    for i in 0..3 {
+        cluster.kill_se(&format!("SE-{i:02}"));
+    }
+    assert!(cluster.shim().get_file("/vo/keep.bin", &out, &GetOptions::default()).is_err());
+    assert_eq!(std::fs::read(&out).unwrap(), b"precious");
+    let litter = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .filter(|e| e.file_name().to_string_lossy().contains(".drs-part"))
+        .count();
+    assert_eq!(litter, 0, "temp file left behind");
+
+    // And a successful get replaces it atomically.
+    for i in 0..3 {
+        cluster.revive_se(&format!("SE-{i:02}"));
+    }
+    cluster.shim().get_file("/vo/keep.bin", &out, &GetOptions::default()).unwrap();
+    assert_eq!(std::fs::read(&out).unwrap(), data);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupt_header_on_one_chunk_does_not_kill_the_download() {
+    let cluster = TestCluster::builder().ses(6).build().unwrap();
+    let data = patterned(40_000, 31);
+    let opts = PutOptions::default()
+        .with_params(cluster.params())
+        .with_stripe(1024)
+        .with_block_bytes(4096);
+    cluster.shim().put_bytes("/vo/ch.bin", &data, &opts).unwrap();
+
+    // Corrupt chunk 0's sealed header in place (flip its `k` field so it
+    // still parses but disagrees with the file's geometry).
+    let pfn = format!("/vo/ch.bin/{}", chunk_name("ch.bin", 0, 6));
+    for se in cluster.registry().all() {
+        if se.exists(&pfn) {
+            let mut wire = se.get(&pfn).unwrap();
+            wire[6] ^= 0x01;
+            se.put(&pfn, &wire).unwrap();
+            break;
+        }
+    }
+    // The header probe must skip the corrupt chunk and the pipeline must
+    // fail over to a spare — the file still reads.
+    let got = cluster.shim().get_bytes("/vo/ch.bin", &GetOptions::default()).unwrap();
+    assert_eq!(got, data);
+}
+
+#[test]
+fn stream_metrics_are_recorded() {
+    let cluster = TestCluster::builder().ses(5).build().unwrap();
+    let before = drs::metrics::global().counter("transfer.stream.blocks");
+    let opts = PutOptions::default()
+        .with_params(cluster.params())
+        .with_stripe(512)
+        .with_block_bytes(1024);
+    cluster.shim().put_bytes("/vo/m.bin", &patterned(50_000, 23), &opts).unwrap();
+    let after = drs::metrics::global().counter("transfer.stream.blocks");
+    assert!(after > before, "transfer.stream.blocks not recorded");
+}
