@@ -40,6 +40,17 @@ echo "== catalogue journal recovery tests (crash-consistency gate) =="
 # by name, even if the tier-1 invocation is ever narrowed.
 cargo test -q --test catalog_journal
 
+echo "== observability gate (tracing, exporter, status endpoint) =="
+# The obs suite gates the operational surface: JSONL sink round-trip and
+# rotation, Prometheus exporter output over the live registry, the HTTP
+# status endpoint (standalone and embedded in the daemon), and the
+# end-to-end trace-nesting / lane-coverage acceptance criteria. Named
+# explicitly so a narrowed tier-1 invocation can never silently drop it.
+cargo test -q --test obs
+# Smoke-run the overhead bench: it asserts tracing stays off the hot
+# path (disabled ≈ free, enabled within loose bounds) on a small file.
+cargo bench --bench obs_overhead -- --quick
+
 echo "== docs (deny warnings, missing_docs enforced) =="
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 

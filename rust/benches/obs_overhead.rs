@@ -1,0 +1,120 @@
+//! Tracing overhead guard: the data plane must cost (almost) nothing
+//! extra with the tracer disabled, and stay cheap with it enabled.
+//!
+//! Three modes over the same in-memory cluster and payload:
+//!
+//! - `off`   — tracer disabled: the per-span cost is one relaxed atomic
+//!             load and the detail closures never run.
+//! - `ring`  — tracer enabled, spans recorded to the in-process ring
+//!             buffer only.
+//! - `sink`  — tracer enabled with the JSONL sink attached: recording
+//!             threads serialize and hand lines to the writer thread.
+//!
+//! The MemSe path is CPU-bound (GF arithmetic dominates), so span
+//! bookkeeping should vanish in the noise; the gates are deliberately
+//! loose (1.5×/2× on best-of-N walls) to stay robust on shared runners
+//! while still failing fast if tracing ever lands on the per-stripe
+//! hot path.
+
+use std::time::Instant;
+
+use drs::dfm::{GetOptions, PutOptions, TestCluster};
+use drs::ec::EcParams;
+use drs::obs::{tracer, DEFAULT_BUFFER_SPANS};
+use drs::util::prng::Rng;
+use drs::util::{fmt_bytes, fmt_secs};
+
+const STRIPE: usize = 64 * 1024;
+const BLOCK: usize = 1024 * 1024;
+
+/// Best-of-`rounds` put+get wall over a fresh lfn per round.
+fn measure(cluster: &TestCluster, data: &[u8], rounds: usize, tag: &str) -> f64 {
+    let popts = PutOptions::default()
+        .with_params(cluster.params())
+        .with_stripe(STRIPE)
+        .with_block_bytes(BLOCK)
+        .with_workers(4);
+    let gopts = GetOptions::default().with_block_bytes(BLOCK).with_workers(4);
+    let mut best = f64::INFINITY;
+    for round in 0..rounds {
+        let lfn = format!("/bench/obs/{tag}-{round}.bin");
+        let t0 = Instant::now();
+        cluster.shim().put_bytes(&lfn, data, &popts).unwrap();
+        let back = cluster.shim().get_bytes(&lfn, &gopts).unwrap();
+        let wall = t0.elapsed().as_secs_f64();
+        assert_eq!(back.len(), data.len());
+        cluster.shim().rm(&lfn).unwrap();
+        best = best.min(wall);
+    }
+    best
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let (size, rounds) = if quick { (16usize << 20, 3) } else { (64usize << 20, 5) };
+    let cluster = TestCluster::builder()
+        .ses(6)
+        .ec(EcParams::new(4, 2).unwrap())
+        .build()
+        .unwrap();
+    let mut data = vec![0u8; size];
+    Rng::new(0x0B5).fill_bytes(&mut data);
+    println!(
+        "== obs overhead: {} put+get, best of {rounds}, EC 4+2, {} blocks ==",
+        fmt_bytes(size as u64),
+        fmt_bytes(BLOCK as u64)
+    );
+
+    let t = tracer();
+    t.set_enabled(false);
+    t.clear();
+    let off = measure(&cluster, &data, rounds, "off");
+    assert!(t.recent(8).is_empty(), "disabled tracer recorded spans");
+    println!("  off  : {} [{:.1} MB/s]", fmt_secs(off), size as f64 / off / 1e6);
+
+    t.set_enabled(true);
+    let ring = measure(&cluster, &data, rounds, "ring");
+    let ring_spans = t.recent(DEFAULT_BUFFER_SPANS).len();
+    println!(
+        "  ring : {} [{:.1} MB/s] ({ring_spans} spans buffered)",
+        fmt_secs(ring),
+        size as f64 / ring / 1e6
+    );
+    assert!(ring_spans > 0, "enabled tracer recorded nothing");
+
+    let dir = std::env::temp_dir().join(format!("drs-obs-bench-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let log = dir.join("obs_trace.jsonl");
+    t.attach_sink(&log, 256 << 20).unwrap();
+    let sink = measure(&cluster, &data, rounds, "sink");
+    t.flush();
+    let log_bytes = std::fs::metadata(&log).map(|m| m.len()).unwrap_or(0);
+    println!(
+        "  sink : {} [{:.1} MB/s] ({} of JSONL written)",
+        fmt_secs(sink),
+        size as f64 / sink / 1e6,
+        fmt_bytes(log_bytes)
+    );
+    assert!(log_bytes > 0, "sink mode wrote no trace lines");
+
+    t.detach_sink();
+    t.set_enabled(false);
+    t.clear();
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // The guards: ring tracing within 1.5× of off, sink within 2×.
+    println!(
+        "  ratio: ring/off {:.2}x, sink/off {:.2}x",
+        ring / off,
+        sink / off
+    );
+    assert!(
+        ring <= off * 1.5,
+        "ring tracing overhead too high: {ring:.3}s vs {off:.3}s disabled"
+    );
+    assert!(
+        sink <= off * 2.0,
+        "sink tracing overhead too high: {sink:.3}s vs {off:.3}s disabled"
+    );
+    println!("obs-overhead bench done");
+}

@@ -482,6 +482,14 @@ impl ShardJournal {
     /// (every [`JournalConfig::checkpoint_ops`] appends) snapshots a
     /// state consistent with the journal position.
     pub fn append(&mut self, op: &CatalogOp, shard: &Dfc) -> Result<()> {
+        // Journal spans are parentless roots (like SE spans): appends are
+        // driven from under shard locks with no view of the caller's
+        // trace, and `drs trace summary` aggregates them by name anyway.
+        let sp = crate::obs::tracer().span(crate::obs::SpanRef::NONE, "journal-append");
+        sp.finish(self.append_steps(op, shard))
+    }
+
+    fn append_steps(&mut self, op: &CatalogOp, shard: &Dfc) -> Result<()> {
         if self.poisoned {
             return Err(Error::Catalog(
                 "shard journal poisoned by an earlier failed write; \
@@ -536,6 +544,15 @@ impl ShardJournal {
     /// [`ShardJournal::gc`]. Same locking contract as
     /// [`ShardJournal::append`].
     pub fn checkpoint(&mut self, shard: &Dfc) -> Result<()> {
+        let sp = crate::obs::tracer().span_with(
+            crate::obs::SpanRef::NONE,
+            "journal-checkpoint",
+            || format!("seg {}", self.seg_index + 1),
+        );
+        sp.finish(self.checkpoint_steps(shard))
+    }
+
+    fn checkpoint_steps(&mut self, shard: &Dfc) -> Result<()> {
         // Serialized by hand so the payload starts with
         // [`CHECKPOINT_PREFIX`] (object order would put `dfc` first).
         let payload = format!("{{\"op\":\"checkpoint\",\"dfc\":{}}}", shard.to_json());
@@ -573,6 +590,15 @@ impl ShardJournal {
     /// reclaimed (the budget may overshoot by at most one segment).
     /// Returns (segments, bytes) removed.
     pub fn gc(&mut self, budget_bytes: u64) -> Result<(u64, u64)> {
+        let sp = crate::obs::tracer().span_with(
+            crate::obs::SpanRef::NONE,
+            "journal-gc",
+            || format!("budget {budget_bytes} B"),
+        );
+        sp.finish(self.gc_steps(budget_bytes))
+    }
+
+    fn gc_steps(&mut self, budget_bytes: u64) -> Result<(u64, u64)> {
         let Some(ckpt) = self.last_ckpt_seg else { return Ok((0, 0)) };
         let (mut segs, mut bytes) = (0u64, 0u64);
         for n in list_segments(&self.dir)? {

@@ -9,8 +9,8 @@ USAGE:
 
 COMMANDS:
     init [--ses N] [--k K] [--m M] [--vo VO]   create a workspace
-    put <local-file> <lfn> [--workers W] [--k K] [--m M] [--retry]
-    get <lfn> <local-file> [--workers W] [--retry]
+    put <local-file> <lfn> [--workers W] [--k K] [--m M] [--retry] [--stats]
+    get <lfn> <local-file> [--workers W] [--retry] [--stats]
     ls [path]
     stat <lfn>
     repair <lfn> [--workers W]
@@ -25,14 +25,26 @@ COMMANDS:
     drain <se-name> [--workers W]              evacuate all chunks off an SE
     maintain [--root PATH] [--interval-s S] [--slice N] [--deep-every N]
              [--max-files N] [--max-mb MB] [--workers W] [--ticks N]
+             [--status-addr HOST:PORT]
                                                long-running maintenance daemon:
                                                incremental scrub + budgeted
                                                repair + journal GC on a cadence;
                                                writes maintain_status.json;
+                                               --status-addr serves it live over
+                                               HTTP (also /metrics, /traces/recent);
                                                SIGINT/SIGTERM (or --ticks) ends
                                                the run after the in-flight pass
     maintain --stop                            ask a running daemon to stop
                                                cleanly (writes maintain.stop)
+    trace tail [--n N]                         last N spans from the workspace
+                                               trace log (obs_trace.jsonl)
+    trace summary [--n N]                      per-stage latency breakdown
+                                               (count/mean/p99/total) over the
+                                               last N spans of the trace log
+    status [--serve HOST:PORT]                 print maintain_status.json and a
+                                               metrics snapshot; --serve blocks,
+                                               serving /status, /metrics and
+                                               /traces/recent over HTTP
     rm <lfn>
     verify <lfn>
     read <lfn> <offset> <len>
@@ -64,8 +76,8 @@ pub struct Cli {
 #[allow(missing_docs)] // variants mirror USAGE one-to-one
 pub enum Command {
     Init { ses: usize, k: usize, m: usize, vo: String },
-    Put { local: String, lfn: String, workers: Option<usize>, k: Option<usize>, m: Option<usize>, retry: bool },
-    Get { lfn: String, local: String, workers: Option<usize>, retry: bool },
+    Put { local: String, lfn: String, workers: Option<usize>, k: Option<usize>, m: Option<usize>, retry: bool, stats: bool },
+    Get { lfn: String, local: String, workers: Option<usize>, retry: bool, stats: bool },
     Ls { path: String },
     Stat { lfn: String },
     Repair { lfn: String, workers: Option<usize> },
@@ -88,7 +100,10 @@ pub enum Command {
         workers: Option<usize>,
         ticks: Option<u64>,
         stop: bool,
+        status_addr: Option<String>,
     },
+    Trace { summary: bool, n: usize },
+    Status { serve: Option<String> },
     Rm { lfn: String },
     Verify { lfn: String },
     Read { lfn: String, offset: u64, len: usize },
@@ -176,6 +191,7 @@ pub fn parse_args(argv: Vec<String>) -> Result<Cli, String> {
             let k = args.opt_parse("--k")?;
             let m = args.opt_parse("--m")?;
             let retry = args.opt_flag("--retry");
+            let stats = args.opt_flag("--stats");
             Command::Put {
                 local: args.required("local-file")?,
                 lfn: args.required("lfn")?,
@@ -183,16 +199,19 @@ pub fn parse_args(argv: Vec<String>) -> Result<Cli, String> {
                 k,
                 m,
                 retry,
+                stats,
             }
         }
         "get" => {
             let workers = args.opt_parse("--workers")?;
             let retry = args.opt_flag("--retry");
+            let stats = args.opt_flag("--stats");
             Command::Get {
                 lfn: args.required("lfn")?,
                 local: args.required("local-file")?,
                 workers,
                 retry,
+                stats,
             }
         }
         "ls" => Command::Ls { path: args.next().unwrap_or_else(|| "/".into()) },
@@ -228,7 +247,17 @@ pub fn parse_args(argv: Vec<String>) -> Result<Cli, String> {
             workers: args.opt_parse("--workers")?,
             ticks: args.opt_parse("--ticks")?,
             stop: args.opt_flag("--stop"),
+            status_addr: args.opt_value("--status-addr")?,
         },
+        "trace" => {
+            let n = args.opt_parse("--n")?.unwrap_or(200);
+            match args.required("trace-subcommand")?.as_str() {
+                "tail" => Command::Trace { summary: false, n },
+                "summary" => Command::Trace { summary: true, n },
+                other => return Err(format!("unknown trace subcommand `{other}`")),
+            }
+        }
+        "status" => Command::Status { serve: args.opt_value("--serve")? },
         "rm" => Command::Rm { lfn: args.required("lfn")? },
         "verify" => Command::Verify { lfn: args.required("lfn")? },
         "read" => Command::Read {
@@ -281,9 +310,18 @@ mod tests {
                 workers: Some(5),
                 k: Some(8),
                 m: Some(2),
-                retry: true
+                retry: true,
+                stats: false
             }
         );
+        assert!(matches!(
+            p("put f.dat /vo/f.dat --stats").unwrap().command,
+            Command::Put { stats: true, .. }
+        ));
+        assert!(matches!(
+            p("get /vo/f.dat f.dat --stats").unwrap().command,
+            Command::Get { stats: true, .. }
+        ));
     }
 
     #[test]
@@ -367,11 +405,13 @@ mod tests {
                 workers: None,
                 ticks: None,
                 stop: false,
+                status_addr: None,
             }
         );
         assert_eq!(
             p("maintain --root /vo --interval-s 0.5 --slice 16 --deep-every 3 \
-               --max-files 4 --max-mb 100 --workers 2 --ticks 10")
+               --max-files 4 --max-mb 100 --workers 2 --ticks 10 \
+               --status-addr 127.0.0.1:9632")
             .unwrap()
             .command,
             Command::Maintain {
@@ -384,6 +424,7 @@ mod tests {
                 workers: Some(2),
                 ticks: Some(10),
                 stop: false,
+                status_addr: Some("127.0.0.1:9632".into()),
             }
         );
         assert!(matches!(
@@ -393,6 +434,31 @@ mod tests {
         assert!(p("maintain --interval-s soon").is_err());
         assert!(p("maintain --ticks forever").is_err());
         assert!(USAGE.contains("maintain --stop"));
+    }
+
+    #[test]
+    fn trace_and_status_commands() {
+        assert_eq!(
+            p("trace tail").unwrap().command,
+            Command::Trace { summary: false, n: 200 }
+        );
+        assert_eq!(
+            p("trace summary --n 50").unwrap().command,
+            Command::Trace { summary: true, n: 50 }
+        );
+        assert!(p("trace").is_err());
+        assert!(p("trace dance").is_err());
+        assert!(p("trace tail --n lots").is_err());
+
+        assert_eq!(p("status").unwrap().command, Command::Status { serve: None });
+        assert_eq!(
+            p("status --serve 0.0.0.0:8080").unwrap().command,
+            Command::Status { serve: Some("0.0.0.0:8080".into()) }
+        );
+        assert!(p("status --serve").is_err());
+        for verb in ["trace tail", "trace summary", "status", "--status-addr", "--stats"] {
+            assert!(USAGE.contains(verb), "usage must document `{verb}`");
+        }
     }
 
     #[test]

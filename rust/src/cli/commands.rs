@@ -7,8 +7,11 @@ use crate::dfm::{GetOptions, PutOptions};
 use crate::ec::EcParams;
 use crate::maintenance::daemon::{self, Daemon, DaemonOptions, StopToken};
 use crate::maintenance::{DrainOptions, Maintainer, RepairBudget, ScrubOptions};
+use crate::obs::http::{StatusFn, StatusServer};
+use crate::obs::summary::{self as trace_summary, TraceEvent};
 use crate::sim::durability;
 use crate::transfer::RetryPolicy;
+use crate::util::json::Json;
 use crate::util::{fmt_bytes, fmt_secs};
 use crate::{Error, Result};
 
@@ -49,6 +52,51 @@ fn verify_chunks(ws: &Workspace, lfn: &str) -> Result<(usize, usize)> {
     Ok((ok, bad))
 }
 
+/// Print the `--stats` per-stage breakdown for a finished transfer:
+/// the spans of its trace, pulled from the in-process ring buffer.
+/// Tracing off (trace id 0) prints a hint instead.
+fn print_transfer_breakdown(stats: &crate::dfm::StreamStats) {
+    if stats.trace_id == 0 {
+        println!(
+            "  (no trace: set `obs_trace` in drs.json or DRS_OBS_TRACE=1 \
+             for a per-stage breakdown)"
+        );
+        return;
+    }
+    let events: Vec<TraceEvent> = crate::obs::tracer()
+        .recent_for(stats.trace_id)
+        .iter()
+        .map(TraceEvent::from_record)
+        .collect();
+    print!("{}", trace_summary::render_trace_breakdown(&events));
+}
+
+/// Read the workspace's trace log (rotated file first, so events stay
+/// in chronological order) and keep the newest `n` events.
+fn load_trace_events(ws: &Workspace, n: usize) -> Result<Vec<TraceEvent>> {
+    // Anything this process traced but not yet flushed should be
+    // visible to its own `trace` subcommand.
+    crate::obs::tracer().flush();
+    let log = ws.root.join("obs_trace.jsonl");
+    let mut text = std::fs::read_to_string(ws.root.join("obs_trace.jsonl.1")).unwrap_or_default();
+    match std::fs::read_to_string(&log) {
+        Ok(t) => text.push_str(&t),
+        Err(_) if !text.is_empty() => {}
+        Err(_) => {
+            return Err(Error::Config(format!(
+                "no trace log at {} — set `obs_trace` in drs.json (or DRS_OBS_TRACE=1) \
+                 and run some transfers first",
+                log.display()
+            )))
+        }
+    }
+    let mut events = trace_summary::parse_jsonl(&text);
+    if events.len() > n {
+        events.drain(..events.len() - n);
+    }
+    Ok(events)
+}
+
 /// Execute one parsed command against its workspace.
 pub fn dispatch(cli: &Cli) -> Result<()> {
     let root = Path::new(&cli.workspace);
@@ -78,7 +126,7 @@ pub fn dispatch(cli: &Cli) -> Result<()> {
             );
             ws.save()
         }
-        Command::Put { local, lfn, workers, k, m, retry } => {
+        Command::Put { local, lfn, workers, k, m, retry, stats: show_stats } => {
             let ws = Workspace::open(root)?;
             let size = std::fs::metadata(local)?.len();
             let params = match (k, m) {
@@ -119,9 +167,12 @@ pub fn dispatch(cli: &Cli) -> Result<()> {
             for (i, se) in placed.iter().enumerate() {
                 println!("  chunk {i:02} -> {se}");
             }
+            if *show_stats {
+                print_transfer_breakdown(&stats);
+            }
             ws.save()
         }
-        Command::Get { lfn, local, workers, retry } => {
+        Command::Get { lfn, local, workers, retry, stats: show_stats } => {
             let ws = Workspace::open(root)?;
             let opts = GetOptions::default()
                 .with_workers(workers.unwrap_or(ws.config.workers))
@@ -134,7 +185,7 @@ pub fn dispatch(cli: &Cli) -> Result<()> {
             let t0 = std::time::Instant::now();
             // Streamed: parallel same-offset block fetches across K
             // chunks, decoded straight into the destination file.
-            let (bytes, _stats) = ws.shim().get_file_stats(lfn, Path::new(local), &opts)?;
+            let (bytes, stats) = ws.shim().get_file_stats(lfn, Path::new(local), &opts)?;
             let dt = t0.elapsed().as_secs_f64();
             println!(
                 "got {} ({}) in {} [{:.1} MB/s], SHA-verified",
@@ -143,6 +194,9 @@ pub fn dispatch(cli: &Cli) -> Result<()> {
                 fmt_secs(dt),
                 bytes as f64 / dt.max(1e-9) / 1e6
             );
+            if *show_stats {
+                print_transfer_breakdown(&stats);
+            }
             Ok(())
         }
         Command::Ls { path } => {
@@ -332,6 +386,7 @@ pub fn dispatch(cli: &Cli) -> Result<()> {
             workers,
             ticks,
             stop,
+            status_addr,
         } => {
             let ws = Workspace::open(root)?;
             let stop_path = daemon::stop_file_path(&ws.root);
@@ -359,6 +414,10 @@ pub fn dispatch(cli: &Cli) -> Result<()> {
             let interval = interval_s.unwrap_or(cfg.maintain_scrub_interval_s).max(0.0);
             let interval_d = std::time::Duration::try_from_secs_f64(interval)
                 .map_err(|e| Error::Config(format!("bad maintain interval {interval}: {e}")))?;
+            // CLI flag wins; the `obs_status_addr` knob is the default.
+            let addr = status_addr.clone().or_else(|| {
+                (!cfg.obs_status_addr.is_empty()).then(|| cfg.obs_status_addr.clone())
+            });
             let opts = DaemonOptions::default()
                 .with_root(scrub_root.clone())
                 .with_interval(interval_d)
@@ -366,21 +425,79 @@ pub fn dispatch(cli: &Cli) -> Result<()> {
                 .with_deep_every(deep_every.unwrap_or(cfg.maintain_deep_every))
                 .with_budget(budget)
                 .with_workers(workers.unwrap_or(cfg.workers))
-                .with_max_ticks(*ticks);
+                .with_max_ticks(*ticks)
+                .with_status_addr(addr);
             let shim = ws.shim();
             let stop_token = StopToken::with_stop_file(&stop_path);
             stop_token.hook_signals();
             println!(
                 "maintenance daemon: root {} every {interval}s, slice {}, deep every {} \
-                 pass(es); status {}; stop with SIGINT/SIGTERM or `drs maintain --stop`",
+                 pass(es); status {}{}; stop with SIGINT/SIGTERM or `drs maintain --stop`",
                 opts.root,
                 opts.scrub_slice,
                 opts.deep_every,
-                daemon::status_path(&ws.root).display()
+                daemon::status_path(&ws.root).display(),
+                opts.status_addr
+                    .as_deref()
+                    .map(|a| format!(" + http://{a}/status"))
+                    .unwrap_or_default()
             );
             let report = Daemon::new(&shim, opts, ws.root.clone()).run(&stop_token)?;
             println!("daemon exit ({}): {}", report.stopped_by, report.summary());
             ws.save()
+        }
+        Command::Trace { summary: want_summary, n } => {
+            let ws = Workspace::open(root)?;
+            let events = load_trace_events(&ws, *n)?;
+            if *want_summary {
+                print!("{}", trace_summary::Summary::build(&events).render(&events));
+            } else {
+                for e in &events {
+                    println!("{}", e.render_line());
+                }
+            }
+            Ok(())
+        }
+        Command::Status { serve } => {
+            let ws = Workspace::open(root)?;
+            let status_file = daemon::status_path(&ws.root);
+            match serve {
+                Some(addr) => {
+                    // Serve the on-disk daemon status, re-read per
+                    // request: this process is a window onto a daemon
+                    // running elsewhere, so nothing is cached.
+                    let path = status_file.clone();
+                    let status: StatusFn = std::sync::Arc::new(move || {
+                        std::fs::read_to_string(&path)
+                            .ok()
+                            .and_then(|t| Json::parse(&t).ok())
+                            .unwrap_or_else(|| {
+                                Json::obj(vec![("phase", Json::str("no-daemon"))])
+                            })
+                    });
+                    let server = StatusServer::serve(addr, status)?;
+                    println!(
+                        "serving http://{} (GET /status, /metrics, /traces/recent); \
+                         Ctrl-C to quit",
+                        server.local_addr()
+                    );
+                    // The endpoint *is* the command; block until killed.
+                    loop {
+                        std::thread::sleep(std::time::Duration::from_secs(60));
+                    }
+                }
+                None => {
+                    match std::fs::read_to_string(&status_file) {
+                        Ok(text) => println!("{text}"),
+                        Err(_) => println!(
+                            "(no {} yet — is `drs maintain` running?)",
+                            status_file.display()
+                        ),
+                    }
+                    print!("{}", crate::metrics::global().report());
+                    Ok(())
+                }
+            }
         }
         Command::Rm { lfn } => {
             let ws = Workspace::open(root)?;

@@ -17,6 +17,9 @@
 //!                                every tick
 //!   maintain.stop                present while a daemon stop is pending
 //!                                (`drs maintain --stop`)
+//!   obs_trace.jsonl              structured span log, appended while the
+//!                                `obs_trace` knob is on; rotated to
+//!                                obs_trace.jsonl.1 at obs_trace_file_bytes
 //! ```
 //!
 //! Opening a pre-journal workspace (a `catalog.json` and no `journal/`)
@@ -71,6 +74,14 @@ impl Workspace {
     /// fresh journal on first open).
     pub fn open(root: &Path) -> Result<Self> {
         let config = Config::load(&root.join("drs.json"))?;
+        if config.obs_trace {
+            // Wire tracing before the catalogue opens so journal spans
+            // from recovery/migration land in the trace too.
+            let t = crate::obs::tracer();
+            t.set_buffer(config.obs_trace_buffer);
+            t.attach_sink(&root.join("obs_trace.jsonl"), config.obs_trace_file_bytes)?;
+            t.set_enabled(true);
+        }
         let journal_dir = root.join("journal");
         let legacy = root.join("catalog.json");
         if !journal_dir.is_dir() && legacy.exists() {

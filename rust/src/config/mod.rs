@@ -21,6 +21,10 @@
 //!   "maintain_deep_every": 4,
 //!   "maintain_repair_budget_files": 0,
 //!   "maintain_repair_budget_mb": 0,
+//!   "obs_trace": false,
+//!   "obs_trace_buffer": 4096,
+//!   "obs_trace_file_bytes": 4194304,
+//!   "obs_status_addr": "",
 //!   "ses": [
 //!     {"name": "UKI-GLASGOW", "region": "uk"},
 //!     {"name": "UKI-IC", "region": "uk"}
@@ -142,6 +146,19 @@ pub struct Config {
     /// `drs maintain`: per-tick repair budget, max rebuilt megabytes
     /// (0 = unlimited).
     pub maintain_repair_budget_mb: u64,
+    /// Enable transfer tracing ([`crate::obs`]): spans are recorded to
+    /// the in-memory ring and appended to `<workspace>/obs_trace.jsonl`.
+    /// Off by default — the disabled path is a single atomic load.
+    pub obs_trace: bool,
+    /// Capacity (spans) of the in-memory trace ring buffer.
+    pub obs_trace_buffer: usize,
+    /// Rotate `obs_trace.jsonl` once it exceeds this many bytes (the
+    /// previous log is kept as `obs_trace.jsonl.1`).
+    pub obs_trace_file_bytes: u64,
+    /// Default address for the live HTTP status endpoint (`drs maintain
+    /// --status-addr`, `drs status --serve`); empty = no endpoint unless
+    /// given on the command line.
+    pub obs_status_addr: String,
 }
 
 impl Default for Config {
@@ -169,6 +186,10 @@ impl Default for Config {
             maintain_deep_every: 4,
             maintain_repair_budget_files: 0,
             maintain_repair_budget_mb: 0,
+            obs_trace: false,
+            obs_trace_buffer: crate::obs::DEFAULT_BUFFER_SPANS,
+            obs_trace_file_bytes: 4 << 20,
+            obs_status_addr: String::new(),
         }
     }
 }
@@ -223,6 +244,18 @@ impl Config {
         }
         if let Some(n) = j.get("maintain_repair_budget_mb").and_then(Json::as_u64) {
             cfg.maintain_repair_budget_mb = n;
+        }
+        if let Some(b) = j.get("obs_trace").and_then(Json::as_bool) {
+            cfg.obs_trace = b;
+        }
+        if let Some(n) = j.get("obs_trace_buffer").and_then(Json::as_u64) {
+            cfg.obs_trace_buffer = (n as usize).max(1);
+        }
+        if let Some(n) = j.get("obs_trace_file_bytes").and_then(Json::as_u64) {
+            cfg.obs_trace_file_bytes = n.max(1);
+        }
+        if let Some(a) = j.get("obs_status_addr").and_then(Json::as_str) {
+            cfg.obs_status_addr = a.to_string();
         }
         if let Some(ses) = j.get("ses").and_then(Json::as_arr) {
             cfg.ses = ses
@@ -289,6 +322,10 @@ impl Config {
                 Json::num(self.maintain_repair_budget_files as f64),
             ),
             ("maintain_repair_budget_mb", Json::num(self.maintain_repair_budget_mb as f64)),
+            ("obs_trace", Json::Bool(self.obs_trace)),
+            ("obs_trace_buffer", Json::num(self.obs_trace_buffer as f64)),
+            ("obs_trace_file_bytes", Json::num(self.obs_trace_file_bytes as f64)),
+            ("obs_status_addr", Json::str(self.obs_status_addr.clone())),
             (
                 "ses",
                 Json::Arr(
@@ -346,8 +383,27 @@ impl Config {
     /// `DRS_JOURNAL_SEGMENT_BYTES`, `DRS_JOURNAL_CHECKPOINT_OPS`,
     /// `DRS_MAINTAIN_SCRUB_INTERVAL_S`, `DRS_MAINTAIN_SCRUB_SLICE`,
     /// `DRS_MAINTAIN_DEEP_EVERY`, `DRS_MAINTAIN_REPAIR_BUDGET_FILES`,
-    /// `DRS_MAINTAIN_REPAIR_BUDGET_MB`.
+    /// `DRS_MAINTAIN_REPAIR_BUDGET_MB`, `DRS_OBS_TRACE`,
+    /// `DRS_OBS_TRACE_BUFFER`, `DRS_OBS_TRACE_FILE_BYTES`,
+    /// `DRS_OBS_STATUS_ADDR`.
     pub fn apply_env(&mut self) {
+        if let Ok(v) = std::env::var("DRS_OBS_TRACE") {
+            // Accept the usual boolean spellings; anything else is off.
+            self.obs_trace = matches!(v.as_str(), "1" | "true" | "yes" | "on");
+        }
+        if let Ok(n) = std::env::var("DRS_OBS_TRACE_BUFFER") {
+            if let Ok(n) = n.parse::<usize>() {
+                self.obs_trace_buffer = n.max(1);
+            }
+        }
+        if let Ok(n) = std::env::var("DRS_OBS_TRACE_FILE_BYTES") {
+            if let Ok(n) = n.parse::<u64>() {
+                self.obs_trace_file_bytes = n.max(1);
+            }
+        }
+        if let Ok(a) = std::env::var("DRS_OBS_STATUS_ADDR") {
+            self.obs_status_addr = a;
+        }
         if let Ok(s) = std::env::var("DRS_MAINTAIN_SCRUB_INTERVAL_S") {
             if let Ok(s) = s.parse::<f64>() {
                 self.maintain_scrub_interval_s = s.max(0.0);
@@ -543,6 +599,47 @@ mod tests {
         assert_eq!(c.maintain_deep_every, 2);
         assert_eq!(c.maintain_repair_budget_files, 9);
         assert_eq!(c.maintain_repair_budget_mb, 77);
+    }
+
+    #[test]
+    fn obs_knobs_roundtrip_env_and_defaults() {
+        // Old configs (no obs_* keys) get the defaults: tracing off.
+        let c = Config::from_json(&Json::parse(r#"{"vo":"demo"}"#).unwrap()).unwrap();
+        assert!(!c.obs_trace);
+        assert_eq!(c.obs_trace_buffer, crate::obs::DEFAULT_BUFFER_SPANS);
+        assert_eq!(c.obs_trace_file_bytes, 4 << 20);
+        assert_eq!(c.obs_status_addr, "");
+
+        let mut c = Config::default();
+        c.obs_trace = true;
+        c.obs_trace_buffer = 512;
+        c.obs_trace_file_bytes = 1 << 20;
+        c.obs_status_addr = "127.0.0.1:9632".into();
+        let back = Config::from_json(&c.to_json()).unwrap();
+        assert!(back.obs_trace);
+        assert_eq!(back.obs_trace_buffer, 512);
+        assert_eq!(back.obs_trace_file_bytes, 1 << 20);
+        assert_eq!(back.obs_status_addr, "127.0.0.1:9632");
+
+        let mut c = Config::default();
+        std::env::set_var("DRS_OBS_TRACE", "on");
+        std::env::set_var("DRS_OBS_TRACE_BUFFER", "64");
+        std::env::set_var("DRS_OBS_TRACE_FILE_BYTES", "4096");
+        std::env::set_var("DRS_OBS_STATUS_ADDR", "0.0.0.0:8080");
+        c.apply_env();
+        std::env::remove_var("DRS_OBS_TRACE");
+        std::env::remove_var("DRS_OBS_TRACE_BUFFER");
+        std::env::remove_var("DRS_OBS_TRACE_FILE_BYTES");
+        std::env::remove_var("DRS_OBS_STATUS_ADDR");
+        assert!(c.obs_trace);
+        assert_eq!(c.obs_trace_buffer, 64);
+        assert_eq!(c.obs_trace_file_bytes, 4096);
+        assert_eq!(c.obs_status_addr, "0.0.0.0:8080");
+        // Unrecognized boolean spellings turn tracing off, not on.
+        std::env::set_var("DRS_OBS_TRACE", "maybe");
+        c.apply_env();
+        std::env::remove_var("DRS_OBS_TRACE");
+        assert!(!c.obs_trace);
     }
 
     #[test]

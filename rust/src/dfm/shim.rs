@@ -15,6 +15,7 @@ use std::sync::Arc;
 
 use crate::catalog::{MetaKeyStyle, MetaValue, ShardedDfc};
 use crate::ec::{chunk_name, Codec, EcBackend, EcParams, PureRustBackend};
+use crate::obs::{tracer, SpanRef};
 use crate::placement::PlacementPolicy;
 use crate::se::{SeInfo, SeRegistry, StorageElement};
 use crate::{Error, Result};
@@ -175,13 +176,31 @@ impl EcShim {
     }
 
     /// The shared upload pipeline behind [`EcShim::put_bytes`] and
-    /// [`EcShim::put_file`].
+    /// [`EcShim::put_file`]: opens the transfer's root `put` trace span
+    /// (every pipeline-stage span nests under it), then runs the steps.
     fn put_stream(
         &self,
         lfn: &str,
         source: &mut dyn BlockSource,
         digest: [u8; 32],
         opts: &PutOptions,
+    ) -> Result<(Vec<String>, StreamStats)> {
+        let root = tracer().span_with(SpanRef::NONE, "put", || lfn.to_string());
+        let trace = root.handle();
+        let res = self.put_stream_steps(lfn, source, digest, opts, trace);
+        root.finish(res).map(|(names, mut stats)| {
+            stats.trace_id = trace.trace;
+            (names, stats)
+        })
+    }
+
+    fn put_stream_steps(
+        &self,
+        lfn: &str,
+        source: &mut dyn BlockSource,
+        digest: [u8; 32],
+        opts: &PutOptions,
+        parent: SpanRef,
     ) -> Result<(Vec<String>, StreamStats)> {
         let infos = self.registry.vo_infos(&self.vo);
         if infos.is_empty() {
@@ -205,7 +224,7 @@ impl EcShim {
         let mut placed: Vec<Option<UploadOutcome>> = (0..n).map(|_| None).collect();
         let result = self.put_stream_body(
             lfn, &base, source, &codec, file_len, digest, assignment, opts, &gauge,
-            &mut placed,
+            &mut placed, parent,
         );
         match result {
             Ok(()) => {
@@ -246,6 +265,7 @@ impl EcShim {
         opts: &PutOptions,
         gauge: &Gauge,
         placed: &mut [Option<UploadOutcome>],
+        parent: SpanRef,
     ) -> Result<()> {
         let n = placed.len();
         let style = opts.key_style;
@@ -255,6 +275,7 @@ impl EcShim {
         self.dfc.set_meta(lfn, style.stripe_key(), MetaValue::Int(opts.stripe_b as i64))?;
         self.run_upload_passes(
             lfn, base, source, codec, file_len, digest, assignment, opts, gauge, placed,
+            parent,
         )?;
         // Register chunk files + replicas, in chunk-index order.
         for o in placed.iter().flatten() {
@@ -289,11 +310,13 @@ impl EcShim {
         opts: &PutOptions,
         gauge: &Gauge,
         placed: &mut [Option<UploadOutcome>],
+        parent: SpanRef,
     ) -> Result<()> {
         let infos = self.registry.vo_infos(&self.vo);
         let ses = self.registry.vo_vector(&self.vo);
         let n = placed.len();
-        let cfg = PipeCfg { workers: opts.workers.max(1), block_bytes: opts.block_bytes };
+        let cfg =
+            PipeCfg { workers: opts.workers.max(1), block_bytes: opts.block_bytes, parent };
         let mut current = assignment;
         let mut tried: Vec<Vec<usize>> = vec![Vec::new(); n];
         let mut pass = 0usize;
@@ -441,13 +464,30 @@ impl EcShim {
         sink: &mut dyn stream::BlockSink,
         opts: &GetOptions,
     ) -> Result<(u64, StreamStats)> {
+        let root = tracer().span_with(SpanRef::NONE, "get", || lfn.to_string());
+        let trace = root.handle();
+        let res = self.get_into_steps(lfn, sink, opts, trace);
+        root.finish(res).map(|(bytes, mut stats)| {
+            stats.trace_id = trace.trace;
+            (bytes, stats)
+        })
+    }
+
+    fn get_into_steps(
+        &self,
+        lfn: &str,
+        sink: &mut dyn stream::BlockSink,
+        opts: &GetOptions,
+        parent: SpanRef,
+    ) -> Result<(u64, StreamStats)> {
         let (params, stripe_b, chunk_files) = self.read_layout(lfn)?;
         let codec = Codec::with_backend(params, stripe_b, Arc::clone(&self.backend))?;
         let candidates: Vec<FetchChunk> = chunk_files
             .into_iter()
             .map(|(index, _name, replicas)| FetchChunk { index, replicas })
             .collect();
-        let cfg = PipeCfg { workers: opts.workers.max(1), block_bytes: opts.block_bytes };
+        let cfg =
+            PipeCfg { workers: opts.workers.max(1), block_bytes: opts.block_bytes, parent };
         let gauge = Gauge::default();
         let bytes = stream::download_pipeline(
             &self.registry,
@@ -607,6 +647,18 @@ impl EcShim {
         opts: &GetOptions,
         excluded: &[String],
     ) -> Result<usize> {
+        let root = tracer().span_with(SpanRef::NONE, "repair", || lfn.to_string());
+        let parent = root.handle();
+        root.finish(self.repair_excluding_steps(lfn, opts, excluded, parent))
+    }
+
+    fn repair_excluding_steps(
+        &self,
+        lfn: &str,
+        opts: &GetOptions,
+        excluded: &[String],
+        parent: SpanRef,
+    ) -> Result<usize> {
         let stat = self.stat(lfn)?;
         if !stat.readable() {
             return Err(Error::NotEnoughChunks {
@@ -703,7 +755,8 @@ impl EcShim {
                 Ok(RebuildTarget { index: *idx, sink: se.put_writer(pfn)? })
             })
             .collect::<Result<_>>()?;
-        let cfg = PipeCfg { workers: opts.workers.max(1), block_bytes: opts.block_bytes };
+        let cfg =
+            PipeCfg { workers: opts.workers.max(1), block_bytes: opts.block_bytes, parent };
         let gauge = Gauge::default();
         stream::rebuild_pipeline(
             &self.registry,

@@ -38,6 +38,7 @@ use crate::catalog::Replica;
 use crate::ec::chunk::HEADER_LEN;
 use crate::ec::stripe::{chunk_payload_len, segment_count};
 use crate::ec::{rebuild_matrix, ChunkHeader, Codec, EncodedBlock, StreamEncoder};
+use crate::obs::{tracer, SpanRef};
 use crate::se::{check_up, ChunkSink, SeRegistry, StorageElement};
 use crate::transfer::{PoolConfig, RetryPolicy, WorkPool};
 use crate::{Error, Result};
@@ -67,6 +68,10 @@ pub struct StreamStats {
     /// writes excluded); a positive count is direct evidence of
     /// encode/transfer overlap.
     pub overlapped_writes: u64,
+    /// The [`crate::obs`] trace id of this transfer's root span (0 when
+    /// tracing was disabled) — `drs put --stats` uses it to look up the
+    /// per-stage span breakdown for exactly this call.
+    pub trace_id: u64,
 }
 
 /// Shared accounting for one pipeline run.
@@ -109,6 +114,7 @@ impl Gauge {
             stalls: self.stalls.load(Ordering::Relaxed),
             peak_buffered_bytes: self.peak.load(Ordering::SeqCst),
             overlapped_writes: self.overlapped.load(Ordering::Relaxed),
+            trace_id: 0,
         }
     }
 }
@@ -412,13 +418,16 @@ impl BlockSink for FileSink {
 
 /// One ranged read against a chunk's replica list, walking replicas with
 /// the retry budget — the block-fetch primitive shared by the download
-/// pipeline, the rebuild pipeline and the federated reader.
+/// pipeline, the rebuild pipeline and the federated reader. Each failed
+/// attempt is recorded as a `retry` trace event under `parent` with the
+/// replica and cause, so stalls in a trace attribute to the SE at fault.
 pub(crate) fn read_replicas(
     registry: &SeRegistry,
     replicas: &[Replica],
     offset: u64,
     len: usize,
     retry: RetryPolicy,
+    parent: SpanRef,
 ) -> Result<Vec<u8>> {
     let mut attempts = 0usize;
     let mut last = Error::Transfer("no replicas registered".into());
@@ -428,10 +437,14 @@ pub(crate) fn read_replicas(
             match registry.get(&r.se) {
                 Some(se) => match se.get_range(&r.pfn, offset, len) {
                     Ok(bytes) => return Ok(bytes),
-                    Err(e) => last = e,
+                    Err(e) => {
+                        crate::transfer::retry::note_attempt(parent, &r.se, attempts, &e);
+                        last = e;
+                    }
                 },
                 None => {
                     last = Error::Config(format!("replica SE `{}` not in registry", r.se));
+                    crate::transfer::retry::note_attempt(parent, &r.se, attempts, &last);
                 }
             }
             if !retry.retries_left(attempts) {
@@ -455,6 +468,11 @@ pub(crate) struct PipeCfg {
     pub workers: usize,
     /// File bytes per pipeline block (`transfer_block_bytes`).
     pub block_bytes: usize,
+    /// The transfer's root span; every pipeline-stage span
+    /// (`encode-block`, `chunk-transfer`, `read_at`, `decode`, …) is
+    /// recorded as its child. [`SpanRef::NONE`] when tracing is off or
+    /// the caller did not open a root.
+    pub parent: SpanRef,
 }
 
 /// One chunk's upload destination for a pass.
@@ -478,6 +496,9 @@ struct ConsumerCtx<'a> {
     q: &'a BlockQueue<Vec<u8>>,
     sem: &'a Semaphore,
     gauge: &'a Gauge,
+    /// The transfer's root span (`PipeCfg::parent`); each consumer opens
+    /// a `chunk-transfer` child under it.
+    parent: SpanRef,
 }
 
 /// Drain one chunk's queue into its SE sink, hashing the wire bytes.
@@ -489,13 +510,17 @@ fn consume_chunk(
     pfn: &str,
     header: &[u8],
 ) -> Result<(u64, String)> {
-    let res = consume_chunk_steps(ctx, se, pfn, header);
+    let sp = tracer().span_with(ctx.parent, "chunk-transfer", || {
+        format!("{} {pfn}", se.name())
+    });
+    let lane = sp.handle();
+    let res = consume_chunk_steps(ctx, se, pfn, header, lane);
     if res.is_err() {
         for item in ctx.q.kill() {
             ctx.gauge.sub(item.len() as u64);
         }
     }
-    res
+    sp.finish(res)
 }
 
 fn consume_chunk_steps(
@@ -503,36 +528,55 @@ fn consume_chunk_steps(
     se: &Arc<dyn StorageElement>,
     pfn: &str,
     header: &[u8],
+    lane: SpanRef,
 ) -> Result<(u64, String)> {
     // Availability is re-checked *here*, inside the transfer closure, and
     // again per block: an SE taken down between job build and execution
     // (or mid-upload) yields a clean per-chunk `Error::SeDown` instead of
     // a backend-specific I/O error.
     check_up(&**se)?;
-    let mut sink = se.put_writer(pfn)?;
+    // Opening the sink pays the per-transfer channel setup (SRM
+    // negotiation in the paper's testbed), so it gets its own stage
+    // span — otherwise lane coverage under-reports on high-latency SEs.
+    let mut sink = {
+        let sp = tracer().span_with(lane, "chunk-open", || se.name().to_string());
+        sp.finish(se.put_writer(pfn))?
+    };
     let mut hasher = crate::util::sha256::Sha256::new();
     let mut size = 0u64;
     {
         // Header write: deliberately NOT counted in `overlapped_writes` —
         // headers go out before any block exists, so counting them would
         // make the overlap metric (and the CI gates on it) vacuous.
+        let mut sp = tracer().span_with(lane, "chunk-write", || "header".into());
         let _permit = ctx.sem.acquire();
         if let Err(e) = sink.write_block(header) {
+            sp.fail();
             sink.abort();
             return Err(e);
         }
     }
     hasher.update(header);
     size += header.len() as u64;
-    while let Some(block) = ctx.q.pop() {
+    loop {
+        let popped = {
+            let _sp = tracer().span(lane, "chunk-queue-wait");
+            ctx.q.pop()
+        };
+        let Some(block) = popped else { break };
         let blen = block.len() as u64;
         let res = {
+            let mut sp = tracer().span_with(lane, "chunk-write", || format!("{blen} B"));
             let _permit = ctx.sem.acquire();
             ctx.gauge.note_write();
-            match check_up(&**se) {
+            let r = match check_up(&**se) {
                 Ok(()) => sink.write_block(&block),
                 Err(e) => Err(e),
+            };
+            if r.is_err() {
+                sp.fail();
             }
+            r
         };
         ctx.gauge.sub(blen);
         match res {
@@ -552,8 +596,9 @@ fn consume_chunk_steps(
         return Err(Error::Transfer("upload aborted: encode stream failed".into()));
     }
     {
+        let sp = tracer().span(lane, "commit");
         let _permit = ctx.sem.acquire();
-        sink.commit()?;
+        sp.finish(sink.commit())?;
     }
     Ok((size, crate::util::hexfmt::encode(&hasher.finalize())))
 }
@@ -581,12 +626,16 @@ fn dispatch_block(
 }
 
 /// The encoder loop body: read → encode → fan out to the chunk queues.
+/// Each `encoder.push`/`finish` call (read+encode of one pipeline block)
+/// is traced as an `encode-block` span under `parent`; queue fan-out is
+/// outside the span, so encode time and backpressure stay separable.
 fn feed_loop(
     source: &mut dyn BlockSource,
     mut encoder: StreamEncoder,
     queues: &[BlockQueue<Vec<u8>>],
     slot_of: &BTreeMap<usize, usize>,
     gauge: &Gauge,
+    parent: SpanRef,
 ) -> Result<()> {
     let mut alive = vec![true; queues.len()];
     let mut buf = vec![0u8; encoder.block_input_bytes()];
@@ -595,14 +644,22 @@ fn feed_loop(
             return Ok(()); // every consumer failed; stop encoding
         }
         let got = source.read_block(&mut buf)?;
-        for b in encoder.push(&buf[..got])? {
+        let blocks = {
+            let sp = tracer().span_with(parent, "encode-block", || format!("{got} B in"));
+            sp.finish(encoder.push(&buf[..got]))?
+        };
+        for b in blocks {
             dispatch_block(b, queues, slot_of, &mut alive, gauge);
         }
         if got < buf.len() {
             break;
         }
     }
-    if let Some(b) = encoder.finish()? {
+    let tail = {
+        let sp = tracer().span_with(parent, "encode-block", || "finish".into());
+        sp.finish(encoder.finish())?
+    };
+    if let Some(b) = tail {
         dispatch_block(b, queues, slot_of, &mut alive, gauge);
     }
     Ok(())
@@ -616,8 +673,9 @@ fn encode_feed(
     queues: &[BlockQueue<Vec<u8>>],
     slot_of: &BTreeMap<usize, usize>,
     gauge: &Gauge,
+    parent: SpanRef,
 ) -> Result<()> {
-    let res = feed_loop(source, encoder, queues, slot_of, gauge);
+    let res = feed_loop(source, encoder, queues, slot_of, gauge, parent);
     gauge.encode_done.store(true, Ordering::SeqCst);
     match res {
         Ok(()) => {
@@ -672,9 +730,10 @@ pub(crate) fn upload_pass(
             let pfn = t.pfn.clone();
             let header = headers[slot];
             let index = t.index;
+            let parent = cfg.parent;
             let job: Box<dyn FnOnce() -> Result<UploadOutcome> + Send + '_> =
                 Box::new(move || {
-                    let ctx = ConsumerCtx { q, sem, gauge };
+                    let ctx = ConsumerCtx { q, sem, gauge, parent };
                     consume_chunk(&ctx, &se, &pfn, &header).map(|(size, checksum_hex)| {
                         UploadOutcome {
                             index,
@@ -696,7 +755,10 @@ pub(crate) fn upload_pass(
     let (enc_res, outcome) = std::thread::scope(|s| {
         let queues_ref = &queues;
         let slots_ref = &slot_of;
-        let handle = s.spawn(move || encode_feed(source, encoder, queues_ref, slots_ref, gauge));
+        let parent = cfg.parent;
+        let handle = s.spawn(move || {
+            encode_feed(source, encoder, queues_ref, slots_ref, gauge, parent)
+        });
         let outcome = pool.run(jobs, usize::MAX);
         let enc_res = handle
             .join()
@@ -742,7 +804,9 @@ fn header_agrees(h: &ChunkHeader, expect: &ChunkHeader, index: usize) -> bool {
         && h.file_sha256 == expect.file_sha256
 }
 
-/// Sequentially fetch one chunk's payload blocks into its queue.
+/// Sequentially fetch one chunk's payload blocks into its queue. Every
+/// ranged read (header probe and per-block fetch) is traced as a
+/// `read_at` span under `parent`.
 #[allow(clippy::too_many_arguments)]
 fn chunk_reader(
     q: &BlockQueue<Result<Vec<u8>>>,
@@ -754,11 +818,18 @@ fn chunk_reader(
     start_block: u64,
     geom: DownGeom,
     retry: RetryPolicy,
+    parent: SpanRef,
 ) {
     let hdr = {
+        let mut sp = tracer()
+            .span_with(parent, "read_at", || format!("chunk {} header", chunk.index));
         let _permit = sem.acquire();
-        read_replicas(registry, &chunk.replicas, 0, HEADER_LEN, retry)
-            .and_then(|b| ChunkHeader::decode(&b))
+        let r = read_replicas(registry, &chunk.replicas, 0, HEADER_LEN, retry, parent)
+            .and_then(|b| ChunkHeader::decode(&b));
+        if r.is_err() {
+            sp.fail();
+        }
+        r
     };
     match hdr {
         Ok(h) if header_agrees(&h, expect, chunk.index) => {}
@@ -781,8 +852,21 @@ fn chunk_reader(
         let off = b * geom.row_block;
         let want = (geom.payload_len - off).min(geom.row_block) as usize;
         let res = {
+            let mut sp = tracer()
+                .span_with(parent, "read_at", || format!("chunk {} block {b}", chunk.index));
             let _permit = sem.acquire();
-            read_replicas(registry, &chunk.replicas, HEADER_LEN as u64 + off, want, retry)
+            let r = read_replicas(
+                registry,
+                &chunk.replicas,
+                HEADER_LEN as u64 + off,
+                want,
+                retry,
+                parent,
+            );
+            if r.is_err() {
+                sp.fail();
+            }
+            r
         };
         match res {
             Ok(bytes) if bytes.len() == want => {
@@ -819,10 +903,11 @@ fn probe_header(
     codec: &Codec,
     candidates: &[FetchChunk],
     retry: RetryPolicy,
+    parent: SpanRef,
 ) -> Result<ChunkHeader> {
     let mut last = Error::NotEnoughChunks { have: 0, need: 1 };
     for c in candidates {
-        match read_replicas(registry, &c.replicas, 0, HEADER_LEN, retry)
+        match read_replicas(registry, &c.replicas, 0, HEADER_LEN, retry, parent)
             .and_then(|b| ChunkHeader::decode(&b))
         {
             Ok(h) => {
@@ -876,7 +961,7 @@ pub(crate) fn download_pipeline(
     if candidates.len() < k {
         return Err(Error::NotEnoughChunks { have: candidates.len(), need: k });
     }
-    let hdr = probe_header(registry, codec, candidates, retry)?;
+    let hdr = probe_header(registry, codec, candidates, retry, cfg.parent)?;
     let sb = codec.stripe_b();
     let segs = segment_count(hdr.file_len, k, sb);
     let payload_len = chunk_payload_len(hdr.file_len, k, sb);
@@ -903,6 +988,7 @@ pub(crate) fn download_pipeline(
         let queues_ref = &queues;
         let sem_ref = &sem;
         let hdr_ref = &hdr;
+        let parent = cfg.parent;
         let spawn_reader = |slot: usize, start_block: u64| {
             let q = &queues_ref[slot];
             let chunk = &candidates[slot];
@@ -910,6 +996,7 @@ pub(crate) fn download_pipeline(
             s.spawn(move || {
                 chunk_reader(
                     q, sem_ref, gauge, &registry, chunk, hdr_ref, start_block, geom, retry,
+                    parent,
                 )
             });
         };
@@ -935,10 +1022,22 @@ pub(crate) fn download_pipeline(
                         // spare from block `b` onward; everything
                         // decoded so far is kept.
                         if next_candidate >= candidates.len() {
+                            tracer().event(cfg.parent, "failover", false, || {
+                                format!(
+                                    "chunk {} died at block {b}; no spares left",
+                                    candidates[slot].index
+                                )
+                            });
                             return Err(Error::NotEnoughChunks { have: k - 1, need: k });
                         }
                         let ns = next_candidate;
                         next_candidate += 1;
+                        tracer().event(cfg.parent, "failover", true, || {
+                            format!(
+                                "chunk {} died at block {b}; spare chunk {} swapped in",
+                                candidates[slot].index, candidates[ns].index
+                            )
+                        });
                         spawn_reader(ns, b);
                         active[pos] = ns;
                     }
@@ -946,14 +1045,20 @@ pub(crate) fn download_pipeline(
             }
             let refs: Vec<(usize, &[u8])> =
                 rows.iter().map(|(i, v)| (*i, v.as_slice())).collect();
-            let bytes = decoder.push_block(&refs)?;
+            let bytes = {
+                let sp = tracer().span_with(cfg.parent, "decode", || format!("block {b}"));
+                sp.finish(decoder.push_block(&refs))?
+            };
             out.write_block(&bytes)?;
             for (_, v) in &rows {
                 gauge.sub(v.len() as u64);
             }
             written += bytes.len() as u64;
         }
-        decoder.finish()?;
+        {
+            let sp = tracer().span_with(cfg.parent, "decode", || "finish".into());
+            sp.finish(decoder.finish())?;
+        }
         Ok(written)
     })
 }
@@ -986,7 +1091,7 @@ pub(crate) fn rebuild_pipeline(
     if candidates.len() < k {
         return Err(Error::NotEnoughChunks { have: candidates.len(), need: k });
     }
-    let hdr = probe_header(registry, codec, candidates, retry)?;
+    let hdr = probe_header(registry, codec, candidates, retry, cfg.parent)?;
     let sb = codec.stripe_b();
     let segs = segment_count(hdr.file_len, k, sb);
     let payload_len = chunk_payload_len(hdr.file_len, k, sb);
@@ -1015,6 +1120,7 @@ pub(crate) fn rebuild_pipeline(
         let queues_ref = &queues;
         let sem_ref = &sem;
         let hdr_ref = &hdr;
+        let parent = cfg.parent;
         let spawn_reader = |slot: usize, start_block: u64| {
             let q = &queues_ref[slot];
             let chunk = &candidates[slot];
@@ -1022,6 +1128,7 @@ pub(crate) fn rebuild_pipeline(
             s.spawn(move || {
                 chunk_reader(
                     q, sem_ref, gauge, &registry, chunk, hdr_ref, start_block, geom, retry,
+                    parent,
                 )
             });
         };
@@ -1058,15 +1165,30 @@ pub(crate) fn rebuild_pipeline(
                     }
                     _ => {
                         if next_candidate >= candidates.len() {
+                            tracer().event(cfg.parent, "failover", false, || {
+                                format!(
+                                    "chunk {} died at block {b}; no spares left",
+                                    candidates[slot].index
+                                )
+                            });
                             return Err(Error::NotEnoughChunks { have: k - 1, need: k });
                         }
                         let ns = next_candidate;
                         next_candidate += 1;
+                        tracer().event(cfg.parent, "failover", true, || {
+                            format!(
+                                "chunk {} died at block {b}; spare chunk {} swapped in",
+                                candidates[slot].index, candidates[ns].index
+                            )
+                        });
                         spawn_reader(ns, b);
                         active[pos] = ns;
                     }
                 }
             }
+            // One `decode` span per rebuilt block: matrix (re)derivation,
+            // the matmul fan-out and the sink writes all land inside it.
+            let _sp = tracer().span_with(cfg.parent, "decode", || format!("rebuild block {b}"));
             let present: Vec<usize> = rows.iter().map(|(i, _)| *i).collect();
             let stale = rb.as_ref().map(|(p, _)| p != &present).unwrap_or(true);
             if stale {

@@ -123,6 +123,7 @@ impl EcFileReader {
             offset,
             len,
             walk_once,
+            crate::obs::SpanRef::NONE,
         )?;
         self.stats.range_gets += 1;
         self.stats.bytes_fetched += bytes.len() as u64;

@@ -40,6 +40,10 @@
 //! * [`sim`] — deterministic discrete-event simulator calibrated to the
 //!   paper's Table 1 (setup latency + shared uplink), used by the
 //!   figure-regeneration benches; Monte-Carlo durability analysis.
+//! * [`obs`] — observability: structured span tracing over the whole
+//!   data plane (near-zero cost when disabled), a JSONL trace sink,
+//!   a Prometheus-format exporter for [`metrics`], and the embeddable
+//!   HTTP status endpoint (`/status`, `/metrics`, `/traces/recent`).
 //! * [`runtime`] — PJRT loader for the `artifacts/*.hlo.txt` produced by
 //!   the python build path (L1 pallas kernel + L2 jax graph).
 //!
@@ -82,6 +86,7 @@ pub mod federation;
 pub mod gf;
 pub mod maintenance;
 pub mod metrics;
+pub mod obs;
 pub mod placement;
 pub mod runtime;
 pub mod se;

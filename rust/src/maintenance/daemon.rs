@@ -32,15 +32,20 @@
 //! writes a final status dump and exits.
 //!
 //! Counters and timers land under `maintenance.daemon.*` in
-//! [`crate::metrics::global`].
+//! [`crate::metrics::global`]. With [`DaemonOptions::status_addr`] set
+//! the same status payload is additionally served live over HTTP
+//! ([`crate::obs::http::StatusServer`]: `GET /status`, `/metrics`,
+//! `/traces/recent`), and every tick is bracketed by a `daemon-tick`
+//! trace span.
 
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use crate::dfm::EcShim;
 use crate::metrics;
+use crate::obs::http::StatusServer;
 use crate::util::json::Json;
 use crate::Result;
 
@@ -218,6 +223,11 @@ pub struct DaemonOptions {
     pub max_ticks: Option<u64>,
     /// Journal-GC byte budget per housekeeping tick.
     pub gc_budget: u64,
+    /// When set, the daemon serves its live status over HTTP on this
+    /// address (`GET /status`, `/metrics`, `/traces/recent` — see
+    /// [`crate::obs::http::StatusServer`]) for the lifetime of the run
+    /// (`drs maintain --status-addr`, `obs_status_addr` in `drs.json`).
+    pub status_addr: Option<String>,
 }
 
 impl Default for DaemonOptions {
@@ -231,6 +241,7 @@ impl Default for DaemonOptions {
             workers: 4,
             max_ticks: None,
             gc_budget: 4 << 20,
+            status_addr: None,
         }
     }
 }
@@ -275,6 +286,13 @@ impl DaemonOptions {
     /// Bound the run to `ticks` ticks (`None` = run until stopped).
     pub fn with_max_ticks(mut self, ticks: Option<u64>) -> Self {
         self.max_ticks = ticks;
+        self
+    }
+
+    /// Serve the daemon's live status over HTTP on `addr` for the
+    /// lifetime of the run (`None` = no endpoint).
+    pub fn with_status_addr(mut self, addr: Option<String>) -> Self {
+        self.status_addr = addr;
         self
     }
 }
@@ -353,12 +371,39 @@ pub struct Daemon<'a> {
     shim: &'a EcShim,
     opts: DaemonOptions,
     state_dir: PathBuf,
+    /// The most recent status payload, shared with the embedded HTTP
+    /// endpoint so `GET /status` never has to re-read (or race) the
+    /// on-disk `maintain_status.json`.
+    live_status: Arc<Mutex<Json>>,
+    /// Address the status endpoint actually bound (`Some` only while a
+    /// run with [`DaemonOptions::status_addr`] is in flight) — lets
+    /// callers who asked for port 0 discover the ephemeral port.
+    bound: Arc<Mutex<Option<std::net::SocketAddr>>>,
 }
 
 impl<'a> Daemon<'a> {
     /// Bind a daemon to a shim and a state directory.
     pub fn new(shim: &'a EcShim, opts: DaemonOptions, state_dir: impl Into<PathBuf>) -> Self {
-        Daemon { shim, opts, state_dir: state_dir.into() }
+        Daemon {
+            shim,
+            opts,
+            state_dir: state_dir.into(),
+            live_status: Arc::new(Mutex::new(Json::obj(vec![("phase", Json::str("starting"))]))),
+            bound: Arc::new(Mutex::new(None)),
+        }
+    }
+
+    /// The daemon's most recent status payload (what `GET /status`
+    /// serves). Useful for embedding the daemon without the HTTP server.
+    pub fn live_status(&self) -> Json {
+        self.live_status.lock().unwrap().clone()
+    }
+
+    /// The address the live-status endpoint bound, while a run with
+    /// [`DaemonOptions::status_addr`] is in flight (`None` otherwise).
+    /// With `...:0` this is how the ephemeral port is discovered.
+    pub fn status_endpoint(&self) -> Option<std::net::SocketAddr> {
+        *self.bound.lock().unwrap()
     }
 
     /// Whether namespace pass `pass_no` (1-based) runs in deep mode.
@@ -368,8 +413,33 @@ impl<'a> Daemon<'a> {
 
     /// Run the scheduler until the tick budget is exhausted or `stop`
     /// fires. Every exit path — including the error one — writes a final
-    /// status dump first.
+    /// status dump first. When [`DaemonOptions::status_addr`] is set the
+    /// live-status HTTP endpoint is up for the whole run (a bind failure
+    /// aborts the run before the first tick — an operator who asked for
+    /// the endpoint should not silently run without it).
     pub fn run(&self, stop: &StopToken) -> Result<DaemonReport> {
+        let server = match &self.opts.status_addr {
+            Some(addr) => {
+                let live = Arc::clone(&self.live_status);
+                let status: crate::obs::http::StatusFn =
+                    Arc::new(move || live.lock().unwrap().clone());
+                let server = StatusServer::serve(addr, status)?;
+                *self.bound.lock().unwrap() = Some(server.local_addr());
+                Some(server)
+            }
+            None => None,
+        };
+        let res = self.run_loop(stop);
+        if let Some(s) = server {
+            s.stop();
+            *self.bound.lock().unwrap() = None;
+        }
+        res
+    }
+
+    /// The scheduler proper (split out so [`Daemon::run`] can bracket it
+    /// with the status endpoint's lifetime).
+    fn run_loop(&self, stop: &StopToken) -> Result<DaemonReport> {
         let m = metrics::global();
         let mut report = DaemonReport::default();
         let mut cursor = load_scrub_cursor(&self.state_dir, &self.opts.root);
@@ -393,6 +463,15 @@ impl<'a> Daemon<'a> {
             // (a)/(b) One scrub slice: shallow on ordinary passes, deep
             // (checksum) once per deep_every full passes.
             let deep = self.deep_pass(pass_no);
+            // Each tick is one trace: the scrub/repair roots it triggers
+            // stay their own traces, but the tick span brackets the whole
+            // unit of scheduled work for `drs trace summary`.
+            let tick = report.ticks;
+            let mut tick_span = crate::obs::tracer().span_with(
+                crate::obs::SpanRef::NONE,
+                "daemon-tick",
+                || format!("tick {tick} pass {pass_no}{}", if deep { " deep" } else { "" }),
+            );
             let mut sopts = ScrubOptions::default()
                 .with_root(self.opts.root.clone())
                 .with_workers(self.opts.workers);
@@ -421,6 +500,8 @@ impl<'a> Daemon<'a> {
                     report.scrub_errors += 1;
                     m.inc("maintenance.daemon.scrub_errors");
                     consecutive_errors += 1;
+                    tick_span.fail();
+                    drop(tick_span);
                     if consecutive_errors >= MAX_CONSECUTIVE_SCRUB_ERRORS {
                         report.stopped_by = "scrub-errors".to_string();
                         self.finish(&report, pass_no, cursor.as_deref(), &last_tick, stop);
@@ -478,6 +559,10 @@ impl<'a> Daemon<'a> {
                 pass_no += 1;
                 pass = PassHealth { deep: self.deep_pass(pass_no), ..Default::default() };
             }
+
+            // Close the tick's trace before the idle sleep — the span
+            // should time the work, not the interval.
+            drop(tick_span);
 
             // Recompute the deep flag for the idle dump: a completed pass
             // bumped pass_no, and `deep` must describe the *upcoming*
@@ -592,7 +677,11 @@ impl<'a> Daemon<'a> {
             .map(|(k, v)| (k, Json::num(v as f64)))
             .collect();
         pairs.push(("metrics", Json::Obj(metrics_snap.into_iter().collect())));
-        let body = Json::obj(pairs).to_string();
+        let payload = Json::obj(pairs);
+        // Publish to the live endpoint first — even if the disk write
+        // fails, `GET /status` keeps serving fresh state.
+        *self.live_status.lock().unwrap() = payload.clone();
+        let body = payload.to_string();
         if crate::util::atomic_write(&status_path(&self.state_dir), body.as_bytes()).is_err() {
             m.inc("maintenance.daemon.status_errors");
         }

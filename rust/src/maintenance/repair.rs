@@ -134,8 +134,14 @@ impl RepairSummary {
 }
 
 /// Repair every degraded file in `report`, most-urgent first, within
-/// `budget`.
+/// `budget`. The pass is traced as a `repair-pass` span (marked failed
+/// when any file's repair failed); each file repair additionally opens
+/// its own `repair` root span inside the shim.
 pub fn repair_all(shim: &EcShim, report: &ScrubReport, budget: &RepairBudget) -> RepairSummary {
+    let mut pass_span = crate::obs::tracer()
+        .span_with(crate::obs::SpanRef::NONE, "repair-pass", || {
+            format!("{} degraded, {} lost", report.degraded(), report.lost())
+        });
     let mut summary = RepairSummary {
         lost: report
             .files
@@ -247,5 +253,9 @@ pub fn repair_all(shim: &EcShim, report: &ScrubReport, budget: &RepairBudget) ->
             error: Some(err.to_string()),
         });
     }
+    if summary.files_failed > 0 || summary.quarantine_failed > 0 {
+        pass_span.fail();
+    }
+    drop(pass_span);
     summary
 }

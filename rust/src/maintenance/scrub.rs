@@ -18,6 +18,7 @@ use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use crate::catalog::{dfc::DirItem, Dfc, MetaKeyStyle, Replica, ShardedDfc};
+use crate::obs::{tracer, SpanRef};
 use crate::se::SeRegistry;
 use crate::transfer::{PoolConfig, WorkPool};
 use crate::{Error, Result};
@@ -393,11 +394,24 @@ fn probe(layout: &FileLayout, registry: &SeRegistry, verify: bool) -> FileHealth
     }
 }
 
-/// Run a scrub over the catalogue.
+/// Run a scrub over the catalogue. The run is traced as a `scrub` root
+/// span with one `scrub-slice` child per file probed (a slice span is
+/// marked failed when the file turns out unrecoverable).
 pub fn scrub(
     dfc: &ShardedDfc,
     registry: &Arc<SeRegistry>,
     opts: &ScrubOptions,
+) -> Result<ScrubReport> {
+    let root = tracer().span_with(SpanRef::NONE, "scrub", || opts.root.clone());
+    let parent = root.handle();
+    root.finish(scrub_steps(dfc, registry, opts, parent))
+}
+
+fn scrub_steps(
+    dfc: &ShardedDfc,
+    registry: &Arc<SeRegistry>,
+    opts: &ScrubOptions,
+    parent: SpanRef,
 ) -> Result<ScrubReport> {
     // Snapshot phase: clone the subtree out of each catalogue shard
     // (each shard's lock held only for its own clone), then walk the
@@ -439,7 +453,16 @@ pub fn scrub(
         .enumerate()
         .map(|(i, layout)| {
             let registry = Arc::clone(registry);
-            (i, move || Ok((i, probe(layout, &registry, verify))))
+            (i, move || {
+                let mut sp =
+                    tracer().span_with(parent, "scrub-slice", || layout.lfn.clone());
+                let health = probe(layout, &registry, verify);
+                if health.state() == HealthState::Lost {
+                    sp.fail();
+                }
+                drop(sp);
+                Ok((i, health))
+            })
         })
         .collect();
     let outcome = WorkPool::new(PoolConfig::parallel(opts.workers)).run(jobs, usize::MAX);

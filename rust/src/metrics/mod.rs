@@ -190,6 +190,22 @@ impl Metrics {
             .collect()
     }
 
+    /// Snapshot every counter, sorted by name (the Prometheus
+    /// exporter's source; see [`crate::obs::export`]).
+    pub fn counters(&self) -> Vec<(String, u64)> {
+        self.counters.lock().unwrap().iter().map(|(k, v)| (k.clone(), *v)).collect()
+    }
+
+    /// Snapshot every gauge, sorted by name.
+    pub fn gauges(&self) -> Vec<(String, f64)> {
+        self.gauges.lock().unwrap().iter().map(|(k, v)| (k.clone(), *v)).collect()
+    }
+
+    /// Snapshot every timer histogram, sorted by name.
+    pub fn timers(&self) -> Vec<(String, Histogram)> {
+        self.timers.lock().unwrap().iter().map(|(k, h)| (k.clone(), h.clone())).collect()
+    }
+
     /// Plain-text report, sorted by name.
     pub fn report(&self) -> String {
         let mut out = String::new();
@@ -281,5 +297,110 @@ mod tests {
         assert_eq!(h.mean(), 0.0);
         assert_eq!(h.quantile(0.5), 0.0);
         assert_eq!(h.min(), 0.0);
+    }
+
+    #[test]
+    fn empty_histogram_quantile_bounds() {
+        let h = Histogram::default();
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(h.quantile(q), 0.0, "q={q}");
+        }
+        assert_eq!(h.max(), 0.0);
+        assert_eq!(h.count(), 0);
+    }
+
+    #[test]
+    fn single_sample_histogram() {
+        let mut h = Histogram::default();
+        h.record(0.02);
+        assert_eq!(h.count(), 1);
+        assert!((h.mean() - 0.02).abs() < 1e-12);
+        assert_eq!(h.min(), 0.02);
+        assert_eq!(h.max(), 0.02);
+        // Every quantile of a single sample lands in its bucket: the
+        // midpoint approximation must stay within the bucket bounds.
+        for q in [0.0, 0.25, 0.5, 0.99, 1.0] {
+            let v = h.quantile(q);
+            assert!(v > 0.0 && v < 0.1, "q={q} -> {v}");
+        }
+    }
+
+    #[test]
+    fn quantile_q0_and_q1_bounds() {
+        let mut h = Histogram::default();
+        for v in [0.001, 0.01, 0.1, 1.0, 10.0] {
+            h.record(v);
+        }
+        // q=0 resolves to the lowest occupied bucket, q=1 to the
+        // highest; out-of-range q is clamped, never panics.
+        assert!(h.quantile(0.0) <= h.quantile(1.0));
+        assert!(h.quantile(1.0) >= 1.0);
+        assert!(h.quantile(-3.0) <= h.quantile(0.5));
+        assert_eq!(h.quantile(7.5), h.quantile(1.0));
+    }
+
+    #[test]
+    fn out_of_range_samples_bucketed() {
+        let mut h = Histogram::default();
+        h.record(1e-9); // below the lowest bound
+        h.record(1e6); // above the highest bound
+        assert_eq!(h.count(), 2);
+        assert!(h.quantile(1.0) >= 1e3, "overflow bucket uses max");
+        assert_eq!(h.max(), 1e6);
+        assert_eq!(h.min(), 1e-9);
+    }
+
+    #[test]
+    fn snapshots_sorted_and_complete() {
+        let m = Metrics::new();
+        m.add("b.counter", 2);
+        m.add("a.counter", 1);
+        m.gauge("g", 1.5);
+        m.time("t", 0.2);
+        assert_eq!(
+            m.counters(),
+            vec![("a.counter".to_string(), 1), ("b.counter".to_string(), 2)]
+        );
+        assert_eq!(m.gauges(), vec![("g".to_string(), 1.5)]);
+        let timers = m.timers();
+        assert_eq!(timers.len(), 1);
+        assert_eq!(timers[0].0, "t");
+        assert_eq!(timers[0].1.count(), 1);
+    }
+
+    #[test]
+    fn concurrent_writers_lose_nothing() {
+        let m = Metrics::new();
+        let threads = 8;
+        let per = 500;
+        std::thread::scope(|s| {
+            for t in 0..threads {
+                let m = &m;
+                s.spawn(move || {
+                    for i in 0..per {
+                        m.inc("conc.total");
+                        m.add(&format!("conc.thread{t}"), 1);
+                        m.gauge("conc.gauge", i as f64);
+                        m.time("conc.timer", 0.001);
+                        // Concurrent snapshot reads must not deadlock
+                        // or observe torn state.
+                        if i % 100 == 0 {
+                            let _ = m.counters_with_prefix("conc.");
+                            let _ = m.report();
+                        }
+                    }
+                });
+            }
+        });
+        assert_eq!(m.counter("conc.total"), (threads * per) as u64);
+        for t in 0..threads {
+            assert_eq!(m.counter(&format!("conc.thread{t}")), per as u64);
+        }
+        let snap = m.counters_with_prefix("conc.");
+        assert_eq!(snap.len(), threads + 1); // total + per-thread
+        let timers = m.timers();
+        let timer = &timers.iter().find(|(k, _)| k == "conc.timer").unwrap().1;
+        assert_eq!(timer.count(), (threads * per) as u64);
+        assert!(m.report().contains("counter conc.total = 4000"));
     }
 }

@@ -1,0 +1,117 @@
+//! Prometheus text-exposition rendering of the [`crate::metrics`]
+//! registry.
+//!
+//! Counters render as `counter`, gauges as `gauge`, and timer
+//! histograms as `summary` series (quantile labels from the
+//! histogram's bucket-midpoint quantiles plus `_sum`/`_count`).
+//! Metric names are sanitized to the Prometheus charset and prefixed
+//! `drs_`: `transfer.stream.bytes` → `drs_transfer_stream_bytes`.
+//! Served by the [`super::http`] endpoint at `GET /metrics`.
+
+use crate::metrics::Metrics;
+
+/// Quantiles reported per timer (matches the CLI report's p50/p95
+/// plus the tail the perf roadmap cares about).
+const QUANTILES: [f64; 4] = [0.5, 0.9, 0.95, 0.99];
+
+/// Map a dotted metric name to a Prometheus-legal one: every
+/// character outside `[a-zA-Z0-9_]` becomes `_`, with a `drs_` prefix
+/// so scraped series never collide with other exporters.
+pub fn sanitize(name: &str) -> String {
+    let mut out = String::with_capacity(name.len() + 4);
+    out.push_str("drs_");
+    for c in name.chars() {
+        if c.is_ascii_alphanumeric() || c == '_' {
+            out.push(c);
+        } else {
+            out.push('_');
+        }
+    }
+    out
+}
+
+/// Format a float the way Prometheus expects (no exponent needed for
+/// our ranges; integral values lose the trailing `.0`).
+fn fmt_value(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Render the whole registry in Prometheus text exposition format
+/// (version 0.0.4): one `# TYPE` comment per series, sorted by name.
+pub fn prometheus(m: &Metrics) -> String {
+    let mut out = String::new();
+    for (name, v) in m.counters() {
+        let p = sanitize(&name);
+        out.push_str(&format!("# TYPE {p} counter\n{p} {v}\n"));
+    }
+    for (name, v) in m.gauges() {
+        let p = sanitize(&name);
+        out.push_str(&format!("# TYPE {p} gauge\n{p} {}\n", fmt_value(v)));
+    }
+    for (name, h) in m.timers() {
+        let p = sanitize(&name);
+        out.push_str(&format!("# TYPE {p} summary\n"));
+        if h.count() > 0 {
+            for q in QUANTILES {
+                out.push_str(&format!(
+                    "{p}{{quantile=\"{q}\"}} {}\n",
+                    fmt_value(h.quantile(q))
+                ));
+            }
+        }
+        out.push_str(&format!("{p}_sum {}\n", fmt_value(h.mean() * h.count() as f64)));
+        out.push_str(&format!("{p}_count {}\n", h.count()));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sanitizes_names() {
+        assert_eq!(sanitize("transfer.stream.bytes"), "drs_transfer_stream_bytes");
+        assert_eq!(sanitize("maintenance.daemon-tick"), "drs_maintenance_daemon_tick");
+        assert_eq!(sanitize("ok_name9"), "drs_ok_name9");
+    }
+
+    #[test]
+    fn renders_all_kinds() {
+        let m = Metrics::new();
+        m.add("transfer.stream.bytes", 1234);
+        m.gauge("se.availability", 0.9375);
+        m.time("transfer.put", 0.25);
+        m.time("transfer.put", 0.75);
+        let text = prometheus(&m);
+        assert!(text.contains("# TYPE drs_transfer_stream_bytes counter\n"));
+        assert!(text.contains("drs_transfer_stream_bytes 1234\n"));
+        assert!(text.contains("# TYPE drs_se_availability gauge\n"));
+        assert!(text.contains("drs_se_availability 0.9375\n"));
+        assert!(text.contains("# TYPE drs_transfer_put summary\n"));
+        assert!(text.contains("drs_transfer_put{quantile=\"0.5\"}"));
+        assert!(text.contains("drs_transfer_put_sum 1\n")); // 0.25 + 0.75
+        assert!(text.contains("drs_transfer_put_count 2\n"));
+    }
+
+    #[test]
+    fn empty_timer_has_no_quantiles() {
+        let m = Metrics::new();
+        m.time("once", 0.1);
+        let text = prometheus(&Metrics::new());
+        assert_eq!(text, "");
+        // An empty registry renders nothing; a registry with data
+        // renders parseable `name value` lines only.
+        for line in prometheus(&m).lines() {
+            if line.starts_with('#') {
+                continue;
+            }
+            let (_, val) = line.rsplit_once(' ').unwrap();
+            val.parse::<f64>().unwrap();
+        }
+    }
+}

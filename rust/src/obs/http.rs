@@ -1,0 +1,161 @@
+//! A tiny hand-rolled blocking HTTP/1.1 status endpoint.
+//!
+//! Serves three read-only routes:
+//!
+//! * `GET /status` — a caller-provided JSON payload (the daemon's
+//!   live `maintain_status.json` document, or whatever the embedder
+//!   supplies).
+//! * `GET /metrics` — the [`crate::metrics::global`] registry in
+//!   Prometheus text exposition format ([`super::export`]).
+//! * `GET /traces/recent` — the tracer's ring buffer as a JSON array.
+//!
+//! The server is deliberately minimal: one accept thread, one request
+//! per connection (`Connection: close`), no TLS, no keep-alive — it
+//! is an operational peephole for `curl` and a Prometheus scraper,
+//! not a public API. It binds eagerly (so bad addresses fail fast at
+//! startup), polls a nonblocking listener, and stops cleanly via
+//! [`StatusServer::stop`].
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+/// Supplier of the `/status` payload, called per request so the
+/// served document is always current.
+pub type StatusFn = Arc<dyn Fn() -> Json + Send + Sync>;
+
+/// A running status endpoint; dropping it without [`StatusServer::stop`]
+/// leaves the accept thread running for the process lifetime.
+pub struct StatusServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl StatusServer {
+    /// Bind `addr` (e.g. `127.0.0.1:9632`; port 0 picks a free port)
+    /// and start serving. `status` supplies the `/status` payload.
+    pub fn serve(addr: &str, status: StatusFn) -> Result<StatusServer> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| Error::Config(format!("status endpoint `{addr}`: {e}")))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| Error::Runtime(format!("status endpoint: {e}")))?;
+        let local = listener
+            .local_addr()
+            .map_err(|e| Error::Runtime(format!("status endpoint: {e}")))?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let join = std::thread::Builder::new()
+            .name("drs-obs-http".into())
+            .spawn(move || accept_loop(listener, status, stop2))
+            .map_err(|e| Error::Runtime(format!("status endpoint thread: {e}")))?;
+        Ok(StatusServer { addr: local, stop, join: Some(join) })
+    }
+
+    /// The bound address (resolves port 0 for tests and logs).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the server thread.
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Accept/handle loop: poll the nonblocking listener, answer one
+/// request per connection.
+fn accept_loop(listener: TcpListener, status: StatusFn, stop: Arc<AtomicBool>) {
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((conn, _)) => {
+                let _ = handle(conn, &status);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(25));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(25)),
+        }
+    }
+}
+
+/// Read the request head, route it, write the response.
+fn handle(mut conn: TcpStream, status: &StatusFn) -> std::io::Result<()> {
+    conn.set_nonblocking(false)?;
+    conn.set_read_timeout(Some(Duration::from_secs(2)))?;
+    conn.set_write_timeout(Some(Duration::from_secs(5)))?;
+    let path = match read_request_path(&mut conn) {
+        Some(p) => p,
+        None => return respond(&mut conn, 400, "text/plain", "bad request"),
+    };
+    match path.as_str() {
+        "/status" => {
+            let body = status().to_string();
+            respond(&mut conn, 200, "application/json", &body)
+        }
+        "/metrics" => {
+            let body = super::export::prometheus(crate::metrics::global());
+            respond(&mut conn, 200, "text/plain; version=0.0.4", &body)
+        }
+        "/traces/recent" => {
+            let recs = super::tracer().recent(256);
+            let body =
+                Json::Arr(recs.iter().map(super::SpanRecord::to_json).collect()).to_string();
+            respond(&mut conn, 200, "application/json", &body)
+        }
+        _ => respond(&mut conn, 404, "text/plain", "not found"),
+    }
+}
+
+/// Parse `GET <path> HTTP/1.x` off the wire; `None` on anything else.
+/// The head is read until the blank line (or 4 KiB) so the client's
+/// headers are consumed before we respond.
+fn read_request_path(conn: &mut TcpStream) -> Option<String> {
+    let mut head = Vec::with_capacity(512);
+    let mut byte = [0u8; 256];
+    while !head.windows(4).any(|w| w == b"\r\n\r\n") && head.len() < 4096 {
+        match conn.read(&mut byte) {
+            Ok(0) => break,
+            Ok(n) => head.extend_from_slice(&byte[..n]),
+            Err(_) => break,
+        }
+    }
+    let text = String::from_utf8_lossy(&head);
+    let first = text.lines().next()?;
+    let mut parts = first.split_whitespace();
+    let method = parts.next()?;
+    let path = parts.next()?;
+    if method != "GET" {
+        return None;
+    }
+    // Ignore any query string: `/status?pretty` routes as `/status`.
+    Some(path.split('?').next().unwrap_or(path).to_string())
+}
+
+/// Write a complete `Connection: close` HTTP/1.1 response.
+fn respond(conn: &mut TcpStream, code: u16, ctype: &str, body: &str) -> std::io::Result<()> {
+    let reason = match code {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        _ => "Error",
+    };
+    let head = format!(
+        "HTTP/1.1 {code} {reason}\r\nContent-Type: {ctype}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    conn.write_all(head.as_bytes())?;
+    conn.write_all(body.as_bytes())?;
+    conn.flush()
+}

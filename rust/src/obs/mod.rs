@@ -1,0 +1,488 @@
+//! Observability: structured span tracing, a JSONL event sink, a
+//! Prometheus-format metrics exporter, and a tiny embeddable HTTP
+//! status endpoint.
+//!
+//! The paper's closing finding — "overheads for multiple file
+//! transfers provide the largest issue for competitiveness" — makes
+//! per-stream instrumentation a first-class need: knowing a put took
+//! 9 s is useless without knowing whether the time went to encode,
+//! queue stalls, per-chunk transfer or commit. This module is the
+//! measurement substrate the perf roadmap reports against.
+//!
+//! # Span model
+//!
+//! A **trace** is one logical operation (a `put`, `get`, `repair`,
+//! scrub pass, daemon tick, ...). A **span** is one timed stage inside
+//! it, with a parent: `put → chunk-transfer → chunk-open /
+//! chunk-queue-wait / chunk-write / commit`, `put → encode-block`,
+//! `get → read_at / decode`. SE-level operations (`se-put`, `se-write-block`, ...) and
+//! catalogue-journal operations (`journal-append`, ...) record as
+//! parentless root spans of their own traces.
+//!
+//! Spans are RAII guards from [`Tracer::span`] / [`Tracer::span_with`]:
+//! the duration is measured from creation to drop, and
+//! [`Span::fail`] / [`Span::finish`] mark errors. [`SpanRef`] is a
+//! `Copy` (trace, span) handle used to parent spans across threads —
+//! the streaming pipeline threads one through `PipeCfg` so every
+//! per-chunk worker span nests under the transfer root.
+//!
+//! # Cost model
+//!
+//! Tracing is **off by default**. Every span constructor first does a
+//! single relaxed atomic load; when disabled it returns an inert
+//! guard without taking a timestamp, allocating, or calling the
+//! detail closure. When enabled, finished spans are pushed into a
+//! bounded lock-sharded ring buffer (shard picked by span id, so
+//! concurrent workers rarely contend) and, if a sink is attached,
+//! forwarded to a dedicated writer thread that appends JSONL to
+//! `obs_trace.jsonl` with size-based rotation (see [`sink`]).
+//!
+//! # Reading traces
+//!
+//! * `drs trace tail|summary` parse the JSONL file ([`summary`]).
+//! * `drs put/get --stats` aggregate the ring buffer for one trace.
+//! * `GET /traces/recent` on the status endpoint ([`http`]) serves
+//!   the ring buffer as JSON; `GET /metrics` serves the
+//!   [`crate::metrics`] registry in Prometheus text format
+//!   ([`export`]).
+
+pub mod export;
+pub mod http;
+pub mod sink;
+pub mod summary;
+
+use std::collections::VecDeque;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::{Instant, SystemTime, UNIX_EPOCH};
+
+use crate::util::json::Json;
+
+/// Ring-buffer shards (concurrent recorders hash over these).
+const SHARDS: usize = 8;
+
+/// Default total ring capacity (spans) across all shards.
+pub const DEFAULT_BUFFER_SPANS: usize = 4096;
+
+/// A finished span, as stored in the ring buffer and written to the
+/// JSONL sink.
+#[derive(Clone, Debug)]
+pub struct SpanRecord {
+    /// Trace id — one per logical operation; all spans of the
+    /// operation share it.
+    pub trace: u64,
+    /// Span id, unique within the process.
+    pub span: u64,
+    /// Parent span id (`0` = root span of its trace).
+    pub parent: u64,
+    /// Stage name (`put`, `chunk-write`, `encode-block`, ...).
+    pub name: &'static str,
+    /// Free-form detail (chunk index, SE name, byte count, cause...).
+    pub detail: String,
+    /// Span start, microseconds since the Unix epoch.
+    pub start_unix_us: u64,
+    /// Span duration in microseconds (0 for instantaneous events).
+    pub dur_us: u64,
+    /// Whether the stage completed without error.
+    pub ok: bool,
+}
+
+impl SpanRecord {
+    /// JSON object form (one line of the JSONL sink).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("trace", Json::num(self.trace as f64)),
+            ("span", Json::num(self.span as f64)),
+            ("parent", Json::num(self.parent as f64)),
+            ("name", Json::str(self.name)),
+            ("detail", Json::str(self.detail.clone())),
+            ("start_us", Json::num(self.start_unix_us as f64)),
+            ("dur_us", Json::num(self.dur_us as f64)),
+            ("ok", Json::Bool(self.ok)),
+        ])
+    }
+}
+
+/// A `Copy` handle to a live (or finished) span, used to parent child
+/// spans — including across threads. `SpanRef::NONE` (the default)
+/// parents nothing: a span created with it becomes the root of a new
+/// trace.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SpanRef {
+    /// Trace id (0 = none).
+    pub trace: u64,
+    /// Span id (0 = none).
+    pub span: u64,
+}
+
+impl SpanRef {
+    /// The null ref: no parent — spans created under it start a new
+    /// trace.
+    pub const NONE: SpanRef = SpanRef { trace: 0, span: 0 };
+
+    /// Whether this ref points at nothing.
+    pub fn is_none(&self) -> bool {
+        self.trace == 0
+    }
+}
+
+/// Live state of an in-flight span (present only when tracing was
+/// enabled at creation).
+struct SpanInner {
+    trace: u64,
+    span: u64,
+    parent: u64,
+    name: &'static str,
+    detail: String,
+    start_unix_us: u64,
+    started: Instant,
+    ok: bool,
+}
+
+/// RAII span guard: records itself into the tracer on drop. Inert
+/// (`None` inner, no timestamps) when tracing is disabled.
+pub struct Span {
+    inner: Option<SpanInner>,
+}
+
+impl Span {
+    /// An inert span (tracing disabled).
+    fn disabled() -> Span {
+        Span { inner: None }
+    }
+
+    /// Handle for parenting children under this span. Returns
+    /// [`SpanRef::NONE`] when tracing is disabled.
+    pub fn handle(&self) -> SpanRef {
+        match &self.inner {
+            Some(s) => SpanRef { trace: s.trace, span: s.span },
+            None => SpanRef::NONE,
+        }
+    }
+
+    /// Mark the stage as failed (recorded with `ok = false`).
+    pub fn fail(&mut self) {
+        if let Some(s) = &mut self.inner {
+            s.ok = false;
+        }
+    }
+
+    /// Replace the detail string (cheap no-op when disabled).
+    pub fn set_detail(&mut self, f: impl FnOnce() -> String) {
+        if let Some(s) = &mut self.inner {
+            s.detail = f();
+        }
+    }
+
+    /// Close the span around a `Result`: failures mark the span
+    /// failed, and the result passes through unchanged.
+    pub fn finish<T>(mut self, r: crate::Result<T>) -> crate::Result<T> {
+        if r.is_err() {
+            self.fail();
+        }
+        r
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some(s) = self.inner.take() {
+            tracer().record(SpanRecord {
+                trace: s.trace,
+                span: s.span,
+                parent: s.parent,
+                name: s.name,
+                detail: s.detail,
+                start_unix_us: s.start_unix_us,
+                dur_us: s.started.elapsed().as_micros() as u64,
+                ok: s.ok,
+            });
+        }
+    }
+}
+
+/// One ring-buffer shard: a bounded FIFO of finished spans.
+#[derive(Default)]
+struct RingShard {
+    buf: VecDeque<SpanRecord>,
+}
+
+/// The process-wide span recorder. Obtain it via [`tracer`].
+pub struct Tracer {
+    enabled: AtomicBool,
+    next_trace: AtomicU64,
+    next_span: AtomicU64,
+    cap_per_shard: AtomicUsize,
+    shards: [Mutex<RingShard>; SHARDS],
+    sink: Mutex<Option<sink::SinkHandle>>,
+}
+
+impl Tracer {
+    fn new() -> Tracer {
+        Tracer {
+            enabled: AtomicBool::new(false),
+            next_trace: AtomicU64::new(1),
+            next_span: AtomicU64::new(1),
+            cap_per_shard: AtomicUsize::new(DEFAULT_BUFFER_SPANS.div_ceil(SHARDS)),
+            shards: std::array::from_fn(|_| Mutex::new(RingShard::default())),
+            sink: Mutex::new(None),
+        }
+    }
+
+    /// Turn span recording on or off (off = single atomic load per
+    /// would-be span, nothing recorded).
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// Whether spans are currently recorded.
+    pub fn is_enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Resize the ring buffer to hold ~`total_spans` finished spans
+    /// (split across shards; existing excess records are trimmed).
+    pub fn set_buffer(&self, total_spans: usize) {
+        let per = total_spans.div_ceil(SHARDS).max(1);
+        self.cap_per_shard.store(per, Ordering::Relaxed);
+        for shard in &self.shards {
+            let mut s = shard.lock().unwrap();
+            while s.buf.len() > per {
+                s.buf.pop_front();
+            }
+        }
+    }
+
+    /// Start a span under `parent` (pass [`SpanRef::NONE`] to root a
+    /// new trace) with an empty detail string.
+    pub fn span(&self, parent: SpanRef, name: &'static str) -> Span {
+        self.span_with(parent, name, String::new)
+    }
+
+    /// Start a span under `parent`; `detail` is only invoked when
+    /// tracing is enabled, so hot paths pay nothing to format it.
+    pub fn span_with(
+        &self,
+        parent: SpanRef,
+        name: &'static str,
+        detail: impl FnOnce() -> String,
+    ) -> Span {
+        if !self.is_enabled() {
+            return Span::disabled();
+        }
+        let trace = if parent.is_none() {
+            self.next_trace.fetch_add(1, Ordering::Relaxed)
+        } else {
+            parent.trace
+        };
+        Span {
+            inner: Some(SpanInner {
+                trace,
+                span: self.next_span.fetch_add(1, Ordering::Relaxed),
+                parent: parent.span,
+                name,
+                detail: detail(),
+                start_unix_us: unix_us(),
+                started: Instant::now(),
+                ok: true,
+            }),
+        }
+    }
+
+    /// Record an instantaneous event (a zero-duration span): retry
+    /// notes, failovers, pool job errors. `ok = false` flags the
+    /// event as an error marker.
+    pub fn event(
+        &self,
+        parent: SpanRef,
+        name: &'static str,
+        ok: bool,
+        detail: impl FnOnce() -> String,
+    ) {
+        let mut sp = self.span_with(parent, name, detail);
+        if !ok {
+            sp.fail();
+        }
+        // drop records it with ~0 duration
+    }
+
+    /// Push a finished span into the ring (and the sink, if attached).
+    fn record(&self, rec: SpanRecord) {
+        if let Some(h) = self.sink.lock().unwrap().as_ref() {
+            h.send(&rec);
+        }
+        let cap = self.cap_per_shard.load(Ordering::Relaxed);
+        let shard = &self.shards[(rec.span as usize) % SHARDS];
+        let mut s = shard.lock().unwrap();
+        if s.buf.len() >= cap {
+            s.buf.pop_front();
+        }
+        s.buf.push_back(rec);
+    }
+
+    /// The most recent `n` finished spans across all shards, oldest
+    /// first.
+    pub fn recent(&self, n: usize) -> Vec<SpanRecord> {
+        let mut all: Vec<SpanRecord> = Vec::new();
+        for shard in &self.shards {
+            all.extend(shard.lock().unwrap().buf.iter().cloned());
+        }
+        all.sort_by_key(|r| (r.start_unix_us, r.span));
+        if all.len() > n {
+            all.drain(..all.len() - n);
+        }
+        all
+    }
+
+    /// Every buffered span belonging to `trace_id`, oldest first.
+    pub fn recent_for(&self, trace_id: u64) -> Vec<SpanRecord> {
+        let mut all: Vec<SpanRecord> = Vec::new();
+        for shard in &self.shards {
+            all.extend(shard.lock().unwrap().buf.iter().filter(|r| r.trace == trace_id).cloned());
+        }
+        all.sort_by_key(|r| (r.start_unix_us, r.span));
+        all
+    }
+
+    /// Drop every buffered span (test isolation).
+    pub fn clear(&self) {
+        for shard in &self.shards {
+            shard.lock().unwrap().buf.clear();
+        }
+    }
+
+    /// Attach (or replace) the JSONL sink: finished spans are
+    /// forwarded to a writer thread appending to `path`, rotating to
+    /// `<path>.1` once the file exceeds `rotate_bytes`.
+    pub fn attach_sink(&self, path: &Path, rotate_bytes: u64) -> crate::Result<()> {
+        let new = sink::SinkHandle::spawn(path, rotate_bytes)?;
+        let old = self.sink.lock().unwrap().replace(new);
+        if let Some(old) = old {
+            old.stop();
+        }
+        Ok(())
+    }
+
+    /// Detach the sink, flushing and closing the trace file.
+    pub fn detach_sink(&self) {
+        if let Some(old) = self.sink.lock().unwrap().take() {
+            old.stop();
+        }
+    }
+
+    /// Block until every span recorded so far has reached the trace
+    /// file (no-op without a sink).
+    pub fn flush(&self) {
+        if let Some(h) = self.sink.lock().unwrap().as_ref() {
+            h.flush();
+        }
+    }
+}
+
+/// Microseconds since the Unix epoch (0 if the clock is before 1970).
+fn unix_us() -> u64 {
+    SystemTime::now().duration_since(UNIX_EPOCH).map(|d| d.as_micros() as u64).unwrap_or(0)
+}
+
+/// The process-global tracer (mirrors [`crate::metrics::global`]).
+pub fn tracer() -> &'static Tracer {
+    static GLOBAL: OnceLock<Tracer> = OnceLock::new();
+    GLOBAL.get_or_init(Tracer::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The tracer is process-global; tests that flip `enabled` are
+    // serialized so parallel test threads don't observe each other.
+    fn serial() -> std::sync::MutexGuard<'static, ()> {
+        static LOCK: Mutex<()> = Mutex::new(());
+        LOCK.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    #[test]
+    fn disabled_is_inert() {
+        let _g = serial();
+        let t = tracer();
+        t.set_enabled(false);
+        t.clear();
+        let sp = t.span_with(SpanRef::NONE, "op", || panic!("detail must not run"));
+        assert!(sp.handle().is_none());
+        drop(sp);
+        assert!(t.recent(10).is_empty());
+    }
+
+    #[test]
+    fn spans_nest_and_record() {
+        let _g = serial();
+        let t = tracer();
+        t.set_enabled(true);
+        t.clear();
+        let root = t.span_with(SpanRef::NONE, "put", || "f.bin".into());
+        let parent = root.handle();
+        assert!(!parent.is_none());
+        {
+            let child = t.span(parent, "chunk-write");
+            let h = child.handle();
+            assert_eq!(h.trace, parent.trace);
+            assert_ne!(h.span, parent.span);
+        }
+        let mut failing = t.span(parent, "commit");
+        failing.fail();
+        drop(failing);
+        t.event(parent, "retry", false, || "attempt 1".into());
+        drop(root);
+        let recs = t.recent_for(parent.trace);
+        t.set_enabled(false);
+        assert_eq!(recs.len(), 4);
+        let root_rec = recs.iter().find(|r| r.name == "put").unwrap();
+        assert_eq!(root_rec.parent, 0);
+        assert!(root_rec.ok);
+        for name in ["chunk-write", "commit", "retry"] {
+            let r = recs.iter().find(|r| r.name == name).unwrap();
+            assert_eq!(r.parent, parent.span, "{name} must parent under put");
+            assert_eq!(r.trace, parent.trace);
+        }
+        assert!(!recs.iter().find(|r| r.name == "commit").unwrap().ok);
+        assert!(!recs.iter().find(|r| r.name == "retry").unwrap().ok);
+    }
+
+    #[test]
+    fn ring_is_bounded() {
+        let _g = serial();
+        let t = tracer();
+        t.set_enabled(true);
+        t.clear();
+        t.set_buffer(64);
+        for _ in 0..1000 {
+            drop(t.span(SpanRef::NONE, "op"));
+        }
+        let n = t.recent(usize::MAX).len();
+        t.set_enabled(false);
+        t.set_buffer(DEFAULT_BUFFER_SPANS);
+        assert!(n <= 64 + SHARDS, "ring held {n} spans");
+        assert!(n >= 32, "ring kept too few spans ({n})");
+    }
+
+    #[test]
+    fn finish_passes_through_and_marks() {
+        let _g = serial();
+        let t = tracer();
+        t.set_enabled(true);
+        t.clear();
+        let sp = t.span(SpanRef::NONE, "io");
+        let trace = sp.handle().trace;
+        let r: crate::Result<u32> = sp.finish(Err(crate::Error::Transfer("x".into())));
+        assert!(r.is_err());
+        let sp2 = t.span(SpanRef::NONE, "io2");
+        let trace2 = sp2.handle().trace;
+        assert_eq!(sp2.finish(Ok(7u32)).unwrap(), 7);
+        let bad = t.recent_for(trace);
+        let good = t.recent_for(trace2);
+        t.set_enabled(false);
+        assert!(!bad[0].ok);
+        assert!(good[0].ok);
+    }
+}

@@ -1,0 +1,114 @@
+//! JSONL trace sink: a dedicated writer thread appending one JSON
+//! object per finished span to `obs_trace.jsonl`.
+//!
+//! Recording threads never touch the filesystem — they serialize the
+//! span and hand it over an unbounded channel, so a slow disk can't
+//! stall the data plane. The writer rotates the file once it exceeds
+//! the configured size: the live file is renamed to `<path>.1`
+//! (replacing any previous rotation — the same single-rename
+//! atomicity [`crate::util::atomic_write`] relies on) and a fresh
+//! file is started, so the trace directory holds at most two
+//! generations.
+
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
+use std::thread::JoinHandle;
+
+use super::SpanRecord;
+use crate::Result;
+
+/// Messages from recording threads to the writer thread.
+enum SinkMsg {
+    /// One serialized span line (without the trailing newline).
+    Line(String),
+    /// Flush the file and ack on the channel.
+    Flush(SyncSender<()>),
+    /// Flush, close and exit.
+    Stop,
+}
+
+/// A running sink: the channel sender plus the writer thread handle.
+pub(crate) struct SinkHandle {
+    tx: Sender<SinkMsg>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl SinkHandle {
+    /// Open `path` for append and spawn the writer thread.
+    pub(crate) fn spawn(path: &Path, rotate_bytes: u64) -> Result<SinkHandle> {
+        let path = path.to_path_buf();
+        let file = OpenOptions::new().create(true).append(true).open(&path)?;
+        let bytes = file.metadata().map(|m| m.len()).unwrap_or(0);
+        let (tx, rx) = std::sync::mpsc::channel();
+        let join = std::thread::Builder::new()
+            .name("drs-obs-sink".into())
+            .spawn(move || writer_loop(rx, path, file, bytes, rotate_bytes))
+            .map_err(|e| crate::Error::Runtime(format!("obs sink thread: {e}")))?;
+        Ok(SinkHandle { tx, join: Some(join) })
+    }
+
+    /// Serialize and enqueue one span (drops silently if the writer
+    /// died — tracing must never fail the traced operation).
+    pub(crate) fn send(&self, rec: &SpanRecord) {
+        let _ = self.tx.send(SinkMsg::Line(rec.to_json().to_string()));
+    }
+
+    /// Block until everything enqueued so far is on disk.
+    pub(crate) fn flush(&self) {
+        let (ack_tx, ack_rx) = sync_channel(1);
+        if self.tx.send(SinkMsg::Flush(ack_tx)).is_ok() {
+            let _ = ack_rx.recv();
+        }
+    }
+
+    /// Flush, close the file and join the writer thread.
+    pub(crate) fn stop(mut self) {
+        let _ = self.tx.send(SinkMsg::Stop);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// The writer thread: append lines, rotate by size, honor flushes.
+fn writer_loop(rx: Receiver<SinkMsg>, path: PathBuf, file: File, mut bytes: u64, rotate_bytes: u64) {
+    let mut buf = std::io::BufWriter::new(file);
+    for msg in rx {
+        match msg {
+            SinkMsg::Line(line) => {
+                let _ = buf.write_all(line.as_bytes());
+                let _ = buf.write_all(b"\n");
+                bytes += line.len() as u64 + 1;
+                if rotate_bytes > 0 && bytes >= rotate_bytes {
+                    let _ = buf.flush();
+                    // One atomic rename: the previous `.1` (if any) is
+                    // replaced, the live file becomes the archive, and
+                    // a crash mid-rotation leaves whole files only.
+                    let _ = std::fs::rename(&path, rotated_path(&path));
+                    match OpenOptions::new().create(true).append(true).open(&path) {
+                        Ok(f) => {
+                            buf = std::io::BufWriter::new(f);
+                            bytes = 0;
+                        }
+                        Err(_) => return, // can't reopen: stop tracing to disk
+                    }
+                }
+            }
+            SinkMsg::Flush(ack) => {
+                let _ = buf.flush();
+                let _ = ack.send(());
+            }
+            SinkMsg::Stop => break,
+        }
+    }
+    let _ = buf.flush();
+}
+
+/// Where a rotated trace file goes: `obs_trace.jsonl` → `obs_trace.jsonl.1`.
+pub fn rotated_path(path: &Path) -> PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".1");
+    PathBuf::from(os)
+}

@@ -1,0 +1,383 @@
+//! Trace aggregation: turn raw span records (ring buffer or JSONL
+//! file) into per-stage latency breakdowns.
+//!
+//! This is what `drs trace summary` and `drs put/get --stats` print:
+//! per-stage totals and tail quantiles, plus **lane coverage** — for
+//! each parent span, how much of its wall time its direct children
+//! account for. A put's chunk lanes (`chunk-transfer` →
+//! `chunk-open`/`chunk-queue-wait`/`chunk-write`/`commit`) should
+//! attribute ≈100% of the lane's wall; a big uncovered gap means the pipeline is
+//! losing time somewhere the spans don't see.
+
+use std::collections::BTreeMap;
+
+use super::SpanRecord;
+use crate::util::json::Json;
+
+/// An owned span record, as parsed back from the JSONL sink (the
+/// in-process [`SpanRecord`] keeps a `&'static` name; file records
+/// own theirs).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceEvent {
+    /// Trace id.
+    pub trace: u64,
+    /// Span id.
+    pub span: u64,
+    /// Parent span id (0 = root).
+    pub parent: u64,
+    /// Stage name.
+    pub name: String,
+    /// Free-form detail.
+    pub detail: String,
+    /// Start, microseconds since the Unix epoch.
+    pub start_us: u64,
+    /// Duration in microseconds.
+    pub dur_us: u64,
+    /// Whether the stage succeeded.
+    pub ok: bool,
+}
+
+impl TraceEvent {
+    /// Parse one JSONL object; `None` on any missing/mistyped field.
+    pub fn from_json(j: &Json) -> Option<TraceEvent> {
+        Some(TraceEvent {
+            trace: j.get("trace")?.as_u64()?,
+            span: j.get("span")?.as_u64()?,
+            parent: j.get("parent")?.as_u64()?,
+            name: j.get("name")?.as_str()?.to_string(),
+            detail: j.get("detail")?.as_str()?.to_string(),
+            start_us: j.get("start_us")?.as_u64()?,
+            dur_us: j.get("dur_us")?.as_u64()?,
+            ok: j.get("ok")?.as_bool()?,
+        })
+    }
+
+    /// Convert an in-process ring-buffer record.
+    pub fn from_record(r: &SpanRecord) -> TraceEvent {
+        TraceEvent {
+            trace: r.trace,
+            span: r.span,
+            parent: r.parent,
+            name: r.name.to_string(),
+            detail: r.detail.clone(),
+            start_us: r.start_unix_us,
+            dur_us: r.dur_us,
+            ok: r.ok,
+        }
+    }
+
+    /// One human-readable line (the `drs trace tail` format).
+    pub fn render_line(&self) -> String {
+        format!(
+            "{:>16} trace={} span={} parent={} {:>10}us {} {}",
+            self.name,
+            self.trace,
+            self.span,
+            self.parent,
+            self.dur_us,
+            if self.ok { "ok" } else { "FAIL" },
+            self.detail
+        )
+    }
+}
+
+/// Parse a JSONL trace dump, skipping unparseable lines (a torn tail
+/// from a crash or rotation must not hide the rest of the file).
+pub fn parse_jsonl(text: &str) -> Vec<TraceEvent> {
+    text.lines()
+        .filter(|l| !l.trim().is_empty())
+        .filter_map(|l| Json::parse(l).ok())
+        .filter_map(|j| TraceEvent::from_json(&j))
+        .collect()
+}
+
+/// Aggregate stats for one stage (span name).
+#[derive(Clone, Debug, Default)]
+pub struct StageStat {
+    /// Spans observed.
+    pub count: u64,
+    /// Spans with `ok = false`.
+    pub failures: u64,
+    /// Sum of durations, microseconds.
+    pub total_us: u64,
+    /// Sorted durations (kept for quantiles).
+    durs: Vec<u64>,
+}
+
+impl StageStat {
+    fn push(&mut self, e: &TraceEvent) {
+        self.count += 1;
+        if !e.ok {
+            self.failures += 1;
+        }
+        self.total_us += e.dur_us;
+        self.durs.push(e.dur_us);
+    }
+
+    /// Exact quantile over the recorded durations (0 when empty).
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.durs.is_empty() {
+            return 0;
+        }
+        let mut d = self.durs.clone();
+        d.sort_unstable();
+        let idx = ((q.clamp(0.0, 1.0) * (d.len() - 1) as f64).round()) as usize;
+        d[idx]
+    }
+}
+
+/// Per-parent-span child coverage: how much of the spans' wall their
+/// direct children account for.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LaneCoverage {
+    /// Parent spans measured (those with nonzero duration).
+    pub lanes: u64,
+    /// Sum of parent wall time, microseconds.
+    pub wall_us: u64,
+    /// Sum of the parents' direct children's durations.
+    pub child_us: u64,
+}
+
+impl LaneCoverage {
+    /// child time / wall time (1.0 when there are no lanes).
+    pub fn fraction(&self) -> f64 {
+        if self.wall_us == 0 {
+            1.0
+        } else {
+            self.child_us as f64 / self.wall_us as f64
+        }
+    }
+}
+
+/// A full per-stage breakdown of a set of trace events.
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    /// Stats per stage name, sorted.
+    pub stages: BTreeMap<String, StageStat>,
+    /// Distinct traces seen.
+    pub traces: u64,
+    /// Events aggregated.
+    pub events: u64,
+}
+
+impl Summary {
+    /// Aggregate `events` by stage name.
+    pub fn build(events: &[TraceEvent]) -> Summary {
+        let mut s = Summary::default();
+        let mut traces = std::collections::BTreeSet::new();
+        for e in events {
+            traces.insert(e.trace);
+            s.stages.entry(e.name.clone()).or_default().push(e);
+            s.events += 1;
+        }
+        s.traces = traces.len() as u64;
+        s
+    }
+
+    /// Child coverage of every span named `parent_name`: the
+    /// acceptance-criteria number — for transfer lanes
+    /// (`chunk-transfer`), stage spans must account for the lane's
+    /// wall time to within ~10%.
+    pub fn lane_coverage(events: &[TraceEvent], parent_name: &str) -> LaneCoverage {
+        let mut cov = LaneCoverage::default();
+        for p in events.iter().filter(|e| e.name == parent_name && e.dur_us > 0) {
+            cov.lanes += 1;
+            cov.wall_us += p.dur_us;
+            cov.child_us += events
+                .iter()
+                .filter(|c| c.parent == p.span && c.trace == p.trace)
+                .map(|c| c.dur_us)
+                .sum::<u64>();
+        }
+        cov
+    }
+
+    /// Render the `drs trace summary` report.
+    pub fn render(&self, events: &[TraceEvent]) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{} spans in {} traces\n\n{:<18} {:>7} {:>5} {:>12} {:>10} {:>10} {:>10}\n",
+            self.events, self.traces, "stage", "count", "fail", "total", "mean", "p50", "p99"
+        ));
+        for (name, st) in &self.stages {
+            let mean = if st.count == 0 { 0 } else { st.total_us / st.count };
+            out.push_str(&format!(
+                "{:<18} {:>7} {:>5} {:>12} {:>10} {:>10} {:>10}\n",
+                name,
+                st.count,
+                st.failures,
+                fmt_us(st.total_us),
+                fmt_us(mean),
+                fmt_us(st.quantile(0.5)),
+                fmt_us(st.quantile(0.99)),
+            ));
+        }
+        let mut printed_header = false;
+        for lane in ["put", "get", "chunk-transfer", "repair", "scrub-slice"] {
+            let cov = Self::lane_coverage(events, lane);
+            if cov.lanes == 0 {
+                continue;
+            }
+            if !printed_header {
+                out.push_str("\nstage coverage (child time / span wall):\n");
+                printed_header = true;
+            }
+            out.push_str(&format!(
+                "  {:<16} {:>5.1}% of {} across {} span(s)\n",
+                lane,
+                cov.fraction() * 100.0,
+                fmt_us(cov.wall_us),
+                cov.lanes
+            ));
+        }
+        out
+    }
+}
+
+/// Render a per-trace breakdown for `drs put/get --stats`: the root's
+/// wall time, each stage's total, and per-chunk tail quantiles.
+pub fn render_trace_breakdown(events: &[TraceEvent]) -> String {
+    let mut out = String::new();
+    let Some(root) = events.iter().find(|e| e.parent == 0) else {
+        return "  (no spans recorded for this transfer)\n".to_string();
+    };
+    out.push_str(&format!(
+        "  {} wall {} {}\n",
+        root.name,
+        fmt_us(root.dur_us),
+        if root.ok { "" } else { "(FAILED)" }
+    ));
+    let s = Summary::build(events);
+    for (name, st) in &s.stages {
+        if name == &root.name {
+            continue;
+        }
+        out.push_str(&format!(
+            "    {:<16} n={:<4} total {} p50 {} p99 {}{}\n",
+            name,
+            st.count,
+            fmt_us(st.total_us),
+            fmt_us(st.quantile(0.5)),
+            fmt_us(st.quantile(0.99)),
+            if st.failures > 0 { format!(" ({} failed)", st.failures) } else { String::new() },
+        ));
+    }
+    let cov = Summary::lane_coverage(events, "chunk-transfer");
+    if cov.lanes > 0 {
+        out.push_str(&format!(
+            "    lane coverage: {:.1}% of chunk wall attributed to stages\n",
+            cov.fraction() * 100.0
+        ));
+    }
+    out
+}
+
+/// `1234` → `1.2ms`-style compact microsecond formatting.
+fn fmt_us(us: u64) -> String {
+    if us >= 10_000_000 {
+        format!("{:.1}s", us as f64 / 1e6)
+    } else if us >= 10_000 {
+        format!("{:.1}ms", us as f64 / 1e3)
+    } else {
+        format!("{us}us")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(trace: u64, span: u64, parent: u64, name: &str, dur: u64, ok: bool) -> TraceEvent {
+        TraceEvent {
+            trace,
+            span,
+            parent,
+            name: name.into(),
+            detail: String::new(),
+            start_us: span * 10,
+            dur_us: dur,
+            ok,
+        }
+    }
+
+    #[test]
+    fn jsonl_roundtrip_skips_torn_lines() {
+        let rec = SpanRecord {
+            trace: 3,
+            span: 7,
+            parent: 2,
+            name: "chunk-write",
+            detail: "chunk 4 SE-01".into(),
+            start_unix_us: 1_000_000,
+            dur_us: 250,
+            ok: true,
+        };
+        let text = format!("{}\n{{\"trace\": 9, \"spa\n\nnot json\n", rec.to_json());
+        let events = parse_jsonl(&text);
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0], TraceEvent::from_record(&rec));
+    }
+
+    #[test]
+    fn summary_aggregates_by_stage() {
+        let events = vec![
+            ev(1, 1, 0, "put", 1000, true),
+            ev(1, 2, 1, "chunk-transfer", 900, true),
+            ev(1, 3, 2, "chunk-write", 600, true),
+            ev(1, 4, 2, "commit", 290, false),
+            ev(2, 5, 0, "put", 500, true),
+        ];
+        let s = Summary::build(&events);
+        assert_eq!(s.traces, 2);
+        assert_eq!(s.events, 5);
+        assert_eq!(s.stages["put"].count, 2);
+        assert_eq!(s.stages["put"].total_us, 1500);
+        assert_eq!(s.stages["commit"].failures, 1);
+        let r = s.render(&events);
+        assert!(r.contains("chunk-write"));
+        assert!(r.contains("5 spans in 2 traces"));
+    }
+
+    #[test]
+    fn lane_coverage_math() {
+        let events = vec![
+            ev(1, 1, 0, "put", 1000, true),
+            ev(1, 2, 1, "chunk-transfer", 1000, true),
+            ev(1, 3, 2, "chunk-write", 700, true),
+            ev(1, 4, 2, "commit", 250, true),
+            // Same span id in a different trace must not count.
+            ev(9, 5, 2, "chunk-write", 10_000, true),
+            ev(9, 2, 0, "other", 10_000, true),
+        ];
+        let cov = Summary::lane_coverage(&events, "chunk-transfer");
+        assert_eq!(cov.lanes, 1);
+        assert_eq!(cov.wall_us, 1000);
+        assert_eq!(cov.child_us, 950);
+        assert!((cov.fraction() - 0.95).abs() < 1e-9);
+    }
+
+    #[test]
+    fn breakdown_renders_root_and_stages() {
+        let events = vec![
+            ev(1, 1, 0, "put", 2000, true),
+            ev(1, 2, 1, "encode-block", 100, true),
+            ev(1, 3, 1, "chunk-transfer", 1900, true),
+        ];
+        let text = render_trace_breakdown(&events);
+        assert!(text.contains("put wall 2000us"));
+        assert!(text.contains("encode-block"));
+        assert!(render_trace_breakdown(&[]).contains("no spans"));
+    }
+
+    #[test]
+    fn stage_quantiles() {
+        let mut st = StageStat::default();
+        for d in [10u64, 20, 30, 40, 1000] {
+            st.push(&ev(1, d, 0, "x", d, true));
+        }
+        assert_eq!(st.quantile(0.5), 30);
+        assert_eq!(st.quantile(1.0), 1000);
+        assert_eq!(st.quantile(0.0), 10);
+        assert_eq!(StageStat::default().quantile(0.5), 0);
+    }
+}

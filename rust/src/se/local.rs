@@ -9,6 +9,7 @@ use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
 
 use super::{check_up, ChunkSink, ChunkSource, NetworkProfile, StorageElement};
+use crate::obs::{tracer, SpanRef};
 use crate::{Error, Result};
 
 /// A directory-backed SE.
@@ -112,18 +113,8 @@ impl LocalSe {
         os.push(".part");
         PathBuf::from(os)
     }
-}
 
-impl StorageElement for LocalSe {
-    fn name(&self) -> &str {
-        &self.name
-    }
-
-    fn region(&self) -> &str {
-        &self.region
-    }
-
-    fn put(&self, pfn: &str, data: &[u8]) -> Result<()> {
+    fn put_impl(&self, pfn: &str, data: &[u8]) -> Result<()> {
         check_up(self)?;
         self.simulate(data.len() as u64);
         let path = self.pfn_path(pfn);
@@ -133,14 +124,14 @@ impl StorageElement for LocalSe {
         Ok(())
     }
 
-    fn get(&self, pfn: &str) -> Result<Vec<u8>> {
+    fn get_impl(&self, pfn: &str) -> Result<Vec<u8>> {
         check_up(self)?;
         let data = std::fs::read(self.pfn_path(pfn)).map_err(|e| self.io_err(e, pfn))?;
         self.simulate(data.len() as u64);
         Ok(data)
     }
 
-    fn get_range(&self, pfn: &str, offset: u64, len: usize) -> Result<Vec<u8>> {
+    fn get_range_impl(&self, pfn: &str, offset: u64, len: usize) -> Result<Vec<u8>> {
         use std::io::{Read, Seek, SeekFrom};
         check_up(self)?;
         let mut f = std::fs::File::open(self.pfn_path(pfn)).map_err(|e| self.io_err(e, pfn))?;
@@ -153,10 +144,47 @@ impl StorageElement for LocalSe {
         self.simulate(take as u64);
         Ok(buf)
     }
+}
+
+impl StorageElement for LocalSe {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn region(&self) -> &str {
+        &self.region
+    }
+
+    fn put(&self, pfn: &str, data: &[u8]) -> Result<()> {
+        // Per-op SE spans are parentless roots: the SE trait has no
+        // caller span in its signature, and the per-transfer breakdown
+        // already nests via the pipeline's `chunk-write`/`read_at` spans.
+        let sp = tracer()
+            .span_with(SpanRef::NONE, "se-put", || format!("{} {pfn}", self.name));
+        sp.finish(self.put_impl(pfn, data))
+    }
+
+    fn get(&self, pfn: &str) -> Result<Vec<u8>> {
+        let sp = tracer()
+            .span_with(SpanRef::NONE, "se-get", || format!("{} {pfn}", self.name));
+        sp.finish(self.get_impl(pfn))
+    }
+
+    fn get_range(&self, pfn: &str, offset: u64, len: usize) -> Result<Vec<u8>> {
+        let sp = tracer().span_with(SpanRef::NONE, "se-get-range", || {
+            format!("{} {pfn} @{offset}+{len}", self.name)
+        });
+        sp.finish(self.get_range_impl(pfn, offset, len))
+    }
 
     fn delete(&self, pfn: &str) -> Result<()> {
-        check_up(self)?;
-        std::fs::remove_file(self.pfn_path(pfn)).map_err(|e| self.io_err(e, pfn))
+        let sp = tracer()
+            .span_with(SpanRef::NONE, "se-delete", || format!("{} {pfn}", self.name));
+        let r = check_up(self)
+            .and_then(|()| {
+                std::fs::remove_file(self.pfn_path(pfn)).map_err(|e| self.io_err(e, pfn))
+            });
+        sp.finish(r)
     }
 
     fn exists(&self, pfn: &str) -> bool {
@@ -242,19 +270,8 @@ struct LocalSink<'a> {
     committed: bool,
 }
 
-impl ChunkSink for LocalSink<'_> {
-    fn write_block(&mut self, data: &[u8]) -> Result<()> {
-        use std::io::Write;
-        check_up(self.se)?;
-        self.se.simulate_block(data.len() as u64);
-        self.file
-            .as_mut()
-            .expect("sink already finalized")
-            .write_all(data)
-            .map_err(|e| self.se.io_err(e, &self.pfn))
-    }
-
-    fn commit(mut self: Box<Self>) -> Result<()> {
+impl LocalSink<'_> {
+    fn commit_steps(&mut self) -> Result<()> {
         use std::io::Write;
         check_up(self.se)?;
         let mut w = self.file.take().expect("sink already finalized");
@@ -263,6 +280,32 @@ impl ChunkSink for LocalSink<'_> {
         std::fs::rename(&self.tmp, &self.dest).map_err(|e| self.se.io_err(e, &self.pfn))?;
         self.committed = true;
         Ok(())
+    }
+}
+
+impl ChunkSink for LocalSink<'_> {
+    fn write_block(&mut self, data: &[u8]) -> Result<()> {
+        use std::io::Write;
+        let sp = tracer().span_with(SpanRef::NONE, "se-write-block", || {
+            format!("{} {} {} B", self.se.name, self.pfn, data.len())
+        });
+        let r = check_up(self.se).and_then(|()| {
+            self.se.simulate_block(data.len() as u64);
+            self.file
+                .as_mut()
+                .expect("sink already finalized")
+                .write_all(data)
+                .map_err(|e| self.se.io_err(e, &self.pfn))
+        });
+        sp.finish(r)
+    }
+
+    fn commit(mut self: Box<Self>) -> Result<()> {
+        let sp = tracer().span_with(SpanRef::NONE, "se-commit", || {
+            format!("{} {}", self.se.name, self.pfn)
+        });
+        let r = self.commit_steps();
+        sp.finish(r)
     }
 
     fn abort(mut self: Box<Self>) {
@@ -292,6 +335,16 @@ struct LocalSource<'a> {
 
 impl ChunkSource for LocalSource<'_> {
     fn read_at(&mut self, offset: u64, len: usize) -> Result<Vec<u8>> {
+        let sp = tracer().span_with(SpanRef::NONE, "se-read-block", || {
+            format!("{} {} @{offset}+{len}", self.se.name, self.pfn)
+        });
+        let r = self.read_at_steps(offset, len);
+        sp.finish(r)
+    }
+}
+
+impl LocalSource<'_> {
+    fn read_at_steps(&mut self, offset: u64, len: usize) -> Result<Vec<u8>> {
         use std::io::{Read, Seek, SeekFrom};
         check_up(self.se)?;
         let size = self.file.metadata().map_err(|e| self.se.io_err(e, &self.pfn))?.len();

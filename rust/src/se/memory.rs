@@ -5,6 +5,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use super::{check_up, NetworkProfile, StorageElement};
+use crate::obs::{tracer, SpanRef};
 use crate::{Error, Result};
 
 /// A deterministic in-memory SE.
@@ -60,52 +61,70 @@ impl StorageElement for MemSe {
     }
 
     fn put(&self, pfn: &str, data: &[u8]) -> Result<()> {
-        check_up(self)?;
-        let mut s = self.store.lock().unwrap();
-        if let Some(old) = s.insert(pfn.to_string(), data.to_vec()) {
-            self.used.fetch_sub(old.len() as u64, Ordering::Relaxed);
-        }
-        self.used.fetch_add(data.len() as u64, Ordering::Relaxed);
-        Ok(())
+        // Parentless per-op spans, mirroring `LocalSe` — see the note
+        // there for why SE spans are roots rather than children.
+        let sp = tracer()
+            .span_with(SpanRef::NONE, "se-put", || format!("{} {pfn}", self.name));
+        let r = check_up(self).map(|()| {
+            let mut s = self.store.lock().unwrap();
+            if let Some(old) = s.insert(pfn.to_string(), data.to_vec()) {
+                self.used.fetch_sub(old.len() as u64, Ordering::Relaxed);
+            }
+            self.used.fetch_add(data.len() as u64, Ordering::Relaxed);
+        });
+        sp.finish(r)
     }
 
     fn get(&self, pfn: &str) -> Result<Vec<u8>> {
-        check_up(self)?;
-        self.store
-            .lock()
-            .unwrap()
-            .get(pfn)
-            .cloned()
-            .ok_or_else(|| Error::Se {
-                se: self.name.clone(),
-                msg: format!("no such pfn: `{pfn}`"),
-            })
+        let sp = tracer()
+            .span_with(SpanRef::NONE, "se-get", || format!("{} {pfn}", self.name));
+        let r = check_up(self).and_then(|()| {
+            self.store
+                .lock()
+                .unwrap()
+                .get(pfn)
+                .cloned()
+                .ok_or_else(|| Error::Se {
+                    se: self.name.clone(),
+                    msg: format!("no such pfn: `{pfn}`"),
+                })
+        });
+        sp.finish(r)
     }
 
     fn get_range(&self, pfn: &str, offset: u64, len: usize) -> Result<Vec<u8>> {
-        check_up(self)?;
-        let store = self.store.lock().unwrap();
-        let all = store.get(pfn).ok_or_else(|| Error::Se {
-            se: self.name.clone(),
-            msg: format!("no such pfn: `{pfn}`"),
-        })?;
-        let start = (offset as usize).min(all.len());
-        let end = (start + len).min(all.len());
-        Ok(all[start..end].to_vec())
+        let sp = tracer().span_with(SpanRef::NONE, "se-get-range", || {
+            format!("{} {pfn} @{offset}+{len}", self.name)
+        });
+        let r = check_up(self).and_then(|()| {
+            let store = self.store.lock().unwrap();
+            let all = store.get(pfn).ok_or_else(|| Error::Se {
+                se: self.name.clone(),
+                msg: format!("no such pfn: `{pfn}`"),
+            })?;
+            let start = (offset as usize).min(all.len());
+            let end = (start + len).min(all.len());
+            Ok(all[start..end].to_vec())
+        });
+        sp.finish(r)
     }
 
     fn delete(&self, pfn: &str) -> Result<()> {
-        check_up(self)?;
-        match self.store.lock().unwrap().remove(pfn) {
-            Some(old) => {
-                self.used.fetch_sub(old.len() as u64, Ordering::Relaxed);
-                Ok(())
+        let sp = tracer()
+            .span_with(SpanRef::NONE, "se-delete", || format!("{} {pfn}", self.name));
+        let r = check_up(self).and_then(|()| {
+            match self.store.lock().unwrap().remove(pfn) {
+                Some(old) => {
+                    self.used.fetch_sub(old.len() as u64, Ordering::Relaxed);
+                    Ok(())
+                }
+                None => Err(Error::Se {
+                    se: self.name.clone(),
+                    msg: format!("no such pfn: `{pfn}`"),
+                }),
             }
-            None => Err(Error::Se {
-                se: self.name.clone(),
-                msg: format!("no such pfn: `{pfn}`"),
-            }),
-        }
+        });
+        sp.finish(r)
     }
 
     fn exists(&self, pfn: &str) -> bool {

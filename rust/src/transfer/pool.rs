@@ -96,7 +96,19 @@ impl WorkPool {
                             successes.lock().unwrap().push((idx, v));
                             success_count.fetch_add(1, Ordering::SeqCst);
                         }
-                        Err(e) => failures.lock().unwrap().push((idx, e)),
+                        Err(e) => {
+                            // Failed jobs leave a trace event (parentless:
+                            // the pool has no view of the caller's span)
+                            // so `drs trace tail` shows *which* job of a
+                            // pass failed even when the caller retries.
+                            crate::obs::tracer().event(
+                                crate::obs::SpanRef::NONE,
+                                "pool-job-error",
+                                false,
+                                || format!("job {idx}: {e}"),
+                            );
+                            failures.lock().unwrap().push((idx, e));
+                        }
                     }
                 });
             }

@@ -36,6 +36,19 @@ impl Default for RetryPolicy {
     }
 }
 
+/// Record one failed attempt against a replica as a `retry` trace event
+/// (zero-duration, `ok = false`) under `parent`. Free when tracing is
+/// disabled: the detail string is only built for an enabled tracer.
+pub(crate) fn note_attempt(
+    parent: crate::obs::SpanRef,
+    se: &str,
+    attempt: usize,
+    err: &crate::Error,
+) {
+    crate::obs::tracer()
+        .event(parent, "retry", false, || format!("se {se} attempt {attempt}: {err}"));
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
