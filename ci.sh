@@ -34,6 +34,21 @@ cargo test -q --test streaming_path
 # pipeline regression fails CI fast rather than waiting for a full run.
 cargo bench --bench streaming_path -- --quick
 
+echo "== GF backend equivalence gate (SIMD vs scalar oracle) =="
+# Every compiled GF(2⁸) compute backend (SSSE3/AVX2) must stay
+# byte-identical to the scalar oracle: ≥1000 differential matmul cases
+# over misaligned sub-slices plus full stream encode→lose-R→decode→
+# rebuild round-trips per backend, and the factory dispatch contract
+# (auto picks best, forcing is honored, forced-unavailable errors).
+# Named explicitly so a narrowed tier-1 invocation can never silently
+# drop it.
+cargo test -q --test gf_backend_equivalence
+# Smoke-run the GF throughput bench: it benches every backend
+# side-by-side and asserts the SIMD matmul speedup floor (AVX2 ≥4×
+# scalar, SSSE3-only ≥2×; skipped with a notice on CPUs without SIMD),
+# so a dispatch or kernel regression fails CI fast.
+cargo bench --bench gf_throughput -- --quick
+
 echo "== catalogue journal recovery tests (crash-consistency gate) =="
 # Intentionally re-runs a suite the line above already covered: the
 # journal recovery tests gate crash consistency and must fail loudly,

@@ -14,7 +14,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use drs::dfm::{GetOptions, PutOptions, TestCluster};
-use drs::ec::{chunk_name, Codec, EcParams, PureRustBackend};
+use drs::ec::{chunk_name, factory, Codec, EcParams};
 use drs::util::prng::Rng;
 use drs::util::{fmt_bytes, fmt_secs};
 
@@ -53,7 +53,10 @@ fn run_size(size: u64, params: EcParams, workers: usize, quick: bool, tmp: &Path
         fmt_bytes(size), fmt_bytes(BLOCK as u64));
 
     // Pure encode pass: StreamEncoder over the file, output discarded.
-    let codec = Codec::with_backend(params, STRIPE, Arc::new(PureRustBackend)).unwrap();
+    // Uses the factory's best compute backend for this CPU, like the CLI.
+    let backend = factory::auto();
+    println!("  backend  : {}", backend.name());
+    let codec = Codec::with_backend(params, STRIPE, Arc::clone(&backend)).unwrap();
     let digest = {
         use std::io::Read;
         let mut h = drs::util::sha256::Sha256::new();

@@ -487,6 +487,7 @@ pub fn dispatch(cli: &Cli) -> Result<()> {
                     }
                 }
                 None => {
+                    println!("codec backend: {}", ws.backend_name());
                     match std::fs::read_to_string(&status_file) {
                         Ok(text) => println!("{text}"),
                         Err(_) => println!(

@@ -34,7 +34,7 @@ use std::sync::Arc;
 use crate::catalog::{Dfc, ShardedDfc};
 use crate::config::Config;
 use crate::dfm::{EcShim, ReplicationManager};
-use crate::ec::{EcBackend, PureRustBackend};
+use crate::ec::{factory, BackendChoice, EcBackend};
 use crate::runtime::PjrtBackend;
 use crate::se::{LocalSe, SeRegistry, StorageElement};
 use crate::util::json::Json;
@@ -128,12 +128,30 @@ impl Workspace {
             registry.register(Arc::new(se), &[config.vo.as_str()])?;
         }
 
-        // Prefer the AOT/PJRT backend when artifacts exist.
+        // Select the coding backend. `auto` prefers the AOT/PJRT backend
+        // when its artifacts exist, then the fastest SIMD kernel this CPU
+        // supports, then scalar. An explicit `ec_backend` knob (or
+        // `DRS_EC_BACKEND`) pins the choice instead — and fails loudly if
+        // the CPU can't deliver it.
         let (backend, backend_name): (Arc<dyn EcBackend>, &'static str) =
-            match PjrtBackend::from_default_dir() {
-                Ok(b) => (Arc::new(b), "pjrt-aot"),
-                Err(_) => (Arc::new(PureRustBackend), "pure-rust"),
+            match config.ec_backend {
+                BackendChoice::Auto => match PjrtBackend::from_default_dir() {
+                    Ok(b) => (Arc::new(b), "pjrt-aot"),
+                    Err(_) => {
+                        let b = factory::auto();
+                        let name = b.name();
+                        (b, name)
+                    }
+                },
+                forced => {
+                    let b = factory::select(forced)?;
+                    let name = b.name();
+                    (b, name)
+                }
             };
+        // Surface the selection in metrics (and thus `drs status` /
+        // the Prometheus endpoint): `ec.backend.<name>` = 1.
+        crate::metrics::global().gauge(&format!("ec.backend.{backend_name}"), 1.0);
 
         Ok(Workspace {
             root: root.to_path_buf(),
@@ -145,7 +163,8 @@ impl Workspace {
         })
     }
 
-    /// Which coding backend `open` selected (`pjrt-aot` or `pure-rust`).
+    /// Which coding backend `open` selected (`pjrt-aot`, `avx2`,
+    /// `ssse3` or `scalar`).
     pub fn backend_name(&self) -> &'static str {
         self.backend_name
     }
@@ -249,6 +268,54 @@ mod tests {
         let ws2 = Workspace::open(&root).unwrap();
         assert_eq!(ws2.config.ses.len(), 4);
         std::fs::remove_dir_all(root).unwrap();
+    }
+
+    #[test]
+    fn backend_selection_forced_auto_and_metrics() {
+        // Forced scalar: honored, named, and surfaced through metrics.
+        let root = tmp("backend-scalar");
+        let mut cfg = Config::default();
+        cfg.ses.truncate(2);
+        cfg.ec_backend = BackendChoice::Scalar;
+        let ws = Workspace::init(&root, cfg).unwrap();
+        assert_eq!(ws.backend_name(), "scalar");
+        assert!(crate::metrics::global()
+            .gauges()
+            .iter()
+            .any(|(n, v)| n == "ec.backend.scalar" && *v == 1.0));
+        drop(ws);
+        std::fs::remove_dir_all(&root).unwrap();
+
+        // Auto (no pjrt artifacts in test workspaces): resolves to the
+        // factory's pick for this CPU.
+        let root = tmp("backend-auto");
+        let mut cfg = Config::default();
+        cfg.ses.truncate(2);
+        let ws = Workspace::init(&root, cfg).unwrap();
+        let expected = factory::resolve(BackendChoice::Auto, crate::ec::CpuCaps::detect())
+            .unwrap();
+        assert_eq!(ws.backend_name(), expected);
+        drop(ws);
+        std::fs::remove_dir_all(&root).unwrap();
+
+        // Forcing a SIMD backend: honored when the CPU has it, a clear
+        // config error otherwise (never a silent fallback).
+        let caps = crate::ec::CpuCaps::detect();
+        let root = tmp("backend-avx2");
+        let mut cfg = Config::default();
+        cfg.ses.truncate(2);
+        cfg.ec_backend = BackendChoice::Avx2;
+        match Workspace::init(&root, cfg) {
+            Ok(ws) => {
+                assert!(caps.avx2);
+                assert_eq!(ws.backend_name(), "avx2");
+            }
+            Err(e) => {
+                assert!(!caps.avx2);
+                assert!(e.to_string().contains("avx2"));
+            }
+        }
+        std::fs::remove_dir_all(&root).unwrap();
     }
 
     #[test]

@@ -10,6 +10,7 @@
 //! {
 //!   "vo": "na62",
 //!   "ec": {"k": 10, "m": 5, "stripe_b": 65536},
+//!   "ec_backend": "auto",
 //!   "placement": "round-robin",
 //!   "workers": 5,
 //!   "transfer_block_bytes": 4194304,
@@ -35,7 +36,7 @@
 
 use std::path::Path;
 
-use crate::ec::EcParams;
+use crate::ec::{BackendChoice, EcParams};
 use crate::se::NetworkProfile;
 use crate::util::json::Json;
 use crate::{Error, Result};
@@ -109,6 +110,12 @@ pub struct Config {
     pub params: EcParams,
     /// Stripe width in bytes.
     pub stripe_b: usize,
+    /// Which GF(2⁸) compute backend the codec uses
+    /// (`auto|scalar|ssse3|avx2`). `auto` picks the fastest the CPU
+    /// supports at startup; forcing an unsupported backend fails the
+    /// workspace open with a clear error. All backends produce
+    /// byte-identical chunks (see `tests/gf_backend_equivalence.rs`).
+    pub ec_backend: BackendChoice,
     /// Chunk → SE placement policy.
     pub policy: PolicyKind,
     /// Client region (used by the region-aware policy).
@@ -167,6 +174,7 @@ impl Default for Config {
             vo: "demo".into(),
             params: EcParams::paper_default(),
             stripe_b: crate::ec::DEFAULT_STRIPE_B,
+            ec_backend: BackendChoice::Auto,
             policy: PolicyKind::RoundRobin,
             client_region: "uk".into(),
             workers: 1,
@@ -208,6 +216,9 @@ impl Config {
             if let Some(sb) = ec.get("stripe_b").and_then(Json::as_u64) {
                 cfg.stripe_b = sb as usize;
             }
+        }
+        if let Some(b) = j.get("ec_backend").and_then(Json::as_str) {
+            cfg.ec_backend = BackendChoice::parse(b)?;
         }
         if let Some(p) = j.get("placement").and_then(Json::as_str) {
             cfg.policy = PolicyKind::parse(p)?;
@@ -307,6 +318,7 @@ impl Config {
                     ("stripe_b", Json::num(self.stripe_b as f64)),
                 ]),
             ),
+            ("ec_backend", Json::str(self.ec_backend.as_str())),
             ("placement", Json::str(self.policy.as_str())),
             ("client_region", Json::str(self.client_region.clone())),
             ("workers", Json::num(self.workers as f64)),
@@ -378,7 +390,8 @@ impl Config {
     }
 
     /// Apply environment overrides: `DRS_VO`, `DRS_WORKERS`, `DRS_K`,
-    /// `DRS_M`, `DRS_STRIPE_B`, `DRS_PLACEMENT`, `DRS_TRANSFER_BLOCK_BYTES`,
+    /// `DRS_M`, `DRS_STRIPE_B`, `DRS_EC_BACKEND`, `DRS_PLACEMENT`,
+    /// `DRS_TRANSFER_BLOCK_BYTES`,
     /// `DRS_CATALOG_SHARDS`,
     /// `DRS_JOURNAL_SEGMENT_BYTES`, `DRS_JOURNAL_CHECKPOINT_OPS`,
     /// `DRS_MAINTAIN_SCRUB_INTERVAL_S`, `DRS_MAINTAIN_SCRUB_SLICE`,
@@ -471,6 +484,11 @@ impl Config {
                 self.stripe_b = sb.max(1);
             }
         }
+        if let Ok(b) = std::env::var("DRS_EC_BACKEND") {
+            if let Ok(b) = BackendChoice::parse(&b) {
+                self.ec_backend = b;
+            }
+        }
         if let Ok(p) = std::env::var("DRS_PLACEMENT") {
             if let Ok(p) = PolicyKind::parse(&p) {
                 self.policy = p;
@@ -524,6 +542,27 @@ mod tests {
         c.apply_env();
         std::env::remove_var("DRS_TRANSFER_BLOCK_BYTES");
         assert_eq!(c.transfer_block_bytes, 65536);
+    }
+
+    #[test]
+    fn ec_backend_roundtrip_env_and_default() {
+        // Old configs (no ec_backend key) get runtime auto-selection.
+        let c = Config::from_json(&Json::parse(r#"{"vo":"demo"}"#).unwrap()).unwrap();
+        assert_eq!(c.ec_backend, BackendChoice::Auto);
+
+        let c = Config { ec_backend: BackendChoice::Scalar, ..Config::default() };
+        let back = Config::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.ec_backend, BackendChoice::Scalar);
+
+        // A bad knob value is a hard config error, not a silent default.
+        let j = Json::parse(r#"{"ec_backend":"neon"}"#).unwrap();
+        assert!(Config::from_json(&j).is_err());
+
+        let mut c = Config::default();
+        std::env::set_var("DRS_EC_BACKEND", "ssse3");
+        c.apply_env();
+        std::env::remove_var("DRS_EC_BACKEND");
+        assert_eq!(c.ec_backend, BackendChoice::Ssse3);
     }
 
     #[test]

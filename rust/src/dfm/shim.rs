@@ -185,7 +185,9 @@ impl EcShim {
         digest: [u8; 32],
         opts: &PutOptions,
     ) -> Result<(Vec<String>, StreamStats)> {
-        let root = tracer().span_with(SpanRef::NONE, "put", || lfn.to_string());
+        let root = tracer().span_with(SpanRef::NONE, "put", || {
+            format!("{lfn} backend={}", self.backend.name())
+        });
         let trace = root.handle();
         let res = self.put_stream_steps(lfn, source, digest, opts, trace);
         root.finish(res).map(|(names, mut stats)| {
@@ -464,7 +466,9 @@ impl EcShim {
         sink: &mut dyn stream::BlockSink,
         opts: &GetOptions,
     ) -> Result<(u64, StreamStats)> {
-        let root = tracer().span_with(SpanRef::NONE, "get", || lfn.to_string());
+        let root = tracer().span_with(SpanRef::NONE, "get", || {
+            format!("{lfn} backend={}", self.backend.name())
+        });
         let trace = root.handle();
         let res = self.get_into_steps(lfn, sink, opts, trace);
         root.finish(res).map(|(bytes, mut stats)| {
@@ -647,7 +651,9 @@ impl EcShim {
         opts: &GetOptions,
         excluded: &[String],
     ) -> Result<usize> {
-        let root = tracer().span_with(SpanRef::NONE, "repair", || lfn.to_string());
+        let root = tracer().span_with(SpanRef::NONE, "repair", || {
+            format!("{lfn} backend={}", self.backend.name())
+        });
         let parent = root.handle();
         root.finish(self.repair_excluding_steps(lfn, opts, excluded, parent))
     }

@@ -1,0 +1,204 @@
+//! Startup backend selection: CPU-feature detection plus the
+//! `ec_backend` config knob / `DRS_EC_BACKEND` env forcing.
+//!
+//! Dispatch order under `auto` is fastest-first: AVX2 → SSSE3 → scalar
+//! (the CLI [`crate::cli::Workspace`] additionally prefers the PJRT AOT
+//! backend when its artifacts exist). Forcing a backend the CPU lacks is
+//! a hard, clearly worded [`Error::Config`] rather than a silent
+//! fallback — an operator pinning `avx2` for performance wants to know
+//! the fleet node that can't deliver it.
+//!
+//! [`resolve`] is the pure decision function (unit-testable against
+//! synthetic [`CpuCaps`]); [`select`] resolves against the real CPU and
+//! constructs the backend.
+
+use std::sync::Arc;
+
+use crate::{Error, Result};
+
+use super::{EcBackend, PureRustBackend};
+
+/// The `ec_backend` knob: which stripe backend the codec should use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum BackendChoice {
+    /// Pick the fastest available backend at startup (the default).
+    #[default]
+    Auto,
+    /// Force the scalar oracle (`PureRustBackend`).
+    Scalar,
+    /// Force the 128-bit PSHUFB kernel; error if the CPU lacks SSSE3.
+    Ssse3,
+    /// Force the 256-bit PSHUFB kernel; error if the CPU lacks AVX2.
+    Avx2,
+}
+
+impl BackendChoice {
+    /// Parse a knob value as it appears in `drs.json` / `DRS_EC_BACKEND`.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "auto" => Ok(BackendChoice::Auto),
+            "scalar" => Ok(BackendChoice::Scalar),
+            "ssse3" => Ok(BackendChoice::Ssse3),
+            "avx2" => Ok(BackendChoice::Avx2),
+            other => Err(Error::Config(format!(
+                "unknown ec backend `{other}` (expected auto|scalar|ssse3|avx2)"
+            ))),
+        }
+    }
+
+    /// The knob's `drs.json` spelling.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BackendChoice::Auto => "auto",
+            BackendChoice::Scalar => "scalar",
+            BackendChoice::Ssse3 => "ssse3",
+            BackendChoice::Avx2 => "avx2",
+        }
+    }
+}
+
+/// The vector ISAs the running CPU offers (as far as the codec cares).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CpuCaps {
+    /// 128-bit PSHUFB available.
+    pub ssse3: bool,
+    /// 256-bit shuffle available (implies `ssse3` on real CPUs).
+    pub avx2: bool,
+}
+
+impl CpuCaps {
+    /// Probe the running CPU (cached CPUID on x86_64; all-false on
+    /// targets the SIMD kernels aren't compiled for).
+    pub fn detect() -> Self {
+        #[cfg(target_arch = "x86_64")]
+        {
+            CpuCaps {
+                ssse3: crate::gf::simd::has_ssse3(),
+                avx2: crate::gf::simd::has_avx2(),
+            }
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            CpuCaps { ssse3: false, avx2: false }
+        }
+    }
+}
+
+/// Resolve `choice` against `caps` to the backend name [`select`] would
+/// build: the pure decision logic, testable with synthetic caps.
+///
+/// `auto` never fails (scalar is always available); a forced SIMD
+/// backend the CPU lacks is a clear [`Error::Config`].
+pub fn resolve(choice: BackendChoice, caps: CpuCaps) -> Result<&'static str> {
+    match choice {
+        BackendChoice::Scalar => Ok("scalar"),
+        BackendChoice::Auto => Ok(if caps.avx2 {
+            "avx2"
+        } else if caps.ssse3 {
+            "ssse3"
+        } else {
+            "scalar"
+        }),
+        BackendChoice::Ssse3 if caps.ssse3 => Ok("ssse3"),
+        BackendChoice::Avx2 if caps.avx2 => Ok("avx2"),
+        forced => Err(Error::Config(format!(
+            "ec backend `{}` forced (ec_backend / DRS_EC_BACKEND) but this \
+             CPU does not support it; use `auto` for runtime selection",
+            forced.as_str()
+        ))),
+    }
+}
+
+/// Build the backend `choice` resolves to on the running CPU.
+pub fn select(choice: BackendChoice) -> Result<Arc<dyn EcBackend>> {
+    let name = resolve(choice, CpuCaps::detect())?;
+    Ok(match name {
+        #[cfg(target_arch = "x86_64")]
+        "ssse3" => Arc::new(super::simd::SimdBackend::new(super::simd::SimdIsa::Ssse3)?),
+        #[cfg(target_arch = "x86_64")]
+        "avx2" => Arc::new(super::simd::SimdBackend::new(super::simd::SimdIsa::Avx2)?),
+        _ => Arc::new(PureRustBackend),
+    })
+}
+
+/// The best backend for this CPU — `select(Auto)`, which cannot fail.
+pub fn auto() -> Arc<dyn EcBackend> {
+    select(BackendChoice::Auto).unwrap_or_else(|_| Arc::new(PureRustBackend))
+}
+
+/// Every backend that can run on this CPU: the scalar oracle first, then
+/// each compiled-and-detected SIMD variant (for benches and the
+/// differential test harness).
+pub fn available() -> Vec<Arc<dyn EcBackend>> {
+    let mut v: Vec<Arc<dyn EcBackend>> = vec![Arc::new(PureRustBackend)];
+    #[cfg(target_arch = "x86_64")]
+    {
+        use super::simd::{SimdBackend, SimdIsa};
+        for isa in [SimdIsa::Ssse3, SimdIsa::Avx2] {
+            if let Ok(b) = SimdBackend::new(isa) {
+                v.push(Arc::new(b));
+            }
+        }
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const NONE: CpuCaps = CpuCaps { ssse3: false, avx2: false };
+    const SSSE3_ONLY: CpuCaps = CpuCaps { ssse3: true, avx2: false };
+    const ALL: CpuCaps = CpuCaps { ssse3: true, avx2: true };
+
+    #[test]
+    fn auto_prefers_widest_isa() {
+        assert_eq!(resolve(BackendChoice::Auto, ALL).unwrap(), "avx2");
+        assert_eq!(resolve(BackendChoice::Auto, SSSE3_ONLY).unwrap(), "ssse3");
+        assert_eq!(resolve(BackendChoice::Auto, NONE).unwrap(), "scalar");
+    }
+
+    #[test]
+    fn scalar_always_resolves() {
+        for caps in [NONE, SSSE3_ONLY, ALL] {
+            assert_eq!(resolve(BackendChoice::Scalar, caps).unwrap(), "scalar");
+        }
+    }
+
+    #[test]
+    fn forced_unavailable_is_clear_error() {
+        let err = resolve(BackendChoice::Avx2, SSSE3_ONLY).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("avx2") && msg.contains("auto"), "unclear: {msg}");
+        assert!(resolve(BackendChoice::Ssse3, NONE).is_err());
+        assert_eq!(resolve(BackendChoice::Ssse3, SSSE3_ONLY).unwrap(), "ssse3");
+    }
+
+    #[test]
+    fn parse_roundtrip_and_reject() {
+        for s in ["auto", "scalar", "ssse3", "avx2"] {
+            assert_eq!(BackendChoice::parse(s).unwrap().as_str(), s);
+        }
+        assert!(BackendChoice::parse("neon").is_err());
+        assert_eq!(BackendChoice::default(), BackendChoice::Auto);
+    }
+
+    #[test]
+    fn select_auto_matches_detection_and_works() {
+        let b = auto();
+        assert_eq!(b.name(), resolve(BackendChoice::Auto, CpuCaps::detect()).unwrap());
+        let data: Vec<Vec<u8>> = vec![vec![3u8; 100], vec![7u8; 100]];
+        let refs: Vec<&[u8]> = data.iter().map(|v| v.as_slice()).collect();
+        let got = b.matmul(&crate::gf::GfMatrix::identity(2), &refs).unwrap();
+        assert_eq!(got, data);
+    }
+
+    #[test]
+    fn available_lists_oracle_first() {
+        let all = available();
+        assert_eq!(all[0].name(), "scalar");
+        let caps = CpuCaps::detect();
+        let want = 1 + usize::from(caps.ssse3) + usize::from(caps.avx2);
+        assert_eq!(all.len(), want);
+    }
+}

@@ -1,0 +1,191 @@
+//! The SIMD stripe backend: [`EcBackend`] over the split-nibble PSHUFB
+//! kernels in [`crate::gf::simd`] (x86_64 only).
+//!
+//! Construction is *checked*: [`SimdBackend::new`] refuses an ISA the
+//! running CPU lacks, so every kernel call after that is sound by
+//! construction. The row loop mirrors [`super::PureRustBackend`] exactly
+//! (first nonzero coefficient writes, the rest accumulate), which keeps
+//! the two byte-identical — enforced by `tests/gf_backend_equivalence.rs`.
+
+use crate::gf::GfMatrix;
+use crate::{Error, Result};
+
+use super::{validate_shapes, EcBackend};
+
+/// Which vector ISA a [`SimdBackend`] runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdIsa {
+    /// 128-bit PSHUFB kernel (16 lookups per shuffle pair).
+    Ssse3,
+    /// 256-bit kernel (32 lookups per shuffle pair); implies SSSE3.
+    Avx2,
+}
+
+impl SimdIsa {
+    /// The ISA's knob spelling (also the backend [`EcBackend::name`]).
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdIsa::Ssse3 => "ssse3",
+            SimdIsa::Avx2 => "avx2",
+        }
+    }
+
+    /// Whether the running CPU supports this ISA (cached detection).
+    pub fn available(self) -> bool {
+        match self {
+            SimdIsa::Ssse3 => crate::gf::simd::has_ssse3(),
+            SimdIsa::Avx2 => crate::gf::simd::has_avx2(),
+        }
+    }
+}
+
+/// SIMD-accelerated stripe backend (SSSE3 or AVX2 kernels).
+#[derive(Clone, Copy, Debug)]
+pub struct SimdBackend {
+    isa: SimdIsa,
+}
+
+impl SimdBackend {
+    /// Build a backend for `isa`, verifying CPU support first — the
+    /// soundness anchor for every later (unsafe) kernel call.
+    pub fn new(isa: SimdIsa) -> Result<Self> {
+        if !isa.available() {
+            return Err(Error::Config(format!(
+                "ec backend `{}` is not supported by this CPU (use `auto`)",
+                isa.name()
+            )));
+        }
+        Ok(SimdBackend { isa })
+    }
+
+    /// The ISA this backend was constructed for.
+    pub fn isa(&self) -> SimdIsa {
+        self.isa
+    }
+
+    /// `dst (^)= c · src` through the ISA's kernel. `c == 0` is handled
+    /// here (the kernels accept it, but skipping the pass is free).
+    fn apply(&self, c: u8, src: &[u8], dst: &mut [u8], xor_into: bool) {
+        if c == 0 {
+            if !xor_into {
+                dst.fill(0);
+            }
+            return;
+        }
+        match self.isa {
+            // SAFETY: `new` verified the ISA's CPU feature bit, and
+            // `matmul_into` validated all rows equal-length before any
+            // `apply` call.
+            SimdIsa::Ssse3 => unsafe { crate::gf::simd::mul_slice_ssse3(c, src, dst, xor_into) },
+            // SAFETY: as above, for AVX2.
+            SimdIsa::Avx2 => unsafe { crate::gf::simd::mul_slice_avx2(c, src, dst, xor_into) },
+        }
+    }
+}
+
+impl EcBackend for SimdBackend {
+    fn matmul(&self, mat: &GfMatrix, data: &[&[u8]]) -> Result<Vec<Vec<u8>>> {
+        let stripe_b = data.first().map_or(0, |r| r.len());
+        let mut out = vec![vec![0u8; stripe_b]; mat.rows()];
+        let mut refs: Vec<&mut [u8]> = out.iter_mut().map(|v| v.as_mut_slice()).collect();
+        self.matmul_into(mat, data, &mut refs)?;
+        Ok(out)
+    }
+
+    fn matmul_into(
+        &self,
+        mat: &GfMatrix,
+        data: &[&[u8]],
+        out: &mut [&mut [u8]],
+    ) -> Result<()> {
+        validate_shapes(mat, data, out)?;
+        for (i, out_row) in out.iter_mut().enumerate() {
+            let mut initialized = false;
+            for (k, src) in data.iter().enumerate() {
+                let c = mat.get(i, k);
+                if c == 0 {
+                    continue;
+                }
+                self.apply(c, src, out_row, initialized);
+                initialized = true;
+            }
+            if !initialized {
+                out_row.fill(0);
+            }
+        }
+        Ok(())
+    }
+
+    fn name(&self) -> &'static str {
+        self.isa.name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ec::backend::PureRustBackend;
+    use crate::testkit::forall;
+
+    fn compiled_backends() -> Vec<SimdBackend> {
+        [SimdIsa::Ssse3, SimdIsa::Avx2]
+            .into_iter()
+            .filter_map(|isa| SimdBackend::new(isa).ok())
+            .collect()
+    }
+
+    #[test]
+    fn new_rejects_unavailable_isa() {
+        for isa in [SimdIsa::Ssse3, SimdIsa::Avx2] {
+            match SimdBackend::new(isa) {
+                Ok(b) => assert_eq!(b.name(), isa.name()),
+                Err(e) => {
+                    assert!(!isa.available());
+                    assert!(e.to_string().contains(isa.name()), "unclear error: {e}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matches_oracle_on_random_shapes() {
+        let backends = compiled_backends();
+        if backends.is_empty() {
+            eprintln!("notice: no SIMD ISA available — oracle comparison skipped");
+            return;
+        }
+        for b in backends {
+            forall(30, |rng| {
+                let k = 1 + rng.index(8);
+                let rows = 1 + rng.index(6);
+                let len = 1 + rng.index(700);
+                let mut mat = GfMatrix::zero(rows, k);
+                for r in 0..rows {
+                    for c in 0..k {
+                        mat.set(r, c, rng.byte());
+                    }
+                }
+                let data: Vec<Vec<u8>> = (0..k).map(|_| rng.bytes(len)).collect();
+                let refs: Vec<&[u8]> = data.iter().map(|v| v.as_slice()).collect();
+                assert_eq!(
+                    b.matmul(&mat, &refs).unwrap(),
+                    PureRustBackend.matmul(&mat, &refs).unwrap(),
+                    "{} diverged (k={k} rows={rows} len={len})",
+                    b.name()
+                );
+            });
+        }
+    }
+
+    #[test]
+    fn shape_errors_match_oracle_contract() {
+        for b in compiled_backends() {
+            let data = [&[1u8, 2][..]];
+            assert!(b.matmul(&GfMatrix::identity(2), &data).is_err());
+            let r1 = [1u8, 2];
+            let r2 = [1u8];
+            let ragged = [&r1[..], &r2[..]];
+            assert!(b.matmul(&GfMatrix::identity(2), &ragged).is_err());
+        }
+    }
+}

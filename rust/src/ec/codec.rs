@@ -22,7 +22,7 @@
 
 use std::sync::Arc;
 
-use crate::ec::backend::{EcBackend, PureRustBackend};
+use crate::ec::backend::{factory, EcBackend};
 use crate::ec::chunk::{sha256, ChunkHeader};
 use crate::ec::params::EcParams;
 use crate::ec::stripe::{
@@ -40,9 +40,12 @@ pub struct Codec {
 }
 
 impl Codec {
-    /// Codec with the default stripe width and the pure-rust backend.
+    /// Codec with the default stripe width and the best auto-selected
+    /// compute backend for this CPU (AVX2 → SSSE3 → scalar; see
+    /// [`crate::ec::backend::factory`]). All backends produce
+    /// byte-identical chunks, so the choice is purely a speed knob.
     pub fn new(params: EcParams) -> Result<Self> {
-        Self::with_backend(params, DEFAULT_STRIPE_B, Arc::new(PureRustBackend))
+        Self::with_backend(params, DEFAULT_STRIPE_B, factory::auto())
     }
 
     /// Codec with an explicit stripe width and compute backend.
@@ -725,6 +728,7 @@ pub fn decode_matrix(params: EcParams, present: &[usize]) -> Result<GfMatrix> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::ec::backend::PureRustBackend;
     use crate::testkit::forall;
 
     fn codec(k: usize, m: usize, sb: usize) -> Codec {

@@ -2,9 +2,10 @@
 //! AOT kernel geometry, packaged in zfec-compatible chunk containers.
 //!
 //! * [`params`] — `EcParams{k, m}` validation and derived quantities.
-//! * [`backend`] — the stripe compute backend trait; [`PureRustBackend`]
-//!   lives here, the PJRT-loaded pallas kernel backend lives in
-//!   [`crate::runtime`].
+//! * [`backend`] — the stripe compute backend trait: the scalar oracle
+//!   [`PureRustBackend`], the SSSE3/AVX2 SIMD backend, and the startup
+//!   [`backend::factory`] that picks between them (the PJRT-loaded
+//!   pallas kernel backend lives in [`crate::runtime`]).
 //! * [`stripe`] — file ⇄ stripe-matrix layout (padding, tail handling).
 //! * [`codec`] — encode/decode whole files; decode-matrix construction.
 //! * [`chunk`] — on-the-wire chunk container (header + payload) and the
@@ -16,7 +17,9 @@ pub mod codec;
 pub mod params;
 pub mod stripe;
 
-pub use backend::{EcBackend, PureRustBackend};
+pub use backend::{factory, BackendChoice, CpuCaps, EcBackend, PureRustBackend};
+#[cfg(target_arch = "x86_64")]
+pub use backend::{SimdBackend, SimdIsa};
 pub use chunk::{chunk_name, parse_chunk_name, ChunkHeader};
 pub use codec::{
     rebuild_matrix, Codec, EncodedBlock, SegmentDecoder, StreamDecoder, StreamEncoder,

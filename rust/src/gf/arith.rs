@@ -76,9 +76,7 @@ pub fn mul_slice(c: u8, src: &[u8], dst: &mut [u8]) {
         1 => dst.copy_from_slice(src),
         _ => {
             #[cfg(target_arch = "x86_64")]
-            if simd::available() && dst.len() >= 32 {
-                // SAFETY: AVX2 presence checked at runtime.
-                unsafe { simd::mul_slice_avx2(c, src, dst, false) };
+            if super::simd::mul_slice_dispatch(c, src, dst, false) {
                 return;
             }
             mul_slice_scalar(c, src, dst);
@@ -86,8 +84,11 @@ pub fn mul_slice(c: u8, src: &[u8], dst: &mut [u8]) {
     }
 }
 
+/// Scalar (table-driven) `dst = c · src`: the portable fallback and the
+/// correctness oracle the SIMD kernels are fuzzed against
+/// (`tests/gf_backend_equivalence.rs`). Never dispatches to SIMD.
 #[inline]
-fn mul_slice_scalar(c: u8, src: &[u8], dst: &mut [u8]) {
+pub fn mul_slice_scalar(c: u8, src: &[u8], dst: &mut [u8]) {
     let row = &TABLES.mul[c as usize];
     for (d, &s) in dst.iter_mut().zip(src.iter()) {
         *d = row[s as usize];
@@ -96,10 +97,11 @@ fn mul_slice_scalar(c: u8, src: &[u8], dst: &mut [u8]) {
 
 /// dst ^= c · src element-wise — the innermost codec kernel.
 ///
-/// Perf pass (EXPERIMENTS.md §Perf): dispatches to an AVX2 PSHUFB kernel
-/// (the ISA-L technique — 4-bit split tables, 32 bytes per shuffle pair)
-/// when the CPU supports it; the scalar path below is the fallback and
-/// the correctness reference.
+/// Perf pass (EXPERIMENTS.md §Perf): dispatches to the best available
+/// PSHUFB kernel in [`crate::gf::simd`] (the ISA-L technique — 4-bit
+/// split tables, 16/32 bytes per shuffle pair, AVX2 preferred over
+/// SSSE3) when the CPU supports one; the scalar path below is the
+/// portable fallback and the correctness reference.
 #[inline]
 pub fn mul_xor_slice(c: u8, src: &[u8], dst: &mut [u8]) {
     assert_eq!(dst.len(), src.len());
@@ -108,9 +110,7 @@ pub fn mul_xor_slice(c: u8, src: &[u8], dst: &mut [u8]) {
         1 => xor_slice(dst, src),
         _ => {
             #[cfg(target_arch = "x86_64")]
-            if simd::available() && dst.len() >= 32 {
-                // SAFETY: AVX2 presence checked at runtime.
-                unsafe { simd::mul_slice_avx2(c, src, dst, true) };
+            if super::simd::mul_slice_dispatch(c, src, dst, true) {
                 return;
             }
             mul_xor_slice_scalar(c, src, dst);
@@ -118,8 +118,11 @@ pub fn mul_xor_slice(c: u8, src: &[u8], dst: &mut [u8]) {
     }
 }
 
+/// Scalar (table-driven) `dst ^= c · src`: the portable fallback and the
+/// correctness oracle the SIMD kernels are fuzzed against
+/// (`tests/gf_backend_equivalence.rs`). Never dispatches to SIMD.
 #[inline]
-fn mul_xor_slice_scalar(c: u8, src: &[u8], dst: &mut [u8]) {
+pub fn mul_xor_slice_scalar(c: u8, src: &[u8], dst: &mut [u8]) {
     let row = &TABLES.mul[c as usize];
     // Unroll by 4 to keep one table row hot and give the scheduler
     // independent loads; `row` is 256 B = 4 cache lines.
@@ -134,73 +137,6 @@ fn mul_xor_slice_scalar(c: u8, src: &[u8], dst: &mut [u8]) {
     }
     for (d, &s) in dt.iter_mut().zip(st.iter()) {
         *d ^= row[s as usize];
-    }
-}
-
-#[cfg(target_arch = "x86_64")]
-mod simd {
-    //! AVX2 GF(2⁸) constant-multiply kernel (ISA-L / PSHUFB technique).
-    //!
-    //! For a fixed constant `c`, `mul(c, x) = LO[c][x & 0xF] ^ HI[c][x >> 4]`
-    //! (linearity of the field over GF(2)); with the two 16-entry tables in
-    //! ymm registers, `_mm256_shuffle_epi8` performs 32 lookups per
-    //! instruction.
-
-    use super::TABLES;
-    use std::arch::x86_64::*;
-
-    /// Whether the AVX2 path can run on this CPU (cached detection).
-    pub fn available() -> bool {
-        use std::sync::atomic::{AtomicU8, Ordering};
-        static CACHED: AtomicU8 = AtomicU8::new(2);
-        match CACHED.load(Ordering::Relaxed) {
-            2 => {
-                let ok = std::is_x86_feature_detected!("avx2");
-                CACHED.store(ok as u8, Ordering::Relaxed);
-                ok
-            }
-            v => v == 1,
-        }
-    }
-
-    /// dst = c·src (xor_into = false) or dst ^= c·src (xor_into = true).
-    ///
-    /// # Safety
-    /// Caller must ensure AVX2 is available and `src.len() == dst.len()`.
-    #[target_feature(enable = "avx2")]
-    pub unsafe fn mul_slice_avx2(c: u8, src: &[u8], dst: &mut [u8], xor_into: bool) {
-        let lo_tbl = &TABLES.mul_lo[c as usize];
-        let hi_tbl = &TABLES.mul_hi[c as usize];
-        // Broadcast each 16-byte table into both 128-bit lanes.
-        let lo = _mm256_broadcastsi128_si256(_mm_loadu_si128(lo_tbl.as_ptr() as *const __m128i));
-        let hi = _mm256_broadcastsi128_si256(_mm_loadu_si128(hi_tbl.as_ptr() as *const __m128i));
-        let mask = _mm256_set1_epi8(0x0F);
-
-        let n = src.len() / 32 * 32;
-        let mut i = 0usize;
-        while i < n {
-            let x = _mm256_loadu_si256(src.as_ptr().add(i) as *const __m256i);
-            let x_lo = _mm256_and_si256(x, mask);
-            let x_hi = _mm256_and_si256(_mm256_srli_epi16(x, 4), mask);
-            let prod = _mm256_xor_si256(
-                _mm256_shuffle_epi8(lo, x_lo),
-                _mm256_shuffle_epi8(hi, x_hi),
-            );
-            let out = if xor_into {
-                let d = _mm256_loadu_si256(dst.as_ptr().add(i) as *const __m256i);
-                _mm256_xor_si256(prod, d)
-            } else {
-                prod
-            };
-            _mm256_storeu_si256(dst.as_mut_ptr().add(i) as *mut __m256i, out);
-            i += 32;
-        }
-        // Scalar tail.
-        let row = &TABLES.mul[c as usize];
-        for j in n..src.len() {
-            let p = row[src[j] as usize];
-            dst[j] = if xor_into { dst[j] ^ p } else { p };
-        }
     }
 }
 

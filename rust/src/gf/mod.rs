@@ -7,16 +7,25 @@
 //! at artifact-build time.
 //!
 //! Layout:
-//! * [`tables`] — lazily built log/exp/mul lookup tables.
-//! * [`arith`] — scalar ops and the slice kernels (`mul_slice`,
-//!   `mul_xor_slice`) that form the pure-rust codec hot path.
+//! * [`tables`] — lazily built log/exp/mul lookup tables (including the
+//!   4-bit split tables the SIMD kernels shuffle against).
+//! * [`arith`] — scalar ops and the auto-dispatching slice kernels
+//!   (`mul_slice`, `mul_xor_slice`) that form the codec hot path, plus
+//!   the `*_scalar` variants that serve as the correctness oracle.
+//! * [`simd`] (x86_64) — SSSE3/AVX2 split-nibble PSHUFB kernels with
+//!   runtime CPU-feature detection and scalar head/tail fixup.
 //! * [`matrix`] — dense byte matrices: multiply, invert, rank,
 //!   Cauchy/Vandermonde generators.
 
 pub mod arith;
 pub mod matrix;
+#[cfg(target_arch = "x86_64")]
+pub mod simd;
 pub mod tables;
 
-pub use arith::{add, div, inv, mul, mul_slice, mul_xor_slice, pow, xor_slice};
+pub use arith::{
+    add, div, inv, mul, mul_slice, mul_slice_scalar, mul_xor_slice, mul_xor_slice_scalar, pow,
+    xor_slice,
+};
 pub use matrix::GfMatrix;
 pub use tables::GF_POLY;

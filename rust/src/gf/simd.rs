@@ -1,0 +1,302 @@
+//! SSSE3/AVX2 GF(2⁸) constant-multiply slice kernels (split-nibble PSHUFB).
+//!
+//! For a fixed constant `c`, linearity of the field over GF(2) gives
+//! `mul(c, x) = MUL_LO[c][x & 0xF] ^ MUL_HI[c][x >> 4]` — two 16-entry
+//! tables that fit a 128-bit register each, so `_mm_shuffle_epi8` /
+//! `_mm256_shuffle_epi8` performs 16 / 32 lookups per instruction (the
+//! ISA-L / `reed_solomon_simd` technique). This module holds the raw
+//! kernels; the codec-facing wrappers live in
+//! [`crate::ec::backend::simd`] and the auto-dispatching slice ops in
+//! [`crate::gf::arith`].
+//!
+//! Every kernel handles *any* slice length and alignment: a scalar head
+//! runs until the destination reaches vector alignment (so the vector
+//! body can use aligned stores), then a scalar tail covers the sub-vector
+//! remainder.
+
+#![deny(unsafe_op_in_unsafe_fn)]
+
+use std::arch::x86_64::*;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use super::tables::TABLES;
+
+/// Byte width of one SSSE3 vector.
+pub const SSSE3_WIDTH: usize = 16;
+/// Byte width of one AVX2 vector.
+pub const AVX2_WIDTH: usize = 32;
+
+const CAPS_INIT: u8 = 1;
+const CAPS_SSSE3: u8 = 2;
+const CAPS_AVX2: u8 = 4;
+
+/// CPUID feature probe, run once and cached (the probe costs ~100ns but
+/// sits on the per-slice hot path).
+fn caps() -> u8 {
+    static CACHED: AtomicU8 = AtomicU8::new(0);
+    let v = CACHED.load(Ordering::Relaxed);
+    if v & CAPS_INIT != 0 {
+        return v;
+    }
+    let mut v = CAPS_INIT;
+    if std::is_x86_feature_detected!("ssse3") {
+        v |= CAPS_SSSE3;
+    }
+    if std::is_x86_feature_detected!("avx2") {
+        v |= CAPS_AVX2;
+    }
+    CACHED.store(v, Ordering::Relaxed);
+    v
+}
+
+/// Whether the SSSE3 kernel can run on this CPU (cached detection).
+pub fn has_ssse3() -> bool {
+    caps() & CAPS_SSSE3 != 0
+}
+
+/// Whether the AVX2 kernel can run on this CPU (cached detection).
+pub fn has_avx2() -> bool {
+    caps() & CAPS_AVX2 != 0
+}
+
+/// Scalar fixup for the unaligned head and sub-vector tail of a kernel
+/// call: `dst[from..to] (^)= c · src[from..to]` via the full product
+/// table. Also the whole-slice path for inputs shorter than one vector.
+#[inline]
+fn scalar_fixup(c: u8, src: &[u8], dst: &mut [u8], from: usize, to: usize, xor_into: bool) {
+    let row = &TABLES.mul[c as usize];
+    for j in from..to {
+        let p = row[src[j] as usize];
+        dst[j] = if xor_into { dst[j] ^ p } else { p };
+    }
+}
+
+/// Best-available SIMD slice multiply: `dst = c·src` (`xor_into = false`)
+/// or `dst ^= c·src` (`xor_into = true`).
+///
+/// Returns `true` when a SIMD kernel handled the whole slice and `false`
+/// when none is available (or the slice is shorter than one vector) —
+/// the caller must then run a scalar kernel itself.
+///
+/// # Safety contract
+///
+/// This function is safe for any `c` and any pair of equal-length slices:
+/// CPU-feature detection happens inside (cached CPUID probe), unaligned
+/// heads/tails are fixed up in scalar code, and unequal lengths panic
+/// rather than read out of bounds. The result is byte-identical to the
+/// scalar reference:
+///
+/// ```
+/// use drs::gf;
+/// let src: Vec<u8> = (0..100u32).map(|i| (i * 7 + 3) as u8).collect();
+/// let mut simd = vec![0xAAu8; 100];
+/// let mut scalar = simd.clone();
+/// let handled = gf::simd::mul_slice_dispatch(0x8E, &src, &mut simd, true);
+/// gf::mul_xor_slice_scalar(0x8E, &src, &mut scalar);
+/// if handled {
+///     assert_eq!(simd, scalar); // SIMD result byte-identical to scalar
+/// } else {
+///     assert_eq!(simd, vec![0xAA; 100]); // untouched: caller runs scalar
+/// }
+/// ```
+#[inline]
+pub fn mul_slice_dispatch(c: u8, src: &[u8], dst: &mut [u8], xor_into: bool) -> bool {
+    assert_eq!(src.len(), dst.len(), "gf::simd: src/dst length mismatch");
+    let caps = caps();
+    if caps & CAPS_AVX2 != 0 && dst.len() >= AVX2_WIDTH {
+        // SAFETY: AVX2 verified by the cached CPUID probe above; the
+        // slice lengths were asserted equal.
+        unsafe { mul_slice_avx2(c, src, dst, xor_into) };
+        true
+    } else if caps & CAPS_SSSE3 != 0 && dst.len() >= SSSE3_WIDTH {
+        // SAFETY: SSSE3 verified by the cached CPUID probe above; the
+        // slice lengths were asserted equal.
+        unsafe { mul_slice_ssse3(c, src, dst, xor_into) };
+        true
+    } else {
+        false
+    }
+}
+
+/// SSSE3 kernel: `dst = c·src` (`xor_into = false`) or `dst ^= c·src`
+/// (`xor_into = true`), 16 lookups per PSHUFB pair, with scalar
+/// head/tail fixup so every length and alignment is handled.
+///
+/// # Safety
+/// The caller must verify SSSE3 support first (see [`has_ssse3`]);
+/// `src` and `dst` must have equal length (debug-asserted at entry).
+#[target_feature(enable = "ssse3")]
+pub unsafe fn mul_slice_ssse3(c: u8, src: &[u8], dst: &mut [u8], xor_into: bool) {
+    debug_assert_eq!(src.len(), dst.len(), "kernel entry: src/dst length mismatch");
+    let len = dst.len();
+    // Scalar head up to the first 16-byte-aligned dst address, so the
+    // vector body can use aligned stores. (`align_offset` may decline
+    // with usize::MAX; the `min` caps it and the tail then covers all.)
+    let head = dst.as_ptr().align_offset(SSSE3_WIDTH).min(len);
+    scalar_fixup(c, src, dst, 0, head, xor_into);
+    let body_end = head + (len - head) / SSSE3_WIDTH * SSSE3_WIDTH;
+
+    let lo_tbl = &TABLES.mul_lo[c as usize];
+    let hi_tbl = &TABLES.mul_hi[c as usize];
+    // SAFETY: all pointer arithmetic stays in bounds — `i` ranges over
+    // [head, body_end) with body_end ≤ len and src.len() == dst.len()
+    // (debug-asserted above, asserted by the safe dispatchers), each
+    // iteration touching exactly the 16 bytes at offset `i`. Source
+    // loads and the two 16-byte table loads are unaligned loads; the
+    // dst load/store is aligned because dst+head is 16-byte aligned by
+    // `align_offset` and `i` advances in 16-byte steps.
+    unsafe {
+        let lo = _mm_loadu_si128(lo_tbl.as_ptr() as *const __m128i);
+        let hi = _mm_loadu_si128(hi_tbl.as_ptr() as *const __m128i);
+        let mask = _mm_set1_epi8(0x0F);
+        let mut i = head;
+        while i < body_end {
+            let x = _mm_loadu_si128(src.as_ptr().add(i) as *const __m128i);
+            let x_lo = _mm_and_si128(x, mask);
+            // srli works on 16-bit lanes: bits borrowed from the byte
+            // above are cleared by the nibble mask.
+            let x_hi = _mm_and_si128(_mm_srli_epi16::<4>(x), mask);
+            let prod = _mm_xor_si128(_mm_shuffle_epi8(lo, x_lo), _mm_shuffle_epi8(hi, x_hi));
+            let out = if xor_into {
+                _mm_xor_si128(prod, _mm_load_si128(dst.as_ptr().add(i) as *const __m128i))
+            } else {
+                prod
+            };
+            _mm_store_si128(dst.as_mut_ptr().add(i) as *mut __m128i, out);
+            i += SSSE3_WIDTH;
+        }
+    }
+    scalar_fixup(c, src, dst, body_end, len, xor_into);
+}
+
+/// AVX2 kernel: `dst = c·src` (`xor_into = false`) or `dst ^= c·src`
+/// (`xor_into = true`), 32 lookups per shuffle pair (each 16-byte split
+/// table broadcast into both 128-bit lanes), with scalar head/tail fixup
+/// so every length and alignment is handled.
+///
+/// # Safety
+/// The caller must verify AVX2 support first (see [`has_avx2`]);
+/// `src` and `dst` must have equal length (debug-asserted at entry).
+#[target_feature(enable = "avx2")]
+pub unsafe fn mul_slice_avx2(c: u8, src: &[u8], dst: &mut [u8], xor_into: bool) {
+    debug_assert_eq!(src.len(), dst.len(), "kernel entry: src/dst length mismatch");
+    let len = dst.len();
+    let head = dst.as_ptr().align_offset(AVX2_WIDTH).min(len);
+    scalar_fixup(c, src, dst, 0, head, xor_into);
+    let body_end = head + (len - head) / AVX2_WIDTH * AVX2_WIDTH;
+
+    let lo_tbl = &TABLES.mul_lo[c as usize];
+    let hi_tbl = &TABLES.mul_hi[c as usize];
+    // SAFETY: same bounds argument as the SSSE3 kernel, with 32-byte
+    // steps: `i` ranges over [head, body_end), body_end ≤ len, and the
+    // dst load/store is 32-byte aligned (dst+head aligned by
+    // `align_offset`, `i` advances by 32). PSHUFB shuffles within each
+    // 128-bit lane, so each 16-byte table is broadcast into both lanes.
+    unsafe {
+        let lo =
+            _mm256_broadcastsi128_si256(_mm_loadu_si128(lo_tbl.as_ptr() as *const __m128i));
+        let hi =
+            _mm256_broadcastsi128_si256(_mm_loadu_si128(hi_tbl.as_ptr() as *const __m128i));
+        let mask = _mm256_set1_epi8(0x0F);
+        let mut i = head;
+        while i < body_end {
+            let x = _mm256_loadu_si256(src.as_ptr().add(i) as *const __m256i);
+            let x_lo = _mm256_and_si256(x, mask);
+            let x_hi = _mm256_and_si256(_mm256_srli_epi16::<4>(x), mask);
+            let prod = _mm256_xor_si256(
+                _mm256_shuffle_epi8(lo, x_lo),
+                _mm256_shuffle_epi8(hi, x_hi),
+            );
+            let out = if xor_into {
+                _mm256_xor_si256(prod, _mm256_load_si256(dst.as_ptr().add(i) as *const __m256i))
+            } else {
+                prod
+            };
+            _mm256_store_si256(dst.as_mut_ptr().add(i) as *mut __m256i, out);
+            i += AVX2_WIDTH;
+        }
+    }
+    scalar_fixup(c, src, dst, body_end, len, xor_into);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gf::arith::{mul_slice_scalar, mul_xor_slice_scalar};
+
+    /// Run one kernel against the scalar reference on a misaligned
+    /// sub-slice of every interesting length.
+    fn check_kernel(name: &str, kernel: impl Fn(u8, &[u8], &mut [u8], bool)) {
+        let lens = [
+            0usize, 1, 7, 15, 16, 17, 31, 32, 33, 47, 48, 63, 64, 65, 100, 255, 256, 257, 4095,
+            4096, 4097,
+        ];
+        for &len in &lens {
+            for off in [0usize, 1, 3, 17] {
+                for c in [0u8, 1, 2, 0x1D, 0x8E, 0xFF] {
+                    let src: Vec<u8> =
+                        (0..len + off).map(|i| (i as u32 * 37 + c as u32) as u8).collect();
+                    let base: Vec<u8> = (0..len + off).map(|i| (i * 11) as u8).collect();
+                    for xor_into in [false, true] {
+                        let mut got = base.clone();
+                        let mut want = base.clone();
+                        kernel(c, &src[off..], &mut got[off..], xor_into);
+                        if xor_into {
+                            mul_xor_slice_scalar(c, &src[off..], &mut want[off..]);
+                        } else {
+                            mul_slice_scalar(c, &src[off..], &mut want[off..]);
+                        }
+                        assert_eq!(
+                            got, want,
+                            "{name} c={c} len={len} off={off} xor={xor_into}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ssse3_matches_scalar() {
+        if !has_ssse3() {
+            eprintln!("notice: CPU lacks SSSE3 — kernel test skipped");
+            return;
+        }
+        // SAFETY: SSSE3 availability checked above; check_kernel always
+        // passes equal-length slices.
+        check_kernel("ssse3", |c, s, d, x| unsafe { mul_slice_ssse3(c, s, d, x) });
+    }
+
+    #[test]
+    fn avx2_matches_scalar() {
+        if !has_avx2() {
+            eprintln!("notice: CPU lacks AVX2 — kernel test skipped");
+            return;
+        }
+        // SAFETY: AVX2 availability checked above; check_kernel always
+        // passes equal-length slices.
+        check_kernel("avx2", |c, s, d, x| unsafe { mul_slice_avx2(c, s, d, x) });
+    }
+
+    #[test]
+    fn dispatch_matches_scalar_or_declines() {
+        for len in [0usize, 8, 15, 16, 31, 32, 33, 1000] {
+            let src: Vec<u8> = (0..len).map(|i| (i * 3 + 1) as u8).collect();
+            let mut got = vec![0x5Au8; len];
+            let mut want = got.clone();
+            let handled = mul_slice_dispatch(0x1D, &src, &mut got, true);
+            if handled {
+                mul_xor_slice_scalar(0x1D, &src, &mut want);
+            }
+            assert_eq!(got, want, "len={len} handled={handled}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn dispatch_rejects_unequal_lengths() {
+        let src = [0u8; 8];
+        let mut dst = [0u8; 9];
+        mul_slice_dispatch(2, &src, &mut dst, false);
+    }
+}

@@ -102,7 +102,7 @@ pub mod prelude {
     pub use crate::dfm::{
         EcShim, GetOptions, PutOptions, ReplicationManager, TestCluster,
     };
-    pub use crate::ec::{Codec, EcParams, PureRustBackend};
+    pub use crate::ec::{BackendChoice, Codec, EcParams, PureRustBackend};
     pub use crate::placement::{PlacementPolicy, RoundRobin};
     pub use crate::se::{NetworkProfile, SeRegistry, StorageElement};
     pub use crate::sim::durability;

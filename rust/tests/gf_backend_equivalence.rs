@@ -1,0 +1,317 @@
+//! Differential fuzz harness: every compiled GF(2⁸) compute backend must
+//! be byte-identical to the scalar oracle (`PureRustBackend`, which never
+//! dispatches to SIMD).
+//!
+//! Coverage per the oracle-testing policy (docs/ARCHITECTURE.md §Codec
+//! backends):
+//! * ≥1000 randomized matmul cases over all supported (K, R) shapes,
+//!   slice lengths {0, 1, 15, 16, 17, 31, 32, 33, non-multiples, 4 MiB}
+//!   and misaligned sub-slices (both source and destination);
+//! * full encode → lose-R → decode → rebuild round-trips through
+//!   `StreamEncoder`/`StreamDecoder` for every backend;
+//! * factory dispatch: `auto` picks the best ISA, `ec_backend` /
+//!   `DRS_EC_BACKEND` forcing is honored, forcing an ISA the CPU lacks
+//!   is a clear error, and the selected name surfaces in `drs status`
+//!   metrics and the obs span details.
+
+use std::sync::Arc;
+
+use drs::ec::chunk::{sha256, HEADER_LEN};
+use drs::ec::{
+    factory, rebuild_matrix, BackendChoice, Codec, CpuCaps, EcBackend, EcParams, PureRustBackend,
+};
+use drs::gf::GfMatrix;
+use drs::util::prng::Rng;
+
+/// Every available non-oracle backend (empty on CPUs without SIMD).
+fn simd_backends() -> Vec<Arc<dyn EcBackend>> {
+    factory::available().into_iter().filter(|b| b.name() != "scalar").collect()
+}
+
+/// A random coding matrix that deliberately hits the structural paths:
+/// zero coefficients (skip), ones (copy/xor) and general bytes.
+fn random_matrix(rng: &mut Rng, rows: usize, k: usize) -> GfMatrix {
+    let mut mat = GfMatrix::zero(rows, k);
+    for r in 0..rows {
+        for c in 0..k {
+            let v = match rng.index(6) {
+                0 => 0,
+                1 => 1,
+                _ => rng.byte(),
+            };
+            mat.set(r, c, v);
+        }
+    }
+    mat
+}
+
+/// One differential case: `backend.matmul(_into)` vs the oracle, over
+/// misaligned sub-slices. Returns the number of comparisons made.
+fn run_case(
+    rng: &mut Rng,
+    backend: &Arc<dyn EcBackend>,
+    k: usize,
+    rows: usize,
+    len: usize,
+) -> usize {
+    let mat = random_matrix(rng, rows, k);
+    // Per-row random offsets misalign both sources and destinations.
+    let offs: Vec<usize> = (0..k).map(|_| rng.index(33)).collect();
+    let bufs: Vec<Vec<u8>> = offs.iter().map(|&o| rng.bytes(len + o)).collect();
+    let data: Vec<&[u8]> = bufs.iter().zip(&offs).map(|(b, &o)| &b[o..]).collect();
+
+    let want = PureRustBackend.matmul(&mat, &data).expect("oracle matmul");
+    let got = backend.matmul(&mat, &data).expect("backend matmul");
+    assert_eq!(got, want, "{} matmul diverged (k={k} rows={rows} len={len})", backend.name());
+
+    // matmul_into with misaligned destination sub-slices, pre-filled
+    // with noise so stale bytes can't pass as correct output.
+    let out_offs: Vec<usize> = (0..rows).map(|_| rng.index(33)).collect();
+    let mut out_bufs: Vec<Vec<u8>> =
+        out_offs.iter().map(|&o| rng.bytes(len + o)).collect();
+    let mut out: Vec<&mut [u8]> =
+        out_bufs.iter_mut().zip(&out_offs).map(|(b, &o)| &mut b[o..]).collect();
+    backend.matmul_into(&mat, &data, &mut out).expect("backend matmul_into");
+    for (row, want_row) in out.iter().zip(&want) {
+        assert_eq!(
+            &row[..],
+            want_row.as_slice(),
+            "{} matmul_into diverged (k={k} rows={rows} len={len})",
+            backend.name()
+        );
+    }
+    2
+}
+
+#[test]
+fn simd_backends_match_scalar_oracle_over_1000_cases() {
+    let backends = simd_backends();
+    if backends.is_empty() {
+        eprintln!("notice: no SIMD backend available on this CPU/target — nothing to compare");
+        return;
+    }
+    let mut rng = Rng::new(0x0EC0_DE77);
+    let mut cases = 0usize;
+
+    // Slice-length matrix: empty, sub-vector, SSSE3 width ±1 (15/16/17),
+    // AVX2 width ±1 (31/32/33), non-multiples, page-straddling.
+    let special_lens: [usize; 16] =
+        [0, 1, 15, 16, 17, 31, 32, 33, 100, 255, 256, 257, 1000, 4095, 4096, 4097];
+
+    // Sweep until the counter crosses the 1000-case floor regardless of
+    // how many SIMD variants this CPU compiled in (each sweep adds
+    // `16 lens × backends × 2` comparisons).
+    while cases < 1000 {
+        for &len in &special_lens {
+            let k = 1 + rng.index(12);
+            let rows = 1 + rng.index(6);
+            for b in &backends {
+                cases += run_case(&mut rng, b, k, rows, len);
+            }
+        }
+    }
+
+    // The (K, R) boundary sweep: the supported range is 1 ≤ K and
+    // K + R ≤ 255 (chunk indices are one byte on the wire).
+    for &(k, rows) in &[(1usize, 1usize), (1, 254), (254, 1), (200, 55), (100, 100), (10, 5)] {
+        for b in &backends {
+            cases += run_case(&mut rng, b, k, rows, 81);
+        }
+    }
+
+    // 4 MiB slabs (±1 for tail coverage): the streaming block scale.
+    // Minimal (k, rows) keeps the debug-mode oracle pass fast.
+    for &len in &[4 << 20, (4 << 20) + 1] {
+        for b in &backends {
+            cases += run_case(&mut rng, b, 2, 1, len);
+        }
+    }
+
+    assert!(cases >= 1000, "only {cases} differential cases ran");
+    println!("{cases} differential cases, {} SIMD backend(s)", backends.len());
+}
+
+#[test]
+fn stream_roundtrip_lose_r_decode_rebuild_per_backend() {
+    for backend in factory::available() {
+        let mut rng = Rng::new(0x57_AEA8 ^ backend.name().len() as u64);
+        for case in 0..10 {
+            let k = 1 + rng.index(10);
+            let m = 1 + rng.index(5);
+            let params = EcParams::new(k, m).unwrap();
+            let sb = [16usize, 64, 256][rng.index(3)];
+            let len = match case {
+                0 => 0,
+                1 => 1,
+                _ => rng.index(40_000),
+            };
+            let file = rng.bytes(len);
+            let digest = sha256(&file);
+            let tag = format!("{} k={k} m={m} sb={sb} len={len}", backend.name());
+
+            let codec = Codec::with_backend(params, sb, Arc::clone(&backend)).unwrap();
+            let oracle = Codec::with_backend(params, sb, Arc::new(PureRustBackend)).unwrap();
+
+            // Whole-file wire chunks must be byte-identical to scalar.
+            let wires = codec.encode(&file).unwrap();
+            assert_eq!(wires, oracle.encode(&file).unwrap(), "wire divergence: {tag}");
+
+            // Stream-encode in ragged pushes; concatenated block rows
+            // must reproduce the whole-file chunk payloads exactly.
+            let block_bytes = (1 + rng.index(4)) * k * sb;
+            let mut enc = codec.stream_encoder(len as u64, digest, block_bytes).unwrap();
+            let mut blocks = Vec::new();
+            let mut fed = 0usize;
+            while fed < file.len() {
+                let take = (1 + rng.index(3 * k * sb)).min(file.len() - fed);
+                blocks.extend(enc.push(&file[fed..fed + take]).unwrap());
+                fed += take;
+            }
+            blocks.extend(enc.finish().unwrap());
+            let mut payload: Vec<Vec<u8>> = vec![Vec::new(); params.n()];
+            for b in blocks {
+                for (i, row) in b.rows {
+                    payload[i].extend_from_slice(&row);
+                }
+            }
+            for i in 0..params.n() {
+                assert_eq!(
+                    payload[i].as_slice(),
+                    &wires[i][HEADER_LEN..],
+                    "stream/buffered payload divergence, chunk {i}: {tag}"
+                );
+            }
+
+            // Lose R random chunks; stream-decode the file back from the
+            // K survivors in ragged segment runs.
+            let mut order: Vec<usize> = (0..params.n()).collect();
+            rng.shuffle(&mut order);
+            let survivors: Vec<usize> = order[..k].to_vec();
+            let missing: Vec<usize> = order[k..].to_vec();
+            let mut dec = codec.stream_decoder(len as u64, digest);
+            let total_segs = dec.segs();
+            let mut got = Vec::new();
+            let mut seg = 0u64;
+            while seg < total_segs {
+                let take = (1 + rng.index(3)).min((total_segs - seg) as usize);
+                let rows: Vec<(usize, &[u8])> = survivors
+                    .iter()
+                    .map(|&i| {
+                        (i, &payload[i][seg as usize * sb..(seg as usize + take) * sb])
+                    })
+                    .collect();
+                got.extend(dec.push_block(&rows).unwrap());
+                seg += take as u64;
+            }
+            dec.finish().unwrap();
+            assert_eq!(got, file, "stream decode mismatch: {tag}");
+
+            // Rebuild the lost chunks from survivors — matmul is
+            // byte-column-wise, so whole payload rows rebuild at once.
+            if total_segs > 0 {
+                let rb = rebuild_matrix(params, &survivors, &missing).unwrap();
+                let rows: Vec<&[u8]> =
+                    survivors.iter().map(|&i| payload[i].as_slice()).collect();
+                let rebuilt = backend.matmul(&rb, &rows).unwrap();
+                for (j, &mi) in missing.iter().enumerate() {
+                    assert_eq!(
+                        rebuilt[j].as_slice(),
+                        &wires[mi][HEADER_LEN..],
+                        "rebuild divergence, chunk {mi}: {tag}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn factory_dispatch_auto_forcing_and_rejection() {
+    // Pure decision table against synthetic caps (portable).
+    let none = CpuCaps { ssse3: false, avx2: false };
+    let sse = CpuCaps { ssse3: true, avx2: false };
+    let all = CpuCaps { ssse3: true, avx2: true };
+    assert_eq!(factory::resolve(BackendChoice::Auto, all).unwrap(), "avx2");
+    assert_eq!(factory::resolve(BackendChoice::Auto, sse).unwrap(), "ssse3");
+    assert_eq!(factory::resolve(BackendChoice::Auto, none).unwrap(), "scalar");
+    assert_eq!(factory::resolve(BackendChoice::Scalar, all).unwrap(), "scalar");
+
+    // Forcing an ISA the CPU lacks: a clear error naming the backend.
+    let err = factory::resolve(BackendChoice::Avx2, sse).unwrap_err();
+    assert!(err.to_string().contains("avx2"), "unclear rejection: {err}");
+    let err = factory::resolve(BackendChoice::Ssse3, none).unwrap_err();
+    assert!(err.to_string().contains("ssse3"), "unclear rejection: {err}");
+
+    // On the real CPU: select honors forcing for every available
+    // variant and auto matches the resolution order.
+    for b in factory::available() {
+        let choice = BackendChoice::parse(b.name()).unwrap();
+        assert_eq!(factory::select(choice).unwrap().name(), b.name());
+    }
+    assert_eq!(
+        factory::auto().name(),
+        factory::resolve(BackendChoice::Auto, CpuCaps::detect()).unwrap()
+    );
+}
+
+#[test]
+fn env_forcing_reaches_config() {
+    let mut cfg = drs::config::Config::default();
+    assert_eq!(cfg.ec_backend, BackendChoice::Auto);
+    std::env::set_var("DRS_EC_BACKEND", "scalar");
+    cfg.apply_env();
+    std::env::remove_var("DRS_EC_BACKEND");
+    assert_eq!(cfg.ec_backend, BackendChoice::Scalar);
+}
+
+#[test]
+fn workspace_surfaces_backend_in_status_metrics() {
+    let root = std::env::temp_dir().join(format!(
+        "drs-gfeq-ws-{}-{}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ));
+    let mut cfg = drs::config::Config::default();
+    cfg.ses.truncate(2);
+    cfg.ec_backend = BackendChoice::Scalar;
+    let ws = drs::cli::Workspace::init(&root, cfg).unwrap();
+    assert_eq!(ws.backend_name(), "scalar");
+    // `drs status` prints the metrics report; the selection gauge is in it.
+    let report = drs::metrics::global().report();
+    assert!(
+        report.contains("ec.backend.scalar"),
+        "metrics report missing backend gauge:\n{report}"
+    );
+    drop(ws);
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn obs_put_span_detail_names_backend() {
+    // This binary's only tracer user — no serialization needed here.
+    let t = drs::obs::tracer();
+    t.set_buffer(256);
+    t.set_enabled(true);
+    let cluster = drs::dfm::TestCluster::builder().build().unwrap();
+    let data = vec![7u8; 10_000];
+    let opts = drs::dfm::PutOptions::default()
+        .with_params(cluster.params())
+        .with_stripe(1024);
+    cluster.shim().put_bytes("/demo/span-backend.bin", &data, &opts).unwrap();
+    t.set_enabled(false);
+    let span = t
+        .recent(128)
+        .into_iter()
+        .find(|e| e.name == "put" && e.detail.contains("span-backend"))
+        .expect("put root span not recorded");
+    // TestCluster wires the scalar oracle by default.
+    assert!(
+        span.detail.contains("backend=scalar"),
+        "span detail missing backend name: {}",
+        span.detail
+    );
+    t.clear();
+}
