@@ -66,6 +66,20 @@ cargo test -q --test obs
 # path (disabled ≈ free, enabled within loose bounds) on a small file.
 cargo bench --bench obs_overhead -- --quick
 
+echo "== read-cache gate (hot-block + degraded-chunk cache coherence) =="
+# The read cache must never trade correctness for latency: these tests
+# race concurrent readers against overwrite/remove/kill/repair and
+# assert no stale bytes, byte bounds held at every instant, zero
+# decode-matrix derivations on warm degraded reads, and repair adopting
+# cached rebuilt chunks. Named explicitly so a narrowed tier-1
+# invocation can never silently drop it.
+cargo test -q --test read_cache
+# Smoke-run the cache bench: it asserts the acceptance criteria (warm
+# hit rate ≥ 0.5 under Zipf(1.1), p99 below the cache-off baseline,
+# residency within bounds) on a reduced corpus, so an admission or
+# eviction regression fails CI fast.
+cargo bench --bench read_cache -- --quick
+
 echo "== docs (deny warnings, missing_docs enforced) =="
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 

@@ -1,0 +1,694 @@
+//! Byte-bounded, lock-sharded read caches for the get path.
+//!
+//! Two pools, one shared policy engine:
+//!
+//! * **Decoded-block cache** — decoded *file* bytes, keyed by
+//!   `(file digest, row-block bytes, block index)`. Populated by the
+//!   streaming download pipeline ([`crate::dfm`]) and the federation
+//!   reader ([`crate::federation`]); a warm get serves blocks straight
+//!   from memory and skips both the SE round-trips and the GF(2⁸)
+//!   decode.
+//! * **Degraded-read chunk cache** — *rebuilt* chunk payload blocks,
+//!   keyed by `(file digest, chunk index, row-block bytes, block
+//!   index)`. When a degraded get derives a lost chunk's rows via
+//!   [`crate::ec::rebuild_matrix`] anyway, those bytes are retained so
+//!   later degraded reads skip the rebuild and so
+//!   [`crate::maintenance`] repair can *adopt* them instead of
+//!   re-streaming K survivors.
+//!
+//! **Keying / coherence.** Entries are content-addressed by the file's
+//! whole-file SHA-256 digest (carried in every chunk header), so an
+//! overwrite — which in this system is remove + put and therefore a new
+//! digest — can never serve stale bytes. A per-LFN index
+//! ([`ReadCache::note_lfn`]) lets the catalogue mutation path drop all
+//! entries for a path eagerly ([`ReadCache::invalidate_lfn`]);
+//! repair invalidates adopted/rebuilt chunks per chunk index
+//! ([`ReadCache::invalidate_chunk`]).
+//!
+//! **Memory model.** Each pool is bounded in *payload bytes* (map/LRU
+//! bookkeeping is not counted) and split into up to 16 independently
+//! locked shards; per-shard budget = capacity ÷ shard count, so the sum
+//! of shard residency can never exceed the configured capacity. Small
+//! capacities collapse to one shard for an exact bound.
+//!
+//! **Admission (frequency-aware).** Every access bumps a tiny
+//! count-min sketch (two 8-bit slots per key, periodically halved).
+//! While a shard has free budget inserts are admitted outright; once an
+//! insert would evict, the candidate must be at least as frequent as
+//! the shard's LRU victim. A one-pass cold scan therefore cannot evict
+//! a hot working set: its blocks have sketch estimates of 1 and lose to
+//! any re-referenced entry.
+//!
+//! **Visibility.** Every event is mirrored into
+//! [`crate::metrics::global`] under `cache.*` (hits, misses,
+//! evictions, inserted_bytes, hit_bytes, adopted_chunks and
+//! `cache.degraded.*` twins, plus `cache.resident_bytes` /
+//! `cache.degraded.resident_bytes` gauges), so hit rates flow through
+//! `drs status`, the Prometheus exporter and `/status` unchanged.
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::util::prng::splitmix64;
+
+/// Count-min sketch width (slots per row; two rows folded into one
+/// array via the two hash halves).
+const SKETCH_SLOTS: usize = 1024;
+/// Halve the sketch after this many recorded accesses (keeps estimates
+/// fresh as the workload drifts).
+const SKETCH_SAMPLE_LIMIT: u32 = 16 * SKETCH_SLOTS as u32;
+/// Target shard granularity: one shard per this many capacity bytes.
+const SHARD_GRANULARITY: u64 = 8 << 20;
+/// Upper bound on shards per pool.
+const MAX_SHARDS: u64 = 16;
+
+/// Cache key. `chunk` is 0 in the decoded-block pool (the pools are
+/// separate instances, so the namespaces cannot collide).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+struct Key {
+    digest: [u8; 32],
+    chunk: u32,
+    row_block: u64,
+    block: u64,
+}
+
+impl Key {
+    /// Stable 64-bit hash used for shard selection and the sketch.
+    fn hash(&self) -> u64 {
+        let mut s = u64::from_le_bytes(self.digest[0..8].try_into().unwrap());
+        s ^= ((self.chunk as u64) << 40) ^ self.row_block.rotate_left(17);
+        s ^= self.block.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        splitmix64(&mut s)
+    }
+}
+
+/// One resident entry: the payload plus its current LRU tick.
+struct Entry {
+    data: Arc<Vec<u8>>,
+    tick: u64,
+}
+
+/// One lock shard: entry map, LRU order (tick → key), byte accounting
+/// and the frequency sketch.
+struct Shard {
+    map: HashMap<Key, Entry>,
+    lru: BTreeMap<u64, Key>,
+    bytes: u64,
+    sketch: [u8; SKETCH_SLOTS],
+    sketch_samples: u32,
+}
+
+impl Shard {
+    fn new() -> Self {
+        Shard {
+            map: HashMap::new(),
+            lru: BTreeMap::new(),
+            bytes: 0,
+            sketch: [0u8; SKETCH_SLOTS],
+            sketch_samples: 0,
+        }
+    }
+
+    /// Record one access to `h` and return the (post-increment)
+    /// frequency estimate: min over the two slots.
+    fn sketch_bump(&mut self, h: u64) -> u8 {
+        let a = (h as usize) % SKETCH_SLOTS;
+        let b = ((h >> 32) as usize) % SKETCH_SLOTS;
+        self.sketch[a] = self.sketch[a].saturating_add(1);
+        self.sketch[b] = self.sketch[b].saturating_add(1);
+        self.sketch_samples += 1;
+        if self.sketch_samples >= SKETCH_SAMPLE_LIMIT {
+            for c in self.sketch.iter_mut() {
+                *c /= 2;
+            }
+            self.sketch_samples /= 2;
+        }
+        self.sketch[a].min(self.sketch[b])
+    }
+
+    /// Read-only frequency estimate for `h`.
+    fn sketch_est(&self, h: u64) -> u8 {
+        let a = (h as usize) % SKETCH_SLOTS;
+        let b = ((h >> 32) as usize) % SKETCH_SLOTS;
+        self.sketch[a].min(self.sketch[b])
+    }
+}
+
+/// Running totals for one pool (relaxed atomics; read via snapshots).
+#[derive(Default)]
+struct PoolCounters {
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+    inserted_bytes: AtomicU64,
+    hit_bytes: AtomicU64,
+}
+
+/// A byte-bounded, sharded LRU pool with sketch-gated admission.
+struct Pool {
+    shards: Vec<Mutex<Shard>>,
+    /// Byte budget per shard (`capacity / shards.len()`).
+    shard_budget: u64,
+    /// Total configured capacity (0 = pool disabled).
+    capacity: u64,
+    tick: AtomicU64,
+    resident: AtomicU64,
+    peak: AtomicU64,
+    counters: PoolCounters,
+    /// `metrics::global()` counter prefix (`"cache"` or
+    /// `"cache.degraded"`).
+    prefix: &'static str,
+}
+
+impl Pool {
+    fn new(capacity: u64, prefix: &'static str) -> Self {
+        let n = (capacity / SHARD_GRANULARITY).clamp(1, MAX_SHARDS) as usize;
+        Pool {
+            shards: (0..n).map(|_| Mutex::new(Shard::new())).collect(),
+            shard_budget: capacity / n as u64,
+            capacity,
+            tick: AtomicU64::new(0),
+            resident: AtomicU64::new(0),
+            peak: AtomicU64::new(0),
+            counters: PoolCounters::default(),
+            prefix,
+        }
+    }
+
+    fn enabled(&self) -> bool {
+        self.capacity > 0
+    }
+
+    fn shard_for(&self, h: u64) -> &Mutex<Shard> {
+        &self.shards[(h % self.shards.len() as u64) as usize]
+    }
+
+    fn note_resident(&self, delta_add: u64, delta_sub: u64) {
+        if delta_add > 0 {
+            let now = self.resident.fetch_add(delta_add, Ordering::Relaxed) + delta_add;
+            self.peak.fetch_max(now, Ordering::Relaxed);
+            crate::metrics::global().gauge(&format!("{}.resident_bytes", self.prefix), now as f64);
+        }
+        if delta_sub > 0 {
+            let now = self.resident.fetch_sub(delta_sub, Ordering::Relaxed) - delta_sub;
+            crate::metrics::global().gauge(&format!("{}.resident_bytes", self.prefix), now as f64);
+        }
+    }
+
+    fn get(&self, key: &Key) -> Option<Arc<Vec<u8>>> {
+        if !self.enabled() {
+            return None;
+        }
+        let h = key.hash();
+        let mut sh = self.shard_for(h).lock().unwrap();
+        sh.sketch_bump(h);
+        let tick = self.tick.fetch_add(1, Ordering::Relaxed);
+        if let Some(e) = sh.map.get(key) {
+            let old = e.tick;
+            let data = Arc::clone(&e.data);
+            sh.lru.remove(&old);
+            sh.lru.insert(tick, *key);
+            sh.map.get_mut(key).unwrap().tick = tick;
+            self.counters.hits.fetch_add(1, Ordering::Relaxed);
+            self.counters.hit_bytes.fetch_add(data.len() as u64, Ordering::Relaxed);
+            let m = crate::metrics::global();
+            m.inc(&format!("{}.hits", self.prefix));
+            m.add(&format!("{}.hit_bytes", self.prefix), data.len() as u64);
+            Some(data)
+        } else {
+            self.counters.misses.fetch_add(1, Ordering::Relaxed);
+            crate::metrics::global().inc(&format!("{}.misses", self.prefix));
+            None
+        }
+    }
+
+    fn insert(&self, key: Key, data: Vec<u8>) {
+        let len = data.len() as u64;
+        if !self.enabled() || len == 0 || len > self.shard_budget {
+            return;
+        }
+        let h = key.hash();
+        let mut sh = self.shard_for(h).lock().unwrap();
+        let est = sh.sketch_bump(h);
+        let tick = self.tick.fetch_add(1, Ordering::Relaxed);
+        if let Some(old) = sh.map.remove(&key) {
+            // Refresh in place: same digest ⇒ same bytes, but keep the
+            // accounting exact if lengths ever differ.
+            sh.lru.remove(&old.tick);
+            sh.bytes -= old.data.len() as u64;
+            self.note_resident(0, old.data.len() as u64);
+        }
+        // Admission: free budget admits outright; once an eviction
+        // would be needed, the candidate must be at least as frequent
+        // as the LRU victim it would displace.
+        if sh.bytes + len > self.shard_budget {
+            let victim_est = match sh.lru.iter().next() {
+                Some((_, vk)) => sh.sketch_est(vk.hash()),
+                None => 0,
+            };
+            if est < victim_est {
+                return;
+            }
+            let mut evicted = 0u64;
+            while sh.bytes + len > self.shard_budget {
+                let (vt, vk) = match sh.lru.iter().next() {
+                    Some((t, k)) => (*t, *k),
+                    None => break,
+                };
+                sh.lru.remove(&vt);
+                if let Some(v) = sh.map.remove(&vk) {
+                    sh.bytes -= v.data.len() as u64;
+                    evicted += v.data.len() as u64;
+                    self.counters.evictions.fetch_add(1, Ordering::Relaxed);
+                    crate::metrics::global().inc(&format!("{}.evictions", self.prefix));
+                }
+            }
+            self.note_resident(0, evicted);
+        }
+        sh.bytes += len;
+        sh.map.insert(key, Entry { data: Arc::new(data), tick });
+        sh.lru.insert(tick, key);
+        self.counters.inserted_bytes.fetch_add(len, Ordering::Relaxed);
+        crate::metrics::global().add(&format!("{}.inserted_bytes", self.prefix), len);
+        self.note_resident(len, 0);
+    }
+
+    /// Drop every entry matching `pred`; returns bytes freed.
+    fn purge(&self, pred: impl Fn(&Key) -> bool) -> u64 {
+        if !self.enabled() {
+            return 0;
+        }
+        let mut freed = 0u64;
+        for shard in &self.shards {
+            let mut sh = shard.lock().unwrap();
+            let victims: Vec<(Key, u64, u64)> = sh
+                .map
+                .iter()
+                .filter(|(k, _)| pred(k))
+                .map(|(k, e)| (*k, e.tick, e.data.len() as u64))
+                .collect();
+            let mut sub = 0u64;
+            for (k, t, l) in victims {
+                sh.map.remove(&k);
+                sh.lru.remove(&t);
+                sh.bytes -= l;
+                sub += l;
+            }
+            if sub > 0 {
+                self.note_resident(0, sub);
+                freed += sub;
+            }
+        }
+        freed
+    }
+}
+
+/// A point-in-time snapshot of both pools' counters and residency.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CacheStats {
+    /// Decoded-block cache hits.
+    pub hits: u64,
+    /// Decoded-block cache misses.
+    pub misses: u64,
+    /// Decoded-block entries evicted to make room.
+    pub evictions: u64,
+    /// Payload bytes admitted into the decoded-block pool.
+    pub inserted_bytes: u64,
+    /// Payload bytes served from the decoded-block pool (decode work
+    /// and SE round-trips saved).
+    pub hit_bytes: u64,
+    /// Degraded-chunk cache hits.
+    pub degraded_hits: u64,
+    /// Degraded-chunk cache misses.
+    pub degraded_misses: u64,
+    /// Degraded-chunk entries evicted.
+    pub degraded_evictions: u64,
+    /// Payload bytes admitted into the degraded-chunk pool.
+    pub degraded_inserted_bytes: u64,
+    /// Rebuilt chunks repair adopted from the cache instead of
+    /// re-streaming K survivors.
+    pub adopted_chunks: u64,
+    /// Current decoded-block pool residency (bytes).
+    pub resident_bytes: u64,
+    /// Current degraded-chunk pool residency (bytes).
+    pub degraded_resident_bytes: u64,
+    /// High-water decoded-block residency (bytes).
+    pub peak_resident_bytes: u64,
+    /// High-water degraded-chunk residency (bytes).
+    pub peak_degraded_resident_bytes: u64,
+}
+
+impl CacheStats {
+    /// Hit rate of the decoded-block pool (0 when idle).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// The shared read cache: a decoded-block pool, a degraded-read
+/// rebuilt-chunk pool and an LFN → digest index for eager
+/// catalogue-driven invalidation. See the module docs for semantics.
+pub struct ReadCache {
+    blocks: Pool,
+    degraded: Pool,
+    lfns: Mutex<HashMap<String, HashSet<[u8; 32]>>>,
+    adopted: AtomicU64,
+}
+
+impl ReadCache {
+    /// Build a cache with the given pool capacities in bytes. A
+    /// capacity of 0 disables that pool (gets miss, inserts no-op).
+    pub fn new(cache_bytes: u64, cache_degraded_bytes: u64) -> Self {
+        ReadCache {
+            blocks: Pool::new(cache_bytes, "cache"),
+            degraded: Pool::new(cache_degraded_bytes, "cache.degraded"),
+            lfns: Mutex::new(HashMap::new()),
+            adopted: AtomicU64::new(0),
+        }
+    }
+
+    /// A fully disabled cache (both pools zero-capacity); every
+    /// operation is a cheap no-op.
+    pub fn disabled() -> Self {
+        ReadCache::new(0, 0)
+    }
+
+    /// Whether the decoded-block pool is active.
+    pub fn enabled(&self) -> bool {
+        self.blocks.enabled()
+    }
+
+    /// Whether the degraded-read chunk pool is active.
+    pub fn degraded_enabled(&self) -> bool {
+        self.degraded.enabled()
+    }
+
+    /// Configured decoded-block capacity in bytes.
+    pub fn capacity_bytes(&self) -> u64 {
+        self.blocks.capacity
+    }
+
+    /// Configured degraded-chunk capacity in bytes.
+    pub fn degraded_capacity_bytes(&self) -> u64 {
+        self.degraded.capacity
+    }
+
+    /// Look up decoded file bytes for pipeline block `block` of the
+    /// file with `digest`, downloaded at `row_block` bytes per chunk
+    /// row. Counts a hit or a miss.
+    pub fn get_block(&self, digest: &[u8; 32], row_block: u64, block: u64) -> Option<Arc<Vec<u8>>> {
+        self.blocks.get(&Key { digest: *digest, chunk: 0, row_block, block })
+    }
+
+    /// Insert decoded file bytes for pipeline block `block` (see
+    /// [`Self::get_block`] for the keying).
+    pub fn insert_block(&self, digest: &[u8; 32], row_block: u64, block: u64, data: Vec<u8>) {
+        self.blocks.insert(Key { digest: *digest, chunk: 0, row_block, block }, data);
+    }
+
+    /// Look up the rebuilt payload block `block` of lost chunk `chunk`.
+    pub fn get_chunk_block(
+        &self,
+        digest: &[u8; 32],
+        chunk: usize,
+        row_block: u64,
+        block: u64,
+    ) -> Option<Arc<Vec<u8>>> {
+        self.degraded.get(&Key { digest: *digest, chunk: chunk as u32, row_block, block })
+    }
+
+    /// Retain the rebuilt payload block `block` of lost chunk `chunk`
+    /// so later degraded reads (and repair adoption) skip the rebuild.
+    pub fn insert_chunk_block(
+        &self,
+        digest: &[u8; 32],
+        chunk: usize,
+        row_block: u64,
+        block: u64,
+        data: Vec<u8>,
+    ) {
+        self.degraded.insert(Key { digest: *digest, chunk: chunk as u32, row_block, block }, data);
+    }
+
+    /// Record that repair adopted `n` cached rebuilt chunks.
+    pub fn note_adopted(&self, n: u64) {
+        self.adopted.fetch_add(n, Ordering::Relaxed);
+        crate::metrics::global().add("cache.adopted_chunks", n);
+    }
+
+    /// Remember that `lfn` currently resolves to `digest`, so a later
+    /// catalogue mutation on the path can purge its entries.
+    pub fn note_lfn(&self, lfn: &str, digest: &[u8; 32]) {
+        if !self.enabled() && !self.degraded_enabled() {
+            return;
+        }
+        self.lfns.lock().unwrap().entry(lfn.to_string()).or_default().insert(*digest);
+    }
+
+    /// Catalogue mutation hook: drop every cached entry for `lfn`
+    /// (overwrite / remove / replica change).
+    pub fn invalidate_lfn(&self, lfn: &str) {
+        let digests = match self.lfns.lock().unwrap().remove(lfn) {
+            Some(d) => d,
+            None => return,
+        };
+        for d in digests {
+            self.invalidate_digest(&d);
+        }
+    }
+
+    /// Drop every cached entry (both pools) for the file `digest`.
+    pub fn invalidate_digest(&self, digest: &[u8; 32]) {
+        self.blocks.purge(|k| k.digest == *digest);
+        self.degraded.purge(|k| k.digest == *digest);
+    }
+
+    /// Drop cached rebuilt blocks of chunk `chunk` of the file
+    /// `digest` (used once repair has restored the chunk on an SE).
+    pub fn invalidate_chunk(&self, digest: &[u8; 32], chunk: usize) {
+        self.degraded.purge(|k| k.digest == *digest && k.chunk == chunk as u32);
+    }
+
+    /// Current decoded-block residency in bytes.
+    pub fn resident_bytes(&self) -> u64 {
+        self.blocks.resident.load(Ordering::Relaxed)
+    }
+
+    /// Current degraded-chunk residency in bytes.
+    pub fn degraded_resident_bytes(&self) -> u64 {
+        self.degraded.resident.load(Ordering::Relaxed)
+    }
+
+    /// High-water decoded-block residency in bytes.
+    pub fn peak_resident_bytes(&self) -> u64 {
+        self.blocks.peak.load(Ordering::Relaxed)
+    }
+
+    /// High-water degraded-chunk residency in bytes.
+    pub fn peak_degraded_resident_bytes(&self) -> u64 {
+        self.degraded.peak.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot all counters and residency gauges.
+    pub fn stats(&self) -> CacheStats {
+        let b = &self.blocks.counters;
+        let d = &self.degraded.counters;
+        CacheStats {
+            hits: b.hits.load(Ordering::Relaxed),
+            misses: b.misses.load(Ordering::Relaxed),
+            evictions: b.evictions.load(Ordering::Relaxed),
+            inserted_bytes: b.inserted_bytes.load(Ordering::Relaxed),
+            hit_bytes: b.hit_bytes.load(Ordering::Relaxed),
+            degraded_hits: d.hits.load(Ordering::Relaxed),
+            degraded_misses: d.misses.load(Ordering::Relaxed),
+            degraded_evictions: d.evictions.load(Ordering::Relaxed),
+            degraded_inserted_bytes: d.inserted_bytes.load(Ordering::Relaxed),
+            adopted_chunks: self.adopted.load(Ordering::Relaxed),
+            resident_bytes: self.resident_bytes(),
+            degraded_resident_bytes: self.degraded_resident_bytes(),
+            peak_resident_bytes: self.peak_resident_bytes(),
+            peak_degraded_resident_bytes: self.peak_degraded_resident_bytes(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn digest(seed: u8) -> [u8; 32] {
+        let mut d = [0u8; 32];
+        d[0] = seed;
+        d[31] = seed.wrapping_mul(37);
+        d
+    }
+
+    #[test]
+    fn disabled_cache_is_inert() {
+        let c = ReadCache::disabled();
+        assert!(!c.enabled());
+        assert!(!c.degraded_enabled());
+        c.insert_block(&digest(1), 1024, 0, vec![1u8; 128]);
+        assert!(c.get_block(&digest(1), 1024, 0).is_none());
+        assert_eq!(c.resident_bytes(), 0);
+        let s = c.stats();
+        assert_eq!(s.hits + s.misses, 0);
+        assert_eq!(s.inserted_bytes, 0);
+    }
+
+    #[test]
+    fn hit_returns_inserted_bytes_and_counts() {
+        let c = ReadCache::new(1 << 20, 0);
+        let d = digest(2);
+        c.insert_block(&d, 4096, 3, vec![7u8; 1000]);
+        let got = c.get_block(&d, 4096, 3).expect("hit");
+        assert_eq!(got.len(), 1000);
+        assert!(got.iter().all(|&b| b == 7));
+        // Different geometry or block index is a distinct key.
+        assert!(c.get_block(&d, 8192, 3).is_none());
+        assert!(c.get_block(&d, 4096, 4).is_none());
+        let s = c.stats();
+        assert_eq!(s.hits, 1);
+        assert_eq!(s.misses, 2);
+        assert_eq!(s.hit_bytes, 1000);
+        assert_eq!(s.inserted_bytes, 1000);
+        assert_eq!(s.resident_bytes, 1000);
+        assert_eq!(s.peak_resident_bytes, 1000);
+        assert!(s.hit_rate() > 0.33 && s.hit_rate() < 0.34);
+    }
+
+    #[test]
+    fn byte_bound_never_exceeded_and_lru_evicts_oldest() {
+        // Small capacity ⇒ single shard ⇒ exact global bound.
+        let c = ReadCache::new(4096, 0);
+        let d = digest(3);
+        for b in 0..8u64 {
+            c.insert_block(&d, 1024, b, vec![b as u8; 1024]);
+            assert!(c.resident_bytes() <= 4096, "resident exceeded capacity");
+        }
+        assert!(c.peak_resident_bytes() <= 4096);
+        // The 4 youngest inserts (no re-references, equal frequency)
+        // should be resident; the oldest evicted.
+        assert!(c.get_block(&d, 1024, 0).is_none());
+        assert!(c.get_block(&d, 1024, 7).is_some());
+        assert!(c.stats().evictions >= 4);
+    }
+
+    #[test]
+    fn cold_scan_cannot_evict_hot_set() {
+        let c = ReadCache::new(4096, 0);
+        let hot = digest(4);
+        // Build a hot set of 4 × 1 KiB blocks, re-referenced often.
+        for b in 0..4u64 {
+            c.insert_block(&hot, 1024, b, vec![1u8; 1024]);
+        }
+        for _ in 0..10 {
+            for b in 0..4u64 {
+                assert!(c.get_block(&hot, 1024, b).is_some());
+            }
+        }
+        // A one-pass cold scan over a different file: every candidate
+        // has frequency 1 and must lose admission to the hot victims.
+        let cold = digest(5);
+        for b in 0..64u64 {
+            c.insert_block(&cold, 1024, b, vec![2u8; 1024]);
+        }
+        for b in 0..4u64 {
+            assert!(c.get_block(&hot, 1024, b).is_some(), "hot block {b} was evicted by cold scan");
+        }
+    }
+
+    #[test]
+    fn repeated_references_earn_admission() {
+        let c = ReadCache::new(2048, 0);
+        let a = digest(6);
+        let b = digest(7);
+        c.insert_block(&a, 1024, 0, vec![1u8; 1024]);
+        c.insert_block(&a, 1024, 1, vec![1u8; 1024]);
+        // `b` is requested repeatedly (misses bump its frequency) while
+        // `a` is never touched again — eventually b wins admission.
+        for _ in 0..4 {
+            let _ = c.get_block(&b, 1024, 0);
+        }
+        c.insert_block(&b, 1024, 0, vec![2u8; 1024]);
+        assert!(c.get_block(&b, 1024, 0).is_some(), "frequent block denied admission");
+        assert!(c.resident_bytes() <= 2048);
+    }
+
+    #[test]
+    fn oversized_entry_rejected() {
+        let c = ReadCache::new(1024, 0);
+        c.insert_block(&digest(8), 4096, 0, vec![0u8; 4096]);
+        assert_eq!(c.resident_bytes(), 0);
+        assert!(c.get_block(&digest(8), 4096, 0).is_none());
+    }
+
+    #[test]
+    fn reinsert_same_key_replaces_without_double_counting() {
+        let c = ReadCache::new(4096, 0);
+        let d = digest(9);
+        c.insert_block(&d, 1024, 0, vec![1u8; 1024]);
+        c.insert_block(&d, 1024, 0, vec![2u8; 1024]);
+        assert_eq!(c.resident_bytes(), 1024);
+        assert_eq!(&c.get_block(&d, 1024, 0).unwrap()[..4], &[2, 2, 2, 2]);
+    }
+
+    #[test]
+    fn lfn_invalidation_purges_both_pools() {
+        let c = ReadCache::new(1 << 16, 1 << 16);
+        let d = digest(10);
+        c.note_lfn("/vo/data/f1", &d);
+        c.insert_block(&d, 1024, 0, vec![1u8; 512]);
+        c.insert_chunk_block(&d, 3, 1024, 0, vec![2u8; 512]);
+        assert_eq!(c.resident_bytes(), 512);
+        assert_eq!(c.degraded_resident_bytes(), 512);
+        c.invalidate_lfn("/vo/data/f1");
+        assert!(c.get_block(&d, 1024, 0).is_none());
+        assert!(c.get_chunk_block(&d, 3, 1024, 0).is_none());
+        assert_eq!(c.resident_bytes(), 0);
+        assert_eq!(c.degraded_resident_bytes(), 0);
+        // Unknown paths are a no-op.
+        c.invalidate_lfn("/vo/data/never-seen");
+    }
+
+    #[test]
+    fn chunk_invalidation_is_per_chunk() {
+        let c = ReadCache::new(0, 1 << 16);
+        let d = digest(11);
+        c.insert_chunk_block(&d, 1, 1024, 0, vec![1u8; 256]);
+        c.insert_chunk_block(&d, 2, 1024, 0, vec![2u8; 256]);
+        c.invalidate_chunk(&d, 1);
+        assert!(c.get_chunk_block(&d, 1, 1024, 0).is_none());
+        assert!(c.get_chunk_block(&d, 2, 1024, 0).is_some());
+    }
+
+    #[test]
+    fn sharded_pool_respects_global_bound_under_many_keys() {
+        // Capacity large enough for several shards.
+        let cap: u64 = 64 << 20;
+        let c = ReadCache::new(cap, 0);
+        for f in 0..8u8 {
+            let d = digest(100 + f);
+            for b in 0..32u64 {
+                c.insert_block(&d, 1 << 20, b, vec![f; 1 << 20]);
+                assert!(c.resident_bytes() <= cap);
+            }
+        }
+        assert!(c.peak_resident_bytes() <= cap);
+        assert!(c.resident_bytes() > 0);
+    }
+
+    #[test]
+    fn adopted_counter_accumulates() {
+        let c = ReadCache::new(0, 1 << 16);
+        c.note_adopted(3);
+        c.note_adopted(2);
+        assert_eq!(c.stats().adopted_chunks, 5);
+    }
+}

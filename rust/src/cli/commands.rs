@@ -488,6 +488,31 @@ pub fn dispatch(cli: &Cli) -> Result<()> {
                 }
                 None => {
                     println!("codec backend: {}", ws.backend_name());
+                    let cache = ws.cache();
+                    if cache.enabled() || cache.degraded_enabled() {
+                        let cs = cache.stats();
+                        println!(
+                            "read cache: {} blocks + {} degraded caps; \
+                             {} hits / {} misses ({:.0}% hit rate), \
+                             resident {} (peak {}), degraded {} (peak {}), \
+                             {} chunk(s) repair-adopted",
+                            fmt_bytes(cache.capacity_bytes()),
+                            fmt_bytes(cache.degraded_capacity_bytes()),
+                            cs.hits,
+                            cs.misses,
+                            cs.hit_rate() * 100.0,
+                            fmt_bytes(cs.resident_bytes),
+                            fmt_bytes(cs.peak_resident_bytes),
+                            fmt_bytes(cs.degraded_resident_bytes),
+                            fmt_bytes(cs.peak_degraded_resident_bytes),
+                            cs.adopted_chunks
+                        );
+                    } else {
+                        println!(
+                            "read cache: disabled (set `cache_bytes` / \
+                             `cache_degraded_bytes` in drs.json or DRS_CACHE_BYTES)"
+                        );
+                    }
                     match std::fs::read_to_string(&status_file) {
                         Ok(text) => println!("{text}"),
                         Err(_) => println!(
@@ -524,11 +549,13 @@ pub fn dispatch(cli: &Cli) -> Result<()> {
             let bytes = reader.read(*offset, *len)?;
             let stats = reader.stats();
             eprintln!(
-                "read {} bytes via {} ranged GETs ({} fetched, {} segments decoded)",
+                "read {} bytes via {} ranged GETs ({} fetched, {} segments decoded, \
+                 {} cache hits)",
                 bytes.len(),
                 stats.range_gets,
                 fmt_bytes(stats.bytes_fetched),
-                stats.segments_decoded
+                stats.segments_decoded,
+                stats.cache_hits
             );
             use std::io::Write;
             std::io::stdout().write_all(&bytes)?;

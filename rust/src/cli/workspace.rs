@@ -52,6 +52,9 @@ pub struct Workspace {
     pub registry: Arc<SeRegistry>,
     backend_name: &'static str,
     backend: Arc<dyn EcBackend>,
+    /// Process-wide read cache, shared by every shim this workspace
+    /// hands out (sized by `cache_bytes` / `cache_degraded_bytes`).
+    cache: Arc<crate::cache::ReadCache>,
 }
 
 impl Workspace {
@@ -153,6 +156,11 @@ impl Workspace {
         // the Prometheus endpoint): `ec.backend.<name>` = 1.
         crate::metrics::global().gauge(&format!("ec.backend.{backend_name}"), 1.0);
 
+        let cache = Arc::new(crate::cache::ReadCache::new(
+            config.cache_bytes,
+            config.cache_degraded_bytes,
+        ));
+
         Ok(Workspace {
             root: root.to_path_buf(),
             config,
@@ -160,7 +168,13 @@ impl Workspace {
             registry: Arc::new(registry),
             backend_name,
             backend,
+            cache,
         })
+    }
+
+    /// The workspace's shared read cache (for `drs status` reporting).
+    pub fn cache(&self) -> Arc<crate::cache::ReadCache> {
+        Arc::clone(&self.cache)
     }
 
     /// Which coding backend `open` selected (`pjrt-aot`, `avx2`,
@@ -175,12 +189,13 @@ impl Workspace {
             .config
             .policy
             .build(&self.config.client_region, self.config.params.n());
-        EcShim::new(
+        EcShim::with_cache(
             Arc::clone(&self.dfc),
             Arc::clone(&self.registry),
             policy,
             Arc::clone(&self.backend),
             self.config.vo.clone(),
+            Arc::clone(&self.cache),
         )
     }
 

@@ -14,6 +14,8 @@
 //!   "placement": "round-robin",
 //!   "workers": 5,
 //!   "transfer_block_bytes": 4194304,
+//!   "cache_bytes": 268435456,
+//!   "cache_degraded_bytes": 67108864,
 //!   "catalog_shards": 8,
 //!   "journal_segment_bytes": 1048576,
 //!   "journal_checkpoint_ops": 1024,
@@ -126,6 +128,14 @@ pub struct Config {
     /// encode/transfer overlap; peak transfer memory is
     /// N·(2 blocks) + constants). See docs/OPERATIONS.md for tuning.
     pub transfer_block_bytes: usize,
+    /// Decoded-block read cache capacity in bytes
+    /// ([`crate::cache::ReadCache`]); 0 disables the cache. Bounds
+    /// *payload* residency; see docs/OPERATIONS.md for sizing.
+    pub cache_bytes: u64,
+    /// Degraded-read rebuilt-chunk cache capacity in bytes; 0 disables
+    /// it (degraded reads then re-derive lost chunks every time and
+    /// repair never adopts cached chunks).
+    pub cache_degraded_bytes: u64,
     /// The storage elements the workspace wires up.
     pub ses: Vec<SeConfig>,
     /// Optional simulated network profile attached to each SE.
@@ -179,6 +189,8 @@ impl Default for Config {
             client_region: "uk".into(),
             workers: 1,
             transfer_block_bytes: crate::dfm::DEFAULT_TRANSFER_BLOCK_BYTES,
+            cache_bytes: 256 << 20,
+            cache_degraded_bytes: 64 << 20,
             ses: (0..15)
                 .map(|i| SeConfig {
                     name: format!("SE-{i:02}"),
@@ -231,6 +243,12 @@ impl Config {
         }
         if let Some(b) = j.get("transfer_block_bytes").and_then(Json::as_u64) {
             cfg.transfer_block_bytes = (b as usize).max(1);
+        }
+        if let Some(b) = j.get("cache_bytes").and_then(Json::as_u64) {
+            cfg.cache_bytes = b;
+        }
+        if let Some(b) = j.get("cache_degraded_bytes").and_then(Json::as_u64) {
+            cfg.cache_degraded_bytes = b;
         }
         if let Some(s) = j.get("catalog_shards").and_then(Json::as_u64) {
             cfg.catalog_shards = (s as usize).max(1);
@@ -323,6 +341,8 @@ impl Config {
             ("client_region", Json::str(self.client_region.clone())),
             ("workers", Json::num(self.workers as f64)),
             ("transfer_block_bytes", Json::num(self.transfer_block_bytes as f64)),
+            ("cache_bytes", Json::num(self.cache_bytes as f64)),
+            ("cache_degraded_bytes", Json::num(self.cache_degraded_bytes as f64)),
             ("catalog_shards", Json::num(self.catalog_shards as f64)),
             ("journal_segment_bytes", Json::num(self.journal_segment_bytes as f64)),
             ("journal_checkpoint_ops", Json::num(self.journal_checkpoint_ops as f64)),
@@ -392,6 +412,7 @@ impl Config {
     /// Apply environment overrides: `DRS_VO`, `DRS_WORKERS`, `DRS_K`,
     /// `DRS_M`, `DRS_STRIPE_B`, `DRS_EC_BACKEND`, `DRS_PLACEMENT`,
     /// `DRS_TRANSFER_BLOCK_BYTES`,
+    /// `DRS_CACHE_BYTES`, `DRS_CACHE_DEGRADED_BYTES`,
     /// `DRS_CATALOG_SHARDS`,
     /// `DRS_JOURNAL_SEGMENT_BYTES`, `DRS_JOURNAL_CHECKPOINT_OPS`,
     /// `DRS_MAINTAIN_SCRUB_INTERVAL_S`, `DRS_MAINTAIN_SCRUB_SLICE`,
@@ -440,6 +461,16 @@ impl Config {
         if let Ok(n) = std::env::var("DRS_MAINTAIN_REPAIR_BUDGET_MB") {
             if let Ok(n) = n.parse::<u64>() {
                 self.maintain_repair_budget_mb = n;
+            }
+        }
+        if let Ok(b) = std::env::var("DRS_CACHE_BYTES") {
+            if let Ok(b) = b.parse::<u64>() {
+                self.cache_bytes = b;
+            }
+        }
+        if let Ok(b) = std::env::var("DRS_CACHE_DEGRADED_BYTES") {
+            if let Ok(b) = b.parse::<u64>() {
+                self.cache_degraded_bytes = b;
             }
         }
         if let Ok(s) = std::env::var("DRS_CATALOG_SHARDS") {
@@ -679,6 +710,30 @@ mod tests {
         c.apply_env();
         std::env::remove_var("DRS_OBS_TRACE");
         assert!(!c.obs_trace);
+    }
+
+    #[test]
+    fn cache_knobs_roundtrip_env_and_defaults() {
+        // Old configs (no cache_* keys) get the defaults.
+        let c = Config::from_json(&Json::parse(r#"{"vo":"demo"}"#).unwrap()).unwrap();
+        assert_eq!(c.cache_bytes, 256 << 20);
+        assert_eq!(c.cache_degraded_bytes, 64 << 20);
+
+        let mut c = Config::default();
+        c.cache_bytes = 1 << 20;
+        c.cache_degraded_bytes = 0; // explicit 0 = disabled, must survive
+        let back = Config::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.cache_bytes, 1 << 20);
+        assert_eq!(back.cache_degraded_bytes, 0);
+
+        let mut c = Config::default();
+        std::env::set_var("DRS_CACHE_BYTES", "4096");
+        std::env::set_var("DRS_CACHE_DEGRADED_BYTES", "1024");
+        c.apply_env();
+        std::env::remove_var("DRS_CACHE_BYTES");
+        std::env::remove_var("DRS_CACHE_DEGRADED_BYTES");
+        assert_eq!(c.cache_bytes, 4096);
+        assert_eq!(c.cache_degraded_bytes, 1024);
     }
 
     #[test]

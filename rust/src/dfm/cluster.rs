@@ -24,6 +24,7 @@ pub struct TestClusterBuilder {
     profile: Option<NetworkProfile>,
     profile_scale: f64,
     catalog_shards: usize,
+    cache_bytes: Option<(u64, u64)>,
 }
 
 impl TestClusterBuilder {
@@ -84,6 +85,15 @@ impl TestClusterBuilder {
         self
     }
 
+    /// Enable the shim's shared read cache: `blocks` bytes for the
+    /// decoded-block pool and `degraded` bytes for the rebuilt-chunk
+    /// pool (either may be 0 to disable that pool). The default is
+    /// fully disabled, matching the pre-cache behaviour exactly.
+    pub fn cache_bytes(mut self, blocks: u64, degraded: u64) -> Self {
+        self.cache_bytes = Some((blocks, degraded));
+        self
+    }
+
     /// Wire everything up.
     pub fn build(self) -> Result<TestCluster> {
         let mut registry = SeRegistry::new();
@@ -110,12 +120,17 @@ impl TestClusterBuilder {
         }
         let registry = Arc::new(registry);
         let dfc = Arc::new(ShardedDfc::new(self.catalog_shards));
-        let shim = EcShim::new(
+        let cache = Arc::new(match self.cache_bytes {
+            Some((blocks, degraded)) => crate::cache::ReadCache::new(blocks, degraded),
+            None => crate::cache::ReadCache::disabled(),
+        });
+        let shim = EcShim::with_cache(
             Arc::clone(&dfc),
             Arc::clone(&registry),
             Arc::clone(&self.policy),
             Arc::clone(&self.backend),
             self.vo.clone(),
+            cache,
         );
         let repl = ReplicationManager::new(
             Arc::clone(&dfc),
@@ -150,6 +165,7 @@ impl TestCluster {
             profile: None,
             profile_scale: 0.0,
             catalog_shards: crate::catalog::DEFAULT_SHARDS,
+            cache_bytes: None,
         }
     }
 
@@ -248,6 +264,28 @@ mod tests {
             .get_bytes("/vo/p.bin", &GetOptions::default().with_workers(6))
             .unwrap();
         assert_eq!(back, data);
+    }
+
+    #[test]
+    fn cached_get_roundtrip_and_hits() {
+        let cluster = TestCluster::builder()
+            .ses(5)
+            .cache_bytes(8 << 20, 2 << 20)
+            .build()
+            .unwrap();
+        let data: Vec<u8> = (0..77_777u32).map(|i| (i * 13) as u8).collect();
+        let opts = small_put_opts(&cluster);
+        cluster.shim().put_bytes("/vo/c.bin", &data, &opts).unwrap();
+        let a = cluster.shim().get_bytes("/vo/c.bin", &GetOptions::default()).unwrap();
+        let b = cluster.shim().get_bytes("/vo/c.bin", &GetOptions::default()).unwrap();
+        assert_eq!(a, data);
+        assert_eq!(b, data);
+        let stats = cluster.shim().cache().stats();
+        assert!(stats.hits > 0, "second get should be served from cache: {stats:?}");
+        assert!(stats.resident_bytes <= 8 << 20);
+        // rm must drop every cached block for the file.
+        cluster.shim().rm("/vo/c.bin").unwrap();
+        assert_eq!(cluster.shim().cache().stats().resident_bytes, 0);
     }
 
     #[test]

@@ -13,8 +13,11 @@ use std::collections::BTreeSet;
 use std::path::Path;
 use std::sync::Arc;
 
+use crate::cache::ReadCache;
 use crate::catalog::{MetaKeyStyle, MetaValue, ShardedDfc};
-use crate::ec::{chunk_name, Codec, EcBackend, EcParams, PureRustBackend};
+use crate::ec::chunk::HEADER_LEN;
+use crate::ec::stripe::{chunk_payload_len, segment_count};
+use crate::ec::{chunk_name, ChunkHeader, Codec, EcBackend, EcParams, PureRustBackend};
 use crate::obs::{tracer, SpanRef};
 use crate::placement::PlacementPolicy;
 use crate::se::{SeInfo, SeRegistry, StorageElement};
@@ -76,11 +79,13 @@ pub struct EcShim {
     policy: Arc<dyn PlacementPolicy>,
     backend: Arc<dyn EcBackend>,
     vo: String,
+    cache: Arc<ReadCache>,
 }
 
 impl EcShim {
     /// Wire a shim over a catalogue, SE registry, placement policy and
-    /// coding backend for one VO.
+    /// coding backend for one VO. The read cache is disabled; use
+    /// [`EcShim::with_cache`] to enable it.
     pub fn new(
         dfc: Arc<ShardedDfc>,
         registry: Arc<SeRegistry>,
@@ -88,7 +93,22 @@ impl EcShim {
         backend: Arc<dyn EcBackend>,
         vo: impl Into<String>,
     ) -> Self {
-        EcShim { dfc, registry, policy, backend, vo: vo.into() }
+        Self::with_cache(dfc, registry, policy, backend, vo, Arc::new(ReadCache::disabled()))
+    }
+
+    /// [`EcShim::new`] with a shared [`ReadCache`] under the get path:
+    /// downloads serve and populate the decoded-block pool, degraded
+    /// gets retain rebuilt chunks, repair adopts them, and `rm`
+    /// invalidates.
+    pub fn with_cache(
+        dfc: Arc<ShardedDfc>,
+        registry: Arc<SeRegistry>,
+        policy: Arc<dyn PlacementPolicy>,
+        backend: Arc<dyn EcBackend>,
+        vo: impl Into<String>,
+        cache: Arc<ReadCache>,
+    ) -> Self {
+        EcShim { dfc, registry, policy, backend, vo: vo.into(), cache }
     }
 
     /// Convenience constructor with the paper's round-robin policy and the
@@ -126,6 +146,12 @@ impl EcShim {
     /// The VO whose SE vector this shim places over.
     pub fn vo(&self) -> &str {
         &self.vo
+    }
+
+    /// The read cache the get path serves from (disabled unless the
+    /// shim was built with [`EcShim::with_cache`]).
+    pub fn cache(&self) -> Arc<ReadCache> {
+        Arc::clone(&self.cache)
     }
 
     fn base_name(lfn: &str) -> Result<String> {
@@ -501,6 +527,8 @@ impl EcShim {
             &cfg,
             opts.retry,
             &gauge,
+            &self.cache,
+            lfn,
         )?;
         let stats = gauge.snapshot();
         stream::record_stream_metrics(&stats);
@@ -590,13 +618,16 @@ impl EcShim {
         for (index, _name, reps) in chunk_files {
             replicas[index] = reps;
         }
-        crate::federation::EcFileReader::new(
+        let reader = crate::federation::EcFileReader::new(
             Arc::clone(&self.registry),
             Arc::clone(&self.backend),
             params,
             stripe_b,
             replicas,
-        )
+        )?
+        .with_cache(Arc::clone(&self.cache));
+        self.cache.note_lfn(lfn, reader.digest());
+        Ok(reader)
     }
 
     // ------------------------------------------------------------------
@@ -751,32 +782,64 @@ impl EcShim {
             placements.push((idx, se, pfn));
         }
 
-        // Stream: fetch K survivors once, re-derive every missing chunk
-        // per block (`missing rows = R · survivor rows`), committing the
-        // rebuilt sinks only after the whole-file digest verifies. The
-        // rebuilt wire chunks are bit-identical to the originals.
-        let targets: Vec<RebuildTarget<'_>> = placements
-            .iter()
-            .map(|(idx, se, pfn)| {
-                Ok(RebuildTarget { index: *idx, sink: se.put_writer(pfn)? })
-            })
-            .collect::<Result<_>>()?;
+        // Adoption first: a degraded get that already failed over will
+        // have derived (and cached) the lost chunks' blocks; if the
+        // degraded cache fully covers a chunk and the reassembled wire
+        // bytes match the catalogue checksum, the chunk is written
+        // straight from memory — no K-survivor re-stream at all.
         let cfg =
             PipeCfg { workers: opts.workers.max(1), block_bytes: opts.block_bytes, parent };
-        let gauge = Gauge::default();
-        stream::rebuild_pipeline(
-            &self.registry,
-            &codec,
-            &candidates,
-            targets,
-            &cfg,
-            opts.retry,
-            &gauge,
-        )?;
-        stream::record_stream_metrics(&gauge.snapshot());
+        let mut remaining: Vec<(usize, Arc<dyn StorageElement>, String)> = Vec::new();
+        let mut adopted = 0usize;
+        let adopt_hdr = if self.cache.degraded_enabled() {
+            stream::probe_header(&self.registry, &codec, &candidates, opts.retry, parent).ok()
+        } else {
+            None
+        };
+        for (idx, se, pfn) in placements {
+            let ok = match &adopt_hdr {
+                Some(hdr) => {
+                    self.try_adopt_chunk(hdr, &codec, opts, idx, &se, &pfn, parent)
+                }
+                None => false,
+            };
+            if ok {
+                adopted += 1;
+            } else {
+                remaining.push((idx, se, pfn));
+            }
+        }
+        if adopted > 0 {
+            self.cache.note_adopted(adopted as u64);
+        }
+
+        if !remaining.is_empty() {
+            // Stream: fetch K survivors once, re-derive every missing
+            // chunk per block (`missing rows = R · survivor rows`),
+            // committing the rebuilt sinks only after the whole-file
+            // digest verifies. The rebuilt wire chunks are bit-identical
+            // to the originals.
+            let targets: Vec<RebuildTarget<'_>> = remaining
+                .iter()
+                .map(|(idx, se, pfn)| {
+                    Ok(RebuildTarget { index: *idx, sink: se.put_writer(pfn)? })
+                })
+                .collect::<Result<_>>()?;
+            let gauge = Gauge::default();
+            stream::rebuild_pipeline(
+                &self.registry,
+                &codec,
+                &candidates,
+                targets,
+                &cfg,
+                opts.retry,
+                &gauge,
+            )?;
+            stream::record_stream_metrics(&gauge.snapshot());
+        }
 
         // Drop stale replica records, then register the new locations.
-        for (_, se, pfn) in &placements {
+        for (_, se, pfn) in &remaining {
             let old: Vec<String> =
                 self.dfc.replicas(pfn)?.iter().map(|r| r.se.clone()).collect();
             for se_name in old {
@@ -784,13 +847,113 @@ impl EcShim {
             }
             self.dfc.register_replica(pfn, se.name(), pfn)?;
         }
-        Ok(placements.len())
+        // Every repaired chunk is live again: its degraded-cache entries
+        // are no longer needed (and would shadow nothing — the decoded
+        // bytes are unchanged), so reclaim the space eagerly.
+        if let Some(hdr) = &adopt_hdr {
+            for &idx in &missing {
+                self.cache.invalidate_chunk(&hdr.file_sha256, idx);
+            }
+        }
+        Ok(adopted + remaining.len())
+    }
+
+    /// Try to materialize the lost chunk `idx` at `pfn` on `se` purely
+    /// from the degraded-read cache: every payload block must be
+    /// resident and the reassembled wire chunk must hash to the
+    /// catalogue's recorded checksum. Returns `false` (falling back to
+    /// the streaming rebuild) on any gap, mismatch or write failure.
+    #[allow(clippy::too_many_arguments)]
+    fn try_adopt_chunk(
+        &self,
+        hdr: &ChunkHeader,
+        codec: &Codec,
+        opts: &GetOptions,
+        idx: usize,
+        se: &Arc<dyn StorageElement>,
+        pfn: &str,
+        parent: SpanRef,
+    ) -> bool {
+        let params = codec.params();
+        let (k, sb) = (params.k(), codec.stripe_b());
+        let digest = hdr.file_sha256;
+        let block_segs = (opts.block_bytes / (k * sb)).max(1) as u64;
+        let row_block = block_segs * sb as u64;
+        let segs = segment_count(hdr.file_len, k, sb);
+        let n_blocks = segs.div_ceil(block_segs);
+        let payload_len = chunk_payload_len(hdr.file_len, k, sb);
+        let mut blocks = Vec::with_capacity(n_blocks as usize);
+        for b in 0..n_blocks {
+            match self.cache.get_chunk_block(&digest, idx, row_block, b) {
+                Some(d) => blocks.push(d),
+                None => return false,
+            }
+        }
+        let header = ChunkHeader::new(params, idx, sb, hdr.file_len, payload_len, digest)
+            .encode();
+        let mut hasher = crate::util::sha256::Sha256::new();
+        hasher.update(&header);
+        let mut total = header.len() as u64;
+        for d in &blocks {
+            hasher.update(d);
+            total += d.len() as u64;
+        }
+        if total != HEADER_LEN as u64 + payload_len {
+            return false;
+        }
+        let expect = match self.dfc.file(pfn) {
+            Ok(entry) => entry.checksum,
+            Err(_) => return false,
+        };
+        if crate::util::hexfmt::encode(&hasher.finalize()) != expect {
+            return false;
+        }
+        let mut sink = match se.put_writer(pfn) {
+            Ok(s) => s,
+            Err(_) => return false,
+        };
+        let write_all = (|| -> Result<()> {
+            sink.write_block(&header)?;
+            for d in &blocks {
+                sink.write_block(d)?;
+            }
+            Ok(())
+        })();
+        let committed = match write_all {
+            Ok(()) => sink.commit().is_ok(),
+            Err(_) => {
+                sink.abort();
+                false
+            }
+        };
+        if !committed {
+            return false;
+        }
+        // Swap the replica record onto the adopting SE (same as the
+        // streamed-rebuild path does after commit).
+        let old: Vec<String> = match self.dfc.replicas(pfn) {
+            Ok(r) => r.iter().map(|x| x.se.clone()).collect(),
+            Err(_) => Vec::new(),
+        };
+        for se_name in old {
+            let _ = self.dfc.remove_replica(pfn, &se_name);
+        }
+        if self.dfc.register_replica(pfn, se.name(), pfn).is_err() {
+            return false;
+        }
+        tracer().event(parent, "cache", true, || {
+            format!("adopted chunk {idx} from degraded cache ({total} B)")
+        });
+        true
     }
 
     /// Delete the EC file: best-effort removal of chunk objects, then the
-    /// catalog subtree.
+    /// catalog subtree. Cached blocks for the path are dropped *before*
+    /// the catalogue mutation, so no concurrent get can re-pin them
+    /// against a path that is about to disappear.
     pub fn rm(&self, lfn: &str) -> Result<()> {
         let (_, _, chunk_files) = self.read_layout(lfn)?;
+        self.cache.invalidate_lfn(lfn);
         for (_, _, replicas) in &chunk_files {
             for r in replicas {
                 if let Some(se) = self.registry.get(&r.se) {

@@ -807,6 +807,13 @@ fn header_agrees(h: &ChunkHeader, expect: &ChunkHeader, index: usize) -> bool {
 /// Sequentially fetch one chunk's payload blocks into its queue. Every
 /// ranged read (header probe and per-block fetch) is traced as a
 /// `read_at` span under `parent`.
+///
+/// Blocks flagged in `served` are already satisfied from the read cache
+/// and are skipped entirely (no SE traffic, no queue push); an empty
+/// slice means "nothing served". All other blocks stream through *one*
+/// [`crate::se::ChunkSource`] per replica — the handle (and its channel
+/// setup cost) is opened once and reused across blocks, falling over to
+/// the next replica (re-opening) only when a read fails.
 #[allow(clippy::too_many_arguments)]
 fn chunk_reader(
     q: &BlockQueue<Result<Vec<u8>>>,
@@ -816,6 +823,7 @@ fn chunk_reader(
     chunk: &FetchChunk,
     expect: &ChunkHeader,
     start_block: u64,
+    served: &[bool],
     geom: DownGeom,
     retry: RetryPolicy,
     parent: SpanRef,
@@ -848,57 +856,115 @@ fn chunk_reader(
             return;
         }
     }
-    for b in start_block..geom.n_blocks {
-        let off = b * geom.row_block;
-        let want = (geom.payload_len - off).min(geom.row_block) as usize;
-        let res = {
-            let mut sp = tracer()
-                .span_with(parent, "read_at", || format!("chunk {} block {b}", chunk.index));
-            let _permit = sem.acquire();
-            let r = read_replicas(
-                registry,
-                &chunk.replicas,
-                HEADER_LEN as u64 + off,
-                want,
-                retry,
-                parent,
-            );
-            if r.is_err() {
-                sp.fail();
+    let is_served = |b: u64| served.get(b as usize).copied().unwrap_or(false);
+    if (start_block..geom.n_blocks).all(is_served) {
+        q.close();
+        return;
+    }
+    let mut b = start_block;
+    let mut attempts = 0usize;
+    let mut last = Error::Transfer("no replicas registered".into());
+    'replicas: loop {
+        'walk: for r in &chunk.replicas {
+            if b >= geom.n_blocks {
+                break 'replicas;
             }
-            r
-        };
-        match res {
-            Ok(bytes) if bytes.len() == want => {
-                gauge.add(want as u64);
-                gauge.note_block(want as u64);
-                if q.push(Ok(bytes), &gauge.stalls).is_err() {
-                    gauge.sub(want as u64);
-                    return;
+            let se = match registry.get(&r.se) {
+                Some(se) => se,
+                None => {
+                    attempts += 1;
+                    last = Error::Config(format!("replica SE `{}` not in registry", r.se));
+                    crate::transfer::retry::note_attempt(parent, &r.se, attempts, &last);
+                    if !retry.retries_left(attempts) {
+                        break 'replicas;
+                    }
+                    continue;
+                }
+            };
+            let mut src = match check_up(&*se).and_then(|()| se.open_reader(&r.pfn)) {
+                Ok(s) => s,
+                Err(e) => {
+                    attempts += 1;
+                    crate::transfer::retry::note_attempt(parent, &r.se, attempts, &e);
+                    last = e;
+                    if !retry.retries_left(attempts) {
+                        break 'replicas;
+                    }
+                    continue;
+                }
+            };
+            while b < geom.n_blocks {
+                if is_served(b) {
+                    b += 1;
+                    continue;
+                }
+                let off = b * geom.row_block;
+                let want = (geom.payload_len - off).min(geom.row_block) as usize;
+                let res = {
+                    let mut sp = tracer().span_with(parent, "read_at", || {
+                        format!("chunk {} block {b}", chunk.index)
+                    });
+                    let _permit = sem.acquire();
+                    let r2 = check_up(&*se)
+                        .and_then(|()| src.read_at(HEADER_LEN as u64 + off, want));
+                    if r2.is_err() {
+                        sp.fail();
+                    }
+                    r2
+                };
+                match res {
+                    Ok(bytes) if bytes.len() == want => {
+                        gauge.add(want as u64);
+                        gauge.note_block(want as u64);
+                        if q.push(Ok(bytes), &gauge.stalls).is_err() {
+                            gauge.sub(want as u64);
+                            return;
+                        }
+                        b += 1;
+                    }
+                    Ok(short) => {
+                        attempts += 1;
+                        last = Error::Transfer(format!(
+                            "chunk {}: short block read ({} of {want} bytes)",
+                            chunk.index,
+                            short.len()
+                        ));
+                        crate::transfer::retry::note_attempt(parent, &r.se, attempts, &last);
+                        if !retry.retries_left(attempts) {
+                            break 'replicas;
+                        }
+                        continue 'walk;
+                    }
+                    Err(e) => {
+                        attempts += 1;
+                        crate::transfer::retry::note_attempt(parent, &r.se, attempts, &e);
+                        last = e;
+                        if !retry.retries_left(attempts) {
+                            break 'replicas;
+                        }
+                        // Re-open on the next replica, resuming at `b`.
+                        continue 'walk;
+                    }
                 }
             }
-            Ok(short) => {
-                let _ = q.push(
-                    Err(Error::Transfer(format!(
-                        "chunk {}: short block read ({} of {want} bytes)",
-                        chunk.index,
-                        short.len()
-                    ))),
-                    &gauge.stalls,
-                );
-                return;
-            }
-            Err(e) => {
-                let _ = q.push(Err(e), &gauge.stalls);
-                return;
-            }
+            q.close();
+            return;
+        }
+        if chunk.replicas.is_empty() || !retry.retries_left(attempts) {
+            break;
         }
     }
-    q.close();
+    if b >= geom.n_blocks {
+        q.close();
+    } else {
+        let _ = q.push(Err(last), &gauge.stalls);
+    }
 }
 
 /// Find one readable, geometry-consistent header among the candidates.
-fn probe_header(
+/// Also used by the repair path to learn a file's digest/geometry before
+/// deciding whether cached rebuilt chunks can be adopted.
+pub(crate) fn probe_header(
     registry: &SeRegistry,
     codec: &Codec,
     candidates: &[FetchChunk],
@@ -948,6 +1014,16 @@ fn probe_header(
 /// Streamed download: parallel same-offset block fetches across K chunks,
 /// block-by-block decode straight into `out`, mid-stream failover onto
 /// spare chunks. Returns the decoded byte count.
+///
+/// The read cache sits directly under this loop: cached decoded blocks
+/// are pinned up front and served without touching any SE (a fully
+/// cached file costs one header probe), freshly decoded blocks are
+/// admitted on the way out, and — when a chunk failed over mid-stream —
+/// the lost chunk's rows are re-derived per block (the decode already
+/// paid for the survivors) and retained in the degraded pool for later
+/// degraded reads and repair adoption. Cache effect is surfaced as one
+/// `cache` trace event per transfer.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn download_pipeline(
     registry: &Arc<SeRegistry>,
     codec: &Codec,
@@ -956,6 +1032,8 @@ pub(crate) fn download_pipeline(
     cfg: &PipeCfg,
     retry: RetryPolicy,
     gauge: &Gauge,
+    cache: &crate::cache::ReadCache,
+    lfn: &str,
 ) -> Result<u64> {
     let k = codec.params().k();
     if candidates.len() < k {
@@ -977,6 +1055,47 @@ pub(crate) fn download_pipeline(
         payload_len,
         n_blocks: segs.div_ceil(block_segs),
     };
+    let digest = hdr.file_sha256;
+    let use_cache = cache.enabled();
+    if use_cache || cache.degraded_enabled() {
+        cache.note_lfn(lfn, &digest);
+    }
+    // Pin every cached block up front (hit/miss accounting happens
+    // here); readers are told which blocks never need fetching.
+    let served: Vec<Option<Arc<Vec<u8>>>> = (0..geom.n_blocks)
+        .map(|b| if use_cache { cache.get_block(&digest, geom.row_block, b) } else { None })
+        .collect();
+    let served_flags: Vec<bool> = served.iter().map(Option::is_some).collect();
+    let hits = served_flags.iter().filter(|&&s| s).count() as u64;
+    let note_cache_event = |served_bytes: u64| {
+        if use_cache {
+            tracer().event(cfg.parent, "cache", true, || {
+                format!(
+                    "hits={hits} misses={} served_bytes={served_bytes}",
+                    geom.n_blocks - hits
+                )
+            });
+        }
+    };
+
+    if use_cache && hits == geom.n_blocks {
+        // Every block is cached: decode-free fast path. The bytes still
+        // flow through the incremental hash, so `finish()` holds the
+        // same end-to-end integrity guarantee as a cold get.
+        let mut decoder = codec.stream_decoder(hdr.file_len, digest);
+        let mut written = 0u64;
+        for (b, data) in served.iter().enumerate() {
+            let data = data.as_ref().expect("fully served");
+            let bc = (segs - b as u64 * block_segs).min(block_segs);
+            decoder.push_decoded(bc, data)?;
+            out.write_block(data)?;
+            written += data.len() as u64;
+        }
+        decoder.finish()?;
+        note_cache_event(written);
+        return Ok(written);
+    }
+
     let sem = Semaphore::new(cfg.workers);
     let queues: Vec<BlockQueue<Result<Vec<u8>>>> =
         candidates.iter().map(|_| BlockQueue::new(QUEUE_DEPTH)).collect();
@@ -988,6 +1107,7 @@ pub(crate) fn download_pipeline(
         let queues_ref = &queues;
         let sem_ref = &sem;
         let hdr_ref = &hdr;
+        let served_ref = &served_flags;
         let parent = cfg.parent;
         let spawn_reader = |slot: usize, start_block: u64| {
             let q = &queues_ref[slot];
@@ -995,19 +1115,37 @@ pub(crate) fn download_pipeline(
             let registry = Arc::clone(registry);
             s.spawn(move || {
                 chunk_reader(
-                    q, sem_ref, gauge, &registry, chunk, hdr_ref, start_block, geom, retry,
-                    parent,
+                    q, sem_ref, gauge, &registry, chunk, hdr_ref, start_block, served_ref,
+                    geom, retry, parent,
                 )
             });
         };
-        let mut decoder = codec.stream_decoder(hdr.file_len, hdr.file_sha256);
+        let mut decoder = codec.stream_decoder(hdr.file_len, digest);
         let mut active: Vec<usize> = (0..k).collect();
         for slot in 0..k {
             spawn_reader(slot, 0);
         }
         let mut next_candidate = k;
         let mut written = 0u64;
+        let mut served_bytes = 0u64;
+        // Chunk indices that failed over mid-stream; while non-empty,
+        // each decoded block also re-derives the lost chunks' rows for
+        // the degraded cache.
+        let mut dead: Vec<usize> = Vec::new();
+        let mut rbm: Option<(Vec<usize>, Vec<usize>, crate::gf::GfMatrix)> = None;
         for b in 0..geom.n_blocks {
+            if let Some(data) = &served[b as usize] {
+                let bc = (segs - b * block_segs).min(block_segs);
+                {
+                    let sp = tracer()
+                        .span_with(cfg.parent, "decode", || format!("block {b} (cached)"));
+                    sp.finish(decoder.push_decoded(bc, data))?;
+                }
+                out.write_block(data)?;
+                written += data.len() as u64;
+                served_bytes += data.len() as u64;
+                continue;
+            }
             let mut rows: Vec<(usize, Vec<u8>)> = Vec::with_capacity(k);
             let mut pos = 0usize;
             while pos < active.len() {
@@ -1038,6 +1176,7 @@ pub(crate) fn download_pipeline(
                                 candidates[slot].index, candidates[ns].index
                             )
                         });
+                        dead.push(candidates[slot].index);
                         spawn_reader(ns, b);
                         active[pos] = ns;
                     }
@@ -1050,15 +1189,52 @@ pub(crate) fn download_pipeline(
                 sp.finish(decoder.push_block(&refs))?
             };
             out.write_block(&bytes)?;
+            if !dead.is_empty() && cache.degraded_enabled() {
+                // The survivors for this block are already in memory:
+                // deriving the lost chunks' rows now costs one small
+                // matmul, and saves a full K-survivor re-stream on the
+                // next degraded read (or lets repair adopt them).
+                let present: Vec<usize> = rows.iter().map(|(i, _)| *i).collect();
+                let stale = rbm
+                    .as_ref()
+                    .map(|(p, d, _)| p != &present || d != &dead)
+                    .unwrap_or(true);
+                if stale {
+                    rbm = Some((
+                        present.clone(),
+                        dead.clone(),
+                        rebuild_matrix(codec.params(), &present, &dead)?,
+                    ));
+                }
+                let (_, _, mat) = rbm.as_ref().expect("rebuild matrix ensured");
+                let row_len = rows[0].1.len();
+                let mut rebuilt: Vec<Vec<u8>> = vec![vec![0u8; row_len]; dead.len()];
+                for seg in 0..row_len / sb {
+                    let data_refs: Vec<&[u8]> =
+                        rows.iter().map(|(_, p)| &p[seg * sb..(seg + 1) * sb]).collect();
+                    let mut out_refs: Vec<&mut [u8]> = rebuilt
+                        .iter_mut()
+                        .map(|v| &mut v[seg * sb..(seg + 1) * sb])
+                        .collect();
+                    codec.backend().matmul_into(mat, &data_refs, &mut out_refs)?;
+                }
+                for (di, buf) in dead.iter().zip(rebuilt) {
+                    cache.insert_chunk_block(&digest, *di, geom.row_block, b, buf);
+                }
+            }
             for (_, v) in &rows {
                 gauge.sub(v.len() as u64);
             }
             written += bytes.len() as u64;
+            if use_cache {
+                cache.insert_block(&digest, geom.row_block, b, bytes);
+            }
         }
         {
             let sp = tracer().span_with(cfg.parent, "decode", || "finish".into());
             sp.finish(decoder.finish())?;
         }
+        note_cache_event(served_bytes);
         Ok(written)
     })
 }
@@ -1127,8 +1303,8 @@ pub(crate) fn rebuild_pipeline(
             let registry = Arc::clone(registry);
             s.spawn(move || {
                 chunk_reader(
-                    q, sem_ref, gauge, &registry, chunk, hdr_ref, start_block, geom, retry,
-                    parent,
+                    q, sem_ref, gauge, &registry, chunk, hdr_ref, start_block, &[], geom,
+                    retry, parent,
                 )
             });
         };

@@ -538,6 +538,11 @@ impl SegmentDecoder {
             let identity =
                 present.len() == k && present.iter().enumerate().all(|(r, &i)| r == i);
             let mat = decode_matrix(self.params, present)?;
+            if !identity {
+                // Counted so benches/tests can assert a warm cache
+                // performs *zero* decode-matrix work.
+                crate::metrics::global().inc("ec.decode.matrix_builds");
+            }
             self.cached = Some((present.to_vec(), mat, identity));
         }
         Ok(self.cached.as_ref().map(|(_, _, id)| *id).unwrap_or(false))
@@ -667,6 +672,34 @@ impl StreamDecoder {
         Ok(out)
     }
 
+    /// Feed the next `seg_count` segments as *already decoded* file
+    /// bytes (e.g. served from the read cache): the bytes still flow
+    /// through the incremental whole-file hash, so [`Self::finish`]
+    /// verifies cached data exactly like freshly decoded data, but no
+    /// decode-matrix work happens.
+    pub fn push_decoded(&mut self, seg_count: u64, bytes: &[u8]) -> Result<()> {
+        if self.next_seg + seg_count > self.segs {
+            return Err(Error::Ec(format!(
+                "stream decoder overrun: {} segments past {}",
+                self.next_seg + seg_count,
+                self.segs
+            )));
+        }
+        let seg_bytes = (self.params.k() * self.stripe_b) as u64;
+        let start = self.next_seg * seg_bytes;
+        let end = ((self.next_seg + seg_count) * seg_bytes).min(self.file_len);
+        let want = end.saturating_sub(start) as usize;
+        if bytes.len() != want {
+            return Err(Error::Ec(format!(
+                "push_decoded: expected {want} bytes for {seg_count} segments, got {}",
+                bytes.len()
+            )));
+        }
+        self.hasher.update(bytes);
+        self.next_seg += seg_count;
+        Ok(())
+    }
+
     /// Verify every segment arrived and the reassembled bytes match the
     /// whole-file digest (the paper's further-work integrity check).
     pub fn finish(self) -> Result<()> {
@@ -696,6 +729,7 @@ pub fn rebuild_matrix(params: EcParams, present: &[usize], missing: &[usize]) ->
             return Err(Error::Ec(format!("missing index {i} out of range")));
         }
     }
+    crate::metrics::global().inc("ec.rebuild.matrix_builds");
     let dec = decode_matrix(params, present)?;
     let gen = GfMatrix::systematic_generator(params.k(), params.m())?;
     gen.select_rows(missing)?.matmul(&dec)

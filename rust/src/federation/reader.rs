@@ -3,6 +3,7 @@
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
+use crate::cache::ReadCache;
 use crate::catalog::Replica;
 use crate::ec::chunk::{ChunkHeader, HEADER_LEN};
 use crate::ec::{EcBackend, EcParams, SegmentDecoder};
@@ -21,7 +22,8 @@ pub struct ReaderStats {
     pub bytes_fetched: u64,
     /// Segments that needed a full K-row decode (a data chunk was down).
     pub segments_decoded: u64,
-    /// Segment-cache hits.
+    /// Cache hits: the reader's private decoded-segment cache plus the
+    /// shared [`crate::cache::ReadCache`] block pool (when attached).
     pub cache_hits: u64,
 }
 
@@ -42,6 +44,14 @@ pub struct EcFileReader {
     cache_cap: usize,
     tick: u64,
     stats: ReaderStats,
+    /// Whole-file SHA-256 from the chunk headers — the shared read
+    /// cache's content-addressed key.
+    digest: [u8; 32],
+    /// Optional process-wide [`ReadCache`] shared with the streaming
+    /// get path; entries are keyed at `row_block = stripe_b` (one
+    /// segment per entry), so a reader and a `get` with
+    /// `transfer_block_bytes ≤ K·stripe_b` serve each other's blocks.
+    shared: Option<Arc<ReadCache>>,
 }
 
 impl EcFileReader {
@@ -73,6 +83,8 @@ impl EcFileReader {
             cache_cap: 8,
             tick: 0,
             stats: ReaderStats::default(),
+            digest: [0u8; 32],
+            shared: None,
         };
         // Learn the file length from any readable chunk header.
         let hdr = reader.read_any_header()?;
@@ -80,7 +92,23 @@ impl EcFileReader {
             return Err(Error::Ec("reader geometry disagrees with chunk header".into()));
         }
         reader.file_len = hdr.file_len;
+        reader.digest = hdr.file_sha256;
         Ok(reader)
+    }
+
+    /// Attach a shared [`ReadCache`]: cells are served from its
+    /// decoded-block pool before any SE is contacted, and degraded
+    /// segment decodes populate it.
+    pub fn with_cache(mut self, cache: Arc<ReadCache>) -> Self {
+        if cache.enabled() || cache.degraded_enabled() {
+            self.shared = Some(cache);
+        }
+        self
+    }
+
+    /// The file's whole-file SHA-256 (as carried by every chunk header).
+    pub fn digest(&self) -> &[u8; 32] {
+        &self.digest
     }
 
     /// Logical file length in bytes.
@@ -168,6 +196,19 @@ impl EcFileReader {
                     .copy_from_slice(&rows[cell.row][cell.start..cell.end]);
                 continue;
             }
+            // Shared read cache (decoded file bytes, one segment per
+            // entry): serve without touching any SE. The entry is
+            // clipped at EOF, but so is the requested range, so the
+            // slice below is always in bounds.
+            if let Some(shared) = &self.shared {
+                if let Some(data) = shared.get_block(&self.digest, sb as u64, cell.seg) {
+                    let base = cell.row * sb;
+                    out[cell.out_off..cell.out_off + take]
+                        .copy_from_slice(&data[base + cell.start..base + cell.end]);
+                    self.stats.cache_hits += 1;
+                    continue;
+                }
+            }
             if self.chunk_live(cell.row) {
                 // Fast path: ranged GET of just the needed bytes from the
                 // data chunk itself (systematic code — stored verbatim).
@@ -182,10 +223,25 @@ impl EcFileReader {
                 out[cell.out_off..cell.out_off + take].copy_from_slice(&bytes);
             } else {
                 // Degraded path: reconstruct the whole segment from any K
-                // surviving chunks and cache it.
+                // surviving chunks and cache it (privately, and in the
+                // shared pool so other readers and future gets skip the
+                // decode entirely).
                 let rows = self.decode_segment(cell.seg)?;
                 out[cell.out_off..cell.out_off + take]
                     .copy_from_slice(&rows[cell.row][cell.start..cell.end]);
+                if let Some(shared) = &self.shared {
+                    let seg_start = cell.seg * (k * sb) as u64;
+                    let clip = (self.file_len - seg_start).min((k * sb) as u64) as usize;
+                    let mut flat = Vec::with_capacity(clip);
+                    for row in &rows {
+                        if flat.len() >= clip {
+                            break;
+                        }
+                        let n = (clip - flat.len()).min(sb);
+                        flat.extend_from_slice(&row[..n]);
+                    }
+                    shared.insert_block(&self.digest, sb as u64, cell.seg, flat);
+                }
                 self.cache_insert(cell.seg, rows);
             }
         }

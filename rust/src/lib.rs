@@ -40,6 +40,10 @@
 //! * [`sim`] — deterministic discrete-event simulator calibrated to the
 //!   paper's Table 1 (setup latency + shared uplink), used by the
 //!   figure-regeneration benches; Monte-Carlo durability analysis.
+//! * [`cache`] — the byte-bounded, lock-sharded read cache under the
+//!   get path: a decoded-block LRU with frequency-aware admission plus
+//!   a degraded-read rebuilt-chunk cache that repair can adopt from,
+//!   invalidated by the catalogue mutation path.
 //! * [`obs`] — observability: structured span tracing over the whole
 //!   data plane (near-zero cost when disabled), a JSONL trace sink,
 //!   a Prometheus-format exporter for [`metrics`], and the embeddable
@@ -77,6 +81,7 @@
 
 #![warn(missing_docs)]
 
+pub mod cache;
 pub mod catalog;
 pub mod cli;
 pub mod config;

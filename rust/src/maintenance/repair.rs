@@ -5,6 +5,13 @@
 //! configurable concurrency + bandwidth budget. Corrupt replicas found by
 //! a deep scrub are quarantined (deleted from their SE) first, so the
 //! shim's stat-driven repair path rebuilds them like any missing chunk.
+//!
+//! When the shared read cache's degraded pool is enabled
+//! ([`crate::cache::ReadCache`]), each file repair first tries to *adopt*
+//! lost chunks that an earlier degraded read already rebuilt and cached:
+//! the chunk is verified against its catalogue checksum and written out
+//! directly, skipping the re-stream of K survivor chunks entirely
+//! (visible as the `cache.adopted_chunks` metric).
 
 use crate::dfm::EcShim;
 use crate::dfm::GetOptions;

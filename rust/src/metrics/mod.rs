@@ -20,6 +20,17 @@
 //! bottleneck, so raising `workers` helps and raising
 //! `transfer_block_bytes` does not).
 //!
+//! The read cache records under `cache.*`: `hits` / `misses` /
+//! `evictions` / `inserted_bytes` / `hit_bytes` for the decoded-block
+//! pool, the mirrored `cache.degraded.*` family for the rebuilt-chunk
+//! pool, `cache.adopted_chunks` (chunks `repair` wrote from the
+//! degraded pool instead of re-streaming K survivors), and the
+//! residency gauges `cache.resident_bytes` /
+//! `cache.degraded.resident_bytes`. The codec's companion counters
+//! `ec.decode.matrix_builds` / `ec.rebuild.matrix_builds` count
+//! non-identity decode-matrix derivations, so a warm cache is visible
+//! as those counters standing still across repeated degraded reads.
+//!
 //! The maintenance engine records under `maintenance.*`: scrub/repair/
 //! drain run counts and outcomes, `maintenance.quarantine_failed`
 //! (corrupt-replica quarantines whose object delete or record drop

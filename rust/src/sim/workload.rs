@@ -76,6 +76,82 @@ pub fn corpus_bytes(files: &[WorkloadFile]) -> u64 {
     files.iter().map(|f| f.data.len() as u64).sum()
 }
 
+/// Zipf(α) sampler over ranks `0..n`: rank `r` is drawn with
+/// probability proportional to `1/(r+1)^α`. This is the canonical
+/// skewed-popularity model for read traffic (a small hot set absorbs
+/// most accesses), used by the read-cache bench/tests to shape
+/// multi-client access patterns. Sampling is a binary search over a
+/// precomputed CDF — O(log n) per draw, no rejection, no new deps.
+#[derive(Clone, Debug)]
+pub struct ZipfGenerator {
+    /// Cumulative probabilities; `cdf[r]` = P(rank ≤ r). The final
+    /// entry is exactly 1.0 by construction.
+    cdf: Vec<f64>,
+}
+
+impl ZipfGenerator {
+    /// Build a sampler over `n` ranks with exponent `alpha`
+    /// (`alpha = 0` degenerates to uniform). Panics when `n == 0` or
+    /// `alpha` is not finite.
+    pub fn new(n: usize, alpha: f64) -> Self {
+        assert!(n > 0, "Zipf over an empty population");
+        assert!(alpha.is_finite() && alpha >= 0.0, "bad Zipf exponent {alpha}");
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0f64;
+        for r in 0..n {
+            acc += 1.0 / ((r + 1) as f64).powf(alpha);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for p in &mut cdf {
+            *p /= total;
+        }
+        // Guard the tail against rounding so `sample` can never fall off.
+        *cdf.last_mut().expect("n > 0") = 1.0;
+        ZipfGenerator { cdf }
+    }
+
+    /// Number of ranks.
+    pub fn population(&self) -> usize {
+        self.cdf.len()
+    }
+
+    /// Draw one rank in `0..population()`.
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let x = rng.f64();
+        // First rank whose cumulative probability covers x.
+        self.cdf.partition_point(|&p| p < x).min(self.cdf.len() - 1)
+    }
+
+    /// Exact probability of rank `r` under this distribution.
+    pub fn probability(&self, r: usize) -> f64 {
+        let lo = if r == 0 { 0.0 } else { self.cdf[r - 1] };
+        self.cdf[r] - lo
+    }
+}
+
+/// A deterministic multi-client access trace: `clients` independent
+/// streams of `per_client` Zipf-ranked accesses over a corpus of
+/// `population` files. Client `c`'s stream is seeded from
+/// `seed ^ c`, so traces are reproducible per client and clients
+/// disagree with each other (shared hot head, different tails) — the
+/// access pattern a shared read cache is designed for.
+pub fn zipf_trace(
+    population: usize,
+    alpha: f64,
+    clients: usize,
+    per_client: usize,
+    seed: u64,
+) -> Vec<Vec<usize>> {
+    let zipf = ZipfGenerator::new(population, alpha);
+    (0..clients)
+        .map(|c| {
+            let mut rng = Rng::new(seed ^ (c as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+            (0..per_client).map(|_| zipf.sample(&mut rng)).collect()
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -107,6 +183,64 @@ mod tests {
         let classes: std::collections::BTreeSet<_> =
             files.iter().map(|f| f.class).collect();
         assert!(classes.len() >= 3, "{classes:?}");
+    }
+
+    #[test]
+    fn zipf_rank_frequency_follows_power_law() {
+        // Under Zipf(α), P(rank 0)/P(rank 1) = 2^α. Pin both the exact
+        // probabilities and the empirical counts of a long sample run.
+        let alpha = 1.1;
+        let zipf = ZipfGenerator::new(64, alpha);
+        let exact = zipf.probability(0) / zipf.probability(1);
+        assert!((exact - 2f64.powf(alpha)).abs() < 1e-12, "{exact}");
+
+        let mut rng = Rng::new(7);
+        let mut counts = [0u64; 64];
+        let draws = 200_000;
+        for _ in 0..draws {
+            counts[zipf.sample(&mut rng)] += 1;
+        }
+        let measured = counts[0] as f64 / counts[1] as f64;
+        assert!(
+            (measured / 2f64.powf(alpha) - 1.0).abs() < 0.1,
+            "rank0/rank1 = {measured}, want ≈ {}",
+            2f64.powf(alpha)
+        );
+        // Top ranks are (statistically) non-increasing in popularity.
+        for r in 0..7 {
+            assert!(
+                counts[r] > counts[r + 1] * 9 / 10,
+                "rank {r} ({}) should dominate rank {} ({})",
+                counts[r],
+                r + 1,
+                counts[r + 1]
+            );
+        }
+        // All probability mass accounted for.
+        let total: f64 = (0..64).map(|r| zipf.probability(r)).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zipf_trace_deterministic_and_in_range() {
+        let a = zipf_trace(16, 1.1, 3, 500, 42);
+        let b = zipf_trace(16, 1.1, 3, 500, 42);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 3);
+        for stream in &a {
+            assert_eq!(stream.len(), 500);
+            assert!(stream.iter().all(|&r| r < 16));
+        }
+        // Different clients see different tails (independent streams).
+        assert_ne!(a[0], a[1]);
+        // Alpha 0 degenerates to uniform: every rank appears.
+        let uni = ZipfGenerator::new(8, 0.0);
+        let mut rng = Rng::new(1);
+        let mut seen = [false; 8];
+        for _ in 0..10_000 {
+            seen[uni.sample(&mut rng)] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
     }
 
     #[test]

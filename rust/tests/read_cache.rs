@@ -1,0 +1,237 @@
+//! Read-cache coherence and bounds (`ci.sh` gate:
+//! `cargo test --test read_cache`): randomized concurrent readers racing
+//! overwrite/remove/repair must never observe stale bytes, and the
+//! configured byte bounds must hold at every instant. Also pins the two
+//! headline behaviours: warm degraded reads perform *zero* decode-matrix
+//! derivations, and `repair` adopts cached rebuilt chunks.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use drs::dfm::{GetOptions, PutOptions, TestCluster};
+use drs::transfer::RetryPolicy;
+use drs::util::prng::Rng;
+
+/// Serializes the tests that read or produce the process-global
+/// `ec.*.matrix_builds` counters (tests in one binary run in parallel
+/// threads, and a concurrent degraded read would break the zero-delta
+/// assertions).
+static MATRIX_COUNTERS: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    MATRIX_COUNTERS.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn patterned(len: usize, salt: u32) -> Vec<u8> {
+    (0..len as u32).map(|i| (i.wrapping_mul(31).wrapping_add(salt) % 251) as u8).collect()
+}
+
+fn put_opts(cluster: &TestCluster, block: usize) -> PutOptions {
+    PutOptions::default()
+        .with_params(cluster.params())
+        .with_stripe(1024)
+        .with_block_bytes(block)
+        .with_retry(RetryPolicy::default_robust())
+}
+
+// ---------------------------------------------------------------------
+// Sequential stale-serve regression: overwrite = rm + put ⇒ new digest,
+// so the content-addressed cache can never hand back generation A.
+// ---------------------------------------------------------------------
+
+#[test]
+fn overwrite_never_serves_stale_bytes() {
+    let cluster =
+        TestCluster::builder().ses(6).cache_bytes(4 << 20, 1 << 20).build().unwrap();
+    let gopts = GetOptions::default().with_block_bytes(4096);
+    let a = patterned(120_000, 1);
+    cluster.shim().put_bytes("/vo/s.bin", &a, &put_opts(&cluster, 4096)).unwrap();
+    assert_eq!(cluster.shim().get_bytes("/vo/s.bin", &gopts).unwrap(), a);
+    // Second read is warm.
+    assert_eq!(cluster.shim().get_bytes("/vo/s.bin", &gopts).unwrap(), a);
+    let warm = cluster.shim().cache().stats();
+    assert!(warm.hits > 0, "second get should hit the cache: {warm:?}");
+
+    // rm must eagerly reclaim every cached block for the file.
+    cluster.shim().rm("/vo/s.bin").unwrap();
+    assert_eq!(cluster.shim().cache().stats().resident_bytes, 0);
+
+    let b = patterned(120_000, 2);
+    cluster.shim().put_bytes("/vo/s.bin", &b, &put_opts(&cluster, 4096)).unwrap();
+    assert_eq!(cluster.shim().get_bytes("/vo/s.bin", &gopts).unwrap(), b);
+    assert_eq!(cluster.shim().get_bytes("/vo/s.bin", &gopts).unwrap(), b);
+}
+
+// ---------------------------------------------------------------------
+// Acceptance criterion: degraded reads after the first request of a hot
+// file perform zero matrix decodes.
+// ---------------------------------------------------------------------
+
+#[test]
+fn warm_degraded_reads_do_zero_matrix_decodes() {
+    let _guard = lock();
+    let cluster =
+        TestCluster::builder().ses(6).cache_bytes(8 << 20, 4 << 20).build().unwrap();
+    let data = patterned(200_000, 3);
+    cluster.shim().put_bytes("/vo/d.bin", &data, &put_opts(&cluster, 8192)).unwrap();
+    let gopts = GetOptions::default().with_block_bytes(8192).with_workers(3);
+    cluster.kill_se("SE-00");
+    cluster.kill_se("SE-01");
+    // Cold degraded get: decodes every block (and caches them).
+    assert_eq!(cluster.shim().get_bytes("/vo/d.bin", &gopts).unwrap(), data);
+
+    let m = drs::metrics::global();
+    let before = m.counter("ec.decode.matrix_builds") + m.counter("ec.rebuild.matrix_builds");
+    for _ in 0..3 {
+        assert_eq!(cluster.shim().get_bytes("/vo/d.bin", &gopts).unwrap(), data);
+    }
+    let after = m.counter("ec.decode.matrix_builds") + m.counter("ec.rebuild.matrix_builds");
+    assert_eq!(
+        after, before,
+        "warm degraded reads must not derive any decode matrix"
+    );
+    assert!(cluster.shim().cache().stats().hits > 0);
+}
+
+// ---------------------------------------------------------------------
+// Repair adoption: a degraded get leaves the rebuilt chunk in the
+// degraded pool; repair writes it out instead of re-streaming K
+// survivors (same block size ⇒ same cache keying).
+// ---------------------------------------------------------------------
+
+#[test]
+fn repair_adopts_cached_rebuilt_chunks() {
+    let _guard = lock();
+    let cluster =
+        TestCluster::builder().ses(8).cache_bytes(8 << 20, 8 << 20).build().unwrap();
+    let data = patterned(150_000, 4);
+    let block = 8192;
+    cluster.shim().put_bytes("/vo/a.bin", &data, &put_opts(&cluster, block)).unwrap();
+    let gopts = GetOptions::default().with_block_bytes(block).with_workers(3);
+
+    cluster.kill_se("SE-02"); // holds chunk 2 (round-robin)
+    assert_eq!(cluster.shim().get_bytes("/vo/a.bin", &gopts).unwrap(), data);
+    let adopted_before = cluster.shim().cache().stats().adopted_chunks;
+
+    let fixed = cluster.shim().repair("/vo/a.bin", &gopts).unwrap();
+    assert_eq!(fixed, 1);
+    let adopted = cluster.shim().cache().stats().adopted_chunks - adopted_before;
+    assert_eq!(adopted, 1, "repair should adopt the cached rebuilt chunk");
+
+    // The adopted chunk is genuine: the file still reads with the dead
+    // SE down, and a fresh stat shows full health.
+    assert_eq!(cluster.shim().get_bytes("/vo/a.bin", &gopts).unwrap(), data);
+    let stat = cluster.shim().stat("/vo/a.bin").unwrap();
+    assert_eq!(stat.available_chunks, 6);
+    assert!(stat.chunks.iter().all(|c| !c.available || c.se != "SE-02"));
+}
+
+// ---------------------------------------------------------------------
+// Eviction keeps the bound with a corpus larger than the cache.
+// ---------------------------------------------------------------------
+
+#[test]
+fn small_cache_evicts_and_never_exceeds_bound() {
+    let cap: u64 = 256 << 10;
+    let cluster = TestCluster::builder().ses(6).cache_bytes(cap, 0).build().unwrap();
+    let gopts = GetOptions::default().with_block_bytes(8192);
+    for i in 0..8u32 {
+        let lfn = format!("/vo/e{i}.bin");
+        let data = patterned(100_000, 100 + i);
+        cluster.shim().put_bytes(&lfn, &data, &put_opts(&cluster, 8192)).unwrap();
+        assert_eq!(cluster.shim().get_bytes(&lfn, &gopts).unwrap(), data);
+        assert_eq!(cluster.shim().get_bytes(&lfn, &gopts).unwrap(), data);
+        let st = cluster.shim().cache().stats();
+        assert!(st.resident_bytes <= cap, "{} > {cap}", st.resident_bytes);
+    }
+    let st = cluster.shim().cache().stats();
+    assert!(st.peak_resident_bytes <= cap, "peak {} > {cap}", st.peak_resident_bytes);
+    assert!(st.evictions > 0, "an 800 KB corpus must evict from a 256 KB cache");
+}
+
+// ---------------------------------------------------------------------
+// The fuzz: concurrent readers vs rm/re-put/kill/repair. Every
+// successful read must equal a recorded generation (the whole-file
+// digest makes mixed-generation output impossible; this asserts the
+// cache never resurrects a removed one either), and both pools must
+// honour their byte bounds throughout.
+// ---------------------------------------------------------------------
+
+#[test]
+fn concurrent_readers_vs_mutators_fuzz() {
+    let _guard = lock();
+    let cap: u64 = 1 << 20;
+    let dcap: u64 = 512 << 10;
+    let cluster = TestCluster::builder().ses(6).cache_bytes(cap, dcap).build().unwrap();
+    let lfn = "/vo/fuzz.bin";
+    let history: Mutex<Vec<Vec<u8>>> = Mutex::new(Vec::new());
+    let done = AtomicBool::new(false);
+    let stale = AtomicU64::new(0);
+    let good_reads = AtomicU64::new(0);
+
+    let g0 = patterned(90_000, 1000);
+    cluster.shim().put_bytes(lfn, &g0, &put_opts(&cluster, 8192)).unwrap();
+    history.lock().unwrap().push(g0);
+
+    std::thread::scope(|s| {
+        for _ in 0..3 {
+            s.spawn(|| {
+                let gopts = GetOptions::default()
+                    .with_block_bytes(8192)
+                    .with_retry(RetryPolicy::default_robust());
+                while !done.load(Ordering::SeqCst) {
+                    // Errors are fine mid-transition (rm'd, SE down);
+                    // wrong bytes are not.
+                    if let Ok(bytes) = cluster.shim().get_bytes(lfn, &gopts) {
+                        let known =
+                            history.lock().unwrap().iter().any(|g| g == &bytes);
+                        if known {
+                            good_reads.fetch_add(1, Ordering::Relaxed);
+                        } else {
+                            stale.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+            });
+        }
+
+        let mut rng = Rng::new(0xF00D);
+        for gen in 1..=20u32 {
+            let len = 40_000 + rng.index(80_000);
+            let data = patterned(len, 1000 + gen);
+            // Record the generation BEFORE it becomes readable, so a
+            // racing reader can never see content absent from history.
+            history.lock().unwrap().push(data.clone());
+            let _ = cluster.shim().rm(lfn);
+            cluster.shim().put_bytes(lfn, &data, &put_opts(&cluster, 8192)).unwrap();
+
+            if gen % 5 == 0 {
+                // Degraded + repair cycle: populate the degraded pool,
+                // let repair adopt/rebuild, bring the SE back.
+                let se = format!("SE-{:02}", rng.index(6));
+                cluster.kill_se(&se);
+                let gopts = GetOptions::default()
+                    .with_block_bytes(8192)
+                    .with_retry(RetryPolicy::default_robust());
+                let _ = cluster.shim().get_bytes(lfn, &gopts);
+                let _ = cluster.shim().repair(lfn, &gopts);
+                cluster.revive_se(&se);
+            }
+
+            let st = cluster.shim().cache().stats();
+            assert!(st.resident_bytes <= cap, "{} > {cap}", st.resident_bytes);
+            assert!(
+                st.degraded_resident_bytes <= dcap,
+                "{} > {dcap}",
+                st.degraded_resident_bytes
+            );
+        }
+        done.store(true, Ordering::SeqCst);
+    });
+
+    assert_eq!(stale.load(Ordering::Relaxed), 0, "stale bytes served to a reader");
+    assert!(good_reads.load(Ordering::Relaxed) > 0, "fuzz never completed a read");
+    let st = cluster.shim().cache().stats();
+    assert!(st.peak_resident_bytes <= cap);
+    assert!(st.peak_degraded_resident_bytes <= dcap);
+}
