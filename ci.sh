@@ -80,7 +80,38 @@ cargo test -q --test read_cache
 # eviction regression fails CI fast.
 cargo bench --bench read_cache -- --quick
 
+echo "== drs lint gate (in-repo invariant analyzer) =="
+# The crate's own static analyzer (src/analysis/, docs/STATIC_ANALYSIS.md):
+# panic-freedom, unsafe hygiene, lock-order discipline, knob/metric drift,
+# atomic-write enforcement. Findings ratchet against lint_baseline.json —
+# any (rule, file) count above the committed baseline fails here by name.
+./target/release/drs lint
+
 echo "== docs (deny warnings, missing_docs enforced) =="
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+
+echo "== sanitizer lanes (optional: need a nightly toolchain) =="
+# Deep UB checks on the kernels that do pointer math. Both lanes are
+# best-effort: boxes without the nightly components skip them loudly
+# rather than failing, so the core gate stays runnable everywhere.
+if cargo +nightly miri --version >/dev/null 2>&1; then
+  echo "-- miri: gf/ec unit tests (UB interpreter) --"
+  # The SIMD kernels use target intrinsics miri cannot model; the lib
+  # unit tests cover the scalar oracle, table builders and the codec
+  # math, which is where the pointer arithmetic lives.
+  MIRIFLAGS="-Zmiri-disable-isolation" \
+    cargo +nightly miri test --lib gf:: ec::backend
+else
+  echo "!! SKIPPED: miri lane (install with: rustup +nightly component add miri)"
+fi
+if rustup run nightly rustc --version >/dev/null 2>&1 \
+   && rustup component list --toolchain nightly 2>/dev/null | grep -q "rust-src (installed)"; then
+  echo "-- asan: gf_backend_equivalence (heap overflow / OOB detector) --"
+  RUSTFLAGS="-Z sanitizer=address" \
+    cargo +nightly test -Z build-std --target x86_64-unknown-linux-gnu \
+      -q --test gf_backend_equivalence
+else
+  echo "!! SKIPPED: asan lane (needs nightly + rust-src: rustup +nightly component add rust-src)"
+fi
 
 echo "CI green ✓"

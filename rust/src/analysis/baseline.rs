@@ -1,0 +1,240 @@
+//! The ratcheting lint baseline.
+//!
+//! `lint_baseline.json` at the repo root records, per (rule, file),
+//! how many findings are *tolerated* — the debt inherited when a rule
+//! was introduced. A lint run fails only on **regressions**: a
+//! (rule, file) cell whose current count exceeds the baseline. The
+//! baseline may only shrink: `drs lint --update-baseline` rewrites it
+//! from the current findings but refuses to grow any cell, so debt is
+//! paid down monotonically and can never silently return.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+use super::Finding;
+
+/// Baseline file format version.
+const VERSION: u64 = 1;
+
+/// Tolerated finding counts: rule id → file → count.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Baseline {
+    /// rule id (e.g. `"R1"`) → repo-relative file → tolerated count.
+    pub counts: BTreeMap<String, BTreeMap<String, u64>>,
+}
+
+/// One (rule, file) cell whose current count exceeds the baseline.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Regression {
+    /// Rule id, e.g. `"R1"`.
+    pub rule: String,
+    /// Repo-relative file path.
+    pub file: String,
+    /// Tolerated count from the baseline.
+    pub baseline: u64,
+    /// Count observed in this run.
+    pub current: u64,
+}
+
+impl Baseline {
+    /// Aggregate findings into per-(rule, file) counts.
+    pub fn from_findings(findings: &[Finding]) -> Baseline {
+        let mut counts: BTreeMap<String, BTreeMap<String, u64>> = BTreeMap::new();
+        for f in findings {
+            *counts
+                .entry(f.rule.id().to_string())
+                .or_default()
+                .entry(f.file.clone())
+                .or_default() += 1;
+        }
+        Baseline { counts }
+    }
+
+    /// Load from `path`. A missing file is an empty baseline (every
+    /// finding is then a regression — the strictest reading).
+    pub fn load(path: &Path) -> Result<Baseline> {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Ok(Baseline::default());
+            }
+            Err(e) => return Err(e.into()),
+        };
+        let json = Json::parse(&text)
+            .map_err(|e| Error::Config(format!("{}: {e}", path.display())))?;
+        let version = json.get("version").and_then(Json::as_u64).unwrap_or(0);
+        if version != VERSION {
+            return Err(Error::Config(format!(
+                "{}: unsupported baseline version {version} (want {VERSION})",
+                path.display()
+            )));
+        }
+        let mut counts: BTreeMap<String, BTreeMap<String, u64>> = BTreeMap::new();
+        let rules = json
+            .get("counts")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| Error::Config(format!("{}: missing counts object", path.display())))?;
+        for (rule, files) in rules {
+            let files = files.as_obj().ok_or_else(|| {
+                Error::Config(format!("{}: counts.{rule} is not an object", path.display()))
+            })?;
+            let cell = counts.entry(rule.clone()).or_default();
+            for (file, n) in files {
+                let n = n.as_u64().ok_or_else(|| {
+                    Error::Config(format!("{}: counts.{rule}.{file} is not a count", path.display()))
+                })?;
+                cell.insert(file.clone(), n);
+            }
+        }
+        Ok(Baseline { counts })
+    }
+
+    /// Serialize to the committed JSON form (pretty, stable order).
+    pub fn to_json_string(&self) -> String {
+        let mut out = String::from("{\n  \"version\": 1,\n  \"counts\": {");
+        let mut first_rule = true;
+        for (rule, files) in &self.counts {
+            if !first_rule {
+                out.push(',');
+            }
+            first_rule = false;
+            out.push_str(&format!("\n    {}: {{", Json::str(rule.as_str())));
+            let mut first_file = true;
+            for (file, n) in files {
+                if !first_file {
+                    out.push(',');
+                }
+                first_file = false;
+                out.push_str(&format!("\n      {}: {n}", Json::str(file.as_str())));
+            }
+            out.push_str("\n    }");
+        }
+        out.push_str("\n  }\n}\n");
+        out
+    }
+
+    /// Atomically write to `path`.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        crate::util::atomic_write(path, self.to_json_string().as_bytes())
+    }
+
+    /// Every (rule, file) cell where `current` exceeds this baseline.
+    pub fn regressions(&self, current: &Baseline) -> Vec<Regression> {
+        let mut out = Vec::new();
+        for (rule, files) in &current.counts {
+            for (file, &n) in files {
+                let tolerated = self
+                    .counts
+                    .get(rule)
+                    .and_then(|m| m.get(file))
+                    .copied()
+                    .unwrap_or(0);
+                if n > tolerated {
+                    out.push(Regression {
+                        rule: rule.clone(),
+                        file: file.clone(),
+                        baseline: tolerated,
+                        current: n,
+                    });
+                }
+            }
+        }
+        out
+    }
+
+    /// The ratchet: produce the updated baseline from `current`, or
+    /// an error if any cell would grow. Cells that shrank or vanished
+    /// are dropped to the smaller value — the baseline only ever
+    /// tightens.
+    pub fn ratchet(&self, current: &Baseline) -> Result<Baseline> {
+        let regressions = self.regressions(current);
+        if let Some(r) = regressions.first() {
+            return Err(Error::Config(format!(
+                "refusing to grow baseline: {} in {} went {} -> {} ({} regressed cell(s) total); fix the new findings or add an allow-comment with a reason",
+                r.rule,
+                r.file,
+                r.baseline,
+                r.current,
+                regressions.len()
+            )));
+        }
+        Ok(current.clone())
+    }
+
+    /// Total tolerated findings across all cells.
+    pub fn total(&self) -> u64 {
+        self.counts.values().flat_map(|m| m.values()).sum()
+    }
+
+    /// Total tolerated findings for one rule id.
+    pub fn total_for(&self, rule: &str) -> u64 {
+        self.counts.get(rule).map(|m| m.values().sum()).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::Rule;
+
+    fn b(cells: &[(&str, &str, u64)]) -> Baseline {
+        let mut counts: BTreeMap<String, BTreeMap<String, u64>> = BTreeMap::new();
+        for &(rule, file, n) in cells {
+            counts.entry(rule.into()).or_default().insert(file.into(), n);
+        }
+        Baseline { counts }
+    }
+
+    #[test]
+    fn roundtrips_through_json() {
+        let base = b(&[("R1", "rust/src/a.rs", 3), ("R3", "rust/src/b.rs", 1)]);
+        let text = base.to_json_string();
+        let dir = std::env::temp_dir().join(format!("drs-lintbase-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("base.json");
+        std::fs::write(&path, &text).unwrap();
+        assert_eq!(Baseline::load(&path).unwrap(), base);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_file_is_empty() {
+        let path = std::env::temp_dir().join("drs-definitely-absent-baseline.json");
+        assert_eq!(Baseline::load(&path).unwrap(), Baseline::default());
+    }
+
+    #[test]
+    fn regressions_flag_growth_only() {
+        let base = b(&[("R1", "a.rs", 2)]);
+        assert!(base.regressions(&b(&[("R1", "a.rs", 2)])).is_empty());
+        assert!(base.regressions(&b(&[("R1", "a.rs", 1)])).is_empty());
+        let regs = base.regressions(&b(&[("R1", "a.rs", 3), ("R6", "c.rs", 1)]));
+        assert_eq!(regs.len(), 2);
+        assert_eq!(regs[0].rule, "R1");
+        assert_eq!(regs[1].rule, "R6");
+    }
+
+    #[test]
+    fn ratchet_refuses_growth_and_accepts_shrink() {
+        let base = b(&[("R1", "a.rs", 2), ("R1", "b.rs", 1)]);
+        let shrunk = base.ratchet(&b(&[("R1", "a.rs", 1)])).unwrap();
+        assert_eq!(shrunk.total(), 1);
+        assert!(base.ratchet(&b(&[("R1", "a.rs", 3)])).is_err());
+    }
+
+    #[test]
+    fn from_findings_counts_cells() {
+        let findings = vec![
+            Finding::new(Rule::Panic, "a.rs", 1, "x".into()),
+            Finding::new(Rule::Panic, "a.rs", 2, "y".into()),
+            Finding::new(Rule::Lock, "b.rs", 3, "z".into()),
+        ];
+        let cur = Baseline::from_findings(&findings);
+        assert_eq!(cur.counts["R1"]["a.rs"], 2);
+        assert_eq!(cur.counts["R3"]["b.rs"], 1);
+        assert_eq!(cur.total_for("R1"), 2);
+    }
+}

@@ -1,0 +1,418 @@
+//! A minimal Rust-source lexer for the lint passes.
+//!
+//! The rule passes in [`super::rules`] are line- and token-oriented, so
+//! the only lexing they need is *masking*: a copy of the source in
+//! which every string literal, char literal and comment has its
+//! contents blanked out (newlines preserved), so a substring scan over
+//! the masked text can never match inside a string or a comment. The
+//! lexer additionally returns the string literals and comments it
+//! removed, with their positions, because two rules need them: the
+//! knob/metric drift checks read literal values, and the hygiene rules
+//! read comment text (`// SAFETY:`, `// lint: allow(...)`).
+//!
+//! Handled syntax: `//` and `///`//`//!` line comments, nested `/* */`
+//! block comments (including doc forms), `"..."` and `b"..."` strings
+//! with escapes, raw strings `r"..."`, `r#"..."#` (any hash count, and
+//! the `br` forms), char/byte-char literals `'x'`/`b'\n'`, and the
+//! lifetime-vs-char-literal ambiguity (`'a>` is a lifetime, `'a'` is a
+//! char).
+
+/// One string literal found in the source (raw contents, no quotes,
+/// escapes left as written).
+#[derive(Debug, Clone)]
+pub struct StrLit {
+    /// Byte offset of the opening quote in the original source.
+    pub offset: usize,
+    /// 1-based line of the opening quote.
+    pub line: usize,
+    /// The literal's contents (between the delimiters), unprocessed.
+    pub text: String,
+}
+
+/// One comment found in the source (text includes the `//`/`/*`
+/// markers).
+#[derive(Debug, Clone)]
+pub struct Comment {
+    /// 1-based line the comment starts on.
+    pub line: usize,
+    /// 1-based line the comment ends on (same as `line` for `//`).
+    pub end_line: usize,
+    /// The raw comment text, markers included.
+    pub text: String,
+}
+
+/// The result of masking one source file. See the module docs.
+#[derive(Debug, Default)]
+pub struct Masked {
+    /// The source with string/char contents and comments blanked.
+    /// Byte-for-byte the same length as the input; newlines kept.
+    pub code: String,
+    /// Every string literal, in source order.
+    pub strings: Vec<StrLit>,
+    /// Every comment, in source order.
+    pub comments: Vec<Comment>,
+}
+
+impl Masked {
+    /// The masked source split into lines (no terminators). Line `i`
+    /// of the vector is source line `i + 1`.
+    pub fn code_lines(&self) -> Vec<&str> {
+        self.code.lines().collect()
+    }
+}
+
+/// Is `b` an identifier byte (`[A-Za-z0-9_]` — multibyte identifier
+/// chars are treated as opaque and never start lexer constructs)?
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Mask `src` (see module docs). The masked output replaces every
+/// blanked byte with a space, so byte offsets and line numbers in the
+/// masked text equal those in the original.
+pub fn mask(src: &str) -> Masked {
+    let b = src.as_bytes();
+    let mut out = b.to_vec();
+    let mut strings = Vec::new();
+    let mut comments = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1usize;
+
+    // Blank out[from..to], preserving newlines.
+    let blank = |out: &mut [u8], from: usize, to: usize| {
+        for x in out.iter_mut().take(to).skip(from) {
+            if *x != b'\n' {
+                *x = b' ';
+            }
+        }
+    };
+
+    while i < b.len() {
+        let c = b[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        // Line comment (covers `///` and `//!` doc comments).
+        if c == b'/' && i + 1 < b.len() && b[i + 1] == b'/' {
+            let start = i;
+            while i < b.len() && b[i] != b'\n' {
+                i += 1;
+            }
+            comments.push(Comment {
+                line,
+                end_line: line,
+                text: String::from_utf8_lossy(&b[start..i]).into_owned(),
+            });
+            blank(&mut out, start, i);
+            continue;
+        }
+        // Block comment, possibly nested (covers `/** */`, `/*! */`).
+        if c == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+            let (start, start_line) = (i, line);
+            let mut depth = 1usize;
+            i += 2;
+            while i < b.len() && depth > 0 {
+                if b[i] == b'\n' {
+                    line += 1;
+                    i += 1;
+                } else if b[i] == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == b'*' && i + 1 < b.len() && b[i + 1] == b'/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            comments.push(Comment {
+                line: start_line,
+                end_line: line,
+                text: String::from_utf8_lossy(&b[start..i]).into_owned(),
+            });
+            blank(&mut out, start, i);
+            continue;
+        }
+        // Raw string: r"..." / r#"..."# / br#"..."# — only when the
+        // `r`/`b` is not the tail of an identifier (`for"x"` is not).
+        if (c == b'r' || c == b'b') && (i == 0 || !is_ident(b[i - 1])) {
+            let mut j = i;
+            if b[j] == b'b' {
+                j += 1;
+            }
+            if j < b.len() && b[j] == b'r' {
+                j += 1;
+                let mut hashes = 0usize;
+                while j < b.len() && b[j] == b'#' {
+                    hashes += 1;
+                    j += 1;
+                }
+                if j < b.len() && b[j] == b'"' {
+                    // Committed: scan to `"` followed by `hashes` #s.
+                    let content_start = j + 1;
+                    let open_line = line;
+                    let mut k = content_start;
+                    loop {
+                        if k >= b.len() {
+                            break; // unterminated: mask to EOF
+                        }
+                        if b[k] == b'\n' {
+                            line += 1;
+                            k += 1;
+                            continue;
+                        }
+                        if b[k] == b'"' && b[k + 1..].len() >= hashes
+                            && b[k + 1..k + 1 + hashes].iter().all(|&h| h == b'#')
+                        {
+                            break;
+                        }
+                        k += 1;
+                    }
+                    strings.push(StrLit {
+                        offset: j,
+                        line: open_line,
+                        text: String::from_utf8_lossy(&b[content_start..k.min(b.len())])
+                            .into_owned(),
+                    });
+                    blank(&mut out, content_start, k.min(b.len()));
+                    i = (k + 1 + hashes).min(b.len());
+                    continue;
+                }
+            }
+            // Not a raw string; `b"..."`/`b'...'` fall through to the
+            // plain string/char arms below on the quote itself.
+        }
+        // Plain string literal (the `b` of `b"..."` was ordinary code).
+        if c == b'"' {
+            let content_start = i + 1;
+            let open_line = line;
+            let mut k = content_start;
+            while k < b.len() {
+                if b[k] == b'\\' {
+                    k += 2;
+                    continue;
+                }
+                if b[k] == b'\n' {
+                    line += 1;
+                    k += 1;
+                    continue;
+                }
+                if b[k] == b'"' {
+                    break;
+                }
+                k += 1;
+            }
+            strings.push(StrLit {
+                offset: i,
+                line: open_line,
+                text: String::from_utf8_lossy(&b[content_start..k.min(b.len())]).into_owned(),
+            });
+            blank(&mut out, content_start, k.min(b.len()));
+            i = (k + 1).min(b.len());
+            continue;
+        }
+        // Char literal vs lifetime.
+        if c == b'\'' {
+            if i + 1 < b.len() && b[i + 1] == b'\\' {
+                // Escaped char literal: consume exactly one escape
+                // (`\n`, `\\`, `\'`, `\xNN`, `\u{..}`), landing `k` on
+                // the closing quote.
+                let mut k = i + 2;
+                if k < b.len() {
+                    match b[k] {
+                        b'x' => k = (k + 3).min(b.len()),
+                        b'u' => {
+                            while k < b.len() && b[k] != b'}' && b[k] != b'\n' {
+                                k += 1;
+                            }
+                            k = (k + 1).min(b.len());
+                        }
+                        _ => k += 1,
+                    }
+                }
+                blank(&mut out, i + 1, k.min(b.len()));
+                i = (k + 1).min(b.len());
+                continue;
+            }
+            // One char (possibly multibyte) then a closing quote means
+            // a char literal; anything else is a lifetime tick.
+            let rest = &src[i + 1..];
+            if let Some(ch) = rest.chars().next() {
+                let after = i + 1 + ch.len_utf8();
+                if after < b.len() && b[after] == b'\'' {
+                    blank(&mut out, i + 1, after);
+                    i = after + 1;
+                    continue;
+                }
+            }
+            i += 1;
+            continue;
+        }
+        i += 1;
+    }
+
+    Masked {
+        code: String::from_utf8_lossy(&out).into_owned(),
+        strings,
+        comments,
+    }
+}
+
+/// 1-based line ranges (inclusive) of `#[cfg(test)]`-guarded items in
+/// masked source, so rule passes can skip test code. The scan finds
+/// each `#[cfg(test)]` attribute and claims either the next
+/// brace-delimited item (a `mod tests { .. }`, a `fn`, an `impl`) or,
+/// when a `;` arrives first, just that statement.
+pub fn cfg_test_ranges(masked: &Masked) -> Vec<(usize, usize)> {
+    let code = masked.code.as_bytes();
+    let mut ranges = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    // Normalized needle match: `#[cfg(test)]` allowing interior spaces.
+    let matches_attr = |code: &[u8], at: usize| -> Option<usize> {
+        let needle = b"#[cfg(test)]";
+        let mut n = 0usize;
+        let mut j = at;
+        while n < needle.len() {
+            if j >= code.len() {
+                return None;
+            }
+            if code[j] == b' ' && needle[n] != b' ' && n > 0 {
+                j += 1; // skip incidental spacing
+                continue;
+            }
+            if code[j] != needle[n] {
+                return None;
+            }
+            j += 1;
+            n += 1;
+        }
+        Some(j)
+    };
+    while i < code.len() {
+        if code[i] == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if code[i] == b'#' {
+            if let Some(end) = matches_attr(code, i) {
+                let start_line = line;
+                // Scan forward: a `;` before any `{` claims one
+                // statement; otherwise claim the brace-balanced block.
+                let mut j = end;
+                let mut depth = 0usize;
+                let mut entered = false;
+                while j < code.len() {
+                    match code[j] {
+                        b'\n' => line += 1,
+                        b';' if !entered => break,
+                        b'{' => {
+                            depth += 1;
+                            entered = true;
+                        }
+                        b'}' => {
+                            depth = depth.saturating_sub(1);
+                            if entered && depth == 0 {
+                                break;
+                            }
+                        }
+                        _ => {}
+                    }
+                    j += 1;
+                }
+                ranges.push((start_line, line));
+                i = j.saturating_add(1);
+                continue;
+            }
+        }
+        i += 1;
+    }
+    ranges
+}
+
+/// Whether 1-based `line` falls in any of `ranges` (inclusive).
+pub fn in_ranges(ranges: &[(usize, usize)], line: usize) -> bool {
+    ranges.iter().any(|&(a, b)| line >= a && line <= b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn masks_strings_comments_chars() {
+        let src = "let a = \"un// wrap()\"; // .unwrap() here\nlet c = 'x';";
+        let m = mask(src);
+        assert!(!m.code.contains("unwrap"));
+        assert!(m.code.contains("let a"));
+        assert_eq!(m.strings.len(), 1);
+        assert_eq!(m.strings[0].text, "un// wrap()");
+        assert_eq!(m.comments.len(), 1);
+        assert!(m.comments[0].text.contains(".unwrap()"));
+        assert_eq!(m.code.len(), src.len());
+    }
+
+    #[test]
+    fn raw_strings_any_hash_count() {
+        let src = r####"let s = r#"panic!("no")"#; let t = r"x.unwrap()"; let u = br##"y"##;"####;
+        let m = mask(src);
+        assert!(!m.code.contains("panic!"));
+        assert!(!m.code.contains("unwrap"));
+        assert_eq!(m.strings.len(), 3);
+        assert_eq!(m.strings[0].text, "panic!(\"no\")");
+    }
+
+    #[test]
+    fn lifetimes_survive_char_literals_masked() {
+        let src = "fn f<'a>(x: &'a str) -> char { let c = 'y'; let n = '\\n'; c }";
+        let m = mask(src);
+        assert!(m.code.contains("<'a>"));
+        assert!(m.code.contains("&'a str"));
+        assert!(!m.code.contains("'y'"));
+        assert!(!m.code.contains("\\n"));
+    }
+
+    #[test]
+    fn escaped_backslash_char_does_not_eat_the_line() {
+        let src = "let b = '\\\\'; keep.this();";
+        let m = mask(src);
+        assert!(m.code.contains("keep.this()"), "{}", m.code);
+        let src2 = "let u = '\\u{1F600}'; keep.this();";
+        let m2 = mask(src2);
+        assert!(m2.code.contains("keep.this()"), "{}", m2.code);
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let src = "a /* outer /* inner */ still */ b";
+        let m = mask(src);
+        assert!(m.code.contains('a'));
+        assert!(m.code.contains('b'));
+        assert!(!m.code.contains("inner"));
+        assert!(!m.code.contains("still"));
+    }
+
+    #[test]
+    fn cfg_test_region_claims_block() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n  fn t() { x.unwrap(); }\n}\nfn live2() {}\n";
+        let m = mask(src);
+        let r = cfg_test_ranges(&m);
+        assert_eq!(r.len(), 1);
+        assert!(in_ranges(&r, 4));
+        assert!(!in_ranges(&r, 1));
+        assert!(!in_ranges(&r, 6));
+    }
+
+    #[test]
+    fn cfg_test_statement_form() {
+        let src = "#[cfg(test)]\nuse foo::bar;\nfn live() { let y = x.other(); }\n";
+        let m = mask(src);
+        let r = cfg_test_ranges(&m);
+        assert_eq!(r.len(), 1);
+        assert!(in_ranges(&r, 2));
+        assert!(!in_ranges(&r, 3));
+    }
+}

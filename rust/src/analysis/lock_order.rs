@@ -1,0 +1,161 @@
+//! The declared lock-order registry for rule R3 (lock discipline).
+//!
+//! The analyzer classifies every `.lock()` / `util::lock(..)` call
+//! site into a *lock class* by matching the receiver text against the
+//! patterns below, then checks lexically nested acquisitions against
+//! the declared partial order: a nested pair `(outer, inner)` is legal
+//! only when [`allows`] returns true for it. Same-class nesting is
+//! always a violation (self-deadlock risk), and nesting a pair that no
+//! declaration covers is a violation too — new nestings must be
+//! declared here, which is the point: the registry is the reviewed,
+//! versioned statement of which lock orders this crate permits.
+//!
+//! The declared order mirrors the invariants stated in the module docs
+//! of the lock holders themselves, e.g. `catalog::store`: "Lock order
+//! is always shard → journal, never the reverse."
+
+/// A lock class: a name plus the receiver-substring patterns that
+/// identify its acquisition sites. The first class whose pattern
+/// matches claims the site; `file_hint`, when set, restricts the class
+/// to paths containing that substring (lets two subsystems reuse a
+/// receiver word without colliding).
+pub struct LockClass {
+    /// Stable class name used in findings and order declarations.
+    pub name: &'static str,
+    /// Substrings matched against the receiver expression text.
+    pub patterns: &'static [&'static str],
+    /// Optional path-substring filter.
+    pub file_hint: Option<&'static str>,
+}
+
+/// Every known lock class. Order matters: first match wins, so more
+/// specific classes come first.
+pub const CLASSES: &[LockClass] = &[
+    LockClass {
+        name: "catalog-journal",
+        patterns: &["journal"],
+        file_hint: None,
+    },
+    LockClass {
+        name: "shard",
+        // ShardedDfc shards, cache shards, tracer ring shards.
+        patterns: &["shard"],
+        file_hint: None,
+    },
+    LockClass {
+        name: "cache-lfn-index",
+        patterns: &["lfns"],
+        file_hint: None,
+    },
+    LockClass {
+        name: "metrics-map",
+        patterns: &["counters", "gauges", "timers"],
+        file_hint: None,
+    },
+    LockClass {
+        name: "trace-sink",
+        patterns: &["sink"],
+        file_hint: None,
+    },
+    LockClass {
+        name: "daemon-status",
+        patterns: &["live_status", "live", "bound"],
+        file_hint: None,
+    },
+    LockClass {
+        name: "stream-state",
+        patterns: &["state"],
+        file_hint: None,
+    },
+    LockClass {
+        name: "stream-permits",
+        patterns: &["permits"],
+        file_hint: None,
+    },
+    LockClass {
+        name: "pool-queue",
+        patterns: &["queue"],
+        file_hint: None,
+    },
+    LockClass {
+        name: "pool-results",
+        patterns: &["successes", "failures"],
+        file_hint: None,
+    },
+    LockClass {
+        name: "se-store",
+        patterns: &["store"],
+        file_hint: None,
+    },
+    LockClass {
+        name: "pjrt-registry",
+        patterns: &["inner"],
+        file_hint: None,
+    },
+];
+
+/// The declared partial order: `(outer, inner)` pairs that may nest,
+/// outermost first. Everything not listed (including the reverse of a
+/// listed pair and same-class nesting) is a violation.
+pub const ORDER: &[(&str, &str)] = &[
+    // catalog::store: a shard's journal is appended to while that
+    // shard's lock is held — "shard → journal, never the reverse".
+    ("shard", "catalog-journal"),
+    // obs::Tracer::record: the sink handle is checked (held through
+    // the if-let) before the ring shard is taken.
+    ("trace-sink", "shard"),
+    // cache::ReadCache::invalidate_lfn: the LFN index yields the dead
+    // digests, then the pool shards are purged.
+    ("cache-lfn-index", "shard"),
+    // transfer::WorkPool workers: the queue guard (job fetch) precedes
+    // the result-vector push in the same loop body.
+    ("pool-queue", "pool-results"),
+];
+
+/// Classify a receiver expression (the text left of `.lock()` or the
+/// argument of `util::lock(..)`) into a lock class name.
+pub fn classify(receiver: &str, path: &str) -> Option<&'static str> {
+    for class in CLASSES {
+        if let Some(hint) = class.file_hint {
+            if !path.contains(hint) {
+                continue;
+            }
+        }
+        if class.patterns.iter().any(|p| receiver.contains(p)) {
+            return Some(class.name);
+        }
+    }
+    None
+}
+
+/// Whether the declared order allows acquiring `inner` while `outer`
+/// is held.
+pub fn allows(outer: &str, inner: &str) -> bool {
+    outer != inner && ORDER.iter().any(|&(o, i)| o == outer && i == inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classify_matches_known_receivers() {
+        assert_eq!(classify("self.shards[idx]", "rust/src/catalog/store.rs"), Some("shard"));
+        assert_eq!(
+            classify("journals[idx]", "rust/src/catalog/store.rs"),
+            Some("catalog-journal")
+        );
+        assert_eq!(classify("self.lfns", "rust/src/cache/mod.rs"), Some("cache-lfn-index"));
+        assert_eq!(classify("self.counters", "rust/src/metrics/mod.rs"), Some("metrics-map"));
+        assert_eq!(classify("self.sink", "rust/src/obs/mod.rs"), Some("trace-sink"));
+        assert_eq!(classify("mystery_mutex", "x.rs"), None);
+    }
+
+    #[test]
+    fn order_is_directional() {
+        assert!(allows("shard", "catalog-journal"));
+        assert!(!allows("catalog-journal", "shard"));
+        assert!(!allows("shard", "shard"));
+        assert!(!allows("shard", "metrics-map"));
+    }
+}

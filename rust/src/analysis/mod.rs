@@ -1,0 +1,399 @@
+//! `drs lint` — an in-repo, dependency-free static analyzer for the
+//! crate's own invariants.
+//!
+//! The analyzer lexes every file under `rust/src` with a hand-rolled
+//! masking lexer ([`lexer`]) so rule passes never match inside string
+//! literals, char literals or comments, then runs six rule passes
+//! ([`rules`]):
+//!
+//! | id | key | invariant |
+//! |----|-----|-----------|
+//! | R1 | `panic` | no `unwrap`/`expect`/`panic!`-family in non-test library code |
+//! | R2 | `unsafe` | `// SAFETY:` before every `unsafe`, `# Safety` docs on `unsafe fn` |
+//! | R3 | `lock` | nested `.lock()`s follow [`lock_order`]; `.lock().unwrap()` flagged |
+//! | R4 | `knob` | config fields ↔ `DRS_*` env bindings ↔ doc tables, both directions |
+//! | R5 | `metric` | metric/span name literals documented + convention-clean |
+//! | R6 | `atomic-write` | no raw `fs::write`/`File::create` outside `util::atomic_write` |
+//!
+//! Findings are compared against the committed `lint_baseline.json`
+//! ([`baseline`]): only *regressions* (a (rule, file) count above the
+//! baseline) fail, and the baseline itself can only shrink. See
+//! `docs/STATIC_ANALYSIS.md` for the operator guide.
+
+pub mod baseline;
+pub mod lexer;
+pub mod lock_order;
+pub mod rules;
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+use baseline::Baseline;
+
+/// The six lint rules. `key()` is the toggle / allow-comment name,
+/// `id()` the stable short id used in output and the baseline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    /// R1 — panic-freedom in library code.
+    Panic,
+    /// R2 — `SAFETY:` / `# Safety` hygiene on `unsafe`.
+    Unsafe,
+    /// R3 — declared lock order + poisoning-cascade sites.
+    Lock,
+    /// R4 — config knob ↔ env ↔ docs drift.
+    Knob,
+    /// R5 — metric/span name drift and conventions.
+    Metric,
+    /// R6 — atomic-write enforcement for state files.
+    AtomicWrite,
+}
+
+/// All rules, in id order.
+pub const ALL_RULES: [Rule; 6] = [
+    Rule::Panic,
+    Rule::Unsafe,
+    Rule::Lock,
+    Rule::Knob,
+    Rule::Metric,
+    Rule::AtomicWrite,
+];
+
+impl Rule {
+    /// Stable short id (`R1`..`R6`) used in findings and the baseline.
+    pub fn id(self) -> &'static str {
+        match self {
+            Rule::Panic => "R1",
+            Rule::Unsafe => "R2",
+            Rule::Lock => "R3",
+            Rule::Knob => "R4",
+            Rule::Metric => "R5",
+            Rule::AtomicWrite => "R6",
+        }
+    }
+
+    /// Human key used by `--rules` and `// lint: allow(<key>)`.
+    pub fn key(self) -> &'static str {
+        match self {
+            Rule::Panic => "panic",
+            Rule::Unsafe => "unsafe",
+            Rule::Lock => "lock",
+            Rule::Knob => "knob",
+            Rule::Metric => "metric",
+            Rule::AtomicWrite => "atomic-write",
+        }
+    }
+
+    /// Parse a `--rules` item (key or id, e.g. `panic` or `R1`).
+    pub fn from_arg(s: &str) -> Result<Rule> {
+        ALL_RULES
+            .into_iter()
+            .find(|r| r.key() == s || r.id() == s || r.id().to_lowercase() == s)
+            .ok_or_else(|| Error::Config(format!("unknown lint rule `{s}`")))
+    }
+}
+
+/// One lint finding.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// The rule that fired.
+    pub rule: Rule,
+    /// Repo-relative file path the finding is in.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Human-readable description.
+    pub message: String,
+}
+
+impl Finding {
+    /// Construct a finding.
+    pub fn new(rule: Rule, file: impl Into<String>, line: usize, message: String) -> Finding {
+        Finding { rule, file: file.into(), line, message }
+    }
+}
+
+/// One source file of the analyzed tree.
+pub struct SourceFile {
+    /// Repo-relative, `/`-separated path (e.g. `rust/src/gf/mod.rs`).
+    pub path: String,
+    /// Raw file contents.
+    pub text: String,
+}
+
+/// Everything the analyzer looks at: the Rust sources plus the docs
+/// corpus the drift rules (R4/R5) cross-check against.
+pub struct Tree {
+    /// All `rust/src/**/*.rs` files, path-sorted.
+    pub sources: Vec<SourceFile>,
+    /// `docs/ARCHITECTURE.md` (empty if absent — R4 will complain).
+    pub architecture: String,
+    /// `docs/OPERATIONS.md` (empty if absent).
+    pub operations: String,
+    /// Concatenation of all docs R5 accepts names from
+    /// (ARCHITECTURE, OPERATIONS, OBSERVABILITY, STATIC_ANALYSIS, README).
+    pub docs_corpus: String,
+}
+
+/// Recursively collect `.rs` files under `dir` into `out`.
+fn walk_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let entries = std::fs::read_dir(dir)
+        .map_err(|e| Error::Config(format!("cannot read {}: {e}", dir.display())))?;
+    for entry in entries {
+        let path = entry
+            .map_err(|e| Error::Config(format!("cannot read {}: {e}", dir.display())))?
+            .path();
+        if path.is_dir() {
+            walk_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Load the analyzable tree rooted at `root` (the repo root — the
+/// directory containing `rust/` and `docs/`).
+pub fn load_tree(root: &Path) -> Result<Tree> {
+    let src = root.join("rust").join("src");
+    if !src.is_dir() {
+        return Err(Error::Config(format!(
+            "{} does not look like the repo root (no rust/src)",
+            root.display()
+        )));
+    }
+    let mut paths = Vec::new();
+    walk_rs(&src, &mut paths)?;
+    paths.sort();
+    let mut sources = Vec::with_capacity(paths.len());
+    for path in paths {
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| Error::Config(format!("cannot read {}: {e}", path.display())))?;
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(&path)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        sources.push(SourceFile { path: rel, text });
+    }
+    let read_doc = |name: &str| std::fs::read_to_string(root.join(name)).unwrap_or_default();
+    let architecture = read_doc("docs/ARCHITECTURE.md");
+    let operations = read_doc("docs/OPERATIONS.md");
+    let mut docs_corpus = String::new();
+    for name in [
+        "docs/ARCHITECTURE.md",
+        "docs/OPERATIONS.md",
+        "docs/OBSERVABILITY.md",
+        "docs/STATIC_ANALYSIS.md",
+        "README.md",
+    ] {
+        docs_corpus.push_str(&read_doc(name));
+        docs_corpus.push('\n');
+    }
+    Ok(Tree { sources, architecture, operations, docs_corpus })
+}
+
+/// Run the enabled rules over `tree`; findings come back sorted by
+/// (file, line, rule).
+pub fn analyze(tree: &Tree, enabled: &[Rule]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let doc_names = rules::DocNames::build(&tree.docs_corpus);
+    for file in &tree.sources {
+        let masked = lexer::mask(&file.text);
+        let test_ranges = lexer::cfg_test_ranges(&masked);
+        let allows = rules::allow_map(&masked);
+        let newlines: Vec<usize> = masked
+            .code
+            .bytes()
+            .enumerate()
+            .filter_map(|(i, b)| (b == b'\n').then_some(i))
+            .collect();
+        let ctx = rules::FileCtx {
+            path: &file.path,
+            masked: &masked,
+            test_ranges: &test_ranges,
+            allows: &allows,
+            newlines: &newlines,
+        };
+        if enabled.contains(&Rule::Panic) {
+            rules::r1_panic(&ctx, &mut out);
+        }
+        if enabled.contains(&Rule::Unsafe) {
+            rules::r2_unsafe(&ctx, &mut out);
+        }
+        if enabled.contains(&Rule::Lock) {
+            rules::r3_lock(&ctx, &mut out);
+        }
+        if enabled.contains(&Rule::Metric) {
+            rules::r5_metrics(&ctx, &doc_names, &mut out);
+        }
+        if enabled.contains(&Rule::AtomicWrite) {
+            rules::r6_atomic(&ctx, &mut out);
+        }
+        if enabled.contains(&Rule::Knob) && file.path.ends_with("config/mod.rs") {
+            let tests = test_ranges.clone();
+            rules::r4_knobs(
+                &file.path,
+                &masked,
+                &tests,
+                &tree.architecture,
+                &tree.operations,
+                &mut out,
+            );
+        }
+    }
+    out.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule.id()).cmp(&(b.file.as_str(), b.line, b.rule.id()))
+    });
+    out
+}
+
+/// Options for one `drs lint` run.
+#[derive(Debug, Clone, Default)]
+pub struct LintOptions {
+    /// Emit machine-readable JSON instead of the human report.
+    pub json: bool,
+    /// Rewrite `lint_baseline.json` (ratchet: refuses any growth).
+    pub update_baseline: bool,
+    /// Restrict to these rules (`None` = all six).
+    pub rules: Option<Vec<Rule>>,
+    /// Repo root override (`None` = auto-detect from the cwd).
+    pub root: Option<String>,
+}
+
+/// Locate the repo root: the given override, else the first of `.`,
+/// `..`, `../..` that contains `rust/src`.
+fn find_root(over: &Option<String>) -> Result<PathBuf> {
+    if let Some(r) = over {
+        return Ok(PathBuf::from(r));
+    }
+    for cand in [".", "..", "../.."] {
+        let p = PathBuf::from(cand);
+        if p.join("rust").join("src").is_dir() {
+            return Ok(p);
+        }
+    }
+    Err(Error::Config(
+        "cannot find the repo root (no rust/src here or above); pass --root DIR".to_string(),
+    ))
+}
+
+/// Render findings + baseline comparison as a JSON document.
+fn render_json(findings: &[Finding], current: &Baseline, regs: &[baseline::Regression]) -> String {
+    let findings_json = Json::Arr(
+        findings
+            .iter()
+            .map(|f| {
+                Json::obj(vec![
+                    ("rule", Json::str(f.rule.id())),
+                    ("key", Json::str(f.rule.key())),
+                    ("file", Json::str(f.file.as_str())),
+                    ("line", Json::num(f.line as f64)),
+                    ("message", Json::str(f.message.as_str())),
+                ])
+            })
+            .collect(),
+    );
+    let counts_json = Json::Obj(
+        current
+            .counts
+            .iter()
+            .map(|(rule, files)| {
+                let files_json = Json::Obj(
+                    files
+                        .iter()
+                        .map(|(f, &n)| (f.clone(), Json::num(n as f64)))
+                        .collect::<BTreeMap<_, _>>(),
+                );
+                (rule.clone(), files_json)
+            })
+            .collect::<BTreeMap<_, _>>(),
+    );
+    let regs_json = Json::Arr(
+        regs.iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("rule", Json::str(r.rule.as_str())),
+                    ("file", Json::str(r.file.as_str())),
+                    ("baseline", Json::num(r.baseline as f64)),
+                    ("current", Json::num(r.current as f64)),
+                ])
+            })
+            .collect(),
+    );
+    Json::obj(vec![
+        ("findings", findings_json),
+        ("counts", counts_json),
+        ("regressions", regs_json),
+        ("ok", Json::Bool(regs.is_empty())),
+    ])
+    .to_string()
+}
+
+/// Entry point for the `drs lint` CLI verb. Returns `Err` (non-zero
+/// exit) when any (rule, file) count regresses past the baseline, or
+/// when `--update-baseline` would grow it.
+pub fn run(opts: &LintOptions) -> Result<()> {
+    if opts.update_baseline && opts.rules.is_some() {
+        return Err(Error::Config(
+            "refusing --update-baseline with --rules: a partial run would drop the \
+             other rules' baseline entries"
+                .to_string(),
+        ));
+    }
+    let root = find_root(&opts.root)?;
+    let enabled: Vec<Rule> = match &opts.rules {
+        Some(rs) => rs.clone(),
+        None => ALL_RULES.to_vec(),
+    };
+    let tree = load_tree(&root)?;
+    let findings = analyze(&tree, &enabled);
+    let current = Baseline::from_findings(&findings);
+    let base_path = root.join("lint_baseline.json");
+    let base = Baseline::load(&base_path)?;
+    let regs = base.regressions(&current);
+
+    if opts.update_baseline {
+        let next = base.ratchet(&current)?;
+        next.save(&base_path)?;
+        println!(
+            "lint baseline updated: {} tolerated finding(s) across {} rule(s)",
+            next.total(),
+            next.counts.len()
+        );
+        return Ok(());
+    }
+
+    if opts.json {
+        println!("{}", render_json(&findings, &current, &regs));
+    } else {
+        for f in &findings {
+            println!("{} {}:{} {}", f.rule.id(), f.file, f.line, f.message);
+        }
+        let scanned = tree.sources.len();
+        println!(
+            "lint: {} finding(s) across {scanned} file(s); baseline tolerates {}; {} regression(s)",
+            findings.len(),
+            base.total(),
+            regs.len()
+        );
+        for r in &regs {
+            println!(
+                "  REGRESSION {} {}: {} tolerated, {} found",
+                r.rule, r.file, r.baseline, r.current
+            );
+        }
+    }
+    if regs.is_empty() {
+        Ok(())
+    } else {
+        Err(Error::Config(format!(
+            "lint found {} regression(s) past lint_baseline.json",
+            regs.len()
+        )))
+    }
+}

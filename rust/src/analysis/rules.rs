@@ -1,0 +1,934 @@
+//! The six rule passes of `drs lint`. See `docs/STATIC_ANALYSIS.md`
+//! for the operator-facing catalogue; this module is the
+//! implementation.
+//!
+//! Every pass works on [`lexer::Masked`] text — strings and comments
+//! blanked — so a needle scan can never match inside either. Passes
+//! R1/R2/R3/R6 are per-file and scope-aware (`#[cfg(test)]` regions
+//! and `tests/`/`benches/` paths are exempt); R4/R5 are tree-level
+//! drift checks between code and the committed docs.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::lexer::{self, Masked};
+use super::{lock_order, Finding, Rule};
+
+/// Everything a per-file pass needs about one source file.
+pub struct FileCtx<'a> {
+    /// Repo-relative, `/`-separated path.
+    pub path: &'a str,
+    /// Masked source (strings/comments blanked).
+    pub masked: &'a Masked,
+    /// `#[cfg(test)]` line ranges.
+    pub test_ranges: &'a [(usize, usize)],
+    /// Parsed `// lint: allow(<rule>)` comments: rule key → lines.
+    pub allows: &'a BTreeMap<String, BTreeSet<usize>>,
+    /// Byte offset of each `\n` in the masked text (for line lookup).
+    pub newlines: &'a [usize],
+}
+
+impl FileCtx<'_> {
+    /// 1-based line containing byte `offset`.
+    pub fn line_of(&self, offset: usize) -> usize {
+        self.newlines.partition_point(|&n| n < offset) + 1
+    }
+
+    /// Whether `line` is inside test code.
+    pub fn in_test(&self, line: usize) -> bool {
+        lexer::in_ranges(self.test_ranges, line)
+    }
+
+    /// Whether findings of `rule` are allowed (suppressed) on `line`.
+    pub fn allowed(&self, rule: Rule, line: usize) -> bool {
+        self.allows.get(rule.key()).is_some_and(|s| s.contains(&line))
+    }
+
+    /// Whether the whole file is exempt from panic/unsafe hygiene
+    /// (integration tests and benches may unwrap freely).
+    pub fn test_path(&self) -> bool {
+        let p = self.path;
+        p.contains("/tests/") || p.contains("/benches/") || p.starts_with("tests/") || p.starts_with("benches/")
+    }
+}
+
+/// Parse every `// lint: allow(<rule>) — <reason>` comment into a map
+/// of rule key → suppressed lines. An allow covers the comment's own
+/// line(s) and the first following code line, so it works both inline
+/// and as a preceding annotation. Allows without a reason are ignored
+/// (the grammar requires one).
+pub fn allow_map(masked: &Masked) -> BTreeMap<String, BTreeSet<usize>> {
+    let mut map: BTreeMap<String, BTreeSet<usize>> = BTreeMap::new();
+    let lines = masked.code_lines();
+    for c in &masked.comments {
+        let Some(at) = c.text.find("lint: allow(") else { continue };
+        let rest = &c.text[at + "lint: allow(".len()..];
+        let Some(close) = rest.find(')') else { continue };
+        let key = rest[..close].trim().to_string();
+        let reason = rest[close + 1..]
+            .trim_start_matches([' ', '\u{2014}', '-', ':', '\u{2013}'])
+            .trim();
+        if key.is_empty() || reason.is_empty() {
+            continue;
+        }
+        let entry = map.entry(key).or_default();
+        for l in c.line..=c.end_line {
+            entry.insert(l);
+        }
+        // Extend to the next code line (at most a few lines ahead).
+        for l in c.end_line..c.end_line + 10 {
+            match lines.get(l) {
+                Some(text) if text.trim().is_empty() => continue,
+                Some(_) => {
+                    entry.insert(l + 1);
+                    break;
+                }
+                None => break,
+            }
+        }
+    }
+    map
+}
+
+/// Is `b[i]` the start of `needle` with a non-identifier byte before
+/// it (so `dont_panic!` does not match `panic!`)?
+fn word_start(b: &str, i: usize) -> bool {
+    i == 0 || {
+        let c = b.as_bytes()[i - 1];
+        !(c.is_ascii_alphanumeric() || c == b'_')
+    }
+}
+
+/// All byte offsets of `needle` in `hay`.
+fn occurrences(hay: &str, needle: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut from = 0usize;
+    while let Some(p) = hay[from..].find(needle) {
+        out.push(from + p);
+        from += p + 1;
+    }
+    out
+}
+
+/// The masked text immediately before `at`, with trailing whitespace
+/// (including newlines — chains wrap) skipped.
+fn before_nonspace(code: &str, at: usize) -> &str {
+    let mut end = at;
+    let b = code.as_bytes();
+    while end > 0 && (b[end - 1] as char).is_whitespace() {
+        end -= 1;
+    }
+    &code[..end]
+}
+
+/// Skip whitespace forward from `at`.
+fn next_nonspace(code: &str, at: usize) -> usize {
+    let b = code.as_bytes();
+    let mut i = at;
+    while i < b.len() && (b[i] as char).is_whitespace() {
+        i += 1;
+    }
+    i
+}
+
+// ---------------------------------------------------------------- R1
+
+/// R1 — panic-freedom: no `unwrap`/`expect`/`panic!`-family calls in
+/// non-test library code. `.lock().unwrap()` sites are *not* counted
+/// here — R3 flags them as poisoning-cascade sites, so each site is
+/// reported exactly once under the rule that owns the fix.
+pub fn r1_panic(ctx: &FileCtx<'_>, out: &mut Vec<Finding>) {
+    if ctx.test_path() {
+        return;
+    }
+    let code = &ctx.masked.code;
+    const METHODS: [&str; 2] = [".unwrap()", ".expect("];
+    const MACROS: [&str; 4] = ["panic!", "todo!", "unimplemented!", "unreachable!"];
+    for needle in METHODS {
+        for at in occurrences(code, needle) {
+            if needle == ".unwrap()" && before_nonspace(code, at).ends_with(".lock()") {
+                continue; // R3's finding, not R1's
+            }
+            let line = ctx.line_of(at);
+            if ctx.in_test(line) || ctx.allowed(Rule::Panic, line) {
+                continue;
+            }
+            out.push(Finding::new(
+                Rule::Panic,
+                ctx.path,
+                line,
+                format!("`{needle}` in non-test library code — return a typed drs::Error instead"),
+            ));
+        }
+    }
+    for needle in MACROS {
+        for at in occurrences(code, needle) {
+            if !word_start(code, at) {
+                continue;
+            }
+            let line = ctx.line_of(at);
+            if ctx.in_test(line) || ctx.allowed(Rule::Panic, line) {
+                continue;
+            }
+            out.push(Finding::new(
+                Rule::Panic,
+                ctx.path,
+                line,
+                format!("`{needle}` in non-test library code — return a typed drs::Error instead"),
+            ));
+        }
+    }
+}
+
+// ---------------------------------------------------------------- R2
+
+/// R2 — unsafe hygiene: every `unsafe` block/impl is immediately
+/// preceded by a `// SAFETY:` comment, and every `unsafe fn`
+/// additionally documents a `# Safety` section.
+pub fn r2_unsafe(ctx: &FileCtx<'_>, out: &mut Vec<Finding>) {
+    if ctx.test_path() {
+        return;
+    }
+    let code = &ctx.masked.code;
+    let lines = ctx.masked.code_lines();
+    // Lines carrying a SAFETY: comment / a `# Safety` doc heading.
+    let mut safety_lines = BTreeSet::new();
+    let mut safety_doc_lines = BTreeSet::new();
+    for c in &ctx.masked.comments {
+        if c.text.contains("SAFETY:") {
+            for l in c.line..=c.end_line {
+                safety_lines.insert(l);
+            }
+        }
+        if c.text.contains("# Safety") {
+            for l in c.line..=c.end_line {
+                safety_doc_lines.insert(l);
+            }
+        }
+    }
+    // Walk upward from `line - 1` through comment/attribute/blank
+    // lines; true if any walked line is in `wanted`.
+    let covered = |line: usize, wanted: &BTreeSet<usize>| -> bool {
+        if wanted.contains(&line) {
+            return true;
+        }
+        let mut l = line.saturating_sub(1);
+        while l >= 1 {
+            if wanted.contains(&l) {
+                return true;
+            }
+            let text = lines.get(l - 1).map(|s| s.trim()).unwrap_or("");
+            let walkable = text.is_empty() || text.starts_with("#[") || text.starts_with(")]");
+            if !walkable {
+                return false;
+            }
+            l -= 1;
+        }
+        false
+    };
+    for at in occurrences(code, "unsafe") {
+        if !word_start(code, at) {
+            continue;
+        }
+        let after = code.as_bytes().get(at + 6).copied().unwrap_or(b' ');
+        if after.is_ascii_alphanumeric() || after == b'_' {
+            continue; // identifier like unsafe_op_in_unsafe_fn
+        }
+        let line = ctx.line_of(at);
+        if ctx.in_test(line) || ctx.allowed(Rule::Unsafe, line) {
+            continue;
+        }
+        let next = next_nonspace(code, at + 6);
+        let is_fn = code[next..].starts_with("fn ") || code[next..].starts_with("fn(");
+        if is_fn {
+            // An `unsafe fn` declaration is a contract, not an
+            // operation: its `# Safety` doc section is the
+            // justification, so no `// SAFETY:` comment is demanded.
+            if !covered(line, &safety_doc_lines) {
+                out.push(Finding::new(
+                    Rule::Unsafe,
+                    ctx.path,
+                    line,
+                    "`unsafe fn` without a `# Safety` doc section".to_string(),
+                ));
+            }
+        } else if !covered(line, &safety_lines) {
+            out.push(Finding::new(
+                Rule::Unsafe,
+                ctx.path,
+                line,
+                "`unsafe` without an immediately preceding `// SAFETY:` comment".to_string(),
+            ));
+        }
+    }
+}
+
+// ---------------------------------------------------------------- R3
+
+/// One tracked lock acquisition during the R3 scan.
+struct Held {
+    class: &'static str,
+    depth: usize,
+    /// Temporary guards are released at the end of their statement.
+    temp: bool,
+}
+
+/// R3 — lock discipline: `.lock()` / `util::lock(..)` sites are
+/// classified via [`lock_order`]; lexically nested acquisitions must
+/// follow the declared order, unknown mutexes must be registered, and
+/// `.lock().unwrap()` is flagged as a poisoning-cascade site
+/// (recoverable paths should use `util::lock`).
+pub fn r3_lock(ctx: &FileCtx<'_>, out: &mut Vec<Finding>) {
+    let code = &ctx.masked.code;
+    let b = code.as_bytes();
+    // Collect candidate sites first: (offset_of_token, kind).
+    #[derive(Clone, Copy, PartialEq)]
+    enum Kind {
+        Method, // `.lock()`
+        Helper, // `util::lock(`
+    }
+    let mut sites: Vec<(usize, Kind)> = Vec::new();
+    for at in occurrences(code, ".lock()") {
+        sites.push((at, Kind::Method));
+    }
+    for at in occurrences(code, "util::lock(") {
+        sites.push((at, Kind::Helper));
+    }
+    sites.sort_by_key(|&(a, _)| a);
+
+    let mut held: Vec<Held> = Vec::new();
+    let mut depth = 0usize;
+    let mut stmt_start = 0usize; // offset just after the last ; { }
+    let mut site_iter = sites.into_iter().peekable();
+    let mut i = 0usize;
+    while i < b.len() {
+        if let Some(&(at, kind)) = site_iter.peek() {
+            if at == i {
+                site_iter.next();
+                let line = ctx.line_of(at);
+                let skip = ctx.in_test(line);
+                // Receiver text: method form walks back over the
+                // chain; helper form reads the argument list.
+                let (receiver, call_end) = match kind {
+                    Kind::Method => (receiver_before(code, at).to_string(), at + ".lock()".len()),
+                    Kind::Helper => {
+                        let open = at + "util::lock(".len() - 1;
+                        let close = matching_paren(b, open);
+                        (code[open + 1..close.min(code.len())].to_string(), close + 1)
+                    }
+                };
+                if !skip {
+                    let class = lock_order::classify(&receiver, ctx.path);
+                    // Poison cascade: `.lock().unwrap()`.
+                    if kind == Kind::Method
+                        && code[next_nonspace(code, call_end)..].starts_with(".unwrap()")
+                        && !ctx.allowed(Rule::Lock, line)
+                    {
+                        out.push(Finding::new(
+                            Rule::Lock,
+                            ctx.path,
+                            line,
+                            format!(
+                                "`.lock().unwrap()` on `{}` — a panicked holder poisons every later caller; use util::lock or annotate why poisoning is wanted",
+                                receiver.trim()
+                            ),
+                        ));
+                    }
+                    match class {
+                        None => {
+                            if !ctx.allowed(Rule::Lock, line) {
+                                out.push(Finding::new(
+                                    Rule::Lock,
+                                    ctx.path,
+                                    line,
+                                    format!(
+                                        "lock on `{}` has no class in analysis::lock_order — register it so ordering is checked",
+                                        receiver.trim()
+                                    ),
+                                ));
+                            }
+                        }
+                        Some(class) => {
+                            for h in &held {
+                                if !lock_order::allows(h.class, class)
+                                    && !ctx.allowed(Rule::Lock, line)
+                                {
+                                    out.push(Finding::new(
+                                        Rule::Lock,
+                                        ctx.path,
+                                        line,
+                                        format!(
+                                            "`{class}` acquired while `{}` is held — not in the declared lock order (analysis::lock_order)",
+                                            h.class
+                                        ),
+                                    ));
+                                }
+                            }
+                            held.push(Held {
+                                class,
+                                depth,
+                                temp: is_temporary(code, stmt_start, at, call_end),
+                            });
+                        }
+                    }
+                }
+                i = call_end.max(i + 1);
+                continue;
+            }
+        }
+        match b[i] {
+            b'{' => {
+                depth += 1;
+                stmt_start = i + 1;
+            }
+            b'}' => {
+                depth = depth.saturating_sub(1);
+                stmt_start = i + 1;
+                // A block closing back down to a temporary's depth
+                // ends the statement that created it (`for` loops over
+                // a guard, `if cond { .. }` with a guard in `cond`).
+                held.retain(|h| h.depth <= depth && !(h.temp && h.depth == depth));
+            }
+            b';' => {
+                stmt_start = i + 1;
+                held.retain(|h| !(h.temp && h.depth == depth));
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+}
+
+/// The receiver expression text left of a `.lock()` at `dot`: walks
+/// back over identifier chars, `.`/`::`, balanced `[..]`/`(..)`
+/// groups and line-wrapped chains.
+fn receiver_before(code: &str, dot: usize) -> &str {
+    let b = code.as_bytes();
+    let mut i = dot;
+    loop {
+        if i == 0 {
+            break;
+        }
+        // Whitespace may be bridged only when the construct to its
+        // right is chain punctuation (`.`/`::`) — that covers wrapped
+        // chains like `shard\n    .lock()` while stopping receivers
+        // from swallowing the previous statement (`return\n x.lock()`).
+        let right = if i == dot { b'.' } else { b[i] };
+        let mut j = i;
+        while j > 0 && (b[j - 1] as char).is_whitespace() {
+            j -= 1;
+        }
+        if j != i && !(right == b'.' || right == b':') {
+            break;
+        }
+        if j == 0 {
+            i = 0;
+            break;
+        }
+        let c = b[j - 1];
+        if c.is_ascii_alphanumeric() || c == b'_' || c == b'.' || c == b':' {
+            i = j - 1;
+        } else if c == b']' || c == b')' {
+            i = open_of(b, j - 1);
+        } else {
+            break;
+        }
+    }
+    &code[i..dot]
+}
+
+/// Offset of the opener matching the closer at `close`.
+fn open_of(b: &[u8], close: usize) -> usize {
+    let (op, cl) = match b[close] {
+        b')' => (b'(', b')'),
+        _ => (b'[', b']'),
+    };
+    let mut depth = 0usize;
+    let mut i = close;
+    loop {
+        if b[i] == cl {
+            depth += 1;
+        } else if b[i] == op {
+            depth -= 1;
+            if depth == 0 {
+                return i;
+            }
+        }
+        if i == 0 {
+            return 0;
+        }
+        i -= 1;
+    }
+}
+
+/// Offset of the `)` matching the `(` at `open` (or end of input).
+fn matching_paren(b: &[u8], open: usize) -> usize {
+    let mut depth = 0usize;
+    let mut i = open;
+    while i < b.len() {
+        match b[i] {
+            b'(' => depth += 1,
+            b')' => {
+                depth -= 1;
+                if depth == 0 {
+                    return i;
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    b.len().saturating_sub(1)
+}
+
+/// Guard-extent heuristic for R3. A guard is *block-scoped* (held to
+/// the end of the enclosing block) when its statement starts with
+/// `let`/`if let`/`while let`/`match` and the lock call's result is
+/// bound directly (`;`-terminated, at most a chained `.unwrap()`), or
+/// when it is a scrutinee (`if let`/`match` keep the temporary alive
+/// for the whole arm body). Anything else is a statement-scoped
+/// temporary.
+fn is_temporary(code: &str, stmt_start: usize, _at: usize, call_end: usize) -> bool {
+    let head = code[stmt_start..].trim_start();
+    if head.starts_with("if let") || head.starts_with("while let") || head.starts_with("match ") {
+        return false;
+    }
+    if head.starts_with("let ") {
+        let mut tail = next_nonspace(code, call_end);
+        if code[tail..].starts_with(".unwrap()") {
+            tail = next_nonspace(code, tail + ".unwrap()".len());
+        }
+        let rest = code[tail..].trim_start_matches('?').trim_start();
+        return !rest.starts_with(';');
+    }
+    true
+}
+
+// ---------------------------------------------------------------- R6
+
+/// R6 — atomic-write enforcement: raw `fs::write`/`File::create`
+/// calls outside `util` must carry an allow-comment explaining why
+/// the write is not workspace state (SE object payloads, append-only
+/// logs with their own crash protocol). Workspace state files go
+/// through `util::atomic_write`.
+pub fn r6_atomic(ctx: &FileCtx<'_>, out: &mut Vec<Finding>) {
+    if ctx.test_path() || ctx.path.ends_with("util/mod.rs") {
+        return;
+    }
+    let code = &ctx.masked.code;
+    for needle in ["fs::write(", "File::create("] {
+        for at in occurrences(code, needle) {
+            let line = ctx.line_of(at);
+            if ctx.in_test(line) || ctx.allowed(Rule::AtomicWrite, line) {
+                continue;
+            }
+            out.push(Finding::new(
+                Rule::AtomicWrite,
+                ctx.path,
+                line,
+                format!(
+                    "raw `{}..)` — workspace state must go through util::atomic_write; non-state writes need `// lint: allow(atomic-write) — why`",
+                    needle
+                ),
+            ));
+        }
+    }
+}
+
+// ---------------------------------------------------------------- R4
+
+/// Knobs that are structural rather than scalar and are exempt from
+/// the env-binding/doc-row requirement (each with the reason).
+const R4_STRUCTURAL: &[&str] = &[
+    "ses",     // the SE inventory: a list, configured by `drs init`/file edits
+    "network", // the simulator's latency profile object
+];
+
+/// Field-specific overrides: (field, env bindings, doc aliases).
+/// A field passes the env check when *any* listed binding exists, and
+/// the doc check when the field name *or* any alias appears.
+const R4_ALIASES: &[(&str, &[&str], &[&str])] = &[
+    ("params", &["DRS_K", "DRS_M"], &["--k", "--m"]),
+    ("policy", &["DRS_PLACEMENT"], &["placement"]),
+];
+
+/// `DRS_*` variables that are real but deliberately not config knobs.
+const R4_NON_CONFIG_ENVS: &[&str] = &["DRS_ARTIFACTS", "DRS_PROP_SEED"];
+
+/// Does `doc` contain `name` delimited by non-identifier characters?
+fn doc_has_token(doc: &str, name: &str) -> bool {
+    let mut from = 0usize;
+    while let Some(p) = doc[from..].find(name) {
+        let at = from + p;
+        let before_ok = at == 0 || {
+            let c = doc.as_bytes()[at - 1];
+            !(c.is_ascii_alphanumeric() || c == b'_')
+        };
+        let end = at + name.len();
+        let after_ok = end >= doc.len() || {
+            let c = doc.as_bytes()[end];
+            !(c.is_ascii_alphanumeric() || c == b'_')
+        };
+        if before_ok && after_ok {
+            return true;
+        }
+        from = at + 1;
+    }
+    false
+}
+
+/// R4 — knob drift. Cross-checks the `Config` struct in
+/// `config/mod.rs` against its `DRS_*` env bindings and the two
+/// operator docs, in both directions.
+pub fn r4_knobs(
+    config_path: &str,
+    config: &Masked,
+    config_tests: &[(usize, usize)],
+    architecture: &str,
+    operations: &str,
+    out: &mut Vec<Finding>,
+) {
+    // -- collect the Config struct's fields (name, line) --
+    let code = &config.code;
+    let Some(start) = code.find("pub struct Config") else {
+        out.push(Finding::new(
+            Rule::Knob,
+            config_path,
+            1,
+            "could not locate `pub struct Config` for the knob-drift check".to_string(),
+        ));
+        return;
+    };
+    let b = code.as_bytes();
+    let open = match code[start..].find('{') {
+        Some(p) => start + p,
+        None => return,
+    };
+    let close = {
+        let mut depth = 0usize;
+        let mut i = open;
+        loop {
+            match b.get(i) {
+                Some(b'{') => depth += 1,
+                Some(b'}') => {
+                    depth -= 1;
+                    if depth == 0 {
+                        break i;
+                    }
+                }
+                None => break i,
+                _ => {}
+            }
+            i += 1;
+        }
+    };
+    let body_line0 = code[..open].matches('\n').count() + 1;
+    let mut fields: Vec<(String, usize)> = Vec::new();
+    for (k, raw) in code[open..close].lines().enumerate() {
+        let t = raw.trim();
+        if let Some(rest) = t.strip_prefix("pub ") {
+            if let Some(colon) = rest.find(':') {
+                let name = rest[..colon].trim();
+                if !name.is_empty() && name.bytes().all(|c| c.is_ascii_lowercase() || c == b'_') {
+                    fields.push((name.to_string(), body_line0 + k));
+                }
+            }
+        }
+    }
+    // -- env literals actually bound in non-test config code --
+    let env_lits: BTreeSet<&str> = config
+        .strings
+        .iter()
+        .filter(|s| s.text.starts_with("DRS_") && !lexer::in_ranges(config_tests, s.line))
+        .map(|s| s.text.as_str())
+        .collect();
+    // -- per-field checks --
+    let mut expected_envs: BTreeSet<String> = BTreeSet::new();
+    for (field, line) in &fields {
+        if R4_STRUCTURAL.contains(&field.as_str()) {
+            continue;
+        }
+        let alias = R4_ALIASES.iter().find(|(f, _, _)| f == field);
+        let envs: Vec<String> = match alias {
+            Some((_, envs, _)) => envs.iter().map(|e| e.to_string()).collect(),
+            None => vec![format!("DRS_{}", field.to_uppercase())],
+        };
+        for e in &envs {
+            expected_envs.insert(e.clone());
+        }
+        if !envs.iter().any(|e| env_lits.contains(e.as_str())) {
+            out.push(Finding::new(
+                Rule::Knob,
+                config_path,
+                *line,
+                format!("config field `{field}` has no `{}` env binding in apply_env", envs[0]),
+            ));
+        }
+        let doc_names: Vec<&str> = match alias {
+            Some((_, _, aliases)) => {
+                let mut v = vec![field.as_str()];
+                v.extend(aliases.iter().copied());
+                v
+            }
+            None => vec![field.as_str()],
+        };
+        for (doc, doc_file) in [(architecture, "docs/ARCHITECTURE.md"), (operations, "docs/OPERATIONS.md")] {
+            if !doc_names.iter().any(|n| doc_has_token(doc, n)) {
+                out.push(Finding::new(
+                    Rule::Knob,
+                    doc_file,
+                    1,
+                    format!("config knob `{field}` is not mentioned in {doc_file}"),
+                ));
+            }
+        }
+    }
+    // -- reverse: every bound env literal must belong to a field --
+    for lit in &env_lits {
+        if !expected_envs.contains(*lit) && !R4_NON_CONFIG_ENVS.contains(lit) {
+            out.push(Finding::new(
+                Rule::Knob,
+                config_path,
+                1,
+                format!("env binding `{lit}` does not correspond to any Config field"),
+            ));
+        }
+    }
+    // -- reverse: every DRS_* token in the docs must be a real knob --
+    for (doc, doc_file) in [(architecture, "docs/ARCHITECTURE.md"), (operations, "docs/OPERATIONS.md")] {
+        for tok in drs_tokens(doc) {
+            // `DRS` alone is the `DRS_*` family wildcard, not a knob.
+            if tok == "DRS" {
+                continue;
+            }
+            if !expected_envs.contains(&tok) && !R4_NON_CONFIG_ENVS.contains(&tok.as_str()) {
+                out.push(Finding::new(
+                    Rule::Knob,
+                    doc_file,
+                    1,
+                    format!("doc mentions `{tok}` which is not a bound config env"),
+                ));
+            }
+        }
+    }
+}
+
+/// Every maximal `DRS_[A-Z0-9_]*` token in `doc`.
+fn drs_tokens(doc: &str) -> BTreeSet<String> {
+    let mut out = BTreeSet::new();
+    let b = doc.as_bytes();
+    let mut i = 0usize;
+    while let Some(p) = doc[i..].find("DRS_") {
+        let at = i + p;
+        let before_ok = at == 0 || !(b[at - 1].is_ascii_alphanumeric() || b[at - 1] == b'_');
+        let mut end = at + 4;
+        while end < b.len() && (b[end].is_ascii_uppercase() || b[end].is_ascii_digit() || b[end] == b'_') {
+            end += 1;
+        }
+        if before_ok {
+            out.insert(doc[at..end].trim_end_matches('_').to_string());
+        }
+        i = end;
+    }
+    out
+}
+
+// ---------------------------------------------------------------- R5
+
+/// Files exempt from R5: the metric/trace plumbing itself (generic
+/// registries, fixtures) — their literals are API examples, not
+/// emitted series.
+fn r5_exempt(path: &str) -> bool {
+    path.ends_with("metrics/mod.rs") || path.ends_with("obs/mod.rs")
+}
+
+/// Is `name` a well-formed dotted metric name (`area.noun.verb`
+/// style: ≥ 2 lowercase segments separated by dots)?
+pub fn metric_name_ok(name: &str) -> bool {
+    let segs: Vec<&str> = name.split('.').collect();
+    segs.len() >= 2
+        && segs
+            .iter()
+            .all(|s| !s.is_empty() && s.bytes().all(|b| b.is_ascii_lowercase() || b.is_ascii_digit() || b == b'_'))
+}
+
+/// Is `name` a well-formed span/event name (lowercase, dash-joined)?
+pub fn span_name_ok(name: &str) -> bool {
+    let segs: Vec<&str> = name.split('-').collect();
+    !segs.is_empty()
+        && segs
+            .iter()
+            .all(|s| !s.is_empty() && s.bytes().all(|b| b.is_ascii_lowercase() || b.is_ascii_digit() || b == b'_'))
+}
+
+/// Build the set of documented names from the docs corpus: maximal
+/// runs of `[a-z0-9_.{},-]` with `{a,b}` groups expanded, plus
+/// wildcard prefixes for `foo.*` / trailing-dot forms.
+pub struct DocNames {
+    exact: BTreeSet<String>,
+    prefixes: Vec<String>,
+}
+
+impl DocNames {
+    /// Extract from the concatenated docs text.
+    pub fn build(docs: &str) -> DocNames {
+        let mut exact = BTreeSet::new();
+        let mut prefixes = Vec::new();
+        let is_tok = |c: char| {
+            c.is_ascii_lowercase() || c.is_ascii_digit() || "._{},-*".contains(c)
+        };
+        for raw in docs.split(|c: char| !is_tok(c)) {
+            if raw.is_empty() {
+                continue;
+            }
+            for tok in expand_braces(raw) {
+                let tok = tok.trim_matches(|c| c == ',' || c == '.').to_string();
+                if tok.is_empty() {
+                    continue;
+                }
+                if let Some(pre) = tok.strip_suffix(".*") {
+                    prefixes.push(format!("{pre}."));
+                } else if let Some(pre) = tok.strip_suffix('*') {
+                    prefixes.push(pre.to_string());
+                } else {
+                    exact.insert(tok);
+                }
+            }
+        }
+        DocNames { exact, prefixes }
+    }
+
+    /// Whether `name` is documented (exact or by wildcard prefix).
+    pub fn contains(&self, name: &str) -> bool {
+        self.exact.contains(name) || self.prefixes.iter().any(|p| name.starts_with(p.as_str()))
+    }
+}
+
+/// Expand one level of `{a,b,c}` alternation in `tok` (`x.{y,z}` →
+/// `x.y`, `x.z`). Tokens without braces pass through; unbalanced
+/// braces yield the token with braces stripped.
+fn expand_braces(tok: &str) -> Vec<String> {
+    let (Some(open), Some(close)) = (tok.find('{'), tok.rfind('}')) else {
+        return vec![tok.to_string()];
+    };
+    if close < open {
+        return vec![tok.replace(['{', '}'], "")];
+    }
+    let head = &tok[..open];
+    let tail = &tok[close + 1..];
+    tok[open + 1..close]
+        .split(',')
+        .flat_map(|mid| expand_braces(&format!("{head}{mid}{tail}")))
+        .collect()
+}
+
+/// R5 — metric/trace-name drift: every statically named metric and
+/// span emitted by library code must follow the naming convention and
+/// appear in the docs corpus.
+pub fn r5_metrics(ctx: &FileCtx<'_>, docs: &DocNames, out: &mut Vec<Finding>) {
+    if ctx.test_path() || r5_exempt(ctx.path) {
+        return;
+    }
+    let code = &ctx.masked.code;
+    // Metric writers: name is the literal at the first argument.
+    for needle in [".inc(", ".add(", ".gauge(", ".time(", ".timed("] {
+        for at in occurrences(code, needle) {
+            let arg = at + needle.len();
+            let Some(lit) = ctx.masked.strings.iter().find(|s| s.offset == arg) else {
+                continue; // dynamic name (format!) — out of scope
+            };
+            let line = ctx.line_of(at);
+            if ctx.in_test(line) || ctx.allowed(Rule::Metric, line) {
+                continue;
+            }
+            if !metric_name_ok(&lit.text) {
+                out.push(Finding::new(
+                    Rule::Metric,
+                    ctx.path,
+                    line,
+                    format!("metric name `{}` does not follow the dotted `area.noun.verb` convention", lit.text),
+                ));
+            } else if !docs.contains(&lit.text) {
+                out.push(Finding::new(
+                    Rule::Metric,
+                    ctx.path,
+                    line,
+                    format!("metric name `{}` is not documented in docs/*.md", lit.text),
+                ));
+            }
+        }
+    }
+    // Span/event emitters: name is the first literal in the arg list
+    // (the preceding args are plain expressions, never literals).
+    for needle in [".span(", ".span_with(", ".event("] {
+        for at in occurrences(code, needle) {
+            let arg = at + needle.len();
+            let Some(lit) = ctx
+                .masked
+                .strings
+                .iter()
+                .find(|s| s.offset > arg && s.offset < arg + 120)
+            else {
+                continue;
+            };
+            // Only simple arg expressions between call and literal —
+            // otherwise the literal belongs to something else.
+            let between = &code[arg..lit.offset];
+            if between.contains('(') || between.contains('{') || between.contains(';') {
+                continue;
+            }
+            let line = ctx.line_of(at);
+            if ctx.in_test(line) || ctx.allowed(Rule::Metric, line) {
+                continue;
+            }
+            if !span_name_ok(&lit.text) {
+                out.push(Finding::new(
+                    Rule::Metric,
+                    ctx.path,
+                    line,
+                    format!("span name `{}` does not follow the lowercase-dash convention", lit.text),
+                ));
+            } else if !docs.contains(&lit.text) {
+                out.push(Finding::new(
+                    Rule::Metric,
+                    ctx.path,
+                    line,
+                    format!("span name `{}` is not documented in docs/*.md", lit.text),
+                ));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn metric_and_span_conventions() {
+        assert!(metric_name_ok("cache.hits"));
+        assert!(metric_name_ok("transfer.stream.blocks"));
+        assert!(!metric_name_ok("cachehits"));
+        assert!(!metric_name_ok("Cache.Hits"));
+        assert!(!metric_name_ok("cache..hits"));
+        assert!(span_name_ok("put"));
+        assert!(span_name_ok("chunk-write"));
+        assert!(!span_name_ok("Put"));
+        assert!(!span_name_ok("chunk_write-"));
+    }
+
+    #[test]
+    fn doc_names_expand_braces_and_wildcards() {
+        let d = DocNames::build("counts `cache.{hits,misses}` and `maintenance.scrub.*` plus `daemon-tick`.");
+        assert!(d.contains("cache.hits"));
+        assert!(d.contains("cache.misses"));
+        assert!(d.contains("maintenance.scrub.files"));
+        assert!(d.contains("daemon-tick"));
+        assert!(!d.contains("cache.evictions"));
+    }
+
+    #[test]
+    fn brace_expansion_nested_tail() {
+        assert_eq!(expand_braces("a.{b,c}"), vec!["a.b".to_string(), "a.c".to_string()]);
+        assert_eq!(expand_braces("plain"), vec!["plain".to_string()]);
+    }
+}

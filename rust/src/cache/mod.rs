@@ -201,15 +201,15 @@ impl Pool {
             return None;
         }
         let h = key.hash();
-        let mut sh = self.shard_for(h).lock().unwrap();
+        let mut sh = crate::util::lock(self.shard_for(h));
         sh.sketch_bump(h);
         let tick = self.tick.fetch_add(1, Ordering::Relaxed);
-        if let Some(e) = sh.map.get(key) {
+        if let Some(e) = sh.map.get_mut(key) {
             let old = e.tick;
             let data = Arc::clone(&e.data);
+            e.tick = tick;
             sh.lru.remove(&old);
             sh.lru.insert(tick, *key);
-            sh.map.get_mut(key).unwrap().tick = tick;
             self.counters.hits.fetch_add(1, Ordering::Relaxed);
             self.counters.hit_bytes.fetch_add(data.len() as u64, Ordering::Relaxed);
             let m = crate::metrics::global();
@@ -229,7 +229,7 @@ impl Pool {
             return;
         }
         let h = key.hash();
-        let mut sh = self.shard_for(h).lock().unwrap();
+        let mut sh = crate::util::lock(self.shard_for(h));
         let est = sh.sketch_bump(h);
         let tick = self.tick.fetch_add(1, Ordering::Relaxed);
         if let Some(old) = sh.map.remove(&key) {
@@ -281,7 +281,7 @@ impl Pool {
         }
         let mut freed = 0u64;
         for shard in &self.shards {
-            let mut sh = shard.lock().unwrap();
+            let mut sh = crate::util::lock(shard);
             let victims: Vec<(Key, u64, u64)> = sh
                 .map
                 .iter()
@@ -448,13 +448,13 @@ impl ReadCache {
         if !self.enabled() && !self.degraded_enabled() {
             return;
         }
-        self.lfns.lock().unwrap().entry(lfn.to_string()).or_default().insert(*digest);
+        crate::util::lock(&self.lfns).entry(lfn.to_string()).or_default().insert(*digest);
     }
 
     /// Catalogue mutation hook: drop every cached entry for `lfn`
     /// (overwrite / remove / replica change).
     pub fn invalidate_lfn(&self, lfn: &str) {
-        let digests = match self.lfns.lock().unwrap().remove(lfn) {
+        let digests = match crate::util::lock(&self.lfns).remove(lfn) {
             Some(d) => d,
             None => return,
         };

@@ -344,7 +344,7 @@ fn scan_record(buf: &[u8], at: usize) -> Scan<'_> {
     if buf.len() - at < RECORD_HEADER {
         return Scan::Bad;
     }
-    let len = u32::from_be_bytes(buf[at..at + 4].try_into().unwrap()) as usize;
+    let len = u32::from_be_bytes([buf[at], buf[at + 1], buf[at + 2], buf[at + 3]]) as usize;
     let start = at + RECORD_HEADER;
     let Some(end) = start.checked_add(len) else { return Scan::Bad };
     if end > buf.len() {

@@ -142,7 +142,7 @@ impl ShardedDfc {
             // swap directories. A crash at any point leaves either the
             // old journal intact or a complete marked staging copy —
             // never an authoritative half-written mix.
-            let snap = Self::open_journaled_exact(dir, existing, cfg)?.snapshot();
+            let snap = Self::open_journaled_exact(dir, existing, cfg)?.snapshot()?;
             let mut fresh = Self::from_dfc(&snap, shards)?;
             fresh.attach_journal(&staging, cfg)?;
             drop(fresh); // close the staging segment writers pre-rename
@@ -291,7 +291,7 @@ impl ShardedDfc {
     /// store has no journal.
     pub fn journal_stats(&self) -> Result<Vec<ShardJournalStats>> {
         let journals = self.journals.as_ref().ok_or_else(no_journal_err)?;
-        journals.iter().map(|j| j.lock().unwrap().stats()).collect()
+        journals.iter().map(|journal| journal.lock().unwrap().stats()).collect()
     }
 
     // -- routing -----------------------------------------------------------
@@ -678,12 +678,12 @@ impl ShardedDfc {
                 Some(m) => m.merge_from(part),
             }
         }
-        Ok(merged.expect("at least one shard"))
+        merged.ok_or_else(|| Error::Catalog("catalogue has no shards".into()))
     }
 
     /// [`ShardedDfc::snapshot_subtree`] of the whole namespace.
-    pub fn snapshot(&self) -> Dfc {
-        self.snapshot_subtree("/").expect("root always exists")
+    pub fn snapshot(&self) -> Result<Dfc> {
+        self.snapshot_subtree("/")
     }
 
     /// Single-shard point-in-time copy of one directory: its metadata,
@@ -711,7 +711,7 @@ impl ShardedDfc {
     /// files are summed across shards.
     pub fn counts(&self) -> (usize, usize) {
         let dirs = self.lock(0).counts().0;
-        let files = self.shards.iter().map(|s| s.lock().unwrap().counts().1).sum();
+        let files = self.shards.iter().map(|shard| shard.lock().unwrap().counts().1).sum();
         (dirs, files)
     }
 
@@ -719,7 +719,7 @@ impl ShardedDfc {
     /// [`Dfc::save`]; a sharded catalogue round-trips with any shard
     /// count).
     pub fn save(&self, path: &std::path::Path) -> Result<()> {
-        self.snapshot().save(path)
+        self.snapshot()?.save(path)
     }
 
     /// Load a [`Dfc::save`]/[`ShardedDfc::save`] snapshot and partition
@@ -836,7 +836,7 @@ mod tests {
         for shards in [1, 4, 8] {
             let (s, d) = build_pair(shards);
             assert_eq!(
-                s.snapshot().to_json().to_string(),
+                s.snapshot().unwrap().to_json().to_string(),
                 d.to_json().to_string(),
                 "{shards} shards"
             );
@@ -923,8 +923,8 @@ mod tests {
         assert_eq!(back.shard_count(), 3);
         assert_eq!(back.counts(), s.counts());
         assert_eq!(
-            back.snapshot().to_json().to_string(),
-            s.snapshot().to_json().to_string()
+            back.snapshot().unwrap().to_json().to_string(),
+            s.snapshot().unwrap().to_json().to_string()
         );
         assert_eq!(
             back.get_meta("/vo/data/f1.ec", "drs_ec_split").unwrap(),
@@ -972,16 +972,16 @@ mod tests {
             s.remove_replica("/deep/nest/x", "SE-00").unwrap();
             s.remove_file("/deep/nest/x").unwrap();
             s.remove_dir("/vo/data/f2.ec").unwrap();
-            s.snapshot().to_json().to_string()
+            s.snapshot().unwrap().to_json().to_string()
         };
         // Same shard count: recovery replays to the identical namespace.
         let back = ShardedDfc::open_journaled(&dir, 4, cfg).unwrap();
-        assert_eq!(back.snapshot().to_json().to_string(), want);
+        assert_eq!(back.snapshot().unwrap().to_json().to_string(), want);
         drop(back);
         // Different shard count: transparently re-partitioned.
         let back = ShardedDfc::open_journaled(&dir, 2, cfg).unwrap();
         assert_eq!(back.shard_count(), 2);
-        assert_eq!(back.snapshot().to_json().to_string(), want);
+        assert_eq!(back.snapshot().unwrap().to_json().to_string(), want);
         // And the store stays writable + durable after re-partitioning.
         back.add_file("/deep/nest/y", fe(9)).unwrap();
         drop(back);
@@ -1002,10 +1002,10 @@ mod tests {
             // compensating removes must leave replay == in-memory state.
             assert!(s.mkdir_p("/d/x/y").is_err());
             assert_eq!(s.counts(), (1, 1));
-            s.snapshot().to_json().to_string()
+            s.snapshot().unwrap().to_json().to_string()
         };
         let back = ShardedDfc::open_journaled(&dir, 8, cfg).unwrap();
-        assert_eq!(back.snapshot().to_json().to_string(), want);
+        assert_eq!(back.snapshot().unwrap().to_json().to_string(), want);
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

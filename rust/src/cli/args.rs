@@ -55,6 +55,13 @@ COMMANDS:
     catalog stats                              per-shard journal health: segment
                                                count, live/garbage bytes, last
                                                checkpoint, ops since it
+    lint [--json] [--update-baseline] [--rules k1,k2] [--root DIR]
+                                               run the in-repo static analyzer
+                                               (panic-freedom, unsafe hygiene,
+                                               lock order, knob/metric drift,
+                                               atomic writes) and compare with
+                                               lint_baseline.json; exits nonzero
+                                               on any regression
     se list
     se kill <name>
     se revive <name>
@@ -110,6 +117,7 @@ pub enum Command {
     Meta { lfn: String },
     CatalogCompact { budget_mb: Option<u64> },
     CatalogStats,
+    Lint { json: bool, update_baseline: bool, rules: Option<String>, root: Option<String> },
     SeList,
     SeKill { name: String },
     SeRevive { name: String },
@@ -276,6 +284,12 @@ pub fn parse_args(argv: Vec<String>) -> Result<Cli, String> {
             "compact" => Command::CatalogCompact { budget_mb: args.opt_parse("--budget-mb")? },
             "stats" => Command::CatalogStats,
             other => return Err(format!("unknown catalog subcommand `{other}`")),
+        },
+        "lint" => Command::Lint {
+            json: args.opt_flag("--json"),
+            update_baseline: args.opt_flag("--update-baseline"),
+            rules: args.opt_value("--rules")?,
+            root: args.opt_value("--root")?,
         },
         "se" => match args.required("se-subcommand")?.as_str() {
             "list" => Command::SeList,
@@ -479,6 +493,29 @@ mod tests {
         for verb in ["catalog compact", "catalog stats"] {
             assert!(USAGE.contains(verb), "usage must document `{verb}`");
         }
+    }
+
+    #[test]
+    fn lint_command() {
+        assert_eq!(
+            p("lint").unwrap().command,
+            Command::Lint { json: false, update_baseline: false, rules: None, root: None }
+        );
+        assert_eq!(
+            p("lint --json --rules panic,lock --root /repo").unwrap().command,
+            Command::Lint {
+                json: true,
+                update_baseline: false,
+                rules: Some("panic,lock".into()),
+                root: Some("/repo".into()),
+            }
+        );
+        assert!(matches!(
+            p("lint --update-baseline").unwrap().command,
+            Command::Lint { update_baseline: true, .. }
+        ));
+        assert!(p("lint --rules").is_err());
+        assert!(USAGE.contains("lint [--json]"));
     }
 
     #[test]

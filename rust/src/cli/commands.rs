@@ -647,6 +647,24 @@ pub fn dispatch(cli: &Cli) -> Result<()> {
             println!("{name} back online");
             ws.save()
         }
+        Command::Lint { json, update_baseline, rules, root: lint_root } => {
+            let rules = match rules {
+                None => None,
+                Some(list) => {
+                    let mut parsed = Vec::new();
+                    for item in list.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+                        parsed.push(crate::analysis::Rule::from_arg(item)?);
+                    }
+                    Some(parsed)
+                }
+            };
+            crate::analysis::run(&crate::analysis::LintOptions {
+                json: *json,
+                update_baseline: *update_baseline,
+                rules,
+                root: lint_root.clone(),
+            })
+        }
         Command::Durability { p } => {
             println!("file availability at SE availability p = {p}");
             println!("{:<18} {:>9} {:>14} {:>7}", "scheme", "overhead", "availability", "nines");

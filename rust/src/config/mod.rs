@@ -411,7 +411,7 @@ impl Config {
 
     /// Apply environment overrides: `DRS_VO`, `DRS_WORKERS`, `DRS_K`,
     /// `DRS_M`, `DRS_STRIPE_B`, `DRS_EC_BACKEND`, `DRS_PLACEMENT`,
-    /// `DRS_TRANSFER_BLOCK_BYTES`,
+    /// `DRS_CLIENT_REGION`, `DRS_TRANSFER_BLOCK_BYTES`,
     /// `DRS_CACHE_BYTES`, `DRS_CACHE_DEGRADED_BYTES`,
     /// `DRS_CATALOG_SHARDS`,
     /// `DRS_JOURNAL_SEGMENT_BYTES`, `DRS_JOURNAL_CHECKPOINT_OPS`,
@@ -524,6 +524,9 @@ impl Config {
             if let Ok(p) = PolicyKind::parse(&p) {
                 self.policy = p;
             }
+        }
+        if let Ok(r) = std::env::var("DRS_CLIENT_REGION") {
+            self.client_region = r;
         }
     }
 }
@@ -787,11 +790,14 @@ mod tests {
         std::env::set_var("DRS_WORKERS", "7");
         std::env::set_var("DRS_K", "6");
         std::env::set_var("DRS_M", "3");
+        std::env::set_var("DRS_CLIENT_REGION", "fr");
         c.apply_env();
         std::env::remove_var("DRS_WORKERS");
         std::env::remove_var("DRS_K");
         std::env::remove_var("DRS_M");
+        std::env::remove_var("DRS_CLIENT_REGION");
         assert_eq!(c.workers, 7);
         assert_eq!(c.params, EcParams::new(6, 3).unwrap());
+        assert_eq!(c.client_region, "fr");
     }
 }

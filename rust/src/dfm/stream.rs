@@ -389,6 +389,8 @@ pub(crate) struct FileSink {
 
 impl FileSink {
     pub(crate) fn create(path: &std::path::Path) -> Result<Self> {
+        // lint: allow(atomic-write) — the user's download destination,
+        // not workspace state; the caller renames over it after fsync.
         Ok(FileSink { w: std::io::BufWriter::new(std::fs::File::create(path)?) })
     }
 

@@ -81,6 +81,7 @@
 
 #![warn(missing_docs)]
 
+pub mod analysis;
 pub mod cache;
 pub mod catalog;
 pub mod cli;

@@ -118,6 +118,8 @@ mod sig {
     pub(super) fn install() {
         const SIGINT: i32 = 2;
         const SIGTERM: i32 = 15;
+        // SAFETY: `signal(2)` is in every libc std already links; the
+        // handler only performs a single async-signal-safe atomic store.
         unsafe {
             signal(SIGINT, on_signal);
             signal(SIGTERM, on_signal);

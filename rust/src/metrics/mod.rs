@@ -137,7 +137,9 @@ impl Histogram {
     }
 }
 
-/// Process-wide metrics registry.
+/// Process-wide metrics registry. All three maps take their mutexes
+/// through [`crate::util::lock`], so a panicked writer can never
+/// poison metrics collection for the rest of the process.
 #[derive(Default)]
 pub struct Metrics {
     counters: Mutex<BTreeMap<String, u64>>,
@@ -158,19 +160,17 @@ impl Metrics {
 
     /// Add to a counter.
     pub fn add(&self, name: &str, by: u64) {
-        *self.counters.lock().unwrap().entry(name.to_string()).or_insert(0) += by;
+        *crate::util::lock(&self.counters).entry(name.to_string()).or_insert(0) += by;
     }
 
     /// Set a gauge to its latest value.
     pub fn gauge(&self, name: &str, value: f64) {
-        self.gauges.lock().unwrap().insert(name.to_string(), value);
+        crate::util::lock(&self.gauges).insert(name.to_string(), value);
     }
 
     /// Record a duration under a timer histogram.
     pub fn time(&self, name: &str, seconds: f64) {
-        self.timers
-            .lock()
-            .unwrap()
+        crate::util::lock(&self.timers)
             .entry(name.to_string())
             .or_default()
             .record(seconds);
@@ -186,15 +186,13 @@ impl Metrics {
 
     /// Read a counter (0 when never written).
     pub fn counter(&self, name: &str) -> u64 {
-        self.counters.lock().unwrap().get(name).copied().unwrap_or(0)
+        crate::util::lock(&self.counters).get(name).copied().unwrap_or(0)
     }
 
     /// Snapshot every counter whose name starts with `prefix`, sorted by
     /// name (used by the maintenance daemon's status file).
     pub fn counters_with_prefix(&self, prefix: &str) -> Vec<(String, u64)> {
-        self.counters
-            .lock()
-            .unwrap()
+        crate::util::lock(&self.counters)
             .range(prefix.to_string()..)
             .take_while(|(k, _)| k.starts_with(prefix))
             .map(|(k, v)| (k.clone(), *v))
@@ -204,29 +202,29 @@ impl Metrics {
     /// Snapshot every counter, sorted by name (the Prometheus
     /// exporter's source; see [`crate::obs::export`]).
     pub fn counters(&self) -> Vec<(String, u64)> {
-        self.counters.lock().unwrap().iter().map(|(k, v)| (k.clone(), *v)).collect()
+        crate::util::lock(&self.counters).iter().map(|(k, v)| (k.clone(), *v)).collect()
     }
 
     /// Snapshot every gauge, sorted by name.
     pub fn gauges(&self) -> Vec<(String, f64)> {
-        self.gauges.lock().unwrap().iter().map(|(k, v)| (k.clone(), *v)).collect()
+        crate::util::lock(&self.gauges).iter().map(|(k, v)| (k.clone(), *v)).collect()
     }
 
     /// Snapshot every timer histogram, sorted by name.
     pub fn timers(&self) -> Vec<(String, Histogram)> {
-        self.timers.lock().unwrap().iter().map(|(k, h)| (k.clone(), h.clone())).collect()
+        crate::util::lock(&self.timers).iter().map(|(k, h)| (k.clone(), h.clone())).collect()
     }
 
     /// Plain-text report, sorted by name.
     pub fn report(&self) -> String {
         let mut out = String::new();
-        for (k, v) in self.counters.lock().unwrap().iter() {
+        for (k, v) in crate::util::lock(&self.counters).iter() {
             out.push_str(&format!("counter {k} = {v}\n"));
         }
-        for (k, v) in self.gauges.lock().unwrap().iter() {
+        for (k, v) in crate::util::lock(&self.gauges).iter() {
             out.push_str(&format!("gauge   {k} = {v:.6}\n"));
         }
-        for (k, h) in self.timers.lock().unwrap().iter() {
+        for (k, h) in crate::util::lock(&self.timers).iter() {
             out.push_str(&format!(
                 "timer   {k}: n={} mean={:.4}s p50={:.4}s p95={:.4}s min={:.4}s max={:.4}s\n",
                 h.count(),

@@ -247,7 +247,7 @@ impl Tracer {
         let per = total_spans.div_ceil(SHARDS).max(1);
         self.cap_per_shard.store(per, Ordering::Relaxed);
         for shard in &self.shards {
-            let mut s = shard.lock().unwrap();
+            let mut s = crate::util::lock(shard);
             while s.buf.len() > per {
                 s.buf.pop_front();
             }
@@ -309,12 +309,12 @@ impl Tracer {
 
     /// Push a finished span into the ring (and the sink, if attached).
     fn record(&self, rec: SpanRecord) {
-        if let Some(h) = self.sink.lock().unwrap().as_ref() {
+        if let Some(h) = crate::util::lock(&self.sink).as_ref() {
             h.send(&rec);
         }
         let cap = self.cap_per_shard.load(Ordering::Relaxed);
         let shard = &self.shards[(rec.span as usize) % SHARDS];
-        let mut s = shard.lock().unwrap();
+        let mut s = crate::util::lock(shard);
         if s.buf.len() >= cap {
             s.buf.pop_front();
         }
@@ -326,7 +326,7 @@ impl Tracer {
     pub fn recent(&self, n: usize) -> Vec<SpanRecord> {
         let mut all: Vec<SpanRecord> = Vec::new();
         for shard in &self.shards {
-            all.extend(shard.lock().unwrap().buf.iter().cloned());
+            all.extend(crate::util::lock(shard).buf.iter().cloned());
         }
         all.sort_by_key(|r| (r.start_unix_us, r.span));
         if all.len() > n {
@@ -339,7 +339,7 @@ impl Tracer {
     pub fn recent_for(&self, trace_id: u64) -> Vec<SpanRecord> {
         let mut all: Vec<SpanRecord> = Vec::new();
         for shard in &self.shards {
-            all.extend(shard.lock().unwrap().buf.iter().filter(|r| r.trace == trace_id).cloned());
+            all.extend(crate::util::lock(shard).buf.iter().filter(|r| r.trace == trace_id).cloned());
         }
         all.sort_by_key(|r| (r.start_unix_us, r.span));
         all
@@ -348,7 +348,7 @@ impl Tracer {
     /// Drop every buffered span (test isolation).
     pub fn clear(&self) {
         for shard in &self.shards {
-            shard.lock().unwrap().buf.clear();
+            crate::util::lock(shard).buf.clear();
         }
     }
 
@@ -357,7 +357,7 @@ impl Tracer {
     /// `<path>.1` once the file exceeds `rotate_bytes`.
     pub fn attach_sink(&self, path: &Path, rotate_bytes: u64) -> crate::Result<()> {
         let new = sink::SinkHandle::spawn(path, rotate_bytes)?;
-        let old = self.sink.lock().unwrap().replace(new);
+        let old = crate::util::lock(&self.sink).replace(new);
         if let Some(old) = old {
             old.stop();
         }
@@ -366,7 +366,7 @@ impl Tracer {
 
     /// Detach the sink, flushing and closing the trace file.
     pub fn detach_sink(&self) {
-        if let Some(old) = self.sink.lock().unwrap().take() {
+        if let Some(old) = crate::util::lock(&self.sink).take() {
             old.stop();
         }
     }
@@ -374,7 +374,7 @@ impl Tracer {
     /// Block until every span recorded so far has reached the trace
     /// file (no-op without a sink).
     pub fn flush(&self) {
-        if let Some(h) = self.sink.lock().unwrap().as_ref() {
+        if let Some(h) = crate::util::lock(&self.sink).as_ref() {
             h.flush();
         }
     }

@@ -114,9 +114,11 @@ impl WorkPool {
             }
         });
 
+        // A panicking job poisons the result mutexes but leaves the
+        // vectors structurally intact — recover rather than cascade.
         PoolOutcome {
-            successes: successes.into_inner().unwrap(),
-            failures: failures.into_inner().unwrap(),
+            successes: successes.into_inner().unwrap_or_else(std::sync::PoisonError::into_inner),
+            failures: failures.into_inner().unwrap_or_else(std::sync::PoisonError::into_inner),
             skipped: skipped.into_inner(),
         }
     }

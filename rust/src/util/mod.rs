@@ -36,6 +36,23 @@ pub fn atomic_write(path: &std::path::Path, bytes: &[u8]) -> crate::Result<()> {
     Ok(())
 }
 
+/// Acquire a mutex, recovering from poisoning.
+///
+/// `Mutex::lock().unwrap()` turns one panicked holder into a
+/// permanent denial of service for every later caller — the classic
+/// poisoning cascade. The lock-sharded hot paths (`cache`,
+/// `obs::Tracer`, `metrics`) hold their guards only for short,
+/// crash-consistent critical sections (a map insert, a ring push), so
+/// the data a panicking thread leaves behind is still structurally
+/// valid and serving it beats taking the whole shard down. State
+/// where a torn mutation *would* be dangerous (the catalogue) keeps
+/// deliberate `.lock().unwrap()` poisoning instead — rule R3 of
+/// `drs lint` tracks those sites.
+pub fn lock<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    // lint: allow(lock) — this is the recovery helper itself
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
 /// Format a byte count human-readably (`1.5 MB`, `768 kB`, ...).
 pub fn fmt_bytes(n: u64) -> String {
     const UNITS: [&str; 5] = ["B", "kB", "MB", "GB", "TB"];
@@ -76,6 +93,21 @@ mod tests {
     fn secs_units() {
         assert_eq!(fmt_secs(6.04), "6.0s");
         assert_eq!(fmt_secs(206.0), "3m26.0s");
+    }
+
+    #[test]
+    fn lock_recovers_from_poison() {
+        let m = std::sync::Arc::new(std::sync::Mutex::new(7u32));
+        let m2 = std::sync::Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison the mutex");
+        })
+        .join();
+        assert!(m.lock().is_err(), "mutex should be poisoned");
+        assert_eq!(*lock(&m), 7, "helper must serve poisoned data");
+        *lock(&m) = 8;
+        assert_eq!(*lock(&m), 8);
     }
 
     #[test]

@@ -21,7 +21,7 @@ fn tmpdir(tag: &str) -> PathBuf {
 }
 
 fn snap(dfc: &ShardedDfc) -> String {
-    dfc.snapshot().to_json().to_string()
+    dfc.snapshot().unwrap().to_json().to_string()
 }
 
 /// Apply one random namespace mutation, mirrored to a journaled store

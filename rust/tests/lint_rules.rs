@@ -1,0 +1,444 @@
+//! Proof-of-rules suite for `drs lint` (`src/analysis/`).
+//!
+//! Each rule gets inline fixtures: a violation it must find, an
+//! `// lint: allow(..)` it must honor, and a string/comment decoy it
+//! must ignore. The final tests run the analyzer over the *real*
+//! tree and hold it to the committed `lint_baseline.json` ratchet.
+
+use std::path::Path;
+
+use drs::analysis::baseline::Baseline;
+use drs::analysis::{analyze, load_tree, Finding, Rule, SourceFile, Tree, ALL_RULES};
+
+/// A one-file tree with empty docs (R4/R5 doc checks see nothing).
+fn tree_of(path: &str, text: &str) -> Tree {
+    Tree {
+        sources: vec![SourceFile { path: path.to_string(), text: text.to_string() }],
+        architecture: String::new(),
+        operations: String::new(),
+        docs_corpus: String::new(),
+    }
+}
+
+fn run_rule(path: &str, text: &str, rule: Rule) -> Vec<Finding> {
+    analyze(&tree_of(path, text), &[rule])
+}
+
+// ------------------------------------------------------------------ R1
+
+#[test]
+fn r1_finds_unwrap_expect_and_macros() {
+    let src = r#"
+pub fn f(v: Option<u32>) -> u32 {
+    let a = v.unwrap();
+    let b = v.expect("must");
+    if a == 0 { panic!("zero"); }
+    if b == 1 { unreachable!(); }
+    a + b
+}
+"#;
+    let found = run_rule("rust/src/demo.rs", src, Rule::Panic);
+    assert_eq!(found.len(), 4, "{found:?}");
+    assert!(found.iter().all(|f| f.rule == Rule::Panic));
+    assert_eq!(found[0].line, 3);
+}
+
+#[test]
+fn r1_allow_comment_suppresses_with_reason_only() {
+    let allowed = r#"
+pub fn f(v: Option<u32>) -> u32 {
+    // lint: allow(panic) — demo fixture, invariant holds by construction
+    v.unwrap()
+}
+"#;
+    assert!(run_rule("rust/src/demo.rs", allowed, Rule::Panic).is_empty());
+
+    // The grammar demands a reason; a bare allow changes nothing.
+    let bare = r#"
+pub fn f(v: Option<u32>) -> u32 {
+    // lint: allow(panic)
+    v.unwrap()
+}
+"#;
+    assert_eq!(run_rule("rust/src/demo.rs", bare, Rule::Panic).len(), 1);
+}
+
+#[test]
+fn r1_ignores_test_code_and_test_paths() {
+    let src = r#"
+pub fn f() -> u32 { 1 }
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() {
+        super::f().checked_add(1).unwrap();
+        panic!("fine in tests");
+    }
+}
+"#;
+    assert!(run_rule("rust/src/demo.rs", src, Rule::Panic).is_empty());
+    // Whole integration-test files are exempt wholesale.
+    let loose = "pub fn f(v: Option<u32>) -> u32 { v.unwrap() }";
+    assert!(run_rule("rust/tests/demo.rs", loose, Rule::Panic).is_empty());
+}
+
+#[test]
+fn r1_immune_to_strings_comments_and_raw_strings() {
+    let src = r##"
+pub fn f() -> &'static str {
+    // a comment mentioning .unwrap() and panic!("boom") is not code
+    let plain = "calling .unwrap() here would panic!";
+    let raw = r#"v.expect("x"); unreachable!();"#;
+    let ch = '!';
+    let _ = (plain, raw, ch);
+    "ok"
+}
+"##;
+    assert!(run_rule("rust/src/demo.rs", src, Rule::Panic).is_empty());
+}
+
+#[test]
+fn r1_does_not_steal_r3s_lock_unwrap() {
+    let src = r#"
+pub fn f(m: &std::sync::Mutex<u32>) -> u32 {
+    *m.lock().unwrap()
+}
+"#;
+    // `.lock().unwrap()` is R3's poisoning-cascade finding, not R1's.
+    assert!(run_rule("rust/src/demo.rs", src, Rule::Panic).is_empty());
+    assert_eq!(run_rule("rust/src/demo.rs", src, Rule::Lock).len(), 2); // poison + unregistered
+}
+
+// ------------------------------------------------------------------ R2
+
+#[test]
+fn r2_unsafe_block_needs_safety_comment() {
+    let bad = r#"
+pub fn f(p: *const u8) -> u8 {
+    unsafe { *p }
+}
+"#;
+    let found = run_rule("rust/src/demo.rs", bad, Rule::Unsafe);
+    assert_eq!(found.len(), 1);
+    assert!(found[0].message.contains("SAFETY"));
+
+    let good = r#"
+pub fn f(p: *const u8) -> u8 {
+    // SAFETY: caller contract — p is valid for reads (fixture).
+    unsafe { *p }
+}
+"#;
+    assert!(run_rule("rust/src/demo.rs", good, Rule::Unsafe).is_empty());
+}
+
+#[test]
+fn r2_unsafe_fn_needs_safety_doc_section() {
+    let bad = r#"
+/// Reads a byte.
+pub unsafe fn f(p: *const u8) -> u8 {
+    // SAFETY: p valid per the (missing) contract.
+    unsafe { *p }
+}
+"#;
+    let found = run_rule("rust/src/demo.rs", bad, Rule::Unsafe);
+    assert_eq!(found.len(), 1, "{found:?}");
+    assert!(found[0].message.contains("# Safety"));
+
+    let good = r#"
+/// Reads a byte.
+///
+/// # Safety
+/// `p` must be valid for reads.
+#[inline]
+pub unsafe fn f(p: *const u8) -> u8 {
+    // SAFETY: fn contract above guarantees p is readable.
+    unsafe { *p }
+}
+"#;
+    assert!(run_rule("rust/src/demo.rs", good, Rule::Unsafe).is_empty());
+}
+
+#[test]
+fn r2_immune_to_strings_and_comments() {
+    let src = r#"
+pub fn f() -> &'static str {
+    // the word unsafe in a comment is fine
+    "unsafe { totally_not_code() }"
+}
+"#;
+    assert!(run_rule("rust/src/demo.rs", src, Rule::Unsafe).is_empty());
+}
+
+// ------------------------------------------------------------------ R3
+
+#[test]
+fn r3_flags_lock_unwrap_poison_cascade() {
+    let src = r#"
+pub struct S { pub journal: std::sync::Mutex<u32> }
+pub fn f(s: &S) -> u32 {
+    *s.journal.lock().unwrap()
+}
+"#;
+    let found = run_rule("rust/src/demo.rs", src, Rule::Lock);
+    assert_eq!(found.len(), 1, "{found:?}");
+    assert!(found[0].message.contains("poisons"));
+}
+
+#[test]
+fn r3_flags_undeclared_nesting_and_accepts_declared() {
+    // Declared order is shard -> catalog-journal; the reverse nesting
+    // must be flagged.
+    let bad = r#"
+pub struct S { pub journal: std::sync::Mutex<u32>, pub shard: std::sync::Mutex<u32> }
+pub fn f(s: &S) -> u32 {
+    let journal = crate::util::lock(&s.journal);
+    let shard = crate::util::lock(&s.shard);
+    *journal + *shard
+}
+"#;
+    let found = run_rule("rust/src/demo.rs", bad, Rule::Lock);
+    assert_eq!(found.len(), 1, "{found:?}");
+    assert!(found[0].message.contains("declared lock order"));
+
+    let good = r#"
+pub struct S { pub journal: std::sync::Mutex<u32>, pub shard: std::sync::Mutex<u32> }
+pub fn f(s: &S) -> u32 {
+    let shard = crate::util::lock(&s.shard);
+    let journal = crate::util::lock(&s.journal);
+    *journal + *shard
+}
+"#;
+    assert!(run_rule("rust/src/demo.rs", good, Rule::Lock).is_empty());
+}
+
+#[test]
+fn r3_temporary_guard_releases_at_statement_end() {
+    // A guard not bound by `let` is a statement temporary dropped at
+    // the `;`, so sequential acquisitions in the "wrong" order never
+    // actually nest.
+    let src = r#"
+pub struct S { pub journal: std::sync::Mutex<u32>, pub shard: std::sync::Mutex<u32> }
+pub fn f(s: &S) -> u32 {
+    let mut a = 0;
+    a += *crate::util::lock(&s.journal);
+    a += *crate::util::lock(&s.shard);
+    a
+}
+"#;
+    assert!(run_rule("rust/src/demo.rs", src, Rule::Lock).is_empty());
+}
+
+#[test]
+fn r3_flags_unregistered_receiver() {
+    let src = r#"
+pub fn f(mystery: &std::sync::Mutex<u32>) -> u32 {
+    *crate::util::lock(mystery)
+}
+"#;
+    let found = run_rule("rust/src/demo.rs", src, Rule::Lock);
+    assert_eq!(found.len(), 1);
+    assert!(found[0].message.contains("no class"));
+}
+
+#[test]
+fn r3_immune_to_strings_and_comments() {
+    let src = r#"
+pub fn f() -> &'static str {
+    // docs may say journal.lock().unwrap() without tripping R3
+    "shard.lock().unwrap() inside a string"
+}
+"#;
+    assert!(run_rule("rust/src/demo.rs", src, Rule::Lock).is_empty());
+}
+
+// ------------------------------------------------------------------ R4
+
+#[test]
+fn r4_finds_missing_env_binding_and_doc_rows() {
+    let src = r#"
+pub struct Config {
+    pub foo: usize,
+    pub bar: usize,
+}
+pub fn apply_env() {
+    let _ = std::env::var("DRS_FOO");
+}
+"#;
+    let mut tree = tree_of("rust/src/config/mod.rs", src);
+    tree.architecture = "knobs: `foo` controls things".to_string();
+    tree.operations = "tune `foo` when slow".to_string();
+    let found = analyze(&tree, &[Rule::Knob]);
+    // bar: missing env + missing from both docs = 3 findings.
+    assert_eq!(found.len(), 3, "{found:?}");
+    assert!(found.iter().any(|f| f.message.contains("missing env DRS_BAR")));
+    assert_eq!(found.iter().filter(|f| f.message.contains("`bar` not in")).count(), 2);
+}
+
+#[test]
+fn r4_finds_stray_env_and_unknown_doc_env() {
+    let src = r#"
+pub struct Config {
+    pub foo: usize,
+}
+pub fn apply_env() {
+    let _ = std::env::var("DRS_FOO");
+    let _ = std::env::var("DRS_GHOST");
+}
+"#;
+    let mut tree = tree_of("rust/src/config/mod.rs", src);
+    tree.architecture = "`foo` (env `DRS_FOO`); legacy `DRS_PHANTOM` row".to_string();
+    tree.operations = "`foo`".to_string();
+    let found = analyze(&tree, &[Rule::Knob]);
+    assert!(found.iter().any(|f| f.message.contains("DRS_GHOST")), "{found:?}");
+    assert!(found.iter().any(|f| f.message.contains("DRS_PHANTOM")), "{found:?}");
+}
+
+#[test]
+fn r4_clean_when_code_env_and_docs_agree() {
+    let src = r#"
+pub struct Config {
+    pub foo: usize,
+}
+pub fn apply_env() {
+    let _ = std::env::var("DRS_FOO");
+}
+"#;
+    let mut tree = tree_of("rust/src/config/mod.rs", src);
+    tree.architecture = "| `foo` (`DRS_FOO`) | 1 | fixture knob |".to_string();
+    tree.operations = "raise `foo` (env `DRS_FOO`) under load".to_string();
+    assert!(analyze(&tree, &[Rule::Knob]).is_empty());
+}
+
+// ------------------------------------------------------------------ R5
+
+#[test]
+fn r5_flags_undocumented_and_malformed_names() {
+    let src = r#"
+pub fn f(m: &crate::metrics::Metrics, t: &crate::obs::Tracer) {
+    m.inc("transfer.ghost.ops");
+    m.inc("NotDotted");
+    let _s = t.span(parent, "Bad_Span");
+}
+"#;
+    let mut tree = tree_of("rust/src/demo.rs", src);
+    tree.docs_corpus = "documented: `transfer.other.ops`".to_string();
+    let found = analyze(&tree, &[Rule::Metric]);
+    assert_eq!(found.len(), 3, "{found:?}");
+    assert!(found.iter().any(|f| f.message.contains("not documented")));
+    assert!(found.iter().any(|f| f.message.contains("area.noun.verb")));
+    assert!(found.iter().any(|f| f.message.contains("lowercase-dash")));
+}
+
+#[test]
+fn r5_accepts_documented_names_and_brace_expansion() {
+    let src = r#"
+pub fn f(m: &crate::metrics::Metrics, t: &crate::obs::Tracer) {
+    m.inc("transfer.stream.blocks");
+    m.gauge("cache.resident_bytes", 0);
+    let _s = t.span(parent, "daemon-tick");
+}
+"#;
+    let mut tree = tree_of("rust/src/demo.rs", src);
+    tree.docs_corpus =
+        "`transfer.stream.{blocks,bytes}` and `cache.resident_bytes`; spans: `daemon-tick`"
+            .to_string();
+    assert!(analyze(&tree, &[Rule::Metric]).is_empty());
+}
+
+#[test]
+fn r5_skips_dynamic_names_and_comment_decoys() {
+    let src = r#"
+pub fn f(m: &crate::metrics::Metrics, name: &str) {
+    // m.inc("comment.decoy.name") stays a comment
+    m.inc(&format!("dyn.{name}.ops"));
+}
+"#;
+    assert!(analyze(&tree_of("rust/src/demo.rs", src), &[Rule::Metric]).is_empty());
+}
+
+// ------------------------------------------------------------------ R6
+
+#[test]
+fn r6_flags_raw_writes_and_honors_allow() {
+    let bad = r#"
+pub fn f(p: &std::path::Path) -> std::io::Result<()> {
+    std::fs::write(p, b"state")
+}
+"#;
+    let found = run_rule("rust/src/demo.rs", bad, Rule::AtomicWrite);
+    assert_eq!(found.len(), 1);
+    assert!(found[0].message.contains("util::atomic_write"));
+
+    let allowed = r#"
+pub fn f(p: &std::path::Path) -> std::io::Result<()> {
+    // lint: allow(atomic-write) — fixture writes scratch, not state
+    std::fs::write(p, b"scratch")
+}
+"#;
+    assert!(run_rule("rust/src/demo.rs", allowed, Rule::AtomicWrite).is_empty());
+}
+
+#[test]
+fn r6_immune_to_strings_and_test_code() {
+    let src = r##"
+pub fn f() -> &'static str {
+    r#"call std::fs::write(path, data) to lose your data"#
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() {
+        std::fs::write("/tmp/x", b"tests may").unwrap();
+    }
+}
+"##;
+    assert!(run_rule("rust/src/demo.rs", src, Rule::AtomicWrite).is_empty());
+}
+
+// ------------------------------------------------------------ ratchet
+
+#[test]
+fn ratchet_refuses_growth_and_accepts_shrink() {
+    let worse = vec![
+        Finding::new(Rule::Panic, "rust/src/a.rs", 1, "x".into()),
+        Finding::new(Rule::Panic, "rust/src/a.rs", 2, "x".into()),
+    ];
+    let better = vec![Finding::new(Rule::Panic, "rust/src/a.rs", 1, "x".into())];
+    let base = Baseline::from_findings(&better);
+    assert!(base.ratchet(&Baseline::from_findings(&worse)).is_err());
+    let shrunk = Baseline::from_findings(&worse).ratchet(&base).unwrap();
+    assert_eq!(shrunk.total(), 1);
+    // A regression is also what `drs lint` itself fails on.
+    assert_eq!(base.regressions(&Baseline::from_findings(&worse)).len(), 1);
+    assert!(Baseline::from_findings(&worse).regressions(&base).is_empty());
+}
+
+// ----------------------------------------------------------- real tree
+
+/// Repo root: tests run from `rust/`, the root is one level up.
+fn repo_root() -> &'static Path {
+    Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/.."))
+}
+
+#[test]
+fn real_tree_has_no_regressions_past_committed_baseline() {
+    let tree = load_tree(repo_root()).unwrap();
+    assert!(tree.sources.len() > 30, "tree unexpectedly small");
+    let findings = analyze(&tree, &ALL_RULES);
+    let current = Baseline::from_findings(&findings);
+    let base = Baseline::load(&repo_root().join("lint_baseline.json")).unwrap();
+    assert!(base.total() > 0, "committed baseline missing or empty");
+    let regs = base.regressions(&current);
+    assert!(regs.is_empty(), "lint regressions vs lint_baseline.json: {regs:?}");
+}
+
+#[test]
+fn real_tree_is_clean_on_drift_rules() {
+    // R2/R4/R5/R6 were burned down to zero in-repo; only R1 and R3
+    // carry baseline debt. Keep the clean rules clean.
+    let tree = load_tree(repo_root()).unwrap();
+    let findings = analyze(&tree, &[Rule::Unsafe, Rule::Knob, Rule::Metric, Rule::AtomicWrite]);
+    assert!(findings.is_empty(), "drift-rule findings: {findings:?}");
+}
