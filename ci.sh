@@ -80,6 +80,21 @@ cargo test -q --test read_cache
 # eviction regression fails CI fast.
 cargo bench --bench read_cache -- --quick
 
+echo "== remote-transport gate (networked chunk SEs: RemoteSe + drs serve) =="
+# The wire transport must be invisible to the data plane: these tests
+# run put/get/repair through RemoteSe against loopback ChunkServers and
+# assert byte-identical round-trips, mid-stream failover to surviving
+# chunks under injected faults (dark endpoint, torn frames, stalls),
+# and no partial objects after a killed commit or failed striped put.
+# Named explicitly so a narrowed tier-1 invocation can never silently
+# drop it.
+cargo test -q --test remote_se
+# Smoke-run the transport bench: it asserts striped parallel gets beat
+# a single-replica stream ≥1.5× and the connection pool beats
+# connect-per-chunk ≥1.5× under a per-connection setup cost, so a
+# pooling or pipelining regression fails CI fast.
+cargo bench --bench remote_transfer -- --quick
+
 echo "== drs lint gate (in-repo invariant analyzer) =="
 # The crate's own static analyzer (src/analysis/, docs/STATIC_ANALYSIS.md):
 # panic-freedom, unsafe hygiene, lock-order discipline, knob/metric drift,

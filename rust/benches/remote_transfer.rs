@@ -1,0 +1,204 @@
+//! Networked chunk transport perf: loopback `ChunkServer` instances
+//! behind `RemoteSe` clients.
+//!
+//! Two claims are measured and *asserted* (the CI `remote-transfer`
+//! gate runs this with `--quick`):
+//!
+//! 1. **Striping wins.** A parallel striped EC get across the remote
+//!    SEs beats streaming the same file from a single whole-file
+//!    replica by ≥1.5× when per-SE bandwidth is the bottleneck.
+//!    Bandwidth is made the bottleneck deterministically with per-SE
+//!    `NetworkProfile` sleeps (jitter and congestion zeroed), not by
+//!    hoping loopback is slow.
+//! 2. **Pooling wins.** With a per-connection setup cost (the paper's
+//!    SRM negotiation, modelled by `ServeOptions::setup_delay`), a
+//!    pooled client beats a connect-per-operation client
+//!    (`pool_max_idle = 0`) by ≥1.5× over a run of sequential chunk
+//!    ops.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use drs::catalog::ShardedDfc;
+use drs::dfm::{EcShim, GetOptions, PutOptions, ReplicationManager};
+use drs::ec::EcParams;
+use drs::placement::RoundRobin;
+use drs::se::{
+    ChunkServer, LocalSe, MemSe, NetworkProfile, RemoteOptions, RemoteSe, SeRegistry,
+    ServeOptions, StorageElement,
+};
+use drs::util::fmt_secs;
+use drs::util::prng::Rng;
+
+/// A rack of loopback chunk servers and the remote registry over them.
+struct Rack {
+    servers: Vec<ChunkServer>,
+    registry: Arc<SeRegistry>,
+}
+
+impl Rack {
+    /// Serve every backing SE and register one `RemoteSe` per server.
+    fn start(
+        backings: Vec<Arc<dyn StorageElement>>,
+        serve: &ServeOptions,
+        client: &RemoteOptions,
+    ) -> Rack {
+        let mut servers = Vec::new();
+        let mut registry = SeRegistry::new();
+        for se in backings {
+            let name = se.name().to_string();
+            let srv = ChunkServer::serve(se, "127.0.0.1:0", serve.clone()).unwrap();
+            let remote =
+                RemoteSe::new(&name, "bench", srv.addr().to_string(), client.clone());
+            registry.register(Arc::new(remote), &["bench"]).unwrap();
+            servers.push(srv);
+        }
+        Rack { servers, registry: Arc::new(registry) }
+    }
+
+    fn stop(self) {
+        for s in self.servers {
+            s.stop();
+        }
+    }
+}
+
+/// Claim 1: striped parallel get vs single-replica whole-file stream,
+/// both over the wire against bandwidth-limited SEs.
+fn bench_striped_vs_single(size: usize, bw_bps: f64, tmp: &Path) {
+    let params = EcParams::new(4, 2).unwrap();
+    let n = params.n();
+    let profile = NetworkProfile {
+        setup_s: 0.0,
+        bandwidth_bps: bw_bps,
+        congestion_alpha: 0.0,
+        jitter_frac: 0.0,
+    };
+    let backings: Vec<Arc<dyn StorageElement>> = (0..n)
+        .map(|i| {
+            let name = format!("SE-{i:02}");
+            let se = LocalSe::new(&name, "bench", tmp.join(&name))
+                .unwrap()
+                .with_profile(profile.clone(), 1.0);
+            Arc::new(se) as Arc<dyn StorageElement>
+        })
+        .collect();
+    let rack = Rack::start(backings, &ServeOptions::default(), &RemoteOptions::default());
+    let dfc = Arc::new(ShardedDfc::new(4));
+    let shim = EcShim::with_defaults(Arc::clone(&dfc), Arc::clone(&rack.registry), "bench");
+    let repl = ReplicationManager::new(
+        Arc::clone(&dfc),
+        Arc::clone(&rack.registry),
+        Arc::new(RoundRobin),
+        "bench",
+    );
+
+    let data = Rng::new(0xBEEF).bytes(size);
+    let popts = PutOptions::default()
+        .with_params(params)
+        .with_stripe(64 * 1024)
+        .with_workers(n);
+    shim.put_bytes("/bench/ec.bin", &data, &popts).unwrap();
+    repl.put_bytes("/bench/rep.bin", &data, 1, 1).unwrap();
+
+    let t0 = Instant::now();
+    let striped = shim
+        .get_bytes("/bench/ec.bin", &GetOptions::default().with_workers(n))
+        .unwrap();
+    let striped_s = t0.elapsed().as_secs_f64();
+    assert_eq!(striped, data, "striped round-trip corrupted");
+
+    let t0 = Instant::now();
+    let single = repl.get_bytes("/bench/rep.bin").unwrap();
+    let single_s = t0.elapsed().as_secs_f64();
+    assert_eq!(single, data, "single-replica round-trip corrupted");
+
+    let speedup = single_s / striped_s.max(1e-9);
+    println!(
+        "  striped get {} vs single-replica stream {} → {speedup:.2}x",
+        fmt_secs(striped_s),
+        fmt_secs(single_s)
+    );
+    assert!(
+        speedup >= 1.5,
+        "striped parallel get must be >=1.5x a single-replica stream, got {speedup:.2}x \
+         (striped {striped_s:.3}s, single {single_s:.3}s)"
+    );
+    rack.stop();
+}
+
+/// Claim 2: with a per-connection setup cost, the pooled client beats
+/// connect-per-chunk on a run of sequential ops.
+fn bench_pooled_vs_per_chunk(ops: usize, setup_delay: Duration) {
+    let backing: Arc<dyn StorageElement> = Arc::new(MemSe::new("SE-POOL", "bench"));
+    let serve = ServeOptions {
+        poll: Duration::from_millis(5),
+        setup_delay,
+        ..ServeOptions::default()
+    };
+    let srv = ChunkServer::serve(backing, "127.0.0.1:0", serve).unwrap();
+    let endpoint = srv.addr().to_string();
+
+    let run = |client: RemoteOptions, tag: &str| -> f64 {
+        let se = RemoteSe::new("SE-POOL", "bench", endpoint.clone(), client);
+        let payload = vec![0x5Au8; 16 * 1024];
+        let t0 = Instant::now();
+        for i in 0..ops {
+            let pfn = format!("/bench/{tag}/{i}");
+            se.put(&pfn, &payload).unwrap();
+            assert_eq!(se.get(&pfn).unwrap().len(), payload.len());
+        }
+        t0.elapsed().as_secs_f64()
+    };
+
+    let pooled_s = run(RemoteOptions::default(), "pooled");
+    let per_chunk_s = run(
+        RemoteOptions { pool_max_idle: 0, ..RemoteOptions::default() },
+        "per-chunk",
+    );
+
+    let speedup = per_chunk_s / pooled_s.max(1e-9);
+    println!(
+        "  {ops} ops with {}ms conn setup: pooled {} vs connect-per-chunk {} → {speedup:.2}x",
+        setup_delay.as_millis(),
+        fmt_secs(pooled_s),
+        fmt_secs(per_chunk_s)
+    );
+    let m = drs::metrics::global();
+    println!(
+        "  se.remote.conns.dialed={} se.remote.conns.reused={}",
+        m.counter("se.remote.conns.dialed"),
+        m.counter("se.remote.conns.reused"),
+    );
+    assert!(
+        speedup >= 1.5,
+        "pooled transport must beat connect-per-chunk by >=1.5x with per-conn setup \
+         cost, got {speedup:.2}x (pooled {pooled_s:.3}s, per-chunk {per_chunk_s:.3}s)"
+    );
+    srv.stop();
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let tmp = std::env::temp_dir().join(format!("drs-remote-bench-{}", std::process::id()));
+    std::fs::create_dir_all(&tmp).unwrap();
+
+    println!("== striped parallel get vs single-replica stream (remote SEs) ==");
+    if quick {
+        // 4 MiB at 20 MB/s per SE: single stream ~0.2 s, striped ~0.05 s.
+        bench_striped_vs_single(4 << 20, 20e6, &tmp);
+    } else {
+        bench_striped_vs_single(16 << 20, 40e6, &tmp);
+    }
+
+    println!("== pooled vs connect-per-chunk (remote SEs) ==");
+    if quick {
+        bench_pooled_vs_per_chunk(20, Duration::from_millis(25));
+    } else {
+        bench_pooled_vs_per_chunk(60, Duration::from_millis(25));
+    }
+
+    let _ = std::fs::remove_dir_all(&tmp);
+    println!("remote-transfer bench done");
+}

@@ -73,6 +73,19 @@ pub const CLASSES: &[LockClass] = &[
         file_hint: None,
     },
     LockClass {
+        name: "remote-pool",
+        // RemoteSe's idle-connection pool; never nested with anything.
+        patterns: &["idle_conns"],
+        file_hint: None,
+    },
+    LockClass {
+        name: "proxy-mode",
+        // testkit::FaultProxy's active-fault cell; copied out, never
+        // held across I/O, never nested.
+        patterns: &["mode"],
+        file_hint: Some("testkit"),
+    },
+    LockClass {
         name: "pool-queue",
         patterns: &["queue"],
         file_hint: None,

@@ -23,9 +23,15 @@ COMMANDS:
                                                scrub, then repair degraded
                                                files, smallest margin first
     drain <se-name> [--workers W]              evacuate all chunks off an SE
+    serve <se-name> [--addr HOST:PORT]         expose the named SE's chunk
+                                               store over TCP (default
+                                               127.0.0.1:7070) for remote
+                                               workspaces whose config lists
+                                               this address as the SE's
+                                               `endpoint`; blocks until killed
     maintain [--root PATH] [--interval-s S] [--slice N] [--deep-every N]
              [--max-files N] [--max-mb MB] [--workers W] [--ticks N]
-             [--status-addr HOST:PORT]
+             [--status-addr HOST:PORT] [--drain-after N]
                                                long-running maintenance daemon:
                                                incremental scrub + budgeted
                                                repair + journal GC on a cadence;
@@ -33,7 +39,9 @@ COMMANDS:
                                                --status-addr serves it live over
                                                HTTP (also /metrics, /traces/recent);
                                                SIGINT/SIGTERM (or --ticks) ends
-                                               the run after the in-flight pass
+                                               the run after the in-flight pass;
+                                               --drain-after N auto-drains an SE
+                                               dark for N consecutive passes
     maintain --stop                            ask a running daemon to stop
                                                cleanly (writes maintain.stop)
     trace tail [--n N]                         last N spans from the workspace
@@ -97,6 +105,7 @@ pub enum Command {
         shallow: bool,
     },
     Drain { se: String, workers: Option<usize> },
+    Serve { se: String, addr: String },
     Maintain {
         root: String,
         interval_s: Option<f64>,
@@ -108,6 +117,7 @@ pub enum Command {
         ticks: Option<u64>,
         stop: bool,
         status_addr: Option<String>,
+        drain_after: Option<u64>,
     },
     Trace { summary: bool, n: usize },
     Status { serve: Option<String> },
@@ -245,6 +255,11 @@ pub fn parse_args(argv: Vec<String>) -> Result<Cli, String> {
             let workers = args.opt_parse("--workers")?;
             Command::Drain { se: args.required("se-name")?, workers }
         }
+        "serve" => {
+            let addr =
+                args.opt_value("--addr")?.unwrap_or_else(|| "127.0.0.1:7070".into());
+            Command::Serve { se: args.required("se-name")?, addr }
+        }
         "maintain" => Command::Maintain {
             root: args.opt_value("--root")?.unwrap_or_else(|| "/".into()),
             interval_s: args.opt_parse("--interval-s")?,
@@ -256,6 +271,7 @@ pub fn parse_args(argv: Vec<String>) -> Result<Cli, String> {
             ticks: args.opt_parse("--ticks")?,
             stop: args.opt_flag("--stop"),
             status_addr: args.opt_value("--status-addr")?,
+            drain_after: args.opt_parse("--drain-after")?,
         },
         "trace" => {
             let n = args.opt_parse("--n")?.unwrap_or(200);
@@ -420,12 +436,13 @@ mod tests {
                 ticks: None,
                 stop: false,
                 status_addr: None,
+                drain_after: None,
             }
         );
         assert_eq!(
             p("maintain --root /vo --interval-s 0.5 --slice 16 --deep-every 3 \
                --max-files 4 --max-mb 100 --workers 2 --ticks 10 \
-               --status-addr 127.0.0.1:9632")
+               --status-addr 127.0.0.1:9632 --drain-after 3")
             .unwrap()
             .command,
             Command::Maintain {
@@ -439,6 +456,7 @@ mod tests {
                 ticks: Some(10),
                 stop: false,
                 status_addr: Some("127.0.0.1:9632".into()),
+                drain_after: Some(3),
             }
         );
         assert!(matches!(
@@ -447,7 +465,24 @@ mod tests {
         ));
         assert!(p("maintain --interval-s soon").is_err());
         assert!(p("maintain --ticks forever").is_err());
+        assert!(p("maintain --drain-after never").is_err());
         assert!(USAGE.contains("maintain --stop"));
+        assert!(USAGE.contains("--drain-after"));
+    }
+
+    #[test]
+    fn serve_command() {
+        assert_eq!(
+            p("serve SE-03").unwrap().command,
+            Command::Serve { se: "SE-03".into(), addr: "127.0.0.1:7070".into() }
+        );
+        assert_eq!(
+            p("serve SE-03 --addr 0.0.0.0:9090").unwrap().command,
+            Command::Serve { se: "SE-03".into(), addr: "0.0.0.0:9090".into() }
+        );
+        assert!(p("serve").is_err());
+        assert!(p("serve SE-03 --addr").is_err());
+        assert!(USAGE.contains("serve <se-name>"));
     }
 
     #[test]

@@ -113,6 +113,7 @@ pub fn dispatch(cli: &Cli) -> Result<()> {
                 .map(|i| crate::config::SeConfig {
                     name: format!("SE-{i:02}"),
                     region: ["uk", "fr", "de"][i % 3].into(),
+                    endpoint: None,
                 })
                 .collect();
             let ws = Workspace::init(root, cfg)?;
@@ -376,6 +377,42 @@ pub fn dispatch(cli: &Cli) -> Result<()> {
             }
             Ok(())
         }
+        Command::Serve { se, addr } => {
+            let ws = Workspace::open(root)?;
+            let target = ws
+                .registry
+                .get(se)
+                .ok_or_else(|| Error::Config(format!("no such SE `{se}`")))?;
+            if target.transport_detail().is_some() {
+                // Serving an endpoint-backed SE would make this process a
+                // blind proxy to another server; point clients there
+                // directly instead.
+                return Err(Error::Config(format!(
+                    "SE `{se}` is itself remote ({}); serve it from the \
+                     workspace that holds its chunks",
+                    target.transport_detail().unwrap_or_default()
+                )));
+            }
+            let opts = crate::se::ServeOptions {
+                io_timeout: std::time::Duration::from_millis(ws.config.remote_io_timeout_ms),
+                ..crate::se::ServeOptions::default()
+            };
+            let server = crate::se::ChunkServer::serve(target, addr, opts)?;
+            let stop_token = StopToken::new();
+            stop_token.hook_signals();
+            println!(
+                "serving SE `{se}` on {} (chunk protocol v{}); point remote \
+                 workspaces' `endpoint` at this address; SIGINT/SIGTERM to stop",
+                server.addr(),
+                crate::se::proto::PROTO_VERSION,
+            );
+            while !stop_token.should_stop() {
+                std::thread::sleep(std::time::Duration::from_millis(100));
+            }
+            server.stop();
+            println!("chunk server stopped ({})", stop_token.cause().unwrap_or("signal"));
+            ws.save()
+        }
         Command::Maintain {
             root: scrub_root,
             interval_s,
@@ -387,6 +424,7 @@ pub fn dispatch(cli: &Cli) -> Result<()> {
             ticks,
             stop,
             status_addr,
+            drain_after,
         } => {
             let ws = Workspace::open(root)?;
             let stop_path = daemon::stop_file_path(&ws.root);
@@ -426,7 +464,10 @@ pub fn dispatch(cli: &Cli) -> Result<()> {
                 .with_budget(budget)
                 .with_workers(workers.unwrap_or(cfg.workers))
                 .with_max_ticks(*ticks)
-                .with_status_addr(addr);
+                .with_status_addr(addr)
+                .with_drain_after_passes(
+                    drain_after.unwrap_or(cfg.maintain_drain_after_passes),
+                );
             let shim = ws.shim();
             let stop_token = StopToken::with_stop_file(&stop_path);
             stop_token.hook_signals();

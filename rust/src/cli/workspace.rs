@@ -36,7 +36,7 @@ use crate::config::Config;
 use crate::dfm::{EcShim, ReplicationManager};
 use crate::ec::{factory, BackendChoice, EcBackend};
 use crate::runtime::PjrtBackend;
-use crate::se::{LocalSe, SeRegistry, StorageElement};
+use crate::se::{LocalSe, RemoteSe, SeRegistry, StorageElement};
 use crate::util::json::Json;
 use crate::{Error, Result};
 
@@ -120,15 +120,28 @@ impl Workspace {
 
         let mut registry = SeRegistry::new();
         for se_cfg in &config.ses {
-            let se = LocalSe::new(
-                &se_cfg.name,
-                &se_cfg.region,
-                root.join("ses").join(&se_cfg.name),
-            )?;
+            // An `endpoint` entry makes the SE a network client to a
+            // `drs serve` instance; everything downstream (shim, repair,
+            // drain, scrub) sees the same `StorageElement` trait either
+            // way. Construction never dials — a dark endpoint only
+            // surfaces when the SE is actually used.
+            let se: Arc<dyn StorageElement> = match &se_cfg.endpoint {
+                Some(endpoint) => Arc::new(RemoteSe::new(
+                    &se_cfg.name,
+                    &se_cfg.region,
+                    endpoint,
+                    config.remote_options(),
+                )),
+                None => Arc::new(LocalSe::new(
+                    &se_cfg.name,
+                    &se_cfg.region,
+                    root.join("ses").join(&se_cfg.name),
+                )?),
+            };
             if down.contains(&se_cfg.name) {
                 se.set_available(false);
             }
-            registry.register(Arc::new(se), &[config.vo.as_str()])?;
+            registry.register(se, &[config.vo.as_str()])?;
         }
 
         // Select the coding backend. `auto` prefers the AOT/PJRT backend
@@ -346,6 +359,43 @@ mod tests {
         assert_eq!(ws.load_scrub_cursor("/vo/other"), None);
         ws.save_scrub_cursor("/", None).unwrap();
         assert_eq!(ws.load_scrub_cursor("/"), None);
+        std::fs::remove_dir_all(root).unwrap();
+    }
+
+    #[test]
+    fn endpoint_ses_route_over_the_wire() {
+        use crate::se::{ChunkServer, MemSe, ServeOptions};
+        // A `drs serve` stand-in for SE-01; the workspace only knows its
+        // address.
+        let backing = Arc::new(MemSe::new("SE-01", "uk"));
+        let srv =
+            ChunkServer::serve(backing, "127.0.0.1:0", ServeOptions::default()).unwrap();
+
+        let root = tmp("remote");
+        let mut cfg = Config::default();
+        cfg.ses.truncate(4);
+        cfg.params = crate::ec::EcParams::new(2, 1).unwrap();
+        cfg.stripe_b = 512;
+        cfg.ses[1].endpoint = Some(srv.addr().to_string());
+        let ws = Workspace::init(&root, cfg).unwrap();
+
+        let remote = ws.registry.get("SE-01").unwrap();
+        assert!(remote.transport_detail().unwrap().contains("endpoint="));
+
+        let shim = ws.shim();
+        let data: Vec<u8> = (0..40_000u32).map(|i| (i % 251) as u8).collect();
+        let opts = crate::dfm::PutOptions::default()
+            .with_params(ws.config.params)
+            .with_stripe(ws.config.stripe_b);
+        shim.put_bytes("/vo/remote.bin", &data, &opts).unwrap();
+        assert!(remote.used_bytes() > 0, "remote SE should hold chunks");
+        let back =
+            shim.get_bytes("/vo/remote.bin", &crate::dfm::GetOptions::default()).unwrap();
+        assert_eq!(back, data);
+
+        drop(shim);
+        drop(ws);
+        srv.stop();
         std::fs::remove_dir_all(root).unwrap();
     }
 

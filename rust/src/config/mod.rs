@@ -28,9 +28,15 @@
 //!   "obs_trace_buffer": 4096,
 //!   "obs_trace_file_bytes": 4194304,
 //!   "obs_status_addr": "",
+//!   "maintain_drain_after_passes": 0,
+//!   "remote_connect_timeout_ms": 5000,
+//!   "remote_io_timeout_ms": 30000,
+//!   "remote_pool_max_idle": 4,
+//!   "remote_pool_idle_secs": 60,
+//!   "remote_pipeline_window": 4,
 //!   "ses": [
 //!     {"name": "UKI-GLASGOW", "region": "uk"},
-//!     {"name": "UKI-IC", "region": "uk"}
+//!     {"name": "UKI-IC", "region": "uk", "endpoint": "10.0.0.7:7070"}
 //!   ],
 //!   "network": {"setup_s": 5.5, "bandwidth_bps": 17300000.0}
 //! }
@@ -50,6 +56,11 @@ pub struct SeConfig {
     pub name: String,
     /// Geographical region label.
     pub region: String,
+    /// When set (`host:port`), the SE is a *remote* chunk server reached
+    /// via [`crate::se::RemoteSe`] instead of a local directory; the
+    /// `drs serve` instance at that address must serve an SE of the same
+    /// name (the handshake checks).
+    pub endpoint: Option<String>,
 }
 
 /// Placement policy selector.
@@ -176,6 +187,22 @@ pub struct Config {
     /// --status-addr`, `drs status --serve`); empty = no endpoint unless
     /// given on the command line.
     pub obs_status_addr: String,
+    /// `drs maintain`: auto-drain an SE observed dark for this many
+    /// consecutive completed namespace passes (0 = never auto-drain).
+    pub maintain_drain_after_passes: u64,
+    /// Remote SEs: TCP connect deadline per dial attempt, milliseconds.
+    pub remote_connect_timeout_ms: u64,
+    /// Remote SEs: read/write deadline on established connections,
+    /// milliseconds.
+    pub remote_io_timeout_ms: u64,
+    /// Remote SEs: max idle pooled connections per endpoint (0 disables
+    /// pooling — every operation dials fresh).
+    pub remote_pool_max_idle: usize,
+    /// Remote SEs: park lifetime of an idle pooled connection, seconds.
+    pub remote_pool_idle_secs: u64,
+    /// Remote SEs: streamed-upload pipeline window — `WriteBlock` frames
+    /// allowed in flight ahead of their acks (min 1).
+    pub remote_pipeline_window: usize,
 }
 
 impl Default for Config {
@@ -195,6 +222,7 @@ impl Default for Config {
                 .map(|i| SeConfig {
                     name: format!("SE-{i:02}"),
                     region: ["uk", "fr", "de"][i % 3].into(),
+                    endpoint: None,
                 })
                 .collect(),
             network: None,
@@ -210,6 +238,12 @@ impl Default for Config {
             obs_trace_buffer: crate::obs::DEFAULT_BUFFER_SPANS,
             obs_trace_file_bytes: 4 << 20,
             obs_status_addr: String::new(),
+            maintain_drain_after_passes: 0,
+            remote_connect_timeout_ms: 5_000,
+            remote_io_timeout_ms: 30_000,
+            remote_pool_max_idle: 4,
+            remote_pool_idle_secs: 60,
+            remote_pipeline_window: 4,
         }
     }
 }
@@ -286,6 +320,24 @@ impl Config {
         if let Some(a) = j.get("obs_status_addr").and_then(Json::as_str) {
             cfg.obs_status_addr = a.to_string();
         }
+        if let Some(n) = j.get("maintain_drain_after_passes").and_then(Json::as_u64) {
+            cfg.maintain_drain_after_passes = n;
+        }
+        if let Some(n) = j.get("remote_connect_timeout_ms").and_then(Json::as_u64) {
+            cfg.remote_connect_timeout_ms = n.max(1);
+        }
+        if let Some(n) = j.get("remote_io_timeout_ms").and_then(Json::as_u64) {
+            cfg.remote_io_timeout_ms = n.max(1);
+        }
+        if let Some(n) = j.get("remote_pool_max_idle").and_then(Json::as_u64) {
+            cfg.remote_pool_max_idle = n as usize;
+        }
+        if let Some(n) = j.get("remote_pool_idle_secs").and_then(Json::as_u64) {
+            cfg.remote_pool_idle_secs = n.max(1);
+        }
+        if let Some(n) = j.get("remote_pipeline_window").and_then(Json::as_u64) {
+            cfg.remote_pipeline_window = (n as usize).max(1);
+        }
         if let Some(ses) = j.get("ses").and_then(Json::as_arr) {
             cfg.ses = ses
                 .iter()
@@ -301,6 +353,11 @@ impl Config {
                             .and_then(Json::as_str)
                             .unwrap_or("unknown")
                             .to_string(),
+                        endpoint: s
+                            .get("endpoint")
+                            .and_then(Json::as_str)
+                            .filter(|e| !e.is_empty())
+                            .map(str::to_string),
                     })
                 })
                 .collect::<Result<Vec<_>>>()?;
@@ -359,15 +416,28 @@ impl Config {
             ("obs_trace_file_bytes", Json::num(self.obs_trace_file_bytes as f64)),
             ("obs_status_addr", Json::str(self.obs_status_addr.clone())),
             (
+                "maintain_drain_after_passes",
+                Json::num(self.maintain_drain_after_passes as f64),
+            ),
+            ("remote_connect_timeout_ms", Json::num(self.remote_connect_timeout_ms as f64)),
+            ("remote_io_timeout_ms", Json::num(self.remote_io_timeout_ms as f64)),
+            ("remote_pool_max_idle", Json::num(self.remote_pool_max_idle as f64)),
+            ("remote_pool_idle_secs", Json::num(self.remote_pool_idle_secs as f64)),
+            ("remote_pipeline_window", Json::num(self.remote_pipeline_window as f64)),
+            (
                 "ses",
                 Json::Arr(
                     self.ses
                         .iter()
                         .map(|s| {
-                            Json::obj(vec![
+                            let mut pairs = vec![
                                 ("name", Json::str(s.name.clone())),
                                 ("region", Json::str(s.region.clone())),
-                            ])
+                            ];
+                            if let Some(e) = &s.endpoint {
+                                pairs.push(("endpoint", Json::str(e.clone())));
+                            }
+                            Json::obj(pairs)
                         })
                         .collect(),
                 ),
@@ -419,8 +489,41 @@ impl Config {
     /// `DRS_MAINTAIN_DEEP_EVERY`, `DRS_MAINTAIN_REPAIR_BUDGET_FILES`,
     /// `DRS_MAINTAIN_REPAIR_BUDGET_MB`, `DRS_OBS_TRACE`,
     /// `DRS_OBS_TRACE_BUFFER`, `DRS_OBS_TRACE_FILE_BYTES`,
-    /// `DRS_OBS_STATUS_ADDR`.
+    /// `DRS_OBS_STATUS_ADDR`, `DRS_MAINTAIN_DRAIN_AFTER_PASSES`,
+    /// `DRS_REMOTE_CONNECT_TIMEOUT_MS`, `DRS_REMOTE_IO_TIMEOUT_MS`,
+    /// `DRS_REMOTE_POOL_MAX_IDLE`, `DRS_REMOTE_POOL_IDLE_SECS`,
+    /// `DRS_REMOTE_PIPELINE_WINDOW`.
     pub fn apply_env(&mut self) {
+        if let Ok(n) = std::env::var("DRS_MAINTAIN_DRAIN_AFTER_PASSES") {
+            if let Ok(n) = n.parse::<u64>() {
+                self.maintain_drain_after_passes = n;
+            }
+        }
+        if let Ok(n) = std::env::var("DRS_REMOTE_CONNECT_TIMEOUT_MS") {
+            if let Ok(n) = n.parse::<u64>() {
+                self.remote_connect_timeout_ms = n.max(1);
+            }
+        }
+        if let Ok(n) = std::env::var("DRS_REMOTE_IO_TIMEOUT_MS") {
+            if let Ok(n) = n.parse::<u64>() {
+                self.remote_io_timeout_ms = n.max(1);
+            }
+        }
+        if let Ok(n) = std::env::var("DRS_REMOTE_POOL_MAX_IDLE") {
+            if let Ok(n) = n.parse::<usize>() {
+                self.remote_pool_max_idle = n;
+            }
+        }
+        if let Ok(n) = std::env::var("DRS_REMOTE_POOL_IDLE_SECS") {
+            if let Ok(n) = n.parse::<u64>() {
+                self.remote_pool_idle_secs = n.max(1);
+            }
+        }
+        if let Ok(n) = std::env::var("DRS_REMOTE_PIPELINE_WINDOW") {
+            if let Ok(n) = n.parse::<usize>() {
+                self.remote_pipeline_window = n.max(1);
+            }
+        }
         if let Ok(v) = std::env::var("DRS_OBS_TRACE") {
             // Accept the usual boolean spellings; anything else is off.
             self.obs_trace = matches!(v.as_str(), "1" | "true" | "yes" | "on");
@@ -528,6 +631,19 @@ impl Config {
         if let Ok(r) = std::env::var("DRS_CLIENT_REGION") {
             self.client_region = r;
         }
+    }
+
+    /// The [`crate::se::RemoteOptions`] this config's `remote_*` knobs
+    /// describe — what the workspace hands to every [`crate::se::RemoteSe`]
+    /// it builds for an `endpoint`-bearing SE entry.
+    pub fn remote_options(&self) -> crate::se::RemoteOptions {
+        let mut o = crate::se::RemoteOptions::default();
+        o.connect_timeout = std::time::Duration::from_millis(self.remote_connect_timeout_ms);
+        o.io_timeout = std::time::Duration::from_millis(self.remote_io_timeout_ms);
+        o.pool_max_idle = self.remote_pool_max_idle;
+        o.pool_idle = std::time::Duration::from_secs(self.remote_pool_idle_secs);
+        o.pipeline_window = self.remote_pipeline_window.max(1);
+        o
     }
 }
 
@@ -799,5 +915,81 @@ mod tests {
         assert_eq!(c.workers, 7);
         assert_eq!(c.params, EcParams::new(6, 3).unwrap());
         assert_eq!(c.client_region, "fr");
+    }
+
+    #[test]
+    fn remote_knobs_roundtrip_env_and_default() {
+        // Old configs (no remote_* keys) get the defaults.
+        let j = Json::parse(r#"{"vo":"demo"}"#).unwrap();
+        let c = Config::from_json(&j).unwrap();
+        assert_eq!(c.maintain_drain_after_passes, 0);
+        assert_eq!(c.remote_connect_timeout_ms, 5_000);
+        assert_eq!(c.remote_io_timeout_ms, 30_000);
+        assert_eq!(c.remote_pool_max_idle, 4);
+        assert_eq!(c.remote_pool_idle_secs, 60);
+        assert_eq!(c.remote_pipeline_window, 4);
+
+        // JSON round-trip preserves explicit values.
+        let mut c = Config::default();
+        c.maintain_drain_after_passes = 3;
+        c.remote_connect_timeout_ms = 1_500;
+        c.remote_io_timeout_ms = 9_000;
+        c.remote_pool_max_idle = 2;
+        c.remote_pool_idle_secs = 11;
+        c.remote_pipeline_window = 8;
+        let back = Config::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.maintain_drain_after_passes, 3);
+        assert_eq!(back.remote_connect_timeout_ms, 1_500);
+        assert_eq!(back.remote_io_timeout_ms, 9_000);
+        assert_eq!(back.remote_pool_max_idle, 2);
+        assert_eq!(back.remote_pool_idle_secs, 11);
+        assert_eq!(back.remote_pipeline_window, 8);
+
+        // Env overrides win; a zero pipeline window clamps to 1.
+        let mut c = Config::default();
+        std::env::set_var("DRS_MAINTAIN_DRAIN_AFTER_PASSES", "5");
+        std::env::set_var("DRS_REMOTE_CONNECT_TIMEOUT_MS", "250");
+        std::env::set_var("DRS_REMOTE_IO_TIMEOUT_MS", "750");
+        std::env::set_var("DRS_REMOTE_POOL_MAX_IDLE", "0");
+        std::env::set_var("DRS_REMOTE_POOL_IDLE_SECS", "7");
+        std::env::set_var("DRS_REMOTE_PIPELINE_WINDOW", "0");
+        c.apply_env();
+        std::env::remove_var("DRS_MAINTAIN_DRAIN_AFTER_PASSES");
+        std::env::remove_var("DRS_REMOTE_CONNECT_TIMEOUT_MS");
+        std::env::remove_var("DRS_REMOTE_IO_TIMEOUT_MS");
+        std::env::remove_var("DRS_REMOTE_POOL_MAX_IDLE");
+        std::env::remove_var("DRS_REMOTE_POOL_IDLE_SECS");
+        std::env::remove_var("DRS_REMOTE_PIPELINE_WINDOW");
+        assert_eq!(c.maintain_drain_after_passes, 5);
+        assert_eq!(c.remote_connect_timeout_ms, 250);
+        assert_eq!(c.remote_pool_max_idle, 0);
+        assert_eq!(c.remote_pipeline_window, 1);
+
+        let o = c.remote_options();
+        assert_eq!(o.connect_timeout, std::time::Duration::from_millis(250));
+        assert_eq!(o.io_timeout, std::time::Duration::from_millis(750));
+        assert_eq!(o.pool_max_idle, 0);
+        assert_eq!(o.pool_idle, std::time::Duration::from_secs(7));
+        assert_eq!(o.pipeline_window, 1);
+    }
+
+    #[test]
+    fn se_endpoint_roundtrips_and_defaults_to_none() {
+        // Absent key → local SE.
+        let j = Json::parse(r#"{"ses":[{"name":"A","region":"uk"}]}"#).unwrap();
+        let c = Config::from_json(&j).unwrap();
+        assert_eq!(c.ses[0].endpoint, None);
+
+        // Explicit endpoint survives a round-trip; empty string is None.
+        let j = Json::parse(
+            r#"{"ses":[{"name":"A","region":"uk","endpoint":"127.0.0.1:7070"},
+                       {"name":"B","region":"fr","endpoint":""}]}"#,
+        )
+        .unwrap();
+        let c = Config::from_json(&j).unwrap();
+        assert_eq!(c.ses[0].endpoint.as_deref(), Some("127.0.0.1:7070"));
+        assert_eq!(c.ses[1].endpoint, None);
+        let back = Config::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.ses, c.ses);
     }
 }

@@ -541,7 +541,12 @@ fn consume_chunk_steps(
     // negotiation in the paper's testbed), so it gets its own stage
     // span — otherwise lane coverage under-reports on high-latency SEs.
     let mut sink = {
-        let sp = tracer().span_with(lane, "chunk-open", || se.name().to_string());
+        // Transport detail (`endpoint= reused_conn=` for remote SEs)
+        // rides along so a trace distinguishes pooled from fresh dials.
+        let sp = tracer().span_with(lane, "chunk-open", || match se.transport_detail() {
+            Some(t) => format!("{} {t}", se.name()),
+            None => se.name().to_string(),
+        });
         sp.finish(se.put_writer(pfn))?
     };
     let mut hasher = crate::util::sha256::Sha256::new();
@@ -904,7 +909,10 @@ fn chunk_reader(
                 let want = (geom.payload_len - off).min(geom.row_block) as usize;
                 let res = {
                     let mut sp = tracer().span_with(parent, "read_at", || {
-                        format!("chunk {} block {b}", chunk.index)
+                        match se.transport_detail() {
+                            Some(t) => format!("chunk {} block {b} {t}", chunk.index),
+                            None => format!("chunk {} block {b}", chunk.index),
+                        }
                     });
                     let _permit = sem.acquire();
                     let r2 = check_up(&*se)

@@ -49,6 +49,7 @@ use crate::obs::http::StatusServer;
 use crate::util::json::Json;
 use crate::Result;
 
+use super::drain::DrainOptions;
 use super::repair::{RepairBudget, RepairSummary};
 use super::scrub::{ScrubOptions, ScrubReport};
 use super::Maintainer;
@@ -230,6 +231,12 @@ pub struct DaemonOptions {
     /// [`crate::obs::http::StatusServer`]) for the lifetime of the run
     /// (`drs maintain --status-addr`, `obs_status_addr` in `drs.json`).
     pub status_addr: Option<String>,
+    /// Auto-drain an SE observed dark for this many *consecutive*
+    /// completed namespace passes (`maintain_drain_after_passes`);
+    /// 0 disables auto-drain. A pass where the SE is back up resets its
+    /// streak; a failed drain attempt is retried at the next completed
+    /// pass while the SE stays dark.
+    pub drain_after_passes: u64,
 }
 
 impl Default for DaemonOptions {
@@ -244,6 +251,7 @@ impl Default for DaemonOptions {
             max_ticks: None,
             gc_budget: 4 << 20,
             status_addr: None,
+            drain_after_passes: 0,
         }
     }
 }
@@ -297,6 +305,13 @@ impl DaemonOptions {
         self.status_addr = addr;
         self
     }
+
+    /// Auto-drain SEs dark for `passes` consecutive completed passes
+    /// (0 = never).
+    pub fn with_drain_after_passes(mut self, passes: u64) -> Self {
+        self.drain_after_passes = passes;
+        self
+    }
 }
 
 /// Health counts of one completed namespace pass (pre-repair, summed over
@@ -336,6 +351,12 @@ pub struct DaemonReport {
     pub quarantine_failed: usize,
     /// Scrub slices that errored (daemon continued).
     pub scrub_errors: usize,
+    /// SEs auto-drained after [`DaemonOptions::drain_after_passes`]
+    /// consecutive dark passes, in drain order.
+    pub auto_drained: Vec<String>,
+    /// Auto-drain attempts that errored (retried next completed pass
+    /// while the SE stays dark).
+    pub auto_drain_failures: u64,
     /// Health counts of the most recently completed pass.
     pub last_pass: Option<PassHealth>,
     /// Why the run ended: `"tick-budget"`, `"signal"`, `"stop-request"`
@@ -449,6 +470,9 @@ impl<'a> Daemon<'a> {
         let mut pass = PassHealth { deep: self.deep_pass(1), ..Default::default() };
         let mut last_tick: Option<(ScrubReport, RepairSummary)> = None;
         let mut consecutive_errors: u32 = 0;
+        // SE name → consecutive completed passes it has been dark.
+        let mut dark_streaks: std::collections::BTreeMap<String, u64> =
+            std::collections::BTreeMap::new();
 
         loop {
             if let Some(cause) = stop.cause() {
@@ -560,6 +584,12 @@ impl<'a> Daemon<'a> {
                 report.last_pass = Some(pass);
                 pass_no += 1;
                 pass = PassHealth { deep: self.deep_pass(pass_no), ..Default::default() };
+                // (e) Auto-drain: an SE dark for `drain_after_passes`
+                // consecutive completed passes is evacuated so its data
+                // regains full redundancy elsewhere without an operator.
+                if self.opts.drain_after_passes > 0 {
+                    self.auto_drain(&mut dark_streaks, &mut report);
+                }
             }
 
             // Close the tick's trace before the idle sleep — the span
@@ -576,6 +606,55 @@ impl<'a> Daemon<'a> {
 
         self.finish(&report, pass_no, cursor.as_deref(), &last_tick, stop);
         Ok(report)
+    }
+
+    /// Update per-SE dark streaks at a completed-pass boundary and drain
+    /// any SE whose streak reached the threshold. An SE observed up
+    /// resets its streak; an SE already auto-drained this run is left
+    /// alone (drain is idempotent but not free).
+    fn auto_drain(
+        &self,
+        dark_streaks: &mut std::collections::BTreeMap<String, u64>,
+        report: &mut DaemonReport,
+    ) {
+        let m = metrics::global();
+        for se in self.shim.registry().all() {
+            let name = se.name().to_string();
+            if se.is_available() {
+                dark_streaks.remove(&name);
+                continue;
+            }
+            let streak = dark_streaks.entry(name.clone()).or_insert(0);
+            *streak += 1;
+            let due = *streak >= self.opts.drain_after_passes
+                && !report.auto_drained.iter().any(|d| d == &name);
+            if !due {
+                continue;
+            }
+            let dopts = DrainOptions::default().with_workers(self.opts.workers);
+            match Maintainer::new(self.shim).drain(&name, &dopts) {
+                Ok(dr) => {
+                    m.inc("maintenance.daemon.auto_drains");
+                    crate::obs::tracer().event(
+                        crate::obs::SpanRef::NONE,
+                        "auto-drain",
+                        dr.clean(),
+                        || format!("dark {streak} pass(es): {}", dr.summary()),
+                    );
+                    report.auto_drained.push(name);
+                }
+                Err(e) => {
+                    m.inc("maintenance.daemon.auto_drain_errors");
+                    report.auto_drain_failures += 1;
+                    crate::obs::tracer().event(
+                        crate::obs::SpanRef::NONE,
+                        "auto-drain",
+                        false,
+                        || format!("`{name}` dark {streak} pass(es): drain failed: {e}"),
+                    );
+                }
+            }
+        }
     }
 
     /// Final status dump + stop-file consumption, shared by every exit
@@ -638,6 +717,21 @@ impl<'a> Daemon<'a> {
                 ]),
             ),
         ];
+        if self.opts.drain_after_passes > 0 {
+            pairs.push((
+                "auto_drain",
+                Json::obj(vec![
+                    ("after_passes", Json::num(self.opts.drain_after_passes as f64)),
+                    (
+                        "drained",
+                        Json::Arr(
+                            report.auto_drained.iter().map(|s| Json::str(s.as_str())).collect(),
+                        ),
+                    ),
+                    ("failures", Json::num(report.auto_drain_failures as f64)),
+                ]),
+            ));
+        }
         if !report.stopped_by.is_empty() {
             pairs.push(("stopped_by", Json::str(report.stopped_by.clone())));
         }
@@ -736,6 +830,82 @@ mod tests {
         assert_eq!(f.cause(), Some("stop-file"));
         f.consume_stop_file();
         assert!(!f.should_stop());
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn auto_drain_fires_after_consecutive_dark_passes() {
+        use crate::dfm::{PutOptions, TestCluster};
+        use crate::ec::EcParams;
+
+        let cluster = TestCluster::builder()
+            .ses(5)
+            .ec(EcParams::new(2, 1).unwrap())
+            .build()
+            .unwrap();
+        let opts = PutOptions::default()
+            .with_params(EcParams::new(2, 1).unwrap())
+            .with_stripe(512);
+        for i in 0..3 {
+            let data: Vec<u8> = (0..4000 + i * 100).map(|b| (b * 13 % 251) as u8).collect();
+            cluster.shim().put_bytes(&format!("/vo/data/f{i}.bin"), &data, &opts).unwrap();
+        }
+        let victim = cluster
+            .dfc()
+            .files_with_replica_on("SE-01")
+            .first()
+            .map(|_| "SE-01")
+            .unwrap_or("SE-02");
+        cluster.registry().get(victim).unwrap().set_available(false);
+
+        let dir = tmp("autodrain");
+        // Whole-namespace pass per tick, drain after 2 dark passes.
+        let d = Daemon::new(
+            cluster.shim(),
+            DaemonOptions::default()
+                .with_interval(Duration::ZERO)
+                .with_slice(0)
+                .with_max_ticks(Some(3))
+                .with_drain_after_passes(2),
+            &dir,
+        );
+        let report = d.run(&StopToken::new()).unwrap();
+        assert_eq!(report.passes, 3);
+        assert_eq!(report.auto_drained, vec![victim.to_string()], "{report:?}");
+        assert_eq!(report.auto_drain_failures, 0);
+        // Nothing catalogued points at the drained SE any more.
+        assert_eq!(cluster.dfc().files_with_replica_on(victim).len(), 0);
+        // The status dump carries the auto-drain section.
+        let status = d.live_status();
+        let drained = status.get("auto_drain").and_then(|j| j.get("drained")).unwrap();
+        assert_eq!(drained.as_arr().map(|a| a.len()), Some(1));
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn auto_drain_streak_resets_when_se_returns() {
+        use crate::dfm::TestCluster;
+        use crate::ec::EcParams;
+
+        let cluster = TestCluster::builder()
+            .ses(4)
+            .ec(EcParams::new(2, 1).unwrap())
+            .build()
+            .unwrap();
+        let dir = tmp("autodrain-reset");
+        let d = Daemon::new(
+            cluster.shim(),
+            DaemonOptions::default()
+                .with_interval(Duration::ZERO)
+                .with_slice(0)
+                .with_max_ticks(Some(3))
+                .with_drain_after_passes(2),
+            &dir,
+        );
+        // Every SE stays up: nothing may drain.
+        let report = d.run(&StopToken::new()).unwrap();
+        assert!(report.auto_drained.is_empty());
+        assert_eq!(report.auto_drain_failures, 0);
         std::fs::remove_dir_all(dir).unwrap();
     }
 

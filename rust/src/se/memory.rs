@@ -39,13 +39,13 @@ impl MemSe {
 
     /// Number of objects stored (test helper).
     pub fn object_count(&self) -> usize {
-        self.store.lock().unwrap().len()
+        crate::util::lock(&self.store).len()
     }
 
     /// Drop every stored object (models catastrophic SE loss for repair
     /// tests) while staying "available".
     pub fn wipe(&self) {
-        let mut s = self.store.lock().unwrap();
+        let mut s = crate::util::lock(&self.store);
         s.clear();
         self.used.store(0, Ordering::Relaxed);
     }
@@ -66,7 +66,7 @@ impl StorageElement for MemSe {
         let sp = tracer()
             .span_with(SpanRef::NONE, "se-put", || format!("{} {pfn}", self.name));
         let r = check_up(self).map(|()| {
-            let mut s = self.store.lock().unwrap();
+            let mut s = crate::util::lock(&self.store);
             if let Some(old) = s.insert(pfn.to_string(), data.to_vec()) {
                 self.used.fetch_sub(old.len() as u64, Ordering::Relaxed);
             }
@@ -79,9 +79,7 @@ impl StorageElement for MemSe {
         let sp = tracer()
             .span_with(SpanRef::NONE, "se-get", || format!("{} {pfn}", self.name));
         let r = check_up(self).and_then(|()| {
-            self.store
-                .lock()
-                .unwrap()
+            crate::util::lock(&self.store)
                 .get(pfn)
                 .cloned()
                 .ok_or_else(|| Error::Se {
@@ -97,7 +95,7 @@ impl StorageElement for MemSe {
             format!("{} {pfn} @{offset}+{len}", self.name)
         });
         let r = check_up(self).and_then(|()| {
-            let store = self.store.lock().unwrap();
+            let store = crate::util::lock(&self.store);
             let all = store.get(pfn).ok_or_else(|| Error::Se {
                 se: self.name.clone(),
                 msg: format!("no such pfn: `{pfn}`"),
@@ -113,7 +111,7 @@ impl StorageElement for MemSe {
         let sp = tracer()
             .span_with(SpanRef::NONE, "se-delete", || format!("{} {pfn}", self.name));
         let r = check_up(self).and_then(|()| {
-            match self.store.lock().unwrap().remove(pfn) {
+            match crate::util::lock(&self.store).remove(pfn) {
                 Some(old) => {
                     self.used.fetch_sub(old.len() as u64, Ordering::Relaxed);
                     Ok(())
@@ -128,15 +126,12 @@ impl StorageElement for MemSe {
     }
 
     fn exists(&self, pfn: &str) -> bool {
-        self.is_available() && self.store.lock().unwrap().contains_key(pfn)
+        self.is_available() && crate::util::lock(&self.store).contains_key(pfn)
     }
 
     fn list(&self, prefix: &str) -> Result<Vec<String>> {
         check_up(self)?;
-        Ok(self
-            .store
-            .lock()
-            .unwrap()
+        Ok(crate::util::lock(&self.store)
             .keys()
             .filter(|k| k.starts_with(prefix))
             .cloned()

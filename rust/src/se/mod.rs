@@ -17,13 +17,18 @@ pub mod failure;
 pub mod local;
 pub mod memory;
 pub mod profile;
+pub mod proto;
 pub mod registry;
+pub mod remote;
+pub mod server;
 
 pub use failure::{generate_schedule, Outage, Schedule};
 pub use local::LocalSe;
 pub use memory::MemSe;
 pub use profile::NetworkProfile;
 pub use registry::{SeInfo, SeRegistry};
+pub use remote::{RemoteOptions, RemoteSe};
+pub use server::{ChunkServer, ServeOptions};
 
 use crate::Result;
 
@@ -102,6 +107,12 @@ pub trait StorageElement: Send + Sync {
 
     /// The network behaviour of the path client↔SE (None = instantaneous).
     fn network_profile(&self) -> Option<&NetworkProfile> {
+        None
+    }
+
+    /// Transport annotation for trace spans (e.g. `endpoint=host:port
+    /// reused_conn=true` for [`RemoteSe`]); `None` for in-process SEs.
+    fn transport_detail(&self) -> Option<String> {
         None
     }
 

@@ -1,0 +1,646 @@
+//! Wire protocol for the networked chunk transport (`drs serve` ↔
+//! [`crate::se::RemoteSe`]).
+//!
+//! Dependency-free and deliberately boring: every message is one
+//! length-prefixed *frame* —
+//!
+//! ```text
+//! u32 LE body length | body | 8-byte checksum
+//! body = u8 opcode | payload
+//! ```
+//!
+//! The trailer is the first 8 bytes of SHA-256 over the body, the same
+//! torn-write guard the catalogue journal uses for its records: a
+//! truncated or bit-flipped frame fails closed as
+//! [`crate::Error::Integrity`] instead of being half-parsed. Integers
+//! are little-endian; strings and byte blobs are `u32`-length-prefixed.
+//!
+//! A connection starts with a version handshake ([`Request::Hello`] →
+//! [`Response::Ok`] carrying the server's version) so incompatible
+//! peers part ways with a readable error instead of a codec blow-up.
+//! After that the client sends request frames and the server answers
+//! each with exactly one response frame, in order — which is what makes
+//! pipelining trivial: a client may write several `WriteBlock` frames
+//! ahead of reading their acks, and TCP ordering matches them back up.
+//!
+//! Errors cross the wire as `(code, se, msg)` triples; the code keeps
+//! [`crate::Error::SeDown`] distinct from generic SE errors so the
+//! PR 6 download pipeline's per-chunk failover fires for a dark remote
+//! exactly as it does for a dark in-process SE.
+
+use std::io::{Read, Write};
+
+use crate::{Error, Result};
+
+/// Protocol version spoken by this build. Bump on any frame-layout
+/// change; the handshake rejects mismatches.
+pub const PROTO_VERSION: u16 = 1;
+
+/// Handshake magic ("DRSP"): rejects ports that aren't a chunk server.
+pub const MAGIC: u32 = 0x4452_5350;
+
+/// Upper bound on one frame body. Bigger than any sane transfer block
+/// (the pipeline's `transfer_block_bytes` defaults to 4 MiB) while
+/// keeping a corrupt length prefix from allocating gigabytes.
+pub const MAX_FRAME: usize = 64 * 1024 * 1024;
+
+/// Bytes of SHA-256 kept as the frame trailer.
+pub const TRAILER: usize = 8;
+
+// Request opcodes.
+const OP_HELLO: u8 = 0x01;
+const OP_PUT: u8 = 0x02;
+const OP_GET: u8 = 0x03;
+const OP_GET_RANGE: u8 = 0x04;
+const OP_DELETE: u8 = 0x05;
+const OP_STAT: u8 = 0x06;
+const OP_LIST: u8 = 0x07;
+const OP_USED: u8 = 0x08;
+const OP_OPEN_SINK: u8 = 0x09;
+const OP_WRITE_BLOCK: u8 = 0x0A;
+const OP_COMMIT: u8 = 0x0B;
+const OP_ABORT: u8 = 0x0C;
+const OP_OPEN_READ: u8 = 0x0D;
+const OP_READ_AT: u8 = 0x0E;
+const OP_CLOSE_READ: u8 = 0x0F;
+const OP_PING: u8 = 0x10;
+
+// Response opcodes.
+const OP_OK: u8 = 0x80;
+const OP_ERR: u8 = 0x81;
+
+// Wire error codes (Response::Err.code).
+/// The remote SE's availability flag is down.
+pub const ERR_SE_DOWN: u8 = 1;
+/// A storage-element error (I/O, missing PFN, finalized sink, ...).
+pub const ERR_SE: u8 = 2;
+/// Any other server-side failure.
+pub const ERR_OTHER: u8 = 3;
+/// The peer violated the protocol (bad opcode, bad handshake, ...).
+pub const ERR_PROTO: u8 = 4;
+/// The object cannot ship as one frame; the client must stream instead.
+pub const ERR_TOO_LARGE: u8 = 5;
+
+/// One client→server message.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Request {
+    /// Version handshake; must be the first frame on a connection.
+    Hello { magic: u32, version: u16 },
+    Put { pfn: String, data: Vec<u8> },
+    Get { pfn: String },
+    GetRange { pfn: String, offset: u64, len: u64 },
+    Delete { pfn: String },
+    /// exists + size probe (`stat` in the CLI sense).
+    Stat { pfn: String },
+    List { prefix: String },
+    UsedBytes,
+    /// Open a streaming upload; the reply carries the stream id.
+    OpenSink { pfn: String },
+    WriteBlock { stream: u64, data: Vec<u8> },
+    Commit { stream: u64 },
+    Abort { stream: u64 },
+    /// Open a streaming reader; the reply carries the stream id.
+    OpenRead { pfn: String },
+    ReadAt { stream: u64, offset: u64, len: u64 },
+    CloseRead { stream: u64 },
+    /// Liveness probe; also used by pool checkout to validate an idle
+    /// connection before reuse.
+    Ping,
+}
+
+/// One server→client message. Exactly one per request, in order.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Response {
+    /// Success; payload layout depends on the request opcode.
+    Ok { payload: Vec<u8> },
+    /// Failure, with enough structure to rebuild the client-side error.
+    Err { code: u8, se: String, msg: String },
+}
+
+impl Request {
+    /// The standard handshake frame for this build.
+    pub fn hello() -> Request {
+        Request::Hello { magic: MAGIC, version: PROTO_VERSION }
+    }
+
+    fn opcode(&self) -> u8 {
+        match self {
+            Request::Hello { .. } => OP_HELLO,
+            Request::Put { .. } => OP_PUT,
+            Request::Get { .. } => OP_GET,
+            Request::GetRange { .. } => OP_GET_RANGE,
+            Request::Delete { .. } => OP_DELETE,
+            Request::Stat { .. } => OP_STAT,
+            Request::List { .. } => OP_LIST,
+            Request::UsedBytes => OP_USED,
+            Request::OpenSink { .. } => OP_OPEN_SINK,
+            Request::WriteBlock { .. } => OP_WRITE_BLOCK,
+            Request::Commit { .. } => OP_COMMIT,
+            Request::Abort { .. } => OP_ABORT,
+            Request::OpenRead { .. } => OP_OPEN_READ,
+            Request::ReadAt { .. } => OP_READ_AT,
+            Request::CloseRead { .. } => OP_CLOSE_READ,
+            Request::Ping => OP_PING,
+        }
+    }
+
+    fn payload(&self) -> Vec<u8> {
+        let mut p = Enc::new();
+        match self {
+            Request::Hello { magic, version } => {
+                p.u32(*magic);
+                p.u16(*version);
+            }
+            Request::Put { pfn, data } => {
+                p.str(pfn);
+                p.bytes(data);
+            }
+            Request::Get { pfn }
+            | Request::Delete { pfn }
+            | Request::Stat { pfn }
+            | Request::OpenSink { pfn }
+            | Request::OpenRead { pfn } => p.str(pfn),
+            Request::GetRange { pfn, offset, len } => {
+                p.str(pfn);
+                p.u64(*offset);
+                p.u64(*len);
+            }
+            Request::List { prefix } => p.str(prefix),
+            Request::UsedBytes | Request::Ping => {}
+            Request::WriteBlock { stream, data } => {
+                p.u64(*stream);
+                p.bytes(data);
+            }
+            Request::Commit { stream }
+            | Request::Abort { stream }
+            | Request::CloseRead { stream } => p.u64(*stream),
+            Request::ReadAt { stream, offset, len } => {
+                p.u64(*stream);
+                p.u64(*offset);
+                p.u64(*len);
+            }
+        }
+        p.buf
+    }
+
+    /// Serialize and send as one frame.
+    pub fn write_to(&self, w: &mut impl Write) -> Result<()> {
+        write_frame(w, self.opcode(), &self.payload())
+    }
+
+    /// Read and decode one request frame.
+    pub fn read_from(r: &mut impl Read) -> Result<Request> {
+        let (op, payload) = read_frame(r)?;
+        Request::decode(op, &payload)
+    }
+
+    /// Decode a request from an already-verified frame body.
+    pub fn decode(op: u8, payload: &[u8]) -> Result<Request> {
+        let mut d = Dec::new(payload);
+        let req = match op {
+            OP_HELLO => Request::Hello { magic: d.u32()?, version: d.u16()? },
+            OP_PUT => Request::Put { pfn: d.str()?, data: d.bytes()? },
+            OP_GET => Request::Get { pfn: d.str()? },
+            OP_GET_RANGE => {
+                Request::GetRange { pfn: d.str()?, offset: d.u64()?, len: d.u64()? }
+            }
+            OP_DELETE => Request::Delete { pfn: d.str()? },
+            OP_STAT => Request::Stat { pfn: d.str()? },
+            OP_LIST => Request::List { prefix: d.str()? },
+            OP_USED => Request::UsedBytes,
+            OP_OPEN_SINK => Request::OpenSink { pfn: d.str()? },
+            OP_WRITE_BLOCK => Request::WriteBlock { stream: d.u64()?, data: d.bytes()? },
+            OP_COMMIT => Request::Commit { stream: d.u64()? },
+            OP_ABORT => Request::Abort { stream: d.u64()? },
+            OP_OPEN_READ => Request::OpenRead { pfn: d.str()? },
+            OP_READ_AT => {
+                Request::ReadAt { stream: d.u64()?, offset: d.u64()?, len: d.u64()? }
+            }
+            OP_CLOSE_READ => Request::CloseRead { stream: d.u64()? },
+            OP_PING => Request::Ping,
+            other => {
+                return Err(Error::Transfer(format!("proto: unknown request opcode {other:#x}")))
+            }
+        };
+        d.done()?;
+        Ok(req)
+    }
+}
+
+impl Response {
+    /// Success with an empty payload.
+    pub fn ok() -> Response {
+        Response::Ok { payload: Vec::new() }
+    }
+
+    /// Build the wire error for a server-side failure, preserving the
+    /// [`Error::SeDown`] distinction the client failover relies on.
+    pub fn from_error(e: &Error) -> Response {
+        match e {
+            Error::SeDown { se } => {
+                Response::Err { code: ERR_SE_DOWN, se: se.clone(), msg: String::new() }
+            }
+            Error::Se { se, msg } => {
+                Response::Err { code: ERR_SE, se: se.clone(), msg: msg.clone() }
+            }
+            other => {
+                Response::Err { code: ERR_OTHER, se: String::new(), msg: other.to_string() }
+            }
+        }
+    }
+
+    /// Rebuild the client-side [`Error`] for a wire error. `endpoint`
+    /// contextualizes codes that carry no SE name of their own.
+    pub fn to_error(code: u8, se: &str, msg: &str, endpoint: &str) -> Error {
+        match code {
+            ERR_SE_DOWN => Error::SeDown { se: se.to_string() },
+            ERR_SE => Error::Se { se: se.to_string(), msg: msg.to_string() },
+            ERR_PROTO => Error::Transfer(format!("remote {endpoint}: protocol error: {msg}")),
+            _ => Error::Transfer(format!("remote {endpoint}: {msg}")),
+        }
+    }
+
+    fn opcode(&self) -> u8 {
+        match self {
+            Response::Ok { .. } => OP_OK,
+            Response::Err { .. } => OP_ERR,
+        }
+    }
+
+    fn body_payload(&self) -> Vec<u8> {
+        match self {
+            Response::Ok { payload } => payload.clone(),
+            Response::Err { code, se, msg } => {
+                let mut p = Enc::new();
+                p.u8(*code);
+                p.str(se);
+                p.str(msg);
+                p.buf
+            }
+        }
+    }
+
+    /// Serialize and send as one frame.
+    pub fn write_to(&self, w: &mut impl Write) -> Result<()> {
+        write_frame(w, self.opcode(), &self.body_payload())
+    }
+
+    /// Read and decode one response frame.
+    pub fn read_from(r: &mut impl Read) -> Result<Response> {
+        let (op, payload) = read_frame(r)?;
+        match op {
+            OP_OK => Ok(Response::Ok { payload }),
+            OP_ERR => {
+                let mut d = Dec::new(&payload);
+                let resp =
+                    Response::Err { code: d.u8()?, se: d.str()?, msg: d.str()? };
+                d.done()?;
+                Ok(resp)
+            }
+            other => {
+                Err(Error::Transfer(format!("proto: unknown response opcode {other:#x}")))
+            }
+        }
+    }
+}
+
+/// First [`TRAILER`] bytes of SHA-256 over the body, fed as the opcode
+/// slice then the payload slice (lets the reader hash without gluing
+/// the two back into one buffer).
+pub fn trailer(parts: &[&[u8]]) -> [u8; TRAILER] {
+    let mut h = crate::util::sha256::Sha256::new();
+    for p in parts {
+        h.update(p);
+    }
+    let digest = h.finalize();
+    let mut t = [0u8; TRAILER];
+    t.copy_from_slice(&digest[..TRAILER]);
+    t
+}
+
+/// Write one checksummed frame.
+pub fn write_frame(w: &mut impl Write, op: u8, payload: &[u8]) -> Result<()> {
+    let body_len = 1 + payload.len();
+    if body_len > MAX_FRAME {
+        return Err(Error::Transfer(format!(
+            "proto: frame body {body_len} B exceeds max {MAX_FRAME} B"
+        )));
+    }
+    // One buffered write per frame: header + body + trailer coalesce
+    // into a single syscall on the common path, which matters when a
+    // pipelined sink is pushing many small frames.
+    let mut buf = Vec::with_capacity(4 + body_len + TRAILER);
+    buf.extend_from_slice(&(body_len as u32).to_le_bytes());
+    buf.push(op);
+    buf.extend_from_slice(payload);
+    let t = trailer(&[&[op], payload]);
+    buf.extend_from_slice(&t);
+    w.write_all(&buf)?;
+    Ok(())
+}
+
+/// Write a [`Request::WriteBlock`] frame straight from the caller's
+/// block slice — the pipelined sink's hot path, where building the
+/// `Request` enum first would copy every block an extra time.
+pub fn write_block_frame(w: &mut impl Write, stream: u64, data: &[u8]) -> Result<()> {
+    let mut p = Enc::new();
+    p.u64(stream);
+    p.bytes(data);
+    write_frame(w, OP_WRITE_BLOCK, &p.buf)
+}
+
+/// Read one frame; verifies length bound and checksum. A checksum or
+/// truncation failure is [`Error::Integrity`] — the caller must drop
+/// the connection, since frame sync is lost.
+pub fn read_frame(r: &mut impl Read) -> Result<(u8, Vec<u8>)> {
+    let mut len4 = [0u8; 4];
+    r.read_exact(&mut len4)?;
+    let body_len = u32::from_le_bytes(len4) as usize;
+    if body_len == 0 || body_len > MAX_FRAME {
+        return Err(Error::Integrity {
+            path: "<frame>".into(),
+            detail: format!("bad frame length {body_len}"),
+        });
+    }
+    let mut op1 = [0u8; 1];
+    r.read_exact(&mut op1).map_err(|e| truncated(e, "body"))?;
+    let mut payload = vec![0u8; body_len - 1];
+    r.read_exact(&mut payload).map_err(|e| truncated(e, "body"))?;
+    let mut want = [0u8; TRAILER];
+    r.read_exact(&mut want).map_err(|e| truncated(e, "trailer"))?;
+    if trailer(&[&op1, &payload]) != want {
+        return Err(Error::Integrity {
+            path: "<frame>".into(),
+            detail: "frame checksum mismatch".into(),
+        });
+    }
+    Ok((op1[0], payload))
+}
+
+/// A mid-frame EOF is an integrity error (torn frame), not a generic
+/// I/O error: the stream can never be re-synced.
+fn truncated(e: std::io::Error, part: &str) -> Error {
+    if e.kind() == std::io::ErrorKind::UnexpectedEof {
+        Error::Integrity {
+            path: "<frame>".into(),
+            detail: format!("frame truncated mid-{part}"),
+        }
+    } else {
+        Error::Io(e)
+    }
+}
+
+/// Payload writer: LE integers, u32-length-prefixed blobs.
+pub struct Enc {
+    /// Accumulated payload bytes.
+    pub buf: Vec<u8>,
+}
+
+impl Enc {
+    /// Fresh empty payload.
+    pub fn new() -> Enc {
+        Enc { buf: Vec::new() }
+    }
+
+    /// Append a u8.
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    /// Append a u16 (LE).
+    pub fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append a u32 (LE).
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append a u64 (LE).
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append a length-prefixed blob.
+    pub fn bytes(&mut self, v: &[u8]) {
+        self.u32(v.len() as u32);
+        self.buf.extend_from_slice(v);
+    }
+
+    /// Append a length-prefixed UTF-8 string.
+    pub fn str(&mut self, v: &str) {
+        self.bytes(v.as_bytes());
+    }
+}
+
+impl Default for Enc {
+    fn default() -> Self {
+        Enc::new()
+    }
+}
+
+/// Payload reader; every accessor fails closed on short input.
+pub struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    /// Start decoding `buf`.
+    pub fn new(buf: &'a [u8]) -> Dec<'a> {
+        Dec { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.buf.len() - self.pos < n {
+            return Err(Error::Transfer(format!(
+                "proto: payload truncated (wanted {n} B at offset {})",
+                self.pos
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    /// Read a u8.
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    /// Read a u16 (LE).
+    pub fn u16(&mut self) -> Result<u16> {
+        let s = self.take(2)?;
+        Ok(u16::from_le_bytes([s[0], s[1]]))
+    }
+
+    /// Read a u32 (LE).
+    pub fn u32(&mut self) -> Result<u32> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    /// Read a u64 (LE).
+    pub fn u64(&mut self) -> Result<u64> {
+        let s = self.take(8)?;
+        let mut b = [0u8; 8];
+        b.copy_from_slice(s);
+        Ok(u64::from_le_bytes(b))
+    }
+
+    /// Read a length-prefixed blob.
+    pub fn bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.u32()? as usize;
+        Ok(self.take(n)?.to_vec())
+    }
+
+    /// Read a length-prefixed UTF-8 string.
+    pub fn str(&mut self) -> Result<String> {
+        let raw = self.bytes()?;
+        String::from_utf8(raw)
+            .map_err(|_| Error::Transfer("proto: invalid UTF-8 in string field".into()))
+    }
+
+    /// Assert the payload was fully consumed (catches peer/codec skew).
+    pub fn done(&self) -> Result<()> {
+        if self.pos == self.buf.len() {
+            Ok(())
+        } else {
+            Err(Error::Transfer(format!(
+                "proto: {} trailing payload bytes",
+                self.buf.len() - self.pos
+            )))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_req(req: Request) {
+        let mut wire = Vec::new();
+        req.write_to(&mut wire).unwrap();
+        let back = Request::read_from(&mut wire.as_slice()).unwrap();
+        assert_eq!(req, back);
+    }
+
+    #[test]
+    fn all_requests_roundtrip() {
+        roundtrip_req(Request::hello());
+        roundtrip_req(Request::Put { pfn: "/vo/x".into(), data: vec![1, 2, 3] });
+        roundtrip_req(Request::Get { pfn: "/vo/x".into() });
+        roundtrip_req(Request::GetRange { pfn: "/vo/x".into(), offset: 7, len: 9 });
+        roundtrip_req(Request::Delete { pfn: "/vo/x".into() });
+        roundtrip_req(Request::Stat { pfn: "/vo/x".into() });
+        roundtrip_req(Request::List { prefix: "/vo/".into() });
+        roundtrip_req(Request::UsedBytes);
+        roundtrip_req(Request::OpenSink { pfn: "/vo/x".into() });
+        roundtrip_req(Request::WriteBlock { stream: 3, data: vec![0u8; 1000] });
+        roundtrip_req(Request::Commit { stream: 3 });
+        roundtrip_req(Request::Abort { stream: 3 });
+        roundtrip_req(Request::OpenRead { pfn: "/vo/x".into() });
+        roundtrip_req(Request::ReadAt { stream: 4, offset: 1 << 33, len: 65536 });
+        roundtrip_req(Request::CloseRead { stream: 4 });
+        roundtrip_req(Request::Ping);
+    }
+
+    #[test]
+    fn responses_roundtrip() {
+        for resp in [
+            Response::Ok { payload: vec![9, 9, 9] },
+            Response::ok(),
+            Response::Err { code: ERR_SE_DOWN, se: "SE-1".into(), msg: String::new() },
+            Response::Err { code: ERR_SE, se: "SE-1".into(), msg: "boom".into() },
+        ] {
+            let mut wire = Vec::new();
+            resp.write_to(&mut wire).unwrap();
+            let back = Response::read_from(&mut wire.as_slice()).unwrap();
+            assert_eq!(resp, back);
+        }
+    }
+
+    #[test]
+    fn error_mapping_preserves_se_down() {
+        let resp = Response::from_error(&Error::SeDown { se: "SE-9".into() });
+        let Response::Err { code, se, msg } = resp else { panic!("expected Err") };
+        assert_eq!(code, ERR_SE_DOWN);
+        let back = Response::to_error(code, &se, &msg, "127.0.0.1:1");
+        assert!(matches!(back, Error::SeDown { se } if se == "SE-9"));
+    }
+
+    #[test]
+    fn corrupt_checksum_is_integrity_error() {
+        let mut wire = Vec::new();
+        Request::Ping.write_to(&mut wire).unwrap();
+        let last = wire.len() - 1;
+        wire[last] ^= 0xFF;
+        let err = Request::read_from(&mut wire.as_slice()).unwrap_err();
+        assert!(matches!(err, Error::Integrity { .. }), "{err}");
+    }
+
+    #[test]
+    fn corrupt_body_is_integrity_error() {
+        let mut wire = Vec::new();
+        Request::Put { pfn: "/x".into(), data: vec![7; 64] }.write_to(&mut wire).unwrap();
+        wire[10] ^= 0x01;
+        let err = Request::read_from(&mut wire.as_slice()).unwrap_err();
+        assert!(matches!(err, Error::Integrity { .. }), "{err}");
+    }
+
+    #[test]
+    fn truncated_frame_is_integrity_error() {
+        let mut wire = Vec::new();
+        Request::Put { pfn: "/x".into(), data: vec![7; 64] }.write_to(&mut wire).unwrap();
+        wire.truncate(wire.len() / 2);
+        let err = Request::read_from(&mut wire.as_slice()).unwrap_err();
+        assert!(matches!(err, Error::Integrity { .. }), "{err}");
+    }
+
+    #[test]
+    fn absurd_length_prefix_rejected_before_alloc() {
+        let mut wire = (u32::MAX).to_le_bytes().to_vec();
+        wire.extend_from_slice(&[0u8; 16]);
+        let err = read_frame(&mut wire.as_slice()).unwrap_err();
+        assert!(matches!(err, Error::Integrity { .. }), "{err}");
+    }
+
+    #[test]
+    fn oversize_payload_refused_on_write() {
+        let big = vec![0u8; MAX_FRAME];
+        let mut sink = Vec::new();
+        let err = write_frame(&mut sink, OP_PUT, &big).unwrap_err();
+        assert!(matches!(err, Error::Transfer(_)), "{err}");
+        assert!(sink.is_empty(), "nothing may hit the wire on refusal");
+    }
+
+    #[test]
+    fn trailing_garbage_in_payload_rejected() {
+        let mut p = Enc::new();
+        p.u64(1);
+        p.u8(0xEE); // one byte the Commit decoder will not consume
+        let mut wire = Vec::new();
+        write_frame(&mut wire, OP_COMMIT, &p.buf).unwrap();
+        let err = Request::read_from(&mut wire.as_slice()).unwrap_err();
+        assert!(matches!(err, Error::Transfer(_)), "{err}");
+    }
+
+    #[test]
+    fn write_block_frame_matches_enum_encoding() {
+        let data = vec![0xABu8; 333];
+        let mut fast = Vec::new();
+        write_block_frame(&mut fast, 42, &data).unwrap();
+        let mut slow = Vec::new();
+        Request::WriteBlock { stream: 42, data }.write_to(&mut slow).unwrap();
+        assert_eq!(fast, slow);
+    }
+
+    #[test]
+    fn dec_fails_closed_on_short_input() {
+        let mut d = Dec::new(&[1, 2]);
+        assert!(d.u64().is_err());
+        let mut d = Dec::new(&[255, 255, 255, 255]);
+        assert!(d.bytes().is_err(), "length prefix larger than payload");
+    }
+}

@@ -1,0 +1,991 @@
+//! `RemoteSe` — a [`StorageElement`] speaking the [`super::proto`] wire
+//! protocol to a `drs serve` endpoint.
+//!
+//! The whole point of this type is that the rest of the crate cannot
+//! tell it from an in-process SE: the PR 6 streaming pipeline, repair,
+//! scrub, drain and federation all run over the wire unchanged. The
+//! perf-relevant machinery lives here on the client side:
+//!
+//! * **Per-endpoint connection pool.** Completed operations park their
+//!   connection (post-handshake) in an idle pool; the next operation
+//!   reuses it instead of paying TCP connect + version handshake again.
+//!   An N-chunk striped transfer therefore pays connection setup once
+//!   per stream, not once per block — the exact cost the paper blames
+//!   for "overheads for multiple file transfers". Idle connections are
+//!   reaped after `pool_idle`, and the pool never holds more than
+//!   `pool_max_idle` (0 disables pooling, which is what the bench's
+//!   connect-per-chunk baseline uses).
+//! * **Pipelined block writes.** [`ChunkSink::write_block`] sends up to
+//!   `pipeline_window` frames ahead of their acks (the server answers
+//!   strictly in order), so a streamed upload overlaps network latency
+//!   with server-side writes instead of paying one RTT per block.
+//!   `commit` drains every outstanding ack before finalizing, so commit
+//!   success still means every block landed.
+//! * **Deadlines + reconnect-with-backoff.** Every socket carries
+//!   read/write deadlines; dials retry with the jittered [`Backoff`]
+//!   from `transfer::retry`. An endpoint that stays dark maps to
+//!   [`Error::SeDown`] — the same variant an in-process dark SE raises —
+//!   so the download pipeline's per-chunk mid-stream failover and the
+//!   upload path's fallback-SE logic fire unchanged.
+//!
+//! A transport failure on a *pooled* connection (the server may have
+//! reaped it) is transparently retried once on a fresh dial for
+//! idempotent verbs; stream-stateful verbs never auto-retry. Metrics
+//! land under `se.remote.*`; spans reuse the `se-put`/`se-get`/... names
+//! with `endpoint=`/`reused_conn=` details.
+
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use super::proto::{self, Request, Response};
+use super::{check_up, ChunkSink, ChunkSource, StorageElement};
+use crate::obs::{tracer, SpanRef};
+use crate::transfer::retry::Backoff;
+use crate::{Error, Result};
+
+/// Objects up to this many bytes ship as one inline `Put`/`Get` frame;
+/// larger ones stream block-wise (the wire caps frames at
+/// [`proto::MAX_FRAME`]).
+const INLINE_MAX: usize = 4 * 1024 * 1024;
+
+/// Block size for streamed whole-object get/put fallbacks.
+const STREAM_BLOCK: usize = 4 * 1024 * 1024;
+
+/// Client-side transport tuning for one endpoint.
+#[derive(Clone, Debug)]
+pub struct RemoteOptions {
+    /// TCP connect deadline per dial attempt.
+    pub connect_timeout: Duration,
+    /// Read/write deadline on established connections.
+    pub io_timeout: Duration,
+    /// Max parked idle connections (0 = no pooling: connect per op).
+    pub pool_max_idle: usize,
+    /// Park lifetime; older idle connections are reaped at checkout.
+    pub pool_idle: Duration,
+    /// In-flight `WriteBlock` frames allowed ahead of their acks (≥1).
+    pub pipeline_window: usize,
+    /// Dial attempts before the endpoint is declared dark (`SeDown`).
+    pub connect_attempts: usize,
+    /// Jittered backoff between dial attempts.
+    pub backoff: Backoff,
+}
+
+impl Default for RemoteOptions {
+    fn default() -> Self {
+        RemoteOptions {
+            connect_timeout: Duration::from_secs(5),
+            io_timeout: Duration::from_secs(30),
+            pool_max_idle: 4,
+            pool_idle: Duration::from_secs(60),
+            pipeline_window: 4,
+            connect_attempts: 3,
+            backoff: Backoff::default_lan(),
+        }
+    }
+}
+
+/// One established, handshaken connection.
+struct Conn {
+    stream: TcpStream,
+}
+
+impl Conn {
+    fn send(&mut self, req: &Request) -> Result<()> {
+        req.write_to(&mut self.stream)
+    }
+
+    fn recv(&mut self) -> Result<Response> {
+        Response::read_from(&mut self.stream)
+    }
+
+    fn rpc(&mut self, req: &Request) -> Result<Response> {
+        self.send(req)?;
+        self.recv()
+    }
+}
+
+struct IdleConn {
+    conn: Conn,
+    since: Instant,
+}
+
+/// A Storage Element backed by a `drs serve` endpoint.
+pub struct RemoteSe {
+    name: String,
+    region: String,
+    endpoint: String,
+    opts: RemoteOptions,
+    /// Local admin availability flag (drain/failure-injection). Remote
+    /// unavailability arrives per-request as wire `SeDown` errors.
+    available: AtomicBool,
+    /// Parked idle connections, newest last (LIFO keeps them warm).
+    idle_conns: Mutex<Vec<IdleConn>>,
+    /// Whether the most recent checkout reused a pooled connection
+    /// (advisory; feeds `reused_conn=` span details).
+    last_reused: AtomicBool,
+    /// Monotonic dial counter; seeds per-dial backoff jitter.
+    dial_seq: AtomicU64,
+}
+
+impl RemoteSe {
+    /// Build a client for `endpoint` (`host:port`). Does not dial: a
+    /// dark endpoint surfaces per-operation as [`Error::SeDown`], so a
+    /// workspace with unreachable remotes still opens.
+    pub fn new(
+        name: impl Into<String>,
+        region: impl Into<String>,
+        endpoint: impl Into<String>,
+        opts: RemoteOptions,
+    ) -> Self {
+        RemoteSe {
+            name: name.into(),
+            region: region.into(),
+            endpoint: endpoint.into(),
+            opts,
+            available: AtomicBool::new(true),
+            idle_conns: Mutex::new(Vec::new()),
+            last_reused: AtomicBool::new(false),
+            dial_seq: AtomicU64::new(0),
+        }
+    }
+
+    /// The `host:port` this client dials.
+    pub fn endpoint_addr(&self) -> &str {
+        &self.endpoint
+    }
+
+    /// Idle pooled connections right now (test/status introspection).
+    pub fn pooled_idle(&self) -> usize {
+        crate::util::lock(&self.idle_conns).len()
+    }
+
+    fn seed(&self) -> u64 {
+        let mut h = crate::util::sha256::Sha256::new();
+        h.update(self.endpoint.as_bytes());
+        let d = h.finalize();
+        u64::from_le_bytes([d[0], d[1], d[2], d[3], d[4], d[5], d[6], d[7]])
+    }
+
+    /// One TCP connect + handshake, no retries.
+    fn try_dial(&self) -> Result<Conn> {
+        let addr = self
+            .endpoint
+            .to_socket_addrs()
+            .map_err(|e| Error::Transfer(format!("remote {}: resolve: {e}", self.endpoint)))?
+            .next()
+            .ok_or_else(|| {
+                Error::Transfer(format!("remote {}: no address", self.endpoint))
+            })?;
+        let stream = TcpStream::connect_timeout(&addr, self.opts.connect_timeout)
+            .map_err(|e| Error::Transfer(format!("remote {}: connect: {e}", self.endpoint)))?;
+        let _ = stream.set_nodelay(true);
+        let _ =
+            stream.set_read_timeout(Some(self.opts.io_timeout.max(Duration::from_millis(1))));
+        let _ =
+            stream.set_write_timeout(Some(self.opts.io_timeout.max(Duration::from_millis(1))));
+        let mut conn = Conn { stream };
+        match conn.rpc(&Request::hello())? {
+            Response::Ok { payload } => {
+                let mut d = proto::Dec::new(&payload);
+                let version = d.u16()?;
+                let srv_name = d.str()?;
+                let _region = d.str()?;
+                if version != proto::PROTO_VERSION {
+                    return Err(Error::Transfer(format!(
+                        "remote {}: speaks protocol v{version}, expected v{}",
+                        self.endpoint,
+                        proto::PROTO_VERSION
+                    )));
+                }
+                if srv_name != self.name {
+                    return Err(Error::Transfer(format!(
+                        "remote {}: serves SE `{srv_name}`, expected `{}`",
+                        self.endpoint, self.name
+                    )));
+                }
+                crate::metrics::global().inc("se.remote.conns.dialed");
+                Ok(conn)
+            }
+            Response::Err { code, se, msg } => {
+                Err(Response::to_error(code, &se, &msg, &self.endpoint))
+            }
+        }
+    }
+
+    /// Whether a dial failure is worth retrying: connect refusals and
+    /// transport-level breakage may be transient; a live server that
+    /// *rejects* us (version/name mismatch, protocol error) is final.
+    fn dial_retryable(e: &Error) -> bool {
+        match e {
+            Error::Io(_) | Error::Integrity { .. } => true,
+            Error::Transfer(m) => m.contains("connect:") || m.contains("resolve:"),
+            _ => false,
+        }
+    }
+
+    /// Dial with jittered backoff; a persistently dark endpoint maps to
+    /// [`Error::SeDown`] so chunk-level failover treats it like any
+    /// other dark SE.
+    fn dial(&self) -> Result<Conn> {
+        let attempts = self.opts.connect_attempts.max(1);
+        let seq = self.dial_seq.fetch_add(1, Ordering::Relaxed);
+        let mut rng = crate::util::prng::Rng::new(self.seed() ^ seq);
+        for attempt in 0..attempts {
+            if attempt > 0 {
+                std::thread::sleep(self.opts.backoff.delay(attempt - 1, &mut rng));
+            }
+            match self.try_dial() {
+                Ok(c) => return Ok(c),
+                Err(e) => {
+                    crate::transfer::retry::note_attempt(
+                        SpanRef::NONE,
+                        &self.name,
+                        attempt + 1,
+                        &e,
+                    );
+                    if !Self::dial_retryable(&e) {
+                        return Err(e);
+                    }
+                }
+            }
+        }
+        crate::metrics::global().inc("se.remote.conns.dark");
+        Err(Error::SeDown { se: self.name.clone() })
+    }
+
+    /// Get a connection: pooled if a fresh-enough one is parked, else a
+    /// new dial.
+    fn checkout(&self) -> Result<Conn> {
+        check_up(self)?;
+        let m = crate::metrics::global();
+        let pooled = {
+            let mut pool = crate::util::lock(&self.idle_conns);
+            let before = pool.len();
+            let now = Instant::now();
+            pool.retain(|ic| now.duration_since(ic.since) <= self.opts.pool_idle);
+            let reaped = before - pool.len();
+            if reaped > 0 {
+                m.add("se.remote.conns.reaped", reaped as u64);
+            }
+            pool.pop()
+        };
+        let (conn, reused) = match pooled {
+            Some(ic) => (ic.conn, true),
+            None => (self.dial()?, false),
+        };
+        if reused {
+            m.inc("se.remote.conns.reused");
+        }
+        self.last_reused.store(reused, Ordering::Relaxed);
+        Ok(conn)
+    }
+
+    /// Park a healthy connection for reuse (dropped if the pool is full
+    /// or pooling is disabled).
+    fn checkin(&self, conn: Conn) {
+        if self.opts.pool_max_idle == 0 {
+            return;
+        }
+        let mut pool = crate::util::lock(&self.idle_conns);
+        if pool.len() < self.opts.pool_max_idle {
+            pool.push(IdleConn { conn, since: Instant::now() });
+        }
+    }
+
+    /// Whether a transport failure of `req` may be transparently
+    /// retried on a fresh connection. Read-only verbs and overwrite-
+    /// idempotent `Put` qualify; `Delete` (a retry would misreport a
+    /// completed delete as missing) and stream-stateful verbs do not.
+    fn retryable(req: &Request) -> bool {
+        matches!(
+            req,
+            Request::Get { .. }
+                | Request::GetRange { .. }
+                | Request::Stat { .. }
+                | Request::List { .. }
+                | Request::UsedBytes
+                | Request::Put { .. }
+                | Request::OpenSink { .. }
+                | Request::OpenRead { .. }
+                | Request::Ping
+        )
+    }
+
+    /// One request/response round-trip, with pool checkout and a single
+    /// transparent re-dial for idempotent verbs. Returns the connection
+    /// alongside so streaming openers can keep it; plain verbs check it
+    /// back in via [`RemoteSe::finish_rpc`].
+    fn rpc_conn(&self, req: &Request) -> Result<(Response, Conn)> {
+        let m = crate::metrics::global();
+        let mut attempt = 0usize;
+        loop {
+            let mut conn = self.checkout()?;
+            m.inc("se.remote.requests");
+            match conn.rpc(req) {
+                Ok(resp) => {
+                    if matches!(resp, Response::Err { .. }) {
+                        m.inc("se.remote.errors");
+                    }
+                    return Ok((resp, conn));
+                }
+                Err(e) => {
+                    // Transport failure: the connection is out of sync —
+                    // drop it (never back to the pool).
+                    drop(conn);
+                    m.inc("se.remote.errors");
+                    if attempt == 0 && Self::retryable(req) {
+                        m.inc("se.remote.retries");
+                        crate::transfer::retry::note_attempt(
+                            SpanRef::NONE,
+                            &self.name,
+                            1,
+                            &e,
+                        );
+                        attempt = 1;
+                        continue;
+                    }
+                    return Err(e);
+                }
+            }
+        }
+    }
+
+    /// Round-trip expecting a payload; checks the connection back in.
+    fn rpc_payload(&self, req: &Request) -> Result<Vec<u8>> {
+        let (resp, conn) = self.rpc_conn(req)?;
+        match resp {
+            Response::Ok { payload } => {
+                crate::metrics::global().add("se.remote.bytes.rx", payload.len() as u64);
+                self.checkin(conn);
+                Ok(payload)
+            }
+            Response::Err { code, se, msg } => {
+                // The conversation is still in sync after a logical
+                // error — the connection stays poolable.
+                self.checkin(conn);
+                Err(Response::to_error(code, &se, &msg, &self.endpoint))
+            }
+        }
+    }
+
+    fn op_detail(&self, pfn: &str) -> String {
+        format!(
+            "{} {pfn} endpoint={} reused_conn={}",
+            self.name,
+            self.endpoint,
+            self.last_reused.load(Ordering::Relaxed)
+        )
+    }
+
+    fn put_impl(&self, pfn: &str, data: &[u8]) -> Result<()> {
+        if data.len() <= INLINE_MAX {
+            crate::metrics::global().add("se.remote.bytes.tx", data.len() as u64);
+            self.rpc_payload(&Request::Put { pfn: pfn.into(), data: data.to_vec() })
+                .map(|_| ())
+        } else {
+            let mut sink = self.open_sink_impl(pfn).map(Box::new)?;
+            for block in data.chunks(STREAM_BLOCK) {
+                if let Err(e) = sink.write_block(block) {
+                    sink.abort();
+                    return Err(e);
+                }
+            }
+            ChunkSink::commit(sink)
+        }
+    }
+
+    fn get_impl(&self, pfn: &str) -> Result<Vec<u8>> {
+        // Fast path: one frame. The server answers `ERR_TOO_LARGE` for
+        // objects that don't fit a frame; fall back to streaming.
+        let (resp, conn) = self.rpc_conn(&Request::Get { pfn: pfn.into() })?;
+        match resp {
+            Response::Ok { payload } => {
+                crate::metrics::global().add("se.remote.bytes.rx", payload.len() as u64);
+                self.checkin(conn);
+                return Ok(payload);
+            }
+            Response::Err { code, se, msg } => {
+                self.checkin(conn);
+                if code != proto::ERR_TOO_LARGE {
+                    return Err(Response::to_error(code, &se, &msg, &self.endpoint));
+                }
+            }
+        }
+        let mut src = self.open_source_impl(pfn)?;
+        let mut out = Vec::new();
+        loop {
+            let chunk = src.read_at_steps(out.len() as u64, STREAM_BLOCK)?;
+            if chunk.is_empty() {
+                break;
+            }
+            let short = chunk.len() < STREAM_BLOCK;
+            out.extend_from_slice(&chunk);
+            if short {
+                break;
+            }
+        }
+        Ok(out)
+    }
+
+    fn open_read_stream(&self, pfn: &str) -> Result<(Conn, u64)> {
+        let (resp, conn) = self.rpc_conn(&Request::OpenRead { pfn: pfn.into() })?;
+        match resp {
+            Response::Ok { payload } => Ok((conn, proto::Dec::new(&payload).u64()?)),
+            Response::Err { code, se, msg } => {
+                self.checkin(conn);
+                Err(Response::to_error(code, &se, &msg, &self.endpoint))
+            }
+        }
+    }
+
+    fn open_sink_impl(&self, pfn: &str) -> Result<RemoteSink<'_>> {
+        let (resp, conn) = self.rpc_conn(&Request::OpenSink { pfn: pfn.into() })?;
+        let id = match resp {
+            Response::Ok { payload } => proto::Dec::new(&payload).u64()?,
+            Response::Err { code, se, msg } => {
+                self.checkin(conn);
+                return Err(Response::to_error(code, &se, &msg, &self.endpoint));
+            }
+        };
+        Ok(RemoteSink {
+            se: self,
+            pfn: pfn.to_string(),
+            conn: Some(conn),
+            id,
+            inflight: 0,
+            finalized: false,
+        })
+    }
+
+    fn open_source_impl(&self, pfn: &str) -> Result<RemoteSource<'_>> {
+        let (conn, id) = self.open_read_stream(pfn)?;
+        Ok(RemoteSource { se: self, pfn: pfn.to_string(), state: Some((conn, id)) })
+    }
+}
+
+impl StorageElement for RemoteSe {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn region(&self) -> &str {
+        &self.region
+    }
+
+    fn put(&self, pfn: &str, data: &[u8]) -> Result<()> {
+        let mut sp = tracer()
+            .span_with(SpanRef::NONE, "se-put", || format!("{} {pfn}", self.name));
+        let r = self.put_impl(pfn, data);
+        sp.set_detail(|| self.op_detail(pfn));
+        sp.finish(r)
+    }
+
+    fn get(&self, pfn: &str) -> Result<Vec<u8>> {
+        let mut sp = tracer()
+            .span_with(SpanRef::NONE, "se-get", || format!("{} {pfn}", self.name));
+        let r = self.get_impl(pfn);
+        sp.set_detail(|| self.op_detail(pfn));
+        sp.finish(r)
+    }
+
+    fn get_range(&self, pfn: &str, offset: u64, len: usize) -> Result<Vec<u8>> {
+        let mut sp = tracer().span_with(SpanRef::NONE, "se-get-range", || {
+            format!("{} {pfn} @{offset}+{len}", self.name)
+        });
+        let r = self.rpc_payload(&Request::GetRange {
+            pfn: pfn.into(),
+            offset,
+            len: len as u64,
+        });
+        sp.set_detail(|| self.op_detail(pfn));
+        sp.finish(r)
+    }
+
+    fn delete(&self, pfn: &str) -> Result<()> {
+        let mut sp = tracer()
+            .span_with(SpanRef::NONE, "se-delete", || format!("{} {pfn}", self.name));
+        let r = self.rpc_payload(&Request::Delete { pfn: pfn.into() }).map(|_| ());
+        sp.set_detail(|| self.op_detail(pfn));
+        sp.finish(r)
+    }
+
+    fn exists(&self, pfn: &str) -> bool {
+        match self.rpc_payload(&Request::Stat { pfn: pfn.into() }) {
+            Ok(payload) => proto::Dec::new(&payload).u8().map(|b| b == 1).unwrap_or(false),
+            Err(_) => false,
+        }
+    }
+
+    fn list(&self, prefix: &str) -> Result<Vec<String>> {
+        let payload = self.rpc_payload(&Request::List { prefix: prefix.into() })?;
+        let mut d = proto::Dec::new(&payload);
+        let n = d.u32()? as usize;
+        let mut out = Vec::with_capacity(n.min(65_536));
+        for _ in 0..n {
+            out.push(d.str()?);
+        }
+        Ok(out)
+    }
+
+    fn used_bytes(&self) -> u64 {
+        self.rpc_payload(&Request::UsedBytes)
+            .and_then(|p| proto::Dec::new(&p).u64())
+            .unwrap_or(0)
+    }
+
+    fn is_available(&self) -> bool {
+        self.available.load(Ordering::Relaxed)
+    }
+
+    fn set_available(&self, up: bool) {
+        self.available.store(up, Ordering::Relaxed);
+    }
+
+    fn transport_detail(&self) -> Option<String> {
+        Some(format!(
+            "endpoint={} reused_conn={}",
+            self.endpoint,
+            self.last_reused.load(Ordering::Relaxed)
+        ))
+    }
+
+    /// Streaming upload with pipelined writes (see module docs).
+    fn put_writer(&self, pfn: &str) -> Result<Box<dyn ChunkSink + '_>> {
+        let mut sp = tracer()
+            .span_with(SpanRef::NONE, "se-open-sink", || format!("{} {pfn}", self.name));
+        let r = self
+            .open_sink_impl(pfn)
+            .map(|s| Box::new(s) as Box<dyn ChunkSink + '_>);
+        sp.set_detail(|| self.op_detail(pfn));
+        sp.finish(r)
+    }
+
+    /// Streaming reader over one pooled connection.
+    fn open_reader(&self, pfn: &str) -> Result<Box<dyn ChunkSource + '_>> {
+        let mut sp = tracer()
+            .span_with(SpanRef::NONE, "se-open-read", || format!("{} {pfn}", self.name));
+        let r = self
+            .open_source_impl(pfn)
+            .map(|s| Box::new(s) as Box<dyn ChunkSource + '_>);
+        sp.set_detail(|| self.op_detail(pfn));
+        sp.finish(r)
+    }
+}
+
+fn dead_sink(se: &RemoteSe, pfn: &str) -> Error {
+    Error::Se { se: se.name.clone(), msg: format!("{pfn}: remote sink is closed") }
+}
+
+/// Pipelined streaming upload (client side of `OpenSink`/`WriteBlock`).
+struct RemoteSink<'a> {
+    se: &'a RemoteSe,
+    pfn: String,
+    /// `None` once finalized or after a transport failure killed it.
+    conn: Option<Conn>,
+    id: u64,
+    /// `WriteBlock` frames sent but not yet acked.
+    inflight: usize,
+    finalized: bool,
+}
+
+impl RemoteSink<'_> {
+    /// Read one pending `WriteBlock` ack; logical errors surface as the
+    /// block's error.
+    fn drain_one(conn: &mut Conn, se: &RemoteSe) -> Result<()> {
+        match conn.recv()? {
+            Response::Ok { .. } => Ok(()),
+            Response::Err { code, se: se_name, msg } => {
+                Err(Response::to_error(code, &se_name, &msg, &se.endpoint))
+            }
+        }
+    }
+
+    /// Drain every outstanding ack; any failure kills the connection
+    /// (the server aborts the upload when it drops).
+    fn drain_all(&mut self) -> Result<()> {
+        while self.inflight > 0 {
+            let conn = match self.conn.as_mut() {
+                Some(c) => c,
+                None => return Err(dead_sink(self.se, &self.pfn)),
+            };
+            self.inflight -= 1;
+            if let Err(e) = Self::drain_one(conn, self.se) {
+                self.conn = None;
+                return Err(e);
+            }
+        }
+        Ok(())
+    }
+
+    fn write_block_steps(&mut self, data: &[u8]) -> Result<()> {
+        let window = self.se.opts.pipeline_window.max(1);
+        // Make room in the in-flight window.
+        while self.inflight >= window {
+            let conn = match self.conn.as_mut() {
+                Some(c) => c,
+                None => return Err(dead_sink(self.se, &self.pfn)),
+            };
+            self.inflight -= 1;
+            if let Err(e) = Self::drain_one(conn, self.se) {
+                self.conn = None;
+                return Err(e);
+            }
+        }
+        let id = self.id;
+        let conn = match self.conn.as_mut() {
+            Some(c) => c,
+            None => return Err(dead_sink(self.se, &self.pfn)),
+        };
+        if let Err(e) = proto::write_block_frame(&mut conn.stream, id, data) {
+            self.conn = None;
+            return Err(e);
+        }
+        self.inflight += 1;
+        crate::metrics::global().add("se.remote.bytes.tx", data.len() as u64);
+        Ok(())
+    }
+
+    fn commit_steps(&mut self) -> Result<()> {
+        self.drain_all()?;
+        let mut conn = match self.conn.take() {
+            Some(c) => c,
+            None => return Err(dead_sink(self.se, &self.pfn)),
+        };
+        self.finalized = true;
+        match conn.rpc(&Request::Commit { stream: self.id })? {
+            Response::Ok { .. } => {
+                self.se.checkin(conn);
+                Ok(())
+            }
+            Response::Err { code, se, msg } => {
+                self.se.checkin(conn);
+                Err(Response::to_error(code, &se, &msg, &self.se.endpoint))
+            }
+        }
+    }
+}
+
+impl ChunkSink for RemoteSink<'_> {
+    fn write_block(&mut self, data: &[u8]) -> Result<()> {
+        let sp = tracer().span_with(SpanRef::NONE, "se-write-block", || {
+            format!(
+                "{} {} {} B endpoint={}",
+                self.se.name,
+                self.pfn,
+                data.len(),
+                self.se.endpoint
+            )
+        });
+        let r = self.write_block_steps(data);
+        sp.finish(r)
+    }
+
+    fn commit(mut self: Box<Self>) -> Result<()> {
+        let sp = tracer().span_with(SpanRef::NONE, "se-commit", || {
+            format!("{} {} endpoint={}", self.se.name, self.pfn, self.se.endpoint)
+        });
+        let r = self.commit_steps();
+        sp.finish(r)
+    }
+
+    fn abort(mut self: Box<Self>) {
+        self.finalized = true;
+        // Best-effort: drain acks, tell the server, recycle the conn.
+        if self.drain_all().is_ok() {
+            if let Some(mut conn) = self.conn.take() {
+                if matches!(
+                    conn.rpc(&Request::Abort { stream: self.id }),
+                    Ok(Response::Ok { .. })
+                ) {
+                    self.se.checkin(conn);
+                }
+            }
+        }
+        // Otherwise the dropped connection makes the server abort.
+    }
+}
+
+impl Drop for RemoteSink<'_> {
+    fn drop(&mut self) {
+        // A sink dropped without commit/abort: closing the socket makes
+        // the server abort the upload — no partial object survives.
+        if !self.finalized {
+            self.conn.take();
+        }
+    }
+}
+
+/// Streaming reader (client side of `OpenRead`/`ReadAt`); transparently
+/// reopens once per read on transport failure (reads are stateless —
+/// every `ReadAt` carries its offset).
+struct RemoteSource<'a> {
+    se: &'a RemoteSe,
+    pfn: String,
+    state: Option<(Conn, u64)>,
+}
+
+impl ChunkSource for RemoteSource<'_> {
+    fn read_at(&mut self, offset: u64, len: usize) -> Result<Vec<u8>> {
+        let sp = tracer().span_with(SpanRef::NONE, "se-read-block", || {
+            format!(
+                "{} {} @{offset}+{len} endpoint={}",
+                self.se.name, self.pfn, self.se.endpoint
+            )
+        });
+        let r = self.read_at_steps(offset, len);
+        sp.finish(r)
+    }
+}
+
+impl RemoteSource<'_> {
+    fn read_at_steps(&mut self, offset: u64, len: usize) -> Result<Vec<u8>> {
+        let mut last = None;
+        for attempt in 0..2 {
+            if self.state.is_none() {
+                self.state = Some(self.se.open_read_stream(&self.pfn)?);
+            }
+            let (conn, id) = match self.state.as_mut() {
+                Some(s) => (&mut s.0, s.1),
+                None => break,
+            };
+            match conn.rpc(&Request::ReadAt { stream: id, offset, len: len as u64 }) {
+                Ok(Response::Ok { payload }) => {
+                    crate::metrics::global()
+                        .add("se.remote.bytes.rx", payload.len() as u64);
+                    return Ok(payload);
+                }
+                Ok(Response::Err { code, se, msg }) => {
+                    // Logical error (incl. SeDown — let failover fire).
+                    return Err(Response::to_error(code, &se, &msg, &self.se.endpoint));
+                }
+                Err(e) => {
+                    self.state = None;
+                    crate::metrics::global().inc("se.remote.errors");
+                    if attempt == 0 {
+                        crate::metrics::global().inc("se.remote.retries");
+                        crate::transfer::retry::note_attempt(
+                            SpanRef::NONE,
+                            &self.se.name,
+                            1,
+                            &e,
+                        );
+                    }
+                    last = Some(e);
+                }
+            }
+        }
+        Err(last.unwrap_or_else(|| Error::Se {
+            se: self.se.name.clone(),
+            msg: format!("{}: remote source closed", self.pfn),
+        }))
+    }
+}
+
+impl Drop for RemoteSource<'_> {
+    fn drop(&mut self) {
+        // Close the stream politely and recycle the connection.
+        if let Some((mut conn, id)) = self.state.take() {
+            if matches!(
+                conn.rpc(&Request::CloseRead { stream: id }),
+                Ok(Response::Ok { .. })
+            ) {
+                self.se.checkin(conn);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::se::server::{ChunkServer, ServeOptions};
+    use crate::se::MemSe;
+    use std::sync::Arc;
+
+    fn serve_mem(name: &str) -> (ChunkServer, Arc<dyn StorageElement>) {
+        let se: Arc<dyn StorageElement> = Arc::new(MemSe::new(name, "uk"));
+        let srv = ChunkServer::serve(
+            Arc::clone(&se),
+            "127.0.0.1:0",
+            ServeOptions { poll: Duration::from_millis(5), ..ServeOptions::default() },
+        )
+        .unwrap();
+        (srv, se)
+    }
+
+    fn client(name: &str, srv: &ChunkServer) -> RemoteSe {
+        RemoteSe::new(
+            name,
+            "uk",
+            srv.addr().to_string(),
+            RemoteOptions {
+                connect_timeout: Duration::from_secs(2),
+                io_timeout: Duration::from_secs(5),
+                ..RemoteOptions::default()
+            },
+        )
+    }
+
+    #[test]
+    fn basic_verbs_roundtrip() {
+        let (srv, _backing) = serve_mem("SE-R");
+        let se = client("SE-R", &srv);
+        se.put("/vo/a", b"abc").unwrap();
+        assert_eq!(se.get("/vo/a").unwrap(), b"abc");
+        assert_eq!(se.get_range("/vo/a", 1, 1).unwrap(), b"b");
+        assert!(se.exists("/vo/a"));
+        assert!(!se.exists("/vo/missing"));
+        assert_eq!(se.list("/vo/").unwrap(), vec!["/vo/a".to_string()]);
+        assert_eq!(se.used_bytes(), 3);
+        se.delete("/vo/a").unwrap();
+        assert!(se.get("/vo/a").is_err());
+        srv.stop();
+    }
+
+    #[test]
+    fn pool_parks_and_reuses_connections() {
+        let (srv, _backing) = serve_mem("SE-R");
+        let se = client("SE-R", &srv);
+        se.put("/x", b"1").unwrap();
+        assert_eq!(se.pooled_idle(), 1, "conn parked after op");
+        let before = crate::metrics::global().counter("se.remote.conns.reused");
+        se.get("/x").unwrap();
+        let after = crate::metrics::global().counter("se.remote.conns.reused");
+        assert!(after > before, "second op must reuse the pooled conn");
+        srv.stop();
+    }
+
+    #[test]
+    fn pooling_disabled_when_max_idle_zero() {
+        let (srv, _backing) = serve_mem("SE-R");
+        let opts = RemoteOptions { pool_max_idle: 0, ..RemoteOptions::default() };
+        let se = RemoteSe::new("SE-R", "uk", srv.addr().to_string(), opts);
+        se.put("/x", b"1").unwrap();
+        se.get("/x").unwrap();
+        assert_eq!(se.pooled_idle(), 0);
+        srv.stop();
+    }
+
+    #[test]
+    fn streaming_sink_pipelines_and_commits() {
+        let (srv, backing) = serve_mem("SE-R");
+        let se = client("SE-R", &srv);
+        let mut sink = se.put_writer("/vo/stream").unwrap();
+        for i in 0..10u8 {
+            sink.write_block(&vec![i; 1000]).unwrap();
+        }
+        assert!(!backing.exists("/vo/stream"), "invisible before commit");
+        sink.commit().unwrap();
+        let got = backing.get("/vo/stream").unwrap();
+        assert_eq!(got.len(), 10_000);
+        assert_eq!(got[9_500], 9);
+        srv.stop();
+    }
+
+    #[test]
+    fn aborted_and_dropped_sinks_leave_nothing() {
+        let (srv, backing) = serve_mem("SE-R");
+        let se = client("SE-R", &srv);
+        let mut sink = se.put_writer("/vo/a").unwrap();
+        sink.write_block(b"xyz").unwrap();
+        sink.abort();
+        assert!(!backing.exists("/vo/a"));
+        let mut sink = se.put_writer("/vo/b").unwrap();
+        sink.write_block(b"xyz").unwrap();
+        drop(sink);
+        // The server aborts on disconnect; give it a beat.
+        for _ in 0..100 {
+            if !backing.exists("/vo/b") {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(!backing.exists("/vo/b"));
+        srv.stop();
+    }
+
+    #[test]
+    fn streaming_source_reads_ranges() {
+        let (srv, backing) = serve_mem("SE-R");
+        let data: Vec<u8> = (0..200u8).map(|b| b.wrapping_mul(3)).collect();
+        backing.put("/vo/r", &data).unwrap();
+        let se = client("SE-R", &srv);
+        let mut src = se.open_reader("/vo/r").unwrap();
+        assert_eq!(src.read_at(0, 10).unwrap(), &data[..10]);
+        assert_eq!(src.read_at(190, 50).unwrap(), &data[190..]);
+        assert_eq!(src.read_at(500, 10).unwrap(), Vec::<u8>::new());
+        assert!(se.open_reader("/vo/missing").is_err());
+        srv.stop();
+    }
+
+    #[test]
+    fn large_objects_stream_both_ways() {
+        let (srv, _backing) = serve_mem("SE-R");
+        let se = client("SE-R", &srv);
+        let mut rng = crate::util::prng::Rng::new(42);
+        let big = rng.bytes(INLINE_MAX + 100_000);
+        se.put("/vo/big", &big).unwrap();
+        assert_eq!(se.get("/vo/big").unwrap(), big);
+        srv.stop();
+    }
+
+    #[test]
+    fn dark_endpoint_maps_to_se_down() {
+        // Port 1 on loopback: nothing listens, connect fails fast.
+        let se = RemoteSe::new(
+            "SE-DARK",
+            "uk",
+            "127.0.0.1:1",
+            RemoteOptions {
+                connect_timeout: Duration::from_millis(200),
+                connect_attempts: 2,
+                backoff: Backoff {
+                    base: Duration::from_millis(1),
+                    cap: Duration::from_millis(4),
+                    jitter_frac: 0.5,
+                },
+                ..RemoteOptions::default()
+            },
+        );
+        let err = se.get("/x").unwrap_err();
+        assert!(matches!(err, Error::SeDown { se } if se == "SE-DARK"), "got {err:?}");
+        assert!(!se.exists("/x"));
+        assert_eq!(se.used_bytes(), 0);
+    }
+
+    #[test]
+    fn local_admin_flag_short_circuits() {
+        let se = RemoteSe::new("SE-A", "uk", "127.0.0.1:1", RemoteOptions::default());
+        se.set_available(false);
+        let err = se.get("/x").unwrap_err();
+        assert!(matches!(err, Error::SeDown { .. }));
+        se.set_available(true);
+        assert!(se.transport_detail().unwrap().contains("endpoint=127.0.0.1:1"));
+    }
+
+    #[test]
+    fn remote_se_down_crosses_wire_for_failover() {
+        let (srv, backing) = serve_mem("SE-R");
+        backing.put("/vo/x", b"abc").unwrap();
+        let se = client("SE-R", &srv);
+        let mut src = se.open_reader("/vo/x").unwrap();
+        backing.set_available(false);
+        let err = src.read_at(0, 3).unwrap_err();
+        assert!(matches!(err, Error::SeDown { se } if se == "SE-R"), "{err:?}");
+        srv.stop();
+    }
+
+    #[test]
+    fn name_mismatch_is_loud() {
+        let (srv, _backing) = serve_mem("SE-REAL");
+        let se = client("SE-WRONG", &srv);
+        let err = se.get("/x").unwrap_err();
+        assert!(
+            matches!(err, Error::Transfer(ref m) if m.contains("serves SE `SE-REAL`")),
+            "{err:?}"
+        );
+        srv.stop();
+    }
+}

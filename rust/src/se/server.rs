@@ -1,0 +1,644 @@
+//! `drs serve` — expose a local chunk store over the wire protocol.
+//!
+//! A [`ChunkServer`] binds a TCP listener and serves the full
+//! [`StorageElement`] surface (plus the streaming sink/source verbs) of
+//! one backing SE over [`super::proto`] frames. Threading model: one
+//! accept thread plus one thread per connection — deliberate for now;
+//! ROADMAP item 5 (event-driven SE backends) is where this becomes a
+//! completion loop. Each connection is sequential request → response,
+//! which combined with TCP ordering gives clients pipelining for free.
+//!
+//! Robustness decisions worth naming:
+//!
+//! * **Poll-read with a stop flag.** Connection reads run with a short
+//!   socket timeout; a timeout with *no* frame bytes consumed is an
+//!   idle tick (re-check stop flag / idle budget), while a timeout
+//!   *mid-frame* counts against `io_timeout` — a peer that stalls
+//!   half-way through a frame is disconnected, not waited on forever.
+//! * **Torn frames close the connection.** A checksum or truncation
+//!   failure means frame sync is lost; the only safe move is to drop
+//!   the connection. In-flight sinks are aborted, so a killed `commit`
+//!   never leaves a partial object (the backing SE's `.part` + rename
+//!   protocol guarantees the rest).
+//! * **Per-connection setup delay.** [`ServeOptions::setup_delay`]
+//!   models the per-connection channel-setup cost (the paper's SRM +
+//!   TURL negotiation) so `benches/remote_transfer.rs` can measure the
+//!   pooling win deterministically on loopback.
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::proto::{self, Request, Response};
+use super::{ChunkSink, ChunkSource, StorageElement};
+use crate::{Error, Result};
+
+/// Tuning for one [`ChunkServer`].
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// Socket poll interval: how often an idle connection re-checks the
+    /// stop flag. Small values make shutdown snappy.
+    pub poll: Duration,
+    /// Close a connection after this much inactivity (pool clients
+    /// re-connect transparently).
+    pub idle_timeout: Duration,
+    /// Give up on a peer that stalls mid-frame for this long.
+    pub io_timeout: Duration,
+    /// Sleep applied once per accepted connection before serving —
+    /// models per-connection channel setup (SRM negotiation) for the
+    /// loopback benches; zero in production.
+    pub setup_delay: Duration,
+    /// Max concurrent streaming sinks+sources per connection.
+    pub max_streams: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            poll: Duration::from_millis(50),
+            idle_timeout: Duration::from_secs(120),
+            io_timeout: Duration::from_secs(30),
+            setup_delay: Duration::ZERO,
+            max_streams: 64,
+        }
+    }
+}
+
+/// A running chunk server: one backing SE behind one TCP listener.
+pub struct ChunkServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ChunkServer {
+    /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral port) and start
+    /// serving `se`. Returns once the listener is live.
+    pub fn serve(
+        se: Arc<dyn StorageElement>,
+        addr: &str,
+        opts: ServeOptions,
+    ) -> Result<ChunkServer> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| Error::Transfer(format!("serve: bind {addr}: {e}")))?;
+        let local = listener
+            .local_addr()
+            .map_err(|e| Error::Transfer(format!("serve: local_addr: {e}")))?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let accept = std::thread::Builder::new()
+            .name(format!("drs-serve-{local}"))
+            .spawn(move || accept_loop(listener, se, stop2, opts))
+            .map_err(|e| Error::Transfer(format!("serve: spawn: {e}")))?;
+        Ok(ChunkServer { addr: local, stop, accept: Some(accept) })
+    }
+
+    /// The bound address (resolves ephemeral ports).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Signal shutdown and join the accept thread. Connection threads
+    /// notice the flag within one poll interval and drain themselves.
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Wake the blocking accept with a throwaway connection.
+        let _ = TcpStream::connect_timeout(&self.addr, Duration::from_millis(250));
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ChunkServer {
+    fn drop(&mut self) {
+        if self.accept.is_some() {
+            self.shutdown();
+        }
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    se: Arc<dyn StorageElement>,
+    stop: Arc<AtomicBool>,
+    opts: ServeOptions,
+) {
+    let m = crate::metrics::global();
+    loop {
+        let (conn, _) = match listener.accept() {
+            Ok(c) => c,
+            Err(_) => {
+                if stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                continue;
+            }
+        };
+        if stop.load(Ordering::SeqCst) {
+            return; // the wake-up connection itself
+        }
+        m.inc("se.server.conns.accepted");
+        let se2 = Arc::clone(&se);
+        let stop2 = Arc::clone(&stop);
+        let opts2 = opts.clone();
+        // Connection threads are detached: they exit within one poll
+        // interval of the stop flag, and hold only per-connection state.
+        let _ = std::thread::Builder::new()
+            .name("drs-serve-conn".into())
+            .spawn(move || handle_conn(conn, se2, stop2, opts2));
+    }
+}
+
+/// Outcome of one poll-read attempt for a frame.
+enum NextFrame {
+    Frame(u8, Vec<u8>),
+    /// No bytes consumed before the socket timeout — idle tick.
+    Idle,
+    /// Peer closed cleanly at a frame boundary.
+    Closed,
+    /// Torn frame / checksum failure / mid-frame stall: drop the conn.
+    Broken,
+}
+
+/// Read exactly `buf.len()` bytes with the connection's poll timeout.
+/// `consumed_any` tracks whether this *frame* has started: a timeout
+/// before any frame byte is an idle tick; after, it burns `io_timeout`.
+fn read_full(
+    conn: &mut TcpStream,
+    buf: &mut [u8],
+    consumed_any: &mut bool,
+    opts: &ServeOptions,
+) -> std::result::Result<bool, ()> {
+    use std::io::Read;
+    let mut filled = 0usize;
+    let mut stall_start: Option<Instant> = None;
+    while filled < buf.len() {
+        match conn.read(&mut buf[filled..]) {
+            Ok(0) => return Err(()), // EOF (caller decides torn vs clean)
+            Ok(n) => {
+                filled += n;
+                *consumed_any = true;
+                stall_start = None;
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if !*consumed_any {
+                    return Ok(false); // idle tick, nothing consumed
+                }
+                let start = *stall_start.get_or_insert_with(Instant::now);
+                if start.elapsed() >= opts.io_timeout {
+                    return Err(()); // mid-frame stall
+                }
+            }
+            Err(_) => return Err(()),
+        }
+    }
+    Ok(true)
+}
+
+/// Poll-read one frame (length, body, trailer) off the connection.
+fn next_frame(conn: &mut TcpStream, opts: &ServeOptions) -> NextFrame {
+    let mut consumed = false;
+    let mut len4 = [0u8; 4];
+    match read_full(conn, &mut len4, &mut consumed, opts) {
+        Ok(false) => return NextFrame::Idle,
+        Err(()) if !consumed => return NextFrame::Closed,
+        Err(()) => return NextFrame::Broken,
+        Ok(true) => {}
+    }
+    let body_len = u32::from_le_bytes(len4) as usize;
+    if body_len == 0 || body_len > proto::MAX_FRAME {
+        return NextFrame::Broken;
+    }
+    let mut rest = vec![0u8; body_len + proto::TRAILER];
+    if read_full(conn, &mut rest, &mut consumed, opts) != Ok(true) {
+        return NextFrame::Broken;
+    }
+    let (body, want) = rest.split_at(body_len);
+    if proto::trailer(&[body]) != *want {
+        return NextFrame::Broken;
+    }
+    NextFrame::Frame(body[0], body[1..].to_vec())
+}
+
+fn send(conn: &mut TcpStream, resp: &Response) -> std::result::Result<(), ()> {
+    resp.write_to(conn).and_then(|()| conn.flush().map_err(Error::Io)).map_err(|_| ())
+}
+
+/// Serve one connection to completion. All streaming state (open sinks
+/// and sources) lives on this stack frame, borrowed from the SE arc —
+/// dropping the frame aborts every in-flight upload.
+fn handle_conn(
+    mut conn: TcpStream,
+    se_arc: Arc<dyn StorageElement>,
+    stop: Arc<AtomicBool>,
+    opts: ServeOptions,
+) {
+    let m = crate::metrics::global();
+    let _ = conn.set_nodelay(true);
+    let _ = conn.set_read_timeout(Some(opts.poll.max(Duration::from_millis(1))));
+    let _ = conn.set_write_timeout(Some(opts.io_timeout.max(Duration::from_millis(1))));
+    if opts.setup_delay > Duration::ZERO {
+        std::thread::sleep(opts.setup_delay);
+    }
+
+    let se: &dyn StorageElement = &*se_arc;
+    let mut sinks: HashMap<u64, Box<dyn ChunkSink + '_>> = HashMap::new();
+    let mut sources: HashMap<u64, Box<dyn ChunkSource + '_>> = HashMap::new();
+    let mut next_stream = 1u64;
+    let mut handshaken = false;
+    let mut last_activity = Instant::now();
+
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let (op, payload) = match next_frame(&mut conn, &opts) {
+            NextFrame::Frame(op, p) => (op, p),
+            NextFrame::Idle => {
+                if last_activity.elapsed() >= opts.idle_timeout {
+                    m.inc("se.server.conns.idle_closed");
+                    break;
+                }
+                continue;
+            }
+            NextFrame::Closed => break,
+            NextFrame::Broken => {
+                m.inc("se.server.conns.broken");
+                break;
+            }
+        };
+        last_activity = Instant::now();
+        let req = match Request::decode(op, &payload) {
+            Ok(r) => r,
+            Err(_) => {
+                let resp = Response::Err {
+                    code: proto::ERR_PROTO,
+                    se: se.name().to_string(),
+                    msg: "malformed request".into(),
+                };
+                let _ = send(&mut conn, &resp);
+                m.inc("se.server.conns.broken");
+                break;
+            }
+        };
+        m.inc("se.server.requests");
+
+        if !handshaken {
+            match req {
+                Request::Hello { magic, version } => {
+                    if magic != proto::MAGIC || version != proto::PROTO_VERSION {
+                        let resp = Response::Err {
+                            code: proto::ERR_PROTO,
+                            se: se.name().to_string(),
+                            msg: format!(
+                                "version mismatch: server speaks v{}, client sent v{version}",
+                                proto::PROTO_VERSION
+                            ),
+                        };
+                        let _ = send(&mut conn, &resp);
+                        break;
+                    }
+                    handshaken = true;
+                    let mut e = proto::Enc::new();
+                    e.u16(proto::PROTO_VERSION);
+                    e.str(se.name());
+                    e.str(se.region());
+                    if send(&mut conn, &Response::Ok { payload: e.buf }).is_err() {
+                        break;
+                    }
+                    continue;
+                }
+                _ => {
+                    let resp = Response::Err {
+                        code: proto::ERR_PROTO,
+                        se: se.name().to_string(),
+                        msg: "expected Hello handshake".into(),
+                    };
+                    let _ = send(&mut conn, &resp);
+                    break;
+                }
+            }
+        }
+
+        let resp = dispatch(req, se, &mut sinks, &mut sources, &mut next_stream, &opts);
+        if send(&mut conn, &resp).is_err() {
+            break;
+        }
+        if matches!(resp, Response::Err { .. }) {
+            m.inc("se.server.errors");
+        }
+    }
+    // Any sink still open when the connection dies is an interrupted
+    // upload: abort so no partial object (or `.part` litter) survives.
+    for (_, sink) in sinks.drain() {
+        sink.abort();
+    }
+}
+
+/// Execute one request against the backing SE.
+fn dispatch<'a>(
+    req: Request,
+    se: &'a dyn StorageElement,
+    sinks: &mut HashMap<u64, Box<dyn ChunkSink + 'a>>,
+    sources: &mut HashMap<u64, Box<dyn ChunkSource + 'a>>,
+    next_stream: &mut u64,
+    opts: &ServeOptions,
+) -> Response {
+    use proto::Enc;
+    let result: Result<Vec<u8>> = match req {
+        Request::Hello { .. } => {
+            // Repeated Hello after handshake: harmless, re-ack.
+            let mut e = Enc::new();
+            e.u16(proto::PROTO_VERSION);
+            e.str(se.name());
+            e.str(se.region());
+            Ok(e.buf)
+        }
+        Request::Put { pfn, data } => se.put(&pfn, &data).map(|()| Vec::new()),
+        Request::Get { pfn } => match se.get(&pfn) {
+            // An object too big for one frame: tell the client to fall
+            // back to the streaming reader instead of tearing the frame.
+            Ok(data) if data.len() > proto::MAX_FRAME - 1 => {
+                return Response::Err {
+                    code: proto::ERR_TOO_LARGE,
+                    se: se.name().to_string(),
+                    msg: format!("object is {} B; use a streaming read", data.len()),
+                };
+            }
+            r => r,
+        },
+        Request::GetRange { pfn, offset, len } => {
+            se.get_range(&pfn, offset, len.min(proto::MAX_FRAME as u64) as usize)
+        }
+        Request::Delete { pfn } => se.delete(&pfn).map(|()| Vec::new()),
+        Request::Stat { pfn } => {
+            let mut e = Enc::new();
+            e.u8(u8::from(se.exists(&pfn)));
+            Ok(e.buf)
+        }
+        Request::List { prefix } => se.list(&prefix).map(|names| {
+            let mut e = Enc::new();
+            e.u32(names.len() as u32);
+            for n in &names {
+                e.str(n);
+            }
+            e.buf
+        }),
+        Request::UsedBytes => {
+            let mut e = Enc::new();
+            e.u64(se.used_bytes());
+            Ok(e.buf)
+        }
+        Request::OpenSink { pfn } => {
+            open_stream(sinks.len() + sources.len(), opts, se)
+                .and_then(|()| se.put_writer(&pfn))
+                .map(|sink| {
+                    let id = *next_stream;
+                    *next_stream += 1;
+                    sinks.insert(id, sink);
+                    let mut e = Enc::new();
+                    e.u64(id);
+                    e.buf
+                })
+        }
+        Request::WriteBlock { stream, data } => match sinks.get_mut(&stream) {
+            Some(sink) => sink.write_block(&data).map(|()| Vec::new()),
+            None => Err(no_stream(se, stream)),
+        },
+        Request::Commit { stream } => match sinks.remove(&stream) {
+            Some(sink) => sink.commit().map(|()| Vec::new()),
+            None => Err(no_stream(se, stream)),
+        },
+        Request::Abort { stream } => match sinks.remove(&stream) {
+            Some(sink) => {
+                sink.abort();
+                Ok(Vec::new())
+            }
+            None => Err(no_stream(se, stream)),
+        },
+        Request::OpenRead { pfn } => {
+            open_stream(sinks.len() + sources.len(), opts, se)
+                .and_then(|()| se.open_reader(&pfn))
+                .map(|src| {
+                    let id = *next_stream;
+                    *next_stream += 1;
+                    sources.insert(id, src);
+                    let mut e = Enc::new();
+                    e.u64(id);
+                    e.buf
+                })
+        }
+        Request::ReadAt { stream, offset, len } => match sources.get_mut(&stream) {
+            Some(src) => src.read_at(offset, len.min(proto::MAX_FRAME as u64 / 2) as usize),
+            None => Err(no_stream(se, stream)),
+        },
+        Request::CloseRead { stream } => match sources.remove(&stream) {
+            Some(_) => Ok(Vec::new()),
+            None => Err(no_stream(se, stream)),
+        },
+        Request::Ping => Ok(Vec::new()),
+    };
+    match result {
+        Ok(payload) => Response::Ok { payload },
+        Err(e) => Response::from_error(&e),
+    }
+}
+
+fn open_stream(open_now: usize, opts: &ServeOptions, se: &dyn StorageElement) -> Result<()> {
+    if open_now >= opts.max_streams {
+        Err(Error::Se {
+            se: se.name().to_string(),
+            msg: format!("too many open streams on one connection (max {})", opts.max_streams),
+        })
+    } else {
+        Ok(())
+    }
+}
+
+fn no_stream(se: &dyn StorageElement, stream: u64) -> Error {
+    Error::Se { se: se.name().to_string(), msg: format!("unknown stream id {stream}") }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::se::MemSe;
+
+    fn connect(addr: SocketAddr) -> TcpStream {
+        let c = TcpStream::connect(addr).unwrap();
+        c.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        c
+    }
+
+    fn rpc(conn: &mut TcpStream, req: Request) -> Response {
+        req.write_to(conn).unwrap();
+        Response::read_from(conn).unwrap()
+    }
+
+    fn handshake(conn: &mut TcpStream) {
+        let resp = rpc(conn, Request::hello());
+        assert!(matches!(resp, Response::Ok { .. }), "{resp:?}");
+    }
+
+    fn quick_opts() -> ServeOptions {
+        ServeOptions {
+            poll: Duration::from_millis(5),
+            io_timeout: Duration::from_millis(500),
+            ..ServeOptions::default()
+        }
+    }
+
+    #[test]
+    fn serves_basic_verbs_over_loopback() {
+        let se: Arc<dyn StorageElement> = Arc::new(MemSe::new("SE-NET", "uk"));
+        let srv = ChunkServer::serve(Arc::clone(&se), "127.0.0.1:0", quick_opts()).unwrap();
+        let mut c = connect(srv.addr());
+        handshake(&mut c);
+
+        let r = rpc(&mut c, Request::Put { pfn: "/vo/a".into(), data: b"hello".to_vec() });
+        assert!(matches!(r, Response::Ok { .. }), "{r:?}");
+        let r = rpc(&mut c, Request::Get { pfn: "/vo/a".into() });
+        assert_eq!(r, Response::Ok { payload: b"hello".to_vec() });
+        let r = rpc(&mut c, Request::GetRange { pfn: "/vo/a".into(), offset: 1, len: 3 });
+        assert_eq!(r, Response::Ok { payload: b"ell".to_vec() });
+        let r = rpc(&mut c, Request::Stat { pfn: "/vo/a".into() });
+        assert_eq!(r, Response::Ok { payload: vec![1] });
+        let r = rpc(&mut c, Request::List { prefix: "/vo/".into() });
+        assert!(matches!(r, Response::Ok { .. }));
+        let r = rpc(&mut c, Request::Delete { pfn: "/vo/a".into() });
+        assert!(matches!(r, Response::Ok { .. }));
+        let r = rpc(&mut c, Request::Get { pfn: "/vo/a".into() });
+        assert!(matches!(r, Response::Err { code: proto::ERR_SE, .. }), "{r:?}");
+        srv.stop();
+    }
+
+    #[test]
+    fn streaming_sink_and_source_verbs() {
+        let se: Arc<dyn StorageElement> = Arc::new(MemSe::new("SE-NET", "uk"));
+        let srv = ChunkServer::serve(Arc::clone(&se), "127.0.0.1:0", quick_opts()).unwrap();
+        let mut c = connect(srv.addr());
+        handshake(&mut c);
+
+        let Response::Ok { payload } = rpc(&mut c, Request::OpenSink { pfn: "/vo/s".into() })
+        else {
+            panic!("open sink failed")
+        };
+        let id = proto::Dec::new(&payload).u64().unwrap();
+        for block in [b"abc".as_slice(), b"defg"] {
+            let r = rpc(&mut c, Request::WriteBlock { stream: id, data: block.to_vec() });
+            assert!(matches!(r, Response::Ok { .. }));
+        }
+        // Not visible before commit.
+        assert!(!se.exists("/vo/s"));
+        let r = rpc(&mut c, Request::Commit { stream: id });
+        assert!(matches!(r, Response::Ok { .. }));
+        assert_eq!(se.get("/vo/s").unwrap(), b"abcdefg");
+
+        let Response::Ok { payload } = rpc(&mut c, Request::OpenRead { pfn: "/vo/s".into() })
+        else {
+            panic!("open read failed")
+        };
+        let rid = proto::Dec::new(&payload).u64().unwrap();
+        let r = rpc(&mut c, Request::ReadAt { stream: rid, offset: 3, len: 4 });
+        assert_eq!(r, Response::Ok { payload: b"defg".to_vec() });
+        let r = rpc(&mut c, Request::CloseRead { stream: rid });
+        assert!(matches!(r, Response::Ok { .. }));
+        // Stale ids are errors, not panics.
+        let r = rpc(&mut c, Request::Commit { stream: id });
+        assert!(matches!(r, Response::Err { .. }));
+        srv.stop();
+    }
+
+    #[test]
+    fn dropped_connection_aborts_inflight_sink() {
+        let se: Arc<dyn StorageElement> = Arc::new(MemSe::new("SE-NET", "uk"));
+        let srv = ChunkServer::serve(Arc::clone(&se), "127.0.0.1:0", quick_opts()).unwrap();
+        {
+            let mut c = connect(srv.addr());
+            handshake(&mut c);
+            let r = rpc(&mut c, Request::OpenSink { pfn: "/vo/torn".into() });
+            assert!(matches!(r, Response::Ok { .. }));
+            let Response::Ok { payload } = r else { unreachable!() };
+            let id = proto::Dec::new(&payload).u64().unwrap();
+            let r = rpc(&mut c, Request::WriteBlock { stream: id, data: vec![7; 128] });
+            assert!(matches!(r, Response::Ok { .. }));
+            // Connection dropped here without commit.
+        }
+        // Give the server a moment to notice the close.
+        for _ in 0..100 {
+            if !se.exists("/vo/torn") {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert!(!se.exists("/vo/torn"), "killed upload must not surface");
+        srv.stop();
+    }
+
+    #[test]
+    fn rejects_version_mismatch_and_missing_handshake() {
+        let se: Arc<dyn StorageElement> = Arc::new(MemSe::new("SE-NET", "uk"));
+        let srv = ChunkServer::serve(Arc::clone(&se), "127.0.0.1:0", quick_opts()).unwrap();
+        let mut c = connect(srv.addr());
+        let r = rpc(&mut c, Request::Hello { magic: proto::MAGIC, version: 999 });
+        assert!(matches!(r, Response::Err { code: proto::ERR_PROTO, .. }), "{r:?}");
+        let mut c = connect(srv.addr());
+        let r = rpc(&mut c, Request::Ping);
+        assert!(matches!(r, Response::Err { code: proto::ERR_PROTO, .. }), "{r:?}");
+        srv.stop();
+    }
+
+    #[test]
+    fn se_down_crosses_the_wire() {
+        let se: Arc<dyn StorageElement> = Arc::new(MemSe::new("SE-DARK", "uk"));
+        let srv = ChunkServer::serve(Arc::clone(&se), "127.0.0.1:0", quick_opts()).unwrap();
+        let mut c = connect(srv.addr());
+        handshake(&mut c);
+        se.set_available(false);
+        let r = rpc(&mut c, Request::Get { pfn: "/x".into() });
+        let Response::Err { code, se: se_name, .. } = r else { panic!("expected Err") };
+        assert_eq!(code, proto::ERR_SE_DOWN);
+        assert_eq!(se_name, "SE-DARK");
+        srv.stop();
+    }
+
+    #[test]
+    fn pipelined_write_blocks_ack_in_order() {
+        let se: Arc<dyn StorageElement> = Arc::new(MemSe::new("SE-NET", "uk"));
+        let srv = ChunkServer::serve(Arc::clone(&se), "127.0.0.1:0", quick_opts()).unwrap();
+        let mut c = connect(srv.addr());
+        handshake(&mut c);
+        let Response::Ok { payload } = rpc(&mut c, Request::OpenSink { pfn: "/vo/p".into() })
+        else {
+            panic!("open sink failed")
+        };
+        let id = proto::Dec::new(&payload).u64().unwrap();
+        // Fire 8 writes without reading a single ack...
+        for i in 0..8u8 {
+            Request::WriteBlock { stream: id, data: vec![i; 100] }.write_to(&mut c).unwrap();
+        }
+        // ...then drain all 8 acks.
+        for _ in 0..8 {
+            let r = Response::read_from(&mut c).unwrap();
+            assert!(matches!(r, Response::Ok { .. }), "{r:?}");
+        }
+        let r = rpc(&mut c, Request::Commit { stream: id });
+        assert!(matches!(r, Response::Ok { .. }));
+        let got = se.get("/vo/p").unwrap();
+        assert_eq!(got.len(), 800);
+        assert_eq!(&got[..100], &[0u8; 100]);
+        assert_eq!(&got[700..], &[7u8; 100]);
+        srv.stop();
+    }
+}

@@ -5,8 +5,20 @@
 //! so the case can be replayed with `replay(seed, ...)`. This loses
 //! proptest's shrinking but keeps the two properties that matter for CI:
 //! deterministic replay and coverage across many random cases.
+//!
+//! Also here: [`FaultProxy`], a TCP fault injector for exercising the
+//! remote-SE transport (`se::remote` / `se::server`) under network
+//! misbehaviour — dropped endpoints, added latency, torn frames and
+//! stalled responses — without touching the protocol code itself.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use crate::util::prng::Rng;
+use crate::Result;
 
 /// Base seed; change DRS_PROP_SEED to explore a different universe.
 fn base_seed() -> u64 {
@@ -41,6 +53,207 @@ pub fn forall<F: Fn(&mut Rng)>(cases: u64, f: F) {
 pub fn replay<F: Fn(&mut Rng)>(seed: u64, f: F) {
     let mut rng = Rng::new(seed);
     f(&mut rng);
+}
+
+/// What a [`FaultProxy`] does to traffic. Settable at runtime, so one
+/// proxy can serve a clean warm-up phase and then turn hostile — which
+/// is exactly how the remote-SE failover tests use it.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Fault {
+    /// Forward faithfully.
+    None,
+    /// Close every new connection immediately and tear existing ones on
+    /// their next relayed buffer (a dark / refused endpoint).
+    Drop,
+    /// Sleep this long before relaying each buffer (a slow link).
+    Delay(Duration),
+    /// Relay this many more server→client bytes, then tear the
+    /// connection — the client sees a torn frame mid-response.
+    TruncateAfter(u64),
+    /// Keep accepting client→server traffic but never relay a response;
+    /// the client's read deadline is what ends the wait.
+    Stall,
+}
+
+/// A TCP proxy that forwards to one upstream address and injects the
+/// currently-set [`Fault`]. Listens on an ephemeral loopback port;
+/// point a `RemoteSe` endpoint at [`FaultProxy::addr`] and the real
+/// chunk server at the upstream.
+pub struct FaultProxy {
+    addr: SocketAddr,
+    mode: Arc<Mutex<Fault>>,
+    stop: Arc<AtomicBool>,
+    accept: Option<std::thread::JoinHandle<()>>,
+}
+
+/// How often pump threads wake to re-check the fault mode / stop flag.
+const PUMP_TICK: Duration = Duration::from_millis(5);
+
+impl FaultProxy {
+    /// Start a proxy in front of `upstream`.
+    pub fn start(upstream: SocketAddr) -> Result<FaultProxy> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?;
+        let mode = Arc::new(Mutex::new(Fault::None));
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept = {
+            let mode = Arc::clone(&mode);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                for client in listener.incoming() {
+                    if stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let client = match client {
+                        Ok(c) => c,
+                        Err(_) => break,
+                    };
+                    if *crate::util::lock(&mode) == Fault::Drop {
+                        continue; // dropping the socket closes it
+                    }
+                    let server = match TcpStream::connect(upstream) {
+                        Ok(s) => s,
+                        Err(_) => continue,
+                    };
+                    spawn_pumps(client, server, Arc::clone(&mode), Arc::clone(&stop));
+                }
+            })
+        };
+        Ok(FaultProxy { addr, mode, stop, accept: Some(accept) })
+    }
+
+    /// The address clients should dial.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Swap the active fault. Applies to new connections immediately and
+    /// to live ones on their next relayed buffer.
+    pub fn set(&self, fault: Fault) {
+        *crate::util::lock(&self.mode) = fault;
+    }
+
+    /// Stop the proxy (all pump threads wind down on their next tick).
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Wake the blocking accept with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for FaultProxy {
+    fn drop(&mut self) {
+        if self.accept.is_some() {
+            self.shutdown();
+        }
+    }
+}
+
+fn spawn_pumps(
+    client: TcpStream,
+    server: TcpStream,
+    mode: Arc<Mutex<Fault>>,
+    stop: Arc<AtomicBool>,
+) {
+    let (c2, s2) = match (client.try_clone(), server.try_clone()) {
+        (Ok(c), Ok(s)) => (c, s),
+        _ => return,
+    };
+    {
+        let mode = Arc::clone(&mode);
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || pump(client, s2, &mode, &stop, false));
+    }
+    std::thread::spawn(move || pump(server, c2, &mode, &stop, true));
+}
+
+/// Relay `from` → `to` until EOF, error, stop, or an injected tear.
+/// `is_response` marks the server→client direction, the one Stall and
+/// TruncateAfter act on (requests always flow, like a link whose return
+/// path is sick).
+fn pump(
+    from: TcpStream,
+    to: TcpStream,
+    mode: &Mutex<Fault>,
+    stop: &AtomicBool,
+    is_response: bool,
+) {
+    let mut from = from;
+    let mut to = to;
+    if from.set_read_timeout(Some(PUMP_TICK)).is_err() {
+        return;
+    }
+    let mut buf = [0u8; 8 << 10];
+    // Bytes relayed since TruncateAfter was last activated.
+    let mut truncated_budget_used = 0u64;
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        let fault = *crate::util::lock(mode);
+        if !matches!(fault, Fault::TruncateAfter(_)) {
+            truncated_budget_used = 0;
+        }
+        match fault {
+            Fault::Drop => {
+                // Tear both halves; the client sees a reset/EOF.
+                let _ = from.shutdown(std::net::Shutdown::Both);
+                let _ = to.shutdown(std::net::Shutdown::Both);
+                return;
+            }
+            Fault::Stall if is_response => {
+                // Leave the bytes queued in the kernel; the client's
+                // read deadline does the failing.
+                std::thread::sleep(PUMP_TICK);
+                continue;
+            }
+            _ => {}
+        }
+        let n = match from.read(&mut buf) {
+            Ok(0) => {
+                let _ = to.shutdown(std::net::Shutdown::Write);
+                return;
+            }
+            Ok(n) => n,
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue;
+            }
+            Err(_) => {
+                let _ = to.shutdown(std::net::Shutdown::Both);
+                return;
+            }
+        };
+        let send = &buf[..n];
+        match fault {
+            Fault::Delay(d) => std::thread::sleep(d),
+            Fault::TruncateAfter(limit) if is_response => {
+                let left = limit.saturating_sub(truncated_budget_used) as usize;
+                if left < send.len() {
+                    // Forward the allowed prefix, then tear mid-frame.
+                    let _ = to.write_all(&send[..left]);
+                    let _ = from.shutdown(std::net::Shutdown::Both);
+                    let _ = to.shutdown(std::net::Shutdown::Both);
+                    return;
+                }
+                truncated_budget_used += send.len() as u64;
+            }
+            _ => {}
+        }
+        if to.write_all(send).is_err() {
+            let _ = from.shutdown(std::net::Shutdown::Both);
+            return;
+        }
+    }
 }
 
 #[cfg(test)]

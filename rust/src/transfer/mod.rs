@@ -16,4 +16,4 @@ pub mod pool;
 pub mod retry;
 
 pub use pool::{PoolConfig, PoolOutcome, WorkPool};
-pub use retry::RetryPolicy;
+pub use retry::{Backoff, RetryPolicy};

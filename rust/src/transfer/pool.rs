@@ -84,16 +84,16 @@ impl WorkPool {
                 scope.spawn(|| loop {
                     if success_count.load(Ordering::SeqCst) >= quota {
                         // Quota met: drain-and-skip the rest.
-                        let mut q = queue.lock().unwrap();
+                        let mut q = crate::util::lock(&queue);
                         skipped.fetch_add(q.len(), Ordering::SeqCst);
                         q.clear();
                         return;
                     }
-                    let job = queue.lock().unwrap().pop_front();
+                    let job = crate::util::lock(&queue).pop_front();
                     let Some((idx, f)) = job else { return };
                     match f() {
                         Ok(v) => {
-                            successes.lock().unwrap().push((idx, v));
+                            crate::util::lock(&successes).push((idx, v));
                             success_count.fetch_add(1, Ordering::SeqCst);
                         }
                         Err(e) => {
@@ -107,7 +107,7 @@ impl WorkPool {
                                 false,
                                 || format!("job {idx}: {e}"),
                             );
-                            failures.lock().unwrap().push((idx, e));
+                            crate::util::lock(&failures).push((idx, e));
                         }
                     }
                 });

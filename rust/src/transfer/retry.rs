@@ -1,4 +1,5 @@
-//! Transfer retry policy (the paper's §4 further-work feature).
+//! Transfer retry policy (the paper's §4 further-work feature) and the
+//! jittered exponential backoff used by reconnecting transports.
 
 /// How a failed chunk transfer is retried.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -36,6 +37,59 @@ impl Default for RetryPolicy {
     }
 }
 
+/// Exponential backoff with deterministic jitter for reconnect loops.
+///
+/// Delay for attempt `n` (0-based) is `base · 2ⁿ` capped at `cap`, then
+/// scaled by a jitter factor drawn uniformly from
+/// `[1 − jitter_frac, 1 + jitter_frac]` via the caller's
+/// [`crate::util::prng::Rng`]. The jitter is the point: after a chunk
+/// server restarts, every client of every striped transfer notices at
+/// the same instant, and un-jittered backoff would re-dial the endpoint
+/// in synchronized waves (the classic thundering herd). Determinism is
+/// kept by seeding the RNG from stable inputs, so tests replay exactly.
+#[derive(Clone, Copy, Debug)]
+pub struct Backoff {
+    /// First-retry delay.
+    pub base: std::time::Duration,
+    /// Ceiling on the un-jittered delay.
+    pub cap: std::time::Duration,
+    /// Multiplicative jitter half-width in `[0, 1)` (0 = deterministic).
+    pub jitter_frac: f64,
+}
+
+impl Backoff {
+    /// Defaults tuned for LAN reconnects: 25 ms base, 2 s cap, ±50%.
+    pub fn default_lan() -> Self {
+        Backoff {
+            base: std::time::Duration::from_millis(25),
+            cap: std::time::Duration::from_secs(2),
+            jitter_frac: 0.5,
+        }
+    }
+
+    /// The jittered delay before retry number `attempt` (0-based).
+    pub fn delay(
+        &self,
+        attempt: usize,
+        rng: &mut crate::util::prng::Rng,
+    ) -> std::time::Duration {
+        let exp = self
+            .base
+            .saturating_mul(1u32.checked_shl(attempt.min(30) as u32).unwrap_or(u32::MAX))
+            .min(self.cap);
+        let j = self.jitter_frac.clamp(0.0, 0.999);
+        // Uniform in [1-j, 1+j]; rng.f64() is uniform in [0, 1).
+        let factor = 1.0 - j + 2.0 * j * rng.f64();
+        exp.mul_f64(factor)
+    }
+}
+
+impl Default for Backoff {
+    fn default() -> Self {
+        Self::default_lan()
+    }
+}
+
 /// Record one failed attempt against a replica as a `retry` trace event
 /// (zero-duration, `ok = false`) under `parent`. Free when tracing is
 /// disabled: the detail string is only built for an enabled tracer.
@@ -59,6 +113,51 @@ mod tests {
         assert!(r.retries_left(0));
         assert!(!r.retries_left(1));
         assert!(!r.fallback_se);
+    }
+
+    #[test]
+    fn backoff_jitter_stays_in_bounds() {
+        let b = Backoff {
+            base: std::time::Duration::from_millis(100),
+            cap: std::time::Duration::from_secs(4),
+            jitter_frac: 0.5,
+        };
+        let mut rng = crate::util::prng::Rng::new(0xB0FF);
+        for attempt in 0..12 {
+            let exp_ms = (100u128 << attempt.min(30)).min(4_000);
+            let lo = exp_ms as f64 * 0.5;
+            let hi = exp_ms as f64 * 1.5;
+            for _ in 0..200 {
+                let d = b.delay(attempt, &mut rng).as_secs_f64() * 1e3;
+                assert!(
+                    d >= lo - 1e-9 && d <= hi + 1e-9,
+                    "attempt {attempt}: {d} ms outside [{lo}, {hi}]"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn backoff_is_deterministic_per_seed() {
+        let b = Backoff::default_lan();
+        let mut a = crate::util::prng::Rng::new(7);
+        let mut c = crate::util::prng::Rng::new(7);
+        for attempt in 0..6 {
+            assert_eq!(b.delay(attempt, &mut a), b.delay(attempt, &mut c));
+        }
+    }
+
+    #[test]
+    fn backoff_zero_jitter_is_pure_exponential() {
+        let b = Backoff {
+            base: std::time::Duration::from_millis(10),
+            cap: std::time::Duration::from_millis(80),
+            jitter_frac: 0.0,
+        };
+        let mut rng = crate::util::prng::Rng::new(1);
+        let ms: Vec<u128> =
+            (0..5).map(|a| b.delay(a, &mut rng).as_millis()).collect();
+        assert_eq!(ms, vec![10, 20, 40, 80, 80], "doubling then capped");
     }
 
     #[test]
